@@ -1,0 +1,87 @@
+//! End-to-end driver: full DSG training runs on the synthetic FASHION
+//! workload through all three layers (rust coordinator -> AOT HLO ->
+//! Pallas kernels), with the projected-weight refresh every 50 steps,
+//! gamma warmup, LR decay, eval, loss-curve logging, and a final
+//! memory/compute report.  This is the run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example e2e_train [steps] [gamma]
+
+use dsg::config::{GammaSchedule, RunConfig};
+use dsg::coordinator::Trainer;
+use dsg::datasets;
+use dsg::runtime::{Meta, Runtime};
+use dsg::{costmodel, memmodel};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(400);
+    let gamma: f32 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.5);
+
+    let dir = dsg::artifacts_dir();
+    let rt = Runtime::cpu()?;
+
+    // -- train MLP and LeNet on the FASHION-like task -------------------
+    for model in ["mlp", "lenet"] {
+        let meta = Meta::load(&dir, model)?;
+        let mut cfg = RunConfig::preset_for_model(model);
+        cfg.steps = steps;
+        cfg.eval_every = (steps / 4).max(1);
+        cfg.gamma = GammaSchedule::Warmup { target: gamma, warmup: steps / 8 };
+        cfg.train_size = 4096;
+        cfg.test_size = 1024;
+
+        let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+        let (train, test) = data
+            .split(cfg.test_size as f64 / (cfg.train_size + cfg.test_size) as f64);
+
+        println!(
+            "=== {model}: {} params, batch {}, {} steps, target gamma {gamma} ===",
+            meta.param_elems(),
+            meta.batch,
+            cfg.steps
+        );
+        let mut trainer = Trainer::new(&rt, meta, cfg.seed)?;
+        let t0 = std::time::Instant::now();
+        let acc = trainer.train(&cfg, &train, &test)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        println!("\nloss curve ({model}, smoothed over 20 steps):");
+        let h = &trainer.history;
+        for chunk_start in (0..h.steps.len()).step_by((steps / 10).max(1)) {
+            let end = (chunk_start + 20).min(h.steps.len());
+            let avg: f32 = h.steps[chunk_start..end].iter().map(|s| s.loss).sum::<f32>()
+                / (end - chunk_start) as f32;
+            let bar = "#".repeat((avg * 12.0).min(60.0) as usize);
+            println!("  step {:>4}  loss {:>7.4}  {bar}", chunk_start, avg);
+        }
+        let dens = h.mean_densities(50);
+        println!(
+            "final: eval acc {:.3}, mean step {:.1}ms, wall {:.1}s, densities {:?}",
+            acc,
+            1e3 * h.total_secs() / h.steps.len() as f64,
+            wall,
+            dens.iter().map(|d| (d * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
+        let csv = format!("/tmp/dsg_e2e_{model}.csv");
+        h.write_csv(std::path::Path::new(&csv))?;
+        println!("history -> {csv}\n");
+    }
+
+    // -- headline numbers in context ------------------------------------
+    let sp = memmodel::effective_sparsity(gamma as f64, 0.5);
+    println!("headline cost model at this run's sparsity (gamma {gamma}, act sparsity {sp:.2}):");
+    for net in costmodel::shapes::fig6_nets() {
+        let mem = memmodel::memory(&net, sp);
+        let mac = costmodel::macs(&net, gamma as f64, 0.5);
+        println!(
+            "  {:<10} train mem {:>5.2}x  acts {:>5.2}x  train ops {:>5.2}x  infer ops {:>5.2}x",
+            net.name,
+            mem.train_reduction(),
+            mem.act_reduction(),
+            mac.train_reduction(),
+            mac.infer_reduction()
+        );
+    }
+    println!("\ne2e_train OK");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Batched inference serving: single-image requests flow through the
+//! dynamic batcher (rust/src/serve) into either the HLO forward or the
+//! NATIVE sparse engine (real column skipping), and we report latency
+//! percentiles + throughput at several sparsity levels.  DSG "extends to
+//! inference by using the same selection pattern" (§5) — the same
+//! on-the-fly DRS runs per request batch.
+//!
+//!     cargo run --release --example inference_server [model] [requests]
+
+use dsg::coordinator::Trainer;
+use dsg::datasets;
+use dsg::metrics::fmt_secs;
+use dsg::native::{Mode, NativeModel};
+use dsg::runtime::{Meta, Runtime};
+use dsg::serve::{Batcher, Queue};
+use dsg::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("lenet").to_string();
+    let n_requests: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(256);
+
+    let dir = dsg::artifacts_dir();
+    let rt = Runtime::cpu()?;
+    let meta = Meta::load(&dir, &model)?;
+    let batch = meta.batch;
+    let d = meta.input_elems();
+
+    // Warm the model up with a short training run so BN stats are sane.
+    let mut cfg = dsg::config::RunConfig::preset_for_model(&model);
+    cfg.steps = 60;
+    cfg.eval_every = 0;
+    let data = if cfg.dataset == "fashion" {
+        datasets::fashion_like(1024, 3)
+    } else {
+        datasets::cifar_like(1024, 3)
+    };
+    let (train, test) = data.split(0.25);
+    let mut trainer = Trainer::new(&rt, meta.clone(), cfg.seed)?;
+    let acc = trainer.train(&cfg, &train, &test)?;
+    println!("serving {model}: batch {batch}, trained to eval acc {acc:.3}\n");
+
+    let native = NativeModel::new(&meta, &trainer.state)?;
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&meta.input_shape);
+
+    println!(
+        "{:<8} {:>7} {:>10} {:>10} {:>10} {:>11} {:>8}",
+        "backend", "gamma", "p50", "p99", "mean", "imgs/sec", "batches"
+    );
+    for gamma in [0.0f32, 0.5, 0.8, 0.9] {
+        for backend in ["hlo", "native"] {
+            let mut queue = Queue::new();
+            let mut it = datasets::BatchIter::new(&test, 1, 9);
+            for _ in 0..n_requests {
+                let (img, _) = it.next_batch();
+                queue.push(img);
+            }
+            let mut batcher = Batcher::new(batch, d, meta.classes);
+            let t0 = std::time::Instant::now();
+            let _responses = match backend {
+                "hlo" => batcher.pump(&mut queue, |xs| trainer.forward(xs, gamma))?,
+                _ => batcher.pump(&mut queue, |xs| {
+                    let xt = Tensor::new(&shape, xs.to_vec());
+                    let out = native.forward(&xt, gamma, Mode::Dsg)?;
+                    Ok(out.logits.into_data())
+                })?,
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            let s = &batcher.stats;
+            println!(
+                "{:<8} {:>7} {:>10} {:>10} {:>10} {:>11.0} {:>8}",
+                backend,
+                gamma,
+                fmt_secs(s.percentile(0.5)),
+                fmt_secs(s.percentile(0.99)),
+                fmt_secs(s.latencies.iter().sum::<f64>() / s.latencies.len() as f64),
+                s.throughput(wall),
+                s.batches
+            );
+        }
+    }
+    println!("\n(native = rust sparse engine with real column skipping; hlo = XLA-compiled forward)");
+    println!("inference_server OK");
+    Ok(())
+}

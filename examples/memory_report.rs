@@ -1,0 +1,98 @@
+//! Representational-cost report (Fig 6) with REAL compressed bytes:
+//! trains a small model, captures its actual activation sparsity from
+//! the probe artifact, runs the ZVC codec on real mask tensors, and then
+//! prints the analytic Fig 6 table for the paper's five CNNs.
+//!
+//!     cargo run --release --example memory_report [gamma]
+
+use dsg::coordinator::Trainer;
+use dsg::datasets;
+use dsg::runtime::{HostTensor, Meta, Runtime};
+use dsg::util::human_bytes;
+use dsg::{costmodel, memmodel, zvc};
+
+fn main() -> anyhow::Result<()> {
+    let gamma: f32 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.8);
+
+    let dir = dsg::artifacts_dir();
+    let rt = Runtime::cpu()?;
+    let meta = Meta::load(&dir, "lenet")?;
+
+    // short training to get representative activations
+    let mut cfg = dsg::config::RunConfig::preset_for_model("lenet");
+    cfg.steps = 60;
+    cfg.eval_every = 0;
+    let data = datasets::fashion_like(1024, 11);
+    let (train, test) = data.split(0.25);
+    let mut trainer = Trainer::new(&rt, meta.clone(), 11)?;
+    trainer.train(&cfg, &train, &test)?;
+
+    // probe: full masks for one batch -> real measured sparsity + ZVC
+    let probe = rt.load_artifact(&meta, "probe")?;
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    inputs.extend(trainer.state.params(&meta).iter().cloned());
+    inputs.extend(trainer.state.bn(&meta).iter().cloned());
+    inputs.extend(trainer.state.bn_state(&meta).iter().cloned());
+    inputs.extend(trainer.state.wps.iter().cloned());
+    inputs.extend(trainer.state.rs.iter().cloned());
+    let (xs, _) = datasets::BatchIter::new(&test, meta.batch, 1).next_batch();
+    let mut shape = vec![meta.batch];
+    shape.extend_from_slice(&meta.input_shape);
+    inputs.push(HostTensor::f32(&shape, xs));
+    inputs.push(HostTensor::scalar_f32(gamma));
+    let inputs = meta.filter_kept("probe", inputs);
+    let outs = probe.run(&inputs)?;
+
+    println!("measured on trained lenet @ gamma {gamma}:");
+    let mut total_dense = 0usize;
+    let mut total_zvc = 0usize;
+    for (i, mask) in outs[1..].iter().enumerate() {
+        let m = mask.as_f32()?;
+        // the masked activation tensor is at least as sparse as the mask
+        let sparsity = 1.0 - m.iter().sum::<f32>() as f64 / m.len() as f64;
+        let c = zvc::compress(m);
+        total_dense += c.dense_nbytes();
+        total_zvc += zvc::zvc_bytes(m.len(), sparsity);
+        println!(
+            "  layer {:>2}: {:>8} elems, mask sparsity {:.2}, zvc-at-sparsity {:>9} vs dense {:>9}",
+            i,
+            m.len(),
+            sparsity,
+            human_bytes(zvc::zvc_bytes(m.len(), sparsity) as u64),
+            human_bytes(c.dense_nbytes() as u64)
+        );
+    }
+    println!(
+        "  total: {} -> {} ({:.2}x)\n",
+        human_bytes(total_dense as u64),
+        human_bytes(total_zvc as u64),
+        total_dense as f64 / total_zvc as f64
+    );
+
+    // Fig 6 analytic table at the published model shapes
+    let s = memmodel::effective_sparsity(gamma as f64, 0.5);
+    println!("Fig 6 (paper shapes) @ activation sparsity {s:.2}:");
+    println!(
+        "{:<10} {:>6} {:>12} {:>12} {:>9} {:>8} {:>8}",
+        "model", "batch", "dense-train", "dsg-train", "train-x", "act-x", "infer-x"
+    );
+    for net in costmodel::shapes::fig6_nets() {
+        let m = memmodel::memory(&net, s);
+        println!(
+            "{:<10} {:>6} {:>12} {:>12} {:>8.2}x {:>7.2}x {:>7.2}x",
+            net.name,
+            net.batch,
+            human_bytes(m.train_dense()),
+            human_bytes(m.train_dsg()),
+            m.train_reduction(),
+            m.act_reduction(),
+            m.infer_reduction()
+        );
+    }
+    println!("\nmemory_report OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Perf probe: raw throughput of every host-side engine on the Table-1
+//! conv2 shape — the quick health check behind EXPERIMENTS.md §Perf.
+//!
+//!     cargo run --release --example perf_probe
+
+use dsg::drs::projection::{ternary_r, TernaryIndex};
+use dsg::sparse;
+use dsg::sparse::parallel;
+use dsg::tensor::{ops, Tensor};
+use dsg::util::Pcg32;
+
+fn time5(mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let t0 = std::time::Instant::now();
+    for _ in 0..5 {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / 5.0
+}
+
+fn main() {
+    let (m, d, n) = (1024usize, 1152usize, 128usize);
+    let flops = (2 * m * d * n) as f64;
+    let mut rng = Pcg32::seeded(1);
+    let x = Tensor::new(&[m, d], rng.normal_vec(m * d, 1.0));
+    let w = Tensor::new(&[d, n], rng.normal_vec(d * n, 1.0));
+    let wt = ops::transpose(&w);
+    let k = dsg::costmodel::jll::projection_dim(0.5, n, d);
+    let r = ternary_r(&mut rng, k, d, 3);
+    let ridx = TernaryIndex::from_dense(&r);
+    let wp = dsg::drs::project_weights(&r, &w);
+    let mask90 = {
+        let out = sparse::dsg_layer(&x, &wt, &wp, &ridx, 0.9);
+        out.mask
+    };
+
+    println!("conv2 shape ({m} x {d} x {n}), k = {k}, {} threads available", parallel::n_threads());
+    let t = time5(|| {
+        let _ = ops::matmul_blocked(&x, &w);
+    });
+    println!("GEMM blocked      {:>8.1}ms  {:>6.1} GFLOP/s", t * 1e3, flops / t / 1e9);
+    let t = time5(|| {
+        let _ = parallel::matmul_parallel(&x, &w);
+    });
+    println!("GEMM parallel     {:>8.1}ms  {:>6.1} GFLOP/s", t * 1e3, flops / t / 1e9);
+    let t = time5(|| {
+        let _ = sparse::vmm(&x, &wt);
+    });
+    println!("VMM               {:>8.1}ms  {:>6.1} GFLOP/s", t * 1e3, flops / t / 1e9);
+    let t = time5(|| {
+        let _ = sparse::dsg_vmm(&x, &wt, &mask90);
+    });
+    println!("DSG vmm @90%      {:>8.1}ms  (effective {:>6.1} GFLOP/s of kept work)", t * 1e3, 0.1 * flops / t / 1e9);
+    let t = time5(|| {
+        let _ = parallel::dsg_vmm_parallel(&x, &wt, &mask90);
+    });
+    println!("DSG vmm par @90%  {:>8.1}ms", t * 1e3);
+    let t = time5(|| {
+        let _ = dsg::drs::project_rows(&x, &r);
+    });
+    println!("DRS projection    {:>8.1}ms  ({} adds/row)", t * 1e3, ridx.adds_per_row());
+    let t = time5(|| {
+        let _ = parallel::project_rows_parallel(&x, &ridx);
+    });
+    println!("DRS proj parallel {:>8.1}ms", t * 1e3);
+}

@@ -1,0 +1,71 @@
+//! Quickstart: load a DSG artifact, run a few sparse training steps, and
+//! inspect what the dynamic sparse graph is doing.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use dsg::coordinator::Trainer;
+use dsg::datasets;
+use dsg::runtime::{Meta, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = dsg::artifacts_dir();
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // The artifact was AOT-lowered from JAX+Pallas once; python is not
+    // involved from here on.
+    let meta = Meta::load(&dir, "mlp")?;
+    println!(
+        "loaded {}: {} params, batch {}, {} DSG layers (eps {})",
+        meta.name,
+        meta.param_elems(),
+        meta.batch,
+        meta.counts.dsg,
+        meta.eps
+    );
+    for l in &meta.dsg_layers {
+        println!(
+            "  DSG layer {}: d={} projected to k={} ({:.1}x reduction)",
+            l.path,
+            l.d_in,
+            l.k,
+            l.d_in as f64 / l.k as f64
+        );
+    }
+
+    let mut trainer = Trainer::new(&rt, meta, 42)?;
+    let data = datasets::fashion_like(512, 42);
+    let mut batches = datasets::BatchIter::new(&data, trainer.meta.batch, 1);
+
+    // Train 20 steps at 50% sparsity: only half the output neurons of
+    // each layer are computed, chosen per-sample by the dimension-
+    // reduction search.
+    println!("\nstep  loss    acc    mask densities (per DSG layer)");
+    for step in 0..20 {
+        let (xs, ys) = batches.next_batch();
+        let out = trainer.step(&xs, &ys, 0.5, 0.05)?;
+        if step % 4 == 0 {
+            println!(
+                "{:>4}  {:.4}  {:.3}  {:?}",
+                step,
+                out.loss,
+                out.acc,
+                out.densities.iter().map(|d| (d * 100.0).round() / 100.0).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    // Sparsity is a runtime knob: the SAME artifact serves any gamma.
+    println!("\nsame artifact, different sparsity levels:");
+    let (xs, ys) = batches.next_batch();
+    for gamma in [0.0, 0.3, 0.8, 0.95] {
+        let out = trainer.step(&xs, &ys, gamma, 0.0)?; // lr 0: just probe
+        println!(
+            "  gamma {:>4}: densities {:?}",
+            gamma,
+            out.densities.iter().map(|d| (d * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,516 @@
+"""AOT export: lower every model variant's train/forward/project functions
+to HLO **text** and emit the buffer-layout meta JSON the rust runtime uses.
+
+Interchange is HLO text, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; python never appears on the request path.
+
+Outputs (per variant, under artifacts/):
+  <name>.train.hlo.txt     functional train step (Algorithm 1)
+  <name>.fwd.hlo.txt       inference/eval forward
+  <name>.project.hlo.txt   Wp refresh (drs variants only; rust schedules it)
+  <name>.meta.json         flat buffer layout + init specs + file names
+  <name>.probe.hlo.txt     forward that also returns full masks (probe set)
+  golden/*                 cross-language golden vectors for rust tests
+  kernels/*                standalone L1 kernel artifacts + goldens
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import layers as L
+from . import models as M
+from . import train as T
+from .kernels import masked_matmul as mm
+from .kernels import projection as pj
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (the gen_hlo.py recipe)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> list:
+    """Lower and write; returns the kept flat-input indices.
+
+    XLA DCEs unused inputs out of the lowered signature (e.g. the `step`
+    scalar in non-random variants, wps/rs in dense ones); the rust runtime
+    must supply exactly the kept inputs, so we record their indices.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    n_flat = len(jax.tree_util.tree_leaves(example_args))
+    kept = lowered._lowering.compile_args.get("kept_var_idx")
+    kept = sorted(kept) if kept is not None else list(range(n_flat))
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# Flat leaf naming / meta description
+# ---------------------------------------------------------------------------
+
+_DTYPE = {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "key"):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def leaves_with_names(tree, group: str):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((f"{group}.{_path_str(path)}", leaf))
+    return out
+
+
+def _init_spec(name: str, leaf) -> dict:
+    """Infer the init recipe for a state leaf (mirrored by rust init.rs)."""
+    shape = list(leaf.shape)
+    if name.startswith(("vel.", "vbn.")):
+        return {"kind": "zeros"}
+    if name.startswith("bn_state."):
+        return {"kind": "ones"} if name.endswith(".var") else {"kind": "zeros"}
+    if name.startswith("bn."):
+        return {"kind": "ones"} if name.endswith(".scale") else {"kind": "zeros"}
+    if name.startswith("r."):
+        return {"kind": "ternary", "s": 3}
+    if name.endswith(".b"):
+        return {"kind": "zeros"}
+    if name.endswith(".w"):
+        if len(shape) == 4:
+            fan_in = shape[1] * shape[2] * shape[3]
+        else:
+            fan_in = shape[0]
+        return {"kind": "he_normal", "fan_in": fan_in}
+    return {"kind": "zeros"}
+
+
+def describe(leaves) -> list:
+    out = []
+    for name, leaf in leaves:
+        out.append(
+            {
+                "name": name,
+                "shape": list(leaf.shape),
+                "dtype": _DTYPE[leaf.dtype],
+                "init": _init_spec(name, leaf),
+            }
+        )
+    return out
+
+
+def sds(tree):
+    """Pytree of arrays -> pytree of ShapeDtypeStructs (for .lower)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# Variant registry
+# ---------------------------------------------------------------------------
+
+
+def build_variants(fast: bool):
+    """(exported name, Model, emit_probe) triples; see DESIGN.md E1-E17."""
+    out = []
+
+    def add(model, probe=False):
+        out.append((model.name, model, probe))
+
+    add(M.get("mlp"), probe=True)
+    add(M.get("mlp").with_opts(strategy="dense").renamed("mlp_dense"))
+    add(M.get("lenet"), probe=True)
+    add(M.get("lenet").with_opts(strategy="dense").renamed("lenet_dense"))
+    if fast:
+        return out
+
+    add(M.get("vgg8"))  # lite width 32
+    add(M.get("vgg8").with_opts(strategy="dense").renamed("vgg8_dense"))
+    add(M.get("resnet8"))
+    add(M.get("resnet8").with_opts(strategy="dense").renamed("resnet8_dense"))
+    add(M.get("wrn8_2"))
+
+    # Fig 5c/5e ablations on a slimmer vgg8 (w=16) to bound bench runtime.
+    s = M.vgg8(width=16, name="vgg8s")
+    add(s)
+    add(s.with_opts(strategy="oracle").renamed("vgg8s_oracle"))
+    add(s.with_opts(strategy="random").renamed("vgg8s_random"))
+    add(s.with_opts(double_mask=False).renamed("vgg8s_single"))
+    add(s.with_opts(use_bn=False).renamed("vgg8s_nobn"))
+    add(s.with_opts(strategy="dense").renamed("vgg8s_dense"))
+
+    # Fig 5d: epsilon sweep (k changes => static shape change per artifact).
+    for eps in (0.3, 0.7, 0.9):
+        add(s.with_opts(eps=eps).renamed(f"vgg8s_eps{int(eps * 100)}"))
+
+    # Fig 8b / Fig 12: smaller-dense models with equivalent effective MACs
+    # (width ~ w * sqrt(1-gamma) for gamma in {0.5, 0.8}).
+    add(M.vgg8(width=23, name="vgg8_d23").with_opts(strategy="dense"))
+    add(M.vgg8(width=14, name="vgg8_d14").with_opts(strategy="dense"))
+    add(M.resnet8(width=11, name="resnet8_d11").with_opts(strategy="dense"))
+    add(M.resnet8(width=7, name="resnet8_d7").with_opts(strategy="dense"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-variant export
+# ---------------------------------------------------------------------------
+
+
+def make_project_flat(model):
+    """project(ws, rs) -> wps over the flat dsg-weight list."""
+    specs = M.dsg_specs(model)
+
+    def project(ws, rs):
+        wps = []
+        for (path, spec), w, r in zip(specs, ws, rs):
+            if isinstance(spec, L.Conv):
+                wmat = w.reshape(w.shape[0], -1).T
+            else:
+                wmat = w
+            wps.append(pj.project_weights(r, wmat))
+        return wps
+
+    return project
+
+
+def unit_topology(model) -> list:
+    """Serializable unit list so the rust NATIVE inference engine
+    (rust/src/native/) can replay the exact forward topology with real
+    column skipping — the bridge between the Fig 8 engine and real models."""
+    units = []
+    for u in model.units:
+        if isinstance(u, L.Dense):
+            units.append(
+                {
+                    "kind": "classifier" if u.classifier else "dense",
+                    "d_in": u.d_in,
+                    "d_out": u.d_out,
+                }
+            )
+        elif isinstance(u, L.Conv):
+            units.append(
+                {
+                    "kind": "conv",
+                    "c_in": u.c_in,
+                    "c_out": u.c_out,
+                    "ksize": u.ksize,
+                    "stride": u.stride,
+                    "pad": u.pad,
+                }
+            )
+        elif isinstance(u, L.Residual):
+            units.append(
+                {
+                    "kind": "residual",
+                    "c_in": u.c_in,
+                    "c_out": u.c_out,
+                    "stride": u.stride,
+                }
+            )
+        elif isinstance(u, L.MaxPool):
+            units.append({"kind": "maxpool", "size": u.size})
+        elif isinstance(u, L.GlobalAvgPool):
+            units.append({"kind": "gap"})
+        elif isinstance(u, L.Flatten):
+            units.append({"kind": "flatten"})
+        else:
+            raise TypeError(f"unknown unit {u}")
+    return units
+
+
+def dsg_weight_names(model) -> list:
+    """params-group leaf names of each DSG layer's weight, in dsg order."""
+    names = []
+    for i, u in enumerate(model.units):
+        if isinstance(u, L.Dense) and not u.classifier:
+            names.append(f"params.{i}.w")
+        elif isinstance(u, L.Conv):
+            names.append(f"params.{i}.w")
+        elif isinstance(u, L.Residual):
+            names.append(f"params.{i}.conv1.w")
+            names.append(f"params.{i}.conv2.w")
+    return names
+
+
+def export_variant(name: str, model: M.Model, out_dir: str, probe: bool) -> dict:
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, model)
+    bn = M.init_bn(model)
+    bn_state = M.init_bn_state(model)
+    vel = T.init_velocities(params)
+    vbn = T.init_velocities(bn)
+    is_drs = model.opts.strategy == "drs"
+    rs = M.init_projections(key, model) if is_drs else []
+    wps = M.project_all(model, params, rs) if is_drs else []
+
+    x = jnp.zeros((model.batch,) + model.input_shape, jnp.float32)
+    y = jnp.zeros((model.batch,), jnp.int32)
+    gamma = jnp.float32(0.5)
+    lr = jnp.float32(0.05)
+    step = jnp.int32(0)
+
+    state_leaves = (
+        leaves_with_names(params, "params")
+        + leaves_with_names(vel, "vel")
+        + leaves_with_names(bn, "bn")
+        + leaves_with_names(vbn, "vbn")
+        + leaves_with_names(bn_state, "bn_state")
+    )
+    wp_leaves = leaves_with_names(wps, "wp")
+    r_leaves = leaves_with_names(rs, "r")
+
+    files = {}
+    kept = {}
+    t0 = time.time()
+    train_fn = T.make_train_step(model)
+    train_args = (params, vel, bn, vbn, bn_state, wps, rs, x, y, gamma, lr, step)
+    files["train"] = f"{name}.train.hlo.txt"
+    kept["train"] = lower_to_file(
+        train_fn, sds(train_args), os.path.join(out_dir, files["train"])
+    )
+
+    fwd_fn = T.make_forward(model)
+    fwd_args = (params, bn, bn_state, wps, rs, x, gamma)
+    files["forward"] = f"{name}.fwd.hlo.txt"
+    kept["forward"] = lower_to_file(
+        fwd_fn, sds(fwd_args), os.path.join(out_dir, files["forward"])
+    )
+
+    if is_drs:
+        proj_fn = make_project_flat(model)
+        ws = [
+            dict(state_leaves)[n] for n in dsg_weight_names(model)
+        ]
+        files["project"] = f"{name}.project.hlo.txt"
+        kept["project"] = lower_to_file(
+            proj_fn, (sds(ws), sds(rs)), os.path.join(out_dir, files["project"])
+        )
+
+    if probe and is_drs:
+
+        def probe_fn(params, bn, bn_state, wps, rs, x, gamma):
+            cap = []
+            logits, _, _ = M.forward(
+                model,
+                params,
+                bn,
+                bn_state,
+                wps,
+                rs,
+                x,
+                gamma,
+                train=False,
+                step=jnp.int32(0),
+                capture=cap,
+            )
+            return (logits, *cap)
+
+        files["probe"] = f"{name}.probe.hlo.txt"
+        kept["probe"] = lower_to_file(
+            probe_fn, sds(fwd_args), os.path.join(out_dir, files["probe"])
+        )
+
+    n_params = len(leaves_with_names(params, "params"))
+    n_vel = len(leaves_with_names(vel, "vel"))
+    n_bn = len(leaves_with_names(bn, "bn"))
+    n_vbn = len(leaves_with_names(vbn, "vbn"))
+    n_bn_state = len(leaves_with_names(bn_state, "bn_state"))
+    state_names = [n for n, _ in state_leaves]
+    dsg_w_names = dsg_weight_names(model) if is_drs else []
+    meta = {
+        "name": name,
+        "base_model": model.name,
+        "batch": model.batch,
+        "input_shape": list(model.input_shape),
+        "classes": model.n_classes,
+        "opts": dataclasses.asdict(model.opts),
+        "files": files,
+        "kept": kept,
+        "units": unit_topology(model),
+        "counts": {
+            "params": n_params,
+            "vel": n_vel,
+            "bn": n_bn,
+            "vbn": n_vbn,
+            "bn_state": n_bn_state,
+            "wps": len(wp_leaves),
+            "rs": len(r_leaves),
+            "dsg": len(M.dsg_specs(model)),
+        },
+        "state": describe(state_leaves),
+        "wps": describe(wp_leaves),
+        "rs": describe(r_leaves),
+        "dsg_weight_indices": [state_names.index(n) for n in dsg_w_names],
+        "dsg_layers": [
+            {"path": p, "k": k, "d_in": d, "n_out": n}
+            for p, k, d, n in (M.projection_shapes(model) if is_drs else [])
+        ],
+    }
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  {name}: {len(files)} artifacts in {time.time() - t0:.1f}s")
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors (rust integration tests compare against these)
+# ---------------------------------------------------------------------------
+
+
+def _write_golden(path_base: str, tensors: list):
+    """tensors: [(name, np.ndarray)] -> .bin (raw LE) + .json (index)."""
+    index = []
+    offset = 0
+    with open(path_base + ".bin", "wb") as f:
+        for name, arr in tensors:
+            arr = np.asarray(arr)
+            if arr.dtype == np.float32:
+                dt = "f32"
+            elif arr.dtype == np.int32:
+                dt = "s32"
+            else:
+                raise TypeError(f"golden dtype {arr.dtype}")
+            raw = arr.tobytes()  # C-order little-endian
+            f.write(raw)
+            index.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "dtype": dt,
+                    "offset": offset,
+                    "nbytes": len(raw),
+                }
+            )
+            offset += len(raw)
+    with open(path_base + ".json", "w") as f:
+        json.dump(index, f, indent=1)
+
+
+def export_golden_mlp(out_dir: str):
+    """One concrete mlp train step: full inputs + outputs, for rust tests."""
+    model = M.get("mlp")
+    key = jax.random.PRNGKey(7)
+    params = M.init_params(key, model)
+    bn = M.init_bn(model)
+    bn_state = M.init_bn_state(model)
+    vel = T.init_velocities(params)
+    vbn = T.init_velocities(bn)
+    rs = M.init_projections(key, model)
+    wps = M.project_all(model, params, rs)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (model.batch,) + model.input_shape, jnp.float32)
+    y = jax.random.randint(ky, (model.batch,), 0, model.n_classes)
+    gamma = jnp.float32(0.5)
+    lr = jnp.float32(0.05)
+    step = jnp.int32(0)
+
+    args = (params, vel, bn, vbn, bn_state, wps, rs, x, y, gamma, lr, step)
+    outs = jax.jit(T.make_train_step(model))(*args)
+
+    flat_in, _ = jax.tree_util.tree_flatten(args)
+    flat_out, _ = jax.tree_util.tree_flatten(outs)
+    tensors = [(f"in{i}", np.asarray(a)) for i, a in enumerate(flat_in)]
+    tensors += [(f"out{i}", np.asarray(a)) for i, a in enumerate(flat_out)]
+    _write_golden(os.path.join(out_dir, "golden", "mlp_step"), tensors)
+    print(f"  golden/mlp_step: {len(flat_in)} in, {len(flat_out)} out")
+
+
+def export_kernel_artifacts(out_dir: str):
+    """Standalone L1 kernel HLO + golden: the runtime smoke path."""
+    kdir = os.path.join(out_dir, "kernels")
+    os.makedirs(kdir, exist_ok=True)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((32, 96), dtype=np.float32)
+    w = rng.standard_normal((96, 64), dtype=np.float32)
+    mask = (rng.random((32, 64)) < 0.5).astype(np.float32)
+
+    fn = lambda x, w, m: mm.masked_matmul(x, w, m)
+    lower_to_file(
+        fn,
+        (
+            jax.ShapeDtypeStruct((32, 96), jnp.float32),
+            jax.ShapeDtypeStruct((96, 64), jnp.float32),
+            jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        ),
+        os.path.join(kdir, "masked_matmul.hlo.txt"),
+    )
+    out = np.asarray(jax.jit(fn)(x, w, mask))
+    _write_golden(
+        os.path.join(kdir, "masked_matmul"),
+        [("x", x), ("w", w), ("mask", mask), ("out", out)],
+    )
+    print("  kernels/masked_matmul: artifact + golden")
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--fast", action="store_true", help="mlp+lenet only")
+    ap.add_argument("--only", default=None, help="export a single variant")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    variants = build_variants(args.fast)
+    if args.only:
+        variants = [v for v in variants if v[0] == args.only]
+        if not variants:
+            sys.exit(f"no variant named {args.only!r}")
+
+    t0 = time.time()
+    index = {}
+    for name, model, probe in variants:
+        meta = export_variant(name, model, out_dir, probe)
+        index[name] = f"{name}.meta.json"
+    export_golden_mlp(out_dir)
+    export_kernel_artifacts(out_dir)
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"exported {len(variants)} variants in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the DSG hot spots.
+
+All kernels are lowered with ``interpret=True`` so they become plain HLO
+ops that the CPU PJRT client (rust side, xla_extension 0.5.1) can run.
+Real-TPU performance is *estimated* from the BlockSpec arithmetic in
+DESIGN.md / EXPERIMENTS.md §Perf; on TPU the same kernels would lower to
+Mosaic custom-calls.
+
+Kernels
+-------
+- ``projection.project``          — sparse random projection  Xp = X R^T / sqrt(k)
+- ``projection.project_weights``  — Wp = R W / sqrt(k)
+- ``masked_matmul.masked_matmul`` — Y = (X W) * M with mask epilogue
+- ``masked_matmul.matmul``        — plain tiled matmul (baseline path)
+- ``topk_mask.threshold_mask``    — M = (V >= t); ``apply`` fuses Y * M
+
+``ref.py`` holds the pure-jnp oracles used by pytest/hypothesis.
+"""
+
+from . import masked_matmul, projection, ref, topk_mask  # noqa: F401
+
+__all__ = ["projection", "topk_mask", "masked_matmul", "ref"]

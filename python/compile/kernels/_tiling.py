@@ -1,0 +1,46 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+TPU-adaptation notes (see DESIGN.md §Hardware adaptation): block shapes
+are chosen to fit VMEM (~16 MiB/core budget, we target <= 4 MiB per
+operand tile) and to keep the MXU fed with (128, 128) f32 / (128, 256)
+bf16 tiles.  On CPU (interpret mode) the same shapes simply bound the
+working set; correctness is tiling-invariant and pytest sweeps odd shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``preferred``.
+
+    Guarantees an exact grid (no ragged edge) so kernels never read
+    out-of-bounds; callers pad to a friendly multiple first when they
+    care about block quality.
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def pad_to_multiple(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def vmem_bytes(block_shape, dtype=jnp.float32) -> int:
+    """Estimated VMEM bytes for one operand tile (perf model input)."""
+    n = 1
+    for d in block_shape:
+        n *= d
+    return n * jnp.dtype(dtype).itemsize

@@ -1,0 +1,168 @@
+"""Tiled (masked) matmul Pallas kernels.
+
+The DSG exact-compute hot spot: ``Y = (X @ W) * M`` where ``M`` is the
+binary selection mask produced by the dimension-reduction search.  On TPU
+the mask-multiply is an epilogue fused into the final K-step of the MXU
+matmul tile, so the masked output never round-trips to HBM dense.
+
+Grid is (M/bm, N/bn, K/bk) with sequential K accumulation into the output
+block — the canonical Pallas matmul schedule.  ``interpret=True``
+throughout (CPU PJRT cannot execute Mosaic custom-calls).
+
+Both entry points carry a ``custom_vjp``:
+
+- pallas_call's automatic JVP cannot differentiate kernels that branch on
+  ``pl.program_id`` (the K-step init/epilogue), and
+- the paper's Algorithm 1 *defines* the backward pass explicitly: the
+  upstream gradient is masked (``G * M``) and then flows through two more
+  matmuls — so the backward is itself built from these same kernels,
+  giving the forced gradient sparsification for free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._tiling import pick_block
+
+# Preferred block sizes: MXU-native 128x128 output tiles, 256-deep K
+# panels (f32: 3 tiles * 128*256*4B = 384 KiB << VMEM budget).
+# TPU-target tile sizes (the BlockSpec the MXU schedule would use; these
+# drive the VMEM/MXU estimates in EXPERIMENTS.md §Perf):
+TPU_BM, TPU_BN, TPU_BK = 128, 128, 256
+# Interpret-mode execution pays a fixed cost PER GRID STEP (dynamic-slice
+# + interpreter dispatch, ~5ms); on CPU we therefore run each kernel as a
+# single full-array block.  pick_block clamps to the actual dims.
+_BM = _BN = _BK = 1 << 30
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Accumulating matmul tile; zero-init on the first K step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref, *, nk: int):
+    """Matmul tile with mask epilogue on the last K step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        o_ref[...] *= m_ref[...]
+
+
+def _grid_and_specs(m: int, k: int, n: int, bm: int, bn: int, bk: int):
+    grid = (m // bm, n // bn, k // bk)
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, s: (i, s))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, s: (s, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+    return grid, x_spec, w_spec, o_spec
+
+
+def matmul_impl(x, w, bm: int = _BM, bn: int = _BN, bk: int = _BK):
+    """Tiled Pallas matmul ``x @ w`` with explicit block sizes (no vjp)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    grid, x_spec, w_spec, o_spec = _grid_and_specs(m, k, n, bm, bn, bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[x_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def masked_matmul_impl(x, w, mask, bm: int = _BM, bn: int = _BN, bk: int = _BK):
+    """Masked Pallas matmul ``(x @ w) * mask`` with explicit blocks (no vjp)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert mask.shape == (m, n), f"mask shape {mask.shape} != {(m, n)}"
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    grid, x_spec, w_spec, o_spec = _grid_and_specs(m, k, n, bm, bn, bk)
+    m_spec = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+    return pl.pallas_call(
+        functools.partial(_masked_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[x_spec, w_spec, m_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, mask.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Differentiable entry points
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Pallas matmul ``x @ w`` (differentiable)."""
+    return matmul_impl(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    gx = matmul_impl(g, w.T)
+    gw = matmul_impl(x.T, g)
+    return gx, gw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@jax.custom_vjp
+def masked_matmul(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """DSG structured-sparse matmul: ``(x @ w) * mask``.
+
+    ``mask`` is (m, n) binary — each row selects which output neurons
+    (columns of ``w``) this input row actually computes.  Numerically
+    exact w.r.t. the dense product; the wall-clock skip lives in the rust
+    engine (`rust/src/sparse/`), and on TPU in the HBM->VMEM schedule.
+
+    Backward (Algorithm 1): the upstream gradient is masked first, then
+    ``gx = (g*M) W^T`` and ``gw = X^T (g*M)`` — both tiled Pallas matmuls,
+    so the backward pass is exactly as sparse as the forward.
+    """
+    return masked_matmul_impl(x, w, mask)
+
+
+def _masked_matmul_fwd(x, w, mask):
+    return masked_matmul_impl(x, w, mask), (x, w, mask)
+
+
+def _masked_matmul_bwd(res, g):
+    x, w, mask = res
+    gm = g * mask  # forced gradient sparsification at the mask layer
+    gx = matmul_impl(gm, w.T)
+    gw = matmul_impl(x.T, gm)
+    return gx, gw, jnp.zeros_like(mask)
+
+
+masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)

@@ -1,0 +1,125 @@
+"""Sparse-random-projection Pallas kernels (paper §2.2, eq. 5-6).
+
+``project``          : Xp = X @ R.T / sqrt(k)   (per-sample projection)
+``project_weights``  : Wp = R @ W / sqrt(k)     (refreshed every 50 steps
+                                                 by the rust coordinator)
+
+R is the Achlioptas ternary matrix with entries {-sqrt(s), 0, +sqrt(s)},
+P(+-) = 1/(2s), s = 3 (67% zeros).  On real hardware the ternary structure
+removes all multiplies; in the HLO/MXU world we keep R dense f32 — the
+win that survives is the d -> k (~8.5x at eps=0.5) shrink of the inner
+dimension, which is exactly the paper's low-dimensional-search saving.
+
+The 1/sqrt(k) scale is fused into the final K-step epilogue so the
+projected tile leaves VMEM already normalized.
+
+Both entry points have a custom_vjp: the DRS estimate sits behind
+stop_gradient in the model, but jax still JVP-traces through it while
+building the backward graph, and pallas kernels that branch on
+``pl.program_id`` are not JVP-traceable.  The vjp is mathematically the
+transpose projection (it is DCE'd out of the exported HLO).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._tiling import pick_block
+
+# TPU-target tile sizes (the BlockSpec the MXU schedule would use; these
+# drive the VMEM/MXU estimates in EXPERIMENTS.md §Perf):
+TPU_BM, TPU_BN, TPU_BK = 128, 128, 256
+# Interpret-mode execution pays a fixed cost PER GRID STEP (dynamic-slice
+# + interpreter dispatch, ~5ms); on CPU we therefore run each kernel as a
+# single full-array block.  pick_block clamps to the actual dims.
+_BM = _BN = _BK = 1 << 30
+
+
+def _scaled_matmul_kernel(a_ref, b_ref, o_ref, *, nk: int, scale: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        o_ref[...] *= jnp.float32(scale)
+
+
+def scaled_matmul_impl(a, b, scale, bm: int = _BM, bn: int = _BN, bk: int = _BK):
+    """``(a @ b) * scale`` as a tiled Pallas kernel (no vjp)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_scaled_matmul_kernel, nk=grid[2], scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def project(x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """f(X) = X R^T / sqrt(k).  x: (m, d), r: (k, d) -> (m, k)."""
+    k = r.shape[0]
+    assert x.shape[1] == r.shape[1], (
+        f"projection dim mismatch: x d={x.shape[1]} r d={r.shape[1]}"
+    )
+    return scaled_matmul_impl(x, r.T, 1.0 / float(k) ** 0.5)
+
+
+def _project_fwd(x, r):
+    k = r.shape[0]
+    return scaled_matmul_impl(x, r.T, 1.0 / float(k) ** 0.5), (x, r)
+
+
+def _project_bwd(res, g):
+    x, r = res
+    k = r.shape[0]
+    gx = scaled_matmul_impl(g, r, 1.0 / float(k) ** 0.5)
+    gr = scaled_matmul_impl(g.T, x, 1.0 / float(k) ** 0.5)
+    return gx, gr
+
+
+project.defvjp(_project_fwd, _project_bwd)
+
+
+@jax.custom_vjp
+def project_weights(r: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """f(W) = R W / sqrt(k).  r: (k, d), w: (d, n) -> (k, n)."""
+    k = r.shape[0]
+    assert r.shape[1] == w.shape[0], (
+        f"projection dim mismatch: r d={r.shape[1]} w d={w.shape[0]}"
+    )
+    return scaled_matmul_impl(r, w, 1.0 / float(k) ** 0.5)
+
+
+def _project_weights_fwd(r, w):
+    k = r.shape[0]
+    return scaled_matmul_impl(r, w, 1.0 / float(k) ** 0.5), (r, w)
+
+
+def _project_weights_bwd(res, g):
+    r, w = res
+    k = r.shape[0]
+    gr = scaled_matmul_impl(g, w.T, 1.0 / float(k) ** 0.5)
+    gw = scaled_matmul_impl(r.T, g, 1.0 / float(k) ** 0.5)
+    return gr, gw
+
+
+project_weights.defvjp(_project_weights_fwd, _project_weights_bwd)

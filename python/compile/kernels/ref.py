@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the single source of numerical truth: pytest/hypothesis sweeps
+assert the Pallas kernels match these to float tolerance, and the rust
+integration tests check the loaded HLO against values produced by these
+(via golden files emitted at `make artifacts` time).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle: ``x @ w`` in f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def project(x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Sparse-random-projection oracle (paper eq. 5).
+
+    x: (m, d), r: (k, d) ternary in {-sqrt(s), 0, +sqrt(s)}.
+    Returns f(x) = x @ r.T / sqrt(k) with shape (m, k).
+    """
+    k = r.shape[0]
+    return jnp.dot(x, r.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(k)
+    )
+
+
+def project_weights(r: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Weight-side projection oracle: f(w_j) = R w_j / sqrt(k), all j.
+
+    r: (k, d), w: (d, n) -> (k, n).
+    """
+    k = r.shape[0]
+    return jnp.dot(r, w, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(k)
+    )
+
+
+def threshold_mask(virt: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Binary selection mask oracle: 1 where virt >= thresh (paper Fig 9)."""
+    return (virt >= thresh).astype(virt.dtype)
+
+
+def threshold_apply(y: jnp.ndarray, virt: jnp.ndarray, thresh) -> jnp.ndarray:
+    """Fused mask-apply oracle: y * (virt >= thresh)."""
+    return y * threshold_mask(virt, jnp.asarray(thresh, virt.dtype))
+
+
+def masked_matmul(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Structured-sparse matmul oracle: (x @ w) * mask.
+
+    mask: (m, n) binary — the paper's vector-wise selection; columns of w
+    whose mask entries are zero are never needed (the rust engine really
+    skips them; here the multiply is the numerically-exact equivalent).
+    """
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) * mask
+
+
+def topk_threshold(virt_row: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Top-k threshold oracle over one flattened sample (threshold sharing).
+
+    Returns the ``keep``-th largest value of ``virt_row`` (keep >= 1); the
+    mini-batch shares this threshold (paper Appendix B, Fig 9).
+    """
+    flat = virt_row.reshape(-1)
+    sorted_desc = jnp.sort(flat)[::-1]
+    idx = jnp.clip(keep - 1, 0, flat.shape[0] - 1)
+    return sorted_desc[idx]

@@ -1,0 +1,151 @@
+"""Threshold-compare / mask-apply Pallas kernels (paper §2.1, Fig 9).
+
+The DSG selection mask is ``M = (V >= t)`` where V are the virtual
+activations estimated in the low-dimensional space and ``t`` is the top-k
+threshold searched on the *first* sample of the mini-batch and shared
+across the batch (inter-sample threshold sharing, Appendix B).
+
+These are VPU (elementwise) kernels, not MXU work: on TPU they stream the
+activation tile once, fusing compare + select + multiply.  Two entry
+points:
+
+- ``threshold_mask(virt, t)``     -> binary mask, same shape as virt
+- ``threshold_apply(y, virt, t)`` -> y * (virt >= t)   (fused single pass)
+
+The threshold itself comes from a full sort at L2 (``jnp.sort`` lowers to
+an XLA sort) indexed by a *runtime* gamma index, so one artifact serves
+every sparsity level.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._tiling import pick_block
+
+# TPU-target tile sizes (VPU lanes); interpret mode uses one block — see
+# masked_matmul.py for the per-grid-step cost rationale.
+TPU_BM, TPU_BN = 256, 256
+_BM = _BN = 1 << 30
+
+
+def _mask_kernel(v_ref, t_ref, o_ref):
+    o_ref[...] = (v_ref[...] >= t_ref[0, 0]).astype(o_ref.dtype)
+
+
+def _apply_kernel(y_ref, v_ref, t_ref, o_ref):
+    o_ref[...] = y_ref[...] * (v_ref[...] >= t_ref[0, 0]).astype(y_ref.dtype)
+
+
+def _block_2d(x: jnp.ndarray):
+    """View any tensor as 2-D (rows, cols) for elementwise tiling."""
+    if x.ndim == 1:
+        return x.reshape(1, -1), x.shape
+    if x.ndim == 2:
+        return x, x.shape
+    lead = 1
+    for d in x.shape[:-1]:
+        lead *= d
+    return x.reshape(lead, x.shape[-1]), x.shape
+
+
+def threshold_mask_impl(virt, thresh, bm: int = _BM, bn: int = _BN):
+    """Binary selection mask: 1.0 where ``virt >= thresh`` (no vjp)."""
+    v2, orig = _block_2d(virt)
+    m, n = v2.shape
+    bm, bn = pick_block(m, bm), pick_block(n, bn)
+    t = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _mask_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(v2.astype(jnp.float32), t)
+    return out.reshape(orig)
+
+
+def threshold_apply_impl(y, virt, thresh, bm: int = _BM, bn: int = _BN):
+    """Fused mask apply ``y * (virt >= thresh)`` (no vjp)."""
+    assert y.shape == virt.shape, f"{y.shape} != {virt.shape}"
+    y2, orig = _block_2d(y)
+    v2, _ = _block_2d(virt)
+    m, n = y2.shape
+    bm, bn = pick_block(m, bm), pick_block(n, bn)
+    t = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(y2.astype(jnp.float32), v2.astype(jnp.float32), t)
+    return out.reshape(orig)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable entry points (custom_vjp: pallas JVP tracing is
+# unavailable, and Algorithm 1 *specifies* the backward masking anyway)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def threshold_mask(virt: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Binary selection mask: 1.0 where ``virt >= thresh`` else 0.0.
+
+    Non-differentiable (piecewise-constant): the vjp is zero, matching the
+    paper's treatment of the mask as a constant during backprop.
+    """
+    return threshold_mask_impl(virt, thresh)
+
+
+def _mask_fwd(virt, thresh):
+    return threshold_mask_impl(virt, thresh), (virt.shape, virt.dtype)
+
+
+def _mask_bwd(res, g):
+    shape, dtype = res
+    return jnp.zeros(shape, dtype), jnp.zeros((), jnp.float32)
+
+
+threshold_mask.defvjp(_mask_fwd, _mask_bwd)
+
+
+@jax.custom_vjp
+def threshold_apply(
+    y: jnp.ndarray, virt: jnp.ndarray, thresh: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused mask apply: ``y * (virt >= thresh)`` in a single pass.
+
+    Backward (Algorithm 1): the upstream gradient passes through the SAME
+    mask — ``gy = g * (virt >= t)`` — computed by the same fused kernel,
+    i.e. gradients are forcibly sparsified at every mask layer.
+    """
+    return threshold_apply_impl(y, virt, thresh)
+
+
+def _apply_fwd(y, virt, thresh):
+    t = jnp.asarray(thresh, jnp.float32)
+    return threshold_apply_impl(y, virt, t), (virt, t)
+
+
+def _apply_bwd(res, g):
+    virt, t = res
+    gy = threshold_apply_impl(g, virt, t)  # backward masking
+    return gy, jnp.zeros_like(virt), jnp.zeros((), jnp.float32)
+
+
+threshold_apply.defvjp(_apply_fwd, _apply_bwd)

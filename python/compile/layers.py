@@ -1,0 +1,397 @@
+"""L2 — DSG layers: conv / dense with dimension-reduction search,
+double-mask BatchNorm, and selection-strategy baselines.
+
+Layer dataflow (paper Algorithm 1, §2.3; order CONV/FC -> ReLU -> BN):
+
+    virt   = DRS estimate of pre-activations (low-dim Pallas matmul)
+    t      = top-k threshold from sample 0 (inter-sample sharing, Fig 9)
+    mask   = virt >= t                                  [stop-gradient]
+    s      = relu( (x (*) W) * mask )                   [mask 1]
+    out    = BN(s) * mask                               [mask 2]
+
+Selection strategies (Fig 5c):
+    'drs'    — virtual activations from the random projection (the paper)
+    'oracle' — virtual activations = exact pre-activations (upper bound)
+    'random' — virtual activations = fresh Gaussian noise (lower bound)
+    'dense'  — no masking at all (gamma ignored)
+
+The sparsity level gamma is a *runtime* scalar: the threshold indexes a
+full sort of sample-0's virtual activations with a dynamic index, so a
+single HLO artifact serves every sparsity level (and lets the rust
+coordinator schedule sparsity over training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import jll
+from .kernels import masked_matmul as mm
+from .kernels import projection as pj
+from .kernels import topk_mask as tk
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DSGOptions:
+    """Static per-model DSG configuration (baked into the artifact)."""
+
+    eps: float = 0.5  # JLL approximation knob (Fig 5d)
+    strategy: str = "drs"  # drs | oracle | random | dense
+    double_mask: bool = True  # False => single mask (Fig 5e case 2)
+    use_bn: bool = True  # False => no BN       (Fig 5e case 1)
+
+    def validate(self) -> None:
+        if self.strategy not in ("drs", "oracle", "random", "dense"):
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+        if not (0.0 < self.eps < 1.0):
+            raise ValueError(f"eps out of range: {self.eps}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """FC layer. DSG-masked unless ``classifier`` (last layer, has bias)."""
+
+    d_in: int
+    d_out: int
+    classifier: bool = False
+
+    @property
+    def name(self) -> str:
+        return f"dense{self.d_in}x{self.d_out}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """3x3/5x5 conv, stride/pad, DSG-masked, no bias (BN provides beta)."""
+
+    c_in: int
+    c_out: int
+    ksize: int = 3
+    stride: int = 1
+    pad: int = 1
+
+    @property
+    def name(self) -> str:
+        return f"conv{self.c_in}x{self.c_out}k{self.ksize}"
+
+    @property
+    def d_in(self) -> int:  # n_CRS
+        return self.c_in * self.ksize * self.ksize
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxPool:
+    size: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAvgPool:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Flatten:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Residual:
+    """Basic residual block of two DSG convs (+1x1 projection shortcut)."""
+
+    c_in: int
+    c_out: int
+    stride: int = 1
+
+    @property
+    def name(self) -> str:
+        return f"res{self.c_in}x{self.c_out}s{self.stride}"
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (mirrored by rust/src/coordinator/init.rs)
+# ---------------------------------------------------------------------------
+
+
+def he_std(fan_in: int) -> float:
+    return math.sqrt(2.0 / fan_in)
+
+
+def init_dense(key, spec: Dense):
+    wkey, _ = jax.random.split(key)
+    w = jax.random.normal(wkey, (spec.d_in, spec.d_out), jnp.float32) * he_std(
+        spec.d_in
+    )
+    p = {"w": w}
+    if spec.classifier:
+        p["b"] = jnp.zeros((spec.d_out,), jnp.float32)
+    return p
+
+
+def init_conv(key, spec: Conv):
+    w = jax.random.normal(
+        key, (spec.c_out, spec.c_in, spec.ksize, spec.ksize), jnp.float32
+    ) * he_std(spec.d_in)
+    return {"w": w}
+
+
+def init_bn(c: int):
+    return {
+        "scale": jnp.ones((c,), jnp.float32),
+        "bias": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def init_bn_state(c: int):
+    return {
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (functional, running-stat threading)
+# ---------------------------------------------------------------------------
+
+
+def batchnorm(x, bn, state, train: bool, axes):
+    """BN over ``axes``; returns (y, new_state). Channel dim is the one
+    not reduced (dim 1 for NCHW conv, dim 1 for (N,F) dense)."""
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state = {
+            "mean": BN_MOMENTUM * state["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * state["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    shape = [1] * x.ndim
+    ch_dim = 1 if x.ndim == 4 else x.ndim - 1
+    shape[ch_dim] = x.shape[ch_dim]
+
+    def rs(v):
+        return v.reshape(shape)
+
+    y = (x - rs(mean)) * lax.rsqrt(rs(var) + BN_EPS)
+    return y * rs(bn["scale"]) + rs(bn["bias"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# DRS: threshold + masks
+# ---------------------------------------------------------------------------
+
+
+def shared_threshold(virt: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """Inter-sample-shared top-k threshold (Appendix B, Fig 9).
+
+    virt: (batch, ...) virtual activations.  The threshold is the value at
+    rank floor(gamma * size) of sample 0's *ascending* sort, i.e. we keep
+    the top ceil((1-gamma) * size) entries.  gamma is a runtime scalar.
+    """
+    flat0 = virt[0].reshape(-1)
+    size = flat0.shape[0]
+    sorted_asc = jnp.sort(flat0)
+    drop = jnp.clip(
+        jnp.floor(gamma * size).astype(jnp.int32), 0, size - 1
+    )
+    t = lax.dynamic_index_in_dim(sorted_asc, drop, keepdims=False)
+    # gamma == 0 must keep EVERY neuron of EVERY sample; sample-0's min
+    # would still clip other samples, so the threshold drops to -inf.
+    return jnp.where(drop == 0, -jnp.inf, t)
+
+
+def hash_noise(shape, seed):
+    """Pseudo-random noise from a sin-hash over element index + seed.
+
+    jax.random's threefry lowers to an ``rng_bit_generator`` custom-call
+    that xla_extension 0.5.1 cannot execute (it throws a foreign C++
+    exception through PJRT), so the random-selection baseline uses this
+    plain-HLO counter hash instead.  Statistical quality is irrelevant
+    here — it only needs to be input-independent (Fig 5c's lower bound).
+    """
+    n = 1
+    for d in shape:
+        n *= d
+    idx = jnp.arange(n, dtype=jnp.float32)
+    s = jnp.asarray(seed, jnp.float32)
+    v = jnp.sin(idx * 12.9898 + s * 78.233) * 43758.5453
+    return (v - jnp.floor(v)).reshape(shape) - 0.5
+
+
+def _virtual_acts_dense(x, wp, r, w, strategy, noise_seed):
+    """Virtual pre-activations for a dense layer under each strategy."""
+    if strategy == "oracle":
+        return mm.matmul(x, w)
+    if strategy == "random":
+        return hash_noise((x.shape[0], w.shape[1]), noise_seed)
+    # drs: project x into k dims (Pallas), then low-dim VMM (Pallas).
+    xp = pj.project(x, r)
+    return mm.matmul(xp, wp)
+
+
+def dense_forward(
+    x,
+    p,
+    bn,
+    bn_state,
+    wp,
+    r,
+    gamma,
+    opts: DSGOptions,
+    train: bool,
+    noise_key,
+    capture: Optional[list] = None,
+):
+    """DSG dense layer: x (N, d_in) -> (out (N, d_out), new_bn_state, stats)."""
+    if opts.strategy == "dense":
+        y = mm.matmul(x, p["w"])
+        s = jax.nn.relu(y)
+        if opts.use_bn:
+            out, new_state = batchnorm(s, bn, bn_state, train, axes=(0,))
+        else:
+            out, new_state = s, bn_state
+        return out, new_state, {"mask_density": jnp.float32(1.0)}
+
+    virt = lax.stop_gradient(
+        _virtual_acts_dense(x, wp, r, p["w"], opts.strategy, noise_key)
+    )
+    t = lax.stop_gradient(shared_threshold(virt, gamma))
+    # Mask 1 fused into the exact matmul epilogue (Pallas masked matmul).
+    mask = lax.stop_gradient(tk.threshold_mask(virt, t))
+    if capture is not None:
+        capture.append(mask)
+    y = mm.masked_matmul(x, p["w"], mask)
+    s = jax.nn.relu(y)
+    if opts.use_bn:
+        bn_out, new_state = batchnorm(s, bn, bn_state, train, axes=(0,))
+        if opts.double_mask:
+            out = tk.threshold_apply(bn_out, virt, t)  # mask 2 (fused)
+        else:
+            out = bn_out
+    else:
+        out, new_state = s, bn_state
+    return out, new_state, {"mask_density": jnp.mean(mask)}
+
+
+def _conv(x, w, stride, pad):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def _virtual_acts_conv(x, wp, r, spec: Conv, w, strategy, noise_seed, out_hw):
+    """Virtual pre-activations (N, K, P, Q) for a conv layer.
+
+    DRS path: project every sliding window with a conv whose kernel is the
+    ternary R reshaped (k, C, r, s) — identical math to projecting each
+    im2col row — then run the low-dimensional VMM as a Pallas matmul
+    against the projected weight matrix Wp (k, K).
+    """
+    n = x.shape[0]
+    p_, q_ = out_hw
+    if strategy == "oracle":
+        return _conv(x, w, spec.stride, spec.pad)
+    if strategy == "random":
+        return hash_noise((n, spec.c_out, p_, q_), noise_seed)
+    k = r.shape[0]
+    r_kernel = r.reshape(k, spec.c_in, spec.ksize, spec.ksize)
+    xp = _conv(x, r_kernel, spec.stride, spec.pad) / jnp.sqrt(jnp.float32(k))
+    # (N, k, P, Q) -> (N*P*Q, k) @ (k, K) -> (N, K, P, Q)
+    xp2 = xp.transpose(0, 2, 3, 1).reshape(n * p_ * q_, k)
+    virt = mm.matmul(xp2, wp)
+    return virt.reshape(n, p_, q_, spec.c_out).transpose(0, 3, 1, 2)
+
+
+def conv_forward(
+    x,
+    p,
+    bn,
+    bn_state,
+    wp,
+    r,
+    gamma,
+    spec: Conv,
+    opts: DSGOptions,
+    train: bool,
+    noise_key,
+    capture: Optional[list] = None,
+):
+    """DSG conv layer: x (N,C,H,W) -> (out (N,K,P,Q), new_bn_state, stats)."""
+    if opts.strategy == "dense":
+        y = _conv(x, p["w"], spec.stride, spec.pad)
+        s = jax.nn.relu(y)
+        if opts.use_bn:
+            out, new_state = batchnorm(s, bn, bn_state, train, axes=(0, 2, 3))
+        else:
+            out, new_state = s, bn_state
+        return out, new_state, {"mask_density": jnp.float32(1.0)}
+
+    y = _conv(x, p["w"], spec.stride, spec.pad)
+    out_hw = (y.shape[2], y.shape[3])
+    virt = lax.stop_gradient(
+        _virtual_acts_conv(
+            x, wp, r, spec, p["w"], opts.strategy, noise_key, out_hw
+        )
+    )
+    t = lax.stop_gradient(shared_threshold(virt, gamma))
+    if capture is not None:
+        capture.append(tk.threshold_mask(virt, t))
+    s = jax.nn.relu(tk.threshold_apply(y, virt, t))  # mask 1 (fused)
+    if opts.use_bn:
+        bn_out, new_state = batchnorm(s, bn, bn_state, train, axes=(0, 2, 3))
+        if opts.double_mask:
+            out = tk.threshold_apply(bn_out, virt, t)  # mask 2
+        else:
+            out = bn_out
+    else:
+        out, new_state = s, bn_state
+    density = jnp.mean((virt >= t).astype(jnp.float32))
+    return out, new_state, {"mask_density": density}
+
+
+def classifier_forward(x, p):
+    """Final un-masked, un-normalized linear layer (logits)."""
+    return mm.matmul(x, p["w"]) + p["b"]
+
+
+def projection_dim_for(spec, eps: float) -> int:
+    """k for a layer spec (shared JLL model)."""
+    if isinstance(spec, Dense):
+        return jll.projection_dim(eps, spec.d_out, spec.d_in)
+    if isinstance(spec, Conv):
+        return jll.projection_dim(eps, spec.c_out, spec.d_in)
+    raise TypeError(f"no projection for {spec}")
+
+
+def maxpool(x, size: int):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        (1, 1, size, size),
+        (1, 1, size, size),
+        "VALID",
+    )
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(2, 3))

@@ -1,0 +1,424 @@
+"""L2 — model zoo (paper §3.1) and the functional forward pass.
+
+Models (sized for the CPU testbed; the paper's exact widths are kept as
+"full" variants used by the analytic cost models in rust/src/costmodel):
+
+  mlp        784-256-256-10 MLP                     (FASHION-like)
+  lenet      LeNet-5                                (FASHION-like)
+  vgg8       2x(wC3)-MP2-2x(2wC3)-MP2-2x(4wC3)-MP2-8wFC-10  (CIFAR-like)
+             paper width w=128; default lite w=32
+  resnet8    conv + 3 residual blocks + 2 FC        (paper's custom variant)
+  wrn8_2     resnet8 with 2x width                  (WRN-8-2)
+
+Every conv/dense (except the classifier and residual shortcuts) is a DSG
+layer: dimension-reduction search -> shared threshold -> double-mask BN.
+
+Parameters, BN state, projected weights (Wp) and projection matrices (R)
+are *flat ordered lists* so the rust coordinator can thread buffers
+positionally; `aot.py` records the layout in the artifact meta JSON.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+Unit = Union[L.Dense, L.Conv, L.MaxPool, L.GlobalAvgPool, L.Flatten, L.Residual]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    name: str
+    input_shape: Tuple[int, ...]  # (C,H,W) for conv nets, (D,) for MLP
+    n_classes: int
+    batch: int
+    units: Tuple[Unit, ...]
+    opts: L.DSGOptions = L.DSGOptions()
+
+    def with_opts(self, **kw) -> "Model":
+        return dataclasses.replace(
+            self, opts=dataclasses.replace(self.opts, **kw)
+        )
+
+    def renamed(self, name: str) -> "Model":
+        return dataclasses.replace(self, name=name)
+
+
+# ---------------------------------------------------------------------------
+# Zoo
+# ---------------------------------------------------------------------------
+
+
+def mlp(batch: int = 64, hidden: int = 256) -> Model:
+    return Model(
+        name="mlp",
+        input_shape=(784,),
+        n_classes=10,
+        batch=batch,
+        units=(
+            L.Dense(784, hidden),
+            L.Dense(hidden, hidden),
+            L.Dense(hidden, 10, classifier=True),
+        ),
+    )
+
+
+def lenet(batch: int = 32) -> Model:
+    return Model(
+        name="lenet",
+        input_shape=(1, 28, 28),
+        n_classes=10,
+        batch=batch,
+        units=(
+            L.Conv(1, 6, ksize=5, pad=2),
+            L.MaxPool(),
+            L.Conv(6, 16, ksize=5, pad=0),
+            L.MaxPool(),
+            L.Flatten(),
+            L.Dense(16 * 5 * 5, 120),
+            L.Dense(120, 84),
+            L.Dense(84, 10, classifier=True),
+        ),
+    )
+
+
+def vgg8(batch: int = 16, width: int = 32, name: str = "vgg8") -> Model:
+    w = width
+    return Model(
+        name=name,
+        input_shape=(3, 32, 32),
+        n_classes=10,
+        batch=batch,
+        units=(
+            L.Conv(3, w),
+            L.Conv(w, w),
+            L.MaxPool(),
+            L.Conv(w, 2 * w),
+            L.Conv(2 * w, 2 * w),
+            L.MaxPool(),
+            L.Conv(2 * w, 4 * w),
+            L.Conv(4 * w, 4 * w),
+            L.MaxPool(),
+            L.Flatten(),
+            L.Dense(4 * w * 4 * 4, 8 * w),
+            L.Dense(8 * w, 10, classifier=True),
+        ),
+    )
+
+
+def resnet8(batch: int = 16, width: int = 16, name: str = "resnet8") -> Model:
+    w = width
+    return Model(
+        name=name,
+        input_shape=(3, 32, 32),
+        n_classes=10,
+        batch=batch,
+        units=(
+            L.Conv(3, w),
+            L.Residual(w, w),
+            L.Residual(w, 2 * w, stride=2),
+            L.Residual(2 * w, 4 * w, stride=2),
+            L.GlobalAvgPool(),
+            L.Dense(4 * w, 64),
+            L.Dense(64, 10, classifier=True),
+        ),
+    )
+
+
+def wrn8_2(batch: int = 16) -> Model:
+    return resnet8(batch=batch, width=32, name="wrn8_2")
+
+
+ZOO = {
+    "mlp": mlp,
+    "lenet": lenet,
+    "vgg8": vgg8,
+    "resnet8": resnet8,
+    "wrn8_2": wrn8_2,
+}
+
+
+def get(name: str, **kw) -> Model:
+    if name not in ZOO:
+        raise KeyError(f"unknown model {name!r}; have {sorted(ZOO)}")
+    return ZOO[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# DSG layer enumeration (order defines the wp/r list layout)
+# ---------------------------------------------------------------------------
+
+
+def dsg_specs(model: Model) -> List[Tuple[str, Union[L.Dense, L.Conv]]]:
+    """(path, spec) for every DSG-masked layer, in buffer order.
+
+    Residual shortcuts (1x1 convs) stay dense — they are cheap relative to
+    the 3x3 branch convs and masking them would couple the two branch
+    masks through the addition; the paper masks the main-path layers.
+    Classifier layers are never masked.
+    """
+    out: List[Tuple[str, Union[L.Dense, L.Conv]]] = []
+    for i, u in enumerate(model.units):
+        if isinstance(u, L.Dense) and not u.classifier:
+            out.append((f"u{i}", u))
+        elif isinstance(u, L.Conv):
+            out.append((f"u{i}", u))
+        elif isinstance(u, L.Residual):
+            c1 = L.Conv(u.c_in, u.c_out, 3, u.stride, 1)
+            c2 = L.Conv(u.c_out, u.c_out, 3, 1, 1)
+            out.append((f"u{i}.conv1", c1))
+            out.append((f"u{i}.conv2", c2))
+    return out
+
+
+def projection_shapes(model: Model) -> List[Tuple[str, int, int, int]]:
+    """(path, k, d_in, n_out) per DSG layer — R is (k, d_in), Wp (k, n_out)."""
+    out = []
+    for path, spec in dsg_specs(model):
+        k = L.projection_dim_for(spec, model.opts.eps)
+        n_out = spec.d_out if isinstance(spec, L.Dense) else spec.c_out
+        out.append((path, k, spec.d_in, n_out))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Init (python mirror of rust/src/coordinator/init.rs; used by pytest)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, model: Model) -> List[dict]:
+    params = []
+    for u in model.units:
+        key, sub = jax.random.split(key)
+        if isinstance(u, L.Dense):
+            params.append(L.init_dense(sub, u))
+        elif isinstance(u, L.Conv):
+            params.append(L.init_conv(sub, u))
+        elif isinstance(u, L.Residual):
+            k1, k2, k3 = jax.random.split(sub, 3)
+            p = {
+                "conv1": L.init_conv(k1, L.Conv(u.c_in, u.c_out, 3, u.stride, 1)),
+                "conv2": L.init_conv(k2, L.Conv(u.c_out, u.c_out, 3, 1, 1)),
+            }
+            if u.stride != 1 or u.c_in != u.c_out:
+                p["short"] = L.init_conv(
+                    k3, L.Conv(u.c_in, u.c_out, 1, u.stride, 0)
+                )
+            params.append(p)
+        else:
+            params.append({})
+    return params
+
+
+def init_bn(model: Model) -> List[dict]:
+    bns = []
+    for u in model.units:
+        if isinstance(u, L.Dense) and not u.classifier:
+            bns.append(L.init_bn(u.d_out))
+        elif isinstance(u, L.Conv):
+            bns.append(L.init_bn(u.c_out))
+        elif isinstance(u, L.Residual):
+            bns.append({"bn1": L.init_bn(u.c_out), "bn2": L.init_bn(u.c_out)})
+        else:
+            bns.append({})
+    return bns
+
+
+def init_bn_state(model: Model) -> List[dict]:
+    sts = []
+    for u in model.units:
+        if isinstance(u, L.Dense) and not u.classifier:
+            sts.append(L.init_bn_state(u.d_out))
+        elif isinstance(u, L.Conv):
+            sts.append(L.init_bn_state(u.c_out))
+        elif isinstance(u, L.Residual):
+            sts.append(
+                {"bn1": L.init_bn_state(u.c_out), "bn2": L.init_bn_state(u.c_out)}
+            )
+        else:
+            sts.append({})
+    return sts
+
+
+def init_projections(key, model: Model, s: int = 3) -> List[jnp.ndarray]:
+    """Ternary Achlioptas R per DSG layer (paper eq. 6), fixed for the run."""
+    rs = []
+    for _, k, d_in, _ in projection_shapes(model):
+        key, sub = jax.random.split(key)
+        u = jax.random.uniform(sub, (k, d_in))
+        val = jnp.sqrt(jnp.float32(s))
+        r = jnp.where(
+            u < 1.0 / (2 * s),
+            -val,
+            jnp.where(u < 1.0 / s, val, jnp.float32(0.0)),
+        )
+        rs.append(r)
+    return rs
+
+
+def project_all(model: Model, params: Sequence[dict], rs) -> List[jnp.ndarray]:
+    """Wp for every DSG layer (the every-50-steps refresh computation)."""
+    from .kernels import projection as pj
+
+    wps = []
+    idx = 0
+    for i, u in enumerate(model.units):
+        if isinstance(u, L.Dense) and not u.classifier:
+            wps.append(pj.project_weights(rs[idx], params[i]["w"]))
+            idx += 1
+        elif isinstance(u, L.Conv):
+            wmat = params[i]["w"].reshape(u.c_out, -1).T  # (CRS, K)
+            wps.append(pj.project_weights(rs[idx], wmat))
+            idx += 1
+        elif isinstance(u, L.Residual):
+            for sub in ("conv1", "conv2"):
+                w = params[i][sub]["w"]
+                wmat = w.reshape(w.shape[0], -1).T
+                wps.append(pj.project_weights(rs[idx], wmat))
+                idx += 1
+    return wps
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    model: Model,
+    params: Sequence[dict],
+    bn: Sequence[dict],
+    bn_state: Sequence[dict],
+    wps: Sequence[jnp.ndarray],
+    rs: Sequence[jnp.ndarray],
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    train: bool,
+    step: jnp.ndarray,
+    capture=None,
+):
+    """Run the DSG forward pass.
+
+    Returns (logits, new_bn_state, mask_densities) where mask_densities is
+    one scalar per DSG layer (feeds Fig 1f / Fig 6 measurements in rust).
+    If ``capture`` is a list, the full binary selection mask of every DSG
+    layer is appended to it (the Fig 11 probe artifact).
+    """
+    opts = model.opts
+    opts.validate()
+    # noise seed for the random-selection baseline: plain scalar (the
+    # threefry PRNG lowers to an rng_bit_generator custom-call the old
+    # xla_extension cannot run; see layers.hash_noise)
+    seed_base = jnp.asarray(step, jnp.float32) * 131.0
+    h = x
+    new_bn_state: List[dict] = []
+    densities: List[jnp.ndarray] = []
+    dsg_idx = 0
+
+    def next_proj():
+        nonlocal dsg_idx
+        if opts.strategy in ("drs",):
+            wp, r = wps[dsg_idx], rs[dsg_idx]
+        else:  # oracle / random / dense never read them
+            wp, r = None, None
+        i = dsg_idx
+        dsg_idx += 1
+        return wp, r, i
+
+    for i, u in enumerate(model.units):
+        if isinstance(u, L.Dense) and not u.classifier:
+            wp, r, li = next_proj()
+            h, st, stats = L.dense_forward(
+                h,
+                params[i],
+                bn[i],
+                bn_state[i],
+                wp,
+                r,
+                gamma,
+                opts,
+                train,
+                seed_base + li,
+                capture,
+            )
+            new_bn_state.append(st)
+            densities.append(stats["mask_density"])
+        elif isinstance(u, L.Dense):
+            h = L.classifier_forward(h, params[i])
+            new_bn_state.append(bn_state[i])
+        elif isinstance(u, L.Conv):
+            wp, r, li = next_proj()
+            h, st, stats = L.conv_forward(
+                h,
+                params[i],
+                bn[i],
+                bn_state[i],
+                wp,
+                r,
+                gamma,
+                u,
+                opts,
+                train,
+                seed_base + li,
+                capture,
+            )
+            new_bn_state.append(st)
+            densities.append(stats["mask_density"])
+        elif isinstance(u, L.Residual):
+            c1 = L.Conv(u.c_in, u.c_out, 3, u.stride, 1)
+            c2 = L.Conv(u.c_out, u.c_out, 3, 1, 1)
+            wp1, r1, l1 = next_proj()
+            b1, st1, s1 = L.conv_forward(
+                h,
+                params[i]["conv1"],
+                bn[i]["bn1"],
+                bn_state[i]["bn1"],
+                wp1,
+                r1,
+                gamma,
+                c1,
+                opts,
+                train,
+                seed_base + l1,
+                capture,
+            )
+            wp2, r2, l2 = next_proj()
+            b2, st2, s2 = L.conv_forward(
+                b1,
+                params[i]["conv2"],
+                bn[i]["bn2"],
+                bn_state[i]["bn2"],
+                wp2,
+                r2,
+                gamma,
+                c2,
+                opts,
+                train,
+                seed_base + l2,
+                capture,
+            )
+            if "short" in params[i]:
+                sc = L._conv(h, params[i]["short"]["w"], u.stride, 0)
+            else:
+                sc = h
+            h = b2 + sc
+            new_bn_state.append({"bn1": st1, "bn2": st2})
+            densities.append(s1["mask_density"])
+            densities.append(s2["mask_density"])
+        elif isinstance(u, L.MaxPool):
+            h = L.maxpool(h, u.size)
+            new_bn_state.append(bn_state[i])
+        elif isinstance(u, L.GlobalAvgPool):
+            h = L.global_avg_pool(h)
+            new_bn_state.append(bn_state[i])
+        elif isinstance(u, L.Flatten):
+            h = h.reshape(h.shape[0], -1)
+            new_bn_state.append(bn_state[i])
+        else:
+            raise TypeError(f"unknown unit {u}")
+    return h, new_bn_state, densities

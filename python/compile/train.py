@@ -1,0 +1,119 @@
+"""L2 — loss, metrics, SGD-momentum training step (paper Algorithm 1).
+
+The exported train step is *functional*: every piece of mutable state
+(params, momentum velocities, BN running stats) is an explicit input and
+output, so the rust coordinator owns all state across steps and the HLO
+artifact is a pure function.
+
+    train_step(params, vel, bn, bn_state, wps, rs, x, y, gamma, lr, step)
+      -> (params', vel', bn', bn_state', loss, acc, mask_densities...)
+
+Backward masking (Algorithm 1's forced gradient sparsification at every
+mask layer) falls out of jax.grad through the multiplicative masks: the
+mask tensors are stop-gradient constants, so dL/dS is exactly
+Mask * (upstream), as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import models as M
+
+MOMENTUM = 0.9
+
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; y is int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    n = logits.shape[0]
+    picked = logp[jnp.arange(n), y]
+    return -jnp.mean(picked)
+
+
+def accuracy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def loss_fn(model, params, bn, bn_state, wps, rs, x, y, gamma, step):
+    logits, new_bn_state, densities = M.forward(
+        model, params, bn, bn_state, wps, rs, x, gamma, train=True, step=step
+    )
+    loss = cross_entropy(logits, y)
+    return loss, (new_bn_state, accuracy(logits, y), densities)
+
+
+def sgd_momentum(params, vel, grads, lr):
+    """v <- mu v - lr g;  w <- w + v   (applied leaf-wise on the pytree)."""
+
+    def upd(v, g):
+        return MOMENTUM * v - lr * g
+
+    new_vel = jax.tree_util.tree_map(upd, vel, grads)
+    new_params = jax.tree_util.tree_map(lambda w, v: w + v, params, new_vel)
+    return new_params, new_vel
+
+
+def make_train_step(model: M.Model):
+    """Build the pure train-step function for ``model`` (jit-able)."""
+
+    def train_step(params, vel, bn, vbn, bn_state, wps, rs, x, y, gamma, lr, step):
+        (loss, (new_bn_state, acc, dens)), grads = jax.value_and_grad(
+            lambda p, b: loss_fn(
+                model, p, b, bn_state, wps, rs, x, y, gamma, step
+            ),
+            argnums=(0, 1),
+            has_aux=True,
+        )(params, bn)
+        gp, gb = grads
+        new_params, new_vel = sgd_momentum(params, vel, gp, lr)
+        new_bn, new_vbn = sgd_momentum(bn, vbn, gb, lr)
+        return (
+            new_params,
+            new_vel,
+            new_bn,
+            new_vbn,
+            new_bn_state,
+            loss,
+            acc,
+            dens,
+        )
+
+    return train_step
+
+
+def make_forward(model: M.Model):
+    """Inference/eval function: running-stat BN, no state mutation."""
+
+    def fwd(params, bn, bn_state, wps, rs, x, gamma):
+        logits, _, dens = M.forward(
+            model,
+            params,
+            bn,
+            bn_state,
+            wps,
+            rs,
+            x,
+            gamma,
+            train=False,
+            step=jnp.int32(0),
+        )
+        return logits, dens
+
+    return fwd
+
+
+def make_project(model: M.Model):
+    """The every-50-steps Wp refresh (rust schedules when to call it)."""
+
+    def project(params, rs):
+        return M.project_all(model, params, rs)
+
+    return project
+
+
+def init_velocities(params) -> List:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)

@@ -1,0 +1,24 @@
+"""Shared pytest fixtures for the DSG python test suite."""
+
+import os
+import sys
+
+# Tests run from python/ (see Makefile) but also support repo-root pytest.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PY = os.path.dirname(_HERE)
+if _PY not in sys.path:
+    sys.path.insert(0, _PY)
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(42)

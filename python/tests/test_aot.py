@@ -1,0 +1,169 @@
+"""AOT exporter invariants: meta layout, kept-input bookkeeping, HLO
+parameter counts, and golden consistency.  Runs against the built
+artifacts when present (skips cleanly otherwise)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, models as M, train as T
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _meta(name):
+    path = os.path.join(ART, f"{name}.meta.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_lower_to_file_reports_kept(tmp_path):
+    def f(a, b, unused):
+        return (a + b,)
+
+    spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+    kept = aot.lower_to_file(f, (spec, spec, spec), str(tmp_path / "f.hlo.txt"))
+    assert kept == [0, 1]
+    text = (tmp_path / "f.hlo.txt").read_text()
+    assert "ENTRY" in text
+
+
+def test_variant_registry_complete():
+    fast = aot.build_variants(fast=True)
+    full = aot.build_variants(fast=False)
+    names = [n for n, _, _ in full]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    assert {n for n, _, _ in fast} <= set(names)
+    # every DESIGN.md experiment dependency is present
+    for required in [
+        "mlp", "mlp_dense", "lenet", "vgg8", "vgg8_dense", "resnet8",
+        "wrn8_2", "vgg8s_oracle", "vgg8s_random", "vgg8s_single",
+        "vgg8s_nobn", "vgg8s_eps30", "vgg8_d23", "resnet8_d7",
+    ]:
+        assert required in names, required
+
+
+def test_meta_state_order_is_flatten_order():
+    m = _meta("mlp")
+    names = [s["name"] for s in m["state"]]
+    groups = ["params.", "vel.", "bn.", "vbn.", "bn_state."]
+    # group blocks appear in order
+    idx = [min(i for i, n in enumerate(names) if n.startswith(g)) for g in groups]
+    assert idx == sorted(idx)
+    # within params: dict keys sorted (b before w for unit 2)
+    p = [n for n in names if n.startswith("params.")]
+    assert p == sorted(p)
+
+
+def test_meta_counts_consistent():
+    for name in ["mlp", "lenet"]:
+        m = _meta(name)
+        c = m["counts"]
+        assert len(m["state"]) == c["params"] + c["vel"] + c["bn"] + c["vbn"] + c["bn_state"]
+        assert len(m["wps"]) == c["wps"] == c["dsg"]
+        assert len(m["rs"]) == c["rs"] == c["dsg"]
+        assert len(m["dsg_weight_indices"]) == c["dsg"]
+        assert len(m["dsg_layers"]) == c["dsg"]
+
+
+def test_meta_kept_indices_valid():
+    m = _meta("mlp")
+    c = m["counts"]
+    n_state = len(m["state"])
+    n_train_inputs = n_state + c["wps"] + c["rs"] + 5  # x,y,gamma,lr,step
+    kept = m["kept"]["train"]
+    assert kept == sorted(set(kept))
+    assert all(0 <= i < n_train_inputs for i in kept)
+    # only `step` may be dropped for a drs variant
+    dropped = set(range(n_train_inputs)) - set(kept)
+    assert dropped <= {n_train_inputs - 1}
+
+
+def test_hlo_parameter_count_matches_kept():
+    m = _meta("mlp")
+    path = os.path.join(ART, m["files"]["train"])
+    text = open(path).read()
+    # count parameters of the ENTRY computation only (fusion bodies also
+    # contain parameter() instructions)
+    entry = text[text.index("ENTRY "):]
+    n_params = entry.count(" parameter(")
+    assert n_params == len(m["kept"]["train"])
+
+
+def test_units_topology_matches_model():
+    m = _meta("lenet")
+    kinds = [u["kind"] for u in m["units"]]
+    assert kinds == [
+        "conv", "maxpool", "conv", "maxpool", "flatten",
+        "dense", "dense", "classifier",
+    ]
+    assert m["units"][0]["c_out"] == 6
+    assert m["units"][-1]["d_out"] == 10
+
+
+def test_golden_index_consistent():
+    base = os.path.join(ART, "golden", "mlp_step")
+    if not os.path.exists(base + ".json"):
+        pytest.skip("artifacts not built")
+    with open(base + ".json") as f:
+        idx = json.load(f)
+    size = os.path.getsize(base + ".bin")
+    end = max(e["offset"] + e["nbytes"] for e in idx)
+    assert end == size
+    # offsets are contiguous and non-overlapping
+    sorted_idx = sorted(idx, key=lambda e: e["offset"])
+    pos = 0
+    for e in sorted_idx:
+        assert e["offset"] == pos
+        pos += e["nbytes"]
+    ins = [e for e in idx if e["name"].startswith("in")]
+    outs = [e for e in idx if e["name"].startswith("out")]
+    assert len(ins) == 29 and len(outs) == 24
+
+
+def test_golden_outputs_reproducible():
+    """Re-running the train step on the golden inputs reproduces the
+    golden outputs (python-side determinism check)."""
+    base = os.path.join(ART, "golden", "mlp_step")
+    if not os.path.exists(base + ".json"):
+        pytest.skip("artifacts not built")
+    with open(base + ".json") as f:
+        idx = json.load(f)
+    raw = open(base + ".bin", "rb").read()
+
+    def load(e):
+        buf = raw[e["offset"]:e["offset"] + e["nbytes"]]
+        dt = np.float32 if e["dtype"] == "f32" else np.int32
+        return jnp.asarray(np.frombuffer(buf, dt).reshape(e["shape"]))
+
+    tensors = {e["name"]: load(e) for e in idx}
+    model = M.get("mlp")
+    flat_in = [tensors[f"in{i}"] for i in range(29)]
+    # rebuild the pytree args from flat leaves
+    params = M.init_params(jax.random.PRNGKey(0), model)
+    bn = M.init_bn(model)
+    st = M.init_bn_state(model)
+    vel = T.init_velocities(params)
+    vbn = T.init_velocities(bn)
+    rs = M.init_projections(jax.random.PRNGKey(0), model)
+    wps = M.project_all(model, params, rs)
+    example = (params, vel, bn, vbn, st, wps, rs, None, None, None, None, None)
+    treedef = jax.tree_util.tree_structure(
+        (params, vel, bn, vbn, st, wps, rs, 0.0, 0.0, 0.0, 0.0, 0.0)
+    )
+    del example
+    args = jax.tree_util.tree_unflatten(treedef, flat_in)
+    outs = jax.jit(T.make_train_step(model))(*args)
+    flat_out = jax.tree_util.tree_leaves(outs)
+    assert len(flat_out) == 24
+    worst = 0.0
+    for i, got in enumerate(flat_out):
+        want = tensors[f"out{i}"]
+        worst = max(worst, float(jnp.max(jnp.abs(got - want))))
+    assert worst < 5e-3, f"golden replay diverged by {worst}"

@@ -1,0 +1,77 @@
+"""Pin the JLL dimension model to the paper's Table 1."""
+
+import pytest
+
+from compile import jll
+
+# (n_PQ, n_CRS, n_K) -> {eps: (dim, mmacs)} — verbatim from Table 1.
+TABLE1 = [
+    (1024, 1152, 128, {0.3: (539, 67.37), 0.5: (232, 29.0), 0.7: (148, 18.5), 0.9: (119, 14.88)}),
+    (256, 1152, 256, {0.3: (616, 38.5), 0.5: (266, 16.63), 0.7: (169, 10.56), 0.9: (136, 8.5)}),
+    (256, 2304, 256, {0.3: (616, 38.5), 0.5: (266, 16.63), 0.7: (169, 10.56), 0.9: (136, 8.5)}),
+    (64, 2304, 512, {0.3: (693, 21.65), 0.5: (299, 9.34), 0.7: (190, 5.94), 0.9: (154, 4.81)}),
+    (64, 4608, 512, {0.3: (693, 21.65), 0.5: (299, 9.34), 0.7: (190, 5.94), 0.9: (154, 4.81)}),
+]
+
+BASELINE = {  # (n_PQ, n_CRS, n_K) -> BL MMACs
+    (1024, 1152, 128): 144,
+    (256, 1152, 256): 72,
+    (256, 2304, 256): 144,
+    (64, 2304, 512): 72,
+    (64, 4608, 512): 144,
+}
+
+
+@pytest.mark.parametrize("row", TABLE1)
+def test_dimension_matches_table1(row):
+    n_pq, n_crs, n_k, per_eps = row
+    for eps, (dim, _) in per_eps.items():
+        got = jll.projection_dim(eps, n_k, n_crs)
+        tol = 0.01 if eps < 0.9 else 0.07  # the 0.9 column is off-curve
+        assert abs(got - dim) <= max(2, tol * dim), (
+            f"eps={eps} n_K={n_k}: got {got}, paper {dim}"
+        )
+
+
+@pytest.mark.parametrize("row", TABLE1)
+def test_mmacs_matches_table1(row):
+    n_pq, n_crs, n_k, per_eps = row
+    for eps, (dim, mmacs) in per_eps.items():
+        # paper computes ops with *its* dim; use the published dim here so
+        # this isolates the ops formula from the dim fit.
+        got = jll.search_mmacs(n_pq, dim, n_k)
+        assert abs(got - mmacs) / mmacs < 0.01, (
+            f"eps={eps}: got {got:.2f}, paper {mmacs}"
+        )
+
+
+@pytest.mark.parametrize("shape,bl", sorted(BASELINE.items()))
+def test_baseline_mmacs(shape, bl):
+    n_pq, n_crs, n_k = shape
+    got = jll.baseline_mmacs(n_pq, n_crs, n_k)
+    assert abs(got - bl) / bl < 0.01
+
+
+def test_dim_reduction_factors():
+    """Paper Appendix B: average reduction 3.6x/8.5x/13.3x/16.5x."""
+    want = {0.3: 3.6, 0.5: 8.5, 0.7: 13.3, 0.9: 16.5}
+    for eps, factor in want.items():
+        ratios = []
+        for n_pq, n_crs, n_k, per in TABLE1:
+            ratios.append(n_crs / jll.projection_dim(eps, n_k, n_crs))
+        avg = sum(ratios) / len(ratios)
+        assert abs(avg - factor) / factor < 0.15, f"eps={eps}: {avg} vs {factor}"
+
+
+def test_eps_bounds():
+    with pytest.raises(ValueError):
+        jll.projection_dim(0.0, 128, 1152)
+    with pytest.raises(ValueError):
+        jll.projection_dim(1.0, 128, 1152)
+    with pytest.raises(ValueError):
+        jll.projection_dim(0.5, 0, 1152)
+
+
+def test_monotonic_in_eps():
+    dims = [jll.projection_dim(e, 256, 4096) for e in (0.2, 0.4, 0.6, 0.8)]
+    assert dims == sorted(dims, reverse=True)

@@ -1,0 +1,251 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including odd, non-multiple-of-block sizes, which
+exercise the pick_block divisor fallback) and checks allclose; plus
+directed edge cases (1x1, single row/col, all-masked, threshold ties).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_matmul as mm
+from compile.kernels import projection as pj
+from compile.kernels import ref
+from compile.kernels import topk_mask as tk
+from compile.kernels._tiling import pick_block, pad_to_multiple, vmem_bytes
+
+DIM = st.integers(min_value=1, max_value=97)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# tiling helpers
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(1, 4096), pref=st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_is_divisor(dim, pref):
+    b = pick_block(dim, pref)
+    assert 1 <= b <= min(dim, pref)
+    assert dim % b == 0
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        pick_block(0, 8)
+
+
+def test_pad_to_multiple():
+    x = jnp.ones((3, 5))
+    y = pad_to_multiple(x, 1, 4)
+    assert y.shape == (3, 8)
+    assert float(y[:, 5:].sum()) == 0.0
+    assert pad_to_multiple(x, 0, 3).shape == (3, 5)
+
+
+def test_vmem_bytes():
+    assert vmem_bytes((128, 128)) == 128 * 128 * 4
+    assert vmem_bytes((128, 256), jnp.bfloat16) == 128 * 256 * 2
+
+
+# ---------------------------------------------------------------------------
+# matmul / masked matmul
+# ---------------------------------------------------------------------------
+
+
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(
+        mm.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(m=DIM, k=DIM, n=DIM, density=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_masked_matmul_matches_ref(m, k, n, density, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    mask = jnp.asarray((rng.random((m, n)) < density).astype(np.float32))
+    np.testing.assert_allclose(
+        mm.masked_matmul(x, w, mask),
+        ref.masked_matmul(x, w, mask),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_masked_matmul_all_zero_mask(rng):
+    x, w = _arr(rng, 16, 32), _arr(rng, 32, 8)
+    mask = jnp.zeros((16, 8))
+    assert float(jnp.abs(mm.masked_matmul(x, w, mask)).max()) == 0.0
+
+
+def test_masked_matmul_identity_mask(rng):
+    x, w = _arr(rng, 16, 32), _arr(rng, 32, 8)
+    mask = jnp.ones((16, 8))
+    np.testing.assert_allclose(
+        mm.masked_matmul(x, w, mask), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_block_sweep(rng):
+    """Tiling must not change the result."""
+    x, w = _arr(rng, 64, 128), _arr(rng, 128, 96)
+    want = ref.matmul(x, w)
+    for bm, bn, bk in [(8, 8, 8), (64, 96, 128), (16, 32, 64), (1, 1, 1)]:
+        got = mm.matmul_impl(x, w, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grad_matches_jnp(rng):
+    """custom_vjp backward == autodiff of the dense reference."""
+    x, w = _arr(rng, 12, 20), _arr(rng, 20, 8)
+
+    def f_pallas(x, w):
+        return jnp.sum(mm.matmul(x, w) ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum(ref.matmul(x, w) ** 2)
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, gw_r, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_matmul_grad_is_masked(rng):
+    """Algorithm 1: gradients must be sparsified by the same mask."""
+    x, w = _arr(rng, 10, 16), _arr(rng, 16, 6)
+    mask = jnp.asarray((np.arange(60).reshape(10, 6) % 3 == 0).astype(np.float32))
+
+    def f(x, w):
+        return jnp.sum(mm.masked_matmul(x, w, mask))
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+
+    def f_ref(x, w):
+        return jnp.sum(ref.masked_matmul(x, w, mask))
+
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, gw_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# projection
+# ---------------------------------------------------------------------------
+
+
+def _ternary(rng, k, d, s=3):
+    u = rng.random((k, d))
+    r = np.zeros((k, d), dtype=np.float32)
+    r[u < 1 / (2 * s)] = -np.sqrt(s)
+    r[(u >= 1 / (2 * s)) & (u < 1 / s)] = np.sqrt(s)
+    return jnp.asarray(r)
+
+
+@given(m=DIM, d=DIM, k=DIM, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_project_matches_ref(m, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x, r = _arr(rng, m, d), _ternary(rng, k, d)
+    np.testing.assert_allclose(
+        pj.project(x, r), ref.project(x, r), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(d=DIM, n=DIM, k=DIM, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_project_weights_matches_ref(d, n, k, seed):
+    rng = np.random.default_rng(seed)
+    w, r = _arr(rng, d, n), _ternary(rng, k, d)
+    np.testing.assert_allclose(
+        pj.project_weights(r, w), ref.project_weights(r, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_projection_shape_mismatch_raises(rng):
+    with pytest.raises(AssertionError):
+        pj.project(_arr(rng, 4, 10), _ternary(rng, 3, 11))
+
+
+def test_inner_product_preservation(rng):
+    """JLL (paper eq. 4): low-dim inner products approximate high-dim ones.
+
+    Statistical check: with k=256, d=2048, the mean relative error over
+    many (x, w) pairs should be well under 20%.
+    """
+    d, k, n = 2048, 256, 50
+    x = _arr(rng, n, d) / np.sqrt(d)
+    w = _arr(rng, n, d) / np.sqrt(d)
+    r = _ternary(rng, k, d)
+    xp = np.asarray(pj.project(x, r))
+    wp = np.asarray(pj.project(w, r))
+    hi = np.sum(np.asarray(x) * np.asarray(w), axis=1)
+    lo = np.sum(xp * wp, axis=1)
+    # errors scale with ||x|| ||w|| ~ 1 here
+    err = np.abs(hi - lo)
+    assert err.mean() < 0.1, f"mean inner-product error too large: {err.mean()}"
+
+
+# ---------------------------------------------------------------------------
+# threshold mask / apply
+# ---------------------------------------------------------------------------
+
+
+@given(m=DIM, n=DIM, t=st.floats(-2.0, 2.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_threshold_mask_matches_ref(m, n, t, seed):
+    rng = np.random.default_rng(seed)
+    v = _arr(rng, m, n)
+    np.testing.assert_array_equal(
+        tk.threshold_mask(v, jnp.float32(t)),
+        ref.threshold_mask(v, jnp.float32(t)),
+    )
+
+
+@given(m=DIM, n=DIM, t=st.floats(-2.0, 2.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_threshold_apply_matches_ref(m, n, t, seed):
+    rng = np.random.default_rng(seed)
+    y, v = _arr(rng, m, n), _arr(rng, m, n)
+    np.testing.assert_allclose(
+        tk.threshold_apply(y, v, jnp.float32(t)),
+        ref.threshold_apply(y, v, t),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_threshold_apply_4d(rng):
+    """Conv activations (N,C,H,W) go through the 2-D reshape path."""
+    y = _arr(rng, 2, 3, 8, 8)
+    v = _arr(rng, 2, 3, 8, 8)
+    got = tk.threshold_apply(y, v, jnp.float32(0.1))
+    want = ref.threshold_apply(y, v, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_threshold_tie_values(rng):
+    """Values exactly equal to the threshold are kept (>= semantics)."""
+    v = jnp.asarray([[0.5, 0.5, 0.4, 0.6]], jnp.float32)
+    m = tk.threshold_mask(v, jnp.float32(0.5))
+    np.testing.assert_array_equal(np.asarray(m), [[1.0, 1.0, 0.0, 1.0]])
+
+
+def test_threshold_apply_grad_is_masked(rng):
+    """Backward masking: grad passes through the mask, zero elsewhere."""
+    y, v = _arr(rng, 6, 9), _arr(rng, 6, 9)
+    t = jnp.float32(0.2)
+    g = jax.grad(lambda y: jnp.sum(tk.threshold_apply(y, v, t)))(y)
+    np.testing.assert_allclose(g, ref.threshold_mask(v, t), rtol=1e-6)

@@ -1,0 +1,282 @@
+"""L2 layer semantics: DRS selection, threshold sharing, double-mask BN."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile import jll
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# shared threshold (Appendix B / Fig 9)
+# ---------------------------------------------------------------------------
+
+
+def test_shared_threshold_gamma_zero_keeps_all(rng):
+    v = _arr(rng, 4, 100)
+    t = L.shared_threshold(v, jnp.float32(0.0))
+    mask = (v >= t).astype(np.float32)
+    # sample 0 keeps everything; other samples share the same threshold
+    assert float(np.asarray(mask)[0].mean()) == 1.0
+
+
+@pytest.mark.parametrize("gamma", [0.3, 0.5, 0.8, 0.9])
+def test_shared_threshold_sample0_density(rng, gamma):
+    """On the threshold-defining sample, density == 1 - gamma exactly
+    (continuous values, no ties)."""
+    v = _arr(rng, 8, 500)
+    t = L.shared_threshold(v, jnp.float32(gamma))
+    d0 = float((np.asarray(v[0]) >= float(t)).mean())
+    assert abs(d0 - (1 - gamma)) < 2.5 / 500 + 1e-6
+
+
+def test_shared_threshold_other_samples_approximate(rng):
+    """Other samples share the threshold: density close to 1-gamma on
+    average for iid activations (the paper's inter-sample sharing bet)."""
+    v = _arr(rng, 64, 400)
+    t = L.shared_threshold(v, jnp.float32(0.7))
+    d = (np.asarray(v) >= float(t)).mean(axis=1)
+    assert abs(d.mean() - 0.3) < 0.05
+
+
+def test_shared_threshold_is_dynamic_in_gamma(rng):
+    """One artifact serves all gammas: jit once, vary gamma at runtime."""
+    v = _arr(rng, 2, 256)
+    f = jax.jit(L.shared_threshold)
+    d = []
+    for g in (0.0, 0.5, 0.9):
+        t = f(v, jnp.float32(g))
+        d.append(float((np.asarray(v[0]) >= float(t)).mean()))
+    assert d[0] == 1.0 and d[0] > d[1] > d[2]
+
+
+# ---------------------------------------------------------------------------
+# batchnorm
+# ---------------------------------------------------------------------------
+
+
+def test_batchnorm_normalizes(rng):
+    x = _arr(rng, 32, 16) * 3.0 + 5.0
+    bn = L.init_bn(16)
+    st = L.init_bn_state(16)
+    y, new_st = L.batchnorm(x, bn, st, train=True, axes=(0,))
+    np.testing.assert_allclose(np.asarray(y).mean(axis=0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y).std(axis=0), 1.0, atol=1e-2)
+    # running stats moved toward the batch stats
+    assert float(jnp.abs(new_st["mean"]).max()) > 0.0
+
+
+def test_batchnorm_eval_uses_running_stats(rng):
+    x = _arr(rng, 8, 4)
+    bn = L.init_bn(4)
+    st = {"mean": jnp.ones((4,)) * 2.0, "var": jnp.ones((4,)) * 4.0}
+    y, new_st = L.batchnorm(x, bn, st, train=False, axes=(0,))
+    np.testing.assert_allclose(
+        np.asarray(y), (np.asarray(x) - 2.0) / np.sqrt(4.0 + L.BN_EPS), rtol=1e-5
+    )
+    assert new_st is st  # state untouched in eval
+
+
+def test_batchnorm_conv_axes(rng):
+    x = _arr(rng, 4, 8, 5, 5)
+    bn = L.init_bn(8)
+    st = L.init_bn_state(8)
+    y, _ = L.batchnorm(x, bn, st, train=True, axes=(0, 2, 3))
+    m = np.asarray(y).mean(axis=(0, 2, 3))
+    np.testing.assert_allclose(m, 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dense DSG layer
+# ---------------------------------------------------------------------------
+
+
+def _dense_fixture(rng, d_in=64, d_out=48, batch=16, eps=0.5):
+    spec = L.Dense(d_in, d_out)
+    key = jax.random.PRNGKey(0)
+    p = L.init_dense(key, spec)
+    bn = L.init_bn(d_out)
+    st = L.init_bn_state(d_out)
+    k = jll.projection_dim(eps, d_out, d_in)
+    u = rng.random((k, d_in))
+    r = np.zeros((k, d_in), np.float32)
+    r[u < 1 / 6] = -np.sqrt(3)
+    r[(u >= 1 / 6) & (u < 1 / 3)] = np.sqrt(3)
+    r = jnp.asarray(r)
+    from compile.kernels import projection as pj
+
+    wp = pj.project_weights(r, p["w"])
+    x = _arr(rng, batch, d_in)
+    return spec, p, bn, st, wp, r, x
+
+
+def test_dense_dsg_sparsity(rng):
+    spec, p, bn, st, wp, r, x = _dense_fixture(rng)
+    opts = L.DSGOptions()
+    out, _, stats = L.dense_forward(
+        x, p, bn, st, wp, r, jnp.float32(0.8), opts, True, jax.random.PRNGKey(1)
+    )
+    # output neurons masked twice: zero fraction >= gamma-ish
+    zfrac = float((np.asarray(out) == 0.0).mean())
+    assert zfrac > 0.6, f"double-masked output not sparse: {zfrac}"
+    assert 0.1 < float(stats["mask_density"]) < 0.35
+
+
+def test_dense_gamma0_equals_dense_strategy(rng):
+    """gamma=0 must reduce DSG to the dense layer exactly."""
+    spec, p, bn, st, wp, r, x = _dense_fixture(rng)
+    out_dsg, _, _ = L.dense_forward(
+        x, p, bn, st, wp, r, jnp.float32(0.0), L.DSGOptions(), True,
+        jax.random.PRNGKey(1),
+    )
+    out_dense, _, _ = L.dense_forward(
+        x, p, bn, st, None, None, jnp.float32(0.0),
+        L.DSGOptions(strategy="dense"), True, jax.random.PRNGKey(1),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_dsg), np.asarray(out_dense), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_dense_single_vs_double_mask(rng):
+    """Single-mask output loses sparsity after BN (Fig 1e / Fig 2c)."""
+    spec, p, bn, st, wp, r, x = _dense_fixture(rng)
+    g = jnp.float32(0.8)
+    out_single, _, _ = L.dense_forward(
+        x, p, bn, st, wp, r, g, L.DSGOptions(double_mask=False), True,
+        jax.random.PRNGKey(1),
+    )
+    out_double, _, _ = L.dense_forward(
+        x, p, bn, st, wp, r, g, L.DSGOptions(double_mask=True), True,
+        jax.random.PRNGKey(1),
+    )
+    z_single = float((np.asarray(out_single) == 0.0).mean())
+    z_double = float((np.asarray(out_double) == 0.0).mean())
+    assert z_double > 0.6  # BN + remask restores sparsity
+    assert z_single < 0.1  # BN shift destroys zeros (the paper's problem)
+
+
+def test_dense_nobn(rng):
+    spec, p, bn, st, wp, r, x = _dense_fixture(rng)
+    out, new_st, _ = L.dense_forward(
+        x, p, bn, st, wp, r, jnp.float32(0.5),
+        L.DSGOptions(use_bn=False), True, jax.random.PRNGKey(1),
+    )
+    # relu output: non-negative, state unchanged
+    assert float(np.asarray(out).min()) >= 0.0
+    assert new_st is st
+
+
+def test_oracle_strategy_masks_true_top(rng):
+    """Oracle virtual acts == exact pre-acts: the kept set is the true
+    top-k of sample 0."""
+    spec, p, bn, st, wp, r, x = _dense_fixture(rng)
+    from compile.kernels import ref
+
+    opts = L.DSGOptions(strategy="oracle", use_bn=False)
+    out, _, _ = L.dense_forward(
+        x, p, bn, st, None, None, jnp.float32(0.5), opts, True,
+        jax.random.PRNGKey(1),
+    )
+    y0 = np.asarray(ref.matmul(x, p["w"]))[0]
+    kept = np.asarray(out)[0] != 0
+    thresh = np.sort(y0)[len(y0) // 2]
+    # every kept neuron is above-threshold positive (relu may zero some)
+    assert all(y0[kept] >= thresh - 1e-6)
+
+
+def test_dsgoptions_validation():
+    with pytest.raises(ValueError):
+        L.DSGOptions(strategy="nope").validate()
+    with pytest.raises(ValueError):
+        L.DSGOptions(eps=1.5).validate()
+
+
+# ---------------------------------------------------------------------------
+# conv DSG layer
+# ---------------------------------------------------------------------------
+
+
+def test_conv_dsg_matches_dense_path_at_gamma0(rng):
+    spec = L.Conv(3, 8, ksize=3, pad=1)
+    key = jax.random.PRNGKey(0)
+    p = L.init_conv(key, spec)
+    bn, st = L.init_bn(8), L.init_bn_state(8)
+    k = jll.projection_dim(0.5, 8, spec.d_in)
+    u = rng.random((k, spec.d_in))
+    r = np.zeros((k, spec.d_in), np.float32)
+    r[u < 1 / 6] = -np.sqrt(3)
+    r[(u >= 1 / 6) & (u < 1 / 3)] = np.sqrt(3)
+    r = jnp.asarray(r)
+    from compile.kernels import projection as pj
+
+    wp = pj.project_weights(r, p["w"].reshape(8, -1).T)
+    x = _arr(rng, 4, 3, 10, 10)
+    out_dsg, _, _ = L.conv_forward(
+        x, p, bn, st, wp, r, jnp.float32(0.0), spec, L.DSGOptions(), True,
+        jax.random.PRNGKey(1),
+    )
+    out_dense, _, _ = L.conv_forward(
+        x, p, bn, st, None, None, jnp.float32(0.0), spec,
+        L.DSGOptions(strategy="dense"), True, jax.random.PRNGKey(1),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_dsg), np.asarray(out_dense), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_conv_projection_consistency(rng):
+    """Projecting windows via conv(x, R-as-kernel) must equal projecting
+    im2col rows via the matmul kernel — the layout-identity DRS relies on."""
+    from jax import lax
+
+    c, ks, k = 3, 3, 7
+    x = _arr(rng, 2, c, 8, 8)
+    u = rng.random((k, c * ks * ks))
+    r = np.zeros((k, c * ks * ks), np.float32)
+    r[u < 1 / 6] = -np.sqrt(3)
+    r[(u >= 1 / 6) & (u < 1 / 3)] = np.sqrt(3)
+    r = jnp.asarray(r)
+    # conv path
+    rk = r.reshape(k, c, ks, ks)
+    xp_conv = lax.conv_general_dilated(
+        x, rk, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ) / jnp.sqrt(jnp.float32(k))
+    # im2col path
+    patches = lax.conv_general_dilated_patches(
+        x, (ks, ks), (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*ks*ks, H, W)
+    from compile.kernels import ref
+
+    n, d, h, w_ = patches.shape
+    rows = patches.transpose(0, 2, 3, 1).reshape(-1, d)
+    xp_mat = ref.project(rows, r).reshape(n, h, w_, k).transpose(0, 3, 1, 2)
+    np.testing.assert_allclose(
+        np.asarray(xp_conv), np.asarray(xp_mat), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# JLL dimension model (Table 1 pinning lives in test_jll.py)
+# ---------------------------------------------------------------------------
+
+
+def test_projection_dim_clipping():
+    assert jll.projection_dim(0.5, 8, 25) == 25  # clipped to d_in
+    assert jll.projection_dim(0.5, 512, 4608) == 299
+
+
+def test_projection_dim_for_specs():
+    assert L.projection_dim_for(L.Dense(784, 256), 0.5) == jll.projection_dim(
+        0.5, 256, 784
+    )
+    c = L.Conv(128, 256, 3)
+    assert L.projection_dim_for(c, 0.5) == jll.projection_dim(0.5, 256, 1152)

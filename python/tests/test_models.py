@@ -1,0 +1,194 @@
+"""Model zoo: shapes, DSG enumeration, projections, forward/backward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile import models as M
+from compile import train as T
+
+ALL = ["mlp", "lenet", "vgg8", "resnet8", "wrn8_2"]
+
+
+def _setup(name, **opts):
+    m = M.get(name)
+    if opts:
+        m = m.with_opts(**opts)
+    key = jax.random.PRNGKey(0)
+    p = M.init_params(key, m)
+    bn = M.init_bn(m)
+    st = M.init_bn_state(m)
+    is_drs = m.opts.strategy == "drs"
+    rs = M.init_projections(key, m) if is_drs else []
+    wps = M.project_all(m, p, rs) if is_drs else []
+    x = jax.random.normal(key, (m.batch,) + m.input_shape)
+    return m, p, bn, st, wps, rs, x
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes(name):
+    m, p, bn, st, wps, rs, x = _setup(name)
+    logits, new_st, dens = M.forward(
+        m, p, bn, st, wps, rs, x, jnp.float32(0.5), False, jnp.int32(0)
+    )
+    assert logits.shape == (m.batch, m.n_classes)
+    assert len(dens) == len(M.dsg_specs(m))
+    assert len(new_st) == len(m.units)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_dsg_specs_consistent(name):
+    m = M.get(name)
+    specs = M.dsg_specs(m)
+    shapes = M.projection_shapes(m)
+    assert len(specs) == len(shapes)
+    for (path, spec), (path2, k, d_in, n_out) in zip(specs, shapes):
+        assert path == path2
+        assert d_in == spec.d_in
+        assert 1 <= k <= d_in
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_projection_r_is_ternary(name):
+    m = M.get(name)
+    rs = M.init_projections(jax.random.PRNGKey(0), m)
+    s3 = np.float32(np.sqrt(3.0))
+    for r in rs:
+        vals = np.unique(np.asarray(r))
+        for v in vals:
+            assert any(np.isclose(v, t, atol=1e-5) for t in (-s3, 0.0, s3)), v
+        # ~1/3 nonzero (paper s=3 => 67% sparsity)
+        nz = float((np.asarray(r) != 0).mean())
+        assert 0.15 < nz < 0.5
+
+
+def test_project_all_matches_ref():
+    from compile.kernels import ref
+
+    m, p, bn, st, wps, rs, x = _setup("lenet")
+    specs = M.dsg_specs(m)
+    idx = 0
+    for i, u in enumerate(m.units):
+        if isinstance(u, L.Dense) and not u.classifier:
+            want = ref.project_weights(rs[idx], p[i]["w"])
+            np.testing.assert_allclose(wps[idx], want, rtol=1e-4, atol=1e-4)
+            idx += 1
+        elif isinstance(u, L.Conv):
+            wmat = p[i]["w"].reshape(u.c_out, -1).T
+            want = ref.project_weights(rs[idx], wmat)
+            np.testing.assert_allclose(wps[idx], want, rtol=1e-4, atol=1e-4)
+            idx += 1
+
+
+@pytest.mark.parametrize("gamma", [0.0, 0.5, 0.9])
+def test_density_tracks_gamma(gamma):
+    m, p, bn, st, wps, rs, x = _setup("mlp")
+    _, _, dens = M.forward(
+        m, p, bn, st, wps, rs, x, jnp.float32(gamma), True, jnp.int32(0)
+    )
+    for d in dens:
+        if gamma == 0.0:
+            assert float(d) == 1.0
+        else:
+            assert abs(float(d) - (1 - gamma)) < 0.12
+
+
+def test_mask_capture_shapes():
+    m, p, bn, st, wps, rs, x = _setup("lenet")
+    cap = []
+    M.forward(
+        m, p, bn, st, wps, rs, x, jnp.float32(0.5), False, jnp.int32(0),
+        capture=cap,
+    )
+    assert len(cap) == len(M.dsg_specs(m))
+    assert cap[0].shape == (m.batch, 6, 28, 28)
+    assert cap[-1].shape == (m.batch, 84)
+
+
+def test_train_step_decreases_loss():
+    """A few steps on a fixed batch must reduce loss (overfit check)."""
+    m, p, bn, st, wps, rs, x = _setup("mlp")
+    key = jax.random.PRNGKey(3)
+    y = jax.random.randint(key, (m.batch,), 0, m.n_classes)
+    vel, vbn = T.init_velocities(p), T.init_velocities(M.init_bn(m))
+    bn = M.init_bn(m)
+    ts = jax.jit(T.make_train_step(m))
+    losses = []
+    state = (p, vel, bn, vbn, st)
+    for i in range(8):
+        out = ts(*state, wps, rs, x, y, jnp.float32(0.5), jnp.float32(0.05), jnp.int32(i))
+        state = out[:5]
+        losses.append(float(out[5]))
+    assert losses[-1] < losses[0] * 0.7, f"loss not decreasing: {losses}"
+
+
+def test_train_step_dense_variant():
+    m, p, bn, st, wps, rs, x = _setup("mlp", strategy="dense")
+    key = jax.random.PRNGKey(3)
+    y = jax.random.randint(key, (m.batch,), 0, m.n_classes)
+    vel, vbn = T.init_velocities(p), T.init_velocities(bn)
+    ts = jax.jit(T.make_train_step(m))
+    out = ts(p, vel, bn, vbn, st, [], [], x, y, jnp.float32(0.5),
+             jnp.float32(0.05), jnp.int32(0))
+    out2 = ts(*out[:5], [], [], x, y, jnp.float32(0.5), jnp.float32(0.05),
+              jnp.int32(1))
+    assert float(out2[5]) < float(out[5])
+
+
+def test_grad_sparsity_through_masks():
+    """Algorithm 1: weight gradients of masked layers are column-sparse —
+    a column (output neuron) never selected by ANY sample gets zero grad."""
+    m, p, bn, st, wps, rs, x = _setup("mlp", use_bn=False)
+    key = jax.random.PRNGKey(3)
+    y = jax.random.randint(key, (m.batch,), 0, m.n_classes)
+    gamma = jnp.float32(0.95)
+
+    cap = []
+    M.forward(m, p, M.init_bn(m), st, wps, rs, x, gamma, True, jnp.int32(0),
+              capture=cap)
+    mask1 = np.asarray(cap[0])  # (batch, 256) layer-1 selection mask
+    never_selected = mask1.sum(axis=0) == 0.0
+    assert never_selected.any(), "fixture needs some never-selected columns"
+
+    def loss(p):
+        logits, _, _ = M.forward(
+            m, p, M.init_bn(m), st, wps, rs, x, gamma, True, jnp.int32(0)
+        )
+        return T.cross_entropy(logits, y)
+
+    g = jax.grad(loss)(p)
+    g1 = np.asarray(g[0]["w"])  # first dense layer grad (784, 256)
+    dead_cols = np.abs(g1[:, never_selected]).max()
+    assert dead_cols == 0.0, f"unselected columns must get zero grad: {dead_cols}"
+
+
+def test_zoo_rejects_unknown():
+    with pytest.raises(KeyError):
+        M.get("alexnet")
+
+
+def test_with_opts_and_rename():
+    m = M.get("mlp").with_opts(eps=0.7).renamed("mlp7")
+    assert m.opts.eps == 0.7 and m.name == "mlp7"
+    assert M.get("mlp").opts.eps == 0.5  # original untouched
+
+
+def test_cross_entropy_and_accuracy():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]])
+    y = jnp.asarray([0, 1, 1])
+    assert float(T.cross_entropy(logits, y)) > 0.0
+    np.testing.assert_allclose(float(T.accuracy(logits, y)), 2 / 3, rtol=1e-6)
+
+
+def test_sgd_momentum_update():
+    p = {"w": jnp.ones((2, 2))}
+    v = {"w": jnp.zeros((2, 2))}
+    g = {"w": jnp.ones((2, 2))}
+    new_p, new_v = T.sgd_momentum(p, v, g, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(new_v["w"]), -0.1)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 0.9)
+    # momentum accumulates
+    new_p2, new_v2 = T.sgd_momentum(new_p, new_v, g, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(new_v2["w"]), -0.19, rtol=1e-6)

@@ -1,0 +1,72 @@
+//! Fig 10: convergence analysis.
+//! (a/b) DSG training curves vs the vanilla dense model — DSG must not
+//!       slow convergence;
+//! (c)   distribution of the pairwise difference between high-dim and
+//!       low-dim (projected) inner products.
+
+use dsg::drs::projection::ternary_r;
+use dsg::drs::project_rows;
+use dsg::runtime::Runtime;
+use dsg::tensor::Tensor;
+use dsg::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    dsg::benchutil::header(
+        "Fig 10",
+        "convergence: DSG vs dense curves + inner-product fidelity",
+        "DSG convergence ~= vanilla; inner-product differences centered on 0",
+    );
+    let rt = Runtime::cpu()?;
+    let steps = dsg::benchutil::bench_steps().max(100);
+
+    // (a) loss curves dense vs DSG on mlp
+    println!("\n(a) mlp loss curves ({steps} steps):");
+    let (_, t_dense) = dsg::benchutil::train_at(&rt, "mlp_dense", 0.0, steps, 7)?;
+    let (_, t_dsg) = dsg::benchutil::train_at(&rt, "mlp", 0.6, steps, 7)?;
+    println!("{:>6} {:>12} {:>12}", "step", "dense", "dsg@60%");
+    for i in (0..steps).step_by((steps / 10).max(1)) {
+        let end = (i + 10).min(steps);
+        let d: f32 = t_dense.history.steps[i..end].iter().map(|s| s.loss).sum::<f32>()
+            / (end - i) as f32;
+        let g: f32 = t_dsg.history.steps[i..end].iter().map(|s| s.loss).sum::<f32>()
+            / (end - i) as f32;
+        println!("{:>6} {:>12.4} {:>12.4}", i, d, g);
+    }
+    let d_final = t_dense.history.smoothed_loss(20).unwrap();
+    let g_final = t_dsg.history.smoothed_loss(20).unwrap();
+    println!("final smoothed loss: dense {d_final:.4} vs dsg {g_final:.4}");
+
+    // (c) inner-product difference histogram (CONV5-like shape, Table 1)
+    println!("\n(c) inner-product difference, d=2304 k=299 (eps 0.5, nK=512):");
+    let mut rng = Pcg32::seeded(5);
+    let (d, k, n) = (2304usize, 299usize, 4000usize);
+    let r = ternary_r(&mut rng, k, d, 3);
+    let scale = (1.0 / d as f32).sqrt();
+    let mut diffs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = Tensor::new(&[1, d], rng.normal_vec(d, scale));
+        let w = Tensor::new(&[1, d], rng.normal_vec(d, scale));
+        let hi: f32 = x.data().iter().zip(w.data()).map(|(a, b)| a * b).sum();
+        let fx = project_rows(&x, &r);
+        let fw = project_rows(&w, &r);
+        let lo: f32 = fx.data().iter().zip(fw.data()).map(|(a, b)| a * b).sum();
+        diffs.push((hi - lo) as f64);
+    }
+    let s = dsg::metrics::summarize(&diffs);
+    println!("  mean {:+.4}  std {:.4}  min {:+.4}  max {:+.4}", s.mean, s.std, s.min, s.max);
+    // histogram
+    let bins = 13;
+    let lo = -0.2;
+    let hi = 0.2;
+    let mut counts = vec![0usize; bins];
+    for &d in &diffs {
+        let b = (((d - lo) / (hi - lo) * bins as f64) as isize).clamp(0, bins as isize - 1);
+        counts[b as usize] += 1;
+    }
+    for (i, c) in counts.iter().enumerate() {
+        let center = lo + (i as f64 + 0.5) * (hi - lo) / bins as f64;
+        println!("  {:+.3} {}", center, "#".repeat(c * 60 / n.max(1)));
+    }
+    println!("(distribution should be tightly centered on zero — eq. 4)");
+    Ok(())
+}

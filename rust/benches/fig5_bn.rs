@@ -1,0 +1,31 @@
+//! Fig 5(e): BN compatibility — no-BN single mask vs BN single mask vs
+//! BN double mask (the paper's double-mask selection), on vgg8s.
+//!
+//! Expected: no-BN degrades fastest; double mask >= single mask with the
+//! sparsity actually restored after BN.
+
+use dsg::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    dsg::benchutil::header(
+        "Fig 5(e)",
+        "double-mask selection vs single mask vs no BN",
+        "no-BN very sensitive; double-mask best (regularization effect)",
+    );
+    let rt = Runtime::cpu()?;
+    let steps = dsg::benchutil::bench_steps();
+    let gammas = [0.0f32, 0.5, 0.7, 0.9];
+    for (label, variant) in [
+        ("no-BN+1mask", "vgg8s_nobn"),
+        ("BN+1mask", "vgg8s_single"),
+        ("BN+2mask", "vgg8s"),
+    ] {
+        let mut series = Vec::new();
+        for &g in &gammas {
+            let (acc, _) = dsg::benchutil::train_at(&rt, variant, g, steps, 7)?;
+            series.push((g, acc));
+        }
+        dsg::benchutil::print_series(label, &series);
+    }
+    Ok(())
+}

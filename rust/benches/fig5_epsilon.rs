@@ -1,0 +1,38 @@
+//! Fig 5(d): influence of the dimension-reduction degree eps — lower eps
+//! means larger projected dimension k, more accurate inner-product
+//! estimates, better accuracy, but more search compute (Table 1).
+
+use dsg::costmodel::jll;
+use dsg::runtime::{Meta, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    dsg::benchutil::header(
+        "Fig 5(d)",
+        "accuracy vs sparsity for eps in {0.3, 0.5, 0.7, 0.9} on vgg8s",
+        "eps=0.5: <1% loss up to 80% sparsity; higher eps degrades earlier",
+    );
+    let rt = Runtime::cpu()?;
+    let dir = dsg::artifacts_dir();
+    let steps = dsg::benchutil::bench_steps();
+    let gammas = [0.0f32, 0.5, 0.8, 0.9];
+    for (label, variant, eps) in [
+        ("eps 0.3", "vgg8s_eps30", 0.3),
+        ("eps 0.5", "vgg8s", 0.5),
+        ("eps 0.7", "vgg8s_eps70", 0.7),
+        ("eps 0.9", "vgg8s_eps90", 0.9),
+    ] {
+        let meta = Meta::load(&dir, variant)?;
+        let k_example = meta.dsg_layers.iter().map(|l| l.k).max().unwrap_or(0);
+        let mut series = Vec::new();
+        for &g in &gammas {
+            let (acc, _) = dsg::benchutil::train_at(&rt, variant, g, steps, 7)?;
+            series.push((g, acc));
+        }
+        dsg::benchutil::print_series(label, &series);
+        println!(
+            "    max k {k_example}; search cost scales with k (Table 1): k(nK=256) = {}",
+            jll::projection_dim(eps, 256, 2304)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Fig 5(c): graph selection strategy — DRS vs oracle top-k vs random
+//! selection, accuracy under increasing sparsity on vgg8s.
+//!
+//! Expected: DRS ~= oracle >> random at high sparsity.
+
+use dsg::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    dsg::benchutil::header(
+        "Fig 5(c)",
+        "selection strategy: DRS vs oracle vs random",
+        "DRS ~ oracle, both >> random under high sparsity",
+    );
+    let rt = Runtime::cpu()?;
+    let steps = dsg::benchutil::bench_steps();
+    let gammas = [0.0f32, 0.5, 0.7, 0.9];
+    let mut last: Vec<(String, f32)> = Vec::new();
+    for (label, variant) in [
+        ("drs", "vgg8s"),
+        ("oracle", "vgg8s_oracle"),
+        ("random", "vgg8s_random"),
+    ] {
+        let mut series = Vec::new();
+        for &g in &gammas {
+            let (acc, _) = dsg::benchutil::train_at(&rt, variant, g, steps, 7)?;
+            series.push((g, acc));
+        }
+        dsg::benchutil::print_series(label, &series);
+        last.push((label.to_string(), series.last().unwrap().1));
+    }
+    let drs = last[0].1;
+    let oracle = last[1].1;
+    let random = last[2].1;
+    println!(
+        "\n@90%: drs {drs:.3} vs oracle {oracle:.3} (gap {:.3}); random {random:.3} (deficit {:.3})",
+        (oracle - drs).abs(),
+        drs - random
+    );
+    Ok(())
+}

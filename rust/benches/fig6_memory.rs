@@ -1,0 +1,55 @@
+//! Fig 6: representational cost (memory footprint) for training and
+//! inference across the five CNN benchmarks under ZVC at 50/80/90%
+//! activation sparsity.
+
+use dsg::costmodel::shapes::fig6_nets;
+use dsg::memmodel;
+use dsg::util::human_bytes;
+
+fn main() {
+    dsg::benchutil::header(
+        "Fig 6",
+        "memory footprint, training and inference, ZVC-compressed",
+        "avg 1.7x (50%), 3.2x (80%), 4.2x (90%) training; acts up to 7.1x; infer <= 1.7x",
+    );
+    for &sp in &[0.5f64, 0.8, 0.9] {
+        println!("\n--- activation sparsity {:.0}% ---", sp * 100.0);
+        println!(
+            "{:<10} {:>6} {:>11} {:>11} {:>11} {:>8} {:>7} {:>11} {:>11} {:>8}",
+            "model", "batch", "tr-dense", "tr-dsg", "weights", "train-x", "act-x",
+            "inf-dense", "inf-dsg", "infer-x"
+        );
+        let mut avg_train = 0.0;
+        let mut saved: u64 = 0;
+        let nets = fig6_nets();
+        for net in &nets {
+            let m = memmodel::memory(net, sp);
+            avg_train += m.train_reduction();
+            saved += m.train_dense() - m.train_dsg();
+            println!(
+                "{:<10} {:>6} {:>11} {:>11} {:>11} {:>7.2}x {:>6.2}x {:>11} {:>11} {:>7.2}x",
+                net.name,
+                net.batch,
+                human_bytes(m.train_dense()),
+                human_bytes(m.train_dsg()),
+                human_bytes(m.weights),
+                m.train_reduction(),
+                m.act_reduction(),
+                human_bytes(m.infer_dense()),
+                human_bytes(m.infer_dsg()),
+                m.infer_reduction()
+            );
+        }
+        println!(
+            "average train reduction {:.2}x, total saved {} (paper: 1.7x/2.72GB @50, 3.2x/4.51GB @80, 4.2x/5.04GB @90)",
+            avg_train / nets.len() as f64,
+            human_bytes(saved / nets.len() as u64)
+        );
+    }
+    // mask overhead + the ResNet152 inference caveat (§3.3)
+    println!("\nmask overhead (vs dense train footprint, paper '<2%'):");
+    for net in fig6_nets() {
+        let m = memmodel::memory(&net, 0.8);
+        println!("  {:<10} {:.2}%", net.name, 100.0 * m.mask_frac());
+    }
+}

@@ -1,0 +1,44 @@
+//! Fig 7: computational cost (GMACs) for training and inference at
+//! 50/80/90% sparsity, including the DRS search overhead.
+
+use dsg::costmodel::{self, shapes::fig6_nets};
+
+fn main() {
+    dsg::benchutil::header(
+        "Fig 7",
+        "MAC counts for training (fwd+bwd) and inference",
+        "train 1.4x/1.7x/2.2x; infer 1.5x/2.8x/3.9x; DRS <6.5% train, <19.5% infer",
+    );
+    for &gamma in &[0.5f64, 0.8, 0.9] {
+        println!("\n--- sparsity {:.0}% (eps 0.5) ---", gamma * 100.0);
+        println!(
+            "{:<10} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8} {:>9} {:>9}",
+            "model", "tr-dense", "tr-dsg", "train-x", "inf-dense", "inf-dsg", "infer-x",
+            "drs%tr", "drs%inf"
+        );
+        let (mut at, mut ai) = (0.0, 0.0);
+        let nets = fig6_nets();
+        for net in &nets {
+            let m = costmodel::macs(net, gamma, 0.5);
+            at += m.train_reduction();
+            ai += m.infer_reduction();
+            println!(
+                "{:<10} {:>10.1} {:>10.1} {:>7.2}x {:>10.1} {:>10.1} {:>7.2}x {:>8.1}% {:>8.1}%",
+                net.name,
+                costmodel::gmacs(m.train_dense()),
+                costmodel::gmacs(m.train_dsg()),
+                m.train_reduction(),
+                costmodel::gmacs(m.fwd_dense),
+                costmodel::gmacs(m.fwd_dsg),
+                m.infer_reduction(),
+                100.0 * m.search_frac_train(),
+                100.0 * m.search_frac_infer()
+            );
+        }
+        println!(
+            "average: train {:.2}x, inference {:.2}x",
+            at / nets.len() as f64,
+            ai / nets.len() as f64
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! Fig 8(a): layer-wise execution time on the CPU sparse engine — DSG's
+//! vector-wise column skipping vs the row-loop VMM and blocked GEMM
+//! baselines, on the five VGG8 layer shapes.
+//!
+//! Per the paper's protocol the DSG time is measured AFTER the
+//! dimension-reduction search; the search time is reported alongside.
+
+use dsg::metrics::fmt_secs;
+use dsg::sparse::engine::{bench_layer, VGG8_LAYERS};
+
+fn main() {
+    dsg::benchutil::header(
+        "Fig 8(a)",
+        "layer execution time: DSG vs VMM vs GEMM (rust engine, MKL substitute)",
+        "avg speedup vs VMM 2.0x/5.0x/8.5x; vs GEMM 0.6x/1.6x/2.7x at 50/80/90%",
+    );
+    let reps = std::env::var("DSG_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    for &gamma in &[0.5f32, 0.8, 0.9] {
+        println!("\n--- sparsity {:.0}% ---", gamma * 100.0);
+        println!(
+            "{:<8} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}",
+            "layer", "GEMM", "VMM", "DSG", "DRS", "vs-VMM", "vs-GEMM", "density"
+        );
+        let (mut sv, mut sg) = (0.0, 0.0);
+        for (i, &shape) in VGG8_LAYERS.iter().enumerate() {
+            let t = bench_layer(shape, gamma, 0.5, reps, 40 + i as u64);
+            sv += t.speedup_vs_vmm();
+            sg += t.speedup_vs_gemm();
+            println!(
+                "{:<8} {:>10} {:>10} {:>10} {:>10} {:>7.2}x {:>7.2}x {:>8.2}",
+                shape.name,
+                fmt_secs(t.gemm_secs),
+                fmt_secs(t.vmm_secs),
+                fmt_secs(t.dsg_secs),
+                fmt_secs(t.drs_secs),
+                t.speedup_vs_vmm(),
+                t.speedup_vs_gemm(),
+                t.density
+            );
+        }
+        let n = VGG8_LAYERS.len() as f64;
+        println!("average: vs VMM {:.2}x, vs GEMM {:.2}x", sv / n, sg / n);
+    }
+
+    whole_model_native();
+}
+
+/// Whole-model complement: the same column-skipping engine end-to-end on
+/// the vgg8 artifact topology (native engine, host-side projection).
+fn whole_model_native() {
+    use dsg::native::{project_host, Mode, NativeModel};
+    let dir = dsg::artifacts_dir();
+    let Ok(meta) = dsg::runtime::Meta::load(&dir, "vgg8") else {
+        println!("\n(whole-model section skipped: artifacts not built)");
+        return;
+    };
+    if meta.units.is_empty() {
+        println!("\n(whole-model section skipped: meta has no topology)");
+        return;
+    }
+    let mut state = dsg::coordinator::ModelState::init(&meta, 7);
+    project_host(&meta, &mut state).unwrap();
+    let native = NativeModel::new(&meta, &state).unwrap();
+    let mut rng = dsg::Pcg32::seeded(8);
+    let mut shape = vec![meta.batch];
+    shape.extend_from_slice(&meta.input_shape);
+    let n: usize = shape.iter().product();
+    let x = dsg::Tensor::new(&shape, rng.normal_vec(n, 1.0));
+
+    println!("\n--- whole-model native engine (vgg8, batch {}) ---", meta.batch);
+    let t0 = std::time::Instant::now();
+    let dense = native.forward(&x, 0.0, Mode::Dense).unwrap();
+    let t_dense = t0.elapsed().as_secs_f64();
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>9}",
+        "gamma", "exec", "drs", "total", "vs-dense"
+    );
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>9}",
+        "dense",
+        dsg::metrics::fmt_secs(t_dense),
+        "-",
+        dsg::metrics::fmt_secs(t_dense),
+        "1.00x"
+    );
+    let _ = dense;
+    for gamma in [0.5f32, 0.8, 0.9] {
+        let t0 = std::time::Instant::now();
+        let out = native.forward(&x, gamma, Mode::Dsg).unwrap();
+        let total = t0.elapsed().as_secs_f64();
+        let drs: f64 = out.stats.iter().map(|s| s.drs_secs).sum();
+        let exec = total - drs;
+        println!(
+            "{:>8} {:>12} {:>12} {:>12} {:>8.2}x",
+            gamma,
+            dsg::metrics::fmt_secs(exec),
+            dsg::metrics::fmt_secs(drs),
+            dsg::metrics::fmt_secs(total),
+            t_dense / exec
+        );
+    }
+}

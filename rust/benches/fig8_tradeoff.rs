@@ -1,0 +1,53 @@
+//! Fig 8(b) + Fig 12: accuracy vs training time — large-sparse DSG
+//! models against smaller-dense models with equivalent effective MACs.
+//!
+//! Expected: the equivalent smaller-dense nets train faster but lose
+//! more accuracy than DSG at the same effective MAC budget.
+
+use dsg::runtime::Runtime;
+
+fn run(rt: &Runtime, label: &str, variant: &str, gamma: f32, steps: usize) -> anyhow::Result<(f32, f64)> {
+    let (acc, t) = dsg::benchutil::train_at(rt, variant, gamma, steps, 7)?;
+    let secs = t.history.total_secs();
+    println!(
+        "{:<24} gamma {:>4}  acc {:.3}  train-time {:>7.1}s  ({} steps)",
+        label, gamma, acc, secs, steps
+    );
+    Ok((acc, secs))
+}
+
+fn main() -> anyhow::Result<()> {
+    dsg::benchutil::header(
+        "Fig 8(b) / Fig 12",
+        "accuracy vs training time: large-sparse vs equivalent smaller-dense",
+        "smaller-dense saves time but loses accuracy vs DSG at equal MACs",
+    );
+    let rt = Runtime::cpu()?;
+    let steps = dsg::benchutil::bench_steps();
+    let all = std::env::args().any(|a| a == "--all");
+
+    println!("\nVGG8 family (w=32 base; dense-equivalents w=23 (~50%), w=14 (~80%)):");
+    let (acc_dense, _) = run(&rt, "vgg8 dense", "vgg8_dense", 0.0, steps)?;
+    let (acc_dsg50, _) = run(&rt, "vgg8 DSG", "vgg8", 0.5, steps)?;
+    let (acc_d23, _) = run(&rt, "vgg8_d23 small-dense", "vgg8_d23", 0.0, steps)?;
+    let (acc_dsg80, _) = run(&rt, "vgg8 DSG", "vgg8", 0.8, steps)?;
+    let (acc_d14, _) = run(&rt, "vgg8_d14 small-dense", "vgg8_d14", 0.0, steps)?;
+    println!(
+        "\nat ~50% MACs: DSG {acc_dsg50:.3} vs small-dense {acc_d23:.3} (DSG should win; dense ref {acc_dense:.3})"
+    );
+    println!(
+        "at ~20% MACs: DSG {acc_dsg80:.3} vs small-dense {acc_d14:.3}"
+    );
+
+    if all {
+        println!("\nResNet8 family (Fig 12; w=16 base; equivalents w=11, w=7):");
+        run(&rt, "resnet8 dense", "resnet8_dense", 0.0, steps)?;
+        run(&rt, "resnet8 DSG", "resnet8", 0.5, steps)?;
+        run(&rt, "resnet8_d11 small-dense", "resnet8_d11", 0.0, steps)?;
+        run(&rt, "resnet8 DSG", "resnet8", 0.8, steps)?;
+        run(&rt, "resnet8_d7 small-dense", "resnet8_d7", 0.0, steps)?;
+    } else {
+        println!("\n(run with --all for the ResNet8 / Fig 12 extension)");
+    }
+    Ok(())
+}

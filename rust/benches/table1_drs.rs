@@ -1,0 +1,47 @@
+//! Table 1: dimension-reduction search dimensions + operation counts for
+//! the five VGG8 layers at eps in {0.3, 0.5, 0.7, 0.9}, plus the Appendix
+//! B average reduction factors.
+
+use dsg::costmodel::jll;
+use dsg::sparse::engine::VGG8_LAYERS;
+
+fn main() {
+    dsg::benchutil::header(
+        "Table 1",
+        "DRS reduced dimension and MMACs per VGG8 layer vs eps",
+        "dims 539/232/148/119 (nK=128) ... ops 67.37/29/18.5/14.88 MMACs; BL 144",
+    );
+    let epss = [0.3, 0.5, 0.7, 0.9];
+    println!(
+        "{:<24} {:>6} {:>6} {:>6} {:>6} {:>6} | {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "layer (nPQ,nCRS,nK)", "BL", "0.3", "0.5", "0.7", "0.9", "BL-MM", "0.3", "0.5", "0.7", "0.9"
+    );
+    let mut red = [0.0f64; 4];
+    for l in VGG8_LAYERS {
+        let dims: Vec<usize> =
+            epss.iter().map(|&e| jll::projection_dim(e, l.n_k, l.n_crs)).collect();
+        let ops: Vec<f64> =
+            dims.iter().map(|&k| jll::search_mmacs(l.n_pq, k, l.n_k)).collect();
+        println!(
+            "{:<24} {:>6} {:>6} {:>6} {:>6} {:>6} | {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            format!("{} ({},{},{})", l.name, l.n_pq, l.n_crs, l.n_k),
+            l.n_crs,
+            dims[0],
+            dims[1],
+            dims[2],
+            dims[3],
+            jll::baseline_mmacs(l.n_pq, l.n_crs, l.n_k),
+            ops[0],
+            ops[1],
+            ops[2],
+            ops[3]
+        );
+        for (i, &k) in dims.iter().enumerate() {
+            red[i] += l.n_crs as f64 / k as f64;
+        }
+    }
+    println!("\naverage dimension reduction (paper: 3.6x / 8.5x / 13.3x / 16.5x):");
+    for (i, &e) in epss.iter().enumerate() {
+        println!("  eps {:.1}: {:.1}x", e, red[i] / VGG8_LAYERS.len() as f64);
+    }
+}

@@ -1,0 +1,76 @@
+//! Shared support for the `rust/benches/*` harness-less benchmarks that
+//! regenerate the paper's tables and figures.
+//!
+//! Step counts are scaled by `DSG_BENCH_STEPS` (default 120) so CI can
+//! shrink and a thorough run can grow the training-based benches.
+
+use crate::config::{GammaSchedule, RunConfig};
+use crate::coordinator::Trainer;
+use crate::datasets::{self, Dataset};
+use crate::runtime::{Meta, Runtime};
+use anyhow::Result;
+
+/// Training steps for training-based benches (env-scalable).
+pub fn bench_steps() -> usize {
+    std::env::var("DSG_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120)
+}
+
+pub fn header(id: &str, what: &str, paper: &str) {
+    println!("==================================================================");
+    println!("{id}: {what}");
+    println!("paper reference: {paper}");
+    println!("==================================================================");
+}
+
+/// Cached dataset pair for a config.
+pub fn data_for(cfg: &RunConfig) -> (Dataset, Dataset) {
+    let full = if cfg.dataset == "fashion" {
+        datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed)
+    } else {
+        datasets::cifar_like(cfg.train_size + cfg.test_size, cfg.seed)
+    };
+    full.split(cfg.test_size as f64 / (cfg.train_size + cfg.test_size) as f64)
+}
+
+/// Train `variant` at constant `gamma` for the bench step budget and
+/// return (final eval accuracy, trainer).
+pub fn train_at(
+    rt: &Runtime,
+    variant: &str,
+    gamma: f32,
+    steps: usize,
+    seed: u64,
+) -> Result<(f32, Trainer)> {
+    let dir = crate::artifacts_dir();
+    let meta = Meta::load(&dir, variant)?;
+    let mut cfg = RunConfig::preset_for_model(variant);
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.gamma = GammaSchedule::Constant(gamma);
+    let (train, test) = data_for(&cfg);
+    let mut t = Trainer::new(rt, meta, seed)?;
+    let acc = t.train(&cfg, &train, &test)?;
+    Ok((acc, t))
+}
+
+/// Render a compact accuracy-vs-gamma series.
+pub fn print_series(label: &str, series: &[(f32, f32)]) {
+    print!("{label:<16}");
+    for (g, a) in series {
+        print!("  {g:.2}:{a:.3}");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bench_steps_default() {
+        std::env::remove_var("DSG_BENCH_STEPS");
+        assert_eq!(super::bench_steps(), 120);
+    }
+}

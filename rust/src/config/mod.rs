@@ -1,0 +1,261 @@
+//! Run configuration: typed config with JSON load/save and presets.
+//!
+//! The config system is what makes the launcher reproducible: every
+//! training/eval/bench run is fully described by a `RunConfig`, which can
+//! be loaded from a JSON file, tweaked by CLI flags, and is stamped into
+//! the run's output directory.
+
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Context, Result};
+
+/// Sparsity schedule: how gamma evolves over training.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GammaSchedule {
+    /// Constant gamma from step 0.
+    Constant(f32),
+    /// Linear warmup from 0 to the target over `warmup` steps (the
+    /// paper's warm-up training, Appendix D).
+    Warmup { target: f32, warmup: usize },
+}
+
+impl GammaSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            GammaSchedule::Constant(g) => g,
+            GammaSchedule::Warmup { target, warmup } => {
+                if warmup == 0 || step >= warmup {
+                    target
+                } else {
+                    target * step as f32 / warmup as f32
+                }
+            }
+        }
+    }
+
+    pub fn target(&self) -> f32 {
+        match *self {
+            GammaSchedule::Constant(g) => g,
+            GammaSchedule::Warmup { target, .. } => target,
+        }
+    }
+}
+
+/// Full description of one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// artifact variant name (e.g. "mlp", "vgg8", "vgg8s_oracle")
+    pub model: String,
+    pub gamma: GammaSchedule,
+    pub lr: f32,
+    /// multiplicative LR decay applied every `lr_decay_every` steps
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    pub steps: usize,
+    pub eval_every: usize,
+    /// projected-weight refresh period (paper: every 50 iterations)
+    pub refresh_every: usize,
+    pub seed: u64,
+    /// dataset: "fashion" or "cifar"
+    pub dataset: String,
+    pub train_size: usize,
+    pub test_size: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "mlp".into(),
+            gamma: GammaSchedule::Constant(0.5),
+            lr: 0.05,
+            lr_decay: 0.5,
+            lr_decay_every: 400,
+            steps: 300,
+            eval_every: 100,
+            refresh_every: 50,
+            seed: 42,
+            dataset: "fashion".into(),
+            train_size: 2048,
+            test_size: 512,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        let g = self.gamma.target();
+        if !(0.0..1.0).contains(&g) {
+            bail!("gamma must be in [0,1), got {g}");
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.refresh_every == 0 {
+            bail!("refresh_every must be > 0");
+        }
+        if !matches!(self.dataset.as_str(), "fashion" | "cifar") {
+            bail!("unknown dataset {:?}", self.dataset);
+        }
+        Ok(())
+    }
+
+    /// Dataset matching the artifact's input shape convention.
+    pub fn preset_for_model(model: &str) -> RunConfig {
+        let mut c = RunConfig { model: model.to_string(), ..Default::default() };
+        if model.starts_with("mlp") || model.starts_with("lenet") {
+            c.dataset = "fashion".into();
+        } else {
+            c.dataset = "cifar".into();
+            c.train_size = 1024;
+            c.test_size = 256;
+            c.steps = 200;
+        }
+        c
+    }
+
+    pub fn to_json(&self) -> Json {
+        let gamma = match self.gamma {
+            GammaSchedule::Constant(g) => obj(vec![
+                ("kind", Json::Str("constant".into())),
+                ("value", Json::Num(g as f64)),
+            ]),
+            GammaSchedule::Warmup { target, warmup } => obj(vec![
+                ("kind", Json::Str("warmup".into())),
+                ("value", Json::Num(target as f64)),
+                ("warmup", Json::Num(warmup as f64)),
+            ]),
+        };
+        obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("gamma", gamma),
+            ("lr", Json::Num(self.lr as f64)),
+            ("lr_decay", Json::Num(self.lr_decay as f64)),
+            ("lr_decay_every", Json::Num(self.lr_decay_every as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("refresh_every", Json::Num(self.refresh_every as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("train_size", Json::Num(self.train_size as f64)),
+            ("test_size", Json::Num(self.test_size as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        if let Some(m) = j.get("model").and_then(|v| v.as_str()) {
+            c.model = m.to_string();
+        }
+        if let Some(g) = j.get("gamma") {
+            let value = g.req("value")?.as_f64().context("gamma.value")? as f32;
+            c.gamma = match g.get("kind").and_then(|k| k.as_str()) {
+                Some("warmup") => GammaSchedule::Warmup {
+                    target: value,
+                    warmup: g.req_usize("warmup")?,
+                },
+                _ => GammaSchedule::Constant(value),
+            };
+        }
+        macro_rules! num {
+            ($field:ident, $t:ty) => {
+                if let Some(v) = j.get(stringify!($field)).and_then(|v| v.as_f64()) {
+                    c.$field = v as $t;
+                }
+            };
+        }
+        num!(lr, f32);
+        num!(lr_decay, f32);
+        num!(lr_decay_every, usize);
+        num!(steps, usize);
+        num!(eval_every, usize);
+        num!(refresh_every, usize);
+        num!(seed, u64);
+        num!(train_size, usize);
+        num!(test_size, usize);
+        if let Some(d) = j.get("dataset").and_then(|v| v.as_str()) {
+            c.dataset = d.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+        let txt = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let j = Json::parse(&txt).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = RunConfig::default();
+        c.model = "vgg8".into();
+        c.gamma = GammaSchedule::Warmup { target: 0.8, warmup: 100 };
+        c.dataset = "cifar".into();
+        c.seed = 7;
+        let j = c.to_json();
+        let c2 = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c2.model, "vgg8");
+        assert_eq!(c2.gamma, GammaSchedule::Warmup { target: 0.8, warmup: 100 });
+        assert_eq!(c2.seed, 7);
+        assert_eq!(c2.dataset, "cifar");
+    }
+
+    #[test]
+    fn schedule_values() {
+        let s = GammaSchedule::Warmup { target: 0.8, warmup: 100 };
+        assert_eq!(s.at(0), 0.0);
+        assert!((s.at(50) - 0.4).abs() < 1e-6);
+        assert_eq!(s.at(100), 0.8);
+        assert_eq!(s.at(1000), 0.8);
+        assert_eq!(GammaSchedule::Constant(0.5).at(9), 0.5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = RunConfig::default();
+        c.gamma = GammaSchedule::Constant(1.0);
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.lr = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.dataset = "mnist".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn presets() {
+        assert_eq!(RunConfig::preset_for_model("mlp").dataset, "fashion");
+        assert_eq!(RunConfig::preset_for_model("vgg8s_oracle").dataset, "cifar");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("dsg_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        let c = RunConfig::default();
+        c.save(&p).unwrap();
+        let c2 = RunConfig::load(&p).unwrap();
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.steps, c.steps);
+    }
+}

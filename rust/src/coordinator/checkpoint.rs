@@ -1,0 +1,162 @@
+//! Checkpointing: serialize the full model state (training state + Wp +
+//! R) to a single binary file with an integrity header.
+//!
+//! Format: magic "DSGCKPT1" | u32 n_tensors | per tensor:
+//! u32 ndim | u64 dims[ndim] | u8 dtype (0=f32,1=s32) | payload LE bytes.
+
+use crate::coordinator::init::ModelState;
+use crate::runtime::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DSGCKPT1";
+
+fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
+    let shape = t.shape();
+    w.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    match t {
+        HostTensor::F32 { data, .. } => {
+            w.write_all(&[0u8])?;
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        HostTensor::S32 { data, .. } => {
+            w.write_all(&[1u8])?;
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<HostTensor> {
+    let ndim = u32::from_le_bytes(read_exact(r, 4)?.try_into().unwrap()) as usize;
+    if ndim > 8 {
+        bail!("corrupt checkpoint: ndim {ndim}");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(u64::from_le_bytes(read_exact(r, 8)?.try_into().unwrap()) as usize);
+    }
+    let n: usize = shape.iter().product();
+    let dtype = read_exact(r, 1)?[0];
+    let raw = read_exact(r, 4 * n)?;
+    Ok(match dtype {
+        0 => HostTensor::F32 {
+            shape,
+            data: raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        },
+        1 => HostTensor::S32 {
+            shape,
+            data: raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        },
+        other => bail!("corrupt checkpoint: dtype {other}"),
+    })
+}
+
+/// Save a model state (with section lengths for state/wps/rs).
+pub fn save(path: &Path, ms: &ModelState) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    for section in [&ms.state, &ms.wps, &ms.rs] {
+        f.write_all(&(section.len() as u32).to_le_bytes())?;
+        for t in section.iter() {
+            write_tensor(&mut f, t)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a model state.
+pub fn load(path: &Path) -> Result<ModelState> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let magic = read_exact(&mut f, 8)?;
+    if magic != MAGIC {
+        bail!("{path:?} is not a DSG checkpoint");
+    }
+    let mut sections = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let n = u32::from_le_bytes(read_exact(&mut f, 4)?.try_into().unwrap()) as usize;
+        if n > 100_000 {
+            bail!("corrupt checkpoint: section of {n} tensors");
+        }
+        let mut ts = Vec::with_capacity(n);
+        for _ in 0..n {
+            ts.push(read_tensor(&mut f)?);
+        }
+        sections.push(ts);
+    }
+    let rs = sections.pop().unwrap();
+    let wps = sections.pop().unwrap();
+    let state = sections.pop().unwrap();
+    Ok(ModelState { state, wps, rs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn tiny_state() -> ModelState {
+        let mut rng = Pcg32::seeded(3);
+        ModelState {
+            state: vec![
+                HostTensor::f32(&[2, 3], rng.normal_vec(6, 1.0)),
+                HostTensor::f32(&[3], vec![0.0; 3]),
+            ],
+            wps: vec![HostTensor::f32(&[2, 2], rng.normal_vec(4, 1.0))],
+            rs: vec![HostTensor::f32(&[2, 3], rng.ternary_vec(6, 3))],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("dsg_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ckpt");
+        let ms = tiny_state();
+        save(&p, &ms).unwrap();
+        let ms2 = load(&p).unwrap();
+        assert_eq!(ms.state, ms2.state);
+        assert_eq!(ms.wps, ms2.wps);
+        assert_eq!(ms.rs, ms2.rs);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("dsg_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, b"NOTACKPTxxxxxxx").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("dsg_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.ckpt");
+        save(&p, &tiny_state()).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! State initialization from the meta init specs (rust mirror of
+//! `python/compile/models.py` init; exact distributions differ by PRNG
+//! but match in law: He-normal weights, zero biases/velocities, unit BN
+//! scales, ternary Achlioptas projections).
+
+use crate::runtime::{HostTensor, Init, LeafSpec, Meta};
+use crate::util::Pcg32;
+
+/// Materialize one leaf according to its init spec.
+pub fn init_leaf(spec: &LeafSpec, rng: &mut Pcg32) -> HostTensor {
+    let n = spec.elems();
+    let data = match spec.init {
+        Init::Zeros => vec![0.0; n],
+        Init::Ones => vec![1.0; n],
+        Init::HeNormal { fan_in } => {
+            let std = (2.0 / fan_in as f32).sqrt();
+            rng.normal_vec(n, std)
+        }
+        Init::Ternary { s } => rng.ternary_vec(n, s),
+    };
+    HostTensor::f32(&spec.shape, data)
+}
+
+/// Materialize a whole leaf list (state / wps / rs).
+pub fn init_leaves(specs: &[LeafSpec], rng: &mut Pcg32) -> Vec<HostTensor> {
+    specs.iter().map(|s| init_leaf(s, rng)).collect()
+}
+
+/// Full model state: training state + projections.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    /// params ++ vel ++ bn ++ vbn ++ bn_state (meta.state order)
+    pub state: Vec<HostTensor>,
+    /// projected weights (refreshed every `refresh_every` steps)
+    pub wps: Vec<HostTensor>,
+    /// fixed ternary projection matrices
+    pub rs: Vec<HostTensor>,
+}
+
+impl ModelState {
+    pub fn init(meta: &Meta, seed: u64) -> ModelState {
+        let mut rng = Pcg32::seeded(seed);
+        ModelState {
+            state: init_leaves(&meta.state, &mut rng),
+            wps: init_leaves(&meta.wps, &mut rng),
+            rs: init_leaves(&meta.rs, &mut rng),
+        }
+    }
+
+    /// Views of the five state groups.
+    pub fn group<'a>(&'a self, meta: &Meta, idx: usize) -> &'a [HostTensor] {
+        let r = meta.group_ranges()[idx].clone();
+        &self.state[r]
+    }
+
+    pub fn params<'a>(&'a self, meta: &Meta) -> &'a [HostTensor] {
+        self.group(meta, 0)
+    }
+
+    pub fn bn<'a>(&'a self, meta: &Meta) -> &'a [HostTensor] {
+        self.group(meta, 2)
+    }
+
+    pub fn bn_state<'a>(&'a self, meta: &Meta) -> &'a [HostTensor] {
+        self.group(meta, 4)
+    }
+
+    /// The DSG-layer weights, in dsg order (inputs to the project step).
+    pub fn dsg_weights<'a>(&'a self, meta: &Meta) -> Vec<&'a HostTensor> {
+        meta.dsg_weight_indices.iter().map(|&i| &self.state[i]).collect()
+    }
+
+    /// Total f32 elements held (memory accounting).
+    pub fn total_elems(&self) -> usize {
+        self.state.iter().map(|t| t.len()).sum::<usize>()
+            + self.wps.iter().map(|t| t.len()).sum::<usize>()
+            + self.rs.iter().map(|t| t.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DType;
+
+    fn leaf(name: &str, shape: &[usize], init: Init) -> LeafSpec {
+        LeafSpec { name: name.into(), shape: shape.to_vec(), dtype: DType::F32, init }
+    }
+
+    #[test]
+    fn init_kinds() {
+        let mut rng = Pcg32::seeded(1);
+        let z = init_leaf(&leaf("z", &[4], Init::Zeros), &mut rng);
+        assert_eq!(z.as_f32().unwrap(), &[0.0; 4]);
+        let o = init_leaf(&leaf("o", &[3], Init::Ones), &mut rng);
+        assert_eq!(o.as_f32().unwrap(), &[1.0; 3]);
+        let h = init_leaf(&leaf("w", &[1000], Init::HeNormal { fan_in: 100 }), &mut rng);
+        let d = h.as_f32().unwrap();
+        let std = (d.iter().map(|x| x * x).sum::<f32>() / 1000.0).sqrt();
+        let want = (2.0f32 / 100.0).sqrt();
+        assert!((std - want).abs() / want < 0.15, "std {std} want {want}");
+        let t = init_leaf(&leaf("r", &[3000], Init::Ternary { s: 3 }), &mut rng);
+        let zeros = t.as_f32().unwrap().iter().filter(|&&x| x == 0.0).count();
+        assert!((zeros as f32 / 3000.0 - 2.0 / 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("mlp.meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = Meta::load(&dir, "mlp").unwrap();
+        let a = ModelState::init(&meta, 7);
+        let b = ModelState::init(&meta, 7);
+        let c = ModelState::init(&meta, 8);
+        assert_eq!(a.state[0], b.state[0]);
+        assert_ne!(a.state[0], c.state[0]);
+        assert_eq!(a.params(&meta).len(), meta.counts.params);
+        assert_eq!(a.dsg_weights(&meta).len(), meta.counts.dsg);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: state init, the training orchestrator, checkpoints.
+//!
+//! See DESIGN.md — the coordinator owns everything dynamic: batching,
+//! sparsity (gamma) and LR schedules, the every-50-steps projected-weight
+//! refresh (paper §3.1), evaluation, metrics, and persistence.  The HLO
+//! artifacts it drives are pure functions.
+
+pub mod checkpoint;
+pub mod init;
+pub mod sweep;
+pub mod trainer;
+
+pub use init::ModelState;
+pub use trainer::{StepOut, Trainer};

@@ -1,0 +1,222 @@
+//! Experiment sweep runner: orchestrates grids of training runs
+//! (variant x gamma x seed), collects results, and emits CSV/JSON
+//! reports — the machinery behind the Fig 5 benches and the `dsg sweep`
+//! CLI subcommand.
+
+use crate::config::{GammaSchedule, RunConfig};
+use crate::coordinator::Trainer;
+use crate::runtime::{Meta, Runtime};
+use crate::util::json::{obj, Json};
+use anyhow::Result;
+use std::io::Write;
+
+/// One grid point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub variant: String,
+    pub gamma: f32,
+    pub seed: u64,
+}
+
+/// One grid result.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub point: SweepPoint,
+    pub eval_acc: f32,
+    pub final_loss: f32,
+    pub mean_density: f32,
+    pub train_secs: f64,
+    pub steps: usize,
+}
+
+/// Grid definition.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    pub variants: Vec<String>,
+    pub gammas: Vec<f32>,
+    pub seeds: Vec<u64>,
+    pub steps: usize,
+}
+
+impl Sweep {
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let mut out = Vec::new();
+        for v in &self.variants {
+            for &g in &self.gammas {
+                for &s in &self.seeds {
+                    out.push(SweepPoint { variant: v.clone(), gamma: g, seed: s });
+                }
+            }
+        }
+        out
+    }
+
+    /// Run the whole grid sequentially (the PJRT client is not Sync).
+    pub fn run(&self, rt: &Runtime, progress: bool) -> Result<Vec<SweepResult>> {
+        let dir = crate::artifacts_dir();
+        let points = self.points();
+        let total = points.len();
+        let mut out = Vec::with_capacity(total);
+        for (i, p) in points.into_iter().enumerate() {
+            let meta = Meta::load(&dir, &p.variant)?;
+            let mut cfg = RunConfig::preset_for_model(&p.variant);
+            cfg.steps = self.steps;
+            cfg.eval_every = 0;
+            cfg.seed = p.seed;
+            cfg.gamma = GammaSchedule::Constant(p.gamma);
+            let (train, test) = crate::benchutil::data_for(&cfg);
+            let mut trainer = Trainer::new(rt, meta, p.seed)?;
+            let t0 = std::time::Instant::now();
+            let acc = trainer.train(&cfg, &train, &test)?;
+            let dens = trainer.history.mean_densities(20);
+            let res = SweepResult {
+                eval_acc: acc,
+                final_loss: trainer.history.smoothed_loss(10).unwrap_or(f32::NAN),
+                mean_density: if dens.is_empty() {
+                    1.0
+                } else {
+                    dens.iter().sum::<f32>() / dens.len() as f32
+                },
+                train_secs: t0.elapsed().as_secs_f64(),
+                steps: self.steps,
+                point: p,
+            };
+            if progress {
+                crate::info!(
+                    "sweep {}/{}: {} gamma {} seed {} -> acc {:.3}",
+                    i + 1,
+                    total,
+                    res.point.variant,
+                    res.point.gamma,
+                    res.point.seed,
+                    res.eval_acc
+                );
+            }
+            out.push(res);
+        }
+        Ok(out)
+    }
+}
+
+/// Write sweep results as CSV.
+pub fn write_csv(path: &std::path::Path, results: &[SweepResult]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "variant,gamma,seed,steps,eval_acc,final_loss,mean_density,train_secs")?;
+    for r in results {
+        writeln!(
+            f,
+            "{},{},{},{},{},{},{},{}",
+            r.point.variant,
+            r.point.gamma,
+            r.point.seed,
+            r.steps,
+            r.eval_acc,
+            r.final_loss,
+            r.mean_density,
+            r.train_secs
+        )?;
+    }
+    Ok(())
+}
+
+/// Serialize results to JSON (for the `dsg sweep --json` report).
+pub fn to_json(results: &[SweepResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("variant", Json::Str(r.point.variant.clone())),
+                    ("gamma", Json::Num(r.point.gamma as f64)),
+                    ("seed", Json::Num(r.point.seed as f64)),
+                    ("steps", Json::Num(r.steps as f64)),
+                    ("eval_acc", Json::Num(r.eval_acc as f64)),
+                    ("final_loss", Json::Num(r.final_loss as f64)),
+                    ("mean_density", Json::Num(r.mean_density as f64)),
+                    ("train_secs", Json::Num(r.train_secs)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Aggregate: mean eval acc per (variant, gamma) across seeds.
+pub fn aggregate(results: &[SweepResult]) -> Vec<(String, f32, f32, f32)> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(String, String), Vec<f32>> = BTreeMap::new();
+    for r in results {
+        groups
+            .entry((r.point.variant.clone(), format!("{:.4}", r.point.gamma)))
+            .or_default()
+            .push(r.eval_acc);
+    }
+    groups
+        .into_iter()
+        .map(|((v, g), accs)| {
+            let mean = accs.iter().sum::<f32>() / accs.len() as f32;
+            let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>()
+                / accs.len() as f32;
+            (v, g.parse().unwrap_or(0.0), mean, var.sqrt())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_results() -> Vec<SweepResult> {
+        let mut out = Vec::new();
+        for (g, a1, a2) in [(0.0f32, 0.9f32, 0.92f32), (0.8, 0.7, 0.74)] {
+            for (seed, acc) in [(1u64, a1), (2, a2)] {
+                out.push(SweepResult {
+                    point: SweepPoint { variant: "mlp".into(), gamma: g, seed },
+                    eval_acc: acc,
+                    final_loss: 0.1,
+                    mean_density: 1.0 - g,
+                    train_secs: 1.0,
+                    steps: 10,
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn points_cross_product() {
+        let s = Sweep {
+            variants: vec!["a".into(), "b".into()],
+            gammas: vec![0.0, 0.5],
+            seeds: vec![1, 2, 3],
+            steps: 10,
+        };
+        assert_eq!(s.points().len(), 12);
+    }
+
+    #[test]
+    fn aggregate_means() {
+        let agg = aggregate(&fake_results());
+        assert_eq!(agg.len(), 2);
+        let (_, g0, m0, s0) = &agg[0];
+        assert_eq!(*g0, 0.0);
+        assert!((m0 - 0.91).abs() < 1e-6);
+        assert!(*s0 > 0.0);
+    }
+
+    #[test]
+    fn csv_and_json_shapes() {
+        let rs = fake_results();
+        let dir = std::env::temp_dir().join("dsg_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.csv");
+        write_csv(&p, &rs).unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(txt.lines().count(), 5);
+        let j = to_json(&rs);
+        assert_eq!(j.as_arr().unwrap().len(), 4);
+        assert_eq!(
+            j.as_arr().unwrap()[0].req_str("variant").unwrap(),
+            "mlp"
+        );
+    }
+}

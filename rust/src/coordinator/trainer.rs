@@ -1,0 +1,207 @@
+//! The training orchestrator: the L3 loop that owns all mutable state
+//! and drives the AOT train-step artifact (paper Algorithm 1).
+//!
+//! Responsibilities (everything the python side deliberately does NOT
+//! own): batching, gamma/lr schedules, the every-50-steps projected-
+//! weight refresh, evaluation, metrics, checkpoints.
+
+use crate::config::RunConfig;
+use crate::coordinator::init::ModelState;
+use crate::datasets::{BatchIter, Dataset};
+use crate::metrics::{History, StepRecord};
+use crate::runtime::{Executable, HostTensor, Meta, Runtime};
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+/// One step's scalar results.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    pub loss: f32,
+    pub acc: f32,
+    pub densities: Vec<f32>,
+}
+
+/// The coordinator for one model variant.
+pub struct Trainer {
+    pub meta: Meta,
+    pub state: ModelState,
+    train_exe: Rc<Executable>,
+    fwd_exe: Rc<Executable>,
+    project_exe: Option<Rc<Executable>>,
+    pub steps_done: usize,
+    pub history: History,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, meta: Meta, seed: u64) -> Result<Trainer> {
+        let train_exe = rt.load_artifact(&meta, "train")?;
+        let fwd_exe = rt.load_artifact(&meta, "forward")?;
+        let project_exe = if meta.has_file("project") {
+            Some(rt.load_artifact(&meta, "project")?)
+        } else {
+            None
+        };
+        let state = ModelState::init(&meta, seed);
+        let mut t = Trainer {
+            meta,
+            state,
+            train_exe,
+            fwd_exe,
+            project_exe,
+            steps_done: 0,
+            history: History::default(),
+        };
+        t.refresh_projection()?; // initial Wp from the initial weights
+        Ok(t)
+    }
+
+    /// Recompute the projected weights Wp = f(W, R) — the operation the
+    /// paper amortizes to every 50 iterations.
+    pub fn refresh_projection(&mut self) -> Result<()> {
+        let Some(exe) = &self.project_exe else {
+            return Ok(()); // dense/oracle/random variants have no Wp
+        };
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        for w in self.state.dsg_weights(&self.meta) {
+            inputs.push(w.clone());
+        }
+        inputs.extend(self.state.rs.iter().cloned());
+        let inputs = self.meta.filter_kept("project", inputs);
+        let outs = exe.run(&inputs).context("project step")?;
+        if outs.len() != self.meta.counts.wps {
+            bail!("project returned {} outputs, expected {}", outs.len(), self.meta.counts.wps);
+        }
+        self.state.wps = outs;
+        Ok(())
+    }
+
+    /// Run one training step on a prepared batch.
+    pub fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut> {
+        let m = &self.meta;
+        let mut shape = vec![m.batch];
+        shape.extend_from_slice(&m.input_shape);
+        if x.len() != m.batch * m.input_elems() {
+            bail!("x has {} elems, expected {}", x.len(), m.batch * m.input_elems());
+        }
+        let n_state = self.state.state.len();
+        let mut inputs: Vec<HostTensor> =
+            Vec::with_capacity(n_state + self.state.wps.len() + self.state.rs.len() + 5);
+        inputs.extend(self.state.state.iter().cloned());
+        inputs.extend(self.state.wps.iter().cloned());
+        inputs.extend(self.state.rs.iter().cloned());
+        inputs.push(HostTensor::f32(&shape, x.to_vec()));
+        inputs.push(HostTensor::s32(&[m.batch], y.to_vec()));
+        inputs.push(HostTensor::scalar_f32(gamma));
+        inputs.push(HostTensor::scalar_f32(lr));
+        inputs.push(HostTensor::scalar_s32(self.steps_done as i32));
+        let inputs = m.filter_kept("train", inputs);
+        let outs = self.train_exe.run(&inputs).context("train step")?;
+        let expect = n_state + 2 + m.counts.dsg;
+        if outs.len() != expect {
+            bail!("train step returned {} outputs, expected {expect}", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let new_state: Vec<HostTensor> = (&mut it).take(n_state).collect();
+        let loss = it.next().unwrap().scalar()?;
+        let acc = it.next().unwrap().scalar()?;
+        let densities: Vec<f32> =
+            it.map(|t| t.scalar()).collect::<Result<_>>()?;
+        self.state.state = new_state;
+        self.steps_done += 1;
+        Ok(StepOut { loss, acc, densities })
+    }
+
+    /// Forward pass on one batch; returns logits (batch, classes).
+    pub fn forward(&self, x: &[f32], gamma: f32) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        let mut shape = vec![m.batch];
+        shape.extend_from_slice(&m.input_shape);
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        inputs.extend(self.state.params(m).iter().cloned());
+        inputs.extend(self.state.bn(m).iter().cloned());
+        inputs.extend(self.state.bn_state(m).iter().cloned());
+        inputs.extend(self.state.wps.iter().cloned());
+        inputs.extend(self.state.rs.iter().cloned());
+        inputs.push(HostTensor::f32(&shape, x.to_vec()));
+        inputs.push(HostTensor::scalar_f32(gamma));
+        let inputs = m.filter_kept("forward", inputs);
+        let outs = self.fwd_exe.run(&inputs).context("forward")?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    /// Evaluate accuracy over a dataset (padded final batch handled).
+    pub fn evaluate(&self, data: &Dataset, gamma: f32) -> Result<f32> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (xs, ys, valid) in BatchIter::eval_batches(data, self.meta.batch) {
+            let logits = self.forward(&xs, gamma)?;
+            let c = self.meta.classes;
+            for (i, &y) in ys.iter().enumerate().take(valid) {
+                let row = &logits[i * c..(i + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                if pred == y as usize {
+                    correct += 1;
+                }
+            }
+            total += valid;
+        }
+        Ok(correct as f32 / total.max(1) as f32)
+    }
+
+    /// The full training loop per `cfg`, with projection refresh, eval,
+    /// and history recording.  Returns the final eval accuracy.
+    pub fn train(&mut self, cfg: &RunConfig, train: &Dataset, test: &Dataset) -> Result<f32> {
+        cfg.validate()?;
+        let mut iter = BatchIter::new(train, self.meta.batch, cfg.seed ^ 0x5eed);
+        let mut lr = cfg.lr;
+        for step in 0..cfg.steps {
+            if step > 0 && step % cfg.refresh_every == 0 {
+                self.refresh_projection()?;
+            }
+            if step > 0 && step % cfg.lr_decay_every == 0 {
+                lr *= cfg.lr_decay;
+            }
+            let gamma = cfg.gamma.at(step);
+            let (xs, ys) = iter.next_batch();
+            let t0 = std::time::Instant::now();
+            let out = self.step(&xs, &ys, gamma, lr)?;
+            self.history.push(StepRecord {
+                step,
+                loss: out.loss,
+                acc: out.acc,
+                densities: out.densities,
+                secs: t0.elapsed().as_secs_f64(),
+            });
+            if !out.loss.is_finite() {
+                bail!("loss diverged (NaN/inf) at step {step}");
+            }
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                let acc = self.evaluate(test, cfg.gamma.target())?;
+                self.history.push_eval(step + 1, acc);
+                crate::info!(
+                    "{} step {}/{} loss {:.4} train-acc {:.3} eval-acc {:.3}",
+                    self.meta.name,
+                    step + 1,
+                    cfg.steps,
+                    out.loss,
+                    out.acc,
+                    acc
+                );
+            }
+        }
+        let final_acc = self.evaluate(test, cfg.gamma.target())?;
+        self.history.push_eval(cfg.steps, final_acc);
+        Ok(final_acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Trainer integration tests live in rust/tests/coordinator_integration.rs
+    // (they need compiled artifacts + the PJRT client).
+}

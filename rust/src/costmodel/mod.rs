@@ -1,0 +1,186 @@
+//! Computational-cost model (§3.4, Fig 7, Table 1).
+//!
+//! Per maskable layer, DSG replaces the dense n_PQ*n_CRS*n_K MAC volume
+//! with the §2.2 complexity  n_PQ * n_K * (k + (1-gamma) * n_CRS):
+//! the low-dimensional search VMM plus the exact compute of only the
+//! selected neurons.  Backward: the error propagation is accelerated by
+//! the mask (factor 1-gamma) while the weight-gradient GEMM is counted
+//! fully dense — the paper explicitly excludes its reduction "for
+//! practical concern" (irregular sparsity).
+
+pub mod jll;
+pub mod shapes;
+
+use shapes::{Layer, NetShape};
+
+/// MAC accounting for one network at one sparsity level.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MacBreakdown {
+    /// dense baseline forward MACs (per batch)
+    pub fwd_dense: u64,
+    /// DSG forward: search + selected exact compute
+    pub fwd_dsg: u64,
+    /// of which the dimension-reduction search (low-dim VMM)
+    pub search: u64,
+    /// dense baseline backward (error prop + weight grad)
+    pub bwd_dense: u64,
+    /// DSG backward (masked error prop + dense weight grad)
+    pub bwd_dsg: u64,
+}
+
+impl MacBreakdown {
+    pub fn train_dense(&self) -> u64 {
+        self.fwd_dense + self.bwd_dense
+    }
+    pub fn train_dsg(&self) -> u64 {
+        self.fwd_dsg + self.bwd_dsg
+    }
+    pub fn train_reduction(&self) -> f64 {
+        self.train_dense() as f64 / self.train_dsg() as f64
+    }
+    pub fn infer_reduction(&self) -> f64 {
+        self.fwd_dense as f64 / self.fwd_dsg as f64
+    }
+    /// DRS overhead relative to the DENSE baseline cost — this is the
+    /// arithmetic under the paper's "<6.5% in training and <19.5% in
+    /// inference": at eps=0.5 the search VMM costs k/n_CRS ~ 1/8.5 ~ 12-20%
+    /// of one dense forward, which is ~1/3 of a dense training step.
+    pub fn search_frac_train(&self) -> f64 {
+        self.search as f64 / self.train_dense() as f64
+    }
+    pub fn search_frac_infer(&self) -> f64 {
+        self.search as f64 / self.fwd_dense as f64
+    }
+}
+
+/// Per-layer DSG forward MACs (per sample).
+///
+/// Layers too small for the JLL bound to reduce anything (k clipped to
+/// ~d_in) do not run DRS — projecting would cost as much as computing
+/// densely, so the layer stays dense (the paper's naive-selection
+/// observation in §2: selection only pays when estimation is cheap).
+pub fn layer_fwd_dsg(l: &Layer, gamma: f64, eps: f64) -> (u64, u64) {
+    if !l.maskable {
+        return (l.fwd_macs(), 0);
+    }
+    let k = jll::projection_dim(eps, l.n_k, l.n_crs);
+    if k * 2 > l.n_crs {
+        return (l.fwd_macs(), 0); // <2x reduction: search doesn't pay
+    }
+    let search = (l.n_pq * k * l.n_k) as u64;
+    let exact = ((l.n_pq * l.n_crs * l.n_k) as f64 * (1.0 - gamma)) as u64;
+    (search + exact, search)
+}
+
+/// Full-network MAC breakdown at (gamma, eps) for one mini-batch.
+pub fn macs(net: &NetShape, gamma: f64, eps: f64) -> MacBreakdown {
+    let b = net.batch as u64;
+    let mut out = MacBreakdown::default();
+    for l in &net.layers {
+        let dense = l.fwd_macs();
+        let (dsg, search) = layer_fwd_dsg(l, gamma, eps);
+        out.fwd_dense += b * dense;
+        out.fwd_dsg += b * dsg;
+        out.search += b * search;
+        // backward: error propagation + weight gradient, both ~= fwd cost
+        out.bwd_dense += b * dense * 2;
+        let err_dsg = if l.maskable {
+            (dense as f64 * (1.0 - gamma)) as u64
+        } else {
+            dense
+        };
+        out.bwd_dsg += b * (err_dsg + dense); // wgrad counted dense
+    }
+    out
+}
+
+/// GMACs helper (1e9, as the paper reports).
+pub fn gmacs(macs: u64) -> f64 {
+    macs as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use shapes::fig6_nets;
+
+    #[test]
+    fn fig7_training_reduction_shape() {
+        // Paper: 1.4x / 1.7x / 2.2x average training reduction at
+        // 50/80/90% sparsity.  Check the averages land near those.
+        let want = [(0.5, 1.4), (0.8, 1.7), (0.9, 2.2)];
+        for (gamma, target) in want {
+            let mut rs = Vec::new();
+            for net in fig6_nets() {
+                rs.push(macs(&net, gamma, 0.5).train_reduction());
+            }
+            let avg = rs.iter().sum::<f64>() / rs.len() as f64;
+            assert!(
+                (avg - target).abs() / target < 0.35,
+                "gamma {gamma}: avg train reduction {avg:.2} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig7_inference_reduction_shape() {
+        // Paper: 1.5x / 2.8x / 3.9x at 50/80/90%.
+        let want = [(0.5, 1.5), (0.8, 2.8), (0.9, 3.9)];
+        for (gamma, target) in want {
+            let mut rs = Vec::new();
+            for net in fig6_nets() {
+                rs.push(macs(&net, gamma, 0.5).infer_reduction());
+            }
+            let avg = rs.iter().sum::<f64>() / rs.len() as f64;
+            assert!(
+                (avg - target).abs() / target < 0.35,
+                "gamma {gamma}: avg infer reduction {avg:.2} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn search_overhead_bounds() {
+        // Paper: DRS overhead <6.5% in training, <19.5% in inference.
+        for net in fig6_nets() {
+            for gamma in [0.5, 0.8, 0.9] {
+                let m = macs(&net, gamma, 0.5);
+                assert!(
+                    m.search_frac_train() < 0.075,
+                    "{}: train search frac {:.3}",
+                    net.name,
+                    m.search_frac_train()
+                );
+                assert!(
+                    m.search_frac_infer() < 0.21,
+                    "{}: infer search frac {:.3}",
+                    net.name,
+                    m.search_frac_infer()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_monotone_in_gamma() {
+        let net = shapes::vgg8(64);
+        let r: Vec<f64> = [0.3, 0.5, 0.7, 0.9]
+            .iter()
+            .map(|&g| macs(&net, g, 0.5).train_reduction())
+            .collect();
+        assert!(r.windows(2).all(|w| w[1] > w[0]), "{r:?}");
+    }
+
+    #[test]
+    fn unmaskable_layers_pay_full_cost() {
+        let l = Layer::fc(100, 10, false);
+        let (dsg, search) = layer_fwd_dsg(&l, 0.9, 0.5);
+        assert_eq!(dsg, l.fwd_macs());
+        assert_eq!(search, 0);
+    }
+
+    #[test]
+    fn gmacs_units() {
+        assert_eq!(gmacs(2_000_000_000), 2.0);
+    }
+}

@@ -1,0 +1,316 @@
+//! Layer-shape zoo at the paper's published sizes (§3.1).
+//!
+//! Figures 6/7 and Table 1 are arithmetic over layer shapes, sparsity and
+//! ZVC overhead, so the ImageNet-scale models (AlexNet, VGG16, ResNet18,
+//! ResNet152, WRN-18-2) are reproduced here exactly even though training
+//! them is out of CPU scope (see DESIGN.md substitutions).  The CIFAR and
+//! FASHION models match the shapes the artifacts train.
+
+/// One compute layer in VMM form.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Layer {
+    /// sliding-window count P*Q (1 for FC)
+    pub n_pq: usize,
+    /// reduced-before dimension C*R*S (or fan-in for FC)
+    pub n_crs: usize,
+    /// output neurons K (or fan-out for FC)
+    pub n_k: usize,
+    /// DSG-maskable? (classifier and input-adjacent shortcut layers no)
+    pub maskable: bool,
+}
+
+impl Layer {
+    pub fn conv(hw: usize, c_in: usize, c_out: usize, k: usize, stride: usize) -> Layer {
+        let out = hw / stride;
+        Layer { n_pq: out * out, n_crs: c_in * k * k, n_k: c_out, maskable: true }
+    }
+
+    pub fn fc(d_in: usize, d_out: usize, maskable: bool) -> Layer {
+        Layer { n_pq: 1, n_crs: d_in, n_k: d_out, maskable }
+    }
+
+    /// Output activation element count (per sample).
+    pub fn act_elems(&self) -> usize {
+        self.n_pq * self.n_k
+    }
+
+    /// Weight element count.
+    pub fn weight_elems(&self) -> usize {
+        self.n_crs * self.n_k
+    }
+
+    /// Dense forward MACs per sample.
+    pub fn fwd_macs(&self) -> u64 {
+        (self.n_pq * self.n_crs * self.n_k) as u64
+    }
+}
+
+/// A whole network plus the mini-batch the paper used for it.
+#[derive(Clone, Debug)]
+pub struct NetShape {
+    pub name: &'static str,
+    pub batch: usize,
+    pub input_elems: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl NetShape {
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems() as u64).sum()
+    }
+    pub fn total_acts_per_sample(&self) -> u64 {
+        self.layers.iter().map(|l| l.act_elems() as u64).sum()
+    }
+    pub fn fwd_macs_per_sample(&self) -> u64 {
+        self.layers.iter().map(|l| l.fwd_macs()).sum()
+    }
+    pub fn max_act_elems(&self) -> u64 {
+        self.layers.iter().map(|l| l.act_elems() as u64).max().unwrap_or(0)
+    }
+}
+
+/// VGG8 at the paper's width (Courbariaux-style, CIFAR 32x32).
+pub fn vgg8(batch: usize) -> NetShape {
+    let mut l = Vec::new();
+    l.push(Layer::conv(32, 3, 128, 3, 1));
+    l.push(Layer::conv(32, 128, 128, 3, 1));
+    // pool -> 16
+    l.push(Layer::conv(16, 128, 256, 3, 1));
+    l.push(Layer::conv(16, 256, 256, 3, 1));
+    // pool -> 8
+    l.push(Layer::conv(8, 256, 512, 3, 1));
+    l.push(Layer::conv(8, 512, 512, 3, 1));
+    // pool -> 4
+    l.push(Layer::fc(512 * 4 * 4, 1024, true));
+    l.push(Layer::fc(1024, 10, false));
+    NetShape { name: "VGG8", batch, input_elems: 3 * 32 * 32, layers: l }
+}
+
+/// The paper's customized ResNet8: 3 residual blocks + 2 FC, CIFAR.
+pub fn resnet8(batch: usize) -> NetShape {
+    let mut l = Vec::new();
+    l.push(Layer::conv(32, 3, 16, 3, 1));
+    // block 1 @16ch
+    l.push(Layer::conv(32, 16, 16, 3, 1));
+    l.push(Layer::conv(32, 16, 16, 3, 1));
+    // block 2 @32ch stride 2
+    l.push(Layer::conv(32, 16, 32, 3, 2));
+    l.push(Layer::conv(16, 32, 32, 3, 1));
+    l.push(Layer::conv(32, 16, 32, 1, 2)); // shortcut
+    // block 3 @64ch stride 2
+    l.push(Layer::conv(16, 32, 64, 3, 2));
+    l.push(Layer::conv(8, 64, 64, 3, 1));
+    l.push(Layer::conv(16, 32, 64, 1, 2)); // shortcut
+    l.push(Layer::fc(64, 64, true));
+    l.push(Layer::fc(64, 10, false));
+    NetShape { name: "ResNet8", batch, input_elems: 3 * 32 * 32, layers: l }
+}
+
+/// AlexNet (ImageNet 224), original grouped topology: conv2/4/5 use
+/// groups=2, halving each output's fan-in (n_CRS).
+pub fn alexnet(batch: usize) -> NetShape {
+    let l = vec![
+        // conv1: 96 kernels 11x11 stride 4 -> 55x55
+        Layer { n_pq: 55 * 55, n_crs: 3 * 11 * 11, n_k: 96, maskable: true },
+        // pool -> 27; conv2 5x5 pad 2, groups 2 (48-ch fan-in)
+        Layer { n_pq: 27 * 27, n_crs: 48 * 5 * 5, n_k: 256, maskable: true },
+        // pool -> 13; conv3 ungrouped, conv4/5 groups 2
+        Layer { n_pq: 13 * 13, n_crs: 256 * 3 * 3, n_k: 384, maskable: true },
+        Layer { n_pq: 13 * 13, n_crs: 192 * 3 * 3, n_k: 384, maskable: true },
+        Layer { n_pq: 13 * 13, n_crs: 192 * 3 * 3, n_k: 256, maskable: true },
+        // pool -> 6; FCs
+        Layer::fc(256 * 6 * 6, 4096, true),
+        Layer::fc(4096, 4096, true),
+        Layer::fc(4096, 1000, false),
+    ];
+    NetShape { name: "AlexNet", batch, input_elems: 3 * 224 * 224, layers: l }
+}
+
+/// VGG16 (ImageNet 224).
+pub fn vgg16(batch: usize) -> NetShape {
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        // (hw, c_in, c_out, repeat-first-flag unused)
+        (224, 3, 64, 0),
+        (224, 64, 64, 0),
+        (112, 64, 128, 0),
+        (112, 128, 128, 0),
+        (56, 128, 256, 0),
+        (56, 256, 256, 0),
+        (56, 256, 256, 0),
+        (28, 256, 512, 0),
+        (28, 512, 512, 0),
+        (28, 512, 512, 0),
+        (14, 512, 512, 0),
+        (14, 512, 512, 0),
+        (14, 512, 512, 0),
+    ];
+    let mut l: Vec<Layer> =
+        cfg.iter().map(|&(hw, ci, co, _)| Layer::conv(hw, ci, co, 3, 1)).collect();
+    l.push(Layer::fc(512 * 7 * 7, 4096, true));
+    l.push(Layer::fc(4096, 4096, true));
+    l.push(Layer::fc(4096, 1000, false));
+    NetShape { name: "VGG16", batch, input_elems: 3 * 224 * 224, layers: l }
+}
+
+fn resnet_stage(l: &mut Vec<Layer>, hw: usize, c_in: usize, c_out: usize, blocks: usize, stride: usize) {
+    // basic blocks (2 x 3x3)
+    l.push(Layer::conv(hw, c_in, c_out, 3, stride));
+    let hw2 = hw / stride;
+    l.push(Layer::conv(hw2, c_out, c_out, 3, 1));
+    if stride != 1 || c_in != c_out {
+        l.push(Layer::conv(hw, c_in, c_out, 1, stride)); // projection shortcut
+    }
+    for _ in 1..blocks {
+        l.push(Layer::conv(hw2, c_out, c_out, 3, 1));
+        l.push(Layer::conv(hw2, c_out, c_out, 3, 1));
+    }
+}
+
+/// ResNet18 (ImageNet 224), basic blocks.
+pub fn resnet18(batch: usize) -> NetShape {
+    let mut l = Vec::new();
+    l.push(Layer { n_pq: 112 * 112, n_crs: 3 * 7 * 7, n_k: 64, maskable: true });
+    resnet_stage(&mut l, 56, 64, 64, 2, 1);
+    resnet_stage(&mut l, 56, 64, 128, 2, 2);
+    resnet_stage(&mut l, 28, 128, 256, 2, 2);
+    resnet_stage(&mut l, 14, 256, 512, 2, 2);
+    l.push(Layer::fc(512, 1000, false));
+    NetShape { name: "ResNet18", batch, input_elems: 3 * 224 * 224, layers: l }
+}
+
+fn bottleneck_stage(l: &mut Vec<Layer>, hw: usize, c_in: usize, mid: usize, blocks: usize, stride: usize) {
+    let c_out = mid * 4;
+    // first block (may downsample)
+    l.push(Layer::conv(hw, c_in, mid, 1, 1));
+    l.push(Layer::conv(hw, mid, mid, 3, stride));
+    let hw2 = hw / stride;
+    l.push(Layer::conv(hw2, mid, c_out, 1, 1));
+    l.push(Layer::conv(hw, c_in, c_out, 1, stride)); // shortcut
+    for _ in 1..blocks {
+        l.push(Layer::conv(hw2, c_out, mid, 1, 1));
+        l.push(Layer::conv(hw2, mid, mid, 3, 1));
+        l.push(Layer::conv(hw2, mid, c_out, 1, 1));
+    }
+}
+
+/// ResNet152 (ImageNet 224), bottleneck blocks 3/8/36/3.
+pub fn resnet152(batch: usize) -> NetShape {
+    let mut l = Vec::new();
+    l.push(Layer { n_pq: 112 * 112, n_crs: 3 * 7 * 7, n_k: 64, maskable: true });
+    bottleneck_stage(&mut l, 56, 64, 64, 3, 1);
+    bottleneck_stage(&mut l, 56, 256, 128, 8, 2);
+    bottleneck_stage(&mut l, 28, 512, 256, 36, 2);
+    bottleneck_stage(&mut l, 14, 1024, 512, 3, 2);
+    l.push(Layer::fc(2048, 1000, false));
+    NetShape { name: "ResNet152", batch, input_elems: 3 * 224 * 224, layers: l }
+}
+
+/// WRN-18-2: ResNet18 with doubled widths.
+pub fn wrn18_2(batch: usize) -> NetShape {
+    let mut l = Vec::new();
+    l.push(Layer { n_pq: 112 * 112, n_crs: 3 * 7 * 7, n_k: 128, maskable: true });
+    resnet_stage(&mut l, 56, 128, 128, 2, 1);
+    resnet_stage(&mut l, 56, 128, 256, 2, 2);
+    resnet_stage(&mut l, 28, 256, 512, 2, 2);
+    resnet_stage(&mut l, 14, 512, 1024, 2, 2);
+    l.push(Layer::fc(1024, 1000, false));
+    NetShape { name: "WRN-18-2", batch, input_elems: 3 * 224 * 224, layers: l }
+}
+
+/// The five CNN benchmarks of Fig 6 / Fig 7 with the batch sizes used.
+pub fn fig6_nets() -> Vec<NetShape> {
+    vec![vgg8(128), resnet8(128), alexnet(256), vgg16(64), resnet152(32)]
+}
+
+/// All published shapes by name.
+pub fn by_name(name: &str, batch: usize) -> Option<NetShape> {
+    Some(match name {
+        "vgg8" => vgg8(batch),
+        "resnet8" => resnet8(batch),
+        "alexnet" => alexnet(batch),
+        "vgg16" => vgg16(batch),
+        "resnet18" => resnet18(batch),
+        "resnet152" => resnet152(batch),
+        "wrn18_2" => wrn18_2(batch),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg8_layer_shapes_match_table1() {
+        let net = vgg8(1);
+        // Table 1 rows are VGG8 conv2..conv6
+        let rows: Vec<(usize, usize, usize)> =
+            net.layers[1..6].iter().map(|l| (l.n_pq, l.n_crs, l.n_k)).collect();
+        assert_eq!(
+            rows,
+            vec![
+                (1024, 1152, 128),
+                (256, 1152, 256),
+                (256, 2304, 256),
+                (64, 2304, 512),
+                (64, 4608, 512),
+            ]
+        );
+    }
+
+    #[test]
+    fn vgg16_param_count_is_canonical() {
+        // VGG16 has ~138M params (conv 14.7M + fc 123.6M)
+        let net = vgg16(1);
+        let w = net.total_weights();
+        assert!((130_000_000..146_000_000).contains(&(w as usize)), "{w}");
+    }
+
+    #[test]
+    fn alexnet_macs_canonical() {
+        // ~0.7 GMACs forward per sample (conv-dominated)
+        let net = alexnet(1);
+        let m = net.fwd_macs_per_sample();
+        assert!((600_000_000..800_000_000).contains(&(m as usize)), "{m}");
+    }
+
+    #[test]
+    fn resnet18_macs_canonical() {
+        // ~1.8 GMACs per 224x224 sample
+        let net = resnet18(1);
+        let m = net.fwd_macs_per_sample();
+        assert!((1_500_000_000..2_100_000_000).contains(&(m as usize)), "{m}");
+    }
+
+    #[test]
+    fn resnet152_macs_canonical() {
+        // ~11.5 GMACs per sample
+        let net = resnet152(1);
+        let m = net.fwd_macs_per_sample();
+        assert!((10_000_000_000..13_000_000_000).contains(&(m as u64 as usize)), "{m}");
+    }
+
+    #[test]
+    fn resnet152_params_canonical() {
+        // ~60M params
+        let net = resnet152(1);
+        let w = net.total_weights();
+        assert!((55_000_000..65_000_000).contains(&(w as usize)), "{w}");
+    }
+
+    #[test]
+    fn activation_dominance_at_large_batch() {
+        // Fig 1(c): at large batch, activations dwarf weights for convnets.
+        let net = vgg8(128);
+        let acts = net.total_acts_per_sample() * 128;
+        assert!(acts > net.total_weights());
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["vgg8", "resnet8", "alexnet", "vgg16", "resnet18", "resnet152", "wrn18_2"] {
+            assert!(by_name(n, 8).is_some(), "{n}");
+        }
+        assert!(by_name("nope", 8).is_none());
+    }
+}

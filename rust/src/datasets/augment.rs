@@ -1,0 +1,180 @@
+//! Data augmentation for the synthetic pipelines: random horizontal
+//! flip, random crop with zero padding, and cutout.  Standard CIFAR
+//! training recipe; applied on the fly by `AugmentIter`.
+
+use super::Dataset;
+use crate::util::Pcg32;
+
+/// Augmentation config.
+#[derive(Clone, Copy, Debug)]
+pub struct Augment {
+    pub hflip: bool,
+    /// pad-and-crop jitter radius in pixels (0 = off)
+    pub crop_pad: usize,
+    /// cutout square size (0 = off)
+    pub cutout: usize,
+}
+
+impl Default for Augment {
+    fn default() -> Self {
+        Augment { hflip: true, crop_pad: 2, cutout: 0 }
+    }
+}
+
+/// Horizontal flip of a (C, H, W) image.
+pub fn hflip(img: &[f32], c: usize, h: usize, w: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; img.len()];
+    for ci in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                out[(ci * h + y) * w + x] = img[(ci * h + y) * w + (w - 1 - x)];
+            }
+        }
+    }
+    out
+}
+
+/// Shift a (C, H, W) image by (dy, dx), zero-filling.
+pub fn shift(img: &[f32], c: usize, h: usize, w: usize, dy: isize, dx: isize) -> Vec<f32> {
+    let mut out = vec![0.0f32; img.len()];
+    for ci in 0..c {
+        for y in 0..h {
+            let sy = y as isize - dy;
+            if sy < 0 || sy >= h as isize {
+                continue;
+            }
+            for x in 0..w {
+                let sx = x as isize - dx;
+                if sx < 0 || sx >= w as isize {
+                    continue;
+                }
+                out[(ci * h + y) * w + x] = img[(ci * h + sy as usize) * w + sx as usize];
+            }
+        }
+    }
+    out
+}
+
+/// Zero out a square patch (cutout regularization).
+pub fn cutout(img: &mut [f32], c: usize, h: usize, w: usize, cy: usize, cx: usize, size: usize) {
+    let y0 = cy.saturating_sub(size / 2);
+    let x0 = cx.saturating_sub(size / 2);
+    for ci in 0..c {
+        for y in y0..(y0 + size).min(h) {
+            for x in x0..(x0 + size).min(w) {
+                img[(ci * h + y) * w + x] = 0.0;
+            }
+        }
+    }
+}
+
+/// Apply the augmentation pipeline to one image.
+pub fn apply(aug: &Augment, rng: &mut Pcg32, img: &[f32], shape: &[usize]) -> Vec<f32> {
+    let (c, h, w) = (shape[0], shape[1], shape[2]);
+    let mut out = img.to_vec();
+    if aug.hflip && rng.uniform() < 0.5 {
+        out = hflip(&out, c, h, w);
+    }
+    if aug.crop_pad > 0 {
+        let r = aug.crop_pad as isize;
+        let dy = rng.below((2 * aug.crop_pad + 1) as u32) as isize - r;
+        let dx = rng.below((2 * aug.crop_pad + 1) as u32) as isize - r;
+        if dy != 0 || dx != 0 {
+            out = shift(&out, c, h, w, dy, dx);
+        }
+    }
+    if aug.cutout > 0 {
+        let cy = rng.below(h as u32) as usize;
+        let cx = rng.below(w as u32) as usize;
+        cutout(&mut out, c, h, w, cy, cx, aug.cutout);
+    }
+    out
+}
+
+/// Batch iterator with on-the-fly augmentation.
+pub struct AugmentIter<'a> {
+    inner: super::BatchIter<'a>,
+    aug: Augment,
+    shape: Vec<usize>,
+    rng: Pcg32,
+}
+
+impl<'a> AugmentIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, aug: Augment, seed: u64) -> Self {
+        assert_eq!(data.input_shape.len(), 3, "augmentation needs (C,H,W) data");
+        AugmentIter {
+            inner: super::BatchIter::new(data, batch, seed),
+            aug,
+            shape: data.input_shape.clone(),
+            rng: Pcg32::seeded(seed ^ 0xa0621),
+        }
+    }
+
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let (xs, ys) = self.inner.next_batch();
+        let per: usize = self.shape.iter().product();
+        let mut out = Vec::with_capacity(xs.len());
+        for img in xs.chunks_exact(per) {
+            out.extend(apply(&self.aug, &mut self.rng, img, &self.shape));
+        }
+        (out, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hflip_involution() {
+        let img: Vec<f32> = (0..2 * 3 * 4).map(|i| i as f32).collect();
+        let f = hflip(&img, 2, 3, 4);
+        assert_ne!(f, img);
+        assert_eq!(hflip(&f, 2, 3, 4), img);
+    }
+
+    #[test]
+    fn shift_moves_mass() {
+        let mut img = vec![0.0f32; 16];
+        img[5] = 1.0; // (1, 1) in 4x4
+        let s = shift(&img, 1, 4, 4, 1, 0);
+        assert_eq!(s[9], 1.0); // moved to (2, 1)
+        assert_eq!(s[5], 0.0);
+        // shifting off the edge zeroes
+        let far = shift(&img, 1, 4, 4, 10, 0);
+        assert!(far.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cutout_zeroes_patch() {
+        let mut img = vec![1.0f32; 1 * 6 * 6];
+        cutout(&mut img, 1, 6, 6, 3, 3, 2);
+        let zeros = img.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 4);
+    }
+
+    #[test]
+    fn identity_when_disabled() {
+        let aug = Augment { hflip: false, crop_pad: 0, cutout: 0 };
+        let mut rng = Pcg32::seeded(1);
+        let img: Vec<f32> = (0..27).map(|i| i as f32).collect();
+        assert_eq!(apply(&aug, &mut rng, &img, &[3, 3, 3]), img);
+    }
+
+    #[test]
+    fn augment_iter_shapes_and_determinism() {
+        let d = crate::datasets::cifar_like(32, 3);
+        let aug = Augment::default();
+        let mut a = AugmentIter::new(&d, 8, aug, 9);
+        let mut b = AugmentIter::new(&d, 8, aug, 9);
+        let (xa, ya) = a.next_batch();
+        let (xb, yb) = b.next_batch();
+        assert_eq!(xa.len(), 8 * 3 * 32 * 32);
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        // different seed differs
+        let mut c = AugmentIter::new(&d, 8, aug, 10);
+        let (xc, _) = c.next_batch();
+        assert_ne!(xa, xc);
+    }
+}

@@ -1,0 +1,336 @@
+//! Synthetic dataset substrate (DESIGN.md substitution for FASHION /
+//! CIFAR10 — no dataset downloads in this environment).
+//!
+//! Each class is a procedurally generated template bank; samples are a
+//! random template + random shift + elastic-ish channel jitter + pixel
+//! noise.  The task is genuinely learnable but not trivial (class
+//! templates overlap through noise), which is what the sparsity-accuracy
+//! experiments need: a loss surface where pruning too much *hurts*.
+
+pub mod augment;
+
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// A labelled dataset of flattened f32 images.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// (C, H, W) — (1, 28, 28) fashion-like, (3, 32, 32) cifar-like.
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub images: Vec<Vec<f32>>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Split into (train, test).
+    pub fn split(mut self, test_frac: f64) -> (Dataset, Dataset) {
+        let n_test = (self.len() as f64 * test_frac) as usize;
+        let n_train = self.len() - n_test;
+        let test = Dataset {
+            name: format!("{}-test", self.name),
+            input_shape: self.input_shape.clone(),
+            n_classes: self.n_classes,
+            images: self.images.split_off(n_train),
+            labels: self.labels.split_off(n_train),
+        };
+        self.name = format!("{}-train", self.name);
+        (self, test)
+    }
+}
+
+/// Deterministic batch iterator with per-epoch reshuffling.
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: Pcg32,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && batch <= data.len(), "batch {batch} of {}", data.len());
+        let mut rng = Pcg32::seeded(seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        BatchIter { data, batch, order, pos: 0, rng }
+    }
+
+    /// Next batch as (x flat (batch * input_elems), y (batch)); wraps
+    /// epochs, reshuffling at each boundary.
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let d = self.data.input_elems();
+        let mut xs = Vec::with_capacity(self.batch * d);
+        let mut ys = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.pos == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.pos = 0;
+            }
+            let i = self.order[self.pos];
+            self.pos += 1;
+            xs.extend_from_slice(&self.data.images[i]);
+            ys.push(self.data.labels[i]);
+        }
+        (xs, ys)
+    }
+
+    /// Sequential (unshuffled) batches covering the set once; the last
+    /// partial batch is padded by wrapping to the front.
+    pub fn eval_batches(data: &'a Dataset, batch: usize) -> Vec<(Vec<f32>, Vec<i32>, usize)> {
+        let d = data.input_elems();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < data.len() {
+            let valid = batch.min(data.len() - i);
+            let mut xs = Vec::with_capacity(batch * d);
+            let mut ys = Vec::with_capacity(batch);
+            for j in 0..batch {
+                let idx = if j < valid { i + j } else { j - valid };
+                xs.extend_from_slice(&data.images[idx]);
+                ys.push(data.labels[idx]);
+            }
+            out.push((xs, ys, valid));
+            i += valid;
+        }
+        out
+    }
+}
+
+fn gen_templates(
+    rng: &mut Pcg32,
+    n_classes: usize,
+    per_class: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    // Per class: `per_class` smooth random templates built from a few
+    // random blobs + stripes, giving classes distinct spatial structure.
+    let mut banks = Vec::with_capacity(n_classes);
+    for _ in 0..n_classes {
+        let mut bank = Vec::with_capacity(per_class);
+        // class-level structure shared by its templates
+        let n_blobs = 2 + rng.below(3) as usize;
+        let blobs: Vec<(f32, f32, f32, f32)> = (0..n_blobs)
+            .map(|_| {
+                (
+                    rng.uniform_in(0.2, 0.8) * h as f32,
+                    rng.uniform_in(0.2, 0.8) * w as f32,
+                    rng.uniform_in(2.0, 6.0),
+                    rng.uniform_in(0.6, 1.4),
+                )
+            })
+            .collect();
+        let stripe_freq = rng.uniform_in(0.2, 0.9);
+        let stripe_phase = rng.uniform_in(0.0, 6.28);
+        for _ in 0..per_class {
+            let jitter_y = rng.uniform_in(-1.5, 1.5);
+            let jitter_x = rng.uniform_in(-1.5, 1.5);
+            let mut img = vec![0.0f32; c * h * w];
+            for ci in 0..c {
+                let ch_gain = 0.7 + 0.3 * ((ci as f32 + 1.0) * stripe_phase).sin();
+                for y in 0..h {
+                    for x in 0..w {
+                        let mut v = 0.0f32;
+                        for &(by, bx, bs, ba) in &blobs {
+                            let dy = y as f32 - by - jitter_y;
+                            let dx = x as f32 - bx - jitter_x;
+                            v += ba * (-(dy * dy + dx * dx) / (2.0 * bs * bs)).exp();
+                        }
+                        v += 0.15 * (stripe_freq * (y as f32 + x as f32) + stripe_phase).sin();
+                        img[(ci * h + y) * w + x] = v * ch_gain;
+                    }
+                }
+            }
+            bank.push(img);
+        }
+        banks.push(bank);
+    }
+    banks
+}
+
+fn synth(
+    name: &str,
+    rng_seed: u64,
+    n: usize,
+    n_classes: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    noise: f32,
+) -> Dataset {
+    let mut rng = Pcg32::seeded(rng_seed);
+    let banks = gen_templates(&mut rng, n_classes, 4, c, h, w);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let d = c * h * w;
+    for _ in 0..n {
+        let cls = rng.below(n_classes as u32) as usize;
+        let t = &banks[cls][rng.below(4) as usize];
+        let mut img = vec![0.0f32; d];
+        // random +-2 pixel translation
+        let sy = rng.below(5) as isize - 2;
+        let sx = rng.below(5) as isize - 2;
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    let yy = y as isize + sy;
+                    let xx = x as isize + sx;
+                    let v = if yy >= 0 && (yy as usize) < h && xx >= 0 && (xx as usize) < w
+                    {
+                        t[(ci * h + yy as usize) * w + xx as usize]
+                    } else {
+                        0.0
+                    };
+                    img[(ci * h + y) * w + x] = v + noise * rng.normal();
+                }
+            }
+        }
+        // normalize roughly to zero mean unit-ish scale
+        let mean: f32 = img.iter().sum::<f32>() / d as f32;
+        for v in img.iter_mut() {
+            *v = (*v - mean) * 2.0;
+        }
+        images.push(img);
+        labels.push(cls as i32);
+    }
+    Dataset {
+        name: name.to_string(),
+        input_shape: vec![c, h, w],
+        n_classes,
+        images,
+        labels,
+    }
+}
+
+/// FASHION-like: 10-class (1, 28, 28) grayscale.
+pub fn fashion_like(n: usize, seed: u64) -> Dataset {
+    synth("fashion-like", seed, n, 10, 1, 28, 28, 0.25)
+}
+
+/// CIFAR-like: 10-class (3, 32, 32) RGB.
+pub fn cifar_like(n: usize, seed: u64) -> Dataset {
+    synth("cifar-like", seed, n, 10, 3, 32, 32, 0.30)
+}
+
+/// A batch as a Tensor (batch, C*H*W) — handy for host-side engines.
+pub fn batch_tensor(xs: &[f32], batch: usize) -> Tensor {
+    let d = xs.len() / batch;
+    Tensor::new(&[batch, d], xs.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = fashion_like(32, 9);
+        let b = fashion_like(32, 9);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = fashion_like(32, 10);
+        assert_ne!(a.images[0], c.images[0]);
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let d = cifar_like(64, 1);
+        assert_eq!(d.input_shape, vec![3, 32, 32]);
+        assert_eq!(d.images[0].len(), 3 * 32 * 32);
+        assert!(d.labels.iter().all(|&l| (0..10).contains(&l)));
+        // all classes present in 64 draws (w.h.p.)
+        let mut seen = [false; 10];
+        for &l in &d.labels {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-centroid classification on raw pixels must beat chance
+        // by a lot — otherwise the sparsity-accuracy benches measure noise.
+        let d = fashion_like(600, 3);
+        let (train, test) = d.split(0.25);
+        let dim = train.input_elems();
+        let mut centroids = vec![vec![0.0f64; dim]; 10];
+        let mut counts = [0usize; 10];
+        for (img, &l) in train.images.iter().zip(&train.labels) {
+            counts[l as usize] += 1;
+            for (a, &b) in centroids[l as usize].iter_mut().zip(img) {
+                *a += b as f64;
+            }
+        }
+        for (cvec, &n) in centroids.iter_mut().zip(&counts) {
+            for v in cvec.iter_mut() {
+                *v /= n.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for (img, &l) in test.images.iter().zip(&test.labels) {
+            let mut best = (f64::INFINITY, 0usize);
+            for (ci, cvec) in centroids.iter().enumerate() {
+                let dist: f64 = img
+                    .iter()
+                    .zip(cvec)
+                    .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, ci);
+                }
+            }
+            if best.1 == l as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.5, "nearest-centroid acc only {acc}");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = fashion_like(100, 4);
+        let (tr, te) = d.split(0.2);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+
+    #[test]
+    fn batch_iter_wraps_and_reshuffles() {
+        let d = fashion_like(10, 5);
+        let mut it = BatchIter::new(&d, 4, 0);
+        let mut labels_seen = Vec::new();
+        for _ in 0..5 {
+            let (xs, ys) = it.next_batch();
+            assert_eq!(xs.len(), 4 * d.input_elems());
+            assert_eq!(ys.len(), 4);
+            labels_seen.extend(ys);
+        }
+        assert_eq!(labels_seen.len(), 20); // wrapped past 10 twice
+    }
+
+    #[test]
+    fn eval_batches_cover_all_once() {
+        let d = fashion_like(10, 6);
+        let bs = BatchIter::eval_batches(&d, 4);
+        assert_eq!(bs.len(), 3);
+        let total_valid: usize = bs.iter().map(|b| b.2).sum();
+        assert_eq!(total_valid, 10);
+        assert_eq!(bs[2].2, 2); // last partial
+        assert_eq!(bs[2].1.len(), 4); // padded to full batch
+    }
+}

@@ -1,0 +1,13 @@
+//! Host-side dimension-reduction search (paper §2.1-2.2, Appendix B).
+//!
+//! This is the rust mirror of the L1/L2 DRS used for:
+//!   * the CPU sparse execution engine (Fig 8) — here the vector-wise
+//!     column skip actually pays off in wall-clock;
+//!   * unit/property tests that cross-check the python semantics;
+//!   * the selection-strategy baselines (oracle / random, Fig 5c).
+
+pub mod projection;
+pub mod topk;
+
+pub use projection::{project_rows, project_weights, ternary_r};
+pub use topk::{select_mask, shared_threshold, SelectionStrategy};

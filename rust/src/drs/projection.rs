@@ -1,0 +1,208 @@
+//! Sparse ternary random projection (paper eq. 5-6), host side.
+//!
+//! R entries are {-sqrt(s), 0, +sqrt(s)} with P(+-) = 1/(2s); with s = 3
+//! two thirds of R is zero, so the projection is genuinely
+//! multiplication-free: we precompute, per output dimension, the index
+//! lists of + and - entries and only add/subtract — exactly the
+//! "negligible overhead" argument of §2.2.
+
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Sample a ternary (k, d) projection matrix.
+pub fn ternary_r(rng: &mut Pcg32, k: usize, d: usize, s: u32) -> Tensor {
+    Tensor::new(&[k, d], rng.ternary_vec(k * d, s))
+}
+
+/// Index-list form of a ternary R: per projected dim, which input dims to
+/// add and which to subtract (the multiplication-free fast path).
+#[derive(Clone, Debug)]
+pub struct TernaryIndex {
+    pub k: usize,
+    pub d: usize,
+    pub scale: f32, // sqrt(s) / sqrt(k)
+    pub plus: Vec<Vec<u32>>,
+    pub minus: Vec<Vec<u32>>,
+}
+
+impl TernaryIndex {
+    pub fn from_dense(r: &Tensor) -> Self {
+        let (k, d) = (r.shape()[0], r.shape()[1]);
+        let mut plus = vec![Vec::new(); k];
+        let mut minus = vec![Vec::new(); k];
+        let mut mag = 0.0f32;
+        for p in 0..k {
+            for q in 0..d {
+                let v = r.at2(p, q);
+                if v > 0.0 {
+                    plus[p].push(q as u32);
+                    mag = v;
+                } else if v < 0.0 {
+                    minus[p].push(q as u32);
+                    mag = -v;
+                }
+            }
+        }
+        TernaryIndex { k, d, scale: mag / (k as f32).sqrt(), plus, minus }
+    }
+
+    /// Project one row: y[p] = scale * (sum_plus x - sum_minus x).
+    pub fn project_row(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(out.len(), self.k);
+        for p in 0..self.k {
+            let mut acc = 0.0f32;
+            for &q in &self.plus[p] {
+                acc += x[q as usize];
+            }
+            for &q in &self.minus[p] {
+                acc -= x[q as usize];
+            }
+            out[p] = acc * self.scale;
+        }
+    }
+
+    /// Adds per projected row (the DRS overhead metric: no multiplies).
+    pub fn adds_per_row(&self) -> usize {
+        self.plus.iter().map(|v| v.len()).sum::<usize>()
+            + self.minus.iter().map(|v| v.len()).sum::<usize>()
+    }
+}
+
+/// Project rows of x (m, d) -> (m, k): f(X) = X R^T / sqrt(k).
+pub fn project_rows(x: &Tensor, r: &Tensor) -> Tensor {
+    let idx = TernaryIndex::from_dense(r);
+    let m = x.shape()[0];
+    let mut out = vec![0.0f32; m * idx.k];
+    for i in 0..m {
+        let row = &x.data()[i * idx.d..(i + 1) * idx.d];
+        idx.project_row(row, &mut out[i * idx.k..(i + 1) * idx.k]);
+    }
+    Tensor::new(&[m, idx.k], out)
+}
+
+/// Project weights: f(W) = R W / sqrt(k).  w: (d, n) -> (k, n).
+pub fn project_weights(r: &Tensor, w: &Tensor) -> Tensor {
+    let idx = TernaryIndex::from_dense(r);
+    let (d, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(d, idx.d, "w rows {d} != r cols {}", idx.d);
+    let mut out = vec![0.0f32; idx.k * n];
+    let wd = w.data();
+    for p in 0..idx.k {
+        let orow = &mut out[p * n..(p + 1) * n];
+        for &q in &idx.plus[p] {
+            let wrow = &wd[q as usize * n..(q as usize + 1) * n];
+            for j in 0..n {
+                orow[j] += wrow[j];
+            }
+        }
+        for &q in &idx.minus[p] {
+            let wrow = &wd[q as usize * n..(q as usize + 1) * n];
+            for j in 0..n {
+                orow[j] -= wrow[j];
+            }
+        }
+        for v in orow.iter_mut() {
+            *v *= idx.scale;
+        }
+    }
+    Tensor::new(&[idx.k, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{matmul_naive, transpose};
+
+    fn dense_project_rows(x: &Tensor, r: &Tensor) -> Tensor {
+        let k = r.shape()[0] as f32;
+        let mut y = matmul_naive(x, &transpose(r));
+        for v in y.data_mut() {
+            *v /= k.sqrt();
+        }
+        y
+    }
+
+    #[test]
+    fn index_form_matches_dense_matmul() {
+        let mut rng = Pcg32::seeded(31);
+        let r = ternary_r(&mut rng, 16, 64, 3);
+        let x = Tensor::new(&[8, 64], rng.normal_vec(8 * 64, 1.0));
+        let got = project_rows(&x, &r);
+        let want = dense_project_rows(&x, &r);
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn project_weights_matches_dense() {
+        let mut rng = Pcg32::seeded(32);
+        let r = ternary_r(&mut rng, 12, 48, 3);
+        let w = Tensor::new(&[48, 20], rng.normal_vec(48 * 20, 1.0));
+        let got = project_weights(&r, &w);
+        let k = 12f32;
+        let mut want = matmul_naive(&r, &w);
+        for v in want.data_mut() {
+            *v /= k.sqrt();
+        }
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn norm_preservation_jll() {
+        // ||f(z)||^2 ~ ||z||^2 (paper eq. 3) statistically.
+        let mut rng = Pcg32::seeded(33);
+        let d = 2048;
+        let k = 256;
+        let r = ternary_r(&mut rng, k, d, 3);
+        let mut errs = Vec::new();
+        for _ in 0..20 {
+            let x = Tensor::new(&[1, d], rng.normal_vec(d, 1.0));
+            let fx = project_rows(&x, &r);
+            let n0: f32 = x.data().iter().map(|v| v * v).sum();
+            let n1: f32 = fx.data().iter().map(|v| v * v).sum();
+            errs.push(((n1 - n0) / n0).abs());
+        }
+        let mean = errs.iter().sum::<f32>() / errs.len() as f32;
+        assert!(mean < 0.12, "norm preservation error {mean}");
+    }
+
+    #[test]
+    fn inner_product_preservation() {
+        // |<f(x), f(w)> - <x, w>| small (paper eq. 4 / Fig 10c).
+        let mut rng = Pcg32::seeded(34);
+        let d = 1152;
+        let k = 232; // eps = 0.5 for n_K = 128 per Table 1
+        let r = ternary_r(&mut rng, k, d, 3);
+        let mut errs = Vec::new();
+        for _ in 0..30 {
+            let x = Tensor::new(&[1, d], rng.normal_vec(d, (1.0 / d as f32).sqrt()));
+            let w = Tensor::new(&[1, d], rng.normal_vec(d, (1.0 / d as f32).sqrt()));
+            let hi: f32 = x.data().iter().zip(w.data()).map(|(a, b)| a * b).sum();
+            let fx = project_rows(&x, &r);
+            let fw = project_rows(&w, &r);
+            let lo: f32 = fx.data().iter().zip(fw.data()).map(|(a, b)| a * b).sum();
+            errs.push((hi - lo).abs());
+        }
+        let mean = errs.iter().sum::<f32>() / errs.len() as f32;
+        assert!(mean < 0.1, "inner product error {mean}");
+    }
+
+    #[test]
+    fn adds_per_row_is_sparse() {
+        let mut rng = Pcg32::seeded(35);
+        let r = ternary_r(&mut rng, 100, 900, 3);
+        let idx = TernaryIndex::from_dense(&r);
+        let adds = idx.adds_per_row();
+        let frac = adds as f64 / (100.0 * 900.0);
+        assert!((frac - 1.0 / 3.0).abs() < 0.03, "nonzero frac {frac}");
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        // A projected dim with no nonzeros yields exactly 0.
+        let r = Tensor::zeros(&[2, 4]);
+        let x = Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = project_rows(&x, &r);
+        assert_eq!(y.data(), &[0.0, 0.0]);
+    }
+}

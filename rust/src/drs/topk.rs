@@ -1,0 +1,172 @@
+//! Top-k selection with inter-sample threshold sharing (Appendix B,
+//! Fig 9) and the three selection strategies of Fig 5(c).
+
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Graph-selection strategy (Fig 5c).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionStrategy {
+    /// Dimension-reduction search: select on projected virtual activations.
+    Drs,
+    /// Oracle: select on the exact pre-activations (upper bound).
+    Oracle,
+    /// Random selection (lower bound).
+    Random,
+}
+
+impl SelectionStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "drs" => Some(Self::Drs),
+            "oracle" => Some(Self::Oracle),
+            "random" => Some(Self::Random),
+            _ => None,
+        }
+    }
+}
+
+/// The top-k threshold of sample 0, shared across the batch.
+///
+/// `virt` is (batch, width); gamma in [0, 1) is the target sparsity.
+/// Returns -inf for gamma == 0 so every neuron of every sample is kept
+/// (mirrors `compile/layers.py::shared_threshold`).
+pub fn shared_threshold(virt: &Tensor, gamma: f32) -> f32 {
+    assert!((0.0..1.0).contains(&gamma), "gamma out of range: {gamma}");
+    let width = virt.shape()[1];
+    let drop = ((gamma * width as f32).floor() as usize).min(width - 1);
+    if drop == 0 {
+        return f32::NEG_INFINITY;
+    }
+    let mut row0: Vec<f32> = virt.data()[..width].to_vec();
+    // select_nth_unstable gives the ascending-order element at `drop` in
+    // O(n) — cheaper than the full sort the HLO path uses.
+    let (_, nth, _) = row0.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
+    *nth
+}
+
+/// Binary selection mask for a (batch, width) virtual-activation matrix.
+pub fn select_mask(
+    virt: &Tensor,
+    gamma: f32,
+    strategy: SelectionStrategy,
+    rng: &mut Pcg32,
+) -> Tensor {
+    let (batch, width) = (virt.shape()[0], virt.shape()[1]);
+    match strategy {
+        SelectionStrategy::Drs | SelectionStrategy::Oracle => {
+            let t = shared_threshold(virt, gamma);
+            Tensor::from_fn(&[batch, width], |i| {
+                if virt.data()[i] >= t {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+        }
+        SelectionStrategy::Random => {
+            // keep ceil((1-gamma)*width) random neurons per sample
+            let keep = width - ((gamma * width as f32).floor() as usize).min(width - 1);
+            let mut mask = vec![0.0f32; batch * width];
+            let mut idx: Vec<usize> = (0..width).collect();
+            for b in 0..batch {
+                rng.shuffle(&mut idx);
+                for &j in idx.iter().take(keep) {
+                    mask[b * width + j] = 1.0;
+                }
+            }
+            Tensor::new(&[batch, width], mask)
+        }
+    }
+}
+
+/// Mask density (fraction of ones) — the measured 1-gamma.
+pub fn mask_density(mask: &Tensor) -> f64 {
+    if mask.is_empty() {
+        return 0.0;
+    }
+    mask.data().iter().filter(|&&v| v != 0.0).count() as f64 / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    #[test]
+    fn gamma_zero_keeps_everything() {
+        let mut rng = Pcg32::seeded(41);
+        let v = randn(&mut rng, &[8, 100]);
+        let m = select_mask(&v, 0.0, SelectionStrategy::Drs, &mut rng);
+        assert_eq!(mask_density(&m), 1.0);
+    }
+
+    #[test]
+    fn sample0_density_is_exact() {
+        let mut rng = Pcg32::seeded(42);
+        let v = randn(&mut rng, &[4, 1000]);
+        for &g in &[0.3f32, 0.5, 0.8, 0.9] {
+            let m = select_mask(&v, g, SelectionStrategy::Drs, &mut rng);
+            let d0 = m.data()[..1000].iter().sum::<f32>() / 1000.0;
+            let want = 1.0 - (g * 1000.0).floor() / 1000.0;
+            assert!((d0 - want).abs() < 1e-6, "gamma {g}: {d0} vs {want}");
+        }
+    }
+
+    #[test]
+    fn shared_threshold_matches_sort() {
+        let mut rng = Pcg32::seeded(43);
+        let v = randn(&mut rng, &[2, 257]);
+        let g = 0.7;
+        let t = shared_threshold(&v, g);
+        let mut row0: Vec<f32> = v.data()[..257].to_vec();
+        row0.sort_by(|a, b| a.total_cmp(b));
+        let drop = (g * 257.0).floor() as usize;
+        assert_eq!(t, row0[drop]);
+    }
+
+    #[test]
+    fn other_samples_share_threshold() {
+        let mut rng = Pcg32::seeded(44);
+        let v = randn(&mut rng, &[64, 500]);
+        let m = select_mask(&v, 0.6, SelectionStrategy::Drs, &mut rng);
+        let avg = mask_density(&m);
+        assert!((avg - 0.4).abs() < 0.05, "avg density {avg}");
+    }
+
+    #[test]
+    fn random_strategy_exact_per_sample() {
+        let mut rng = Pcg32::seeded(45);
+        let v = randn(&mut rng, &[16, 200]);
+        let m = select_mask(&v, 0.75, SelectionStrategy::Random, &mut rng);
+        for b in 0..16 {
+            let kept: f32 = m.data()[b * 200..(b + 1) * 200].iter().sum();
+            assert_eq!(kept, 50.0);
+        }
+    }
+
+    #[test]
+    fn oracle_keeps_true_top() {
+        let v = Tensor::new(&[1, 4], vec![0.1, 5.0, -1.0, 3.0]);
+        let m = select_mask(&v, 0.5, SelectionStrategy::Oracle, &mut Pcg32::seeded(1));
+        assert_eq!(m.data(), &[0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(SelectionStrategy::parse("drs"), Some(SelectionStrategy::Drs));
+        assert_eq!(SelectionStrategy::parse("oracle"), Some(SelectionStrategy::Oracle));
+        assert_eq!(SelectionStrategy::parse("nope"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gamma_one_panics() {
+        let v = Tensor::zeros(&[1, 4]);
+        shared_threshold(&v, 1.0);
+    }
+}

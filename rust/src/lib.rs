@@ -1,0 +1,54 @@
+//! # DSG — Dynamic Sparse Graph for Efficient Deep Learning
+//!
+//! Rust + JAX + Pallas reproduction of Liu et al., ICLR 2019.
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — training coordinator, data pipeline, projected-
+//!   weight refresh scheduling, metrics, sparse CPU execution engine,
+//!   ZVC codec, memory/compute cost models, CLI.
+//! * **L2 (python/compile)** — DSG model zoo + Algorithm-1 train step in
+//!   JAX, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (projection,
+//!   threshold masking, masked matmul) inside the same HLO.
+//!
+//! Python never runs on the request path: the `runtime` module loads the
+//! HLO artifacts through PJRT (`xla` crate) and the `coordinator` drives
+//! training/inference purely from rust.
+
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod datasets;
+pub mod drs;
+pub mod memmodel;
+pub mod metrics;
+pub mod native;
+pub mod runtime;
+pub mod serve;
+pub mod sparse;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+pub mod zvc;
+
+pub use tensor::Tensor;
+pub use util::{Json, Pcg32};
+
+/// Default artifacts directory (overridable with `DSG_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("DSG_ARTIFACTS") {
+        return d.into();
+    }
+    // look upward from cwd so examples/tests work from any subdir
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("index.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

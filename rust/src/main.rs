@@ -1,0 +1,353 @@
+//! `dsg` — the DSG launcher.
+//!
+//! Subcommands:
+//!   train     train a model variant with the DSG coordinator
+//!   eval      evaluate a checkpoint
+//!   info      inspect artifacts / variants / cost model
+//!   memory    representational-cost report (Fig 6)
+//!   compute   computational-cost report (Fig 7 / Table 1)
+//!   speed     CPU sparse-engine layer timings (Fig 8a)
+//!
+//! Flags use `--key value` (or `--key=value`); run `dsg help` for usage.
+
+use anyhow::{bail, Context, Result};
+use dsg::config::{GammaSchedule, RunConfig};
+use dsg::coordinator::Trainer;
+use dsg::runtime::{Meta, Runtime};
+use dsg::{costmodel, datasets, memmodel, sparse};
+
+/// Tiny argument parser: subcommand + `--key value` flags.
+struct Args {
+    cmd: String,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a:?} (flags are --key value)");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+            }
+            i += 1;
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_f32(&self, key: &str) -> Result<Option<f32>> {
+        self.get(key)
+            .map(|v| v.parse::<f32>().with_context(|| format!("--{key} {v:?}")))
+            .transpose()
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} {v:?}")))
+            .transpose()
+    }
+}
+
+fn usage() {
+    println!(
+        "dsg — Dynamic Sparse Graph (ICLR'19) coordinator
+
+USAGE: dsg <command> [--flags]
+
+COMMANDS:
+  train    --model NAME [--gamma G] [--eps-variant] [--steps N] [--lr F]
+           [--warmup N] [--refresh N] [--seed N] [--config FILE]
+           [--csv FILE] [--checkpoint FILE]
+  eval     --model NAME --checkpoint FILE [--gamma G]
+  info     [--model NAME]         artifact inventory / variant detail
+  memory   [--gamma G]            Fig 6 representational-cost report
+  compute  [--gamma G] [--eps E]  Fig 7 / Table 1 computational report
+  speed    [--gamma G] [--reps N] Fig 8a sparse-engine timings
+  sweep    --models a,b --gammas 0,0.5,0.9 [--seeds 1,2] [--steps N]
+           [--csv FILE] [--json FILE]   grid of training runs
+  help
+
+Artifacts are read from ./artifacts (override with DSG_ARTIFACTS).
+Run `make artifacts` first."
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("mlp").to_string();
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::preset_for_model(&model),
+    };
+    cfg.model = model;
+    if let Some(g) = args.get_f32("gamma")? {
+        cfg.gamma = match args.get_usize("warmup")? {
+            Some(w) => GammaSchedule::Warmup { target: g, warmup: w },
+            None => GammaSchedule::Constant(g),
+        };
+    }
+    if let Some(v) = args.get_usize("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = args.get_f32("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = args.get_usize("refresh")? {
+        cfg.refresh_every = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    cfg.validate()?;
+
+    let dir = dsg::artifacts_dir();
+    let rt = Runtime::cpu()?;
+    let meta = Meta::load(&dir, &cfg.model)?;
+    println!(
+        "training {} ({} params, batch {}, strategy {}) on {} for {} steps, gamma {:?}",
+        meta.name,
+        meta.param_elems(),
+        meta.batch,
+        meta.strategy,
+        cfg.dataset,
+        cfg.steps,
+        cfg.gamma
+    );
+    let full = if cfg.dataset == "fashion" {
+        datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed)
+    } else {
+        datasets::cifar_like(cfg.train_size + cfg.test_size, cfg.seed)
+    };
+    let (train, test) = full.split(cfg.test_size as f64 / (cfg.train_size + cfg.test_size) as f64);
+
+    let mut trainer = Trainer::new(&rt, meta, cfg.seed)?;
+    let acc = trainer.train(&cfg, &train, &test)?;
+    println!(
+        "done: final eval acc {:.3}, last loss {:.4}, {:.1}s total step time",
+        acc,
+        trainer.history.last_loss().unwrap_or(f32::NAN),
+        trainer.history.total_secs()
+    );
+    if let Some(csv) = args.get("csv") {
+        trainer.history.write_csv(std::path::Path::new(csv))?;
+        println!("wrote history to {csv}");
+    }
+    if let Some(ck) = args.get("checkpoint") {
+        dsg::coordinator::checkpoint::save(std::path::Path::new(ck), &trainer.state)?;
+        println!("wrote checkpoint to {ck}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let ck = args.get("checkpoint").context("--checkpoint required")?;
+    let gamma = args.get_f32("gamma")?.unwrap_or(0.5);
+    let dir = dsg::artifacts_dir();
+    let rt = Runtime::cpu()?;
+    let meta = Meta::load(&dir, model)?;
+    let cfg = RunConfig::preset_for_model(model);
+    let full = if cfg.dataset == "fashion" {
+        datasets::fashion_like(cfg.test_size, cfg.seed + 1)
+    } else {
+        datasets::cifar_like(cfg.test_size, cfg.seed + 1)
+    };
+    let mut trainer = Trainer::new(&rt, meta, cfg.seed)?;
+    trainer.state = dsg::coordinator::checkpoint::load(std::path::Path::new(ck))?;
+    let acc = trainer.evaluate(&full, gamma)?;
+    println!("{model} @ gamma {gamma}: eval acc {acc:.3}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = dsg::artifacts_dir();
+    match args.get("model") {
+        None => {
+            let variants = Meta::list_variants(&dir)?;
+            println!("artifacts dir: {dir:?}\nvariants ({}):", variants.len());
+            for v in variants {
+                let m = Meta::load(&dir, &v)?;
+                println!(
+                    "  {:16} batch {:3}  params {:>9}  dsg layers {:2}  strategy {}",
+                    m.name,
+                    m.batch,
+                    m.param_elems(),
+                    m.counts.dsg,
+                    m.strategy
+                );
+            }
+        }
+        Some(name) => {
+            let m = Meta::load(&dir, name)?;
+            println!("{}: base {}, batch {}, classes {}", m.name, m.base_model, m.batch, m.classes);
+            println!("  opts: eps {} strategy {} double_mask {} bn {}", m.eps, m.strategy, m.double_mask, m.use_bn);
+            println!("  files: {:?}", m.files.keys().collect::<Vec<_>>());
+            println!("  state leaves: {} ({} params elems)", m.state.len(), m.param_elems());
+            for l in &m.dsg_layers {
+                println!(
+                    "  dsg {:10} d_in {:5} -> k {:4} ({}x reduction), n_out {}",
+                    l.path,
+                    l.d_in,
+                    l.k,
+                    l.d_in / l.k.max(1),
+                    l.n_out
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let gamma = args.get_f32("gamma")?.unwrap_or(0.8) as f64;
+    let s = memmodel::effective_sparsity(gamma, 0.5);
+    println!("Fig 6 memory report @ mask sparsity {gamma} (activation sparsity {s:.2})\n");
+    println!(
+        "{:<10} {:>6} {:>12} {:>12} {:>12} {:>8} {:>8} {:>8}",
+        "model", "batch", "dense-train", "dsg-train", "weights", "train-x", "act-x", "infer-x"
+    );
+    for net in costmodel::shapes::fig6_nets() {
+        let m = memmodel::memory(&net, s);
+        println!(
+            "{:<10} {:>6} {:>12} {:>12} {:>12} {:>7.2}x {:>7.2}x {:>7.2}x",
+            net.name,
+            net.batch,
+            dsg::util::human_bytes(m.train_dense()),
+            dsg::util::human_bytes(m.train_dsg()),
+            dsg::util::human_bytes(m.weights),
+            m.train_reduction(),
+            m.act_reduction(),
+            m.infer_reduction()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compute(args: &Args) -> Result<()> {
+    let gamma = args.get_f32("gamma")?.unwrap_or(0.8) as f64;
+    let eps = args.get_f32("eps")?.unwrap_or(0.5) as f64;
+    println!("Fig 7 compute report @ gamma {gamma}, eps {eps}\n");
+    println!(
+        "{:<10} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8} {:>10}",
+        "model", "train-GM", "dsgtr-GM", "train-x", "infer-GM", "dsginf-GM", "infer-x", "drs-ovh"
+    );
+    for net in costmodel::shapes::fig6_nets() {
+        let m = costmodel::macs(&net, gamma, eps);
+        println!(
+            "{:<10} {:>10.2} {:>10.2} {:>7.2}x {:>10.2} {:>10.2} {:>7.2}x {:>9.1}%",
+            net.name,
+            costmodel::gmacs(m.train_dense()),
+            costmodel::gmacs(m.train_dsg()),
+            m.train_reduction(),
+            costmodel::gmacs(m.fwd_dense),
+            costmodel::gmacs(m.fwd_dsg),
+            m.infer_reduction(),
+            100.0 * m.search_frac_infer()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_speed(args: &Args) -> Result<()> {
+    let gamma = args.get_f32("gamma")?.unwrap_or(0.8);
+    let reps = args.get_usize("reps")?.unwrap_or(3);
+    println!("Fig 8a layer timings @ gamma {gamma} ({reps} reps, median)\n");
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>9} {:>9} {:>8}",
+        "layer", "GEMM", "VMM", "DSG", "vs-VMM", "vs-GEMM", "density"
+    );
+    for &shape in sparse::engine::VGG8_LAYERS {
+        let t = sparse::engine::bench_layer(shape, gamma, 0.5, reps, 7);
+        println!(
+            "{:<8} {:>10} {:>10} {:>10} {:>8.2}x {:>8.2}x {:>8.2}",
+            shape.name,
+            dsg::metrics::fmt_secs(t.gemm_secs),
+            dsg::metrics::fmt_secs(t.vmm_secs),
+            dsg::metrics::fmt_secs(t.dsg_secs),
+            t.speedup_vs_vmm(),
+            t.speedup_vs_gemm(),
+            t.density
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let parse_list = |s: &str| -> Vec<String> {
+        s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+    };
+    let variants = parse_list(args.get("models").unwrap_or("mlp"));
+    let gammas: Vec<f32> = parse_list(args.get("gammas").unwrap_or("0,0.5,0.8"))
+        .iter()
+        .map(|g| g.parse().with_context(|| format!("gamma {g:?}")))
+        .collect::<Result<_>>()?;
+    let seeds: Vec<u64> = parse_list(args.get("seeds").unwrap_or("7"))
+        .iter()
+        .map(|s| s.parse().with_context(|| format!("seed {s:?}")))
+        .collect::<Result<_>>()?;
+    let steps = args.get_usize("steps")?.unwrap_or(120);
+    let sweep = dsg::coordinator::sweep::Sweep { variants, gammas, seeds, steps };
+    println!("sweep: {} runs of {steps} steps", sweep.points().len());
+    let rt = Runtime::cpu()?;
+    let results = sweep.run(&rt, true)?;
+    println!("\n{:<16} {:>8} {:>10} {:>8}", "variant", "gamma", "mean-acc", "std");
+    for (v, g, mean, std) in dsg::coordinator::sweep::aggregate(&results) {
+        println!("{v:<16} {g:>8.2} {mean:>10.3} {std:>8.3}");
+    }
+    if let Some(p) = args.get("csv") {
+        dsg::coordinator::sweep::write_csv(std::path::Path::new(p), &results)?;
+        println!("wrote {p}");
+    }
+    if let Some(p) = args.get("json") {
+        std::fs::write(p, dsg::coordinator::sweep::to_json(&results).to_string())?;
+        println!("wrote {p}");
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(&args),
+        "memory" => cmd_memory(&args),
+        "compute" => cmd_compute(&args),
+        "speed" => cmd_speed(&args),
+        "sweep" => cmd_sweep(&args),
+        "help" | "-h" | "--help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,198 @@
+//! Representational-cost (memory) model — §3.3, Fig 6.
+//!
+//! Training footprint = weights + stashed activations of EVERY layer
+//! (needed for backward) + the DSG selection masks (1 bit/element).
+//! Inference footprint = weights + the largest single layer activation.
+//!
+//! DSG stores activations ZVC-compressed at the run's measured sparsity;
+//! the mask overhead is what the paper reports as "<2%" (training) and
+//! what can offset the gains on weight-dominated nets in inference
+//! (ResNet152 at 50%, §3.3).
+
+use crate::costmodel::shapes::NetShape;
+use crate::zvc;
+
+pub const F32: usize = 4;
+
+/// Byte accounting for one network at one activation sparsity.
+#[derive(Clone, Copy, Debug)]
+pub struct MemBreakdown {
+    pub weights: u64,
+    pub acts_dense: u64,
+    pub acts_zvc: u64,
+    pub masks: u64,
+    pub infer_act_dense: u64,
+    pub infer_act_zvc: u64,
+    pub infer_mask: u64,
+}
+
+impl MemBreakdown {
+    pub fn train_dense(&self) -> u64 {
+        self.weights + self.acts_dense
+    }
+    pub fn train_dsg(&self) -> u64 {
+        self.weights + self.acts_zvc + self.masks
+    }
+    pub fn train_reduction(&self) -> f64 {
+        self.train_dense() as f64 / self.train_dsg() as f64
+    }
+    /// Activation-only reduction (the paper's "up to 7.1x").
+    pub fn act_reduction(&self) -> f64 {
+        self.acts_dense as f64 / (self.acts_zvc + self.masks) as f64
+    }
+    pub fn infer_dense(&self) -> u64 {
+        self.weights + self.infer_act_dense
+    }
+    pub fn infer_dsg(&self) -> u64 {
+        self.weights + self.infer_act_zvc + self.infer_mask
+    }
+    pub fn infer_reduction(&self) -> f64 {
+        self.infer_dense() as f64 / self.infer_dsg() as f64
+    }
+    /// Mask overhead relative to the DENSE training footprint (the
+    /// paper's "minimal (<2%)" accounting; ours is slightly more
+    /// conservative because we charge the full 1-bit bitmap per maskable
+    /// activation element rather than sharing it with the ZVC bitmask).
+    pub fn mask_frac(&self) -> f64 {
+        self.masks as f64 / self.train_dense() as f64
+    }
+}
+
+/// Compute the memory breakdown.
+///
+/// `act_sparsity` is the measured zero fraction of the (double-masked +
+/// ReLU) activations; with DSG at sparsity gamma this is >= gamma (ReLU
+/// zeros part of the kept set too).
+pub fn memory(net: &NetShape, act_sparsity: f64) -> MemBreakdown {
+    let b = net.batch as u64;
+    let weights = net.total_weights() * F32 as u64;
+    let acts_elems_batch = net.total_acts_per_sample() * b;
+    let acts_dense = acts_elems_batch * F32 as u64;
+    let acts_zvc = net
+        .layers
+        .iter()
+        .map(|l| zvc::zvc_bytes(l.act_elems() * net.batch, act_sparsity) as u64)
+        .sum();
+    // masks: 1 bit per maskable activation element
+    let masks: u64 = net
+        .layers
+        .iter()
+        .filter(|l| l.maskable)
+        .map(|l| ((l.act_elems() * net.batch).div_ceil(8)) as u64)
+        .sum();
+    let max_l = net
+        .layers
+        .iter()
+        .max_by_key(|l| l.act_elems())
+        .expect("net has layers");
+    let infer_act_dense = (max_l.act_elems() * net.batch * F32) as u64;
+    let infer_act_zvc = zvc::zvc_bytes(max_l.act_elems() * net.batch, act_sparsity) as u64;
+    let infer_mask = if max_l.maskable {
+        ((max_l.act_elems() * net.batch).div_ceil(8)) as u64
+    } else {
+        0
+    };
+    MemBreakdown {
+        weights,
+        acts_dense,
+        acts_zvc,
+        masks,
+        infer_act_dense,
+        infer_act_zvc,
+        infer_mask,
+    }
+}
+
+/// Effective activation sparsity for a DSG run at mask sparsity `gamma`:
+/// the kept fraction still passes ReLU, which zeros about half of a
+/// zero-mean pre-activation distribution.  Empirically (Fig 1f) the paper
+/// sees >80% zeros even untrained; we model sparsity = gamma + relu_zero
+/// * (1 - gamma) with relu_zero ~= 0.5 for the dense baseline's own
+/// sparsity and use gamma directly as the conservative DSG floor.
+pub fn effective_sparsity(gamma: f64, relu_zero: f64) -> f64 {
+    gamma + relu_zero * (1.0 - gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::shapes::{fig6_nets, resnet152, vgg8};
+
+    #[test]
+    fn fig6_training_reduction_shape() {
+        // Paper: avg 1.7x / 3.2x / 4.2x at 50/80/90% sparsity.  The Fig 6
+        // x-axis is the *activation* sparsity the run achieves.
+        let want = [(0.5, 1.7), (0.8, 3.2), (0.9, 4.2)];
+        for (sparsity, target) in want {
+            let mut rs = Vec::new();
+            for net in fig6_nets() {
+                rs.push(memory(&net, sparsity).train_reduction());
+            }
+            let avg = rs.iter().sum::<f64>() / rs.len() as f64;
+            assert!(
+                (avg - target).abs() / target < 0.40,
+                "sparsity {sparsity}: avg train mem reduction {avg:.2} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn activation_only_reduction_up_to_7x() {
+        let net = vgg8(128);
+        let m = memory(&net, effective_sparsity(0.9, 0.5));
+        assert!(m.act_reduction() > 5.0, "{:.2}", m.act_reduction());
+        assert!(m.act_reduction() < 9.0, "{:.2}", m.act_reduction());
+    }
+
+    #[test]
+    fn mask_overhead_is_minimal() {
+        // Paper: "<2%" vs the dense footprint; our conservative 1-bit-
+        // per-element accounting lands just above, bounded at 4%.
+        for net in fig6_nets() {
+            let m = memory(&net, 0.8);
+            assert!(m.mask_frac() < 0.04, "{}: {:.3}", net.name, m.mask_frac());
+        }
+    }
+
+    #[test]
+    fn resnet152_inference_mask_can_offset() {
+        // §3.3: on ResNet152 at 50% the mask overhead ~offsets the
+        // compression benefit in inference (weights dominate).
+        let net = resnet152(32);
+        let m = memory(&net, effective_sparsity(0.5, 0.5));
+        assert!(m.infer_reduction() < 1.35, "{:.2}", m.infer_reduction());
+    }
+
+    #[test]
+    fn training_reduction_monotone() {
+        let net = vgg8(128);
+        let r: Vec<f64> = [0.5, 0.7, 0.9]
+            .iter()
+            .map(|&g| memory(&net, effective_sparsity(g, 0.5)).train_reduction())
+            .collect();
+        assert!(r.windows(2).all(|w| w[1] > w[0]), "{r:?}");
+    }
+
+    #[test]
+    fn inference_benefit_smaller_than_training() {
+        // §3.3: inference gains < training gains (weights dominate there).
+        for net in fig6_nets() {
+            let s = effective_sparsity(0.8, 0.5);
+            let m = memory(&net, s);
+            assert!(
+                m.infer_reduction() <= m.train_reduction() + 0.3,
+                "{}: infer {:.2} vs train {:.2}",
+                net.name,
+                m.infer_reduction(),
+                m.train_reduction()
+            );
+        }
+    }
+
+    #[test]
+    fn effective_sparsity_bounds() {
+        assert_eq!(effective_sparsity(0.0, 0.5), 0.5);
+        assert!((effective_sparsity(0.8, 0.5) - 0.9).abs() < 1e-9);
+        assert_eq!(effective_sparsity(1.0, 0.5), 1.0);
+    }
+}

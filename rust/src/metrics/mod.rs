@@ -1,0 +1,193 @@
+//! Run metrics: step histories, summary statistics, CSV/JSONL writers.
+
+use std::io::Write;
+
+/// One recorded training step.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub densities: Vec<f32>,
+    pub secs: f64,
+}
+
+/// Accumulating history of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<(usize, f32)>, // (step, eval accuracy)
+}
+
+impl History {
+    pub fn push(&mut self, rec: StepRecord) {
+        self.steps.push(rec);
+    }
+
+    pub fn push_eval(&mut self, step: usize, acc: f32) {
+        self.evals.push((step, acc));
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.steps.last().map(|s| s.loss)
+    }
+
+    pub fn best_eval(&self) -> Option<f32> {
+        self.evals.iter().map(|&(_, a)| a).fold(None, |m, a| {
+            Some(m.map_or(a, |m: f32| m.max(a)))
+        })
+    }
+
+    /// Mean loss over the trailing `n` steps (smoothed curve point).
+    pub fn smoothed_loss(&self, n: usize) -> Option<f32> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        Some(tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Mean mask density over the trailing n steps, per layer.
+    pub fn mean_densities(&self, n: usize) -> Vec<f32> {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return Vec::new();
+        }
+        let nl = tail[0].densities.len();
+        let mut out = vec![0.0f32; nl];
+        for s in tail {
+            for (o, d) in out.iter_mut().zip(&s.densities) {
+                *o += d;
+            }
+        }
+        for o in out.iter_mut() {
+            *o /= tail.len() as f32;
+        }
+        out
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.secs).sum()
+    }
+
+    /// Write the step history as CSV.
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,acc,secs,mean_density")?;
+        for s in &self.steps {
+            let md = if s.densities.is_empty() {
+                1.0
+            } else {
+                s.densities.iter().sum::<f32>() / s.densities.len() as f32
+            };
+            writeln!(f, "{},{},{},{},{}", s.step, s.loss, s.acc, s.secs, md)?;
+        }
+        Ok(())
+    }
+}
+
+/// Basic summary stats over a slice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize of empty slice");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median: sorted[n / 2],
+    }
+}
+
+/// Format seconds with sensible units.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32) -> StepRecord {
+        StepRecord { step, loss, acc: 0.5, densities: vec![0.4, 0.6], secs: 0.01 }
+    }
+
+    #[test]
+    fn history_accumulates() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.push(rec(i, 10.0 - i as f32));
+        }
+        assert_eq!(h.last_loss(), Some(1.0));
+        assert!((h.smoothed_loss(4).unwrap() - 2.5).abs() < 1e-5);
+        assert_eq!(h.mean_densities(5), vec![0.4, 0.6]);
+        assert!((h.total_secs() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_tracking() {
+        let mut h = History::default();
+        h.push_eval(10, 0.4);
+        h.push_eval(20, 0.7);
+        h.push_eval(30, 0.6);
+        assert_eq!(h.best_eval(), Some(0.7));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut h = History::default();
+        h.push(rec(0, 2.0));
+        h.push(rec(1, 1.5));
+        let dir = std::env::temp_dir().join("dsg_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("h.csv");
+        h.write_csv(&p).unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(txt.lines().count(), 3);
+        assert!(txt.starts_with("step,loss"));
+    }
+
+    #[test]
+    fn summary_stats() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.median, 3.0);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        summarize(&[]);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(0.0000005), "0.5us");
+        assert_eq!(fmt_secs(0.05), "50.00ms");
+        assert_eq!(fmt_secs(2.0), "2.00s");
+    }
+}

@@ -1,0 +1,578 @@
+//! Native CPU inference engine: replays a model's exact forward topology
+//! (exported in the artifact meta) through the host-side sparse engines,
+//! with REAL vector-wise column skipping.
+//!
+//! This is the bridge between the Fig 8(a) layer benchmarks and whole
+//! models: the same checkpointed weights that the HLO path evaluates can
+//! be run here, where the DSG mask actually removes work instead of
+//! multiplying by zero.  Parity with the HLO forward is asserted by
+//! `rust/tests/native_parity.rs`.
+
+use crate::coordinator::ModelState;
+use crate::drs::projection::TernaryIndex;
+use crate::drs::topk;
+use crate::runtime::{HostTensor, Meta, Unit};
+use crate::sparse;
+use crate::tensor::{ops, Tensor};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+const BN_EPS: f32 = 1e-5;
+
+/// Execution mode for the native engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Full DSG: dimension-reduction search + column skipping.
+    Dsg,
+    /// Dense baseline (no masking) — the comparison target.
+    Dense,
+}
+
+/// Per-layer execution record.
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    pub name: String,
+    pub secs: f64,
+    pub drs_secs: f64,
+    pub density: f64,
+}
+
+/// Output of one native forward pass.
+pub struct NativeOut {
+    pub logits: Tensor,
+    pub stats: Vec<LayerStat>,
+}
+
+struct ConvParams {
+    /// (K, CRS) transposed weight matrix for the skipping VMM
+    wt: Tensor,
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+}
+
+struct DenseParams {
+    /// (d_out, d_in) transposed weights
+    wt: Tensor,
+    w: Tensor,
+    bias: Option<Vec<f32>>,
+}
+
+struct BnParams {
+    scale: Vec<f32>,
+    bias: Vec<f32>,
+    mean: Vec<f32>,
+    var: Vec<f32>,
+}
+
+struct DsgSide {
+    ridx: TernaryIndex,
+    wp: Tensor,
+}
+
+/// A model prepared for native execution (weights transposed and
+/// projection index lists prebuilt once).
+pub struct NativeModel {
+    pub meta: Meta,
+    units: Vec<Unit>,
+    convs: BTreeMap<String, ConvParams>,
+    denses: BTreeMap<String, DenseParams>,
+    bns: BTreeMap<String, BnParams>,
+    dsg: Vec<DsgSide>,
+    double_mask: bool,
+    use_bn: bool,
+}
+
+fn to_tensor(t: &HostTensor) -> Result<Tensor> {
+    Ok(Tensor::new(t.shape(), t.as_f32()?.to_vec()))
+}
+
+/// Host-side Wp refresh: fills `state.wps` from the current weights and
+/// projection matrices without touching PJRT (the native-only path; the
+/// HLO path uses the project artifact instead).
+pub fn project_host(meta: &Meta, state: &mut ModelState) -> Result<()> {
+    if meta.strategy != "drs" {
+        return Ok(());
+    }
+    let mut wps = Vec::with_capacity(meta.counts.dsg);
+    for (li, (&wi, r)) in meta
+        .dsg_weight_indices
+        .iter()
+        .zip(&state.rs)
+        .enumerate()
+    {
+        let w = &state.state[wi];
+        let wshape = w.shape().to_vec();
+        // conv weights (K, C, r, s) -> (CRS, K); dense already (d, n)
+        let wmat = if wshape.len() == 4 {
+            let k = wshape[0];
+            let crs: usize = wshape[1..].iter().product();
+            ops::transpose(&Tensor::new(&[k, crs], w.as_f32()?.to_vec()))
+        } else {
+            Tensor::new(&wshape, w.as_f32()?.to_vec())
+        };
+        let rt = to_tensor(r)?;
+        let wp = crate::drs::project_weights(&rt, &wmat);
+        let spec = &meta.wps[li];
+        anyhow::ensure!(
+            wp.shape() == &spec.shape[..],
+            "host projection shape {:?} != meta {:?}",
+            wp.shape(),
+            spec.shape
+        );
+        wps.push(HostTensor::f32(wp.shape(), wp.data().to_vec()));
+    }
+    state.wps = wps;
+    Ok(())
+}
+
+impl NativeModel {
+    pub fn new(meta: &Meta, state: &ModelState) -> Result<NativeModel> {
+        if meta.units.is_empty() {
+            bail!("meta {} has no topology — re-run `make artifacts`", meta.name);
+        }
+        let by_name: BTreeMap<&str, &HostTensor> = meta
+            .state
+            .iter()
+            .zip(&state.state)
+            .map(|(spec, t)| (spec.name.as_str(), t))
+            .collect();
+        let get = |name: String| -> Result<&HostTensor> {
+            by_name
+                .get(name.as_str())
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("missing state leaf {name}"))
+        };
+        let getv = |name: String| -> Result<Vec<f32>> {
+            Ok(get(name)?.as_f32()?.to_vec())
+        };
+
+        let mut m = NativeModel {
+            meta: meta.clone(),
+            units: meta.units.clone(),
+            convs: BTreeMap::new(),
+            denses: BTreeMap::new(),
+            bns: BTreeMap::new(),
+            dsg: Vec::new(),
+            double_mask: meta.double_mask,
+            use_bn: meta.use_bn,
+        };
+
+        let add_conv = |m: &mut NativeModel, key: String, wname: String, ksize: usize, stride: usize, pad: usize| -> Result<()> {
+            let w = get(wname)?; // (K, C, r, s)
+            let k = w.shape()[0];
+            let crs: usize = w.shape()[1..].iter().product();
+            let wt = Tensor::new(&[k, crs], w.as_f32()?.to_vec());
+            m.convs.insert(key, ConvParams { wt, ksize, stride, pad });
+            Ok(())
+        };
+        let add_bn = |m: &mut NativeModel, key: String, path: String| -> Result<()> {
+            m.bns.insert(
+                key,
+                BnParams {
+                    scale: getv(format!("bn.{path}.scale"))?,
+                    bias: getv(format!("bn.{path}.bias"))?,
+                    mean: getv(format!("bn_state.{path}.mean"))?,
+                    var: getv(format!("bn_state.{path}.var"))?,
+                },
+            );
+            Ok(())
+        };
+
+        for (i, u) in meta.units.clone().iter().enumerate() {
+            match u {
+                Unit::Dense { .. } => {
+                    let w = to_tensor(get(format!("params.{i}.w"))?)?;
+                    let wt = ops::transpose(&w);
+                    m.denses.insert(i.to_string(), DenseParams { wt, w, bias: None });
+                    add_bn(&mut m, i.to_string(), i.to_string())?;
+                }
+                Unit::Classifier { .. } => {
+                    let w = to_tensor(get(format!("params.{i}.w"))?)?;
+                    let wt = ops::transpose(&w);
+                    let bias = getv(format!("params.{i}.b"))?;
+                    m.denses
+                        .insert(i.to_string(), DenseParams { wt, w, bias: Some(bias) });
+                }
+                Unit::Conv { ksize, stride, pad, .. } => {
+                    add_conv(&mut m, i.to_string(), format!("params.{i}.w"), *ksize, *stride, *pad)?;
+                    add_bn(&mut m, i.to_string(), i.to_string())?;
+                }
+                Unit::Residual { c_in, c_out, stride } => {
+                    add_conv(&mut m, format!("{i}.conv1"), format!("params.{i}.conv1.w"), 3, *stride, 1)?;
+                    add_conv(&mut m, format!("{i}.conv2"), format!("params.{i}.conv2.w"), 3, 1, 1)?;
+                    if *stride != 1 || c_in != c_out {
+                        add_conv(&mut m, format!("{i}.short"), format!("params.{i}.short.w"), 1, *stride, 0)?;
+                    }
+                    add_bn(&mut m, format!("{i}.bn1"), format!("{i}.bn1"))?;
+                    add_bn(&mut m, format!("{i}.bn2"), format!("{i}.bn2"))?;
+                }
+                Unit::MaxPool { .. } | Unit::GlobalAvgPool | Unit::Flatten => {}
+            }
+        }
+
+        // DSG side: projection index + projected weights, in dsg order.
+        if meta.strategy == "drs" {
+            for (r, wp) in state.rs.iter().zip(&state.wps) {
+                let rt = to_tensor(r)?;
+                m.dsg.push(DsgSide {
+                    ridx: TernaryIndex::from_dense(&rt),
+                    wp: to_tensor(wp)?,
+                });
+            }
+        }
+        Ok(m)
+    }
+
+    /// BN in eval mode over rows layout (rows, channels).
+    fn bn_rows(&self, rows: &mut Tensor, key: &str) {
+        if !self.use_bn {
+            return;
+        }
+        let bn = &self.bns[key];
+        let n = rows.shape()[1];
+        debug_assert_eq!(bn.scale.len(), n);
+        let inv: Vec<f32> = bn
+            .var
+            .iter()
+            .zip(&bn.scale)
+            .map(|(v, s)| s / (v + BN_EPS).sqrt())
+            .collect();
+        let shift: Vec<f32> = bn
+            .mean
+            .iter()
+            .zip(&inv)
+            .zip(&bn.bias)
+            .map(|((m, i), b)| b - m * i)
+            .collect();
+        for row in rows.data_mut().chunks_exact_mut(n) {
+            for j in 0..n {
+                row[j] = row[j] * inv[j] + shift[j];
+            }
+        }
+    }
+
+    /// Shared-threshold mask over virtual activations in rows layout.
+    /// `sample0_rows` = how many leading rows belong to sample 0.
+    fn mask_for(
+        virt: &Tensor,
+        gamma: f32,
+        sample0_rows: usize,
+    ) -> Tensor {
+        let n = virt.shape()[1];
+        let flat0 = &virt.data()[..sample0_rows * n];
+        let size = flat0.len();
+        let drop = ((gamma * size as f32).floor() as usize).min(size - 1);
+        let t = if drop == 0 {
+            f32::NEG_INFINITY
+        } else {
+            let mut v = flat0.to_vec();
+            let (_, nth, _) = v.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
+            *nth
+        };
+        Tensor::from_fn(virt.shape(), |i| if virt.data()[i] >= t { 1.0 } else { 0.0 })
+    }
+
+    /// One DSG (or dense) "matmul layer" over rows: returns masked,
+    /// ReLU'd, BN'd, re-masked output rows plus stats.
+    #[allow(clippy::too_many_arguments)]
+    fn rows_layer(
+        &self,
+        rows: &Tensor,
+        wt: &Tensor,
+        bn_key: &str,
+        dsg_idx: Option<usize>,
+        gamma: f32,
+        sample0_rows: usize,
+        mode: Mode,
+        name: &str,
+    ) -> (Tensor, LayerStat) {
+        let t0 = std::time::Instant::now();
+        let (mut y, drs_secs, density, mask) = match (mode, dsg_idx) {
+            (Mode::Dsg, Some(di)) if !self.dsg.is_empty() && gamma > 0.0 => {
+                let side = &self.dsg[di];
+                let td = std::time::Instant::now();
+                let m = rows.shape()[0];
+                let k = side.ridx.k;
+                let mut xp = vec![0.0f32; m * k];
+                for i in 0..m {
+                    side.ridx.project_row(
+                        &rows.data()[i * side.ridx.d..(i + 1) * side.ridx.d],
+                        &mut xp[i * k..(i + 1) * k],
+                    );
+                }
+                let xp = Tensor::new(&[m, k], xp);
+                let virt = ops::matmul_blocked(&xp, &side.wp);
+                let mask = Self::mask_for(&virt, gamma, sample0_rows);
+                let drs = td.elapsed().as_secs_f64();
+                let y = sparse::dsg_vmm(rows, wt, &mask);
+                let density = topk::mask_density(&mask);
+                (y, drs, density, Some(mask))
+            }
+            _ => {
+                let y = ops::matmul_blocked(rows, &ops::transpose(wt));
+                (y, 0.0, 1.0, None)
+            }
+        };
+        ops::relu_inplace(&mut y);
+        self.bn_rows(&mut y, bn_key);
+        if let (Some(mask), true) = (&mask, self.double_mask) {
+            for (v, m) in y.data_mut().iter_mut().zip(mask.data()) {
+                *v *= m;
+            }
+        }
+        let stat = LayerStat {
+            name: name.to_string(),
+            secs: t0.elapsed().as_secs_f64(),
+            drs_secs,
+            density,
+        };
+        (y, stat)
+    }
+
+    /// rows (N*P*Q, K) -> NCHW tensor.
+    fn rows_to_nchw(rows: &Tensor, n: usize, p: usize, q: usize) -> Tensor {
+        let k = rows.shape()[1];
+        let mut out = vec![0.0f32; n * k * p * q];
+        for ni in 0..n {
+            for pi in 0..p {
+                for qi in 0..q {
+                    let r = ((ni * p + pi) * q + qi) * k;
+                    for ki in 0..k {
+                        out[((ni * k + ki) * p + pi) * q + qi] = rows.data()[r + ki];
+                    }
+                }
+            }
+        }
+        Tensor::new(&[n, k, p, q], out)
+    }
+
+    fn conv_unit(
+        &self,
+        x: &Tensor,
+        key: &str,
+        bn_key: &str,
+        dsg_idx: Option<usize>,
+        gamma: f32,
+        mode: Mode,
+        stats: &mut Vec<LayerStat>,
+    ) -> Tensor {
+        let cp = &self.convs[key];
+        let n = x.shape()[0];
+        let (rows, p, q) = ops::im2col(x, cp.ksize, cp.stride, cp.pad);
+        let (y, stat) = self.rows_layer(
+            &rows,
+            &cp.wt,
+            bn_key,
+            dsg_idx,
+            gamma,
+            p * q,
+            mode,
+            &format!("conv{key}"),
+        );
+        stats.push(stat);
+        Self::rows_to_nchw(&y, n, p, q)
+    }
+
+    /// Shortcut conv (no mask / relu / bn).
+    fn plain_conv(&self, x: &Tensor, key: &str) -> Tensor {
+        let cp = &self.convs[key];
+        let n = x.shape()[0];
+        let (rows, p, q) = ops::im2col(x, cp.ksize, cp.stride, cp.pad);
+        let y = ops::matmul_blocked(&rows, &ops::transpose(&cp.wt));
+        Self::rows_to_nchw(&y, n, p, q)
+    }
+
+    /// Full forward pass on a batch (N, input_shape...).
+    pub fn forward(&self, x: &Tensor, gamma: f32, mode: Mode) -> Result<NativeOut> {
+        let n = x.shape()[0];
+        let mut stats = Vec::new();
+        let mut dsg_idx = 0usize;
+        let mut next_dsg = || {
+            let i = dsg_idx;
+            dsg_idx += 1;
+            Some(i)
+        };
+        // conv nets carry NCHW; MLPs carry rows (N, D)
+        let mut h = x.clone();
+        for (i, u) in self.units.iter().enumerate() {
+            match u {
+                Unit::Dense { .. } => {
+                    let dp = &self.denses[&i.to_string()];
+                    let (y, stat) = self.rows_layer(
+                        &h,
+                        &dp.wt,
+                        &i.to_string(),
+                        next_dsg(),
+                        gamma,
+                        1,
+                        mode,
+                        &format!("dense{i}"),
+                    );
+                    stats.push(stat);
+                    h = y;
+                }
+                Unit::Classifier { d_out, .. } => {
+                    let dp = &self.denses[&i.to_string()];
+                    let mut y = ops::matmul_blocked(&h, &dp.w);
+                    if let Some(b) = &dp.bias {
+                        for row in y.data_mut().chunks_exact_mut(*d_out) {
+                            for (v, bb) in row.iter_mut().zip(b) {
+                                *v += bb;
+                            }
+                        }
+                    }
+                    h = y;
+                }
+                Unit::Conv { .. } => {
+                    h = self.conv_unit(&h, &i.to_string(), &i.to_string(), next_dsg(), gamma, mode, &mut stats);
+                }
+                Unit::Residual { c_in, c_out, stride } => {
+                    let b1 = self.conv_unit(
+                        &h,
+                        &format!("{i}.conv1"),
+                        &format!("{i}.bn1"),
+                        next_dsg(),
+                        gamma,
+                        mode,
+                        &mut stats,
+                    );
+                    let b2 = self.conv_unit(
+                        &b1,
+                        &format!("{i}.conv2"),
+                        &format!("{i}.bn2"),
+                        next_dsg(),
+                        gamma,
+                        mode,
+                        &mut stats,
+                    );
+                    let sc = if *stride != 1 || c_in != c_out {
+                        self.plain_conv(&h, &format!("{i}.short"))
+                    } else {
+                        h.clone()
+                    };
+                    let mut sum = b2;
+                    for (v, s) in sum.data_mut().iter_mut().zip(sc.data()) {
+                        *v += s;
+                    }
+                    h = sum;
+                }
+                Unit::MaxPool { size } => {
+                    h = maxpool(&h, *size);
+                }
+                Unit::GlobalAvgPool => {
+                    h = gap(&h);
+                }
+                Unit::Flatten => {
+                    let d: usize = h.shape()[1..].iter().product();
+                    h = h.reshape(&[n, d]);
+                }
+            }
+        }
+        if h.shape().len() != 2 || h.shape()[1] != self.meta.classes {
+            bail!("native forward produced shape {:?}", h.shape());
+        }
+        Ok(NativeOut { logits: h, stats })
+    }
+
+    /// Classify a batch: argmax per row.
+    pub fn predict(&self, x: &Tensor, gamma: f32, mode: Mode) -> Result<Vec<usize>> {
+        let out = self.forward(x, gamma, mode)?;
+        let c = self.meta.classes;
+        Ok(out
+            .logits
+            .data()
+            .chunks_exact(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+fn maxpool(x: &Tensor, size: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (ph, pw) = (h / size, w / size);
+    let mut out = vec![f32::NEG_INFINITY; n * c * ph * pw];
+    for ni in 0..n {
+        for ci in 0..c {
+            for y in 0..ph {
+                for xx in 0..pw {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..size {
+                        for dx in 0..size {
+                            m = m.max(x.at4(ni, ci, y * size + dy, xx * size + dx));
+                        }
+                    }
+                    out[((ni * c + ci) * ph + y) * pw + xx] = m;
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, c, ph, pw], out)
+}
+
+fn gap(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let mut out = vec![0.0f32; n * c];
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut acc = 0.0f32;
+            for y in 0..h {
+                for xx in 0..w {
+                    acc += x.at4(ni, ci, y, xx);
+                }
+            }
+            out[ni * c + ci] = acc / (h * w) as f32;
+        }
+    }
+    Tensor::new(&[n, c], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::from_fn(&[1, 1, 4, 4], |i| i as f32);
+        let y = maxpool(&x, 2);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn gap_known() {
+        let x = Tensor::from_fn(&[1, 2, 2, 2], |i| i as f32);
+        let y = gap(&x);
+        assert_eq!(y.shape(), &[1, 2]);
+        assert_eq!(y.data(), &[1.5, 5.5]);
+    }
+
+    #[test]
+    fn rows_to_nchw_roundtrip() {
+        // rows layout is (N*P*Q, K) with (n, p, q) major order
+        let n = 2;
+        let (p, q, k) = (2, 3, 4);
+        let rows = Tensor::from_fn(&[n * p * q, k], |i| i as f32);
+        let x = NativeModel::rows_to_nchw(&rows, n, p, q);
+        assert_eq!(x.shape(), &[n, k, p, q]);
+        // element (n=1, k=2, p=0, q=1): row = (1*2+0)*3+1 = 7, col 2 -> 7*4+2
+        assert_eq!(x.at4(1, 2, 0, 1), (7 * 4 + 2) as f32);
+    }
+
+    #[test]
+    fn mask_for_density() {
+        let mut rng = crate::util::Pcg32::seeded(3);
+        let virt = Tensor::new(&[10, 50], rng.normal_vec(500, 1.0));
+        let m = NativeModel::mask_for(&virt, 0.8, 2); // sample 0 = 2 rows
+        let d0: f32 = m.data()[..100].iter().sum::<f32>() / 100.0;
+        assert!((d0 - 0.2).abs() < 0.011);
+        let m0 = NativeModel::mask_for(&virt, 0.0, 2);
+        assert_eq!(m0.data().iter().sum::<f32>(), 500.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Golden-vector reader: `aot.py` emits `golden/*.{json,bin}` pairs with
+//! concrete input/output tensors from a real python execution; the rust
+//! integration tests replay them through the loaded HLO and compare.
+
+use super::HostTensor;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A named set of golden tensors.
+#[derive(Debug)]
+pub struct Golden {
+    pub tensors: Vec<(String, HostTensor)>,
+}
+
+impl Golden {
+    /// Load `<base>.json` + `<base>.bin`.
+    pub fn load(base: &Path) -> Result<Golden> {
+        let idx_path = base.with_extension("json");
+        let bin_path = base.with_extension("bin");
+        let idx = std::fs::read_to_string(&idx_path)
+            .with_context(|| format!("reading {idx_path:?}"))?;
+        let bin = std::fs::read(&bin_path).with_context(|| format!("reading {bin_path:?}"))?;
+        let j = Json::parse(&idx).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let entries = j.as_arr().context("golden index must be an array")?;
+        let mut tensors = Vec::with_capacity(entries.len());
+        for e in entries {
+            let name = e.req_str("name")?.to_string();
+            let shape: Vec<usize> = e
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape"))
+                .collect::<Result<_>>()?;
+            let offset = e.req_usize("offset")?;
+            let nbytes = e.req_usize("nbytes")?;
+            if offset + nbytes > bin.len() {
+                bail!("golden {name}: range {offset}+{nbytes} > {}", bin.len());
+            }
+            let raw = &bin[offset..offset + nbytes];
+            let t = match e.req_str("dtype")? {
+                "f32" => HostTensor::F32 {
+                    shape,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                },
+                "s32" => HostTensor::S32 {
+                    shape,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                },
+                other => bail!("golden dtype {other:?}"),
+            };
+            tensors.push((name, t));
+        }
+        Ok(Golden { tensors })
+    }
+
+    /// All tensors whose name starts with `prefix`, in file order.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<&HostTensor> {
+        self.tensors
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, t)| t)
+            .collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+/// Max |a-b| over two f32 tensors (inf on shape/type mismatch).
+pub fn max_abs_diff(a: &HostTensor, b: &HostTensor) -> f32 {
+    match (a.as_f32(), b.as_f32()) {
+        (Ok(x), Ok(y)) if x.len() == y.len() => x
+            .iter()
+            .zip(y)
+            .map(|(u, v)| (u - v).abs())
+            .fold(0.0, f32::max),
+        _ => match (a.as_s32(), b.as_s32()) {
+            (Ok(x), Ok(y)) if x.len() == y.len() => x
+                .iter()
+                .zip(y)
+                .map(|(u, v)| (u - v).abs() as f32)
+                .fold(0.0, f32::max),
+            _ => f32::INFINITY,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_mlp_golden_if_present() {
+        let base = crate::artifacts_dir().join("golden").join("mlp_step");
+        if !base.with_extension("json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let g = Golden::load(&base).unwrap();
+        let ins = g.with_prefix("in");
+        let outs = g.with_prefix("out");
+        assert_eq!(ins.len(), 29); // 20 state + 2 wp + 2 r + x,y,gamma,lr,step
+        assert_eq!(outs.len(), 24); // 20 state + loss + acc + 2 densities
+        // x is (64, 784) f32, y is (64,) s32
+        assert_eq!(ins[24].shape(), &[64, 784]);
+        assert_eq!(ins[25].shape(), &[64]);
+        assert!(ins[25].as_s32().is_ok());
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        let a = HostTensor::f32(&[2], vec![1.0, 2.0]);
+        let b = HostTensor::f32(&[2], vec![1.5, 2.0]);
+        assert_eq!(max_abs_diff(&a, &b), 0.5);
+        let c = HostTensor::s32(&[2], vec![1, 2]);
+        assert_eq!(max_abs_diff(&a, &c), f32::INFINITY);
+    }
+}

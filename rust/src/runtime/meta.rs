@@ -1,0 +1,397 @@
+//! Artifact metadata: the buffer-layout contract emitted by
+//! `python/compile/aot.py` (`<variant>.meta.json`).
+//!
+//! The meta file is the ONLY channel through which rust learns the flat
+//! argument order of an HLO artifact; python's pytree flattening (dict
+//! keys sorted) is mirrored verbatim into the `state` / `wps` / `rs`
+//! lists, so the runtime can thread buffers positionally.
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+    pub fn bytes(self) -> usize {
+        4
+    }
+}
+
+/// Init recipe for one leaf (mirrors `aot.py::_init_spec`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Init {
+    Zeros,
+    Ones,
+    HeNormal { fan_in: usize },
+    Ternary { s: u32 },
+}
+
+/// One flat buffer slot.
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub init: Init,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<LeafSpec> {
+        let name = j.req_str("name")?.to_string();
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape elem"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.req_str("dtype")?)?;
+        let init_j = j.req("init")?;
+        let init = match init_j.req_str("kind")? {
+            "zeros" => Init::Zeros,
+            "ones" => Init::Ones,
+            "he_normal" => Init::HeNormal { fan_in: init_j.req_usize("fan_in")? },
+            "ternary" => Init::Ternary { s: init_j.req_usize("s")? as u32 },
+            other => bail!("unknown init kind {other:?}"),
+        };
+        Ok(LeafSpec { name, shape, dtype, init })
+    }
+}
+
+/// Group sizes within the flat state list (concatenated in this order).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counts {
+    pub params: usize,
+    pub vel: usize,
+    pub bn: usize,
+    pub vbn: usize,
+    pub bn_state: usize,
+    pub wps: usize,
+    pub rs: usize,
+    pub dsg: usize,
+}
+
+/// DSG layer description (for reporting / cost cross-checks).
+#[derive(Clone, Debug)]
+pub struct DsgLayer {
+    pub path: String,
+    pub k: usize,
+    pub d_in: usize,
+    pub n_out: usize,
+}
+
+/// Serialized model topology unit (drives the native inference engine).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Unit {
+    Dense { d_in: usize, d_out: usize },
+    Classifier { d_in: usize, d_out: usize },
+    Conv { c_in: usize, c_out: usize, ksize: usize, stride: usize, pad: usize },
+    Residual { c_in: usize, c_out: usize, stride: usize },
+    MaxPool { size: usize },
+    GlobalAvgPool,
+    Flatten,
+}
+
+impl Unit {
+    fn from_json(j: &Json) -> Result<Unit> {
+        Ok(match j.req_str("kind")? {
+            "dense" => Unit::Dense {
+                d_in: j.req_usize("d_in")?,
+                d_out: j.req_usize("d_out")?,
+            },
+            "classifier" => Unit::Classifier {
+                d_in: j.req_usize("d_in")?,
+                d_out: j.req_usize("d_out")?,
+            },
+            "conv" => Unit::Conv {
+                c_in: j.req_usize("c_in")?,
+                c_out: j.req_usize("c_out")?,
+                ksize: j.req_usize("ksize")?,
+                stride: j.req_usize("stride")?,
+                pad: j.req_usize("pad")?,
+            },
+            "residual" => Unit::Residual {
+                c_in: j.req_usize("c_in")?,
+                c_out: j.req_usize("c_out")?,
+                stride: j.req_usize("stride")?,
+            },
+            "maxpool" => Unit::MaxPool { size: j.req_usize("size")? },
+            "gap" => Unit::GlobalAvgPool,
+            "flatten" => Unit::Flatten,
+            other => bail!("unknown unit kind {other:?}"),
+        })
+    }
+}
+
+/// Parsed `<variant>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub name: String,
+    pub base_model: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub strategy: String,
+    pub eps: f64,
+    pub double_mask: bool,
+    pub use_bn: bool,
+    pub files: std::collections::BTreeMap<String, String>,
+    /// Per artifact kind: which flat input indices survived XLA DCE.
+    /// The runtime must supply exactly these (e.g. `step` is dropped from
+    /// non-random variants; wps/rs from dense ones).
+    pub kept: std::collections::BTreeMap<String, Vec<usize>>,
+    pub counts: Counts,
+    /// params ++ vel ++ bn ++ vbn ++ bn_state, flat order
+    pub state: Vec<LeafSpec>,
+    pub wps: Vec<LeafSpec>,
+    pub rs: Vec<LeafSpec>,
+    /// index into the state list of each DSG layer's weight (dsg order)
+    pub dsg_weight_indices: Vec<usize>,
+    pub dsg_layers: Vec<DsgLayer>,
+    /// model topology (empty for metas written before topology export)
+    pub units: Vec<Unit>,
+    pub dir: PathBuf,
+}
+
+impl Meta {
+    pub fn load(dir: &Path, variant: &str) -> Result<Meta> {
+        let path = dir.join(format!("{variant}.meta.json"));
+        let txt = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&txt).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Meta> {
+        let opts = j.req("opts")?;
+        let counts_j = j.req("counts")?;
+        let counts = Counts {
+            params: counts_j.req_usize("params")?,
+            vel: counts_j.req_usize("vel")?,
+            bn: counts_j.req_usize("bn")?,
+            vbn: counts_j.req_usize("vbn")?,
+            bn_state: counts_j.req_usize("bn_state")?,
+            wps: counts_j.req_usize("wps")?,
+            rs: counts_j.req_usize("rs")?,
+            dsg: counts_j.req_usize("dsg")?,
+        };
+        let leaves = |key: &str| -> Result<Vec<LeafSpec>> {
+            j.req_arr(key)?.iter().map(LeafSpec::from_json).collect()
+        };
+        let state = leaves("state")?;
+        let expected =
+            counts.params + counts.vel + counts.bn + counts.vbn + counts.bn_state;
+        if state.len() != expected {
+            bail!("state has {} leaves, counts say {expected}", state.len());
+        }
+        let files = j
+            .req("files")?
+            .as_obj()
+            .context("files")?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str().context("file name")?.to_string())))
+            .collect::<Result<_>>()?;
+        let kept = match j.get("kept") {
+            Some(k) => k
+                .as_obj()
+                .context("kept")?
+                .iter()
+                .map(|(name, idxs)| {
+                    let v: Vec<usize> = idxs
+                        .as_arr()
+                        .context("kept list")?
+                        .iter()
+                        .map(|i| i.as_usize().context("kept idx"))
+                        .collect::<Result<_>>()?;
+                    Ok((name.clone(), v))
+                })
+                .collect::<Result<_>>()?,
+            None => Default::default(),
+        };
+        let dsg_layers = j
+            .req_arr("dsg_layers")?
+            .iter()
+            .map(|l| {
+                Ok(DsgLayer {
+                    path: l.req_str("path")?.to_string(),
+                    k: l.req_usize("k")?,
+                    d_in: l.req_usize("d_in")?,
+                    n_out: l.req_usize("n_out")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Meta {
+            name: j.req_str("name")?.to_string(),
+            base_model: j.req_str("base_model")?.to_string(),
+            batch: j.req_usize("batch")?,
+            input_shape: j
+                .req_arr("input_shape")?
+                .iter()
+                .map(|v| v.as_usize().context("input_shape"))
+                .collect::<Result<_>>()?,
+            classes: j.req_usize("classes")?,
+            strategy: opts.req_str("strategy")?.to_string(),
+            eps: opts.req("eps")?.as_f64().context("eps")?,
+            double_mask: opts.req("double_mask")?.as_bool().context("double_mask")?,
+            use_bn: opts.req("use_bn")?.as_bool().context("use_bn")?,
+            files,
+            kept,
+            counts,
+            state,
+            wps: leaves("wps")?,
+            rs: leaves("rs")?,
+            dsg_weight_indices: j
+                .req_arr("dsg_weight_indices")?
+                .iter()
+                .map(|v| v.as_usize().context("dsg_weight_indices"))
+                .collect::<Result<_>>()?,
+            dsg_layers,
+            units: match j.get("units") {
+                Some(u) => u
+                    .as_arr()
+                    .context("units")?
+                    .iter()
+                    .map(Unit::from_json)
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Filter a full flat input list down to the indices the compiled
+    /// artifact actually kept (identity when no kept info is recorded).
+    pub fn filter_kept<T: Clone>(&self, kind: &str, inputs: Vec<T>) -> Vec<T> {
+        match self.kept.get(kind) {
+            None => inputs,
+            Some(idxs) => {
+                let mut out = Vec::with_capacity(idxs.len());
+                for &i in idxs {
+                    out.push(inputs[i].clone());
+                }
+                out
+            }
+        }
+    }
+
+    /// Absolute path of one artifact file ("train" / "forward" / ...).
+    pub fn file(&self, kind: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("{}: no {kind:?} artifact", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    pub fn has_file(&self, kind: &str) -> bool {
+        self.files.contains_key(kind)
+    }
+
+    /// Ranges of the state list: [params, vel, bn, vbn, bn_state].
+    pub fn group_ranges(&self) -> [std::ops::Range<usize>; 5] {
+        let c = &self.counts;
+        let p = c.params;
+        let v = p + c.vel;
+        let b = v + c.bn;
+        let vb = b + c.vbn;
+        let bs = vb + c.bn_state;
+        [0..p, p..v, v..b, b..vb, vb..bs]
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Total parameter element count (the "model size" statistic).
+    pub fn param_elems(&self) -> usize {
+        self.state[self.group_ranges()[0].clone()]
+            .iter()
+            .map(|l| l.elems())
+            .sum()
+    }
+
+    /// List all variants in an artifact dir (from index.json).
+    pub fn list_variants(dir: &Path) -> Result<Vec<String>> {
+        let txt = std::fs::read_to_string(dir.join("index.json"))
+            .with_context(|| format!("reading {dir:?}/index.json"))?;
+        let j = Json::parse(&txt).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(j.as_obj().context("index")?.keys().cloned().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta_json() -> &'static str {
+        r#"{
+ "name": "tiny", "base_model": "tiny", "batch": 4,
+ "input_shape": [8], "classes": 2,
+ "opts": {"eps": 0.5, "strategy": "drs", "double_mask": true, "use_bn": true},
+ "files": {"train": "tiny.train.hlo.txt"},
+ "counts": {"params": 1, "vel": 1, "bn": 0, "vbn": 0, "bn_state": 0, "wps": 1, "rs": 1, "dsg": 1},
+ "state": [
+   {"name": "params.0.w", "shape": [8, 2], "dtype": "f32", "init": {"kind": "he_normal", "fan_in": 8}},
+   {"name": "vel.0.w", "shape": [8, 2], "dtype": "f32", "init": {"kind": "zeros"}}
+ ],
+ "wps": [{"name": "wp.0", "shape": [3, 2], "dtype": "f32", "init": {"kind": "zeros"}}],
+ "rs": [{"name": "r.0", "shape": [3, 8], "dtype": "f32", "init": {"kind": "ternary", "s": 3}}],
+ "dsg_weight_indices": [0],
+ "dsg_layers": [{"path": "u0", "k": 3, "d_in": 8, "n_out": 2}]
+}"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(sample_meta_json()).unwrap();
+        let m = Meta::from_json(&j, Path::new("/tmp")).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.counts.params, 1);
+        assert_eq!(m.state[0].init, Init::HeNormal { fan_in: 8 });
+        assert_eq!(m.rs[0].init, Init::Ternary { s: 3 });
+        assert_eq!(m.param_elems(), 16);
+        assert_eq!(m.group_ranges()[0], 0..1);
+        assert_eq!(m.group_ranges()[1], 1..2);
+        assert!(m.has_file("train"));
+        assert!(!m.has_file("project"));
+        assert_eq!(m.dsg_layers[0].k, 3);
+    }
+
+    #[test]
+    fn count_mismatch_rejected() {
+        let bad = sample_meta_json().replace(r#""params": 1"#, r#""params": 2"#);
+        let j = Json::parse(&bad).unwrap();
+        assert!(Meta::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_mlp_meta_if_present() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("mlp.meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Meta::load(&dir, "mlp").unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.counts.dsg, 2);
+        assert_eq!(m.dsg_weight_indices.len(), 2);
+        assert_eq!(m.state.len(), 20);
+        // state order: params.. vel.. bn.. vbn.. bn_state..
+        assert!(m.state[0].name.starts_with("params."));
+        assert!(m.state[19].name.starts_with("bn_state."));
+    }
+}

@@ -1,0 +1,233 @@
+//! PJRT artifact runtime: load HLO *text* produced by `aot.py`, compile
+//! it on the CPU PJRT client, and execute it with flat host buffers.
+//!
+//! Interchange is HLO text (not serialized protos) — jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! All artifacts are lowered with `return_tuple=True`, so execution
+//! returns a single tuple literal that we decompose into flat outputs.
+
+pub mod golden;
+pub mod meta;
+
+pub use golden::Golden;
+pub use meta::{Counts, DType, Init, LeafSpec, Meta, Unit};
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A flat host tensor (f32 or i32), the runtime's exchange currency.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn s32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::S32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_s32(v: i32) -> Self {
+        HostTensor::S32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::S32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::S32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::S32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not s32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            HostTensor::S32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            _ => bail!("not a scalar: shape {:?}", self.shape()),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match self {
+            HostTensor::F32 { shape, data } => (
+                xla::ElementType::F32,
+                shape,
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            HostTensor::S32 { shape, data } => (
+                xla::ElementType::S32,
+                shape,
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, &bytes)
+            .map_err(|e| anyhow::anyhow!("literal create: {e}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+                Ok(HostTensor::F32 { shape: dims, data })
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+                Ok(HostTensor::S32 { shape: dims, data })
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: std::path::PathBuf,
+}
+
+impl Executable {
+    /// Execute with flat inputs; returns flat outputs (tuple decomposed).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()
+            .context("building input literals")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {:?}: {e}", self.path))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose tuple: {e}"))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// The PJRT CPU runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: std::cell::RefCell<std::collections::BTreeMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        Ok(Runtime { client, cache: Default::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        if !path.exists() {
+            bail!("artifact {path:?} not found — run `make artifacts` first");
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
+        let exe = std::rc::Rc::new(Executable { exe, path: path.to_path_buf() });
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Load a variant's artifact by kind ("train" / "forward" / ...).
+    pub fn load_artifact(&self, meta: &Meta, kind: &str) -> Result<std::rc::Rc<Executable>> {
+        self.load(&meta.file(kind)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_literal() {
+        let t = HostTensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let t2 = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, t2);
+        let s = HostTensor::s32(&[4], vec![1, -2, 3, -4]);
+        let lit = s.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), s);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(HostTensor::scalar_f32(0.5).scalar().unwrap(), 0.5);
+        assert_eq!(HostTensor::scalar_s32(7).scalar().unwrap(), 7.0);
+        assert!(HostTensor::f32(&[2], vec![1., 2.]).scalar().is_err());
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let t = HostTensor::f32(&[1], vec![1.0]);
+        assert!(t.as_s32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_data_mismatch_panics() {
+        HostTensor::f32(&[3], vec![1.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        match rt.load(Path::new("/nonexistent/foo.hlo.txt")) {
+            Ok(_) => panic!("expected error"),
+            Err(err) => assert!(format!("{err}").contains("make artifacts")),
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Batched-inference serving substrate: request queue, dynamic batcher,
+//! and latency accounting over any forward function (HLO-backed
+//! `Trainer::forward` or the native engine).
+//!
+//! DSG's fixed-shape artifacts want full batches; the batcher assembles
+//! them from a FIFO of single-image requests, padding the final partial
+//! batch (padded rows are computed but their results dropped — the same
+//! strategy the eval path uses).  Single-threaded pump by design: the
+//! PJRT CPU client is not Sync and determinism matters more than
+//! concurrency on this testbed.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A single classification request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// A completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    /// queue wait + compute, seconds
+    pub latency: f64,
+    /// compute-only share
+    pub compute: f64,
+}
+
+/// FIFO request queue with id assignment.
+#[derive(Default)]
+pub struct Queue {
+    q: VecDeque<Request>,
+    next_id: u64,
+}
+
+impl Queue {
+    pub fn new() -> Queue {
+        Queue::default()
+    }
+
+    pub fn push(&mut self, image: Vec<f32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.q.push_back(Request { id, image, enqueued: Instant::now() });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    fn take(&mut self, n: usize) -> Vec<Request> {
+        let n = n.min(self.q.len());
+        self.q.drain(..n).collect()
+    }
+}
+
+/// Serving statistics.
+#[derive(Default, Debug, Clone)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub padded_slots: usize,
+    pub latencies: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.latencies.clone();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((xs.len() - 1) as f64 * p).round() as usize;
+        xs[idx]
+    }
+
+    pub fn throughput(&self, wall_secs: f64) -> f64 {
+        self.served as f64 / wall_secs.max(1e-12)
+    }
+}
+
+/// The dynamic batcher + pump.
+pub struct Batcher {
+    pub batch_size: usize,
+    pub input_elems: usize,
+    pub classes: usize,
+    pub stats: ServeStats,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, input_elems: usize, classes: usize) -> Batcher {
+        assert!(batch_size > 0 && input_elems > 0 && classes > 0);
+        Batcher { batch_size, input_elems, classes, stats: ServeStats::default() }
+    }
+
+    /// Drain the queue through `forward` (flat batch -> flat logits).
+    /// Returns responses in completion order.
+    pub fn pump(
+        &mut self,
+        queue: &mut Queue,
+        mut forward: impl FnMut(&[f32]) -> anyhow::Result<Vec<f32>>,
+    ) -> anyhow::Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !queue.is_empty() {
+            let reqs = queue.take(self.batch_size);
+            let valid = reqs.len();
+            let mut xs = Vec::with_capacity(self.batch_size * self.input_elems);
+            for r in &reqs {
+                anyhow::ensure!(
+                    r.image.len() == self.input_elems,
+                    "request {} has {} elems, expected {}",
+                    r.id,
+                    r.image.len(),
+                    self.input_elems
+                );
+                xs.extend_from_slice(&r.image);
+            }
+            // pad to a full batch by repeating the first image
+            for _ in valid..self.batch_size {
+                xs.extend_from_slice(&reqs[0].image);
+                self.stats.padded_slots += 1;
+            }
+            let t0 = Instant::now();
+            let logits = forward(&xs)?;
+            let compute = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                logits.len() == self.batch_size * self.classes,
+                "forward returned {} logits, expected {}",
+                logits.len(),
+                self.batch_size * self.classes
+            );
+            for (i, r) in reqs.into_iter().enumerate() {
+                let row = &logits[i * self.classes..(i + 1) * self.classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                let latency = r.enqueued.elapsed().as_secs_f64();
+                self.stats.served += 1;
+                self.stats.latencies.push(latency);
+                out.push(Response { id: r.id, pred, latency, compute });
+            }
+            self.stats.batches += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_forward(batch: usize, classes: usize) -> impl FnMut(&[f32]) -> anyhow::Result<Vec<f32>> {
+        move |xs: &[f32]| {
+            // predict class = round(first pixel) for testability
+            let per = xs.len() / batch;
+            let mut out = vec![0.0f32; batch * classes];
+            for i in 0..batch {
+                let c = (xs[i * per].round() as usize).min(classes - 1);
+                out[i * classes + c] = 1.0;
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn pump_serves_all_and_pads() {
+        let mut q = Queue::new();
+        for i in 0..10 {
+            q.push(vec![i as f32 % 3.0; 4]);
+        }
+        let mut b = Batcher::new(4, 4, 5);
+        let rs = b.pump(&mut q, fake_forward(4, 5)).unwrap();
+        assert_eq!(rs.len(), 10);
+        assert!(q.is_empty());
+        assert_eq!(b.stats.batches, 3);
+        assert_eq!(b.stats.padded_slots, 2); // last batch had 2 valid
+        // predictions match the fake rule
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.pred, i % 3, "req {i}");
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let mut q = Queue::new();
+        q.push(vec![0.0; 3]);
+        let mut b = Batcher::new(2, 4, 5);
+        assert!(b.pump(&mut q, fake_forward(2, 5)).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_logit_count() {
+        let mut q = Queue::new();
+        q.push(vec![0.0; 4]);
+        let mut b = Batcher::new(2, 4, 5);
+        let r = b.pump(&mut q, |_| Ok(vec![0.0; 3]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = ServeStats::default();
+        s.latencies = vec![0.001, 0.002, 0.003, 0.004, 0.100];
+        assert_eq!(s.percentile(0.0), 0.001);
+        assert_eq!(s.percentile(0.5), 0.003);
+        assert_eq!(s.percentile(1.0), 0.100);
+        s.served = 5;
+        assert!((s.throughput(1.0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_fifo_ids() {
+        let mut q = Queue::new();
+        let a = q.push(vec![1.0]);
+        let b = q.push(vec![2.0]);
+        assert_eq!((a, b), (0, 1));
+        let taken = q.take(1);
+        assert_eq!(taken[0].id, 0);
+        assert_eq!(q.len(), 1);
+    }
+}

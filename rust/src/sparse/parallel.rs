@@ -1,0 +1,231 @@
+//! Multi-threaded variants of the CPU engines (std::thread scoped —
+//! rayon is unavailable offline).  Work is split by output rows; each
+//! thread writes a disjoint slice, so no synchronization is needed
+//! beyond the join.
+//!
+//! These back the §Perf optimization pass: the single-threaded engines
+//! stay as the reference (and as the Fig 8a apples-to-apples baselines),
+//! the parallel ones are what a deployment would run.
+
+use crate::tensor::Tensor;
+
+/// Number of worker threads (DSG_THREADS overrides; default = cores).
+pub fn n_threads() -> usize {
+    if let Ok(v) = std::env::var("DSG_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `rows` into at most `parts` contiguous chunks.
+fn row_chunks(rows: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(rows).max(1);
+    let base = rows / parts;
+    let extra = rows % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Parallel blocked GEMM: x (m, k) * w (k, n).
+pub fn matmul_parallel(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    let threads = n_threads();
+    let chunks = row_chunks(m, threads);
+    let xd = x.data();
+    let wd = w.data();
+    std::thread::scope(|scope| {
+        let mut remaining: &mut [f32] = &mut out;
+        for &(lo, hi) in &chunks {
+            let (mine, rest) = remaining.split_at_mut((hi - lo) * n);
+            remaining = rest;
+            scope.spawn(move || {
+                const KC: usize = 256;
+                for p0 in (0..k).step_by(KC) {
+                    let p1 = (p0 + KC).min(k);
+                    for i in lo..hi {
+                        let arow = &xd[i * k..(i + 1) * k];
+                        let orow = &mut mine[(i - lo) * n..(i - lo + 1) * n];
+                        for p in p0..p1 {
+                            let av = arow[p];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            let brow = &wd[p * n..(p + 1) * n];
+                            let mut j = 0;
+                            while j + 4 <= n {
+                                orow[j] += av * brow[j];
+                                orow[j + 1] += av * brow[j + 1];
+                                orow[j + 2] += av * brow[j + 2];
+                                orow[j + 3] += av * brow[j + 3];
+                                j += 4;
+                            }
+                            while j < n {
+                                orow[j] += av * brow[j];
+                                j += 1;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+/// Parallel DSG masked VMM over transposed weights wt (n, d).
+pub fn dsg_vmm_parallel(x: &Tensor, wt: &Tensor, mask: &Tensor) -> Tensor {
+    let (m, d) = (x.shape()[0], x.shape()[1]);
+    let (n, d2) = (wt.shape()[0], wt.shape()[1]);
+    assert_eq!(d, d2);
+    assert_eq!(mask.shape(), &[m, n]);
+    let mut out = vec![0.0f32; m * n];
+    let threads = n_threads();
+    let chunks = row_chunks(m, threads);
+    let xd = x.data();
+    let wd = wt.data();
+    let md = mask.data();
+    std::thread::scope(|scope| {
+        let mut remaining: &mut [f32] = &mut out;
+        for &(lo, hi) in &chunks {
+            let (mine, rest) = remaining.split_at_mut((hi - lo) * n);
+            remaining = rest;
+            scope.spawn(move || {
+                for i in lo..hi {
+                    let row = &xd[i * d..(i + 1) * d];
+                    let mrow = &md[i * n..(i + 1) * n];
+                    let orow = &mut mine[(i - lo) * n..(i - lo + 1) * n];
+                    for j in 0..n {
+                        if mrow[j] == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wd[j * d..(j + 1) * d];
+                        let mut acc = 0.0f32;
+                        let mut p = 0;
+                        while p + 4 <= d {
+                            acc += row[p] * wrow[p]
+                                + row[p + 1] * wrow[p + 1]
+                                + row[p + 2] * wrow[p + 2]
+                                + row[p + 3] * wrow[p + 3];
+                            p += 4;
+                        }
+                        while p < d {
+                            acc += row[p] * wrow[p];
+                            p += 1;
+                        }
+                        orow[j] = acc;
+                    }
+                }
+            });
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+/// Parallel row projection through a ternary index.
+pub fn project_rows_parallel(
+    x: &Tensor,
+    ridx: &crate::drs::projection::TernaryIndex,
+) -> Tensor {
+    let m = x.shape()[0];
+    let k = ridx.k;
+    let mut out = vec![0.0f32; m * k];
+    let chunks = row_chunks(m, n_threads());
+    let xd = x.data();
+    std::thread::scope(|scope| {
+        let mut remaining: &mut [f32] = &mut out;
+        for &(lo, hi) in &chunks {
+            let (mine, rest) = remaining.split_at_mut((hi - lo) * k);
+            remaining = rest;
+            scope.spawn(move || {
+                for i in lo..hi {
+                    ridx.project_row(
+                        &xd[i * ridx.d..(i + 1) * ridx.d],
+                        &mut mine[(i - lo) * k..(i - lo + 1) * k],
+                    );
+                }
+            });
+        }
+    });
+    Tensor::new(&[m, k], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drs::projection::{ternary_r, TernaryIndex};
+    use crate::tensor::ops;
+    use crate::util::Pcg32;
+
+    fn randn(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    #[test]
+    fn row_chunks_cover_exactly() {
+        for rows in [1usize, 5, 16, 100, 101] {
+            for parts in [1usize, 2, 7, 16] {
+                let ch = row_chunks(rows, parts);
+                assert_eq!(ch[0].0, 0);
+                assert_eq!(ch.last().unwrap().1, rows);
+                for w in ch.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let mut rng = Pcg32::seeded(61);
+        let x = randn(&mut rng, &[37, 120]);
+        let w = randn(&mut rng, &[120, 53]);
+        let a = matmul_parallel(&x, &w);
+        let b = ops::matmul_blocked(&x, &w);
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn parallel_dsg_vmm_matches_serial() {
+        let mut rng = Pcg32::seeded(62);
+        let x = randn(&mut rng, &[29, 64]);
+        let w = randn(&mut rng, &[64, 31]);
+        let wt = ops::transpose(&w);
+        let mask = Tensor::from_fn(&[29, 31], |i| if i % 4 == 0 { 1.0 } else { 0.0 });
+        let a = dsg_vmm_parallel(&x, &wt, &mask);
+        let b = crate::sparse::dsg_vmm(&x, &wt, &mask);
+        assert_eq!(a, b); // identical op order per row => bit-exact
+    }
+
+    #[test]
+    fn parallel_projection_matches_serial() {
+        let mut rng = Pcg32::seeded(63);
+        let x = randn(&mut rng, &[19, 96]);
+        let r = ternary_r(&mut rng, 24, 96, 3);
+        let ridx = TernaryIndex::from_dense(&r);
+        let a = project_rows_parallel(&x, &ridx);
+        let b = crate::drs::project_rows(&x, &r);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_row_works() {
+        let mut rng = Pcg32::seeded(64);
+        let x = randn(&mut rng, &[1, 16]);
+        let w = randn(&mut rng, &[16, 8]);
+        let a = matmul_parallel(&x, &w);
+        let b = ops::matmul_naive(&x, &w);
+        assert!(a.allclose(&b, 1e-4, 1e-4));
+    }
+}

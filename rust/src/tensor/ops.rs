@@ -1,0 +1,263 @@
+//! Host-side tensor ops: matmul (naive + blocked), transpose, im2col,
+//! relu.  The blocked matmul is the Fig-8 GEMM baseline; the sparse
+//! engines in `crate::sparse` compare against it.
+
+use super::Tensor;
+
+/// Naive triple-loop matmul — the correctness oracle for the optimized
+/// paths. a: (m, k), b: (k, n) -> (m, n).
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        for p in 0..k {
+            let av = ad[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Cache-blocked matmul with 4x4 register blocking — the "GEMM" baseline
+/// of Fig 8(a) (stands in for MKL sgemm; see DESIGN.md substitutions).
+///
+/// §Perf iteration L3-1: processing 4 rows of `a` per inner sweep reuses
+/// each loaded `b` row four times, ~1.9x over the previous saxpy loop.
+pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> Tensor {
+    const KC: usize = 256; // depth per block (L1-resident b panel rows)
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for p0 in (0..k).step_by(KC) {
+        let p1 = (p0 + KC).min(k);
+        let mut i = 0;
+        // 4-row micro-kernel: each b row load feeds 4 accum rows
+        while i + 4 <= m {
+            let (a0, a1, a2, a3) = (
+                &ad[i * k..(i + 1) * k],
+                &ad[(i + 1) * k..(i + 2) * k],
+                &ad[(i + 2) * k..(i + 3) * k],
+                &ad[(i + 3) * k..(i + 4) * k],
+            );
+            // split out into four disjoint row slices
+            let (o01, o23) = out[i * n..(i + 4) * n].split_at_mut(2 * n);
+            let (o0, o1) = o01.split_at_mut(n);
+            let (o2, o3) = o23.split_at_mut(n);
+            for p in p0..p1 {
+                let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+                if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                    continue;
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                for j in 0..n {
+                    let bv = brow[j];
+                    o0[j] += v0 * bv;
+                    o1[j] += v1 * bv;
+                    o2[j] += v2 * bv;
+                    o3[j] += v3 * bv;
+                }
+            }
+            i += 4;
+        }
+        // remainder rows
+        for ii in i..m {
+            let arow = &ad[ii * k..(ii + 1) * k];
+            let orow = &mut out[ii * n..(ii + 1) * n];
+            for p in p0..p1 {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Transpose a 2-D tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let ad = a.data();
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = ad[i * n + j];
+        }
+    }
+    Tensor::new(&[n, m], out)
+}
+
+/// ReLU in place.
+pub fn relu_inplace(t: &mut Tensor) {
+    for v in t.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// im2col: x (N, C, H, W) -> rows (N*P*Q, C*KH*KW) for conv-as-VMM
+/// (paper Fig 3a->3b).  `pad` is symmetric zero padding.
+pub fn im2col(
+    x: &Tensor,
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+) -> (Tensor, usize, usize) {
+    let (n, c, h, w) = (
+        x.shape()[0],
+        x.shape()[1],
+        x.shape()[2],
+        x.shape()[3],
+    );
+    let p = (h + 2 * pad - ksize) / stride + 1;
+    let q = (w + 2 * pad - ksize) / stride + 1;
+    let d = c * ksize * ksize;
+    let mut out = vec![0.0f32; n * p * q * d];
+    for ni in 0..n {
+        for pi in 0..p {
+            for qi in 0..q {
+                let row = ((ni * p + pi) * q + qi) * d;
+                let mut col = 0;
+                for ci in 0..c {
+                    for kh in 0..ksize {
+                        let hy = (pi * stride + kh) as isize - pad as isize;
+                        for kw in 0..ksize {
+                            let wx = (qi * stride + kw) as isize - pad as isize;
+                            let v = if hy >= 0
+                                && (hy as usize) < h
+                                && wx >= 0
+                                && (wx as usize) < w
+                            {
+                                x.at4(ni, ci, hy as usize, wx as usize)
+                            } else {
+                                0.0
+                            };
+                            out[row + col] = v;
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(&[n * p * q, d], out), p, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_t(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, rng.normal_vec(n, 1.0))
+    }
+
+    #[test]
+    fn naive_known_values() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul_naive(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Pcg32::seeded(11);
+        for &(m, k, n) in &[(1, 1, 1), (7, 13, 5), (64, 256, 32), (100, 300, 70)] {
+            let a = rand_t(&mut rng, &[m, k]);
+            let b = rand_t(&mut rng, &[k, n]);
+            let want = matmul_naive(&a, &b);
+            let got = matmul_blocked(&a, &b);
+            assert!(got.allclose(&want, 1e-3, 1e-3), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seeded(12);
+        let a = rand_t(&mut rng, &[5, 9]);
+        let t = transpose(&transpose(&a));
+        assert_eq!(a, t);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor::new(&[4], vec![-1.0, 0.0, 2.0, -0.5]);
+        relu_inplace(&mut t);
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, no pad: rows are just the channel pixels.
+        let x = Tensor::from_fn(&[1, 2, 2, 2], |i| i as f32);
+        let (rows, p, q) = im2col(&x, 1, 1, 0);
+        assert_eq!((p, q), (2, 2));
+        assert_eq!(rows.shape(), &[4, 2]);
+        // row for (h=0,w=1) = [x[0,0,0,1], x[0,1,0,1]] = [1, 5]
+        assert_eq!(rows.at2(1, 0), 1.0);
+        assert_eq!(rows.at2(1, 1), 5.0);
+    }
+
+    #[test]
+    fn im2col_conv_equals_direct() {
+        // conv via im2col x weight-matrix == direct convolution
+        let mut rng = Pcg32::seeded(13);
+        let (n, c, h, w, kk, co) = (2, 3, 6, 6, 3, 4);
+        let x = rand_t(&mut rng, &[n, c, h, w]);
+        let wt = rand_t(&mut rng, &[co, c * kk * kk]); // (K, CRS)
+        let (rows, p, q) = im2col(&x, kk, 1, 1);
+        let y = matmul_naive(&rows, &transpose(&wt)); // (NPQ, K)
+        // direct conv at a few positions
+        for &(ni, ko, pi, qi) in &[(0, 0, 0, 0), (1, 3, 5, 5), (0, 2, 3, 1)] {
+            let mut acc = 0.0f32;
+            for ci in 0..c {
+                for kh in 0..kk {
+                    for kw in 0..kk {
+                        let hy = pi as isize + kh as isize - 1;
+                        let wx = qi as isize + kw as isize - 1;
+                        if hy >= 0 && (hy as usize) < h && wx >= 0 && (wx as usize) < w
+                        {
+                            let xv = x.at4(ni, ci, hy as usize, wx as usize);
+                            let wv = wt.at2(ko, (ci * kk + kh) * kk + kw);
+                            acc += xv * wv;
+                        }
+                    }
+                }
+            }
+            let row = (ni * p + pi) * q + qi;
+            let got = y.at2(row, ko);
+            assert!((got - acc).abs() < 1e-3, "{got} vs {acc}");
+        }
+    }
+
+    #[test]
+    fn im2col_stride2() {
+        let x = Tensor::from_fn(&[1, 1, 4, 4], |i| i as f32);
+        let (rows, p, q) = im2col(&x, 2, 2, 0);
+        assert_eq!((p, q), (2, 2));
+        assert_eq!(rows.shape(), &[4, 4]);
+        // window at (0,0): pixels 0,1,4,5
+        assert_eq!(rows.data()[0..4], [0., 1., 4., 5.]);
+    }
+}

@@ -1,0 +1,79 @@
+//! Tiny leveled logger (stderr). `DSG_LOG=debug|info|warn|error` selects
+//! verbosity; default `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(255);
+
+fn threshold() -> u8 {
+    let t = THRESHOLD.load(Ordering::Relaxed);
+    if t != 255 {
+        return t;
+    }
+    let lvl = match std::env::var("DSG_LOG").as_deref() {
+        Ok("debug") => 0,
+        Ok("warn") => 2,
+        Ok("error") => 3,
+        _ => 1,
+    };
+    THRESHOLD.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the level programmatically (tests, CLI `-v`).
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log(level: Level, msg: &str) {
+    if (level as u8) < threshold() {
+        return;
+    }
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{t:.3} {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! debug { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, &format!($($t)*)) } }
+#[macro_export]
+macro_rules! info { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, &format!($($t)*)) } }
+#[macro_export]
+macro_rules! warn { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, &format!($($t)*)) } }
+#[macro_export]
+macro_rules! error { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, &format!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn set_level_filters() {
+        set_level(Level::Error);
+        log(Level::Debug, "should not panic, should not print");
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,201 @@
+//! Deterministic PRNG substrate (no `rand` crate in the offline env).
+//!
+//! PCG32 (Melissa O'Neill's `pcg32_random_r`) — small, fast, and good
+//! enough statistical quality for initialization, data synthesis, and the
+//! ternary Achlioptas projection matrices (paper eq. 6).  Every consumer
+//! takes an explicit seed so runs are reproducible end to end.
+
+/// PCG32: 64-bit state, 32-bit output, XSH-RR output function.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed with a stream id; distinct `(seed, stream)` pairs give
+    /// independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience single-argument constructor (stream 54).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        // 24 mantissa bits => exactly representable, never 1.0
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's method (unbiased enough for
+    /// our workloads; exact rejection for small n).
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller (one value per call; the pair's
+    /// sibling is discarded for simplicity — init paths are not hot).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-7 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Vector of N(0, std^2) values.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    /// Ternary Achlioptas entries (paper eq. 6):
+    /// +sqrt(s) w.p. 1/(2s), -sqrt(s) w.p. 1/(2s), 0 w.p. 1 - 1/s.
+    pub fn ternary_vec(&mut self, n: usize, s: u32) -> Vec<f32> {
+        let val = (s as f32).sqrt();
+        let p = 1.0 / (2.0 * s as f32);
+        (0..n)
+            .map(|_| {
+                let u = self.uniform();
+                if u < p {
+                    -val
+                } else if u < 2.0 * p {
+                    val
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A fresh generator derived from this one (for splitting streams).
+    pub fn split(&mut self) -> Pcg32 {
+        Pcg32::new(self.next_u64(), self.next_u64() | 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::seeded(7);
+        let mut b = Pcg32::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(7, 1);
+        let mut b = Pcg32::new(7, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Pcg32::seeded(3);
+        let xs: Vec<f32> = (0..20_000).map(|_| r.uniform()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg32::seeded(4);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+        // all residues reachable
+        let mut seen = [false; 13];
+        for _ in 0..10_000 {
+            seen[r.below(13) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(5);
+        let xs = r.normal_vec(50_000, 1.0);
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn ternary_distribution() {
+        let mut r = Pcg32::seeded(6);
+        let xs = r.ternary_vec(60_000, 3);
+        let s3 = 3f32.sqrt();
+        let zero = xs.iter().filter(|&&x| x == 0.0).count() as f32 / xs.len() as f32;
+        let pos = xs.iter().filter(|&&x| x == s3).count() as f32 / xs.len() as f32;
+        let neg = xs.iter().filter(|&&x| x == -s3).count() as f32 / xs.len() as f32;
+        assert!((zero - 2.0 / 3.0).abs() < 0.02, "P(0) = {zero}");
+        assert!((pos - 1.0 / 6.0).abs() < 0.02, "P(+) = {pos}");
+        assert!((neg - 1.0 / 6.0).abs() < 0.02, "P(-) = {neg}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg32::seeded(9);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

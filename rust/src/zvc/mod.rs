@@ -1,0 +1,185 @@
+//! Zero-value compression (ZVC) codec — Zhang'00 / Vijaykumar'15 /
+//! Rhu'18, as used by the paper for representational-cost reduction
+//! (§3.3, Fig 6).
+//!
+//! Encoding: a 1-bit-per-element presence bitmask + the packed non-zero
+//! f32 values.  Compressed size = ceil(n/8) bytes + 4 * nnz bytes; the
+//! paper's memory figures (and our Fig 6 bench) use exactly this
+//! arithmetic, and this module is the executable proof that the encoding
+//! round-trips.
+
+/// A ZVC-compressed f32 buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Compressed {
+    pub n: usize,
+    pub bitmask: Vec<u8>,
+    pub values: Vec<f32>,
+}
+
+impl Compressed {
+    /// Compressed size in bytes (bitmask + packed values).
+    pub fn nbytes(&self) -> usize {
+        self.bitmask.len() + 4 * self.values.len()
+    }
+
+    /// Dense (uncompressed) size in bytes.
+    pub fn dense_nbytes(&self) -> usize {
+        4 * self.n
+    }
+
+    /// Compression ratio (dense / compressed); > 1 means we won.
+    pub fn ratio(&self) -> f64 {
+        self.dense_nbytes() as f64 / self.nbytes() as f64
+    }
+}
+
+/// Compress a dense f32 slice.
+pub fn compress(xs: &[f32]) -> Compressed {
+    let n = xs.len();
+    let mut bitmask = vec![0u8; n.div_ceil(8)];
+    let mut values = Vec::new();
+    for (i, &x) in xs.iter().enumerate() {
+        if x != 0.0 {
+            bitmask[i / 8] |= 1 << (i % 8);
+            values.push(x);
+        }
+    }
+    Compressed { n, bitmask, values }
+}
+
+/// Decompress back to a dense vector.
+pub fn decompress(c: &Compressed) -> Vec<f32> {
+    let mut out = vec![0.0f32; c.n];
+    let mut vi = 0;
+    for i in 0..c.n {
+        if c.bitmask[i / 8] & (1 << (i % 8)) != 0 {
+            out[i] = c.values[vi];
+            vi += 1;
+        }
+    }
+    debug_assert_eq!(vi, c.values.len());
+    out
+}
+
+/// Analytic compressed size for `n` f32 elements at `sparsity` zero
+/// fraction — the formula behind the Fig 6 memory model (matches
+/// `compress(..).nbytes()` exactly for that sparsity).
+pub fn zvc_bytes(n: usize, sparsity: f64) -> usize {
+    let nnz = ((1.0 - sparsity) * n as f64).round() as usize;
+    n.div_ceil(8) + 4 * nnz
+}
+
+/// Serialize to bytes (checkpointing sparse activations).
+pub fn to_bytes(c: &Compressed) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + c.nbytes());
+    out.extend_from_slice(&(c.n as u64).to_le_bytes());
+    out.extend_from_slice(&c.bitmask);
+    for v in &c.values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize from bytes.
+pub fn from_bytes(b: &[u8]) -> Option<Compressed> {
+    if b.len() < 8 {
+        return None;
+    }
+    let n = u64::from_le_bytes(b[..8].try_into().ok()?) as usize;
+    let mlen = n.div_ceil(8);
+    if b.len() < 8 + mlen {
+        return None;
+    }
+    let bitmask = b[8..8 + mlen].to_vec();
+    let nnz: usize = bitmask.iter().map(|x| x.count_ones() as usize).sum();
+    let vstart = 8 + mlen;
+    if b.len() != vstart + 4 * nnz {
+        return None;
+    }
+    let values = (0..nnz)
+        .map(|i| {
+            f32::from_le_bytes(b[vstart + 4 * i..vstart + 4 * i + 4].try_into().unwrap())
+        })
+        .collect();
+    Some(Compressed { n, bitmask, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn sparse_vec(rng: &mut Pcg32, n: usize, sparsity: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| if rng.uniform() < sparsity { 0.0 } else { rng.normal() })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg32::seeded(21);
+        for &n in &[0usize, 1, 7, 8, 9, 1000] {
+            for &s in &[0.0f32, 0.5, 0.9, 1.0] {
+                let xs = sparse_vec(&mut rng, n, s);
+                let c = compress(&xs);
+                assert_eq!(decompress(&c), xs, "n={n} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn ratio_improves_with_sparsity() {
+        let mut rng = Pcg32::seeded(22);
+        let dense = compress(&sparse_vec(&mut rng, 4096, 0.0));
+        let half = compress(&sparse_vec(&mut rng, 4096, 0.5));
+        let ninety = compress(&sparse_vec(&mut rng, 4096, 0.9));
+        assert!(dense.ratio() < 1.0); // bitmask overhead loses when dense
+        assert!(half.ratio() > 1.5 && half.ratio() < 2.1);
+        assert!(ninety.ratio() > 5.0);
+    }
+
+    #[test]
+    fn analytic_matches_actual() {
+        let mut rng = Pcg32::seeded(23);
+        let n = 10_000;
+        let xs = sparse_vec(&mut rng, n, 0.8);
+        let c = compress(&xs);
+        let actual_sparsity = 1.0 - c.values.len() as f64 / n as f64;
+        assert_eq!(zvc_bytes(n, actual_sparsity), c.nbytes());
+    }
+
+    #[test]
+    fn negative_zero_is_nonzero_by_bits_but_equal_zero() {
+        // -0.0 == 0.0 in IEEE; it compresses away (value-centric, like the
+        // frequent-value cache the codec descends from).
+        let c = compress(&[-0.0, 1.0]);
+        assert_eq!(c.values, vec![1.0]);
+        assert_eq!(decompress(&c), vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let mut rng = Pcg32::seeded(24);
+        let xs = sparse_vec(&mut rng, 333, 0.7);
+        let c = compress(&xs);
+        let b = to_bytes(&c);
+        let c2 = from_bytes(&b).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn serde_rejects_truncated() {
+        let c = compress(&[1.0, 0.0, 2.0]);
+        let b = to_bytes(&c);
+        assert!(from_bytes(&b[..b.len() - 1]).is_none());
+        assert!(from_bytes(&[1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        let c = compress(&[0.0; 16]);
+        assert_eq!(c.nbytes(), 2); // 16 bits of mask, no values
+        let c = compress(&[1.0; 16]);
+        assert_eq!(c.nbytes(), 2 + 64);
+    }
+}

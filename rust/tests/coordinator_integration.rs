@@ -1,0 +1,154 @@
+//! Coordinator integration: end-to-end training through the rust
+//! orchestrator + PJRT artifacts.  Requires `make artifacts`.
+
+use dsg::config::{GammaSchedule, RunConfig};
+use dsg::coordinator::{checkpoint, Trainer};
+use dsg::datasets;
+use dsg::runtime::{Meta, Runtime};
+
+fn setup(variant: &str) -> (Runtime, Meta) {
+    let dir = dsg::artifacts_dir();
+    assert!(dir.join("index.json").exists(), "run `make artifacts` first");
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(&dir, variant).unwrap();
+    (rt, meta)
+}
+
+fn tiny_cfg(model: &str, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::preset_for_model(model);
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.train_size = 512;
+    cfg.test_size = 128;
+    cfg
+}
+
+#[test]
+fn mlp_loss_decreases_over_training() {
+    let (rt, meta) = setup("mlp");
+    let cfg = tiny_cfg("mlp", 60);
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(0.2);
+    let mut t = Trainer::new(&rt, meta, cfg.seed).unwrap();
+    let acc = t.train(&cfg, &train, &test).unwrap();
+    let first = t.history.steps[..5].iter().map(|s| s.loss).sum::<f32>() / 5.0;
+    let last = t.history.steps[55..].iter().map(|s| s.loss).sum::<f32>() / 5.0;
+    assert!(
+        last < first * 0.7,
+        "loss not decreasing: first5 {first:.3} last5 {last:.3}"
+    );
+    assert!(acc > 0.3, "eval acc {acc} barely above chance after 60 steps");
+}
+
+#[test]
+fn densities_track_gamma_through_coordinator() {
+    let (rt, meta) = setup("mlp");
+    let mut t = Trainer::new(&rt, meta, 1).unwrap();
+    let data = datasets::fashion_like(64, 2);
+    let mut it = datasets::BatchIter::new(&data, t.meta.batch, 3);
+    for &gamma in &[0.0f32, 0.5, 0.9] {
+        let (xs, ys) = it.next_batch();
+        let out = t.step(&xs, &ys, gamma, 0.01).unwrap();
+        for d in &out.densities {
+            if gamma == 0.0 {
+                assert_eq!(*d, 1.0, "gamma 0 must keep all");
+            } else {
+                assert!(
+                    (d - (1.0 - gamma)).abs() < 0.15,
+                    "gamma {gamma}: density {d}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn projection_refresh_changes_wp_after_updates() {
+    let (rt, meta) = setup("mlp");
+    let mut t = Trainer::new(&rt, meta, 1).unwrap();
+    let wp_before = t.state.wps[0].clone();
+    let data = datasets::fashion_like(128, 4);
+    let mut it = datasets::BatchIter::new(&data, t.meta.batch, 5);
+    for _ in 0..3 {
+        let (xs, ys) = it.next_batch();
+        t.step(&xs, &ys, 0.5, 0.05).unwrap();
+    }
+    // weights moved but wp is stale until refresh
+    assert_eq!(t.state.wps[0], wp_before);
+    t.refresh_projection().unwrap();
+    assert_ne!(t.state.wps[0], wp_before, "refresh must recompute Wp");
+}
+
+#[test]
+fn dense_variant_trains_without_projection() {
+    let (rt, meta) = setup("mlp_dense");
+    assert_eq!(meta.counts.wps, 0);
+    let cfg = tiny_cfg("mlp_dense", 20);
+    let data = datasets::fashion_like(512, 6);
+    let (train, test) = data.split(0.2);
+    let mut t = Trainer::new(&rt, meta, 3).unwrap();
+    let _ = t.train(&cfg, &train, &test).unwrap();
+    assert!(t.history.steps.last().unwrap().loss.is_finite());
+}
+
+#[test]
+fn gamma_warmup_schedule_is_applied() {
+    let (rt, meta) = setup("mlp");
+    let mut cfg = tiny_cfg("mlp", 30);
+    cfg.gamma = GammaSchedule::Warmup { target: 0.8, warmup: 20 };
+    let data = datasets::fashion_like(512, 7);
+    let (train, test) = data.split(0.2);
+    let mut t = Trainer::new(&rt, meta, 4).unwrap();
+    t.train(&cfg, &train, &test).unwrap();
+    // densities early should be high (low gamma), late near 0.2
+    let d0 = t.history.steps[1].densities[0];
+    let d_late = t.history.steps[29].densities[0];
+    assert!(d0 > 0.8, "early density {d0} should be near 1");
+    assert!((d_late - 0.2).abs() < 0.15, "late density {d_late} should be ~0.2");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let (rt, meta) = setup("mlp");
+    let cfg = tiny_cfg("mlp", 25);
+    let data = datasets::fashion_like(512, 8);
+    let (train, test) = data.split(0.25);
+    let mut t = Trainer::new(&rt, meta.clone(), 5).unwrap();
+    let acc = t.train(&cfg, &train, &test).unwrap();
+
+    let dir = std::env::temp_dir().join("dsg_int_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("mlp.ckpt");
+    checkpoint::save(&p, &t.state).unwrap();
+
+    let mut t2 = Trainer::new(&rt, meta, 99).unwrap(); // different init
+    t2.state = checkpoint::load(&p).unwrap();
+    let acc2 = t2.evaluate(&test, 0.5).unwrap();
+    assert!(
+        (acc - acc2).abs() < 1e-6,
+        "restored eval {acc2} != trained eval {acc}"
+    );
+}
+
+#[test]
+fn lenet_conv_path_trains() {
+    let (rt, meta) = setup("lenet");
+    let cfg = tiny_cfg("lenet", 30);
+    let data = datasets::fashion_like(512, 9);
+    let (train, test) = data.split(0.2);
+    let mut t = Trainer::new(&rt, meta, 6).unwrap();
+    t.train(&cfg, &train, &test).unwrap();
+    let first = t.history.steps[..5].iter().map(|s| s.loss).sum::<f32>() / 5.0;
+    let last = t.history.steps[25..].iter().map(|s| s.loss).sum::<f32>() / 5.0;
+    assert!(last < first, "lenet loss not decreasing: {first:.3} -> {last:.3}");
+    // conv + dense layers all report densities
+    assert_eq!(t.history.steps[0].densities.len(), 4);
+}
+
+#[test]
+fn wrong_batch_size_is_rejected() {
+    let (rt, meta) = setup("mlp");
+    let mut t = Trainer::new(&rt, meta, 1).unwrap();
+    let err = t.step(&[0.0; 10], &[0; 2], 0.5, 0.1);
+    assert!(err.is_err());
+}

@@ -1,0 +1,163 @@
+//! Native-engine parity: the rust-native forward (real column skipping)
+//! must agree with the HLO forward (Pallas mask-multiply) on the same
+//! checkpointed weights.  Small float divergence near the top-k
+//! threshold can flip individual mask bits, so parity is asserted on
+//! predictions and logit closeness, not bit-exactness.
+
+use dsg::coordinator::Trainer;
+use dsg::datasets;
+use dsg::native::{Mode, NativeModel};
+use dsg::runtime::{Meta, Runtime};
+use dsg::Tensor;
+
+fn trained(rt: &Runtime, variant: &str, steps: usize) -> Trainer {
+    let dir = dsg::artifacts_dir();
+    let meta = Meta::load(&dir, variant).unwrap();
+    let mut cfg = dsg::config::RunConfig::preset_for_model(variant);
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    let data = datasets::fashion_like(768, 21);
+    let (train, test) = data.split(0.25);
+    let mut t = Trainer::new(rt, meta, 21).unwrap();
+    t.train(&cfg, &train, &test).unwrap();
+    t
+}
+
+fn batch_for(t: &Trainer) -> (Vec<f32>, Tensor) {
+    let data = datasets::fashion_like(t.meta.batch, 77);
+    let (xs, _) = datasets::BatchIter::new(&data, t.meta.batch, 1).next_batch();
+    let mut shape = vec![t.meta.batch];
+    shape.extend_from_slice(&t.meta.input_shape);
+    let xt = Tensor::new(&shape, xs.clone());
+    (xs, xt)
+}
+
+#[test]
+fn mlp_native_matches_hlo_dense() {
+    // gamma = 0: no masks in play, logits must agree to float tolerance.
+    let rt = Runtime::cpu().unwrap();
+    let t = trained(&rt, "mlp", 40);
+    let native = NativeModel::new(&t.meta, &t.state).unwrap();
+    let (xs, xt) = batch_for(&t);
+    let hlo = t.forward(&xs, 0.0).unwrap();
+    let nat = native.forward(&xt, 0.0, Mode::Dsg).unwrap();
+    let maxdiff = hlo
+        .iter()
+        .zip(nat.logits.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxdiff < 2e-2, "dense-path logit divergence {maxdiff}");
+}
+
+#[test]
+fn mlp_native_matches_hlo_sparse() {
+    let rt = Runtime::cpu().unwrap();
+    let t = trained(&rt, "mlp", 40);
+    let native = NativeModel::new(&t.meta, &t.state).unwrap();
+    let (xs, xt) = batch_for(&t);
+    let gamma = 0.7;
+    let hlo = t.forward(&xs, gamma).unwrap();
+    let nat = native.forward(&xt, gamma, Mode::Dsg).unwrap();
+    // predictions agree on nearly every sample
+    let c = t.meta.classes;
+    let argmax = |row: &[f32]| {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap()
+    };
+    let mut agree = 0;
+    for i in 0..t.meta.batch {
+        let a = argmax(&hlo[i * c..(i + 1) * c]);
+        let b = argmax(&nat.logits.data()[i * c..(i + 1) * c]);
+        if a == b {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree as f64 / t.meta.batch as f64 > 0.95,
+        "only {agree}/{} predictions agree at gamma {gamma}",
+        t.meta.batch
+    );
+    // densities match the gamma target
+    for s in &nat.stats {
+        assert!((s.density - (1.0 - gamma) as f64).abs() < 0.12, "{s:?}");
+    }
+}
+
+#[test]
+fn lenet_native_conv_path_matches() {
+    let rt = Runtime::cpu().unwrap();
+    let t = trained(&rt, "lenet", 40);
+    let native = NativeModel::new(&t.meta, &t.state).unwrap();
+    let (xs, xt) = batch_for(&t);
+    let hlo = t.forward(&xs, 0.0).unwrap();
+    let nat = native.forward(&xt, 0.0, Mode::Dsg).unwrap();
+    let maxdiff = hlo
+        .iter()
+        .zip(nat.logits.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxdiff < 5e-2, "conv dense-path logit divergence {maxdiff}");
+}
+
+#[test]
+fn lenet_native_sparse_agrees_on_predictions() {
+    let rt = Runtime::cpu().unwrap();
+    let t = trained(&rt, "lenet", 40);
+    let native = NativeModel::new(&t.meta, &t.state).unwrap();
+    let (xs, xt) = batch_for(&t);
+    let gamma = 0.6;
+    let hlo = t.forward(&xs, gamma).unwrap();
+    let preds = native.predict(&xt, gamma, Mode::Dsg).unwrap();
+    let c = t.meta.classes;
+    let mut agree = 0;
+    for (i, &p) in preds.iter().enumerate() {
+        let row = &hlo[i * c..(i + 1) * c];
+        let a = row
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.total_cmp(y.1))
+            .map(|(j, _)| j)
+            .unwrap();
+        if a == p {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree as f64 / preds.len() as f64 > 0.9,
+        "only {agree}/{} conv predictions agree",
+        preds.len()
+    );
+}
+
+#[test]
+fn native_dsg_is_faster_than_native_dense_at_high_sparsity() {
+    // The whole point: on the native engine the mask removes real work.
+    let rt = Runtime::cpu().unwrap();
+    let t = trained(&rt, "lenet", 10);
+    let native = NativeModel::new(&t.meta, &t.state).unwrap();
+    let (_, xt) = batch_for(&t);
+    // warmup
+    native.forward(&xt, 0.9, Mode::Dsg).unwrap();
+    let t0 = std::time::Instant::now();
+    let sparse = native.forward(&xt, 0.9, Mode::Dsg).unwrap();
+    let t_sparse: f64 = sparse.stats.iter().map(|s| s.secs - s.drs_secs).sum();
+    let _ = t0.elapsed();
+    let dense = native.forward(&xt, 0.0, Mode::Dense).unwrap();
+    let t_dense: f64 = dense.stats.iter().map(|s| s.secs).sum();
+    assert!(
+        t_sparse < t_dense,
+        "post-search sparse exec {t_sparse:.4}s not faster than dense {t_dense:.4}s"
+    );
+}
+
+#[test]
+fn native_rejects_meta_without_topology() {
+    let dir = dsg::artifacts_dir();
+    let mut meta = Meta::load(&dir, "mlp").unwrap();
+    meta.units.clear();
+    let st = dsg::coordinator::ModelState::init(&meta, 1);
+    assert!(NativeModel::new(&meta, &st).is_err());
+}

@@ -1,0 +1,339 @@
+//! Property-based tests over the coordinator-side substrates using the
+//! in-repo mini framework (`dsg::testing`).  These encode the invariants
+//! the paper's machinery depends on.
+
+use dsg::drs::projection::ternary_r;
+use dsg::drs::topk::{mask_density, select_mask, shared_threshold, SelectionStrategy};
+use dsg::sparse;
+use dsg::tensor::{ops, Tensor};
+use dsg::testing::{forall, gen};
+use dsg::util::Pcg32;
+use dsg::zvc;
+
+#[test]
+fn prop_zvc_roundtrip() {
+    forall(
+        "zvc compress/decompress is identity",
+        200,
+        11,
+        |rng| {
+            let n = gen::usize_in(rng, 0, 700);
+            let s = rng.uniform();
+            gen::sparse_f32_vec(rng, n, s)
+        },
+        |xs| {
+            let c = zvc::compress(xs);
+            if zvc::decompress(&c) == *xs {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_zvc_serialization_roundtrip() {
+    forall(
+        "zvc byte serde is identity",
+        100,
+        12,
+        |rng| {
+            let n = gen::usize_in(rng, 0, 300);
+            gen::sparse_f32_vec(rng, n, 0.6)
+        },
+        |xs| {
+            let c = zvc::compress(xs);
+            match zvc::from_bytes(&zvc::to_bytes(&c)) {
+                Some(c2) if c2 == c => Ok(()),
+                _ => Err("serde mismatch".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_zvc_nbytes_matches_analytic() {
+    forall(
+        "analytic zvc size == actual",
+        100,
+        13,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 2000);
+            let s = rng.uniform();
+            gen::sparse_f32_vec(rng, n, s)
+        },
+        |xs| {
+            let c = zvc::compress(xs);
+            let sp = 1.0 - c.values.len() as f64 / xs.len() as f64;
+            if zvc::zvc_bytes(xs.len(), sp) == c.nbytes() {
+                Ok(())
+            } else {
+                Err("analytic size mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_masked_matmul_equals_mask_times_dense() {
+    forall(
+        "dsg_vmm == dense * mask",
+        40,
+        14,
+        |rng| {
+            let m = gen::usize_in(rng, 1, 12);
+            let d = gen::usize_in(rng, 1, 40);
+            let n = gen::usize_in(rng, 1, 16);
+            let x = Tensor::new(&[m, d], gen::f32_vec(rng, m * d, 1.0));
+            let w = Tensor::new(&[d, n], gen::f32_vec(rng, d * n, 1.0));
+            let mask = Tensor::from_fn(&[m, n], |i| {
+                if (i * 2654435761) % 3 == 0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+            (x, w, mask)
+        },
+        |(x, w, mask)| {
+            let wt = ops::transpose(w);
+            let got = sparse::dsg_vmm(x, &wt, mask);
+            let dense = ops::matmul_naive(x, w);
+            for i in 0..got.len() {
+                let want = dense.data()[i] * mask.data()[i];
+                if (got.data()[i] - want).abs() > 1e-3 {
+                    return Err(format!("elem {i}: {} vs {want}", got.data()[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_threshold_monotone_in_gamma() {
+    forall(
+        "higher gamma => higher threshold => sparser mask",
+        50,
+        15,
+        |rng| {
+            let b = gen::usize_in(rng, 1, 8);
+            let w = gen::usize_in(rng, 4, 300);
+            Tensor::new(&[b, w], gen::f32_vec(rng, b * w, 1.0))
+        },
+        |virt| {
+            let mut rng = Pcg32::seeded(0);
+            let mut last = f32::NEG_INFINITY;
+            let mut last_density = f64::INFINITY;
+            for g in [0.0f32, 0.25, 0.5, 0.75, 0.9] {
+                let t = shared_threshold(virt, g);
+                if t < last {
+                    return Err(format!("threshold not monotone at gamma {g}"));
+                }
+                let m = select_mask(virt, g, SelectionStrategy::Drs, &mut rng);
+                let d = mask_density(&m);
+                if d > last_density + 1e-9 {
+                    return Err(format!("density not monotone at gamma {g}"));
+                }
+                last = t;
+                last_density = d;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_projection_preserves_inner_products_statistically() {
+    // JLL (paper eq. 4): average relative inner-product error over pairs
+    // is bounded for k chosen by the calibrated bound at eps = 0.5.
+    forall(
+        "projection preserves inner products",
+        10,
+        16,
+        |rng| {
+            let d = gen::usize_in(rng, 512, 2048);
+            let k = dsg::costmodel::jll::projection_dim(0.5, 256, d);
+            let r = ternary_r(rng, k, d, 3);
+            let scale = (1.0 / d as f32).sqrt();
+            let x = Tensor::new(&[1, d], gen::f32_vec(rng, d, scale));
+            let w = Tensor::new(&[1, d], gen::f32_vec(rng, d, scale));
+            (x, w, r)
+        },
+        |(x, w, r)| {
+            let fx = dsg::drs::project_rows(x, r);
+            let fw = dsg::drs::project_rows(w, r);
+            let hi: f32 = x.data().iter().zip(w.data()).map(|(a, b)| a * b).sum();
+            let lo: f32 = fx.data().iter().zip(fw.data()).map(|(a, b)| a * b).sum();
+            // |x| ~ |w| ~ 1, so absolute error ~ eps-scale; allow 4 sigma
+            if (hi - lo).abs() < 0.5 {
+                Ok(())
+            } else {
+                Err(format!("inner product error {} too large", (hi - lo).abs()))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_ternary_index_matches_dense_projection() {
+    forall(
+        "index-form projection == dense matmul projection",
+        30,
+        17,
+        |rng| {
+            let d = gen::usize_in(rng, 2, 80);
+            let k = gen::usize_in(rng, 1, 40);
+            let r = ternary_r(rng, k, d, 3);
+            let x = Tensor::new(&[3, d], gen::f32_vec(rng, 3 * d, 1.0));
+            (x, r)
+        },
+        |(x, r)| {
+            let got = dsg::drs::project_rows(x, r);
+            let k = r.shape()[0] as f32;
+            let mut want = ops::matmul_naive(x, &ops::transpose(r));
+            for v in want.data_mut() {
+                *v /= k.sqrt();
+            }
+            if got.allclose(&want, 1e-3, 1e-3) {
+                Ok(())
+            } else {
+                Err("projection mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_im2col_row_count_and_padding() {
+    forall(
+        "im2col geometry",
+        40,
+        18,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 3);
+            let c = gen::usize_in(rng, 1, 4);
+            let h = gen::usize_in(rng, 3, 12);
+            let k = gen::usize_in(rng, 1, 3);
+            let pad = gen::usize_in(rng, 0, 1);
+            let x = Tensor::new(&[n, c, h, h], gen::f32_vec(rng, n * c * h * h, 1.0));
+            (x, k, pad)
+        },
+        |(x, k, pad)| {
+            let (rows, p, q) = ops::im2col(x, *k, 1, *pad);
+            let n = x.shape()[0];
+            let c = x.shape()[1];
+            let h = x.shape()[2];
+            let want_p = h + 2 * pad - k + 1;
+            if p != want_p || q != want_p {
+                return Err(format!("bad out dims {p}x{q}, want {want_p}"));
+            }
+            if rows.shape() != [n * p * q, c * k * k] {
+                return Err(format!("bad rows shape {:?}", rows.shape()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_random_selection_is_exactly_sized() {
+    forall(
+        "random strategy keeps exact count per sample",
+        40,
+        19,
+        |rng| {
+            let b = gen::usize_in(rng, 1, 6);
+            let w = gen::usize_in(rng, 2, 120);
+            let g = rng.uniform() * 0.95;
+            (Tensor::new(&[b, w], gen::f32_vec(rng, b * w, 1.0)), g)
+        },
+        |(virt, g)| {
+            let mut rng = Pcg32::seeded(7);
+            let m = select_mask(virt, *g, SelectionStrategy::Random, &mut rng);
+            let w = virt.shape()[1];
+            let keep = w - ((g * w as f32).floor() as usize).min(w - 1);
+            for b in 0..virt.shape()[0] {
+                let got: f32 = m.data()[b * w..(b + 1) * w].iter().sum();
+                if got != keep as f32 {
+                    return Err(format!("sample {b}: kept {got}, want {keep}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    forall(
+        "json write->parse is identity",
+        60,
+        20,
+        |rng| {
+            fn build(rng: &mut Pcg32, depth: usize) -> dsg::Json {
+                use dsg::Json;
+                let choice = if depth == 0 { rng.below(4) } else { rng.below(6) };
+                match choice {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.uniform() < 0.5),
+                    2 => Json::Num((rng.normal() * 100.0).round() as f64),
+                    3 => Json::Str(format!("s{}\n\"{}", rng.below(100), rng.below(10))),
+                    4 => Json::Arr((0..rng.below(4)).map(|_| build(rng, depth - 1)).collect()),
+                    _ => {
+                        let mut m = std::collections::BTreeMap::new();
+                        for i in 0..rng.below(4) {
+                            m.insert(format!("k{i}"), build(rng, depth - 1));
+                        }
+                        Json::Obj(m)
+                    }
+                }
+            }
+            build(rng, 3)
+        },
+        |j| {
+            let txt = j.to_string();
+            match dsg::Json::parse(&txt) {
+                Ok(j2) if j2 == *j => Ok(()),
+                Ok(_) => Err(format!("roundtrip changed value: {txt}")),
+                Err(e) => Err(format!("reparse failed: {e} on {txt}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_states() {
+    use dsg::coordinator::{checkpoint, ModelState};
+    use dsg::runtime::HostTensor;
+    let dir = std::env::temp_dir().join("dsg_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        "checkpoint save/load is identity",
+        25,
+        21,
+        |rng| {
+            let mk = |rng: &mut Pcg32| {
+                let n = gen::usize_in(rng, 1, 5);
+                let m = gen::usize_in(rng, 1, 7);
+                HostTensor::f32(&[n, m], gen::f32_vec(rng, n * m, 1.0))
+            };
+            ModelState {
+                state: (0..gen::usize_in(rng, 1, 4)).map(|_| mk(rng)).collect(),
+                wps: (0..gen::usize_in(rng, 0, 2)).map(|_| mk(rng)).collect(),
+                rs: (0..gen::usize_in(rng, 0, 2)).map(|_| mk(rng)).collect(),
+            }
+        },
+        |ms| {
+            let p = dir.join("prop.ckpt");
+            checkpoint::save(&p, ms).map_err(|e| e.to_string())?;
+            let ms2 = checkpoint::load(&p).map_err(|e| e.to_string())?;
+            if ms.state == ms2.state && ms.wps == ms2.wps && ms.rs == ms2.rs {
+                Ok(())
+            } else {
+                Err("state mismatch".into())
+            }
+        },
+    );
+}

@@ -1,0 +1,213 @@
+//! Runtime integration: load real HLO artifacts through PJRT, execute,
+//! and compare against golden vectors produced by the python side.
+//!
+//! These tests REQUIRE `make artifacts`.  They are the cross-language
+//! proof that the rust coordinator and the JAX/Pallas compute agree.
+
+use dsg::runtime::{golden, Golden, HostTensor, Meta, Runtime};
+
+fn artifacts() -> std::path::PathBuf {
+    let d = dsg::artifacts_dir();
+    assert!(
+        d.join("index.json").exists(),
+        "artifacts not built — run `make artifacts` first (looked in {d:?})"
+    );
+    d
+}
+
+#[test]
+fn kernel_masked_matmul_matches_python_golden() {
+    let dir = artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir.join("kernels/masked_matmul.hlo.txt")).unwrap();
+    let g = Golden::load(&dir.join("kernels/masked_matmul")).unwrap();
+    let x = g.get("x").unwrap();
+    let w = g.get("w").unwrap();
+    let mask = g.get("mask").unwrap();
+    let want = g.get("out").unwrap();
+    let outs = exe.run(&[x.clone(), w.clone(), mask.clone()]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let diff = golden::max_abs_diff(&outs[0], want);
+    assert!(diff < 1e-4, "pallas masked_matmul mismatch: {diff}");
+}
+
+#[test]
+fn mlp_train_step_matches_python_golden() {
+    // Full cross-language check: 29 inputs -> 24 outputs, exact layout.
+    let dir = artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(&dir, "mlp").unwrap();
+    let exe = rt.load_artifact(&meta, "train").unwrap();
+    let g = Golden::load(&dir.join("golden/mlp_step")).unwrap();
+    let ins: Vec<HostTensor> = g.with_prefix("in").into_iter().cloned().collect();
+    let ins = meta.filter_kept("train", ins);
+    let wants = g.with_prefix("out");
+    let outs = exe.run(&ins).unwrap();
+    assert_eq!(outs.len(), wants.len(), "output arity");
+    let mut worst = (0.0f32, String::new());
+    for (i, (got, want)) in outs.iter().zip(&wants).enumerate() {
+        assert_eq!(got.shape(), want.shape(), "output {i} shape");
+        let d = golden::max_abs_diff(got, want);
+        if d > worst.0 {
+            worst = (d, format!("out{i}"));
+        }
+    }
+    assert!(
+        worst.0 < 5e-3,
+        "rust-executed train step diverges from python golden at {} by {}",
+        worst.1,
+        worst.0
+    );
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let dir = artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(&dir, "mlp").unwrap();
+    let exe = rt.load_artifact(&meta, "train").unwrap();
+    let g = Golden::load(&dir.join("golden/mlp_step")).unwrap();
+    let ins: Vec<HostTensor> = g.with_prefix("in").into_iter().cloned().collect();
+    let ins = meta.filter_kept("train", ins);
+    let a = exe.run(&ins).unwrap();
+    let b = exe.run(&ins).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(golden::max_abs_diff(x, y), 0.0);
+    }
+}
+
+#[test]
+fn forward_artifact_runs_and_is_shaped() {
+    let dir = artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(&dir, "mlp").unwrap();
+    let exe = rt.load_artifact(&meta, "forward").unwrap();
+    let st = dsg::coordinator::ModelState::init(&meta, 3);
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    inputs.extend(st.params(&meta).iter().cloned());
+    inputs.extend(st.bn(&meta).iter().cloned());
+    inputs.extend(st.bn_state(&meta).iter().cloned());
+    inputs.extend(st.wps.iter().cloned());
+    inputs.extend(st.rs.iter().cloned());
+    inputs.push(HostTensor::f32(
+        &[meta.batch, 784],
+        vec![0.1; meta.batch * 784],
+    ));
+    inputs.push(HostTensor::scalar_f32(0.5));
+    let inputs = meta.filter_kept("forward", inputs);
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(outs[0].shape(), &[meta.batch, meta.classes]);
+    // densities come after logits, one per dsg layer
+    assert_eq!(outs.len(), 1 + meta.counts.dsg);
+}
+
+#[test]
+fn project_artifact_shapes_match_meta() {
+    let dir = artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(&dir, "mlp").unwrap();
+    let exe = rt.load_artifact(&meta, "project").unwrap();
+    let st = dsg::coordinator::ModelState::init(&meta, 4);
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    for w in st.dsg_weights(&meta) {
+        inputs.push(w.clone());
+    }
+    inputs.extend(st.rs.iter().cloned());
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(outs.len(), meta.counts.wps);
+    for (o, spec) in outs.iter().zip(&meta.wps) {
+        assert_eq!(o.shape(), &spec.shape[..]);
+    }
+}
+
+#[test]
+fn project_matches_host_drs_projection() {
+    // The HLO projection (Pallas kernel) and the rust host projection
+    // (TernaryIndex adds) must agree on the same R and W.
+    let dir = artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(&dir, "mlp").unwrap();
+    let exe = rt.load_artifact(&meta, "project").unwrap();
+    let st = dsg::coordinator::ModelState::init(&meta, 5);
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    for w in st.dsg_weights(&meta) {
+        inputs.push(w.clone());
+    }
+    inputs.extend(st.rs.iter().cloned());
+    let outs = exe.run(&inputs).unwrap();
+
+    // host-side: wp = R W / sqrt(k) for the first dsg layer
+    let w0 = st.dsg_weights(&meta)[0];
+    let r0 = &st.rs[0];
+    let wt = dsg::Tensor::new(w0.shape(), w0.as_f32().unwrap().to_vec());
+    let rt_ = dsg::Tensor::new(r0.shape(), r0.as_f32().unwrap().to_vec());
+    let want = dsg::drs::project_weights(&rt_, &wt);
+    let got = outs[0].as_f32().unwrap();
+    let maxdiff = got
+        .iter()
+        .zip(want.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxdiff < 1e-3, "hlo vs host projection differ by {maxdiff}");
+}
+
+#[test]
+fn probe_artifact_returns_masks() {
+    let dir = artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(&dir, "mlp").unwrap();
+    if !meta.has_file("probe") {
+        eprintln!("skipping: no probe artifact");
+        return;
+    }
+    let exe = rt.load_artifact(&meta, "probe").unwrap();
+    let mut st = dsg::coordinator::ModelState::init(&meta, 6);
+    // Wp must be the real projection of the weights, not the zero init.
+    let proj = rt.load_artifact(&meta, "project").unwrap();
+    let mut pin: Vec<HostTensor> =
+        st.dsg_weights(&meta).into_iter().cloned().collect();
+    pin.extend(st.rs.iter().cloned());
+    st.wps = proj.run(&meta.filter_kept("project", pin)).unwrap();
+
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    inputs.extend(st.params(&meta).iter().cloned());
+    inputs.extend(st.bn(&meta).iter().cloned());
+    inputs.extend(st.bn_state(&meta).iter().cloned());
+    inputs.extend(st.wps.iter().cloned());
+    inputs.extend(st.rs.iter().cloned());
+    let mut rng = dsg::Pcg32::seeded(1);
+    inputs.push(HostTensor::f32(
+        &[meta.batch, 784],
+        rng.normal_vec(meta.batch * 784, 1.0),
+    ));
+    inputs.push(HostTensor::scalar_f32(0.6));
+    let inputs = meta.filter_kept("probe", inputs);
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 1 + meta.counts.dsg);
+    // masks are binary with density ~ 1-gamma
+    for mask in &outs[1..] {
+        let d = mask.as_f32().unwrap();
+        assert!(d.iter().all(|&v| v == 0.0 || v == 1.0));
+        let density = d.iter().sum::<f32>() / d.len() as f32;
+        assert!(
+            (density - 0.4).abs() < 0.15,
+            "mask density {density} far from 1-gamma"
+        );
+    }
+}
+
+#[test]
+fn all_variants_load_and_parse() {
+    let dir = artifacts();
+    for v in Meta::list_variants(&dir).unwrap() {
+        let m = Meta::load(&dir, &v).unwrap();
+        assert!(m.batch > 0);
+        assert!(m.has_file("train"), "{v} missing train artifact");
+        assert!(m.has_file("forward"), "{v} missing forward artifact");
+        if m.strategy == "drs" {
+            assert!(m.has_file("project"), "{v} drs variant missing project");
+            assert_eq!(m.counts.wps, m.counts.dsg);
+            assert_eq!(m.dsg_weight_indices.len(), m.counts.dsg);
+        }
+    }
+}
