@@ -1,86 +1,157 @@
-//! Batched inference serving: single-image requests flow through the
-//! dynamic batcher (rust/src/serve) into either the HLO forward or the
-//! NATIVE sparse engine (real column skipping), and we report latency
-//! percentiles + throughput at several sparsity levels.  DSG "extends to
-//! inference by using the same selection pattern" (§5) — the same
-//! on-the-fly DRS runs per request batch.
+//! Batched concurrent inference serving: single-image requests flow into
+//! the shared request queue, N worker threads drain FIFO batches through
+//! the NATIVE sparse engine (real column skipping, routed through
+//! `sparse::parallel`), and we report latency percentiles + throughput
+//! per worker count.  DSG "extends to inference by using the same
+//! selection pattern" (§5) — the same on-the-fly DRS runs per request
+//! batch.
 //!
-//!     cargo run --release --example inference_server [model] [requests]
+//! Works fully offline on the synthetic DSG model; when HLO artifacts
+//! and the `xla` feature are present it also serves a briefly-trained
+//! real model for comparison.
+//!
+//!     cargo run --release --example inference_server [requests]
 
-use dsg::coordinator::Trainer;
-use dsg::datasets;
 use dsg::metrics::fmt_secs;
 use dsg::native::{Mode, NativeModel};
-use dsg::runtime::{Meta, Runtime};
-use dsg::serve::{Batcher, Queue};
+use dsg::serve::{ConcurrentServer, ServeReport, ServerConfig, SynthModel};
+use dsg::sparse::parallel::n_threads;
 use dsg::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn print_row(label: &str, report: &ServeReport) {
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10} {:>12.1} {:>8}",
+        label,
+        fmt_secs(report.latency.percentile(0.50)),
+        fmt_secs(report.latency.percentile(0.95)),
+        fmt_secs(report.latency.percentile(0.99)),
+        fmt_secs(report.latency.mean()),
+        report.throughput(),
+        report.batches
+    );
+}
+
+fn header() {
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10} {:>12} {:>8}",
+        "config", "p50", "p95", "p99", "mean", "imgs/sec", "batches"
+    );
+}
+
+fn serve_sweep<F>(
+    make_forward: impl Fn(usize) -> F,
+    batch: usize,
+    d: usize,
+    classes: usize,
+    images: &[Vec<f32>],
+) where
+    F: Fn(&[f32]) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
+{
+    header();
+    let cores = n_threads();
+    let mut preds: Option<Vec<usize>> = None;
+    for workers in [1usize, 2, 4] {
+        let intra = (cores / workers).max(1);
+        let cfg = ServerConfig::new(workers, batch, d, classes)
+            .with_max_wait(Duration::from_millis(5));
+        // pre-enqueued drain => deterministic batch boundaries
+        let report =
+            ConcurrentServer::serve_all(cfg, make_forward(intra), images.iter().cloned())
+                .expect("serve failed");
+        match &preds {
+            None => preds = Some(report.predictions()),
+            Some(want) => assert_eq!(
+                want,
+                &report.predictions(),
+                "{workers}-worker predictions diverged"
+            ),
+        }
+        print_row(&format!("{workers} workers x {intra}t"), &report);
+    }
+    println!("(predictions bit-identical across all worker counts)");
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let model = args.first().map(|s| s.as_str()).unwrap_or("lenet").to_string();
-    let n_requests: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let gamma = 0.8f32;
+    let batch = 32usize;
 
-    let dir = dsg::artifacts_dir();
-    let rt = Runtime::cpu()?;
-    let meta = Meta::load(&dir, &model)?;
-    let batch = meta.batch;
-    let d = meta.input_elems();
-
-    // Warm the model up with a short training run so BN stats are sane.
-    let mut cfg = dsg::config::RunConfig::preset_for_model(&model);
-    cfg.steps = 60;
-    cfg.eval_every = 0;
-    let data = if cfg.dataset == "fashion" {
-        datasets::fashion_like(1024, 3)
-    } else {
-        datasets::cifar_like(1024, 3)
-    };
-    let (train, test) = data.split(0.25);
-    let mut trainer = Trainer::new(&rt, meta.clone(), cfg.seed)?;
-    let acc = trainer.train(&cfg, &train, &test)?;
-    println!("serving {model}: batch {batch}, trained to eval acc {acc:.3}\n");
-
-    let native = NativeModel::new(&meta, &trainer.state)?;
-    let mut shape = vec![batch];
-    shape.extend_from_slice(&meta.input_shape);
-
-    println!(
-        "{:<8} {:>7} {:>10} {:>10} {:>10} {:>11} {:>8}",
-        "backend", "gamma", "p50", "p99", "mean", "imgs/sec", "batches"
-    );
-    for gamma in [0.0f32, 0.5, 0.8, 0.9] {
-        for backend in ["hlo", "native"] {
-            let mut queue = Queue::new();
-            let mut it = datasets::BatchIter::new(&test, 1, 9);
-            for _ in 0..n_requests {
-                let (img, _) = it.next_batch();
-                queue.push(img);
-            }
-            let mut batcher = Batcher::new(batch, d, meta.classes);
-            let t0 = std::time::Instant::now();
-            let _responses = match backend {
-                "hlo" => batcher.pump(&mut queue, |xs| trainer.forward(xs, gamma))?,
-                _ => batcher.pump(&mut queue, |xs| {
-                    let xt = Tensor::new(&shape, xs.to_vec());
-                    let out = native.forward(&xt, gamma, Mode::Dsg)?;
-                    Ok(out.logits.into_data())
-                })?,
-            };
-            let wall = t0.elapsed().as_secs_f64();
-            let s = &batcher.stats;
-            println!(
-                "{:<8} {:>7} {:>10} {:>10} {:>10} {:>11.0} {:>8}",
-                backend,
-                gamma,
-                fmt_secs(s.percentile(0.5)),
-                fmt_secs(s.percentile(0.99)),
-                fmt_secs(s.latencies.iter().sum::<f64>() / s.latencies.len() as f64),
-                s.throughput(wall),
-                s.batches
+    // --- synthetic DSG model: always available ---
+    println!("== synthetic DSG MLP (784-512-256), gamma {gamma}, {n_requests} requests ==\n");
+    let probe = SynthModel::new(11, &[784, 512, 256], 10, gamma);
+    let images: Vec<Vec<f32>> =
+        (0..n_requests).map(|i| probe.synth_image(100 + i as u64)).collect();
+    serve_sweep(
+        |intra| {
+            let m = Arc::new(
+                SynthModel::new(11, &[784, 512, 256], 10, gamma).with_intra_threads(intra),
             );
+            move |xs: &[f32]| m.forward(xs, batch)
+        },
+        batch,
+        784,
+        10,
+        &images,
+    );
+
+    // --- real model through the native engine, when artifacts exist ---
+    let dir = dsg::artifacts_dir();
+    if !dir.join("index.json").exists() {
+        println!("\n(no artifacts — skipped the trained-model section; run `make artifacts`)");
+        println!("inference_server OK");
+        return Ok(());
+    }
+    let meta = dsg::runtime::Meta::load(&dir, "lenet")?;
+    let mut state = dsg::coordinator::ModelState::init(&meta, 3);
+    // Prefer properly trained weights when the PJRT runtime is in the
+    // build; otherwise serve the randomly initialized topology.
+    match dsg::runtime::Runtime::cpu() {
+        Ok(rt) => {
+            let mut cfg = dsg::config::RunConfig::preset_for_model("lenet");
+            cfg.steps = 60;
+            cfg.eval_every = 0;
+            let data = dsg::datasets::fashion_like(1024, 3);
+            let (train, test) = data.split(0.25);
+            let mut trainer = dsg::coordinator::Trainer::new(&rt, meta.clone(), cfg.seed)?;
+            let acc = trainer.train(&cfg, &train, &test)?;
+            println!("\n== lenet (native engine), trained to eval acc {acc:.3} ==\n");
+            state = trainer.state;
+        }
+        Err(e) => {
+            println!("\n== lenet (native engine), random init — {e} ==\n");
+            dsg::native::project_host(&meta, &mut state)?;
         }
     }
-    println!("\n(native = rust sparse engine with real column skipping; hlo = XLA-compiled forward)");
+    let native = Arc::new(NativeModel::new(&meta, &state)?);
+    let mb = meta.batch;
+    let d = meta.input_elems();
+    let classes = meta.classes;
+    let mut shape = vec![mb];
+    shape.extend_from_slice(&meta.input_shape);
+    let data = dsg::datasets::fashion_like(n_requests, 9);
+    let images: Vec<Vec<f32>> = dsg::datasets::BatchIter::eval_batches(&data, 1)
+        .into_iter()
+        .map(|(xs, _, _)| xs)
+        .collect();
+    serve_sweep(
+        |intra| {
+            let nm = native.clone();
+            let shape = shape.clone();
+            move |xs: &[f32]| {
+                let xt = Tensor::new(&shape, xs.to_vec());
+                let out = nm.forward_threaded(&xt, gamma, Mode::Dsg, intra)?;
+                Ok(out.logits.into_data())
+            }
+        },
+        mb,
+        d,
+        classes,
+        &images,
+    );
+    println!("\n(native = rust sparse engine with real column skipping)");
     println!("inference_server OK");
     Ok(())
 }

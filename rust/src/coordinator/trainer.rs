@@ -4,6 +4,11 @@
 //! Responsibilities (everything the python side deliberately does NOT
 //! own): batching, gamma/lr schedules, the every-50-steps projected-
 //! weight refresh, evaluation, metrics, checkpoints.
+//!
+//! Builds without the `xla` feature link against the stub
+//! `runtime::Runtime`, so this module always compiles but every
+//! constructor path fails cleanly at `Runtime::cpu()` — native-engine
+//! serving (`dsg serve`) does not come through here.
 
 use crate::config::RunConfig;
 use crate::coordinator::init::ModelState;

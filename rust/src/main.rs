@@ -7,14 +7,17 @@
 //!   memory    representational-cost report (Fig 6)
 //!   compute   computational-cost report (Fig 7 / Table 1)
 //!   speed     CPU sparse-engine layer timings (Fig 8a)
+//!   serve     concurrent batched-inference load test (native engine)
 //!
 //! Flags use `--key value` (or `--key=value`); run `dsg help` for usage.
 
 use anyhow::{bail, Context, Result};
 use dsg::config::{GammaSchedule, RunConfig};
 use dsg::coordinator::Trainer;
+use dsg::metrics::fmt_secs;
 use dsg::runtime::{Meta, Runtime};
-use dsg::{costmodel, datasets, memmodel, sparse};
+use dsg::serve::{ConcurrentServer, ServerConfig, SynthModel};
+use dsg::{costmodel, datasets, memmodel, native, sparse};
 
 /// Tiny argument parser: subcommand + `--key value` flags.
 struct Args {
@@ -79,10 +82,17 @@ COMMANDS:
   speed    [--gamma G] [--reps N] Fig 8a sparse-engine timings
   sweep    --models a,b --gammas 0,0.5,0.9 [--seeds 1,2] [--steps N]
            [--csv FILE] [--json FILE]   grid of training runs
+  serve    [--model synthetic|NAME] [--requests N] [--workers N]
+           [--max-batch N] [--max-wait-ms F] [--gamma G] [--seed N]
+           [--checkpoint FILE]
+           concurrent serving load test on the native engine: N worker
+           threads drain a shared request queue through the parallel
+           sparse engines; reports p50/p95/p99 latency and throughput.
+           `synthetic` (default) needs no artifacts.
   help
 
 Artifacts are read from ./artifacts (override with DSG_ARTIFACTS).
-Run `make artifacts` first."
+Run `make artifacts` first.  DSG_THREADS caps the engine thread pool."
     );
 }
 
@@ -318,6 +328,113 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("synthetic").to_string();
+    let requests = args.get_usize("requests")?.unwrap_or(512);
+    let cores = sparse::parallel::n_threads();
+    let workers = args.get_usize("workers")?.unwrap_or_else(|| cores.min(4)).max(1);
+    let gamma = args.get_f32("gamma")?.unwrap_or(0.5);
+    anyhow::ensure!(
+        (0.0..1.0).contains(&gamma),
+        "--gamma must be in [0, 1), got {gamma}"
+    );
+    let max_wait_ms = args.get_f32("max-wait-ms")?.unwrap_or(5.0).max(0.0) as f64;
+    let seed = args.get_usize("seed")?.unwrap_or(7) as u64;
+    // split the core budget across workers; the parallel engines are
+    // bit-exact under any split, so predictions don't depend on this
+    let intra = (cores / workers).max(1);
+
+    // Build the forward fn + deterministic request images.
+    let (forward, images, max_batch, input_elems, classes): (
+        Box<dyn Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync>,
+        Vec<Vec<f32>>,
+        usize,
+        usize,
+        usize,
+    ) = if model == "synthetic" {
+        let data = datasets::fashion_like(requests.max(1), seed);
+        let d = data.input_elems();
+        let max_batch = args.get_usize("max-batch")?.unwrap_or(32);
+        let m = SynthModel::new(seed, &[d, 512, 256], 10, gamma).with_intra_threads(intra);
+        let images: Vec<Vec<f32>> = datasets::BatchIter::eval_batches(&data, 1)
+            .into_iter()
+            .take(requests)
+            .map(|(xs, _, _)| xs)
+            .collect();
+        let classes = m.classes;
+        let fwd = move |xs: &[f32]| m.forward(xs, max_batch);
+        (Box::new(fwd), images, max_batch, d, classes)
+    } else {
+        let dir = dsg::artifacts_dir();
+        let meta = Meta::load(&dir, &model)?;
+        let max_batch = args.get_usize("max-batch")?.unwrap_or(meta.batch);
+        let mut state = match args.get("checkpoint") {
+            Some(ck) => dsg::coordinator::checkpoint::load(std::path::Path::new(ck))?,
+            None => {
+                dsg::warn!("no --checkpoint: serving randomly initialized {model} weights");
+                dsg::coordinator::ModelState::init(&meta, seed)
+            }
+        };
+        native::project_host(&meta, &mut state)?;
+        let nm = native::NativeModel::new(&meta, &state)?;
+        let cfg = RunConfig::preset_for_model(&model);
+        let data = if cfg.dataset == "fashion" {
+            datasets::fashion_like(requests.max(1), seed)
+        } else {
+            datasets::cifar_like(requests.max(1), seed)
+        };
+        let d = meta.input_elems();
+        let classes = meta.classes;
+        let mut shape = vec![max_batch];
+        shape.extend_from_slice(&meta.input_shape);
+        let images: Vec<Vec<f32>> = datasets::BatchIter::eval_batches(&data, 1)
+            .into_iter()
+            .take(requests)
+            .map(|(xs, _, _)| xs)
+            .collect();
+        let fwd = move |xs: &[f32]| -> Result<Vec<f32>> {
+            let xt = dsg::Tensor::new(&shape, xs.to_vec());
+            let out = nm.forward_threaded(&xt, gamma, native::Mode::Dsg, intra)?;
+            Ok(out.logits.into_data())
+        };
+        (Box::new(fwd), images, max_batch, d, classes)
+    };
+
+    anyhow::ensure!(max_batch > 0, "--max-batch must be at least 1");
+    println!(
+        "serving {model}: {} requests, {workers} workers x {intra} engine threads, \
+         batch {max_batch}, max-wait {max_wait_ms}ms, gamma {gamma}",
+        images.len()
+    );
+    let cfg = ServerConfig::new(workers, max_batch, input_elems, classes)
+        .with_max_wait(std::time::Duration::from_secs_f64(max_wait_ms / 1e3));
+    // pre-enqueued drain: batch boundaries (and so predictions) are
+    // deterministic for any worker count
+    let report = ConcurrentServer::serve_all(cfg, forward, images)?;
+
+    println!(
+        "\n{:>10} {:>8} {:>7} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "served", "batches", "padded", "p50", "p95", "p99", "mean", "imgs/sec"
+    );
+    println!(
+        "{:>10} {:>8} {:>7} {:>10} {:>10} {:>10} {:>10} {:>12.1}",
+        report.served,
+        report.batches,
+        report.padded_slots,
+        fmt_secs(report.latency.percentile(0.50)),
+        fmt_secs(report.latency.percentile(0.95)),
+        fmt_secs(report.latency.percentile(0.99)),
+        fmt_secs(report.latency.mean()),
+        report.throughput()
+    );
+    println!(
+        "compute/batch ({max_batch} imgs): {}  wall {:.3}s",
+        report.compute.summary(),
+        report.wall
+    );
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(&argv) {
@@ -336,6 +453,7 @@ fn main() {
         "compute" => cmd_compute(&args),
         "speed" => cmd_speed(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "help" | "-h" | "--help" => {
             usage();
             Ok(())

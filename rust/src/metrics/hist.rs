@@ -1,0 +1,240 @@
+//! Log-bucketed latency histogram — the serving subsystem's aggregation
+//! currency.
+//!
+//! Worker threads each own a private histogram and the server merges
+//! them at shutdown, so recording is lock-free on the hot path.  Buckets
+//! are geometric (10 per decade) spanning 1 µs .. ~100 s plus an
+//! underflow and an overflow slot — 82 counters total, one flat
+//! allocation: cheap to clone, cheap to merge, and accurate to ~±12%
+//! per bucket, plenty for p50/p95/p99 reporting.  Exact min/max/sum are
+//! tracked alongside so the tails and the mean stay exact.
+
+/// Lower edge of bucket 0, in seconds.
+const MIN_SECS: f64 = 1e-6;
+/// Buckets per decade (geometric growth 10^(1/10) ≈ 1.26x per bucket).
+const PER_DECADE: f64 = 10.0;
+/// 8 decades (1 µs .. 100 s) plus an overflow bucket at each end.
+const N_BUCKETS: usize = 82;
+
+/// Fixed-size log-bucketed histogram over non-negative durations.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+}
+
+fn bucket_index(secs: f64) -> usize {
+    if secs < MIN_SECS {
+        return 0;
+    }
+    let i = ((secs / MIN_SECS).log10() * PER_DECADE).floor() as usize + 1;
+    i.min(N_BUCKETS - 1)
+}
+
+/// Geometric midpoint of a bucket, used as the percentile estimate.
+fn bucket_mid(idx: usize) -> f64 {
+    if idx == 0 {
+        return MIN_SECS * 0.5;
+    }
+    let lo = MIN_SECS * 10f64.powf((idx - 1) as f64 / PER_DECADE);
+    lo * 10f64.powf(0.5 / PER_DECADE)
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one duration in seconds (negative values clamp to 0).
+    pub fn record(&mut self, secs: f64) {
+        let secs = secs.max(0.0);
+        self.buckets[bucket_index(secs)] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    /// Fold another histogram into this one (worker-stat aggregation).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Estimated percentile (p in [0, 1]): the geometric midpoint of the
+    /// bucket holding the rank-p sample, clamped to the exact observed
+    /// min/max so the extremes never over/under-shoot.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        if rank == 0 {
+            return self.min;
+        }
+        if rank + 1 >= self.count {
+            return self.max;
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// "p50/p95/p99" one-line summary with `fmt_secs` units.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {} p95 {} p99 {} (n={})",
+            super::fmt_secs(self.percentile(0.50)),
+            super::fmt_secs(self.percentile(0.95)),
+            super::fmt_secs(self.percentile(0.99)),
+            self.count
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn bucket_index_monotone_and_bounded() {
+        let mut last = 0usize;
+        let mut s = 1e-8;
+        while s < 1e4 {
+            let i = bucket_index(s);
+            assert!(i >= last, "index not monotone at {s}");
+            assert!(i < N_BUCKETS);
+            last = i;
+            s *= 1.7;
+        }
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(1e9), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_mid_lands_in_own_bucket() {
+        for idx in 1..N_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_mid(idx)), idx, "bucket {idx}");
+        }
+    }
+
+    #[test]
+    fn percentiles_approximate_known_distribution() {
+        let mut h = LatencyHistogram::new();
+        // 100 samples: 1ms .. 100ms linearly
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-9);
+        // geometric buckets are ~±12% wide; allow 15% relative error
+        let p50 = h.percentile(0.5);
+        assert!((p50 - 0.050).abs() / 0.050 < 0.15, "p50 {p50}");
+        let p99 = h.percentile(0.99);
+        assert!((p99 - 0.099).abs() / 0.099 < 0.15, "p99 {p99}");
+        // extremes are exact
+        assert_eq!(h.percentile(0.0), h.min());
+        assert_eq!(h.percentile(1.0), h.max());
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 0.1);
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_in_one() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut whole = LatencyHistogram::new();
+        for i in 0..200 {
+            let v = 1e-5 * (1.0 + i as f64);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum(), whole.sum());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        for p in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile(p), whole.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn summary_mentions_count() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.002);
+        assert!(h.summary().contains("n=1"));
+    }
+}

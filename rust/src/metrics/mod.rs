@@ -1,4 +1,9 @@
-//! Run metrics: step histories, summary statistics, CSV/JSONL writers.
+//! Run metrics: step histories, summary statistics, latency histograms,
+//! CSV/JSONL writers.
+
+pub mod hist;
+
+pub use hist::LatencyHistogram;
 
 use std::io::Write;
 

@@ -275,6 +275,11 @@ impl NativeModel {
 
     /// One DSG (or dense) "matmul layer" over rows: returns masked,
     /// ReLU'd, BN'd, re-masked output rows plus stats.
+    ///
+    /// `threads = None` runs the single-threaded reference engines;
+    /// `Some(t)` routes through `sparse::parallel` with that budget.
+    /// Both give bit-exact results for a fixed engine choice, and the
+    /// parallel engines are bit-exact across budgets (row split only).
     #[allow(clippy::too_many_arguments)]
     fn rows_layer(
         &self,
@@ -285,6 +290,7 @@ impl NativeModel {
         gamma: f32,
         sample0_rows: usize,
         mode: Mode,
+        threads: Option<usize>,
         name: &str,
     ) -> (Tensor, LayerStat) {
         let t0 = std::time::Instant::now();
@@ -292,25 +298,39 @@ impl NativeModel {
             (Mode::Dsg, Some(di)) if !self.dsg.is_empty() && gamma > 0.0 => {
                 let side = &self.dsg[di];
                 let td = std::time::Instant::now();
-                let m = rows.shape()[0];
-                let k = side.ridx.k;
-                let mut xp = vec![0.0f32; m * k];
-                for i in 0..m {
-                    side.ridx.project_row(
-                        &rows.data()[i * side.ridx.d..(i + 1) * side.ridx.d],
-                        &mut xp[i * k..(i + 1) * k],
-                    );
-                }
-                let xp = Tensor::new(&[m, k], xp);
-                let virt = ops::matmul_blocked(&xp, &side.wp);
+                let xp = match threads {
+                    Some(t) => sparse::parallel::project_rows_parallel_with(rows, &side.ridx, t),
+                    None => {
+                        let m = rows.shape()[0];
+                        let k = side.ridx.k;
+                        let mut xp = vec![0.0f32; m * k];
+                        for i in 0..m {
+                            side.ridx.project_row(
+                                &rows.data()[i * side.ridx.d..(i + 1) * side.ridx.d],
+                                &mut xp[i * k..(i + 1) * k],
+                            );
+                        }
+                        Tensor::new(&[m, k], xp)
+                    }
+                };
+                let virt = match threads {
+                    Some(t) => sparse::parallel::matmul_parallel_with(&xp, &side.wp, t),
+                    None => ops::matmul_blocked(&xp, &side.wp),
+                };
                 let mask = Self::mask_for(&virt, gamma, sample0_rows);
                 let drs = td.elapsed().as_secs_f64();
-                let y = sparse::dsg_vmm(rows, wt, &mask);
+                let y = match threads {
+                    Some(t) => sparse::parallel::dsg_vmm_parallel_with(rows, wt, &mask, t),
+                    None => sparse::dsg_vmm(rows, wt, &mask),
+                };
                 let density = topk::mask_density(&mask);
                 (y, drs, density, Some(mask))
             }
             _ => {
-                let y = ops::matmul_blocked(rows, &ops::transpose(wt));
+                let y = match threads {
+                    Some(t) => sparse::parallel::matmul_parallel_with(rows, &ops::transpose(wt), t),
+                    None => ops::matmul_blocked(rows, &ops::transpose(wt)),
+                };
                 (y, 0.0, 1.0, None)
             }
         };
@@ -347,6 +367,7 @@ impl NativeModel {
         Tensor::new(&[n, k, p, q], out)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn conv_unit(
         &self,
         x: &Tensor,
@@ -355,6 +376,7 @@ impl NativeModel {
         dsg_idx: Option<usize>,
         gamma: f32,
         mode: Mode,
+        threads: Option<usize>,
         stats: &mut Vec<LayerStat>,
     ) -> Tensor {
         let cp = &self.convs[key];
@@ -368,6 +390,7 @@ impl NativeModel {
             gamma,
             p * q,
             mode,
+            threads,
             &format!("conv{key}"),
         );
         stats.push(stat);
@@ -375,16 +398,44 @@ impl NativeModel {
     }
 
     /// Shortcut conv (no mask / relu / bn).
-    fn plain_conv(&self, x: &Tensor, key: &str) -> Tensor {
+    fn plain_conv(&self, x: &Tensor, key: &str, threads: Option<usize>) -> Tensor {
         let cp = &self.convs[key];
         let n = x.shape()[0];
         let (rows, p, q) = ops::im2col(x, cp.ksize, cp.stride, cp.pad);
-        let y = ops::matmul_blocked(&rows, &ops::transpose(&cp.wt));
+        let y = match threads {
+            Some(t) => sparse::parallel::matmul_parallel_with(&rows, &ops::transpose(&cp.wt), t),
+            None => ops::matmul_blocked(&rows, &ops::transpose(&cp.wt)),
+        };
         Self::rows_to_nchw(&y, n, p, q)
     }
 
-    /// Full forward pass on a batch (N, input_shape...).
+    /// Full forward pass on a batch (N, input_shape...) using the
+    /// single-threaded reference engines.
     pub fn forward(&self, x: &Tensor, gamma: f32, mode: Mode) -> Result<NativeOut> {
+        self.forward_impl(x, gamma, mode, None)
+    }
+
+    /// Forward pass routed through the multi-threaded engines
+    /// (`sparse::parallel`) with an explicit intra-op thread budget —
+    /// the serving hot path.  Predictions are bit-exact for any budget,
+    /// so a server can divide cores across workers freely.
+    pub fn forward_threaded(
+        &self,
+        x: &Tensor,
+        gamma: f32,
+        mode: Mode,
+        threads: usize,
+    ) -> Result<NativeOut> {
+        self.forward_impl(x, gamma, mode, Some(threads.max(1)))
+    }
+
+    fn forward_impl(
+        &self,
+        x: &Tensor,
+        gamma: f32,
+        mode: Mode,
+        threads: Option<usize>,
+    ) -> Result<NativeOut> {
         let n = x.shape()[0];
         let mut stats = Vec::new();
         let mut dsg_idx = 0usize;
@@ -407,6 +458,7 @@ impl NativeModel {
                         gamma,
                         1,
                         mode,
+                        threads,
                         &format!("dense{i}"),
                     );
                     stats.push(stat);
@@ -414,7 +466,10 @@ impl NativeModel {
                 }
                 Unit::Classifier { d_out, .. } => {
                     let dp = &self.denses[&i.to_string()];
-                    let mut y = ops::matmul_blocked(&h, &dp.w);
+                    let mut y = match threads {
+                        Some(t) => sparse::parallel::matmul_parallel_with(&h, &dp.w, t),
+                        None => ops::matmul_blocked(&h, &dp.w),
+                    };
                     if let Some(b) = &dp.bias {
                         for row in y.data_mut().chunks_exact_mut(*d_out) {
                             for (v, bb) in row.iter_mut().zip(b) {
@@ -425,7 +480,16 @@ impl NativeModel {
                     h = y;
                 }
                 Unit::Conv { .. } => {
-                    h = self.conv_unit(&h, &i.to_string(), &i.to_string(), next_dsg(), gamma, mode, &mut stats);
+                    h = self.conv_unit(
+                        &h,
+                        &i.to_string(),
+                        &i.to_string(),
+                        next_dsg(),
+                        gamma,
+                        mode,
+                        threads,
+                        &mut stats,
+                    );
                 }
                 Unit::Residual { c_in, c_out, stride } => {
                     let b1 = self.conv_unit(
@@ -435,6 +499,7 @@ impl NativeModel {
                         next_dsg(),
                         gamma,
                         mode,
+                        threads,
                         &mut stats,
                     );
                     let b2 = self.conv_unit(
@@ -444,10 +509,11 @@ impl NativeModel {
                         next_dsg(),
                         gamma,
                         mode,
+                        threads,
                         &mut stats,
                     );
                     let sc = if *stride != 1 || c_in != c_out {
-                        self.plain_conv(&h, &format!("{i}.short"))
+                        self.plain_conv(&h, &format!("{i}.short"), threads)
                     } else {
                         h.clone()
                     };

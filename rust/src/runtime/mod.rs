@@ -1,5 +1,7 @@
-//! PJRT artifact runtime: load HLO *text* produced by `aot.py`, compile
-//! it on the CPU PJRT client, and execute it with flat host buffers.
+//! Artifact runtime: host tensors, variant metadata, golden vectors, and
+//! (behind the `xla` feature) the PJRT executor that loads HLO *text*
+//! produced by `aot.py`, compiles it on the CPU PJRT client, and executes
+//! it with flat host buffers.
 //!
 //! Interchange is HLO text (not serialized protos) — jax >= 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
@@ -7,15 +9,23 @@
 //!
 //! All artifacts are lowered with `return_tuple=True`, so execution
 //! returns a single tuple literal that we decompose into flat outputs.
+//!
+//! Feature gating: everything except the PJRT client itself is pure rust
+//! and always available (`HostTensor`, `Meta`, `Golden`).  The `xla`
+//! crate cannot be resolved offline, so `Executable` and `Runtime` have
+//! a stub twin compiled when the `xla` feature is off — same API, every
+//! entry point returns a clean error.  That keeps the coordinator, the
+//! benches, and the examples compiling (and the native serving path
+//! fully working) on a build with no PJRT toolchain.
 
 pub mod golden;
 pub mod meta;
 
 pub use golden::Golden;
 pub use meta::{Counts, DType, Init, LeafSpec, Meta, Unit};
+pub use pjrt::{Executable, Runtime};
 
-use anyhow::{bail, Context, Result};
-use std::path::Path;
+use anyhow::{bail, Result};
 
 /// A flat host tensor (f32 or i32), the runtime's exchange currency.
 #[derive(Clone, Debug, PartialEq)]
@@ -81,9 +91,17 @@ impl HostTensor {
             _ => bail!("not a scalar: shape {:?}", self.shape()),
         }
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match self {
+/// The PJRT-backed executor (compiled only with `--features xla`).
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::{HostTensor, Meta};
+    use anyhow::{bail, Context, Result};
+    use std::path::Path;
+
+    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match t {
             HostTensor::F32 { shape, data } => (
                 xla::ElementType::F32,
                 shape,
@@ -114,93 +132,155 @@ impl HostTensor {
             other => bail!("unsupported output element type {other:?}"),
         }
     }
-}
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: std::path::PathBuf,
-}
-
-impl Executable {
-    /// Execute with flat inputs; returns flat outputs (tuple decomposed).
-    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()
-            .context("building input literals")?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow::anyhow!("execute {:?}: {e}", self.path))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose tuple: {e}"))?;
-        parts.iter().map(HostTensor::from_literal).collect()
-    }
-}
-
-/// The PJRT CPU runtime: client + compiled-executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: std::cell::RefCell<std::collections::BTreeMap<String, std::rc::Rc<Executable>>>,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
-        Ok(Runtime { client, cache: Default::default() })
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub path: std::path::PathBuf,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file (cached by path).
-    pub fn load(&self, path: &Path) -> Result<std::rc::Rc<Executable>> {
-        let key = path.to_string_lossy().to_string();
-        if let Some(e) = self.cache.borrow().get(&key) {
-            return Ok(e.clone());
+    impl Executable {
+        /// Execute with flat inputs; returns flat outputs (tuple decomposed).
+        pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(to_literal)
+                .collect::<Result<_>>()
+                .context("building input literals")?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow::anyhow!("execute {:?}: {e}", self.path))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+            let parts = out
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("decompose tuple: {e}"))?;
+            parts.iter().map(from_literal).collect()
         }
-        if !path.exists() {
-            bail!("artifact {path:?} not found — run `make artifacts` first");
-        }
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
-            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
-        let exe = std::rc::Rc::new(Executable { exe, path: path.to_path_buf() });
-        self.cache.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
     }
 
-    /// Load a variant's artifact by kind ("train" / "forward" / ...).
-    pub fn load_artifact(&self, meta: &Meta, kind: &str) -> Result<std::rc::Rc<Executable>> {
-        self.load(&meta.file(kind)?)
+    /// The PJRT CPU runtime: client + compiled-executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: std::cell::RefCell<std::collections::BTreeMap<String, std::rc::Rc<Executable>>>,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+            Ok(Runtime { client, cache: Default::default() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text file (cached by path).
+        pub fn load(&self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+            let key = path.to_string_lossy().to_string();
+            if let Some(e) = self.cache.borrow().get(&key) {
+                return Ok(e.clone());
+            }
+            if !path.exists() {
+                bail!("artifact {path:?} not found — run `make artifacts` first");
+            }
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
+            let exe = std::rc::Rc::new(Executable { exe, path: path.to_path_buf() });
+            self.cache.borrow_mut().insert(key, exe.clone());
+            Ok(exe)
+        }
+
+        /// Load a variant's artifact by kind ("train" / "forward" / ...).
+        pub fn load_artifact(&self, meta: &Meta, kind: &str) -> Result<std::rc::Rc<Executable>> {
+            self.load(&meta.file(kind)?)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn host_tensor_roundtrip_literal() {
+            let t = HostTensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+            let lit = to_literal(&t).unwrap();
+            let t2 = from_literal(&lit).unwrap();
+            assert_eq!(t, t2);
+            let s = HostTensor::s32(&[4], vec![1, -2, 3, -4]);
+            let lit = to_literal(&s).unwrap();
+            assert_eq!(from_literal(&lit).unwrap(), s);
+        }
+
+        #[test]
+        fn missing_artifact_is_clean_error() {
+            let rt = Runtime::cpu().unwrap();
+            match rt.load(Path::new("/nonexistent/foo.hlo.txt")) {
+                Ok(_) => panic!("expected error"),
+                Err(err) => assert!(format!("{err}").contains("make artifacts")),
+            }
+        }
+    }
+}
+
+/// Stub executor for builds without the `xla` feature: the types exist
+/// (so the coordinator and every binary compile) but construction fails
+/// with an actionable error.
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use super::{HostTensor, Meta};
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    const NO_XLA: &str = "dsg was built without the `xla` feature — the PJRT/HLO \
+                          runtime is unavailable (the native engine, `dsg serve`, and \
+                          the cost models work without it); rebuild with a vendored \
+                          xla-rs and `--features xla` to execute HLO artifacts";
+
+    /// Placeholder for a compiled artifact; never constructed in this
+    /// build (`Runtime::cpu` always errors first).
+    pub struct Executable {
+        pub path: std::path::PathBuf,
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            bail!("cannot execute {:?}: {NO_XLA}", self.path)
+        }
+    }
+
+    /// Stub runtime: `cpu()` fails cleanly so callers can degrade.
+    pub struct Runtime {}
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            bail!(NO_XLA)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without `xla`)".to_string()
+        }
+
+        pub fn load(&self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+            bail!("cannot load {path:?}: {NO_XLA}")
+        }
+
+        pub fn load_artifact(&self, meta: &Meta, kind: &str) -> Result<std::rc::Rc<Executable>> {
+            bail!("cannot load {kind} artifact for {}: {NO_XLA}", meta.name)
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn host_tensor_roundtrip_literal() {
-        let t = HostTensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        let lit = t.to_literal().unwrap();
-        let t2 = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(t, t2);
-        let s = HostTensor::s32(&[4], vec![1, -2, 3, -4]);
-        let lit = s.to_literal().unwrap();
-        assert_eq!(HostTensor::from_literal(&lit).unwrap(), s);
-    }
 
     #[test]
     fn scalars() {
@@ -223,11 +303,11 @@ mod tests {
     }
 
     #[test]
-    fn missing_artifact_is_clean_error() {
-        let rt = Runtime::cpu().unwrap();
-        match rt.load(Path::new("/nonexistent/foo.hlo.txt")) {
-            Ok(_) => panic!("expected error"),
-            Err(err) => assert!(format!("{err}").contains("make artifacts")),
+    #[cfg(not(feature = "xla"))]
+    fn stub_runtime_errors_cleanly() {
+        match Runtime::cpu() {
+            Ok(_) => panic!("stub Runtime::cpu must fail"),
+            Err(e) => assert!(format!("{e}").contains("xla")),
         }
     }
 }

@@ -1,0 +1,478 @@
+//! Concurrent multi-worker serving: a shared `Mutex`+`Condvar` request
+//! queue feeding N worker threads, each assembling FIFO batches with a
+//! deadline-based flush.
+//!
+//! Batch formation rules (per worker, under the queue lock):
+//!
+//! 1. `max_batch` requests available -> take exactly `max_batch`.
+//! 2. queue closed -> take what remains (capped at `max_batch`).
+//! 3. oldest request older than `max_wait` -> flush the partial batch.
+//! 4. otherwise block on the condvar until a push/close, bounded by the
+//!    oldest request's remaining deadline.
+//!
+//! Every drain takes a CONTIGUOUS chunk off the queue head.  With a
+//! load that is fully enqueued before the workers start
+//! ([`ConcurrentServer::serve_all`]), batch boundaries are therefore
+//! `[0..B), [B..2B), ...` by construction, regardless of worker count,
+//! machine speed, or scheduling — that plus the thread-count invariance
+//! of `sparse::parallel` is what makes `--workers 4` produce
+//! bit-identical predictions to `--workers 1`.  On the streaming
+//! `start`/`submit` path a deadline flush can land mid-stream, so batch
+//! composition (and with it the DSG shared-threshold masks) is
+//! timing-dependent there — inherent to deadline batching, not a bug.
+//!
+//! The forward function runs OUTSIDE the lock; per-request latency and
+//! per-batch compute go into thread-local [`LatencyHistogram`]s merged
+//! at shutdown.
+
+use super::{argmax, assemble_batch, Request, Response};
+use crate::metrics::LatencyHistogram;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Static serving parameters.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Worker threads draining the shared queue.
+    pub workers: usize,
+    /// Full batch size (the model's fixed batch dimension).
+    pub max_batch: usize,
+    /// Deadline: a partial batch flushes once its oldest request has
+    /// waited this long.
+    pub max_wait: Duration,
+    /// Flat pixels per request.
+    pub input_elems: usize,
+    /// Logits per sample.
+    pub classes: usize,
+}
+
+impl ServerConfig {
+    pub fn new(workers: usize, max_batch: usize, input_elems: usize, classes: usize) -> Self {
+        assert!(max_batch > 0 && input_elems > 0 && classes > 0);
+        ServerConfig {
+            workers: workers.max(1),
+            max_batch,
+            max_wait: Duration::from_millis(5),
+            input_elems,
+            classes,
+        }
+    }
+
+    pub fn with_max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = max_wait;
+        self
+    }
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    next_id: u64,
+    closed: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    available: Condvar,
+}
+
+/// Per-worker accounting, merged into the final report.
+#[derive(Default, Debug, Clone)]
+pub struct WorkerStats {
+    pub served: usize,
+    pub batches: usize,
+    pub padded_slots: usize,
+    pub latency: LatencyHistogram,
+    pub compute: LatencyHistogram,
+}
+
+impl WorkerStats {
+    fn merge(&mut self, other: &WorkerStats) {
+        self.served += other.served;
+        self.batches += other.batches;
+        self.padded_slots += other.padded_slots;
+        self.latency.merge(&other.latency);
+        self.compute.merge(&other.compute);
+    }
+}
+
+/// Aggregated outcome of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// All responses, sorted by request id (FIFO order restored).
+    pub responses: Vec<Response>,
+    pub served: usize,
+    pub batches: usize,
+    pub padded_slots: usize,
+    /// Queue wait + compute per request.
+    pub latency: LatencyHistogram,
+    /// Forward duration per BATCH (one sample per batch, padding
+    /// included) — not a per-request share.
+    pub compute: LatencyHistogram,
+    /// Wall-clock from server start to shutdown completion, seconds.
+    pub wall: f64,
+    pub per_worker: Vec<WorkerStats>,
+}
+
+impl ServeReport {
+    pub fn throughput(&self) -> f64 {
+        self.served as f64 / self.wall.max(1e-12)
+    }
+
+    /// Predictions in request order (the bit-exactness currency).
+    pub fn predictions(&self) -> Vec<usize> {
+        self.responses.iter().map(|r| r.pred).collect()
+    }
+}
+
+/// The multi-worker server.  `start` spawns the pool; `submit` enqueues;
+/// `shutdown` closes the queue, drains it, joins the workers, and
+/// returns the merged [`ServeReport`].
+pub struct ConcurrentServer {
+    cfg: ServerConfig,
+    shared: Arc<Shared>,
+    results: Arc<Mutex<Vec<Response>>>,
+    handles: Vec<std::thread::JoinHandle<Result<WorkerStats>>>,
+    started: Instant,
+}
+
+impl ConcurrentServer {
+    /// Spawn `cfg.workers` threads serving `forward` (flat padded batch
+    /// -> flat logits).  `forward` must tolerate concurrent calls.
+    pub fn start<F>(cfg: ServerConfig, forward: F) -> ConcurrentServer
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        Self::start_with(cfg, forward, Vec::new(), false)
+    }
+
+    /// Serve a fully pre-enqueued load and drain it to completion.
+    ///
+    /// Every request is queued (and the queue closed) BEFORE the first
+    /// worker spawns, so batch boundaries are the contiguous FIFO
+    /// chunks `[0..B), [B..2B), ...` by construction — no deadline
+    /// flush can split them, regardless of machine speed.  This is the
+    /// entry point for anything that asserts bit-identical predictions
+    /// across worker counts (`dsg serve`, the throughput bench); the
+    /// streaming `start`/`submit` path stays timing-dependent by
+    /// design.
+    pub fn serve_all<F>(
+        cfg: ServerConfig,
+        forward: F,
+        images: impl IntoIterator<Item = Vec<f32>>,
+    ) -> Result<ServeReport>
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        Self::start_with(cfg, forward, images.into_iter().collect(), true).join_report()
+    }
+
+    fn start_with<F>(
+        cfg: ServerConfig,
+        forward: F,
+        initial: Vec<Vec<f32>>,
+        closed: bool,
+    ) -> ConcurrentServer
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        let now = Instant::now();
+        let q: VecDeque<Request> = initial
+            .into_iter()
+            .enumerate()
+            .map(|(i, image)| Request { id: i as u64, image, enqueued: now })
+            .collect();
+        let next_id = q.len() as u64;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { q, next_id, closed }),
+            available: Condvar::new(),
+        });
+        let results = Arc::new(Mutex::new(Vec::new()));
+        let forward = Arc::new(forward);
+        let handles = (0..cfg.workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                let results = results.clone();
+                let forward = forward.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || worker_loop(&cfg, &shared, &results, forward.as_ref()))
+            })
+            .collect();
+        // wall-clock starts at `now`: serve_all workers begin draining
+        // the preloaded queue during spawn, and that work must count
+        ConcurrentServer { cfg, shared, results, handles, started: now }
+    }
+
+    /// Enqueue one request; returns its FIFO id.
+    pub fn submit(&self, image: Vec<f32>) -> u64 {
+        let mut st = self.shared.state.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.q.push_back(Request { id, image, enqueued: Instant::now() });
+        drop(st);
+        self.shared.available.notify_one();
+        id
+    }
+
+    /// Number of responses completed so far (for progress/tests).
+    pub fn completed(&self) -> usize {
+        self.results.lock().unwrap().len()
+    }
+
+    /// Close the queue, let the workers drain it, join them, and merge
+    /// their accounting.  Any worker error (bad request shape, failed
+    /// forward) propagates.
+    pub fn shutdown(self) -> Result<ServeReport> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.join_report()
+    }
+
+    /// Join the (already-closing) workers and merge their accounting.
+    fn join_report(self) -> Result<ServeReport> {
+        self.shared.available.notify_all();
+        let mut total = WorkerStats::default();
+        let mut per_worker = Vec::with_capacity(self.handles.len());
+        let mut first_err = None;
+        for h in self.handles {
+            match h.join() {
+                Ok(Ok(stats)) => {
+                    total.merge(&stats);
+                    per_worker.push(stats);
+                }
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(anyhow::anyhow!("serve worker panicked")))
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e).context("concurrent serve");
+        }
+        let wall = self.started.elapsed().as_secs_f64();
+        let mut responses = Arc::try_unwrap(self.results)
+            .map_err(|_| anyhow::anyhow!("response sink still shared after join"))?
+            .into_inner()
+            .unwrap();
+        responses.sort_by_key(|r| r.id);
+        Ok(ServeReport {
+            served: total.served,
+            batches: total.batches,
+            padded_slots: total.padded_slots,
+            latency: total.latency,
+            compute: total.compute,
+            wall,
+            per_worker,
+            responses,
+        })
+    }
+
+    /// The configuration this server was started with.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+}
+
+/// Take the next batch off the queue, honoring the flush rules.
+/// Returns `None` when the queue is closed and empty (worker exits).
+fn next_batch(cfg: &ServerConfig, shared: &Shared) -> Option<Vec<Request>> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.q.len() >= cfg.max_batch {
+            return Some(st.q.drain(..cfg.max_batch).collect());
+        }
+        if st.closed {
+            if st.q.is_empty() {
+                return None;
+            }
+            let n = st.q.len().min(cfg.max_batch);
+            return Some(st.q.drain(..n).collect());
+        }
+        let oldest_age = st.q.front().map(|r| r.enqueued.elapsed());
+        match oldest_age {
+            Some(age) if age >= cfg.max_wait => {
+                // deadline flush: partial batch ships now
+                let n = st.q.len().min(cfg.max_batch);
+                return Some(st.q.drain(..n).collect());
+            }
+            Some(age) => {
+                let (guard, _timeout) = shared
+                    .available
+                    .wait_timeout(st, cfg.max_wait - age)
+                    .unwrap();
+                st = guard;
+            }
+            None => {
+                st = shared.available.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+fn worker_loop<F>(
+    cfg: &ServerConfig,
+    shared: &Shared,
+    results: &Mutex<Vec<Response>>,
+    forward: &F,
+) -> Result<WorkerStats>
+where
+    F: Fn(&[f32]) -> Result<Vec<f32>>,
+{
+    let mut stats = WorkerStats::default();
+    while let Some(reqs) = next_batch(cfg, shared) {
+        let (xs, padded) = assemble_batch(&reqs, cfg.max_batch, cfg.input_elems)?;
+        stats.padded_slots += padded;
+        let t0 = Instant::now();
+        let logits = forward(&xs)?;
+        let compute = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            logits.len() == cfg.max_batch * cfg.classes,
+            "forward returned {} logits, expected {}",
+            logits.len(),
+            cfg.max_batch * cfg.classes
+        );
+        stats.compute.record(compute);
+        let mut batch_out = Vec::with_capacity(reqs.len());
+        for (i, r) in reqs.into_iter().enumerate() {
+            let row = &logits[i * cfg.classes..(i + 1) * cfg.classes];
+            let latency = r.enqueued.elapsed().as_secs_f64();
+            stats.served += 1;
+            stats.latency.record(latency);
+            batch_out.push(Response { id: r.id, pred: argmax(row), latency, compute });
+        }
+        stats.batches += 1;
+        results.lock().unwrap().extend(batch_out);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// pred = round(first pixel), same rule as the baseline pump tests.
+    fn fake_forward(batch: usize, classes: usize) -> impl Fn(&[f32]) -> Result<Vec<f32>> {
+        move |xs: &[f32]| {
+            let per = xs.len() / batch;
+            let mut out = vec![0.0f32; batch * classes];
+            for i in 0..batch {
+                let c = (xs[i * per].round() as usize).min(classes - 1);
+                out[i * classes + c] = 1.0;
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn empty_queue_shuts_down_cleanly() {
+        let cfg = ServerConfig::new(4, 8, 4, 5);
+        let srv = ConcurrentServer::start(cfg, fake_forward(8, 5));
+        let report = srv.shutdown().unwrap();
+        assert_eq!(report.served, 0);
+        assert_eq!(report.batches, 0);
+        assert!(report.responses.is_empty());
+        assert!(report.latency.is_empty());
+    }
+
+    #[test]
+    fn single_partial_batch_pads_and_drops_pad_rows() {
+        let cfg = ServerConfig::new(2, 8, 4, 5).with_max_wait(Duration::from_secs(10));
+        let srv = ConcurrentServer::start(cfg, fake_forward(8, 5));
+        for i in 0..3u64 {
+            assert_eq!(srv.submit(vec![i as f32; 4]), i);
+        }
+        let report = srv.shutdown().unwrap();
+        // 3 valid rows served, 5 padding rows computed but dropped
+        assert_eq!(report.served, 3);
+        assert_eq!(report.batches, 1);
+        assert_eq!(report.padded_slots, 5);
+        assert_eq!(report.responses.len(), 3);
+        for (i, r) in report.responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.pred, i);
+        }
+        assert_eq!(report.latency.count(), 3);
+        assert_eq!(report.compute.count(), 1); // one sample per batch
+    }
+
+    #[test]
+    fn deadline_flush_fires_before_max_batch() {
+        // max_batch 64 will never fill; the 20ms deadline must ship the
+        // 2-request batch while the queue stays OPEN.
+        let cfg = ServerConfig::new(2, 64, 4, 5).with_max_wait(Duration::from_millis(20));
+        let srv = ConcurrentServer::start(cfg, fake_forward(64, 5));
+        srv.submit(vec![1.0; 4]);
+        srv.submit(vec![2.0; 4]);
+        let t0 = Instant::now();
+        while srv.completed() < 2 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "deadline flush never fired"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // flushed before shutdown with the queue still open; exact batch
+        // shape is timing-dependent (a >20ms stall between the submits
+        // could split them), so assert the invariants, not batches == 1
+        let report = srv.shutdown().unwrap();
+        assert_eq!(report.served, 2);
+        assert!(report.batches >= 1);
+        assert_eq!(report.served + report.padded_slots, report.batches * 64);
+        assert_eq!(report.predictions(), vec![1, 2]);
+    }
+
+    #[test]
+    fn fifo_ids_preserved_across_workers() {
+        let n = 97u64;
+        let cfg = ServerConfig::new(4, 4, 4, 8).with_max_wait(Duration::from_millis(500));
+        let srv = ConcurrentServer::start(cfg, fake_forward(4, 8));
+        for i in 0..n {
+            srv.submit(vec![(i % 7) as f32; 4]);
+        }
+        let report = srv.shutdown().unwrap();
+        assert_eq!(report.served, n as usize);
+        // responses come back sorted by id with the right predictions
+        for (i, r) in report.responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "FIFO order broken at {i}");
+            assert_eq!(r.pred, i % 7, "prediction for request {i}");
+        }
+        // every batch is fully padded: served + padding == batches * B
+        // (exact batch count is timing-dependent on the streaming path —
+        // a deadline flush may split a batch; FIFO ids/preds never vary)
+        assert_eq!(report.served + report.padded_slots, report.batches * 4);
+        assert!(report.batches >= 25); // ceil(97 / 4)
+        assert_eq!(report.latency.count(), n);
+    }
+
+    #[test]
+    fn serve_all_is_deterministic_even_with_zero_max_wait() {
+        // serve_all closes the queue before workers spawn, so even a
+        // pathological 0ms deadline cannot split batch boundaries.
+        let imgs: Vec<Vec<f32>> = (0..21).map(|i| vec![(i % 5) as f32; 4]).collect();
+        let mut reports = Vec::new();
+        for workers in [1usize, 4] {
+            let cfg = ServerConfig::new(workers, 8, 4, 6).with_max_wait(Duration::ZERO);
+            let report =
+                ConcurrentServer::serve_all(cfg, fake_forward(8, 6), imgs.clone()).unwrap();
+            assert_eq!(report.served, 21);
+            assert_eq!(report.batches, 3); // 8 + 8 + 5(padded 3)
+            assert_eq!(report.padded_slots, 3);
+            reports.push(report);
+        }
+        assert_eq!(reports[0].predictions(), reports[1].predictions());
+        assert_eq!(reports[0].predictions()[7], 2); // 7 % 5
+    }
+
+    #[test]
+    fn worker_error_propagates_at_shutdown() {
+        let cfg = ServerConfig::new(2, 4, 4, 5).with_max_wait(Duration::from_millis(1));
+        let srv = ConcurrentServer::start(cfg, fake_forward(4, 5));
+        srv.submit(vec![0.0; 3]); // wrong input_elems
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(srv.shutdown().is_err());
+    }
+}

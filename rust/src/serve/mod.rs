@@ -1,14 +1,35 @@
-//! Batched-inference serving substrate: request queue, dynamic batcher,
-//! and latency accounting over any forward function (HLO-backed
-//! `Trainer::forward` or the native engine).
+//! Batched-inference serving subsystem: request queue, dynamic batcher,
+//! concurrent worker pool, and latency accounting over any forward
+//! function (the native engine, a synthetic model, or the HLO-backed
+//! `Trainer::forward`).
 //!
 //! DSG's fixed-shape artifacts want full batches; the batcher assembles
 //! them from a FIFO of single-image requests, padding the final partial
 //! batch (padded rows are computed but their results dropped — the same
-//! strategy the eval path uses).  Single-threaded pump by design: the
-//! PJRT CPU client is not Sync and determinism matters more than
-//! concurrency on this testbed.
+//! strategy the eval path uses).
+//!
+//! Two execution substrates share those semantics:
+//!
+//! * [`Batcher`] — the original single-threaded pump, retained as the
+//!   determinism baseline and for the PJRT path (the CPU client is not
+//!   `Sync`).
+//! * [`concurrent::ConcurrentServer`] — a shared `Mutex`+`Condvar`
+//!   request queue feeding N worker threads, each draining FIFO batches
+//!   with a deadline-based flush (`max_batch` + `max_wait`).  Workers
+//!   aggregate per-request latency/compute into
+//!   [`crate::metrics::LatencyHistogram`]s that merge at shutdown.
+//!   Because batches are always contiguous FIFO chunks and the parallel
+//!   engines are bit-exact under any thread budget, a pre-enqueued load
+//!   (`ConcurrentServer::serve_all`) yields predictions identical for
+//!   any worker count — by construction, not by timing.
 
+pub mod concurrent;
+pub mod synth;
+
+pub use concurrent::{ConcurrentServer, ServeReport, ServerConfig};
+pub use synth::SynthModel;
+
+use crate::metrics::LatencyHistogram;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -64,13 +85,14 @@ impl Queue {
     }
 }
 
-/// Serving statistics.
+/// Serving statistics (exact latencies plus the log-bucketed histogram).
 #[derive(Default, Debug, Clone)]
 pub struct ServeStats {
     pub served: usize,
     pub batches: usize,
     pub padded_slots: usize,
     pub latencies: Vec<f64>,
+    pub hist: LatencyHistogram,
 }
 
 impl ServeStats {
@@ -89,7 +111,44 @@ impl ServeStats {
     }
 }
 
-/// The dynamic batcher + pump.
+/// Assemble one padded batch from `reqs` (flat row-major pixels).  The
+/// partial tail is padded by repeating the first image; returns the
+/// number of padded slots.  Shared by the baseline pump and the
+/// concurrent workers so both substrates batch identically.
+pub(crate) fn assemble_batch(
+    reqs: &[Request],
+    batch_size: usize,
+    input_elems: usize,
+) -> anyhow::Result<(Vec<f32>, usize)> {
+    anyhow::ensure!(!reqs.is_empty(), "cannot assemble an empty batch");
+    let mut xs = Vec::with_capacity(batch_size * input_elems);
+    for r in reqs {
+        anyhow::ensure!(
+            r.image.len() == input_elems,
+            "request {} has {} elems, expected {}",
+            r.id,
+            r.image.len(),
+            input_elems
+        );
+        xs.extend_from_slice(&r.image);
+    }
+    let padded = batch_size - reqs.len();
+    for _ in 0..padded {
+        xs.extend_from_slice(&reqs[0].image);
+    }
+    Ok((xs, padded))
+}
+
+/// Argmax of one logit row.
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(j, _)| j)
+        .unwrap_or(0)
+}
+
+/// The dynamic batcher + single-threaded pump (determinism baseline).
 pub struct Batcher {
     pub batch_size: usize,
     pub input_elems: usize,
@@ -113,23 +172,8 @@ impl Batcher {
         let mut out = Vec::new();
         while !queue.is_empty() {
             let reqs = queue.take(self.batch_size);
-            let valid = reqs.len();
-            let mut xs = Vec::with_capacity(self.batch_size * self.input_elems);
-            for r in &reqs {
-                anyhow::ensure!(
-                    r.image.len() == self.input_elems,
-                    "request {} has {} elems, expected {}",
-                    r.id,
-                    r.image.len(),
-                    self.input_elems
-                );
-                xs.extend_from_slice(&r.image);
-            }
-            // pad to a full batch by repeating the first image
-            for _ in valid..self.batch_size {
-                xs.extend_from_slice(&reqs[0].image);
-                self.stats.padded_slots += 1;
-            }
+            let (xs, padded) = assemble_batch(&reqs, self.batch_size, self.input_elems)?;
+            self.stats.padded_slots += padded;
             let t0 = Instant::now();
             let logits = forward(&xs)?;
             let compute = t0.elapsed().as_secs_f64();
@@ -141,15 +185,11 @@ impl Batcher {
             );
             for (i, r) in reqs.into_iter().enumerate() {
                 let row = &logits[i * self.classes..(i + 1) * self.classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(j, _)| j)
-                    .unwrap_or(0);
+                let pred = argmax(row);
                 let latency = r.enqueued.elapsed().as_secs_f64();
                 self.stats.served += 1;
                 self.stats.latencies.push(latency);
+                self.stats.hist.record(latency);
                 out.push(Response { id: r.id, pred, latency, compute });
             }
             self.stats.batches += 1;
@@ -187,6 +227,7 @@ mod tests {
         assert!(q.is_empty());
         assert_eq!(b.stats.batches, 3);
         assert_eq!(b.stats.padded_slots, 2); // last batch had 2 valid
+        assert_eq!(b.stats.hist.count(), 10);
         // predictions match the fake rule
         for (i, r) in rs.iter().enumerate() {
             assert_eq!(r.pred, i % 3, "req {i}");
@@ -231,5 +272,16 @@ mod tests {
         let taken = q.take(1);
         assert_eq!(taken[0].id, 0);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn assemble_batch_pads_with_first_image() {
+        let reqs = vec![
+            Request { id: 0, image: vec![1.0, 2.0], enqueued: Instant::now() },
+            Request { id: 1, image: vec![3.0, 4.0], enqueued: Instant::now() },
+        ];
+        let (xs, padded) = assemble_batch(&reqs, 4, 2).unwrap();
+        assert_eq!(padded, 2);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 1.0, 2.0]);
     }
 }

@@ -1,0 +1,146 @@
+//! Self-contained synthetic DSG model for serving load tests: a stack of
+//! DSG dense layers (ternary projection -> low-dim virtual VMM -> shared
+//! top-k threshold -> masked VMM with real column skipping) plus a dense
+//! classifier, on random weights.  No artifacts, no PJRT — this is how
+//! `dsg serve`, the throughput bench, and CI exercise the serving hot
+//! path on a build with nothing but the rust toolchain.
+//!
+//! All matmuls route through `sparse::parallel` with an explicit
+//! intra-op thread budget, so a server can split cores across workers
+//! while keeping predictions bit-identical (the engines are row-split
+//! and therefore thread-count invariant).
+
+use crate::drs::projection::{ternary_r, TernaryIndex};
+use crate::drs::topk;
+use crate::sparse::parallel;
+use crate::tensor::{ops, Tensor};
+use crate::util::Pcg32;
+use anyhow::Result;
+
+struct SynthLayer {
+    /// (n, d) transposed weights for the skipping VMM.
+    wt: Tensor,
+    /// (k, n) projected weights for the virtual VMM.
+    wp: Tensor,
+    /// Index-form ternary projection.
+    ridx: TernaryIndex,
+}
+
+/// A synthetic DSG MLP with a fixed batch shape.
+pub struct SynthModel {
+    layers: Vec<SynthLayer>,
+    /// (d_last, classes) classifier weights.
+    classifier: Tensor,
+    pub input_elems: usize,
+    pub classes: usize,
+    pub gamma: f32,
+    intra_threads: usize,
+}
+
+impl SynthModel {
+    /// Build from layer widths, e.g. `&[256, 512, 512]` = input 256 and
+    /// two DSG hidden layers of 512.  `k` per layer follows the paper's
+    /// 8x dimension reduction (min 16).
+    pub fn new(seed: u64, dims: &[usize], classes: usize, gamma: f32) -> SynthModel {
+        assert!(dims.len() >= 2, "need at least input + one hidden layer");
+        assert!((0.0..1.0).contains(&gamma));
+        let mut rng = Pcg32::seeded(seed);
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for w in dims.windows(2) {
+            let (d, n) = (w[0], w[1]);
+            let scale = (2.0 / d as f32).sqrt();
+            let wmat = Tensor::new(&[d, n], rng.normal_vec(d * n, scale));
+            let k = (d / 8).clamp(16.min(d), d);
+            let r = ternary_r(&mut rng, k, d, 3);
+            let wp = crate::drs::project_weights(&r, &wmat);
+            layers.push(SynthLayer {
+                wt: ops::transpose(&wmat),
+                wp,
+                ridx: TernaryIndex::from_dense(&r),
+            });
+        }
+        let d_last = *dims.last().unwrap();
+        let cscale = (1.0 / d_last as f32).sqrt();
+        let classifier = Tensor::new(&[d_last, classes], rng.normal_vec(d_last * classes, cscale));
+        SynthModel {
+            layers,
+            classifier,
+            input_elems: dims[0],
+            classes,
+            gamma,
+            intra_threads: 1,
+        }
+    }
+
+    /// Set the intra-op thread budget (predictions are invariant to it).
+    pub fn with_intra_threads(mut self, threads: usize) -> SynthModel {
+        self.intra_threads = threads.max(1);
+        self
+    }
+
+    /// Deterministic request image for load generation.
+    pub fn synth_image(&self, seed: u64) -> Vec<f32> {
+        Pcg32::seeded(seed).normal_vec(self.input_elems, 1.0)
+    }
+
+    /// Forward a flat (batch * input_elems) buffer to flat logits
+    /// (batch * classes).  Deterministic for fixed inputs.
+    pub fn forward(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            xs.len() == batch * self.input_elems,
+            "batch buffer has {} elems, expected {}",
+            xs.len(),
+            batch * self.input_elems
+        );
+        let t = self.intra_threads;
+        let mut h = Tensor::new(&[batch, self.input_elems], xs.to_vec());
+        for layer in &self.layers {
+            let xp = parallel::project_rows_parallel_with(&h, &layer.ridx, t);
+            let virt = parallel::matmul_parallel_with(&xp, &layer.wp, t);
+            let thr = topk::shared_threshold(&virt, self.gamma);
+            let mask =
+                Tensor::from_fn(virt.shape(), |i| if virt.data()[i] >= thr { 1.0 } else { 0.0 });
+            let mut y = parallel::dsg_vmm_parallel_with(&h, &layer.wt, &mask, t);
+            ops::relu_inplace(&mut y);
+            h = y;
+        }
+        let logits = parallel::matmul_parallel_with(&h, &self.classifier, t);
+        Ok(logits.into_data())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let m = SynthModel::new(7, &[64, 96], 10, 0.8);
+        let xs: Vec<f32> = (0..4 * 64).map(|i| (i % 13) as f32 * 0.1).collect();
+        let a = m.forward(&xs, 4).unwrap();
+        let b = m.forward(&xs, 4).unwrap();
+        assert_eq!(a.len(), 40);
+        assert_eq!(a, b, "forward must be deterministic");
+        assert!(m.forward(&xs, 3).is_err(), "wrong batch must error");
+    }
+
+    #[test]
+    fn intra_thread_budget_does_not_change_bits() {
+        let xs: Vec<f32> = Pcg32::seeded(9).normal_vec(8 * 64, 1.0);
+        let base = SynthModel::new(3, &[64, 96, 80], 10, 0.7).forward(&xs, 8).unwrap();
+        for t in [2usize, 4, 7] {
+            let m = SynthModel::new(3, &[64, 96, 80], 10, 0.7).with_intra_threads(t);
+            assert_eq!(base, m.forward(&xs, 8).unwrap(), "threads {t}");
+        }
+    }
+
+    #[test]
+    fn gamma_zero_is_dense() {
+        // gamma 0 keeps every neuron: output must match a dense forward
+        let m = SynthModel::new(5, &[32, 48], 6, 0.0);
+        let xs: Vec<f32> = Pcg32::seeded(11).normal_vec(2 * 32, 1.0);
+        let got = m.forward(&xs, 2).unwrap();
+        assert_eq!(got.len(), 12);
+        assert!(got.iter().all(|v| v.is_finite()));
+    }
+}

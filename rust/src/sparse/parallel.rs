@@ -36,12 +36,19 @@ fn row_chunks(rows: usize, parts: usize) -> Vec<(usize, usize)> {
 
 /// Parallel blocked GEMM: x (m, k) * w (k, n).
 pub fn matmul_parallel(x: &Tensor, w: &Tensor) -> Tensor {
+    matmul_parallel_with(x, w, n_threads())
+}
+
+/// `matmul_parallel` with an explicit thread budget.  Results are
+/// bit-exact for ANY budget: work splits by output rows and each output
+/// element's accumulation order never changes — the serving layer relies
+/// on this to keep predictions identical across worker counts.
+pub fn matmul_parallel_with(x: &Tensor, w: &Tensor, threads: usize) -> Tensor {
     let (m, k) = (x.shape()[0], x.shape()[1]);
     let (k2, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(k, k2);
     let mut out = vec![0.0f32; m * n];
-    let threads = n_threads();
-    let chunks = row_chunks(m, threads);
+    let chunks = row_chunks(m, threads.max(1));
     let xd = x.data();
     let wd = w.data();
     std::thread::scope(|scope| {
@@ -85,13 +92,18 @@ pub fn matmul_parallel(x: &Tensor, w: &Tensor) -> Tensor {
 
 /// Parallel DSG masked VMM over transposed weights wt (n, d).
 pub fn dsg_vmm_parallel(x: &Tensor, wt: &Tensor, mask: &Tensor) -> Tensor {
+    dsg_vmm_parallel_with(x, wt, mask, n_threads())
+}
+
+/// `dsg_vmm_parallel` with an explicit thread budget (bit-exact for any
+/// budget — row split only, per-row op order unchanged).
+pub fn dsg_vmm_parallel_with(x: &Tensor, wt: &Tensor, mask: &Tensor, threads: usize) -> Tensor {
     let (m, d) = (x.shape()[0], x.shape()[1]);
     let (n, d2) = (wt.shape()[0], wt.shape()[1]);
     assert_eq!(d, d2);
     assert_eq!(mask.shape(), &[m, n]);
     let mut out = vec![0.0f32; m * n];
-    let threads = n_threads();
-    let chunks = row_chunks(m, threads);
+    let chunks = row_chunks(m, threads.max(1));
     let xd = x.data();
     let wd = wt.data();
     let md = mask.data();
@@ -137,10 +149,20 @@ pub fn project_rows_parallel(
     x: &Tensor,
     ridx: &crate::drs::projection::TernaryIndex,
 ) -> Tensor {
+    project_rows_parallel_with(x, ridx, n_threads())
+}
+
+/// `project_rows_parallel` with an explicit thread budget (bit-exact
+/// for any budget).
+pub fn project_rows_parallel_with(
+    x: &Tensor,
+    ridx: &crate::drs::projection::TernaryIndex,
+    threads: usize,
+) -> Tensor {
     let m = x.shape()[0];
     let k = ridx.k;
     let mut out = vec![0.0f32; m * k];
-    let chunks = row_chunks(m, n_threads());
+    let chunks = row_chunks(m, threads.max(1));
     let xd = x.data();
     std::thread::scope(|scope| {
         let mut remaining: &mut [f32] = &mut out;
@@ -217,6 +239,27 @@ mod tests {
         let a = project_rows_parallel(&x, &ridx);
         let b = crate::drs::project_rows(&x, &r);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn explicit_thread_budgets_are_bit_exact() {
+        // The serving layer divides cores across workers, so the SAME
+        // inputs must give the SAME bits under any thread budget.
+        let mut rng = Pcg32::seeded(65);
+        let x = randn(&mut rng, &[23, 96]);
+        let w = randn(&mut rng, &[96, 41]);
+        let wt = ops::transpose(&w);
+        let mask = Tensor::from_fn(&[23, 41], |i| if i % 3 == 0 { 1.0 } else { 0.0 });
+        let r = ternary_r(&mut rng, 16, 96, 3);
+        let ridx = TernaryIndex::from_dense(&r);
+        let mm1 = matmul_parallel_with(&x, &w, 1);
+        let vm1 = dsg_vmm_parallel_with(&x, &wt, &mask, 1);
+        let pr1 = project_rows_parallel_with(&x, &ridx, 1);
+        for t in [2usize, 3, 8] {
+            assert_eq!(mm1, matmul_parallel_with(&x, &w, t), "matmul @ {t}");
+            assert_eq!(vm1, dsg_vmm_parallel_with(&x, &wt, &mask, t), "vmm @ {t}");
+            assert_eq!(pr1, project_rows_parallel_with(&x, &ridx, t), "proj @ {t}");
+        }
     }
 
     #[test]

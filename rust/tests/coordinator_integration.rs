@@ -1,17 +1,26 @@
 //! Coordinator integration: end-to-end training through the rust
-//! orchestrator + PJRT artifacts.  Requires `make artifacts`.
+//! orchestrator + PJRT artifacts.  Needs the `xla` feature AND
+//! `make artifacts`; SKIPS (early return) when either is absent so the
+//! offline tier-1 run stays green.
 
 use dsg::config::{GammaSchedule, RunConfig};
 use dsg::coordinator::{checkpoint, Trainer};
 use dsg::datasets;
 use dsg::runtime::{Meta, Runtime};
 
-fn setup(variant: &str) -> (Runtime, Meta) {
+fn setup(variant: &str) -> Option<(Runtime, Meta)> {
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: dsg built without the `xla` feature");
+        return None;
+    }
     let dir = dsg::artifacts_dir();
-    assert!(dir.join("index.json").exists(), "run `make artifacts` first");
+    if !dir.join("index.json").exists() {
+        eprintln!("skipping: artifacts not built — run `make artifacts` first");
+        return None;
+    }
     let rt = Runtime::cpu().unwrap();
     let meta = Meta::load(&dir, variant).unwrap();
-    (rt, meta)
+    Some((rt, meta))
 }
 
 fn tiny_cfg(model: &str, steps: usize) -> RunConfig {
@@ -25,7 +34,7 @@ fn tiny_cfg(model: &str, steps: usize) -> RunConfig {
 
 #[test]
 fn mlp_loss_decreases_over_training() {
-    let (rt, meta) = setup("mlp");
+    let Some((rt, meta)) = setup("mlp") else { return };
     let cfg = tiny_cfg("mlp", 60);
     let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
     let (train, test) = data.split(0.2);
@@ -42,7 +51,7 @@ fn mlp_loss_decreases_over_training() {
 
 #[test]
 fn densities_track_gamma_through_coordinator() {
-    let (rt, meta) = setup("mlp");
+    let Some((rt, meta)) = setup("mlp") else { return };
     let mut t = Trainer::new(&rt, meta, 1).unwrap();
     let data = datasets::fashion_like(64, 2);
     let mut it = datasets::BatchIter::new(&data, t.meta.batch, 3);
@@ -64,7 +73,7 @@ fn densities_track_gamma_through_coordinator() {
 
 #[test]
 fn projection_refresh_changes_wp_after_updates() {
-    let (rt, meta) = setup("mlp");
+    let Some((rt, meta)) = setup("mlp") else { return };
     let mut t = Trainer::new(&rt, meta, 1).unwrap();
     let wp_before = t.state.wps[0].clone();
     let data = datasets::fashion_like(128, 4);
@@ -81,7 +90,7 @@ fn projection_refresh_changes_wp_after_updates() {
 
 #[test]
 fn dense_variant_trains_without_projection() {
-    let (rt, meta) = setup("mlp_dense");
+    let Some((rt, meta)) = setup("mlp_dense") else { return };
     assert_eq!(meta.counts.wps, 0);
     let cfg = tiny_cfg("mlp_dense", 20);
     let data = datasets::fashion_like(512, 6);
@@ -93,7 +102,7 @@ fn dense_variant_trains_without_projection() {
 
 #[test]
 fn gamma_warmup_schedule_is_applied() {
-    let (rt, meta) = setup("mlp");
+    let Some((rt, meta)) = setup("mlp") else { return };
     let mut cfg = tiny_cfg("mlp", 30);
     cfg.gamma = GammaSchedule::Warmup { target: 0.8, warmup: 20 };
     let data = datasets::fashion_like(512, 7);
@@ -109,7 +118,7 @@ fn gamma_warmup_schedule_is_applied() {
 
 #[test]
 fn checkpoint_roundtrip_preserves_eval() {
-    let (rt, meta) = setup("mlp");
+    let Some((rt, meta)) = setup("mlp") else { return };
     let cfg = tiny_cfg("mlp", 25);
     let data = datasets::fashion_like(512, 8);
     let (train, test) = data.split(0.25);
@@ -132,7 +141,7 @@ fn checkpoint_roundtrip_preserves_eval() {
 
 #[test]
 fn lenet_conv_path_trains() {
-    let (rt, meta) = setup("lenet");
+    let Some((rt, meta)) = setup("lenet") else { return };
     let cfg = tiny_cfg("lenet", 30);
     let data = datasets::fashion_like(512, 9);
     let (train, test) = data.split(0.2);
@@ -147,7 +156,7 @@ fn lenet_conv_path_trains() {
 
 #[test]
 fn wrong_batch_size_is_rejected() {
-    let (rt, meta) = setup("mlp");
+    let Some((rt, meta)) = setup("mlp") else { return };
     let mut t = Trainer::new(&rt, meta, 1).unwrap();
     let err = t.step(&[0.0; 10], &[0; 2], 0.5, 0.1);
     assert!(err.is_err());

@@ -10,6 +10,20 @@ use dsg::native::{Mode, NativeModel};
 use dsg::runtime::{Meta, Runtime};
 use dsg::Tensor;
 
+/// A live PJRT runtime, or `None` (skip) when the `xla` feature or the
+/// HLO artifacts are absent — parity needs both sides to exist.
+fn runtime() -> Option<Runtime> {
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: dsg built without the `xla` feature");
+        return None;
+    }
+    if !dsg::artifacts_dir().join("index.json").exists() {
+        eprintln!("skipping: artifacts not built — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::cpu().unwrap())
+}
+
 fn trained(rt: &Runtime, variant: &str, steps: usize) -> Trainer {
     let dir = dsg::artifacts_dir();
     let meta = Meta::load(&dir, variant).unwrap();
@@ -35,7 +49,7 @@ fn batch_for(t: &Trainer) -> (Vec<f32>, Tensor) {
 #[test]
 fn mlp_native_matches_hlo_dense() {
     // gamma = 0: no masks in play, logits must agree to float tolerance.
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let t = trained(&rt, "mlp", 40);
     let native = NativeModel::new(&t.meta, &t.state).unwrap();
     let (xs, xt) = batch_for(&t);
@@ -51,7 +65,7 @@ fn mlp_native_matches_hlo_dense() {
 
 #[test]
 fn mlp_native_matches_hlo_sparse() {
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let t = trained(&rt, "mlp", 40);
     let native = NativeModel::new(&t.meta, &t.state).unwrap();
     let (xs, xt) = batch_for(&t);
@@ -88,7 +102,7 @@ fn mlp_native_matches_hlo_sparse() {
 
 #[test]
 fn lenet_native_conv_path_matches() {
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let t = trained(&rt, "lenet", 40);
     let native = NativeModel::new(&t.meta, &t.state).unwrap();
     let (xs, xt) = batch_for(&t);
@@ -104,7 +118,7 @@ fn lenet_native_conv_path_matches() {
 
 #[test]
 fn lenet_native_sparse_agrees_on_predictions() {
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let t = trained(&rt, "lenet", 40);
     let native = NativeModel::new(&t.meta, &t.state).unwrap();
     let (xs, xt) = batch_for(&t);
@@ -135,7 +149,7 @@ fn lenet_native_sparse_agrees_on_predictions() {
 #[test]
 fn native_dsg_is_faster_than_native_dense_at_high_sparsity() {
     // The whole point: on the native engine the mask removes real work.
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let t = trained(&rt, "lenet", 10);
     let native = NativeModel::new(&t.meta, &t.state).unwrap();
     let (_, xt) = batch_for(&t);
@@ -156,6 +170,10 @@ fn native_dsg_is_faster_than_native_dense_at_high_sparsity() {
 #[test]
 fn native_rejects_meta_without_topology() {
     let dir = dsg::artifacts_dir();
+    if !dir.join("index.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
     let mut meta = Meta::load(&dir, "mlp").unwrap();
     meta.units.clear();
     let st = dsg::coordinator::ModelState::init(&meta, 1);

@@ -1,23 +1,30 @@
 //! Runtime integration: load real HLO artifacts through PJRT, execute,
 //! and compare against golden vectors produced by the python side.
 //!
-//! These tests REQUIRE `make artifacts`.  They are the cross-language
+//! These tests need the `xla` feature AND `make artifacts`; when either
+//! is absent they SKIP (early-return with a note) rather than fail, so
+//! the offline tier-1 run stays green.  They are the cross-language
 //! proof that the rust coordinator and the JAX/Pallas compute agree.
 
 use dsg::runtime::{golden, Golden, HostTensor, Meta, Runtime};
 
-fn artifacts() -> std::path::PathBuf {
+/// The artifacts dir, or `None` (skip) without PJRT or artifacts.
+fn artifacts() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: dsg built without the `xla` feature");
+        return None;
+    }
     let d = dsg::artifacts_dir();
-    assert!(
-        d.join("index.json").exists(),
-        "artifacts not built — run `make artifacts` first (looked in {d:?})"
-    );
-    d
+    if !d.join("index.json").exists() {
+        eprintln!("skipping: artifacts not built — run `make artifacts` first (looked in {d:?})");
+        return None;
+    }
+    Some(d)
 }
 
 #[test]
 fn kernel_masked_matmul_matches_python_golden() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let exe = rt.load(&dir.join("kernels/masked_matmul.hlo.txt")).unwrap();
     let g = Golden::load(&dir.join("kernels/masked_matmul")).unwrap();
@@ -34,7 +41,7 @@ fn kernel_masked_matmul_matches_python_golden() {
 #[test]
 fn mlp_train_step_matches_python_golden() {
     // Full cross-language check: 29 inputs -> 24 outputs, exact layout.
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let meta = Meta::load(&dir, "mlp").unwrap();
     let exe = rt.load_artifact(&meta, "train").unwrap();
@@ -62,7 +69,7 @@ fn mlp_train_step_matches_python_golden() {
 
 #[test]
 fn train_step_is_deterministic() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let meta = Meta::load(&dir, "mlp").unwrap();
     let exe = rt.load_artifact(&meta, "train").unwrap();
@@ -78,7 +85,7 @@ fn train_step_is_deterministic() {
 
 #[test]
 fn forward_artifact_runs_and_is_shaped() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let meta = Meta::load(&dir, "mlp").unwrap();
     let exe = rt.load_artifact(&meta, "forward").unwrap();
@@ -103,7 +110,7 @@ fn forward_artifact_runs_and_is_shaped() {
 
 #[test]
 fn project_artifact_shapes_match_meta() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let meta = Meta::load(&dir, "mlp").unwrap();
     let exe = rt.load_artifact(&meta, "project").unwrap();
@@ -124,7 +131,7 @@ fn project_artifact_shapes_match_meta() {
 fn project_matches_host_drs_projection() {
     // The HLO projection (Pallas kernel) and the rust host projection
     // (TernaryIndex adds) must agree on the same R and W.
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let meta = Meta::load(&dir, "mlp").unwrap();
     let exe = rt.load_artifact(&meta, "project").unwrap();
@@ -153,7 +160,7 @@ fn project_matches_host_drs_projection() {
 
 #[test]
 fn probe_artifact_returns_masks() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let rt = Runtime::cpu().unwrap();
     let meta = Meta::load(&dir, "mlp").unwrap();
     if !meta.has_file("probe") {
@@ -198,7 +205,7 @@ fn probe_artifact_returns_masks() {
 
 #[test]
 fn all_variants_load_and_parse() {
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     for v in Meta::list_variants(&dir).unwrap() {
         let m = Meta::load(&dir, &v).unwrap();
         assert!(m.batch > 0);

@@ -1,0 +1,90 @@
+//! Concurrent-serving integration: the multi-worker server over the
+//! synthetic DSG model (real column-skipping engines, no artifacts
+//! needed) must produce bit-identical predictions for ANY worker count
+//! and ANY intra-op thread budget on the same pre-enqueued load, while
+//! preserving FIFO ids and the padding semantics of the baseline pump.
+
+use dsg::serve::{Batcher, ConcurrentServer, Queue, ServeReport, ServerConfig, SynthModel};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIMS: &[usize] = &[64, 96, 80];
+const CLASSES: usize = 10;
+const BATCH: usize = 8;
+const GAMMA: f32 = 0.7;
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    let m = SynthModel::new(1, DIMS, CLASSES, GAMMA);
+    (0..n).map(|i| m.synth_image(500 + i as u64)).collect()
+}
+
+fn run_serve(workers: usize, intra: usize, imgs: &[Vec<f32>]) -> ServeReport {
+    let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(intra));
+    let cfg = ServerConfig::new(workers, BATCH, DIMS[0], CLASSES)
+        .with_max_wait(Duration::from_millis(5));
+    // serve_all: the whole load is enqueued before workers spawn, so
+    // batch boundaries — and DSG masks — are timing-independent
+    ConcurrentServer::serve_all(cfg, move |xs: &[f32]| model.forward(xs, BATCH), imgs.to_vec())
+        .unwrap()
+}
+
+#[test]
+fn predictions_identical_across_worker_counts() {
+    let imgs = images(50);
+    let base = run_serve(1, 1, &imgs);
+    assert_eq!(base.served, 50);
+    for (workers, intra) in [(2usize, 2usize), (4, 1), (4, 3)] {
+        let got = run_serve(workers, intra, &imgs);
+        assert_eq!(got.served, 50);
+        assert_eq!(
+            base.predictions(),
+            got.predictions(),
+            "{workers} workers x {intra} threads diverged from 1x1"
+        );
+    }
+}
+
+#[test]
+fn concurrent_matches_baseline_pump() {
+    // Same model, same load: the multi-worker server and the retained
+    // single-threaded pump must agree bit-for-bit on every prediction.
+    let imgs = images(37);
+    let conc = run_serve(4, 2, &imgs);
+
+    let model = SynthModel::new(1, DIMS, CLASSES, GAMMA);
+    let mut q = Queue::new();
+    for img in &imgs {
+        q.push(img.clone());
+    }
+    let mut b = Batcher::new(BATCH, DIMS[0], CLASSES);
+    let baseline = b.pump(&mut q, |xs| model.forward(xs, BATCH)).unwrap();
+
+    assert_eq!(conc.served, baseline.len());
+    assert_eq!(conc.padded_slots, b.stats.padded_slots);
+    for (c, s) in conc.responses.iter().zip(&baseline) {
+        assert_eq!(c.id, s.id);
+        assert_eq!(c.pred, s.pred, "request {} diverged", c.id);
+    }
+}
+
+#[test]
+fn report_accounting_is_consistent() {
+    let imgs = images(45); // 45 = 5*8 + 5 -> 6 batches, 3 padded
+    let report = run_serve(3, 1, &imgs);
+    assert_eq!(report.served, 45);
+    assert_eq!(report.batches, 6);
+    assert_eq!(report.padded_slots, 3);
+    assert_eq!(report.latency.count(), 45);
+    assert_eq!(report.compute.count(), 6); // one sample per batch
+    assert_eq!(report.responses.len(), 45);
+    assert!(report.wall > 0.0);
+    assert!(report.throughput() > 0.0);
+    // per-worker stats sum to the totals
+    let sum: usize = report.per_worker.iter().map(|w| w.served).sum();
+    assert_eq!(sum, 45);
+    // every request id present exactly once, in order
+    for (i, r) in report.responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert!(r.latency >= r.compute - 1e-9, "latency includes compute");
+    }
+}
