@@ -31,7 +31,7 @@ fn main() {
     let wp = dsg::drs::project_weights(&r, &w);
     let mask90 = {
         let out = sparse::dsg_layer(&x, &wt, &wp, &ridx, 0.9);
-        out.mask
+        out.mask.to_dense() // the probes below time the dense-mask engines
     };
 
     println!("conv2 shape ({m} x {d} x {n}), k = {k}, {} threads available", parallel::n_threads());

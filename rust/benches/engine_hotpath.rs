@@ -1,0 +1,352 @@
+//! Engine hot-path microbench: what did the pool + RowMask rebuild buy?
+//!
+//! Two controlled comparisons at Fig 8(a)-style layer shapes, plus a
+//! dispatch-overhead probe:
+//!
+//! * **spawn vs pool** — the identical chunk kernel dispatched through
+//!   per-call `std::thread::scope` spawns (the old engines, reproduced
+//!   verbatim below) vs the persistent `sparse::pool::WorkerPool`.
+//! * **dense mask vs RowMask** — the masked VMM branch-scanning a dense
+//!   f32 mask vs jumping through the compact per-row index lists.
+//!
+//! Every variant is asserted bit-identical before timing — the rebuild
+//! must change WHERE time goes, never a single output bit.
+//!
+//! Writes machine-readable `BENCH_hotpath.json` (override the path with
+//! `DSG_BENCH_OUT`) — the first entry of the perf trajectory.
+//!
+//!     cargo bench --bench engine_hotpath
+//!     DSG_HOTPATH_SMOKE=1 cargo bench --bench engine_hotpath   # CI: tiny shapes
+//!     DSG_BENCH_REPS=9 cargo bench --bench engine_hotpath
+
+use dsg::drs::projection::{ternary_r, TernaryIndex};
+use dsg::drs::topk::{self, RowMask};
+use dsg::metrics::fmt_secs;
+use dsg::sparse::parallel;
+use dsg::tensor::{ops, Tensor};
+use dsg::util::json::{obj, Json};
+use dsg::util::{time_secs, Pcg32};
+
+// ---------------------------------------------------------------------------
+// The OLD scoped-thread engines, reproduced verbatim as the baseline.
+// Same chunking, same inner kernels — the only difference from the pool
+// path is the per-dispatch thread spawn/join.
+// ---------------------------------------------------------------------------
+
+fn row_chunks(rows: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(rows).max(1);
+    let base = rows / parts;
+    let extra = rows % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+fn matmul_spawn(x: &Tensor, w: &Tensor, threads: usize) -> Tensor {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    let chunks = row_chunks(m, threads.max(1));
+    let xd = x.data();
+    let wd = w.data();
+    std::thread::scope(|scope| {
+        let mut remaining: &mut [f32] = &mut out;
+        for &(lo, hi) in &chunks {
+            let (mine, rest) = remaining.split_at_mut((hi - lo) * n);
+            remaining = rest;
+            scope.spawn(move || {
+                const KC: usize = 256;
+                for p0 in (0..k).step_by(KC) {
+                    let p1 = (p0 + KC).min(k);
+                    for i in lo..hi {
+                        let arow = &xd[i * k..(i + 1) * k];
+                        let orow = &mut mine[(i - lo) * n..(i - lo + 1) * n];
+                        for p in p0..p1 {
+                            let av = arow[p];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            let brow = &wd[p * n..(p + 1) * n];
+                            let mut j = 0;
+                            while j + 4 <= n {
+                                orow[j] += av * brow[j];
+                                orow[j + 1] += av * brow[j + 1];
+                                orow[j + 2] += av * brow[j + 2];
+                                orow[j + 3] += av * brow[j + 3];
+                                j += 4;
+                            }
+                            while j < n {
+                                orow[j] += av * brow[j];
+                                j += 1;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+fn dsg_vmm_spawn(x: &Tensor, wt: &Tensor, mask: &Tensor, threads: usize) -> Tensor {
+    let (m, d) = (x.shape()[0], x.shape()[1]);
+    let (n, d2) = (wt.shape()[0], wt.shape()[1]);
+    assert_eq!(d, d2);
+    assert_eq!(mask.shape(), &[m, n]);
+    let mut out = vec![0.0f32; m * n];
+    let chunks = row_chunks(m, threads.max(1));
+    let xd = x.data();
+    let wd = wt.data();
+    let md = mask.data();
+    std::thread::scope(|scope| {
+        let mut remaining: &mut [f32] = &mut out;
+        for &(lo, hi) in &chunks {
+            let (mine, rest) = remaining.split_at_mut((hi - lo) * n);
+            remaining = rest;
+            scope.spawn(move || {
+                for i in lo..hi {
+                    let row = &xd[i * d..(i + 1) * d];
+                    let mrow = &md[i * n..(i + 1) * n];
+                    let orow = &mut mine[(i - lo) * n..(i - lo + 1) * n];
+                    for j in 0..n {
+                        if mrow[j] == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wd[j * d..(j + 1) * d];
+                        let mut acc = 0.0f32;
+                        let mut p = 0;
+                        while p + 4 <= d {
+                            acc += row[p] * wrow[p]
+                                + row[p + 1] * wrow[p + 1]
+                                + row[p + 2] * wrow[p + 2]
+                                + row[p + 3] * wrow[p + 3];
+                            p += 4;
+                        }
+                        while p < d {
+                            acc += row[p] * wrow[p];
+                            p += 1;
+                        }
+                        orow[j] = acc;
+                    }
+                }
+            });
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+// ---------------------------------------------------------------------------
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+fn time_median(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut ts = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let ((), t) = time_secs(&mut f);
+        ts.push(t);
+    }
+    median(ts)
+}
+
+struct Shape {
+    name: &'static str,
+    m: usize,
+    d: usize,
+    n: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    dsg::benchutil::header(
+        "hotpath",
+        "spawn-vs-pool dispatch and dense-mask-vs-RowMask at Fig 8a layer shapes",
+        "pool + RowMask strictly faster than spawn + dense mask, bit-identical outputs",
+    );
+    let smoke = std::env::var("DSG_HOTPATH_SMOKE").is_ok();
+    let reps: usize = std::env::var("DSG_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 3 } else { 5 });
+    let threads = parallel::n_threads();
+    let gamma = 0.9f32;
+    let shapes: Vec<Shape> = if smoke {
+        vec![
+            Shape { name: "tiny1", m: 48, d: 96, n: 32 },
+            Shape { name: "tiny2", m: 32, d: 128, n: 24 },
+        ]
+    } else {
+        dsg::sparse::engine::VGG8_LAYERS
+            .iter()
+            .map(|l| Shape { name: l.name, m: l.n_pq, d: l.n_crs, n: l.n_k })
+            .collect()
+    };
+    println!(
+        "threads {threads}, reps {reps}, gamma {gamma}{}\n",
+        if smoke { " (smoke shapes)" } else { "" }
+    );
+    println!(
+        "{:<8} {:>11} {:>11} {:>11} {:>11} {:>8} {:>9} {:>9}",
+        "layer", "mm-spawn", "mm-pool", "vmm-dense", "vmm-rowmsk", "density", "dispatch", "maskfmt"
+    );
+
+    let mut layer_objs: Vec<Json> = Vec::new();
+    let (mut base_total, mut new_total) = (0.0f64, 0.0f64);
+    for (si, s) in shapes.iter().enumerate() {
+        let mut rng = Pcg32::seeded(300 + si as u64);
+        let (m, d, n) = (s.m, s.d, s.n);
+        let x = Tensor::new(&[m, d], rng.normal_vec(m * d, 1.0));
+        let w = Tensor::new(&[d, n], rng.normal_vec(d * n, (2.0 / d as f32).sqrt()));
+        let wt = ops::transpose(&w);
+        // DRS selection at `gamma`, built once (the Fig 8a protocol
+        // times the layer AFTER the search)
+        let k = dsg::costmodel::jll::projection_dim(0.5, n, d);
+        let r = ternary_r(&mut rng, k, d, 3);
+        let ridx = TernaryIndex::from_dense(&r);
+        let wp = dsg::drs::project_weights(&r, &w);
+        let xp = parallel::project_rows_parallel_with(&x, &ridx, 1);
+        let virt = ops::matmul_blocked(&xp, &wp);
+        let thr = topk::shared_threshold(&virt, gamma);
+        let dense_mask =
+            Tensor::from_fn(virt.shape(), |i| if virt.data()[i] >= thr { 1.0 } else { 0.0 });
+        let rowmask = RowMask::from_threshold(&virt, thr);
+
+        // --- exactness gate: the rebuild may not change a single bit ---
+        let mm_spawn = matmul_spawn(&x, &w, threads);
+        let mm_pool = parallel::matmul_parallel_with(&x, &w, threads);
+        assert_eq!(mm_spawn, mm_pool, "{}: pool matmul != spawn matmul", s.name);
+        assert_eq!(
+            mm_pool,
+            parallel::matmul_parallel_with(&x, &w, 1),
+            "{}: pool matmul not budget-invariant",
+            s.name
+        );
+        let vmm_spawn = dsg_vmm_spawn(&x, &wt, &dense_mask, threads);
+        let vmm_dense = parallel::dsg_vmm_parallel_with(&x, &wt, &dense_mask, threads);
+        let vmm_rm = parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rowmask, threads);
+        assert_eq!(vmm_spawn, vmm_dense, "{}: pool vmm != spawn vmm", s.name);
+        assert_eq!(vmm_dense, vmm_rm, "{}: RowMask vmm != dense-mask vmm", s.name);
+        assert_eq!(
+            vmm_rm,
+            dsg::sparse::dsg_vmm_rowmask(&x, &wt, &rowmask),
+            "{}: parallel RowMask vmm != serial",
+            s.name
+        );
+
+        // --- timings ---
+        let mm_spawn_secs = time_median(reps, || {
+            let _ = matmul_spawn(&x, &w, threads);
+        });
+        let mm_pool_secs = time_median(reps, || {
+            let _ = parallel::matmul_parallel_with(&x, &w, threads);
+        });
+        let vmm_dense_secs = time_median(reps, || {
+            let _ = parallel::dsg_vmm_parallel_with(&x, &wt, &dense_mask, threads);
+        });
+        let vmm_rm_secs = time_median(reps, || {
+            let _ = parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rowmask, threads);
+        });
+        let vmm_spawn_secs = time_median(reps, || {
+            let _ = dsg_vmm_spawn(&x, &wt, &dense_mask, threads);
+        });
+        base_total += mm_spawn_secs + vmm_spawn_secs;
+        new_total += mm_pool_secs + vmm_rm_secs;
+        println!(
+            "{:<8} {:>11} {:>11} {:>11} {:>11} {:>8.3} {:>8.2}x {:>8.2}x",
+            s.name,
+            fmt_secs(mm_spawn_secs),
+            fmt_secs(mm_pool_secs),
+            fmt_secs(vmm_dense_secs),
+            fmt_secs(vmm_rm_secs),
+            rowmask.density(),
+            mm_spawn_secs / mm_pool_secs,
+            vmm_dense_secs / vmm_rm_secs,
+        );
+        layer_objs.push(obj(vec![
+            ("name", Json::Str(s.name.to_string())),
+            ("m", Json::Num(m as f64)),
+            ("d", Json::Num(d as f64)),
+            ("n", Json::Num(n as f64)),
+            ("gamma", Json::Num(gamma as f64)),
+            ("density", Json::Num(rowmask.density())),
+            ("matmul_spawn_secs", Json::Num(mm_spawn_secs)),
+            ("matmul_pool_secs", Json::Num(mm_pool_secs)),
+            ("vmm_spawn_dense_secs", Json::Num(vmm_spawn_secs)),
+            ("vmm_pool_dense_secs", Json::Num(vmm_dense_secs)),
+            ("vmm_pool_rowmask_secs", Json::Num(vmm_rm_secs)),
+            ("exact", Json::Bool(true)),
+        ]));
+    }
+
+    // --- dispatch-overhead probe: many tiny dispatches, where the
+    // per-call thread spawn dominates ---
+    let (dm, dd, dn) = if smoke { (24, 64, 16) } else { (64, 128, 64) };
+    let disp_reps = if smoke { 40 } else { 400 };
+    let mut rng = Pcg32::seeded(77);
+    let dx = Tensor::new(&[dm, dd], rng.normal_vec(dm * dd, 1.0));
+    let dw = Tensor::new(&[dd, dn], rng.normal_vec(dd * dn, 1.0));
+    let ((), spawn_total) = time_secs(|| {
+        for _ in 0..disp_reps {
+            let _ = matmul_spawn(&dx, &dw, threads);
+        }
+    });
+    let ((), pool_total) = time_secs(|| {
+        for _ in 0..disp_reps {
+            let _ = parallel::matmul_parallel_with(&dx, &dw, threads);
+        }
+    });
+    println!(
+        "\ndispatch probe ({dm}x{dd}x{dn}, {disp_reps} calls, {threads} threads): \
+         spawn {} pool {} -> {:.2}x",
+        fmt_secs(spawn_total),
+        fmt_secs(pool_total),
+        spawn_total / pool_total
+    );
+    println!(
+        "layer totals: spawn+dense {} vs pool+RowMask {} -> {:.2}x",
+        fmt_secs(base_total),
+        fmt_secs(new_total),
+        base_total / new_total
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("engine_hotpath".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("threads", Json::Num(threads as f64)),
+        ("reps", Json::Num(reps as f64)),
+        ("layers", Json::Arr(layer_objs)),
+        (
+            "dispatch_probe",
+            obj(vec![
+                ("m", Json::Num(dm as f64)),
+                ("d", Json::Num(dd as f64)),
+                ("n", Json::Num(dn as f64)),
+                ("calls", Json::Num(disp_reps as f64)),
+                ("spawn_total_secs", Json::Num(spawn_total)),
+                ("pool_total_secs", Json::Num(pool_total)),
+                ("pool_speedup", Json::Num(spawn_total / pool_total)),
+            ]),
+        ),
+        (
+            "totals",
+            obj(vec![
+                ("spawn_plus_dense_secs", Json::Num(base_total)),
+                ("pool_plus_rowmask_secs", Json::Num(new_total)),
+                ("speedup", Json::Num(base_total / new_total)),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("DSG_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    std::fs::write(&out_path, report.to_string())?;
+    println!("\nwrote {out_path}");
+    println!("{}", report.to_string());
+    println!("engine_hotpath OK (all variants bit-identical)");
+    Ok(())
+}

@@ -10,4 +10,4 @@ pub mod projection;
 pub mod topk;
 
 pub use projection::{project_rows, project_weights, ternary_r};
-pub use topk::{select_mask, shared_threshold, SelectionStrategy};
+pub use topk::{select_mask, select_rowmask, shared_threshold, RowMask, SelectionStrategy};

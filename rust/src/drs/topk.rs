@@ -32,17 +32,168 @@ impl SelectionStrategy {
 /// Returns -inf for gamma == 0 so every neuron of every sample is kept
 /// (mirrors `compile/layers.py::shared_threshold`).
 pub fn shared_threshold(virt: &Tensor, gamma: f32) -> f32 {
+    shared_threshold_scratch(virt, gamma, &mut Vec::new())
+}
+
+/// `shared_threshold` selecting from a caller-owned scratch buffer, so
+/// the per-layer `to_vec` copy disappears in steady state (the buffer is
+/// cleared and refilled, reusing its capacity).
+pub fn shared_threshold_scratch(virt: &Tensor, gamma: f32, scratch: &mut Vec<f32>) -> f32 {
+    shared_threshold_slice(virt.data(), virt.shape()[1], gamma, scratch)
+}
+
+/// Slice form of [`shared_threshold_scratch`]: `virt` is row-major
+/// (batch, width) and only row 0 is consulted.
+pub fn shared_threshold_slice(
+    virt: &[f32],
+    width: usize,
+    gamma: f32,
+    scratch: &mut Vec<f32>,
+) -> f32 {
     assert!((0.0..1.0).contains(&gamma), "gamma out of range: {gamma}");
-    let width = virt.shape()[1];
     let drop = ((gamma * width as f32).floor() as usize).min(width - 1);
     if drop == 0 {
         return f32::NEG_INFINITY;
     }
-    let mut row0: Vec<f32> = virt.data()[..width].to_vec();
+    scratch.clear();
+    scratch.extend_from_slice(&virt[..width]);
     // select_nth_unstable gives the ascending-order element at `drop` in
     // O(n) — cheaper than the full sort the HLO path uses.
-    let (_, nth, _) = row0.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
+    let (_, nth, _) = scratch.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
     *nth
+}
+
+/// Compact selection mask: per-row selected-index lists in CSR form.
+///
+/// The dense f32 mask costs O(m*n) memory and forces the masked VMM to
+/// branch-scan all n columns per row; this stores only the selected
+/// indices (the paper's §3 memory argument applied to our own engine)
+/// and lets the VMM jump straight to the selected neurons.  Indices are
+/// ascending within a row, so engines visiting them reproduce the
+/// dense-mask scan order bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowMask {
+    rows: usize,
+    width: usize,
+    /// rows + 1 offsets into `idx`.
+    offsets: Vec<usize>,
+    /// Selected column indices, ascending within each row.
+    idx: Vec<u32>,
+}
+
+impl Default for RowMask {
+    fn default() -> Self {
+        RowMask::new()
+    }
+}
+
+impl RowMask {
+    /// An empty 0 x 0 mask (workspace placeholder; fill before use).
+    pub fn new() -> RowMask {
+        RowMask { rows: 0, width: 0, offsets: vec![0], idx: Vec::new() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Selected column indices of row `i` (ascending).
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.idx[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Total selected entries.
+    pub fn selected(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Fraction of selected entries — the measured 1-gamma.
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.width;
+        if total == 0 {
+            return 0.0;
+        }
+        self.idx.len() as f64 / total as f64
+    }
+
+    /// True when every entry is selected (gamma = 0 keep-all): engines
+    /// take a dense fast path with no index indirection.
+    pub fn is_full(&self) -> bool {
+        let total = self.rows * self.width;
+        total > 0 && self.idx.len() == total
+    }
+
+    /// Rebuild in place from row-major virtual activations and a shared
+    /// threshold, reusing the index storage (allocation-free once warm).
+    pub fn fill_from_threshold(&mut self, virt: &[f32], rows: usize, width: usize, t: f32) {
+        debug_assert_eq!(virt.len(), rows * width);
+        assert!(width <= u32::MAX as usize, "mask width {width} exceeds u32");
+        self.rows = rows;
+        self.width = width;
+        self.offsets.clear();
+        self.offsets.reserve(rows + 1);
+        self.offsets.push(0);
+        self.idx.clear();
+        for i in 0..rows {
+            let vrow = &virt[i * width..(i + 1) * width];
+            for (j, &v) in vrow.iter().enumerate() {
+                if v >= t {
+                    self.idx.push(j as u32);
+                }
+            }
+            self.offsets.push(self.idx.len());
+        }
+    }
+
+    /// Build from a (rows, width) virtual-activation tensor + threshold.
+    pub fn from_threshold(virt: &Tensor, t: f32) -> RowMask {
+        let mut m = RowMask::new();
+        m.fill_from_threshold(virt.data(), virt.shape()[0], virt.shape()[1], t);
+        m
+    }
+
+    /// Build from a dense (rows, width) 0/1 mask (nonzero = selected).
+    pub fn from_dense(mask: &Tensor) -> RowMask {
+        let (rows, width) = (mask.shape()[0], mask.shape()[1]);
+        assert!(width <= u32::MAX as usize, "mask width {width} exceeds u32");
+        let mut m = RowMask::new();
+        m.rows = rows;
+        m.width = width;
+        m.offsets.clear();
+        m.offsets.push(0);
+        for i in 0..rows {
+            let mrow = &mask.data()[i * width..(i + 1) * width];
+            for (j, &v) in mrow.iter().enumerate() {
+                if v != 0.0 {
+                    m.idx.push(j as u32);
+                }
+            }
+            m.offsets.push(m.idx.len());
+        }
+        m
+    }
+
+    /// Expand to a dense 0/1 f32 mask (tests / compat).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.width];
+        for i in 0..self.rows {
+            for &j in self.row(i) {
+                out[i * self.width + j as usize] = 1.0;
+            }
+        }
+        Tensor::new(&[self.rows, self.width], out)
+    }
+}
+
+/// DRS selection as a compact [`RowMask`]: shared threshold from sample
+/// 0, selection over the whole batch.
+pub fn select_rowmask(virt: &Tensor, gamma: f32) -> RowMask {
+    let t = shared_threshold(virt, gamma);
+    RowMask::from_threshold(virt, t)
 }
 
 /// Binary selection mask for a (batch, width) virtual-activation matrix.
@@ -168,5 +319,86 @@ mod tests {
     fn gamma_one_panics() {
         let v = Tensor::zeros(&[1, 4]);
         shared_threshold(&v, 1.0);
+    }
+
+    #[test]
+    fn scratch_threshold_matches_plain() {
+        let mut rng = Pcg32::seeded(46);
+        let v = randn(&mut rng, &[4, 300]);
+        let mut scratch = Vec::new();
+        for &g in &[0.0f32, 0.3, 0.8, 0.95] {
+            assert_eq!(
+                shared_threshold(&v, g),
+                shared_threshold_scratch(&v, g, &mut scratch),
+                "gamma {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn rowmask_roundtrips_dense() {
+        let mut rng = Pcg32::seeded(47);
+        let v = randn(&mut rng, &[6, 40]);
+        let dense = select_mask(&v, 0.6, SelectionStrategy::Drs, &mut rng);
+        let rm = RowMask::from_dense(&dense);
+        assert_eq!(rm.to_dense(), dense);
+        assert_eq!(rm.density(), mask_density(&dense));
+        // from_threshold agrees with the dense construction
+        let t = shared_threshold(&v, 0.6);
+        assert_eq!(RowMask::from_threshold(&v, t), rm);
+        assert_eq!(select_rowmask(&v, 0.6), rm);
+    }
+
+    #[test]
+    fn rowmask_rows_are_ascending() {
+        let mut rng = Pcg32::seeded(48);
+        let v = randn(&mut rng, &[5, 64]);
+        let rm = select_rowmask(&v, 0.7);
+        for i in 0..rm.rows() {
+            let r = rm.row(i);
+            for w in r.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+        assert_eq!(
+            rm.selected(),
+            (0..rm.rows()).map(|i| rm.row(i).len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn rowmask_keep_all_is_full() {
+        let mut rng = Pcg32::seeded(49);
+        let v = randn(&mut rng, &[3, 32]);
+        let rm = select_rowmask(&v, 0.0);
+        assert!(rm.is_full());
+        assert_eq!(rm.density(), 1.0);
+        let partial = select_rowmask(&v, 0.5);
+        assert!(!partial.is_full());
+    }
+
+    #[test]
+    fn rowmask_fill_reuses_storage() {
+        let mut rng = Pcg32::seeded(50);
+        let v = randn(&mut rng, &[8, 128]);
+        let t = shared_threshold(&v, 0.8);
+        let mut rm = RowMask::new();
+        rm.fill_from_threshold(v.data(), 8, 128, t);
+        let first = rm.clone();
+        // refill with a different shape, then back: same result
+        rm.fill_from_threshold(&v.data()[..4 * 128], 4, 128, t);
+        rm.fill_from_threshold(v.data(), 8, 128, t);
+        assert_eq!(rm, first);
+    }
+
+    #[test]
+    fn rowmask_empty_rows_supported() {
+        // a row where nothing passes the threshold has an empty list
+        let v = Tensor::new(&[2, 3], vec![5.0, 6.0, 7.0, -1.0, -2.0, -3.0]);
+        let rm = RowMask::from_threshold(&v, 0.0);
+        assert_eq!(rm.row(0), &[0, 1, 2]);
+        assert!(rm.row(1).is_empty());
+        assert_eq!(rm.density(), 0.5);
+        assert!(!rm.is_full());
     }
 }

@@ -7,15 +7,25 @@
 //! be run here, where the DSG mask actually removes work instead of
 //! multiplying by zero.  Parity with the HLO forward is asserted by
 //! `rust/tests/native_parity.rs`.
+//!
+//! The request hot path avoids per-layer buffer allocation in steady
+//! state: every forward runs inside a [`ForwardWorkspace`] whose
+//! buffers (im2col rows, projection output, virtual activations,
+//! compact [`RowMask`], layer outputs) are resized in place and reused
+//! across layers AND across requests.  [`NativeModel`] keeps an internal [`WorkspacePool`]
+//! so concurrent serve workers each end up owning one workspace; parallel
+//! engine dispatch goes through the persistent
+//! [`crate::sparse::pool::WorkerPool`] instead of spawning threads.
 
 use crate::coordinator::ModelState;
 use crate::drs::projection::TernaryIndex;
-use crate::drs::topk;
+use crate::drs::topk::RowMask;
 use crate::runtime::{HostTensor, Meta, Unit};
 use crate::sparse;
 use crate::tensor::{ops, Tensor};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 const BN_EPS: f32 = 1e-5;
 
@@ -44,8 +54,11 @@ pub struct NativeOut {
 }
 
 struct ConvParams {
-    /// (K, CRS) transposed weight matrix for the skipping VMM
+    /// (K, CRS) transposed weight matrix for the skipping VMM.
     wt: Tensor,
+    /// (CRS, K) untransposed weights for the dense GEMM branch —
+    /// precomputed at model build instead of re-transposed per call.
+    w: Tensor,
     ksize: usize,
     stride: usize,
     pad: usize,
@@ -58,16 +71,106 @@ struct DenseParams {
     bias: Option<Vec<f32>>,
 }
 
+/// Eval-mode BN folded to a per-channel affine at model build:
+/// y = x * inv + shift, with inv = scale / sqrt(var + eps) and
+/// shift = bias - mean * inv.  Same arithmetic the per-call version
+/// performed, computed once.
 struct BnParams {
-    scale: Vec<f32>,
-    bias: Vec<f32>,
-    mean: Vec<f32>,
-    var: Vec<f32>,
+    inv: Vec<f32>,
+    shift: Vec<f32>,
+}
+
+impl BnParams {
+    fn new(scale: Vec<f32>, bias: Vec<f32>, mean: Vec<f32>, var: Vec<f32>) -> BnParams {
+        let inv: Vec<f32> = var
+            .iter()
+            .zip(&scale)
+            .map(|(v, s)| s / (v + BN_EPS).sqrt())
+            .collect();
+        let shift: Vec<f32> = mean
+            .iter()
+            .zip(&inv)
+            .zip(&bias)
+            .map(|((m, i), b)| b - m * i)
+            .collect();
+        BnParams { inv, shift }
+    }
 }
 
 struct DsgSide {
     ridx: TernaryIndex,
     wp: Tensor,
+}
+
+/// Per-layer scratch shared by every matmul layer of a forward pass.
+#[derive(Default)]
+pub(crate) struct LayerScratch {
+    /// Projected rows (m, k).
+    pub(crate) xp: Vec<f32>,
+    /// Virtual activations (m, n).
+    pub(crate) virt: Vec<f32>,
+    /// Threshold-selection candidate pool.
+    pub(crate) thr: Vec<f32>,
+    /// Compact selection mask.
+    pub(crate) mask: RowMask,
+}
+
+/// Reusable buffers for forward passes.  Every buffer is resized in
+/// place per layer (capacity is kept), so after the first forward a
+/// workspace performs no per-layer heap allocation — across layers and
+/// across requests.
+#[derive(Default)]
+pub struct ForwardWorkspace {
+    pub(crate) scratch: LayerScratch,
+    /// im2col rows.
+    pub(crate) rows: Vec<f32>,
+    /// rows_layer output (and generic rows-shaped temp).
+    pub(crate) y: Vec<f32>,
+    /// Current activation carried between units.
+    pub(crate) h: Vec<f32>,
+    /// Unit-output / residual temps.
+    pub(crate) t1: Vec<f32>,
+    pub(crate) t2: Vec<f32>,
+    pub(crate) t3: Vec<f32>,
+}
+
+impl ForwardWorkspace {
+    pub fn new() -> ForwardWorkspace {
+        ForwardWorkspace::default()
+    }
+}
+
+/// Checkout/return pool of [`ForwardWorkspace`]s.  Sized by peak
+/// concurrency: with N serve workers hitting the same model, at most N
+/// workspaces are ever created and each is reused across requests.
+#[derive(Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<ForwardWorkspace>>,
+}
+
+impl WorkspacePool {
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// Pop a cached workspace (or build a fresh one on first use).
+    pub fn take(&self) -> ForwardWorkspace {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a workspace for reuse.
+    pub fn put(&self, ws: ForwardWorkspace) {
+        self.free.lock().unwrap().push(ws);
+    }
+}
+
+/// Activation shape carried between units (data lives in `ws.h`).
+#[derive(Clone, Copy)]
+enum Carry {
+    /// (rows, features) — MLP layout.
+    Rows(usize, usize),
+    /// (n, c, h, w) — conv layout.
+    Nchw(usize, usize, usize, usize),
 }
 
 /// A model prepared for native execution (weights transposed and
@@ -81,6 +184,7 @@ pub struct NativeModel {
     dsg: Vec<DsgSide>,
     double_mask: bool,
     use_bn: bool,
+    ws_pool: WorkspacePool,
 }
 
 fn to_tensor(t: &HostTensor) -> Result<Tensor> {
@@ -156,6 +260,7 @@ impl NativeModel {
             dsg: Vec::new(),
             double_mask: meta.double_mask,
             use_bn: meta.use_bn,
+            ws_pool: WorkspacePool::new(),
         };
 
         let add_conv = |m: &mut NativeModel, key: String, wname: String, ksize: usize, stride: usize, pad: usize| -> Result<()> {
@@ -163,18 +268,21 @@ impl NativeModel {
             let k = w.shape()[0];
             let crs: usize = w.shape()[1..].iter().product();
             let wt = Tensor::new(&[k, crs], w.as_f32()?.to_vec());
-            m.convs.insert(key, ConvParams { wt, ksize, stride, pad });
+            // untransposed (CRS, K) stored once — the dense branch and
+            // plain_conv used to recompute this transpose on every call
+            let wmat = ops::transpose(&wt);
+            m.convs.insert(key, ConvParams { wt, w: wmat, ksize, stride, pad });
             Ok(())
         };
         let add_bn = |m: &mut NativeModel, key: String, path: String| -> Result<()> {
             m.bns.insert(
                 key,
-                BnParams {
-                    scale: getv(format!("bn.{path}.scale"))?,
-                    bias: getv(format!("bn.{path}.bias"))?,
-                    mean: getv(format!("bn_state.{path}.mean"))?,
-                    var: getv(format!("bn_state.{path}.var"))?,
-                },
+                BnParams::new(
+                    getv(format!("bn.{path}.scale"))?,
+                    getv(format!("bn.{path}.bias"))?,
+                    getv(format!("bn_state.{path}.mean"))?,
+                    getv(format!("bn_state.{path}.var"))?,
+                ),
             );
             Ok(())
         };
@@ -224,67 +332,85 @@ impl NativeModel {
         Ok(m)
     }
 
-    /// BN in eval mode over rows layout (rows, channels).
-    fn bn_rows(&self, rows: &mut Tensor, key: &str) {
+    /// BN in eval mode over rows layout (rows, channels), prefolded
+    /// affine applied in place.
+    fn bn_rows(&self, rows: &mut [f32], n: usize, key: &str) {
         if !self.use_bn {
             return;
         }
         let bn = &self.bns[key];
-        let n = rows.shape()[1];
-        debug_assert_eq!(bn.scale.len(), n);
-        let inv: Vec<f32> = bn
-            .var
-            .iter()
-            .zip(&bn.scale)
-            .map(|(v, s)| s / (v + BN_EPS).sqrt())
-            .collect();
-        let shift: Vec<f32> = bn
-            .mean
-            .iter()
-            .zip(&inv)
-            .zip(&bn.bias)
-            .map(|((m, i), b)| b - m * i)
-            .collect();
-        for row in rows.data_mut().chunks_exact_mut(n) {
+        debug_assert_eq!(bn.inv.len(), n);
+        for row in rows.chunks_exact_mut(n) {
             for j in 0..n {
-                row[j] = row[j] * inv[j] + shift[j];
+                row[j] = row[j] * bn.inv[j] + bn.shift[j];
             }
         }
     }
 
-    /// Shared-threshold mask over virtual activations in rows layout.
-    /// `sample0_rows` = how many leading rows belong to sample 0.
+    /// Shared-threshold selection over virtual activations in rows
+    /// layout, written into the workspace's compact mask.
+    /// `sample0_rows` = how many leading rows belong to sample 0.  The
+    /// threshold candidate pool is copied into `thr_scratch` (capacity
+    /// reused) instead of a fresh Vec per layer call.
     fn mask_for(
-        virt: &Tensor,
+        virt: &[f32],
+        width: usize,
         gamma: f32,
         sample0_rows: usize,
-    ) -> Tensor {
-        let n = virt.shape()[1];
-        let flat0 = &virt.data()[..sample0_rows * n];
-        let size = flat0.len();
+        thr_scratch: &mut Vec<f32>,
+        mask: &mut RowMask,
+    ) {
+        let size = sample0_rows * width;
         let drop = ((gamma * size as f32).floor() as usize).min(size - 1);
         let t = if drop == 0 {
             f32::NEG_INFINITY
         } else {
-            let mut v = flat0.to_vec();
-            let (_, nth, _) = v.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
+            thr_scratch.clear();
+            thr_scratch.extend_from_slice(&virt[..size]);
+            let (_, nth, _) = thr_scratch.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
             *nth
         };
-        Tensor::from_fn(virt.shape(), |i| if virt.data()[i] >= t { 1.0 } else { 0.0 })
+        let rows = virt.len() / width;
+        mask.fill_from_threshold(virt, rows, width, t);
     }
 
-    /// One DSG (or dense) "matmul layer" over rows: returns masked,
-    /// ReLU'd, BN'd, re-masked output rows plus stats.
+    /// Zero the non-selected entries of rows-layout `y` (the double-mask
+    /// re-application after BN).  Walks each row's ascending selected
+    /// list once — equivalent to the old dense elementwise multiply.
+    fn apply_mask_rows(y: &mut [f32], n: usize, mask: &RowMask) {
+        if mask.is_full() {
+            return;
+        }
+        for i in 0..mask.rows() {
+            let row = &mut y[i * n..(i + 1) * n];
+            let sel = mask.row(i);
+            let mut next = 0usize;
+            for (j, v) in row.iter_mut().enumerate() {
+                if next < sel.len() && sel[next] as usize == j {
+                    next += 1;
+                } else {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// One DSG (or dense) "matmul layer" over rows: masked, ReLU'd,
+    /// BN'd, re-masked output rows written into `out`, stats returned.
     ///
     /// `threads = None` runs the single-threaded reference engines;
-    /// `Some(t)` routes through `sparse::parallel` with that budget.
-    /// Both give bit-exact results for a fixed engine choice, and the
-    /// parallel engines are bit-exact across budgets (row split only).
+    /// `Some(t)` routes through the pool-backed `sparse::parallel` with
+    /// that budget.  Both give bit-exact results for a fixed engine
+    /// choice, and the parallel engines are bit-exact across budgets
+    /// (row split only).
     #[allow(clippy::too_many_arguments)]
-    fn rows_layer(
+    fn rows_layer_ws(
         &self,
-        rows: &Tensor,
+        x: &[f32],
+        m: usize,
+        d: usize,
         wt: &Tensor,
+        w: &Tensor,
         bn_key: &str,
         dsg_idx: Option<usize>,
         gamma: f32,
@@ -292,99 +418,128 @@ impl NativeModel {
         mode: Mode,
         threads: Option<usize>,
         name: &str,
-    ) -> (Tensor, LayerStat) {
+        scratch: &mut LayerScratch,
+        out: &mut Vec<f32>,
+    ) -> LayerStat {
         let t0 = std::time::Instant::now();
-        let (mut y, drs_secs, density, mask) = match (mode, dsg_idx) {
+        let n = wt.shape()[0];
+        debug_assert_eq!(x.len(), m * d);
+        // every kernel below fully writes its output range, so the
+        // buffer only needs the right LENGTH — no clear(): resize
+        // zero-fills just the grown tail, not the whole prefix
+        out.resize(m * n, 0.0);
+        let (drs_secs, density, masked) = match (mode, dsg_idx) {
             (Mode::Dsg, Some(di)) if !self.dsg.is_empty() && gamma > 0.0 => {
                 let side = &self.dsg[di];
                 let td = std::time::Instant::now();
-                let xp = match threads {
-                    Some(t) => sparse::parallel::project_rows_parallel_with(rows, &side.ridx, t),
-                    None => {
-                        let m = rows.shape()[0];
-                        let k = side.ridx.k;
-                        let mut xp = vec![0.0f32; m * k];
-                        for i in 0..m {
-                            side.ridx.project_row(
-                                &rows.data()[i * side.ridx.d..(i + 1) * side.ridx.d],
-                                &mut xp[i * k..(i + 1) * k],
-                            );
-                        }
-                        Tensor::new(&[m, k], xp)
-                    }
-                };
-                let virt = match threads {
-                    Some(t) => sparse::parallel::matmul_parallel_with(&xp, &side.wp, t),
-                    None => ops::matmul_blocked(&xp, &side.wp),
-                };
-                let mask = Self::mask_for(&virt, gamma, sample0_rows);
+                let k = side.ridx.k;
+                scratch.xp.resize(m * k, 0.0);
+                match threads {
+                    Some(t) => sparse::parallel::project_rows_parallel_into(
+                        x, m, &side.ridx, t, &mut scratch.xp,
+                    ),
+                    None => sparse::parallel::project_chunk(&side.ridx, x, 0, m, &mut scratch.xp),
+                }
+                scratch.virt.resize(m * n, 0.0);
+                match threads {
+                    Some(t) => sparse::parallel::matmul_parallel_into(
+                        &scratch.xp, m, k, side.wp.data(), n, t, &mut scratch.virt,
+                    ),
+                    None => ops::matmul_blocked_into(
+                        &scratch.xp, m, k, side.wp.data(), n, &mut scratch.virt,
+                    ),
+                }
+                Self::mask_for(
+                    &scratch.virt, n, gamma, sample0_rows, &mut scratch.thr, &mut scratch.mask,
+                );
                 let drs = td.elapsed().as_secs_f64();
-                let y = match threads {
-                    Some(t) => sparse::parallel::dsg_vmm_parallel_with(rows, wt, &mask, t),
-                    None => sparse::dsg_vmm(rows, wt, &mask),
-                };
-                let density = topk::mask_density(&mask);
-                (y, drs, density, Some(mask))
+                match threads {
+                    Some(t) => sparse::parallel::dsg_vmm_rowmask_parallel_into(
+                        x, m, d, wt.data(), n, &scratch.mask, t, out,
+                    ),
+                    None => sparse::parallel::vmm_rowmask_chunk(
+                        x, wt.data(), d, n, &scratch.mask, 0, m, out,
+                    ),
+                }
+                (drs, scratch.mask.density(), true)
             }
             _ => {
-                let y = match threads {
-                    Some(t) => sparse::parallel::matmul_parallel_with(rows, &ops::transpose(wt), t),
-                    None => ops::matmul_blocked(rows, &ops::transpose(wt)),
-                };
-                (y, 0.0, 1.0, None)
+                match threads {
+                    Some(t) => sparse::parallel::matmul_parallel_into(x, m, d, w.data(), n, t, out),
+                    None => ops::matmul_blocked_into(x, m, d, w.data(), n, out),
+                }
+                (0.0, 1.0, false)
             }
         };
-        ops::relu_inplace(&mut y);
-        self.bn_rows(&mut y, bn_key);
-        if let (Some(mask), true) = (&mask, self.double_mask) {
-            for (v, m) in y.data_mut().iter_mut().zip(mask.data()) {
-                *v *= m;
-            }
+        ops::relu_slice(out);
+        self.bn_rows(out, n, bn_key);
+        if masked && self.double_mask {
+            Self::apply_mask_rows(out, n, &scratch.mask);
         }
-        let stat = LayerStat {
+        LayerStat {
             name: name.to_string(),
             secs: t0.elapsed().as_secs_f64(),
             drs_secs,
             density,
-        };
-        (y, stat)
+        }
     }
 
-    /// rows (N*P*Q, K) -> NCHW tensor.
-    fn rows_to_nchw(rows: &Tensor, n: usize, p: usize, q: usize) -> Tensor {
-        let k = rows.shape()[1];
-        let mut out = vec![0.0f32; n * k * p * q];
+    /// rows (N*P*Q, K) -> NCHW into a reused buffer.
+    fn rows_to_nchw_into(rows: &[f32], n: usize, k: usize, p: usize, q: usize, out: &mut Vec<f32>) {
+        debug_assert_eq!(rows.len(), n * p * q * k);
+        out.resize(n * k * p * q, 0.0); // fully overwritten below
         for ni in 0..n {
             for pi in 0..p {
                 for qi in 0..q {
                     let r = ((ni * p + pi) * q + qi) * k;
                     for ki in 0..k {
-                        out[((ni * k + ki) * p + pi) * q + qi] = rows.data()[r + ki];
+                        out[((ni * k + ki) * p + pi) * q + qi] = rows[r + ki];
                     }
                 }
             }
         }
+    }
+
+    /// rows (N*P*Q, K) -> NCHW tensor (test helper).
+    #[cfg(test)]
+    fn rows_to_nchw(rows: &Tensor, n: usize, p: usize, q: usize) -> Tensor {
+        let k = rows.shape()[1];
+        let mut out = Vec::new();
+        Self::rows_to_nchw_into(rows.data(), n, k, p, q, &mut out);
         Tensor::new(&[n, k, p, q], out)
     }
 
+    /// One conv unit: im2col into `rows_buf`, masked layer into `y_buf`,
+    /// NCHW result into `out`.  Returns the output dims.
     #[allow(clippy::too_many_arguments)]
-    fn conv_unit(
+    fn conv_unit_ws(
         &self,
-        x: &Tensor,
+        x: &[f32],
+        dims: (usize, usize, usize, usize),
         key: &str,
         bn_key: &str,
         dsg_idx: Option<usize>,
         gamma: f32,
         mode: Mode,
         threads: Option<usize>,
+        scratch: &mut LayerScratch,
+        rows_buf: &mut Vec<f32>,
+        y_buf: &mut Vec<f32>,
+        out: &mut Vec<f32>,
         stats: &mut Vec<LayerStat>,
-    ) -> Tensor {
+    ) -> (usize, usize, usize, usize) {
         let cp = &self.convs[key];
-        let n = x.shape()[0];
-        let (rows, p, q) = ops::im2col(x, cp.ksize, cp.stride, cp.pad);
-        let (y, stat) = self.rows_layer(
-            &rows,
+        let (n, c, h, w) = dims;
+        let (p, q) =
+            ops::im2col_slice_into(x, n, c, h, w, cp.ksize, cp.stride, cp.pad, rows_buf);
+        let d = c * cp.ksize * cp.ksize;
+        let kout = cp.wt.shape()[0];
+        let stat = self.rows_layer_ws(
+            rows_buf,
+            n * p * q,
+            d,
             &cp.wt,
+            &cp.w,
             bn_key,
             dsg_idx,
             gamma,
@@ -392,33 +547,111 @@ impl NativeModel {
             mode,
             threads,
             &format!("conv{key}"),
+            scratch,
+            y_buf,
         );
         stats.push(stat);
-        Self::rows_to_nchw(&y, n, p, q)
+        Self::rows_to_nchw_into(y_buf, n, kout, p, q, out);
+        (n, kout, p, q)
     }
 
-    /// Shortcut conv (no mask / relu / bn).
-    fn plain_conv(&self, x: &Tensor, key: &str, threads: Option<usize>) -> Tensor {
+    /// Shortcut conv (no mask / relu / bn) into `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn plain_conv_ws(
+        &self,
+        x: &[f32],
+        dims: (usize, usize, usize, usize),
+        key: &str,
+        threads: Option<usize>,
+        rows_buf: &mut Vec<f32>,
+        y_buf: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
         let cp = &self.convs[key];
-        let n = x.shape()[0];
-        let (rows, p, q) = ops::im2col(x, cp.ksize, cp.stride, cp.pad);
-        let y = match threads {
-            Some(t) => sparse::parallel::matmul_parallel_with(&rows, &ops::transpose(&cp.wt), t),
-            None => ops::matmul_blocked(&rows, &ops::transpose(&cp.wt)),
-        };
-        Self::rows_to_nchw(&y, n, p, q)
+        let (n, c, h, w) = dims;
+        let (p, q) =
+            ops::im2col_slice_into(x, n, c, h, w, cp.ksize, cp.stride, cp.pad, rows_buf);
+        let d = c * cp.ksize * cp.ksize;
+        let kout = cp.wt.shape()[0];
+        y_buf.resize(n * p * q * kout, 0.0); // matmul kernel zero-fills
+        match threads {
+            Some(t) => sparse::parallel::matmul_parallel_into(
+                rows_buf,
+                n * p * q,
+                d,
+                cp.w.data(),
+                kout,
+                t,
+                y_buf,
+            ),
+            None => ops::matmul_blocked_into(rows_buf, n * p * q, d, cp.w.data(), kout, y_buf),
+        }
+        Self::rows_to_nchw_into(y_buf, n, kout, p, q, out);
+    }
+
+    fn maxpool_into(
+        xd: &[f32],
+        dims: (usize, usize, usize, usize),
+        size: usize,
+        out: &mut Vec<f32>,
+    ) -> (usize, usize, usize, usize) {
+        let (n, c, h, w) = dims;
+        let (ph, pw) = (h / size, w / size);
+        out.resize(n * c * ph * pw, 0.0); // fully overwritten below
+        for ni in 0..n {
+            for ci in 0..c {
+                for y in 0..ph {
+                    for xx in 0..pw {
+                        let mut m = f32::NEG_INFINITY;
+                        for dy in 0..size {
+                            for dx in 0..size {
+                                m = m.max(
+                                    xd[((ni * c + ci) * h + y * size + dy) * w + xx * size + dx],
+                                );
+                            }
+                        }
+                        out[((ni * c + ci) * ph + y) * pw + xx] = m;
+                    }
+                }
+            }
+        }
+        (n, c, ph, pw)
+    }
+
+    fn gap_into(
+        xd: &[f32],
+        dims: (usize, usize, usize, usize),
+        out: &mut Vec<f32>,
+    ) -> (usize, usize) {
+        let (n, c, h, w) = dims;
+        out.resize(n * c, 0.0); // fully overwritten below
+        for ni in 0..n {
+            for ci in 0..c {
+                let mut acc = 0.0f32;
+                for y in 0..h {
+                    for xx in 0..w {
+                        acc += xd[((ni * c + ci) * h + y) * w + xx];
+                    }
+                }
+                out[ni * c + ci] = acc / (h * w) as f32;
+            }
+        }
+        (n, c)
     }
 
     /// Full forward pass on a batch (N, input_shape...) using the
-    /// single-threaded reference engines.
+    /// single-threaded reference engines, on a pooled workspace.
     pub fn forward(&self, x: &Tensor, gamma: f32, mode: Mode) -> Result<NativeOut> {
-        self.forward_impl(x, gamma, mode, None)
+        let mut ws = self.ws_pool.take();
+        let r = self.forward_impl(x, gamma, mode, None, &mut ws);
+        self.ws_pool.put(ws);
+        r
     }
 
-    /// Forward pass routed through the multi-threaded engines
-    /// (`sparse::parallel`) with an explicit intra-op thread budget —
-    /// the serving hot path.  Predictions are bit-exact for any budget,
-    /// so a server can divide cores across workers freely.
+    /// Forward pass routed through the pool-backed multi-threaded
+    /// engines (`sparse::parallel`) with an explicit intra-op thread
+    /// budget — the serving hot path.  Predictions are bit-exact for any
+    /// budget, so a server can divide cores across workers freely.
     pub fn forward_threaded(
         &self,
         x: &Tensor,
@@ -426,7 +659,24 @@ impl NativeModel {
         mode: Mode,
         threads: usize,
     ) -> Result<NativeOut> {
-        self.forward_impl(x, gamma, mode, Some(threads.max(1)))
+        let mut ws = self.ws_pool.take();
+        let r = self.forward_impl(x, gamma, mode, Some(threads.max(1)), &mut ws);
+        self.ws_pool.put(ws);
+        r
+    }
+
+    /// Forward pass on a caller-owned workspace (`threads = None` for
+    /// the single-threaded reference engines).  Reusing the same
+    /// workspace across calls is the allocation-free steady state.
+    pub fn forward_with_workspace(
+        &self,
+        x: &Tensor,
+        gamma: f32,
+        mode: Mode,
+        threads: Option<usize>,
+        ws: &mut ForwardWorkspace,
+    ) -> Result<NativeOut> {
+        self.forward_impl(x, gamma, mode, threads, ws)
     }
 
     fn forward_impl(
@@ -435,6 +685,7 @@ impl NativeModel {
         gamma: f32,
         mode: Mode,
         threads: Option<usize>,
+        ws: &mut ForwardWorkspace,
     ) -> Result<NativeOut> {
         let n = x.shape()[0];
         let mut stats = Vec::new();
@@ -445,14 +696,26 @@ impl NativeModel {
             Some(i)
         };
         // conv nets carry NCHW; MLPs carry rows (N, D)
-        let mut h = x.clone();
+        ws.h.clear();
+        ws.h.extend_from_slice(x.data());
+        let mut carry = match x.shape().len() {
+            2 => Carry::Rows(n, x.shape()[1]),
+            4 => Carry::Nchw(n, x.shape()[1], x.shape()[2], x.shape()[3]),
+            r => bail!("native forward input rank {r} unsupported"),
+        };
         for (i, u) in self.units.iter().enumerate() {
             match u {
                 Unit::Dense { .. } => {
+                    let Carry::Rows(m, d) = carry else {
+                        bail!("dense unit {i} on non-rows activation")
+                    };
                     let dp = &self.denses[&i.to_string()];
-                    let (y, stat) = self.rows_layer(
-                        &h,
+                    let stat = self.rows_layer_ws(
+                        &ws.h,
+                        m,
+                        d,
                         &dp.wt,
+                        &dp.w,
                         &i.to_string(),
                         next_dsg(),
                         gamma,
@@ -460,85 +723,146 @@ impl NativeModel {
                         mode,
                         threads,
                         &format!("dense{i}"),
+                        &mut ws.scratch,
+                        &mut ws.y,
                     );
                     stats.push(stat);
-                    h = y;
+                    std::mem::swap(&mut ws.h, &mut ws.y);
+                    carry = Carry::Rows(m, dp.wt.shape()[0]);
                 }
                 Unit::Classifier { d_out, .. } => {
-                    let dp = &self.denses[&i.to_string()];
-                    let mut y = match threads {
-                        Some(t) => sparse::parallel::matmul_parallel_with(&h, &dp.w, t),
-                        None => ops::matmul_blocked(&h, &dp.w),
+                    let Carry::Rows(m, d) = carry else {
+                        bail!("classifier unit {i} on non-rows activation")
                     };
+                    let dp = &self.denses[&i.to_string()];
+                    ws.y.resize(m * d_out, 0.0); // matmul kernel zero-fills
+                    match threads {
+                        Some(t) => sparse::parallel::matmul_parallel_into(
+                            &ws.h, m, d, dp.w.data(), *d_out, t, &mut ws.y,
+                        ),
+                        None => ops::matmul_blocked_into(
+                            &ws.h, m, d, dp.w.data(), *d_out, &mut ws.y,
+                        ),
+                    }
                     if let Some(b) = &dp.bias {
-                        for row in y.data_mut().chunks_exact_mut(*d_out) {
+                        for row in ws.y.chunks_exact_mut(*d_out) {
                             for (v, bb) in row.iter_mut().zip(b) {
                                 *v += bb;
                             }
                         }
                     }
-                    h = y;
+                    std::mem::swap(&mut ws.h, &mut ws.y);
+                    carry = Carry::Rows(m, *d_out);
                 }
                 Unit::Conv { .. } => {
-                    h = self.conv_unit(
-                        &h,
+                    let Carry::Nchw(nn, c, hh, www) = carry else {
+                        bail!("conv unit {i} on non-NCHW activation")
+                    };
+                    let dims = self.conv_unit_ws(
+                        &ws.h,
+                        (nn, c, hh, www),
                         &i.to_string(),
                         &i.to_string(),
                         next_dsg(),
                         gamma,
                         mode,
                         threads,
+                        &mut ws.scratch,
+                        &mut ws.rows,
+                        &mut ws.y,
+                        &mut ws.t1,
                         &mut stats,
                     );
+                    std::mem::swap(&mut ws.h, &mut ws.t1);
+                    carry = Carry::Nchw(dims.0, dims.1, dims.2, dims.3);
                 }
                 Unit::Residual { c_in, c_out, stride } => {
-                    let b1 = self.conv_unit(
-                        &h,
+                    let Carry::Nchw(nn, c, hh, www) = carry else {
+                        bail!("residual unit {i} on non-NCHW activation")
+                    };
+                    let d1 = self.conv_unit_ws(
+                        &ws.h,
+                        (nn, c, hh, www),
                         &format!("{i}.conv1"),
                         &format!("{i}.bn1"),
                         next_dsg(),
                         gamma,
                         mode,
                         threads,
+                        &mut ws.scratch,
+                        &mut ws.rows,
+                        &mut ws.y,
+                        &mut ws.t1,
                         &mut stats,
                     );
-                    let b2 = self.conv_unit(
-                        &b1,
+                    let d2 = self.conv_unit_ws(
+                        &ws.t1,
+                        d1,
                         &format!("{i}.conv2"),
                         &format!("{i}.bn2"),
                         next_dsg(),
                         gamma,
                         mode,
                         threads,
+                        &mut ws.scratch,
+                        &mut ws.rows,
+                        &mut ws.y,
+                        &mut ws.t2,
                         &mut stats,
                     );
-                    let sc = if *stride != 1 || c_in != c_out {
-                        self.plain_conv(&h, &format!("{i}.short"), threads)
+                    if *stride != 1 || c_in != c_out {
+                        self.plain_conv_ws(
+                            &ws.h,
+                            (nn, c, hh, www),
+                            &format!("{i}.short"),
+                            threads,
+                            &mut ws.rows,
+                            &mut ws.y,
+                            &mut ws.t3,
+                        );
+                        for (v, s) in ws.t2.iter_mut().zip(&ws.t3) {
+                            *v += s;
+                        }
                     } else {
-                        h.clone()
-                    };
-                    let mut sum = b2;
-                    for (v, s) in sum.data_mut().iter_mut().zip(sc.data()) {
-                        *v += s;
+                        for (v, s) in ws.t2.iter_mut().zip(&ws.h) {
+                            *v += s;
+                        }
                     }
-                    h = sum;
+                    std::mem::swap(&mut ws.h, &mut ws.t2);
+                    carry = Carry::Nchw(d2.0, d2.1, d2.2, d2.3);
                 }
                 Unit::MaxPool { size } => {
-                    h = maxpool(&h, *size);
+                    let Carry::Nchw(nn, c, hh, www) = carry else {
+                        bail!("maxpool unit {i} on non-NCHW activation")
+                    };
+                    let dims = Self::maxpool_into(&ws.h, (nn, c, hh, www), *size, &mut ws.t1);
+                    std::mem::swap(&mut ws.h, &mut ws.t1);
+                    carry = Carry::Nchw(dims.0, dims.1, dims.2, dims.3);
                 }
                 Unit::GlobalAvgPool => {
-                    h = gap(&h);
+                    let Carry::Nchw(nn, c, hh, www) = carry else {
+                        bail!("gap unit {i} on non-NCHW activation")
+                    };
+                    let (rn, rc) = Self::gap_into(&ws.h, (nn, c, hh, www), &mut ws.t1);
+                    std::mem::swap(&mut ws.h, &mut ws.t1);
+                    carry = Carry::Rows(rn, rc);
                 }
                 Unit::Flatten => {
-                    let d: usize = h.shape()[1..].iter().product();
-                    h = h.reshape(&[n, d]);
+                    // NCHW row-major == rows (N, C*H*W): shape-only change
+                    carry = match carry {
+                        Carry::Rows(m, d) => Carry::Rows(m, d),
+                        Carry::Nchw(nn, c, hh, www) => Carry::Rows(nn, c * hh * www),
+                    };
                 }
             }
         }
-        if h.shape().len() != 2 || h.shape()[1] != self.meta.classes {
-            bail!("native forward produced shape {:?}", h.shape());
+        let Carry::Rows(m, c) = carry else {
+            bail!("native forward ended on an NCHW activation")
+        };
+        if m != n || c != self.meta.classes {
+            bail!("native forward produced shape [{m}, {c}]");
         }
-        Ok(NativeOut { logits: h, stats })
+        Ok(NativeOut { logits: Tensor::new(&[m, c], ws.h[..m * c].to_vec()), stats })
     }
 
     /// Classify a batch: argmax per row.
@@ -560,48 +884,23 @@ impl NativeModel {
     }
 }
 
-fn maxpool(x: &Tensor, size: usize) -> Tensor {
-    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
-    let (ph, pw) = (h / size, w / size);
-    let mut out = vec![f32::NEG_INFINITY; n * c * ph * pw];
-    for ni in 0..n {
-        for ci in 0..c {
-            for y in 0..ph {
-                for xx in 0..pw {
-                    let mut m = f32::NEG_INFINITY;
-                    for dy in 0..size {
-                        for dx in 0..size {
-                            m = m.max(x.at4(ni, ci, y * size + dy, xx * size + dx));
-                        }
-                    }
-                    out[((ni * c + ci) * ph + y) * pw + xx] = m;
-                }
-            }
-        }
-    }
-    Tensor::new(&[n, c, ph, pw], out)
-}
-
-fn gap(x: &Tensor) -> Tensor {
-    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
-    let mut out = vec![0.0f32; n * c];
-    for ni in 0..n {
-        for ci in 0..c {
-            let mut acc = 0.0f32;
-            for y in 0..h {
-                for xx in 0..w {
-                    acc += x.at4(ni, ci, y, xx);
-                }
-            }
-            out[ni * c + ci] = acc / (h * w) as f32;
-        }
-    }
-    Tensor::new(&[n, c], out)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn maxpool(x: &Tensor, size: usize) -> Tensor {
+        let dims = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let mut out = Vec::new();
+        let (n, c, p, q) = NativeModel::maxpool_into(x.data(), dims, size, &mut out);
+        Tensor::new(&[n, c, p, q], out)
+    }
+
+    fn gap(x: &Tensor) -> Tensor {
+        let dims = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let mut out = Vec::new();
+        let (n, c) = NativeModel::gap_into(x.data(), dims, &mut out);
+        Tensor::new(&[n, c], out)
+    }
 
     #[test]
     fn maxpool_known() {
@@ -635,10 +934,33 @@ mod tests {
     fn mask_for_density() {
         let mut rng = crate::util::Pcg32::seeded(3);
         let virt = Tensor::new(&[10, 50], rng.normal_vec(500, 1.0));
-        let m = NativeModel::mask_for(&virt, 0.8, 2); // sample 0 = 2 rows
-        let d0: f32 = m.data()[..100].iter().sum::<f32>() / 100.0;
+        let mut scratch = Vec::new();
+        let mut m = RowMask::new();
+        NativeModel::mask_for(virt.data(), 50, 0.8, 2, &mut scratch, &mut m); // sample 0 = 2 rows
+        let d0 = (m.row(0).len() + m.row(1).len()) as f64 / 100.0;
         assert!((d0 - 0.2).abs() < 0.011);
-        let m0 = NativeModel::mask_for(&virt, 0.0, 2);
-        assert_eq!(m0.data().iter().sum::<f32>(), 500.0);
+        NativeModel::mask_for(virt.data(), 50, 0.0, 2, &mut scratch, &mut m);
+        assert!(m.is_full());
+        assert_eq!(m.selected(), 500);
+    }
+
+    #[test]
+    fn apply_mask_rows_zeroes_unselected() {
+        let virt = Tensor::new(&[2, 4], vec![1.0, -1.0, 2.0, -2.0, -3.0, 3.0, -4.0, 4.0]);
+        let mask = RowMask::from_threshold(&virt, 0.0);
+        let mut y = vec![9.0f32; 8];
+        NativeModel::apply_mask_rows(&mut y, 4, &mask);
+        assert_eq!(y, vec![9.0, 0.0, 9.0, 0.0, 0.0, 9.0, 0.0, 9.0]);
+    }
+
+    #[test]
+    fn workspace_pool_recycles() {
+        let pool = WorkspacePool::new();
+        let mut ws = pool.take();
+        ws.h.resize(1024, 1.0);
+        let cap = ws.h.capacity();
+        pool.put(ws);
+        let ws2 = pool.take();
+        assert!(ws2.h.capacity() >= cap, "buffer capacity must survive the pool");
     }
 }

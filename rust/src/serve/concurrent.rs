@@ -25,7 +25,7 @@
 //! per-batch compute go into thread-local [`LatencyHistogram`]s merged
 //! at shutdown.
 
-use super::{argmax, assemble_batch, Request, Response};
+use super::{argmax, assemble_batch_into, Request, Response};
 use crate::metrics::LatencyHistogram;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
@@ -323,8 +323,10 @@ where
     F: Fn(&[f32]) -> Result<Vec<f32>>,
 {
     let mut stats = WorkerStats::default();
+    // one assembly buffer per worker, reused across every batch
+    let mut xs: Vec<f32> = Vec::new();
     while let Some(reqs) = next_batch(cfg, shared) {
-        let (xs, padded) = assemble_batch(&reqs, cfg.max_batch, cfg.input_elems)?;
+        let padded = assemble_batch_into(&reqs, cfg.max_batch, cfg.input_elems, &mut xs)?;
         stats.padded_slots += padded;
         let t0 = Instant::now();
         let logits = forward(&xs)?;

@@ -120,8 +120,22 @@ pub(crate) fn assemble_batch(
     batch_size: usize,
     input_elems: usize,
 ) -> anyhow::Result<(Vec<f32>, usize)> {
+    let mut xs = Vec::new();
+    let padded = assemble_batch_into(reqs, batch_size, input_elems, &mut xs)?;
+    Ok((xs, padded))
+}
+
+/// [`assemble_batch`] into a caller-owned buffer, so a serve worker
+/// reuses one allocation across every batch it ever assembles.
+pub(crate) fn assemble_batch_into(
+    reqs: &[Request],
+    batch_size: usize,
+    input_elems: usize,
+    xs: &mut Vec<f32>,
+) -> anyhow::Result<usize> {
     anyhow::ensure!(!reqs.is_empty(), "cannot assemble an empty batch");
-    let mut xs = Vec::with_capacity(batch_size * input_elems);
+    xs.clear();
+    xs.reserve(batch_size * input_elems);
     for r in reqs {
         anyhow::ensure!(
             r.image.len() == input_elems,
@@ -136,7 +150,7 @@ pub(crate) fn assemble_batch(
     for _ in 0..padded {
         xs.extend_from_slice(&reqs[0].image);
     }
-    Ok((xs, padded))
+    Ok(padded)
 }
 
 /// Argmax of one logit row.

@@ -5,13 +5,19 @@
 //! `dsg serve`, the throughput bench, and CI exercise the serving hot
 //! path on a build with nothing but the rust toolchain.
 //!
-//! All matmuls route through `sparse::parallel` with an explicit
-//! intra-op thread budget, so a server can split cores across workers
-//! while keeping predictions bit-identical (the engines are row-split
-//! and therefore thread-count invariant).
+//! All matmuls route through the pool-backed `sparse::parallel` engines
+//! with an explicit intra-op thread budget, so a server can split cores
+//! across workers while keeping predictions bit-identical (the engines
+//! are row-split and therefore thread-count invariant).  Selection uses
+//! the compact [`crate::sparse::RowMask`], and every forward runs inside
+//! a pooled [`ForwardWorkspace`]: with N serve workers at most N
+//! workspaces exist, each reused across requests, so no projection /
+//! activation / mask buffer is heap-allocated per layer in steady
+//! state.
 
 use crate::drs::projection::{ternary_r, TernaryIndex};
 use crate::drs::topk;
+use crate::native::{ForwardWorkspace, WorkspacePool};
 use crate::sparse::parallel;
 use crate::tensor::{ops, Tensor};
 use crate::util::Pcg32;
@@ -35,6 +41,7 @@ pub struct SynthModel {
     pub classes: usize,
     pub gamma: f32,
     intra_threads: usize,
+    ws_pool: WorkspacePool,
 }
 
 impl SynthModel {
@@ -69,6 +76,7 @@ impl SynthModel {
             classes,
             gamma,
             intra_threads: 1,
+            ws_pool: WorkspacePool::new(),
         }
     }
 
@@ -84,8 +92,23 @@ impl SynthModel {
     }
 
     /// Forward a flat (batch * input_elems) buffer to flat logits
-    /// (batch * classes).  Deterministic for fixed inputs.
+    /// (batch * classes) on a pooled workspace.  Deterministic for fixed
+    /// inputs, for any thread budget.
     pub fn forward(&self, xs: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut ws = self.ws_pool.take();
+        let r = self.forward_with_workspace(xs, batch, &mut ws);
+        self.ws_pool.put(ws);
+        r
+    }
+
+    /// [`SynthModel::forward`] on a caller-owned workspace (the
+    /// allocation-free steady state when the caller reuses it).
+    pub fn forward_with_workspace(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        ws: &mut ForwardWorkspace,
+    ) -> Result<Vec<f32>> {
         anyhow::ensure!(
             xs.len() == batch * self.input_elems,
             "batch buffer has {} elems, expected {}",
@@ -93,19 +116,51 @@ impl SynthModel {
             batch * self.input_elems
         );
         let t = self.intra_threads;
-        let mut h = Tensor::new(&[batch, self.input_elems], xs.to_vec());
+        ws.h.clear();
+        ws.h.extend_from_slice(xs);
+        let mut d = self.input_elems;
         for layer in &self.layers {
-            let xp = parallel::project_rows_parallel_with(&h, &layer.ridx, t);
-            let virt = parallel::matmul_parallel_with(&xp, &layer.wp, t);
-            let thr = topk::shared_threshold(&virt, self.gamma);
-            let mask =
-                Tensor::from_fn(virt.shape(), |i| if virt.data()[i] >= thr { 1.0 } else { 0.0 });
-            let mut y = parallel::dsg_vmm_parallel_with(&h, &layer.wt, &mask, t);
-            ops::relu_inplace(&mut y);
-            h = y;
+            let k = layer.ridx.k;
+            let n = layer.wt.shape()[0];
+            // kernels fully write their outputs: resize sets length only
+            ws.scratch.xp.resize(batch * k, 0.0);
+            parallel::project_rows_parallel_into(&ws.h, batch, &layer.ridx, t, &mut ws.scratch.xp);
+            ws.scratch.virt.resize(batch * n, 0.0);
+            parallel::matmul_parallel_into(
+                &ws.scratch.xp,
+                batch,
+                k,
+                layer.wp.data(),
+                n,
+                t,
+                &mut ws.scratch.virt,
+            );
+            let thr = topk::shared_threshold_slice(
+                &ws.scratch.virt,
+                n,
+                self.gamma,
+                &mut ws.scratch.thr,
+            );
+            ws.scratch.mask.fill_from_threshold(&ws.scratch.virt, batch, n, thr);
+            ws.y.resize(batch * n, 0.0);
+            parallel::dsg_vmm_rowmask_parallel_into(
+                &ws.h,
+                batch,
+                d,
+                layer.wt.data(),
+                n,
+                &ws.scratch.mask,
+                t,
+                &mut ws.y,
+            );
+            ops::relu_slice(&mut ws.y);
+            std::mem::swap(&mut ws.h, &mut ws.y);
+            d = n;
         }
-        let logits = parallel::matmul_parallel_with(&h, &self.classifier, t);
-        Ok(logits.into_data())
+        let c = self.classes;
+        ws.y.resize(batch * c, 0.0);
+        parallel::matmul_parallel_into(&ws.h, batch, d, self.classifier.data(), c, t, &mut ws.y);
+        Ok(ws.y[..].to_vec())
     }
 }
 
@@ -142,5 +197,19 @@ mod tests {
         let got = m.forward(&xs, 2).unwrap();
         assert_eq!(got.len(), 12);
         assert!(got.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn explicit_workspace_reuse_is_bit_exact() {
+        let m = SynthModel::new(13, &[48, 64, 56], 8, 0.6).with_intra_threads(2);
+        let mut ws = ForwardWorkspace::new();
+        let mut fresh = Vec::new();
+        let mut reused = Vec::new();
+        for i in 0..4u64 {
+            let xs: Vec<f32> = Pcg32::seeded(100 + i).normal_vec(4 * 48, 1.0);
+            fresh.push(m.forward(&xs, 4).unwrap());
+            reused.push(m.forward_with_workspace(&xs, 4, &mut ws).unwrap());
+        }
+        assert_eq!(fresh, reused, "reused workspace diverged from pooled path");
     }
 }

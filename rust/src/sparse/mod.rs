@@ -5,21 +5,31 @@
 //! VMM and a dense GEMM.  MKL is unavailable here; `tensor::ops` provides
 //! the blocked-GEMM stand-in and this module implements:
 //!
-//!   * `vmm`        — row-loop dense vector-matrix multiply (BL of Fig 8a)
-//!   * `dsg_vmm`    — per-row masked VMM that really skips the weight
-//!                    columns of non-selected output neurons (Fig 3b)
-//!   * `dsg_layer`  — the full DSG pipeline for one layer: ternary
-//!                    projection -> low-dim virtual VMM -> shared top-k
-//!                    threshold -> masked high-dim VMM
+//!   * `vmm`         — row-loop dense vector-matrix multiply (BL of Fig 8a)
+//!   * `dsg_vmm`     — per-row masked VMM over a dense f32 mask (kept as
+//!                     the reference and the bench baseline)
+//!   * `dsg_vmm_rowmask` — masked VMM over the compact [`RowMask`]
+//!                     (per-row selected-index lists): jumps straight to
+//!                     selected neurons instead of branch-scanning all n
+//!                     columns (Fig 3b, minus the scan)
+//!   * `dsg_layer`   — the full DSG pipeline for one layer: ternary
+//!                     projection -> low-dim virtual VMM -> shared top-k
+//!                     threshold -> masked high-dim VMM
+//!
+//! `pool` holds the persistent worker pool behind the `parallel`
+//! engines; `engine` is the Fig 8(a) layer-timing harness.
 //!
 //! Speedup *ratios* VMM/DSG and GEMM/DSG are what Fig 8(a) claims
 //! (2.0/5.0/8.5x over VMM and 0.6/1.6/2.7x over GEMM at 50/80/90%).
 
 pub mod engine;
 pub mod parallel;
+pub mod pool;
 
 use crate::drs::{projection::TernaryIndex, topk};
 use crate::tensor::{ops, Tensor};
+
+pub use crate::drs::topk::RowMask;
 
 /// Row-by-row dense VMM over a TRANSPOSED weight matrix wt (n, d): each
 /// output neuron is an independent inner product over contiguous memory —
@@ -97,10 +107,27 @@ pub fn dsg_vmm(x: &Tensor, wt: &Tensor, mask: &Tensor) -> Tensor {
     Tensor::new(&[m, n], out)
 }
 
+/// DSG masked VMM over a compact [`RowMask`]: per row, jump straight to
+/// the selected output neurons instead of branch-scanning all n columns.
+/// Bit-exact with [`dsg_vmm`] for the same selection (ascending indices,
+/// same per-dot accumulation order); a full mask (gamma = 0 keep-all)
+/// takes a dense fast path with no index indirection.
+pub fn dsg_vmm_rowmask(x: &Tensor, wt: &Tensor, mask: &RowMask) -> Tensor {
+    let (m, d) = (x.shape()[0], x.shape()[1]);
+    let (n, d2) = (wt.shape()[0], wt.shape()[1]);
+    assert_eq!(d, d2);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    let mut out = vec![0.0f32; m * n];
+    parallel::vmm_rowmask_chunk(x.data(), wt.data(), d, n, mask, 0, m, &mut out);
+    Tensor::new(&[m, n], out)
+}
+
 /// Result of one full DSG layer execution on the host engine.
 pub struct DsgLayerOut {
     pub y: Tensor,
-    pub mask: Tensor,
+    /// Compact selection (use [`RowMask::to_dense`] for an f32 mask).
+    pub mask: RowMask,
     pub density: f64,
 }
 
@@ -131,13 +158,13 @@ pub fn dsg_layer(
     let xp = Tensor::new(&[m, k], xp);
     // 2) low-dimensional virtual VMM (m, k) x (k, n)
     let virt = ops::matmul_blocked(&xp, wp);
-    // 3) shared threshold + mask
+    // 3) shared threshold + compact selection
     let t = topk::shared_threshold(&virt, gamma);
-    let mask = Tensor::from_fn(&[m, n], |i| if virt.data()[i] >= t { 1.0 } else { 0.0 });
-    // 4) masked high-dimensional VMM with column skipping
-    let y = dsg_vmm(x, wt, &mask);
-    let density = topk::mask_density(&mask);
-    DsgLayerOut { y, mask, density }
+    let rmask = RowMask::from_threshold(&virt, t);
+    // 4) masked high-dimensional VMM jumping straight to selected columns
+    let y = dsg_vmm_rowmask(x, wt, &rmask);
+    let density = rmask.density();
+    DsgLayerOut { y, mask: rmask, density }
 }
 
 #[cfg(test)]
@@ -176,6 +203,22 @@ mod tests {
                 assert!((got.at2(i, j) - want).abs() < 1e-3);
             }
         }
+    }
+
+    #[test]
+    fn dsg_vmm_rowmask_matches_dense_mask() {
+        let mut rng = Pcg32::seeded(56);
+        let x = randn(&mut rng, &[7, 48]);
+        let w = randn(&mut rng, &[48, 13]);
+        let wt = ops::transpose(&w);
+        let mask = Tensor::from_fn(&[7, 13], |i| if i % 5 < 2 { 1.0 } else { 0.0 });
+        let rm = RowMask::from_dense(&mask);
+        assert_eq!(dsg_vmm(&x, &wt, &mask), dsg_vmm_rowmask(&x, &wt, &rm));
+        // keep-all fast path: full mask == dense row sweep, bit-exact
+        let full = Tensor::full(&[7, 13], 1.0);
+        let rf = RowMask::from_dense(&full);
+        assert!(rf.is_full());
+        assert_eq!(vmm(&x, &wt), dsg_vmm_rowmask(&x, &wt, &rf));
     }
 
     #[test]
@@ -227,9 +270,10 @@ mod tests {
         let ridx = TernaryIndex::from_dense(&r);
         let wp = crate::drs::project_weights(&r, &w);
         let out = dsg_layer(&x, &wt, &wp, &ridx, 0.7);
+        let mask = out.mask.to_dense();
         let dense = ops::matmul_naive(&x, &w);
         for i in 0..m * n {
-            if out.mask.data()[i] != 0.0 {
+            if mask.data()[i] != 0.0 {
                 assert!((out.y.data()[i] - dense.data()[i]).abs() < 1e-3);
             } else {
                 assert_eq!(out.y.data()[i], 0.0);

@@ -1,22 +1,42 @@
-//! Multi-threaded variants of the CPU engines (std::thread scoped —
-//! rayon is unavailable offline).  Work is split by output rows; each
-//! thread writes a disjoint slice, so no synchronization is needed
-//! beyond the join.
+//! Multi-threaded variants of the CPU engines, dispatched on the
+//! persistent [`crate::sparse::pool::WorkerPool`] (rayon is unavailable
+//! offline; the first perf pass used `std::thread::scope`, which
+//! re-spawned OS threads per layer per request — the pool removes that).
 //!
-//! These back the §Perf optimization pass: the single-threaded engines
-//! stay as the reference (and as the Fig 8a apples-to-apples baselines),
-//! the parallel ones are what a deployment would run.
+//! Work is split by output rows; each chunk writes a disjoint slice and
+//! per-element accumulation order never changes, so results are bit-exact
+//! for ANY thread budget — the invariant the serving layer relies on to
+//! divide cores across workers freely.
+//!
+//! Layering:
+//!
+//! * `*_chunk` — slice-level serial kernels over a row range `[lo, hi)`
+//!   writing the chunk's output slice.  Shared by the serial `_into`
+//!   paths and the pool dispatch, so "parallel at budget 1" and "one
+//!   chunk of a parallel run" are literally the same code.
+//! * `*_parallel_into` — allocation-free entry points writing into
+//!   caller-owned buffers (the [`crate::native::ForwardWorkspace`] hot
+//!   path).
+//! * `*_parallel[_with]` — Tensor-returning wrappers (compat + tests).
 
+use super::pool::{Task, WorkerPool};
+use crate::drs::topk::RowMask;
 use crate::tensor::Tensor;
+use std::sync::OnceLock;
 
-/// Number of worker threads (DSG_THREADS overrides; default = cores).
+/// Number of worker threads (`DSG_THREADS` overrides; default = cores).
+/// Cached in a `OnceLock`: the env lookup happens once per process, and
+/// the global pool is sized from the first answer.
 pub fn n_threads() -> usize {
-    if let Ok(v) = std::env::var("DSG_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("DSG_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Split `rows` into at most `parts` contiguous chunks.
@@ -34,6 +54,255 @@ fn row_chunks(rows: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Run `f(lo, hi, chunk)` over row chunks of `out` (rows x cols), one
+/// chunk per thread-budget slot, on the global pool.  A budget of 1 (or
+/// a single row) runs inline with zero dispatch overhead.
+fn for_row_chunks<F>(threads: usize, rows: usize, cols: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Send + Sync,
+{
+    debug_assert_eq!(out.len(), rows * cols);
+    let chunks = row_chunks(rows, threads.max(1));
+    if chunks.len() <= 1 {
+        f(0, rows, out);
+        return;
+    }
+    let f = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+    let mut remaining: &mut [f32] = out;
+    for &(lo, hi) in &chunks {
+        let (mine, rest) = remaining.split_at_mut((hi - lo) * cols);
+        remaining = rest;
+        tasks.push(Box::new(move || f(lo, hi, mine)));
+    }
+    WorkerPool::global().run(tasks);
+}
+
+// ---------------------------------------------------------------------------
+// slice kernels (row-range, serial)
+// ---------------------------------------------------------------------------
+
+/// Blocked saxpy GEMM rows `[lo, hi)` of x (m, k) * w (k, n) into the
+/// chunk slice `out` (len (hi-lo)*n).  Zeroes `out` first.
+pub fn matmul_chunk(xd: &[f32], wd: &[f32], k: usize, n: usize, lo: usize, hi: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    out.fill(0.0);
+    const KC: usize = 256;
+    for p0 in (0..k).step_by(KC) {
+        let p1 = (p0 + KC).min(k);
+        for i in lo..hi {
+            let arow = &xd[i * k..(i + 1) * k];
+            let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+            for p in p0..p1 {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &wd[p * n..(p + 1) * n];
+                let mut j = 0;
+                while j + 4 <= n {
+                    orow[j] += av * brow[j];
+                    orow[j + 1] += av * brow[j + 1];
+                    orow[j + 2] += av * brow[j + 2];
+                    orow[j + 3] += av * brow[j + 3];
+                    j += 4;
+                }
+                while j < n {
+                    orow[j] += av * brow[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// One masked-VMM dot product: row (len d) . wrow (len d), the exact
+/// accumulation order every engine variant shares.
+#[inline]
+fn vmm_dot(row: &[f32], wrow: &[f32], d: usize) -> f32 {
+    let mut acc = 0.0f32;
+    let mut p = 0;
+    while p + 4 <= d {
+        acc += row[p] * wrow[p]
+            + row[p + 1] * wrow[p + 1]
+            + row[p + 2] * wrow[p + 2]
+            + row[p + 3] * wrow[p + 3];
+        p += 4;
+    }
+    while p < d {
+        acc += row[p] * wrow[p];
+        p += 1;
+    }
+    acc
+}
+
+/// Dense-mask masked VMM rows `[lo, hi)` over transposed weights wt
+/// (n, d), scanning all n mask entries per row (the pre-RowMask
+/// baseline, kept for compat and as the bench comparison).  Zeroes the
+/// chunk first.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_mask_chunk(
+    xd: &[f32],
+    wd: &[f32],
+    md: &[f32],
+    d: usize,
+    n: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    out.fill(0.0);
+    for i in lo..hi {
+        let row = &xd[i * d..(i + 1) * d];
+        let mrow = &md[i * n..(i + 1) * n];
+        let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+        for j in 0..n {
+            if mrow[j] == 0.0 {
+                continue;
+            }
+            orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+        }
+    }
+}
+
+/// RowMask masked VMM rows `[lo, hi)`: jump straight to the selected
+/// output neurons instead of branch-scanning all n columns.  Selected
+/// indices are ascending, so the visit order — and therefore every bit
+/// of the result — matches the dense-mask scan.  Zeroes the chunk
+/// first; a full mask falls back to the dense row sweep (same op order,
+/// no index indirection).
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_rowmask_chunk(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    if mask.is_full() {
+        // keep-all fast path (gamma = 0): every j in 0..n, same order
+        for i in lo..hi {
+            let row = &xd[i * d..(i + 1) * d];
+            let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+            for j in 0..n {
+                orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+            }
+        }
+        return;
+    }
+    out.fill(0.0);
+    for i in lo..hi {
+        let row = &xd[i * d..(i + 1) * d];
+        let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+        for &j in mask.row(i) {
+            let j = j as usize;
+            orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+        }
+    }
+}
+
+/// Ternary projection of rows `[lo, hi)` into the chunk slice.
+pub fn project_chunk(
+    ridx: &crate::drs::projection::TernaryIndex,
+    xd: &[f32],
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * ridx.k);
+    for i in lo..hi {
+        ridx.project_row(
+            &xd[i * ridx.d..(i + 1) * ridx.d],
+            &mut out[(i - lo) * ridx.k..(i - lo + 1) * ridx.k],
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// allocation-free entry points
+// ---------------------------------------------------------------------------
+
+/// Pool-parallel GEMM x (m, k) * w (k, n) into `out` (len m*n).
+pub fn matmul_parallel_into(
+    xd: &[f32],
+    m: usize,
+    k: usize,
+    wd: &[f32],
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xd.len(), m * k);
+    debug_assert_eq!(wd.len(), k * n);
+    for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
+        matmul_chunk(xd, wd, k, n, lo, hi, chunk)
+    });
+}
+
+/// Pool-parallel dense-mask VMM into `out` (len m*n).
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_parallel_into(
+    xd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    md: &[f32],
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xd.len(), m * d);
+    debug_assert_eq!(wd.len(), n * d);
+    debug_assert_eq!(md.len(), m * n);
+    for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
+        vmm_mask_chunk(xd, wd, md, d, n, lo, hi, chunk)
+    });
+}
+
+/// Pool-parallel RowMask VMM into `out` (len m*n).
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_parallel_into(
+    xd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xd.len(), m * d);
+    debug_assert_eq!(wd.len(), n * d);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
+        vmm_rowmask_chunk(xd, wd, d, n, mask, lo, hi, chunk)
+    });
+}
+
+/// Pool-parallel ternary projection into `out` (len m*k).
+pub fn project_rows_parallel_into(
+    xd: &[f32],
+    m: usize,
+    ridx: &crate::drs::projection::TernaryIndex,
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xd.len(), m * ridx.d);
+    for_row_chunks(threads, m, ridx.k, out, |lo, hi, chunk| {
+        project_chunk(ridx, xd, lo, hi, chunk)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Tensor wrappers
+// ---------------------------------------------------------------------------
+
 /// Parallel blocked GEMM: x (m, k) * w (k, n).
 pub fn matmul_parallel(x: &Tensor, w: &Tensor) -> Tensor {
     matmul_parallel_with(x, w, n_threads())
@@ -48,49 +317,12 @@ pub fn matmul_parallel_with(x: &Tensor, w: &Tensor, threads: usize) -> Tensor {
     let (k2, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(k, k2);
     let mut out = vec![0.0f32; m * n];
-    let chunks = row_chunks(m, threads.max(1));
-    let xd = x.data();
-    let wd = w.data();
-    std::thread::scope(|scope| {
-        let mut remaining: &mut [f32] = &mut out;
-        for &(lo, hi) in &chunks {
-            let (mine, rest) = remaining.split_at_mut((hi - lo) * n);
-            remaining = rest;
-            scope.spawn(move || {
-                const KC: usize = 256;
-                for p0 in (0..k).step_by(KC) {
-                    let p1 = (p0 + KC).min(k);
-                    for i in lo..hi {
-                        let arow = &xd[i * k..(i + 1) * k];
-                        let orow = &mut mine[(i - lo) * n..(i - lo + 1) * n];
-                        for p in p0..p1 {
-                            let av = arow[p];
-                            if av == 0.0 {
-                                continue;
-                            }
-                            let brow = &wd[p * n..(p + 1) * n];
-                            let mut j = 0;
-                            while j + 4 <= n {
-                                orow[j] += av * brow[j];
-                                orow[j + 1] += av * brow[j + 1];
-                                orow[j + 2] += av * brow[j + 2];
-                                orow[j + 3] += av * brow[j + 3];
-                                j += 4;
-                            }
-                            while j < n {
-                                orow[j] += av * brow[j];
-                                j += 1;
-                            }
-                        }
-                    }
-                }
-            });
-        }
-    });
+    matmul_parallel_into(x.data(), m, k, w.data(), n, threads, &mut out);
     Tensor::new(&[m, n], out)
 }
 
-/// Parallel DSG masked VMM over transposed weights wt (n, d).
+/// Parallel DSG masked VMM over transposed weights wt (n, d), dense f32
+/// mask (m, n).
 pub fn dsg_vmm_parallel(x: &Tensor, wt: &Tensor, mask: &Tensor) -> Tensor {
     dsg_vmm_parallel_with(x, wt, mask, n_threads())
 }
@@ -103,44 +335,29 @@ pub fn dsg_vmm_parallel_with(x: &Tensor, wt: &Tensor, mask: &Tensor, threads: us
     assert_eq!(d, d2);
     assert_eq!(mask.shape(), &[m, n]);
     let mut out = vec![0.0f32; m * n];
-    let chunks = row_chunks(m, threads.max(1));
-    let xd = x.data();
-    let wd = wt.data();
-    let md = mask.data();
-    std::thread::scope(|scope| {
-        let mut remaining: &mut [f32] = &mut out;
-        for &(lo, hi) in &chunks {
-            let (mine, rest) = remaining.split_at_mut((hi - lo) * n);
-            remaining = rest;
-            scope.spawn(move || {
-                for i in lo..hi {
-                    let row = &xd[i * d..(i + 1) * d];
-                    let mrow = &md[i * n..(i + 1) * n];
-                    let orow = &mut mine[(i - lo) * n..(i - lo + 1) * n];
-                    for j in 0..n {
-                        if mrow[j] == 0.0 {
-                            continue;
-                        }
-                        let wrow = &wd[j * d..(j + 1) * d];
-                        let mut acc = 0.0f32;
-                        let mut p = 0;
-                        while p + 4 <= d {
-                            acc += row[p] * wrow[p]
-                                + row[p + 1] * wrow[p + 1]
-                                + row[p + 2] * wrow[p + 2]
-                                + row[p + 3] * wrow[p + 3];
-                            p += 4;
-                        }
-                        while p < d {
-                            acc += row[p] * wrow[p];
-                            p += 1;
-                        }
-                        orow[j] = acc;
-                    }
-                }
-            });
-        }
-    });
+    dsg_vmm_parallel_into(x.data(), m, d, wt.data(), n, mask.data(), threads, &mut out);
+    Tensor::new(&[m, n], out)
+}
+
+/// Parallel DSG masked VMM over a compact [`RowMask`].
+pub fn dsg_vmm_rowmask_parallel(x: &Tensor, wt: &Tensor, mask: &RowMask) -> Tensor {
+    dsg_vmm_rowmask_parallel_with(x, wt, mask, n_threads())
+}
+
+/// `dsg_vmm_rowmask_parallel` with an explicit thread budget.  Bit-exact
+/// with the dense-mask engine for the same selection, and across
+/// budgets.
+pub fn dsg_vmm_rowmask_parallel_with(
+    x: &Tensor,
+    wt: &Tensor,
+    mask: &RowMask,
+    threads: usize,
+) -> Tensor {
+    let (m, d) = (x.shape()[0], x.shape()[1]);
+    let (n, d2) = (wt.shape()[0], wt.shape()[1]);
+    assert_eq!(d, d2);
+    let mut out = vec![0.0f32; m * n];
+    dsg_vmm_rowmask_parallel_into(x.data(), m, d, wt.data(), n, mask, threads, &mut out);
     Tensor::new(&[m, n], out)
 }
 
@@ -160,26 +377,9 @@ pub fn project_rows_parallel_with(
     threads: usize,
 ) -> Tensor {
     let m = x.shape()[0];
-    let k = ridx.k;
-    let mut out = vec![0.0f32; m * k];
-    let chunks = row_chunks(m, threads.max(1));
-    let xd = x.data();
-    std::thread::scope(|scope| {
-        let mut remaining: &mut [f32] = &mut out;
-        for &(lo, hi) in &chunks {
-            let (mine, rest) = remaining.split_at_mut((hi - lo) * k);
-            remaining = rest;
-            scope.spawn(move || {
-                for i in lo..hi {
-                    ridx.project_row(
-                        &xd[i * ridx.d..(i + 1) * ridx.d],
-                        &mut mine[(i - lo) * k..(i - lo + 1) * k],
-                    );
-                }
-            });
-        }
-    });
-    Tensor::new(&[m, k], out)
+    let mut out = vec![0.0f32; m * ridx.k];
+    project_rows_parallel_into(x.data(), m, ridx, threads, &mut out);
+    Tensor::new(&[m, ridx.k], out)
 }
 
 #[cfg(test)]
@@ -231,6 +431,21 @@ mod tests {
     }
 
     #[test]
+    fn rowmask_vmm_matches_dense_mask_vmm() {
+        let mut rng = Pcg32::seeded(66);
+        let x = randn(&mut rng, &[29, 64]);
+        let w = randn(&mut rng, &[64, 31]);
+        let wt = ops::transpose(&w);
+        let mask = Tensor::from_fn(&[29, 31], |i| if i % 4 == 0 { 1.0 } else { 0.0 });
+        let rm = RowMask::from_dense(&mask);
+        for t in [1usize, 3] {
+            let dense = dsg_vmm_parallel_with(&x, &wt, &mask, t);
+            let compact = dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t);
+            assert_eq!(dense, compact, "threads {t}");
+        }
+    }
+
+    #[test]
     fn parallel_projection_matches_serial() {
         let mut rng = Pcg32::seeded(63);
         let x = randn(&mut rng, &[19, 96]);
@@ -250,14 +465,17 @@ mod tests {
         let w = randn(&mut rng, &[96, 41]);
         let wt = ops::transpose(&w);
         let mask = Tensor::from_fn(&[23, 41], |i| if i % 3 == 0 { 1.0 } else { 0.0 });
+        let rm = RowMask::from_dense(&mask);
         let r = ternary_r(&mut rng, 16, 96, 3);
         let ridx = TernaryIndex::from_dense(&r);
         let mm1 = matmul_parallel_with(&x, &w, 1);
         let vm1 = dsg_vmm_parallel_with(&x, &wt, &mask, 1);
+        let rm1 = dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, 1);
         let pr1 = project_rows_parallel_with(&x, &ridx, 1);
         for t in [2usize, 3, 8] {
             assert_eq!(mm1, matmul_parallel_with(&x, &w, t), "matmul @ {t}");
             assert_eq!(vm1, dsg_vmm_parallel_with(&x, &wt, &mask, t), "vmm @ {t}");
+            assert_eq!(rm1, dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t), "rowmask @ {t}");
             assert_eq!(pr1, project_rows_parallel_with(&x, &ridx, t), "proj @ {t}");
         }
     }
@@ -270,5 +488,19 @@ mod tests {
         let a = matmul_parallel(&x, &w);
         let b = ops::matmul_naive(&x, &w);
         assert!(a.allclose(&b, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        // steady-state: the same output buffer survives repeated calls
+        let mut rng = Pcg32::seeded(67);
+        let x = randn(&mut rng, &[9, 32]);
+        let w = randn(&mut rng, &[32, 11]);
+        let want = matmul_parallel_with(&x, &w, 2);
+        let mut out = vec![f32::NAN; 9 * 11];
+        for _ in 0..3 {
+            matmul_parallel_into(x.data(), 9, 32, w.data(), 11, 2, &mut out);
+            assert_eq!(out, want.data());
+        }
     }
 }

@@ -1,0 +1,327 @@
+//! Persistent worker pool for the sparse engines.
+//!
+//! The scoped-thread engines of the first perf pass spawned (and joined)
+//! fresh OS threads for every layer of every request — tens of
+//! microseconds of `clone(2)`/futex overhead per dispatch that the
+//! paper's "dynamic sparsity must REMOVE work" argument says should not
+//! exist.  This pool spawns its workers once (lazily, process-wide) and
+//! after that a dispatch is one mutex push + one condvar wake.
+//!
+//! Contract (identical to the scoped engines it replaces):
+//!
+//! * Work arrives as row-chunk tasks that write disjoint output slices;
+//!   the pool never re-orders arithmetic, so results stay bit-exact for
+//!   ANY thread budget — the invariant the serving layer relies on.
+//! * [`WorkerPool::run`] blocks until every submitted task finished, so
+//!   tasks may borrow from the caller's stack (enforced by the wait, not
+//!   the type system — see the `SAFETY` note in `run`).
+//! * The caller executes one chunk inline, so a budget of `t` needs only
+//!   `t - 1` pool workers and a budget of 1 never touches the pool.
+//! * Tasks must be leaf compute: a task that dispatches back onto the
+//!   pool can deadlock when every worker is busy.
+//!
+//! Multiple dispatchers (e.g. concurrent serve workers) share the global
+//! pool safely: completion is tracked per dispatch, not per pool.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A borrowed chunk task.  `'env` may be a stack lifetime: `run` does not
+/// return until the task has executed.
+pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Per-dispatch completion tracking (tasks from different dispatchers
+/// interleave freely in the shared queue).
+struct Dispatch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// First caught panic payload, re-raised on the dispatcher so the
+    /// original message/location survives (as it did under scoped
+    /// threads).
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+struct QueuedTask {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    dispatch: Arc<Dispatch>,
+}
+
+struct PoolState {
+    q: VecDeque<QueuedTask>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    available: Condvar,
+}
+
+/// Long-lived worker threads with a chunk-dispatch API.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` background threads (>= 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { q: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("dsg-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// The process-wide pool, spawned on first use.  Sized so that ONE
+    /// dispatcher at the default budget saturates the machine:
+    /// `n_threads() - 1` background workers (the dispatcher runs one
+    /// chunk inline), floor 1.  Larger explicit budgets still give
+    /// bit-exact results — excess chunks queue and drain as workers
+    /// free up.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            WorkerPool::new(super::parallel::n_threads().saturating_sub(1).max(1))
+        })
+    }
+
+    /// Number of background worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute every task to completion.  The last task runs inline on
+    /// the calling thread; the rest go to the worker queue.  Blocks
+    /// until all tasks have finished (even if one panics), then
+    /// propagates the first panic.
+    pub fn run(&self, mut tasks: Vec<Task<'_>>) {
+        let Some(inline) = tasks.pop() else { return };
+        if tasks.is_empty() {
+            return inline();
+        }
+        let dispatch = Arc::new(Dispatch {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for t in tasks {
+                // SAFETY: the loop below blocks until `remaining == 0`,
+                // i.e. every queued task has finished running, before
+                // this function returns — including when the inline task
+                // panics (the payload is re-raised only after the wait).
+                // Borrows of `'env` data inside a task therefore never
+                // outlive this call, so erasing the lifetime is sound.
+                let run: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(t) };
+                st.q.push_back(QueuedTask { run, dispatch: dispatch.clone() });
+            }
+        }
+        self.shared.available.notify_all();
+        // The dispatcher contributes its own chunk instead of idling.
+        let inline_result = catch_unwind(AssertUnwindSafe(inline));
+        let mut rem = dispatch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = dispatch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if let Err(payload) = inline_result {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = dispatch.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.q.pop_front() {
+                    break t;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.available.wait(st).unwrap();
+            }
+        };
+        // catch_unwind keeps the worker alive across a panicking task;
+        // the payload is re-raised on the dispatcher after the drain.
+        let result = catch_unwind(AssertUnwindSafe(task.run));
+        if let Err(payload) = result {
+            let mut slot = task.dispatch.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let mut rem = task.dispatch.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            task.dispatch.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Task<'_>> = (0..17)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn disjoint_slice_writes_land() {
+        let pool = WorkerPool::new(2);
+        let mut out = vec![0u32; 64];
+        {
+            let mut tasks: Vec<Task<'_>> = Vec::new();
+            let mut rest: &mut [u32] = &mut out;
+            for c in 0..8 {
+                let (mine, tail) = rest.split_at_mut(8);
+                rest = tail;
+                tasks.push(Box::new(move || {
+                    for (i, v) in mine.iter_mut().enumerate() {
+                        *v = (c * 8 + i) as u32;
+                    }
+                }));
+            }
+            pool.run(tasks);
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_dispatches() {
+        let pool = WorkerPool::new(1);
+        pool.run(Vec::new());
+        let hit = AtomicUsize::new(0);
+        pool.run(vec![Box::new(|| {
+            hit.fetch_add(1, Ordering::SeqCst);
+        }) as Task<'_>]);
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn reuse_across_many_dispatches() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            let tasks: Vec<Task<'_>> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_share_the_pool() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..6)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        let tasks: Vec<Task<'_>> = (0..3)
+                            .map(|_| {
+                                Box::new(|| {
+                                    total.fetch_add(1, Ordering::SeqCst);
+                                })
+                                    as Task<'_>
+                            })
+                            .collect();
+                        pool.run(tasks);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 6 * 25 * 3);
+    }
+
+    #[test]
+    fn queued_task_panic_propagates_after_drain() {
+        let pool = WorkerPool::new(2);
+        let finished = Arc::new(AtomicUsize::new(0));
+        let f2 = finished.clone();
+        let f3 = finished.clone();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(vec![
+                Box::new(|| panic!("task boom")) as Task<'_>,
+                Box::new(move || {
+                    f2.fetch_add(1, Ordering::SeqCst);
+                }) as Task<'_>,
+                Box::new(move || {
+                    f3.fetch_add(1, Ordering::SeqCst);
+                }) as Task<'_>,
+            ]);
+        }));
+        let payload = result.expect_err("queued-task panic must propagate");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"task boom"), "original payload kept");
+        assert_eq!(finished.load(Ordering::SeqCst), 2, "other tasks still ran");
+        // the pool survives the panic
+        let ok = AtomicUsize::new(0);
+        pool.run(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        }) as Task<'_>]);
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = WorkerPool::global() as *const WorkerPool;
+        let b = WorkerPool::global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(WorkerPool::global().workers() >= 1);
+    }
+}

@@ -35,13 +35,22 @@ pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
 /// §Perf iteration L3-1: processing 4 rows of `a` per inner sweep reuses
 /// each loaded `b` row four times, ~1.9x over the previous saxpy loop.
 pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> Tensor {
-    const KC: usize = 256; // depth per block (L1-resident b panel rows)
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
+    matmul_blocked_into(a.data(), m, k, b.data(), n, &mut out);
+    Tensor::new(&[m, n], out)
+}
+
+/// [`matmul_blocked`] into a caller-owned buffer (len m*n), slice form —
+/// the allocation-free workspace path.  Zeroes `out` first.
+pub fn matmul_blocked_into(ad: &[f32], m: usize, k: usize, bd: &[f32], n: usize, out: &mut [f32]) {
+    const KC: usize = 256; // depth per block (L1-resident b panel rows)
+    debug_assert_eq!(ad.len(), m * k);
+    debug_assert_eq!(bd.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
     for p0 in (0..k).step_by(KC) {
         let p1 = (p0 + KC).min(k);
         let mut i = 0;
@@ -89,7 +98,6 @@ pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    Tensor::new(&[m, n], out)
 }
 
 /// Transpose a 2-D tensor.
@@ -107,7 +115,12 @@ pub fn transpose(a: &Tensor) -> Tensor {
 
 /// ReLU in place.
 pub fn relu_inplace(t: &mut Tensor) {
-    for v in t.data_mut() {
+    relu_slice(t.data_mut());
+}
+
+/// ReLU over a raw slice (the workspace hot path).
+pub fn relu_slice(xs: &mut [f32]) {
+    for v in xs {
         if *v < 0.0 {
             *v = 0.0;
         }
@@ -128,10 +141,31 @@ pub fn im2col(
         x.shape()[2],
         x.shape()[3],
     );
+    let mut out = Vec::new();
+    let (p, q) = im2col_slice_into(x.data(), n, c, h, w, ksize, stride, pad, &mut out);
+    (Tensor::new(&[n * p * q, c * ksize * ksize], out), p, q)
+}
+
+/// [`im2col`] from a raw NCHW slice into a caller-owned buffer that is
+/// resized (reusing capacity) and fully overwritten — the allocation-free
+/// workspace path.  Returns (p, q).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_slice_into(
+    xd: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    debug_assert_eq!(xd.len(), n * c * h * w);
     let p = (h + 2 * pad - ksize) / stride + 1;
     let q = (w + 2 * pad - ksize) / stride + 1;
     let d = c * ksize * ksize;
-    let mut out = vec![0.0f32; n * p * q * d];
+    out.resize(n * p * q * d, 0.0); // every position written below
     for ni in 0..n {
         for pi in 0..p {
             for qi in 0..q {
@@ -147,7 +181,7 @@ pub fn im2col(
                                 && wx >= 0
                                 && (wx as usize) < w
                             {
-                                x.at4(ni, ci, hy as usize, wx as usize)
+                                xd[((ni * c + ci) * h + hy as usize) * w + wx as usize]
                             } else {
                                 0.0
                             };
@@ -159,7 +193,7 @@ pub fn im2col(
             }
         }
     }
-    (Tensor::new(&[n * p * q, d], out), p, q)
+    (p, q)
 }
 
 #[cfg(test)]
@@ -249,6 +283,24 @@ mod tests {
             let got = y.at2(row, ko);
             assert!((got - acc).abs() < 1e-3, "{got} vs {acc}");
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let mut rng = Pcg32::seeded(14);
+        let a = rand_t(&mut rng, &[9, 33]);
+        let b = rand_t(&mut rng, &[33, 12]);
+        let want = matmul_blocked(&a, &b);
+        let mut out = vec![f32::NAN; 9 * 12];
+        matmul_blocked_into(a.data(), 9, 33, b.data(), 12, &mut out);
+        assert_eq!(out, want.data());
+
+        let x = rand_t(&mut rng, &[2, 3, 5, 5]);
+        let (rows, p, q) = im2col(&x, 3, 1, 1);
+        let mut buf = vec![f32::NAN; 1]; // wrong size: must be resized
+        let (p2, q2) = im2col_slice_into(x.data(), 2, 3, 5, 5, 3, 1, 1, &mut buf);
+        assert_eq!((p, q), (p2, q2));
+        assert_eq!(buf, rows.data());
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Pool + RowMask hot-path integration: the pool-backed engines must be
+//! bit-exact vs the single-threaded reference engines and across thread
+//! budgets {1, 2, 3, 8}; RowMask must agree with the dense-mask engines
+//! on every selection shape (empty rows, keep-all, mixed); and the
+//! persistent pool + pooled workspaces must survive heavy reuse —
+//! repeated forwards, many dispatches, concurrent dispatchers.
+
+use dsg::drs::projection::{ternary_r, TernaryIndex};
+use dsg::drs::topk::{self, RowMask};
+use dsg::native::ForwardWorkspace;
+use dsg::serve::SynthModel;
+use dsg::sparse::{self, parallel};
+use dsg::tensor::{ops, Tensor};
+use dsg::util::Pcg32;
+
+const BUDGETS: [usize; 4] = [1, 2, 3, 8];
+
+fn randn(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, rng.normal_vec(n, 1.0))
+}
+
+#[test]
+fn pool_engines_bit_exact_vs_reference_across_budgets() {
+    let mut rng = Pcg32::seeded(901);
+    let x = randn(&mut rng, &[33, 96]);
+    let w = randn(&mut rng, &[96, 41]);
+    let wt = ops::transpose(&w);
+    let virt = randn(&mut rng, &[33, 41]);
+    let rm = topk::select_rowmask(&virt, 0.7);
+    let dense = rm.to_dense();
+    let r = ternary_r(&mut rng, 16, 96, 3);
+    let ridx = TernaryIndex::from_dense(&r);
+
+    // single-threaded references
+    let vmm_ref = sparse::dsg_vmm(&x, &wt, &dense);
+    let rowmask_ref = sparse::dsg_vmm_rowmask(&x, &wt, &rm);
+    let proj_ref = dsg::drs::project_rows(&x, &r);
+    assert_eq!(vmm_ref, rowmask_ref, "RowMask reference != dense reference");
+
+    for t in BUDGETS {
+        assert_eq!(
+            vmm_ref,
+            parallel::dsg_vmm_parallel_with(&x, &wt, &dense, t),
+            "dense vmm @ {t}"
+        );
+        assert_eq!(
+            rowmask_ref,
+            parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t),
+            "rowmask vmm @ {t}"
+        );
+        assert_eq!(proj_ref, parallel::project_rows_parallel_with(&x, &ridx, t), "proj @ {t}");
+    }
+    // the pool matmul kernel is budget-invariant (it intentionally
+    // differs from the serial blocked reference kernel)
+    let mm1 = parallel::matmul_parallel_with(&x, &w, 1);
+    for t in BUDGETS {
+        assert_eq!(mm1, parallel::matmul_parallel_with(&x, &w, t), "matmul @ {t}");
+    }
+    assert!(mm1.allclose(&ops::matmul_blocked(&x, &w), 1e-3, 1e-3));
+}
+
+#[test]
+fn empty_mask_rows_produce_zero_rows() {
+    let mut rng = Pcg32::seeded(902);
+    let x = randn(&mut rng, &[5, 32]);
+    let w = randn(&mut rng, &[32, 9]);
+    let wt = ops::transpose(&w);
+    // rows 1 and 3 select nothing
+    let dense = Tensor::from_fn(&[5, 9], |i| {
+        let row = i / 9;
+        if row == 1 || row == 3 {
+            0.0
+        } else if i % 2 == 0 {
+            1.0
+        } else {
+            0.0
+        }
+    });
+    let rm = RowMask::from_dense(&dense);
+    assert!(rm.row(1).is_empty() && rm.row(3).is_empty());
+    for t in BUDGETS {
+        let y = parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t);
+        assert_eq!(y, sparse::dsg_vmm(&x, &wt, &dense), "budget {t}");
+        for row in [1usize, 3] {
+            assert!(
+                y.data()[row * 9..(row + 1) * 9].iter().all(|&v| v == 0.0),
+                "empty-mask row {row} not zero @ budget {t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gamma_zero_keep_all_fast_path_is_exact() {
+    let mut rng = Pcg32::seeded(903);
+    let x = randn(&mut rng, &[7, 64]);
+    let w = randn(&mut rng, &[64, 15]);
+    let wt = ops::transpose(&w);
+    let virt = randn(&mut rng, &[7, 15]);
+    let rm = topk::select_rowmask(&virt, 0.0);
+    assert!(rm.is_full(), "gamma=0 must select everything");
+    // the full-mask fast path equals the dense VMM bit-for-bit, at
+    // every budget, and matches a dense GEMM numerically
+    let want = sparse::vmm(&x, &wt);
+    assert_eq!(want, sparse::dsg_vmm_rowmask(&x, &wt, &rm));
+    for t in BUDGETS {
+        assert_eq!(want, parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t), "budget {t}");
+    }
+    assert!(want.allclose(&ops::matmul_naive(&x, &w), 1e-3, 1e-3));
+}
+
+#[test]
+fn pool_survives_repeated_forwards_and_stays_deterministic() {
+    // many forwards through the same model = many pool dispatches; the
+    // persistent pool and the workspace pool must give identical bits
+    // every time
+    let m = SynthModel::new(21, &[48, 64, 56], 10, 0.8).with_intra_threads(3);
+    let xs: Vec<f32> = Pcg32::seeded(500).normal_vec(6 * 48, 1.0);
+    let first = m.forward(&xs, 6).unwrap();
+    for rep in 0..20 {
+        assert_eq!(first, m.forward(&xs, 6).unwrap(), "rep {rep} diverged");
+    }
+}
+
+#[test]
+fn workspace_reuse_across_shapes_and_requests() {
+    // one explicit workspace reused across DIFFERENT models and batch
+    // shapes must still match the pooled path bit-for-bit
+    let small = SynthModel::new(31, &[32, 40], 6, 0.5).with_intra_threads(2);
+    let big = SynthModel::new(32, &[80, 96, 64], 9, 0.75).with_intra_threads(2);
+    let mut ws = ForwardWorkspace::new();
+    for i in 0..3u64 {
+        let xs: Vec<f32> = Pcg32::seeded(600 + i).normal_vec(4 * 32, 1.0);
+        let xb: Vec<f32> = Pcg32::seeded(700 + i).normal_vec(2 * 80, 1.0);
+        assert_eq!(
+            small.forward(&xs, 4).unwrap(),
+            small.forward_with_workspace(&xs, 4, &mut ws).unwrap(),
+            "small model, round {i}"
+        );
+        assert_eq!(
+            big.forward(&xb, 2).unwrap(),
+            big.forward_with_workspace(&xb, 2, &mut ws).unwrap(),
+            "big model, round {i}"
+        );
+    }
+}
+
+#[test]
+fn concurrent_dispatchers_stay_bit_exact() {
+    // serve-like contention: several OS threads hammer the shared global
+    // pool at different budgets; every result must equal the serial one
+    let mut rng = Pcg32::seeded(904);
+    let x = randn(&mut rng, &[29, 80]);
+    let w = randn(&mut rng, &[80, 33]);
+    let want = parallel::matmul_parallel_with(&x, &w, 1);
+    std::thread::scope(|scope| {
+        for t in [2usize, 3, 4, 8] {
+            let (x, w, want) = (&x, &w, &want);
+            scope.spawn(move || {
+                for _ in 0..15 {
+                    assert_eq!(*want, parallel::matmul_parallel_with(x, w, t));
+                }
+            });
+        }
+    });
+}
