@@ -4,11 +4,45 @@
 //! (c)   distribution of the pairwise difference between high-dim and
 //!       low-dim (projected) inner products.
 
+use dsg::config::{GammaSchedule, RunConfig};
+use dsg::coordinator::NativeTrainer;
 use dsg::drs::projection::ternary_r;
 use dsg::drs::project_rows;
+use dsg::metrics::History;
 use dsg::runtime::Runtime;
 use dsg::tensor::Tensor;
 use dsg::util::Pcg32;
+
+/// Train one mlp variant on the NATIVE engine (no artifacts) at a
+/// constant gamma; returns the step history.
+fn native_curve(variant: &str, gamma: f32, steps: usize, seed: u64) -> anyhow::Result<History> {
+    let meta = dsg::native::zoo::synth_meta(&dsg::native::zoo::spec_for(variant)?)?;
+    let mut cfg = RunConfig::preset_for_model("mlp");
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.train_size = 1024;
+    cfg.test_size = 128;
+    cfg.gamma = GammaSchedule::Constant(gamma);
+    let (train, test) = dsg::benchutil::data_for(&cfg);
+    let mut t = NativeTrainer::new(meta, seed)?;
+    t.train(&cfg, &train, &test)?;
+    Ok(t.history)
+}
+
+fn print_curves(label: &str, steps: usize, dense: &History, dsg: &History) {
+    println!("{:>6} {:>12} {:>12}", "step", "dense", label);
+    for i in (0..steps).step_by((steps / 10).max(1)) {
+        let end = (i + 10).min(steps);
+        let d: f32 =
+            dense.steps[i..end].iter().map(|s| s.loss).sum::<f32>() / (end - i) as f32;
+        let g: f32 = dsg.steps[i..end].iter().map(|s| s.loss).sum::<f32>() / (end - i) as f32;
+        println!("{:>6} {:>12.4} {:>12.4}", i, d, g);
+    }
+    let d_final = dense.smoothed_loss(20).unwrap();
+    let g_final = dsg.smoothed_loss(20).unwrap();
+    println!("final smoothed loss: dense {d_final:.4} vs dsg {g_final:.4}");
+}
 
 fn main() -> anyhow::Result<()> {
     dsg::benchutil::header(
@@ -16,25 +50,30 @@ fn main() -> anyhow::Result<()> {
         "convergence: DSG vs dense curves + inner-product fidelity",
         "DSG convergence ~= vanilla; inner-product differences centered on 0",
     );
-    let rt = Runtime::cpu()?;
     let steps = dsg::benchutil::bench_steps().max(100);
 
-    // (a) loss curves dense vs DSG on mlp
-    println!("\n(a) mlp loss curves ({steps} steps):");
-    let (_, t_dense) = dsg::benchutil::train_at(&rt, "mlp_dense", 0.0, steps, 7)?;
-    let (_, t_dsg) = dsg::benchutil::train_at(&rt, "mlp", 0.6, steps, 7)?;
-    println!("{:>6} {:>12} {:>12}", "step", "dense", "dsg@60%");
-    for i in (0..steps).step_by((steps / 10).max(1)) {
-        let end = (i + 10).min(steps);
-        let d: f32 = t_dense.history.steps[i..end].iter().map(|s| s.loss).sum::<f32>()
-            / (end - i) as f32;
-        let g: f32 = t_dsg.history.steps[i..end].iter().map(|s| s.loss).sum::<f32>()
-            / (end - i) as f32;
-        println!("{:>6} {:>12.4} {:>12.4}", i, d, g);
+    // (a) loss curves dense vs DSG on mlp — NATIVE engine, runs with no
+    // artifacts and no PJRT (the host-side Algorithm 1)
+    println!("\n(a) mlp loss curves, native engine ({steps} steps):");
+    let h_dense = native_curve("mlp_dense", 0.0, steps, 7)?;
+    let h_dsg = native_curve("mlp", 0.6, steps, 7)?;
+    print_curves("dsg@60%", steps, &h_dense, &h_dsg);
+    let dens = h_dsg.mean_densities(20);
+    if !dens.is_empty() {
+        let joined: Vec<String> = dens.iter().map(|d| format!("{d:.3}")).collect();
+        println!("mean dsg densities (last 20 steps): [{}]", joined.join(", "));
     }
-    let d_final = t_dense.history.smoothed_loss(20).unwrap();
-    let g_final = t_dsg.history.smoothed_loss(20).unwrap();
-    println!("final smoothed loss: dense {d_final:.4} vs dsg {g_final:.4}");
+
+    // (b) the same curves through the HLO artifacts, when available
+    match Runtime::cpu() {
+        Err(e) => println!("\n(b) HLO curves skipped: {e}"),
+        Ok(rt) => {
+            println!("\n(b) mlp loss curves, HLO artifacts ({steps} steps):");
+            let (_, t_dense) = dsg::benchutil::train_at(&rt, "mlp_dense", 0.0, steps, 7)?;
+            let (_, t_dsg) = dsg::benchutil::train_at(&rt, "mlp", 0.6, steps, 7)?;
+            print_curves("dsg@60%", steps, &t_dense.history, &t_dsg.history);
+        }
+    }
 
     // (c) inner-product difference histogram (CONV5-like shape, Table 1)
     println!("\n(c) inner-product difference, d=2304 k=299 (eps 0.5, nK=512):");

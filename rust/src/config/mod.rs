@@ -49,6 +49,7 @@ pub struct RunConfig {
     pub lr: f32,
     /// multiplicative LR decay applied every `lr_decay_every` steps
     pub lr_decay: f32,
+    /// 0 = never decay (the training loop must not take `step % 0`)
     pub lr_decay_every: usize,
     pub steps: usize,
     pub eval_every: usize,
@@ -94,6 +95,11 @@ impl RunConfig {
         }
         if self.refresh_every == 0 {
             bail!("refresh_every must be > 0");
+        }
+        // lr_decay_every == 0 is legal and means "never decay"; the
+        // decay factor itself must still be sane when it can apply
+        if self.lr_decay_every > 0 && !(self.lr_decay > 0.0) {
+            bail!("lr_decay must be positive, got {}", self.lr_decay);
         }
         if !matches!(self.dataset.as_str(), "fashion" | "cifar") {
             bail!("unknown dataset {:?}", self.dataset);
@@ -239,6 +245,20 @@ mod tests {
         let mut c = RunConfig::default();
         c.dataset = "mnist".into();
         assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.lr_decay = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lr_decay_every_zero_means_never() {
+        // 0 is a legal "never decay" setting — it must validate (the
+        // trainer guards the modulo) even with a nonsense decay factor
+        let mut c = RunConfig::default();
+        c.lr_decay_every = 0;
+        c.validate().unwrap();
+        c.lr_decay = 0.0;
+        c.validate().unwrap();
     }
 
     #[test]

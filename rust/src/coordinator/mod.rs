@@ -7,8 +7,10 @@
 
 pub mod checkpoint;
 pub mod init;
+pub mod native_trainer;
 pub mod sweep;
 pub mod trainer;
 
 pub use init::ModelState;
-pub use trainer::{StepOut, Trainer};
+pub use native_trainer::NativeTrainer;
+pub use trainer::{run_training, StepOut, TrainBackend, Trainer};

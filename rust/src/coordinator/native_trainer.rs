@@ -1,0 +1,138 @@
+//! The native training coordinator: drives paper Algorithm 1 through
+//! [`crate::native::train::TrainEngine`] — no PJRT, no artifacts, no
+//! python anywhere.  Shares `RunConfig`, `History`, checkpoints, and the
+//! whole outer loop ([`super::trainer::run_training`]) with the
+//! artifact-backed [`super::Trainer`]; the Wp refresh goes through the
+//! host projection ([`crate::native::project_host`]) instead of the
+//! project artifact.
+
+use crate::config::RunConfig;
+use crate::coordinator::init::ModelState;
+use crate::coordinator::trainer::{run_training, StepOut, TrainBackend};
+use crate::datasets::{BatchIter, Dataset};
+use crate::metrics::History;
+use crate::native::train::TrainEngine;
+use crate::native::{self, Mode};
+use crate::runtime::Meta;
+use anyhow::Result;
+
+/// The coordinator for one natively-trained model variant.
+pub struct NativeTrainer {
+    pub meta: Meta,
+    pub state: ModelState,
+    engine: TrainEngine,
+    mode: Mode,
+    pub steps_done: usize,
+    pub history: History,
+}
+
+impl NativeTrainer {
+    /// Initialize from a meta (synthesized by [`crate::native::zoo`] or
+    /// loaded from an artifact dir) — weights from `ModelState::init`,
+    /// initial Wp from the host projection.
+    pub fn new(meta: Meta, seed: u64) -> Result<NativeTrainer> {
+        let mut state = ModelState::init(&meta, seed);
+        // fresh init: the wps leaves are zeros, project them from the
+        // initial weights (what Trainer::new does through the artifact)
+        native::project_host(&meta, &mut state)?;
+        Self::with_state(meta, state)
+    }
+
+    /// Resume from an existing state (checkpoint load).  The restored
+    /// Wp is TRUSTED as-is: it is amortized training state (refreshed
+    /// every `refresh_every` steps, not every step), so re-projecting
+    /// here would silently diverge a resumed run from the original.
+    pub fn with_state(meta: Meta, state: ModelState) -> Result<NativeTrainer> {
+        let engine = TrainEngine::new(&meta, &state)?
+            .with_threads(crate::sparse::parallel::n_threads());
+        let mode = engine.default_mode();
+        Ok(NativeTrainer {
+            meta,
+            state,
+            engine,
+            mode,
+            steps_done: 0,
+            history: History::default(),
+        })
+    }
+
+    /// Cap the engines' intra-op thread budget (bit-exact either way).
+    pub fn with_threads(mut self, threads: usize) -> NativeTrainer {
+        self.engine = self.engine.with_threads(threads);
+        self
+    }
+
+    /// Force dense (keep-all mask) execution — the convergence baseline.
+    pub fn with_mode(mut self, mode: Mode) -> NativeTrainer {
+        self.mode = mode;
+        self
+    }
+
+    /// Host-side Wp refresh (the paper's every-50-iterations amortized
+    /// projection).
+    pub fn refresh_projection(&mut self) -> Result<()> {
+        native::project_host(&self.meta, &mut self.state)
+    }
+
+    /// Run one training step on a prepared batch.
+    pub fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut> {
+        let out = self.engine.train_step(&mut self.state, x, y, gamma, lr, self.mode)?;
+        self.steps_done += 1;
+        Ok(StepOut { loss: out.loss, acc: out.acc, densities: out.densities })
+    }
+
+    /// Forward one batch in eval mode (running-stat BN); returns logits.
+    pub fn forward(&mut self, x: &[f32], m: usize, gamma: f32) -> Result<Vec<f32>> {
+        self.engine.forward_eval(&self.state, x, m, gamma, self.mode)
+    }
+
+    /// Evaluate accuracy over a dataset (padded final batch handled).
+    pub fn evaluate(&mut self, data: &Dataset, gamma: f32) -> Result<f32> {
+        let batch = self.meta.batch;
+        let c = self.meta.classes;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (xs, ys, valid) in BatchIter::eval_batches(data, batch) {
+            let logits = self.forward(&xs, batch, gamma)?;
+            for (i, &y) in ys.iter().enumerate().take(valid) {
+                if crate::serve::argmax(&logits[i * c..(i + 1) * c]) == y as usize {
+                    correct += 1;
+                }
+            }
+            total += valid;
+        }
+        Ok(correct as f32 / total.max(1) as f32)
+    }
+
+    /// The full training loop per `cfg` (see
+    /// [`super::trainer::run_training`]).  Returns final eval accuracy.
+    pub fn train(&mut self, cfg: &RunConfig, train: &Dataset, test: &Dataset) -> Result<f32> {
+        run_training(self, cfg, train, test)
+    }
+}
+
+impl TrainBackend for NativeTrainer {
+    fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn batch_size(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn refresh_projection(&mut self) -> Result<()> {
+        NativeTrainer::refresh_projection(self)
+    }
+
+    fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut> {
+        NativeTrainer::step(self, x, y, gamma, lr)
+    }
+
+    fn evaluate(&mut self, data: &Dataset, gamma: f32) -> Result<f32> {
+        NativeTrainer::evaluate(self, data, gamma)
+    }
+
+    fn history_mut(&mut self) -> &mut History {
+        &mut self.history
+    }
+}

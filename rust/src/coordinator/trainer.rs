@@ -26,6 +26,77 @@ pub struct StepOut {
     pub densities: Vec<f32>,
 }
 
+/// What a training backend must provide for [`run_training`] to drive
+/// it: the artifact-backed [`Trainer`] and the artifact-free
+/// [`crate::coordinator::NativeTrainer`] share the whole outer loop
+/// (batching, gamma/LR schedules, the every-`refresh_every` Wp refresh,
+/// eval cadence, history) through this trait.
+pub trait TrainBackend {
+    fn name(&self) -> &str;
+    fn batch_size(&self) -> usize;
+    /// Recompute Wp = f(W, R) (no-op for variants without projections).
+    fn refresh_projection(&mut self) -> Result<()>;
+    fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut>;
+    fn evaluate(&mut self, data: &Dataset, gamma: f32) -> Result<f32>;
+    fn history_mut(&mut self) -> &mut History;
+}
+
+/// The full training loop per `cfg`, shared by every backend: schedules
+/// gamma and LR (`lr_decay_every == 0` means never decay — the modulo is
+/// guarded, it used to divide by zero), refreshes the projection every
+/// `refresh_every` steps, records history, and runs the eval cadence.
+/// Returns the final eval accuracy.
+pub fn run_training(
+    backend: &mut impl TrainBackend,
+    cfg: &RunConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> Result<f32> {
+    cfg.validate()?;
+    let batch = backend.batch_size();
+    let mut iter = BatchIter::new(train, batch, cfg.seed ^ 0x5eed);
+    let mut lr = cfg.lr;
+    for step in 0..cfg.steps {
+        if step > 0 && step % cfg.refresh_every == 0 {
+            backend.refresh_projection()?;
+        }
+        if cfg.lr_decay_every > 0 && step > 0 && step % cfg.lr_decay_every == 0 {
+            lr *= cfg.lr_decay;
+        }
+        let gamma = cfg.gamma.at(step);
+        let (xs, ys) = iter.next_batch();
+        let t0 = std::time::Instant::now();
+        let out = backend.step(&xs, &ys, gamma, lr)?;
+        let secs = t0.elapsed().as_secs_f64();
+        backend.history_mut().push(StepRecord {
+            step,
+            loss: out.loss,
+            acc: out.acc,
+            densities: out.densities,
+            secs,
+        });
+        if !out.loss.is_finite() {
+            bail!("loss diverged (NaN/inf) at step {step}");
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let acc = backend.evaluate(test, cfg.gamma.target())?;
+            backend.history_mut().push_eval(step + 1, acc);
+            crate::info!(
+                "{} step {}/{} loss {:.4} train-acc {:.3} eval-acc {:.3}",
+                backend.name(),
+                step + 1,
+                cfg.steps,
+                out.loss,
+                out.acc,
+                acc
+            );
+        }
+    }
+    let final_acc = backend.evaluate(test, cfg.gamma.target())?;
+    backend.history_mut().push_eval(cfg.steps, final_acc);
+    Ok(final_acc)
+}
+
 /// The coordinator for one model variant.
 pub struct Trainer {
     pub meta: Meta,
@@ -158,50 +229,36 @@ impl Trainer {
         Ok(correct as f32 / total.max(1) as f32)
     }
 
-    /// The full training loop per `cfg`, with projection refresh, eval,
-    /// and history recording.  Returns the final eval accuracy.
+    /// The full training loop per `cfg` (see [`run_training`]).  Returns
+    /// the final eval accuracy.
     pub fn train(&mut self, cfg: &RunConfig, train: &Dataset, test: &Dataset) -> Result<f32> {
-        cfg.validate()?;
-        let mut iter = BatchIter::new(train, self.meta.batch, cfg.seed ^ 0x5eed);
-        let mut lr = cfg.lr;
-        for step in 0..cfg.steps {
-            if step > 0 && step % cfg.refresh_every == 0 {
-                self.refresh_projection()?;
-            }
-            if step > 0 && step % cfg.lr_decay_every == 0 {
-                lr *= cfg.lr_decay;
-            }
-            let gamma = cfg.gamma.at(step);
-            let (xs, ys) = iter.next_batch();
-            let t0 = std::time::Instant::now();
-            let out = self.step(&xs, &ys, gamma, lr)?;
-            self.history.push(StepRecord {
-                step,
-                loss: out.loss,
-                acc: out.acc,
-                densities: out.densities,
-                secs: t0.elapsed().as_secs_f64(),
-            });
-            if !out.loss.is_finite() {
-                bail!("loss diverged (NaN/inf) at step {step}");
-            }
-            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-                let acc = self.evaluate(test, cfg.gamma.target())?;
-                self.history.push_eval(step + 1, acc);
-                crate::info!(
-                    "{} step {}/{} loss {:.4} train-acc {:.3} eval-acc {:.3}",
-                    self.meta.name,
-                    step + 1,
-                    cfg.steps,
-                    out.loss,
-                    out.acc,
-                    acc
-                );
-            }
-        }
-        let final_acc = self.evaluate(test, cfg.gamma.target())?;
-        self.history.push_eval(cfg.steps, final_acc);
-        Ok(final_acc)
+        run_training(self, cfg, train, test)
+    }
+}
+
+impl TrainBackend for Trainer {
+    fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn batch_size(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn refresh_projection(&mut self) -> Result<()> {
+        Trainer::refresh_projection(self)
+    }
+
+    fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut> {
+        Trainer::step(self, x, y, gamma, lr)
+    }
+
+    fn evaluate(&mut self, data: &Dataset, gamma: f32) -> Result<f32> {
+        Trainer::evaluate(self, data, gamma)
+    }
+
+    fn history_mut(&mut self) -> &mut History {
+        &mut self.history
     }
 }
 

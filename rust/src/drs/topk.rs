@@ -43,7 +43,9 @@ pub fn shared_threshold_scratch(virt: &Tensor, gamma: f32, scratch: &mut Vec<f32
 }
 
 /// Slice form of [`shared_threshold_scratch`]: `virt` is row-major
-/// (batch, width) and only row 0 is consulted.
+/// (batch, width) and only row 0 is consulted.  A zero-width layer has
+/// nothing to rank, so the threshold degrades to keep-all (-inf) instead
+/// of underflowing `width - 1`.
 pub fn shared_threshold_slice(
     virt: &[f32],
     width: usize,
@@ -51,6 +53,9 @@ pub fn shared_threshold_slice(
     scratch: &mut Vec<f32>,
 ) -> f32 {
     assert!((0.0..1.0).contains(&gamma), "gamma out of range: {gamma}");
+    if width == 0 {
+        return f32::NEG_INFINITY;
+    }
     let drop = ((gamma * width as f32).floor() as usize).min(width - 1);
     if drop == 0 {
         return f32::NEG_INFINITY;
@@ -144,6 +149,27 @@ impl RowMask {
                 if v >= t {
                     self.idx.push(j as u32);
                 }
+            }
+            self.offsets.push(self.idx.len());
+        }
+    }
+
+    /// Rebuild in place as the keep-all mask (every column of every row
+    /// selected) — bit-identical to `fill_from_threshold` with a -inf
+    /// threshold, without needing virtual activations (the dense-mode
+    /// training path).
+    pub fn fill_full(&mut self, rows: usize, width: usize) {
+        assert!(width <= u32::MAX as usize, "mask width {width} exceeds u32");
+        self.rows = rows;
+        self.width = width;
+        self.offsets.clear();
+        self.offsets.reserve(rows + 1);
+        self.offsets.push(0);
+        self.idx.clear();
+        self.idx.reserve(rows * width);
+        for _ in 0..rows {
+            for j in 0..width {
+                self.idx.push(j as u32);
             }
             self.offsets.push(self.idx.len());
         }
@@ -389,6 +415,35 @@ mod tests {
         rm.fill_from_threshold(&v.data()[..4 * 128], 4, 128, t);
         rm.fill_from_threshold(v.data(), 8, 128, t);
         assert_eq!(rm, first);
+    }
+
+    #[test]
+    fn zero_width_threshold_keeps_all() {
+        let mut scratch = Vec::new();
+        for &g in &[0.0f32, 0.5, 0.99] {
+            assert_eq!(
+                shared_threshold_slice(&[], 0, g, &mut scratch),
+                f32::NEG_INFINITY,
+                "gamma {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn fill_full_matches_neg_inf_threshold() {
+        let mut rng = Pcg32::seeded(51);
+        let v = randn(&mut rng, &[4, 9]);
+        let mut a = RowMask::new();
+        a.fill_from_threshold(v.data(), 4, 9, f32::NEG_INFINITY);
+        let mut b = RowMask::new();
+        b.fill_full(4, 9);
+        assert_eq!(a, b);
+        assert!(b.is_full());
+        // degenerate shapes must not panic
+        let mut c = RowMask::new();
+        c.fill_full(0, 0);
+        assert_eq!(c.rows(), 0);
+        assert!(!c.is_full());
     }
 
     #[test]

@@ -72,9 +72,13 @@ fn usage() {
 USAGE: dsg <command> [--flags]
 
 COMMANDS:
-  train    --model NAME [--gamma G] [--eps-variant] [--steps N] [--lr F]
-           [--warmup N] [--refresh N] [--seed N] [--config FILE]
-           [--csv FILE] [--checkpoint FILE]
+  train    --model NAME [--engine artifact|native] [--gamma G] [--steps N]
+           [--lr F] [--warmup N] [--refresh N] [--seed N] [--batch N]
+           [--threads N] [--config FILE] [--csv FILE] [--checkpoint FILE]
+           `--engine native` (models: mlp, lenet, vgg8, vgg8s, resnet8,
+           wrn8_2, each also as NAME_dense) trains entirely on the
+           host-side engine: no PJRT, no artifacts — Algorithm 1 with
+           DSG masks applied to activations AND gradients.
   eval     --model NAME --checkpoint FILE [--gamma G]
   info     [--model NAME]         artifact inventory / variant detail
   memory   [--gamma G]            Fig 6 representational-cost report
@@ -123,11 +127,34 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     cfg.validate()?;
 
-    let dir = dsg::artifacts_dir();
-    let rt = Runtime::cpu()?;
-    let meta = Meta::load(&dir, &cfg.model)?;
+    let engine = args.get("engine").unwrap_or("artifact");
+    let meta = match engine {
+        "native" => {
+            // synthesized host-side meta: no artifacts dir needed at all
+            let mut spec = native::zoo::spec_for(&cfg.model)?;
+            if let Some(b) = args.get_usize("batch")? {
+                anyhow::ensure!(b > 0, "--batch must be at least 1");
+                spec.batch = b;
+            }
+            native::zoo::synth_meta(&spec)?
+        }
+        "artifact" => {
+            // these knobs only exist natively; the artifact batch shape
+            // is baked into the HLO — ignoring them would silently run
+            // something other than what was asked for
+            for flag in ["batch", "threads"] {
+                anyhow::ensure!(
+                    args.get(flag).is_none(),
+                    "--{flag} requires --engine native (the artifact batch/threading \
+                     is fixed at AOT-lowering time)"
+                );
+            }
+            Meta::load(&dsg::artifacts_dir(), &cfg.model)?
+        }
+        other => bail!("unknown --engine {other:?} (artifact | native)"),
+    };
     println!(
-        "training {} ({} params, batch {}, strategy {}) on {} for {} steps, gamma {:?}",
+        "training {} [{engine} engine] ({} params, batch {}, strategy {}) on {} for {} steps, gamma {:?}",
         meta.name,
         meta.param_elems(),
         meta.batch,
@@ -143,20 +170,41 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let (train, test) = full.split(cfg.test_size as f64 / (cfg.train_size + cfg.test_size) as f64);
 
-    let mut trainer = Trainer::new(&rt, meta, cfg.seed)?;
-    let acc = trainer.train(&cfg, &train, &test)?;
+    let (acc, history, state) = if engine == "native" {
+        let mut trainer = dsg::coordinator::NativeTrainer::new(meta, cfg.seed)?;
+        if let Some(t) = args.get_usize("threads")? {
+            trainer = trainer.with_threads(t.max(1));
+        }
+        let acc = trainer.train(&cfg, &train, &test)?;
+        // per-layer density report: the paper's 1-gamma tracking
+        let dens = trainer.history.mean_densities(20);
+        if !dens.is_empty() {
+            let joined: Vec<String> = dens.iter().map(|d| format!("{d:.3}")).collect();
+            println!(
+                "mean mask density over last 20 steps: [{}] (target {:.3})",
+                joined.join(", "),
+                1.0 - cfg.gamma.target()
+            );
+        }
+        (acc, trainer.history, trainer.state)
+    } else {
+        let rt = Runtime::cpu()?;
+        let mut trainer = Trainer::new(&rt, meta, cfg.seed)?;
+        let acc = trainer.train(&cfg, &train, &test)?;
+        (acc, trainer.history, trainer.state)
+    };
     println!(
         "done: final eval acc {:.3}, last loss {:.4}, {:.1}s total step time",
         acc,
-        trainer.history.last_loss().unwrap_or(f32::NAN),
-        trainer.history.total_secs()
+        history.last_loss().unwrap_or(f32::NAN),
+        history.total_secs()
     );
     if let Some(csv) = args.get("csv") {
-        trainer.history.write_csv(std::path::Path::new(csv))?;
+        history.write_csv(std::path::Path::new(csv))?;
         println!("wrote history to {csv}");
     }
     if let Some(ck) = args.get("checkpoint") {
-        dsg::coordinator::checkpoint::save(std::path::Path::new(ck), &trainer.state)?;
+        dsg::coordinator::checkpoint::save(std::path::Path::new(ck), &state)?;
         println!("wrote checkpoint to {ck}");
     }
     Ok(())

@@ -116,21 +116,27 @@ impl LatencyHistogram {
     /// Estimated percentile (p in [0, 1]): the geometric midpoint of the
     /// bucket holding the rank-p sample, clamped to the exact observed
     /// min/max so the extremes never over/under-shoot.
+    ///
+    /// Rank follows the ceil nearest-rank convention (the smallest sample
+    /// with at least `p` of the mass at or below it) — the old
+    /// `.round()` rank rounded half-up, reporting `max` for the p50 of
+    /// two samples.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let rank = (p.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
-        if rank == 0 {
+        // 1-based rank in [1, count]
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if rank == 1 {
             return self.min;
         }
-        if rank + 1 >= self.count {
+        if rank == self.count {
             return self.max;
         }
         let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
-            if seen > rank {
+            if seen >= rank {
                 return bucket_mid(i).clamp(self.min, self.max);
             }
         }
@@ -205,6 +211,23 @@ mod tests {
         assert_eq!(h.percentile(1.0), h.max());
         assert_eq!(h.min(), 1e-3);
         assert_eq!(h.max(), 0.1);
+    }
+
+    #[test]
+    fn two_sample_median_is_lower_sample() {
+        // regression: .round() nearest-rank reported max for p50 of two
+        let mut h = LatencyHistogram::new();
+        h.record(0.001);
+        h.record(0.100);
+        assert_eq!(h.percentile(0.5), 0.001);
+        assert_eq!(h.percentile(0.0), 0.001);
+        assert_eq!(h.percentile(1.0), 0.100);
+        // single sample: every percentile is that sample
+        let mut one = LatencyHistogram::new();
+        one.record(0.007);
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(one.percentile(p), 0.007, "p{p}");
+        }
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! engine dispatch goes through the persistent
 //! [`crate::sparse::pool::WorkerPool`] instead of spawning threads.
 
+pub mod train;
+pub mod zoo;
+
 use crate::coordinator::ModelState;
 use crate::drs::projection::TernaryIndex;
 use crate::drs::topk::RowMask;
@@ -165,8 +168,9 @@ impl WorkspacePool {
 }
 
 /// Activation shape carried between units (data lives in `ws.h`).
-#[derive(Clone, Copy)]
-enum Carry {
+/// Shared with the training engine's taped forward ([`train`]).
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Carry {
     /// (rows, features) — MLP layout.
     Rows(usize, usize),
     /// (n, c, h, w) — conv layout.
@@ -187,7 +191,7 @@ pub struct NativeModel {
     ws_pool: WorkspacePool,
 }
 
-fn to_tensor(t: &HostTensor) -> Result<Tensor> {
+pub(crate) fn to_tensor(t: &HostTensor) -> Result<Tensor> {
     Ok(Tensor::new(t.shape(), t.as_f32()?.to_vec()))
 }
 
@@ -352,7 +356,7 @@ impl NativeModel {
     /// `sample0_rows` = how many leading rows belong to sample 0.  The
     /// threshold candidate pool is copied into `thr_scratch` (capacity
     /// reused) instead of a fresh Vec per layer call.
-    fn mask_for(
+    pub(crate) fn mask_for(
         virt: &[f32],
         width: usize,
         gamma: f32,
@@ -360,8 +364,15 @@ impl NativeModel {
         thr_scratch: &mut Vec<f32>,
         mask: &mut RowMask,
     ) {
+        // a zero-element candidate pool (empty batch or zero-width layer)
+        // has nothing to rank: degrade to keep-all instead of
+        // underflowing `size - 1`
         let size = sample0_rows * width;
-        let drop = ((gamma * size as f32).floor() as usize).min(size - 1);
+        let drop = if size == 0 {
+            0
+        } else {
+            ((gamma * size as f32).floor() as usize).min(size - 1)
+        };
         let t = if drop == 0 {
             f32::NEG_INFINITY
         } else {
@@ -370,14 +381,14 @@ impl NativeModel {
             let (_, nth, _) = thr_scratch.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
             *nth
         };
-        let rows = virt.len() / width;
+        let rows = if width == 0 { 0 } else { virt.len() / width };
         mask.fill_from_threshold(virt, rows, width, t);
     }
 
     /// Zero the non-selected entries of rows-layout `y` (the double-mask
     /// re-application after BN).  Walks each row's ascending selected
     /// list once — equivalent to the old dense elementwise multiply.
-    fn apply_mask_rows(y: &mut [f32], n: usize, mask: &RowMask) {
+    pub(crate) fn apply_mask_rows(y: &mut [f32], n: usize, mask: &RowMask) {
         if mask.is_full() {
             return;
         }
@@ -485,7 +496,7 @@ impl NativeModel {
     }
 
     /// rows (N*P*Q, K) -> NCHW into a reused buffer.
-    fn rows_to_nchw_into(rows: &[f32], n: usize, k: usize, p: usize, q: usize, out: &mut Vec<f32>) {
+    pub(crate) fn rows_to_nchw_into(rows: &[f32], n: usize, k: usize, p: usize, q: usize, out: &mut Vec<f32>) {
         debug_assert_eq!(rows.len(), n * p * q * k);
         out.resize(n * k * p * q, 0.0); // fully overwritten below
         for ni in 0..n {
@@ -942,6 +953,21 @@ mod tests {
         NativeModel::mask_for(virt.data(), 50, 0.0, 2, &mut scratch, &mut m);
         assert!(m.is_full());
         assert_eq!(m.selected(), 500);
+    }
+
+    #[test]
+    fn mask_for_zero_size_keeps_all() {
+        let mut scratch = Vec::new();
+        let mut m = RowMask::new();
+        // zero-width layer: no candidates, no panic, empty keep-all mask
+        NativeModel::mask_for(&[], 0, 0.8, 4, &mut scratch, &mut m);
+        assert_eq!(m.rows(), 0);
+        assert_eq!(m.selected(), 0);
+        // zero sample-0 rows (empty batch): keep everything that exists
+        let virt = vec![1.0f32, -1.0, 2.0, -2.0];
+        NativeModel::mask_for(&virt, 2, 0.8, 0, &mut scratch, &mut m);
+        assert!(m.is_full());
+        assert_eq!(m.selected(), 4);
     }
 
     #[test]

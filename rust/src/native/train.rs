@@ -1,0 +1,1242 @@
+//! Host-side DSG TRAINING engine — paper Algorithm 1 without XLA.
+//!
+//! The HLO `Trainer` needs PJRT artifacts that this environment cannot
+//! build, so training never ran in CI.  This module owns the whole train
+//! step natively: a taped forward over the exported topology (dense /
+//! conv via im2col / residual / BN / relu / maxpool / classifier), then
+//! a reverse walk that backpropagates THROUGH the DSG masks.
+//!
+//! The paper's training claim is implemented structurally: the DRS
+//! `RowMask` selected in the forward is applied to both the activations
+//! (masked VMM computes only selected neurons) and their gradients — the
+//! backward kernels (`sparse::parallel::vmm_rowmask_backward_chunk` /
+//! `vmm_rowmask_gradw_chunk`) iterate ONLY the selected indices, so
+//! unselected gradient entries are never read and never contribute to
+//! dX or dW (Algorithm 1's forced gradient sparsification).  The DMS
+//! double mask keeps BN consistent: mask 2's zeros are re-applied to the
+//! upstream gradient before the BN backward, exactly mirroring the
+//! forward's `out = BN(s) * mask`.
+//!
+//! BatchNorm runs in TRAINING mode (batch statistics, biased variance,
+//! 0.9 running-average update) with the standard full backward (mean and
+//! variance are functions of the input).  Updates are SGD + momentum
+//! (`v <- 0.9 v - lr g; w <- w + v`), applied leaf-wise to params and BN
+//! affines with their velocity twins, mirroring `python/compile/train.py`.
+//!
+//! Numerics: per-element accumulation in the matmul/VMM kernels is the
+//! same row-split code the inference engine uses, so results are
+//! bit-exact for any thread budget; column reductions (BN stats, BN
+//! backward sums, bias grads) accumulate in f64.  `Mode::Dense` runs the
+//! identical kernels under a keep-all mask, which is what makes the
+//! gamma = 0 DSG step bit-identical to the dense baseline.
+
+use crate::coordinator::ModelState;
+use crate::drs::projection::TernaryIndex;
+use crate::drs::topk::RowMask;
+use crate::native::{to_tensor, Carry, Mode, NativeModel};
+use crate::runtime::{Meta, Unit};
+use crate::sparse::parallel;
+use crate::tensor::ops;
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+/// SGD momentum (mirrors `train.py::MOMENTUM`).
+pub const MOMENTUM: f32 = 0.9;
+/// BN running-average momentum (mirrors `layers.py::BN_MOMENTUM`).
+pub const BN_MOMENTUM: f32 = 0.9;
+const BN_EPS: f32 = 1e-5;
+
+/// One training step's scalar results (the native twin of
+/// [`crate::coordinator::StepOut`]).
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub loss: f32,
+    pub acc: f32,
+    /// measured mask density per DSG layer, in dsg order
+    pub densities: Vec<f32>,
+}
+
+/// Static shape of one conv application.
+#[derive(Clone, Copy, Debug)]
+struct ConvShape {
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+}
+
+/// Reusable forward/backward scratch.  The tape owns per-layer records
+/// (they must survive until the backward walk); these buffers are the
+/// ones safely reusable across layers within one pass.
+#[derive(Default)]
+struct Scratch {
+    /// transposed dense/classifier weights (n, d)
+    wt: Vec<f32>,
+    /// transposed-layout weight gradient (n, d)
+    gwt: Vec<f32>,
+    /// im2col rows of the current conv input
+    rows: Vec<f32>,
+    /// rows-layout upstream gradient (conv backward)
+    dyr: Vec<f32>,
+    drs: DrsScratch,
+}
+
+/// DRS-side scratch (projection, virtual activations, threshold pool).
+#[derive(Default)]
+struct DrsScratch {
+    xp: Vec<f32>,
+    virt: Vec<f32>,
+    thr: Vec<f32>,
+}
+
+/// Per-matmul-layer tape record (rows layout).
+struct RowsTape {
+    m: usize,
+    d: usize,
+    n: usize,
+    w_name: String,
+    /// BN leaf path ("3" / "5.bn1"); None when the model runs without BN
+    bn_path: Option<String>,
+    /// post-relu, pre-BN activations (m, n) — relu' and BN backward input
+    s: Vec<f32>,
+    mask: RowMask,
+    /// statistics the forward normalized with (batch stats in training)
+    mean: Vec<f32>,
+    var: Vec<f32>,
+    invstd: Vec<f32>,
+    density: f32,
+}
+
+/// Per-unit tape record; `x` is the activation that ENTERED the unit
+/// (moved in, not copied — the forward hands each carry buffer to the
+/// tape and continues on the unit's output buffer).
+enum UnitTape {
+    Dense {
+        x: Vec<f32>,
+        rt: RowsTape,
+    },
+    Classifier {
+        x: Vec<f32>,
+        m: usize,
+        d: usize,
+        c: usize,
+        w_name: String,
+        b_name: String,
+    },
+    Conv {
+        x: Vec<f32>,
+        dims: (usize, usize, usize, usize),
+        cs: ConvShape,
+        p: usize,
+        q: usize,
+        rt: RowsTape,
+    },
+    Residual {
+        x: Vec<f32>,
+        dims: (usize, usize, usize, usize),
+        /// conv1's NCHW output (conv2's input)
+        h1: Vec<f32>,
+        cs1: ConvShape,
+        p1: usize,
+        q1: usize,
+        rt1: RowsTape,
+        cs2: ConvShape,
+        p2: usize,
+        q2: usize,
+        rt2: RowsTape,
+        /// weight name of the 1x1 projection shortcut, when present
+        short: Option<String>,
+        short_stride: usize,
+    },
+    MaxPool {
+        dims: (usize, usize, usize, usize),
+        /// flat input index of each output's (first) argmax
+        idx: Vec<u32>,
+    },
+    Gap {
+        dims: (usize, usize, usize, usize),
+    },
+    Flatten,
+}
+
+fn rts_of(ut: &UnitTape) -> Vec<&RowsTape> {
+    match ut {
+        UnitTape::Dense { rt, .. } | UnitTape::Conv { rt, .. } => vec![rt],
+        UnitTape::Residual { rt1, rt2, .. } => vec![rt1, rt2],
+        _ => Vec::new(),
+    }
+}
+
+/// The native training engine for one model topology.  Holds only
+/// immutable per-run structure (leaf index, ternary projection index
+/// lists) plus reusable scratch; ALL mutable training state lives in the
+/// caller's [`ModelState`], same as the artifact path.
+pub struct TrainEngine {
+    pub meta: Meta,
+    index: BTreeMap<String, usize>,
+    ridx: Vec<TernaryIndex>,
+    threads: usize,
+    scratch: Scratch,
+}
+
+impl TrainEngine {
+    pub fn new(meta: &Meta, state: &ModelState) -> Result<TrainEngine> {
+        if meta.units.is_empty() {
+            bail!("meta {} has no topology — cannot train natively", meta.name);
+        }
+        if !matches!(meta.strategy.as_str(), "drs" | "dense") {
+            bail!(
+                "native training supports strategies drs/dense, not {:?} \
+                 (oracle/random need the HLO artifacts)",
+                meta.strategy
+            );
+        }
+        ensure!(
+            state.state.len() == meta.state.len(),
+            "state has {} leaves, meta {} expects {}",
+            state.state.len(),
+            meta.name,
+            meta.state.len()
+        );
+        let ridx = if meta.strategy == "drs" {
+            ensure!(
+                state.rs.len() == meta.counts.dsg && state.wps.len() == meta.counts.dsg,
+                "drs model {}: {} rs / {} wps for {} dsg layers",
+                meta.name,
+                state.rs.len(),
+                state.wps.len(),
+                meta.counts.dsg
+            );
+            state
+                .rs
+                .iter()
+                .map(|r| Ok(TernaryIndex::from_dense(&to_tensor(r)?)))
+                .collect::<Result<_>>()?
+        } else {
+            Vec::new()
+        };
+        let index = meta
+            .state
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (l.name.clone(), i))
+            .collect();
+        Ok(TrainEngine {
+            meta: meta.clone(),
+            index,
+            ridx,
+            threads: 1,
+            scratch: Scratch::default(),
+        })
+    }
+
+    /// Intra-op thread budget for the pool-backed kernels (results are
+    /// bit-exact for any budget).
+    pub fn with_threads(mut self, threads: usize) -> TrainEngine {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The execution mode this meta trains under.
+    pub fn default_mode(&self) -> Mode {
+        if self.meta.strategy == "dense" {
+            Mode::Dense
+        } else {
+            Mode::Dsg
+        }
+    }
+
+    fn leaf(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing state leaf {name}"))
+    }
+
+    fn getf<'a>(&self, state: &'a ModelState, name: &str) -> Result<&'a [f32]> {
+        state.state[self.leaf(name)?].as_f32()
+    }
+
+    /// One SGD + momentum update: `v <- mu v - lr g; w <- w + v`, with
+    /// the velocity twin resolved by name (params.X <-> vel.X,
+    /// bn.X <-> vbn.X).
+    fn sgd_update(&self, state: &mut ModelState, w_name: &str, g: &[f32], lr: f32) -> Result<()> {
+        let v_name = if let Some(rest) = w_name.strip_prefix("params.") {
+            format!("vel.{rest}")
+        } else if let Some(rest) = w_name.strip_prefix("bn.") {
+            format!("vbn.{rest}")
+        } else {
+            bail!("no velocity twin for state leaf {w_name}")
+        };
+        let wi = self.leaf(w_name)?;
+        let vi = self.leaf(&v_name)?;
+        ensure!(wi < vi, "group order broken: {w_name} at {wi}, {v_name} at {vi}");
+        let (lo, hi) = state.state.split_at_mut(vi);
+        let w = lo[wi].as_f32_mut()?;
+        let v = hi[0].as_f32_mut()?;
+        ensure!(
+            w.len() == g.len() && v.len() == g.len(),
+            "{w_name}: grad len {} vs param len {}",
+            g.len(),
+            w.len()
+        );
+        for ((w, v), &g) in w.iter_mut().zip(v.iter_mut()).zip(g) {
+            *v = MOMENTUM * *v - lr * g;
+            *w += *v;
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // forward
+    // -----------------------------------------------------------------
+
+    /// One masked matmul layer over rows: DRS select -> masked VMM ->
+    /// relu -> (training) BN -> double mask, recording everything the
+    /// backward needs.  `wt` is (n, d) transposed weights (a conv's
+    /// natural (K, C*r*s) layout IS this shape).
+    #[allow(clippy::too_many_arguments)]
+    fn rows_layer_forward(
+        &self,
+        state: &ModelState,
+        x: &[f32],
+        m: usize,
+        d: usize,
+        wt: &[f32],
+        n: usize,
+        w_name: &str,
+        bn_path: Option<String>,
+        dsg_idx: usize,
+        gamma: f32,
+        sample0_rows: usize,
+        mode: Mode,
+        train: bool,
+        drs: &mut DrsScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<RowsTape> {
+        debug_assert_eq!(x.len(), m * d);
+        ensure!(wt.len() == n * d, "{w_name}: weight is not ({n}, {d})");
+        let t = self.threads;
+        let mut mask = RowMask::new();
+        if mode == Mode::Dsg && self.meta.strategy == "drs" && gamma > 0.0 {
+            let ridx = &self.ridx[dsg_idx];
+            ensure!(ridx.d == d, "{w_name}: projection d {} vs layer d {d}", ridx.d);
+            let k = ridx.k;
+            let wp = state.wps[dsg_idx].as_f32()?;
+            drs.xp.resize(m * k, 0.0);
+            parallel::project_rows_parallel_into(x, m, ridx, t, &mut drs.xp);
+            drs.virt.resize(m * n, 0.0);
+            parallel::matmul_parallel_into(&drs.xp, m, k, wp, n, t, &mut drs.virt);
+            NativeModel::mask_for(&drs.virt, n, gamma, sample0_rows, &mut drs.thr, &mut mask);
+        } else {
+            // dense baseline / gamma = 0: keep-all mask, SAME kernels —
+            // this is what makes dense vs gamma-0 bit-identical
+            mask.fill_full(m, n);
+        }
+        out.resize(m * n, 0.0);
+        parallel::dsg_vmm_rowmask_parallel_into(x, m, d, wt, n, &mask, t, out);
+        ops::relu_slice(out);
+        // `out` holds s (post-relu, pre-BN) right now; only training
+        // needs it taped for the backward — eval tapes are discarded
+        let s = if train { out.clone() } else { Vec::new() };
+        let (mut mean, mut var, mut invstd) = (Vec::new(), Vec::new(), Vec::new());
+        if let Some(path) = &bn_path {
+            if train {
+                batch_stats(&s, m, n, &mut mean, &mut var);
+            } else {
+                mean = self.getf(state, &format!("bn_state.{path}.mean"))?.to_vec();
+                var = self.getf(state, &format!("bn_state.{path}.var"))?.to_vec();
+            }
+            invstd = var.iter().map(|v| 1.0 / (v + BN_EPS).sqrt()).collect();
+            let scale = self.getf(state, &format!("bn.{path}.scale"))?;
+            let bias = self.getf(state, &format!("bn.{path}.bias"))?;
+            apply_bn(out, n, &mean, &invstd, scale, bias);
+            if self.meta.double_mask {
+                NativeModel::apply_mask_rows(out, n, &mask);
+            }
+        }
+        let density = mask.density() as f32;
+        Ok(RowsTape {
+            m,
+            d,
+            n,
+            w_name: w_name.to_string(),
+            bn_path,
+            s,
+            mask,
+            mean,
+            var,
+            invstd,
+            density,
+        })
+    }
+
+    /// One conv unit: im2col -> masked rows layer -> NCHW.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_unit_forward(
+        &self,
+        state: &ModelState,
+        x: &[f32],
+        dims: (usize, usize, usize, usize),
+        cs: ConvShape,
+        kout: usize,
+        w_name: &str,
+        bn_path: Option<String>,
+        dsg_idx: usize,
+        gamma: f32,
+        mode: Mode,
+        train: bool,
+        scr: &mut Scratch,
+        out_nchw: &mut Vec<f32>,
+    ) -> Result<(RowsTape, usize, usize)> {
+        let (nb, c, hh, ww) = dims;
+        let (p, q) = ops::im2col_slice_into(x, nb, c, hh, ww, cs.ksize, cs.stride, cs.pad, &mut scr.rows);
+        let d = c * cs.ksize * cs.ksize;
+        let wflat = self.getf(state, w_name)?; // (K, C, r, s) flat == wt (K, CRS)
+        let mut y = Vec::new();
+        let Scratch { rows, drs, .. } = &mut *scr;
+        let rt = self.rows_layer_forward(
+            state,
+            rows,
+            nb * p * q,
+            d,
+            wflat,
+            kout,
+            w_name,
+            bn_path,
+            dsg_idx,
+            gamma,
+            p * q,
+            mode,
+            train,
+            drs,
+            &mut y,
+        )?;
+        NativeModel::rows_to_nchw_into(&y, nb, kout, p, q, out_nchw);
+        Ok((rt, p, q))
+    }
+
+    /// Full taped forward.  `train` selects batch-stat BN (vs running
+    /// stats) — the tape is recorded either way and simply dropped by
+    /// eval callers.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_pass(
+        &self,
+        state: &ModelState,
+        x: &[f32],
+        m: usize,
+        gamma: f32,
+        mode: Mode,
+        train: bool,
+        scr: &mut Scratch,
+        tape: &mut Vec<UnitTape>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(
+            x.len() == m * self.meta.input_elems(),
+            "x has {} elems, expected {} x {}",
+            x.len(),
+            m,
+            self.meta.input_elems()
+        );
+        let is = &self.meta.input_shape;
+        let mut carry = match is.len() {
+            1 => Carry::Rows(m, is[0]),
+            3 => Carry::Nchw(m, is[0], is[1], is[2]),
+            r => bail!("input rank {r} unsupported"),
+        };
+        let mut h: Vec<f32> = x.to_vec();
+        let mut densities = Vec::new();
+        let mut dsg_i = 0usize;
+        for (i, u) in self.meta.units.iter().enumerate() {
+            match u {
+                Unit::Dense { d_in, d_out } => {
+                    let Carry::Rows(mm, d) = carry else {
+                        bail!("dense unit {i} on non-rows activation")
+                    };
+                    ensure!(d == *d_in, "dense unit {i}: carry {d} vs d_in {d_in}");
+                    let w_name = format!("params.{i}.w");
+                    let wsl = self.getf(state, &w_name)?;
+                    let bn_path = self.meta.use_bn.then(|| i.to_string());
+                    let mut out = Vec::new();
+                    let Scratch { wt, drs, .. } = &mut *scr;
+                    ops::transpose_into(wsl, d, *d_out, wt);
+                    let rt = self.rows_layer_forward(
+                        state, &h, mm, d, wt, *d_out, &w_name, bn_path, dsg_i, gamma, 1, mode,
+                        train, drs, &mut out,
+                    )?;
+                    densities.push(rt.density);
+                    dsg_i += 1;
+                    tape.push(UnitTape::Dense { x: std::mem::replace(&mut h, out), rt });
+                    carry = Carry::Rows(mm, *d_out);
+                }
+                Unit::Classifier { d_in, d_out } => {
+                    let Carry::Rows(mm, d) = carry else {
+                        bail!("classifier unit {i} on non-rows activation")
+                    };
+                    ensure!(d == *d_in, "classifier unit {i}: carry {d} vs d_in {d_in}");
+                    let w_name = format!("params.{i}.w");
+                    let b_name = format!("params.{i}.b");
+                    let wsl = self.getf(state, &w_name)?; // (d, c)
+                    let mut out = vec![0.0f32; mm * d_out];
+                    parallel::matmul_parallel_into(&h, mm, d, wsl, *d_out, self.threads, &mut out);
+                    let b = self.getf(state, &b_name)?;
+                    for row in out.chunks_exact_mut(*d_out) {
+                        for (v, bb) in row.iter_mut().zip(b) {
+                            *v += *bb;
+                        }
+                    }
+                    tape.push(UnitTape::Classifier {
+                        x: std::mem::replace(&mut h, out),
+                        m: mm,
+                        d,
+                        c: *d_out,
+                        w_name,
+                        b_name,
+                    });
+                    carry = Carry::Rows(mm, *d_out);
+                }
+                Unit::Conv { c_in, c_out, ksize, stride, pad } => {
+                    let Carry::Nchw(nb, c, hh, ww) = carry else {
+                        bail!("conv unit {i} on non-NCHW activation")
+                    };
+                    ensure!(c == *c_in, "conv unit {i}: carry {c} vs c_in {c_in}");
+                    let cs = ConvShape { ksize: *ksize, stride: *stride, pad: *pad };
+                    let bn_path = self.meta.use_bn.then(|| i.to_string());
+                    let mut out = Vec::new();
+                    let (rt, p, q) = self.conv_unit_forward(
+                        state,
+                        &h,
+                        (nb, c, hh, ww),
+                        cs,
+                        *c_out,
+                        &format!("params.{i}.w"),
+                        bn_path,
+                        dsg_i,
+                        gamma,
+                        mode,
+                        train,
+                        scr,
+                        &mut out,
+                    )?;
+                    densities.push(rt.density);
+                    dsg_i += 1;
+                    tape.push(UnitTape::Conv {
+                        x: std::mem::replace(&mut h, out),
+                        dims: (nb, c, hh, ww),
+                        cs,
+                        p,
+                        q,
+                        rt,
+                    });
+                    carry = Carry::Nchw(nb, *c_out, p, q);
+                }
+                Unit::Residual { c_in, c_out, stride } => {
+                    let Carry::Nchw(nb, c, hh, ww) = carry else {
+                        bail!("residual unit {i} on non-NCHW activation")
+                    };
+                    ensure!(c == *c_in, "residual unit {i}: carry {c} vs c_in {c_in}");
+                    let cs1 = ConvShape { ksize: 3, stride: *stride, pad: 1 };
+                    let cs2 = ConvShape { ksize: 3, stride: 1, pad: 1 };
+                    let mut h1 = Vec::new();
+                    let (rt1, p1, q1) = self.conv_unit_forward(
+                        state,
+                        &h,
+                        (nb, c, hh, ww),
+                        cs1,
+                        *c_out,
+                        &format!("params.{i}.conv1.w"),
+                        self.meta.use_bn.then(|| format!("{i}.bn1")),
+                        dsg_i,
+                        gamma,
+                        mode,
+                        train,
+                        scr,
+                        &mut h1,
+                    )?;
+                    densities.push(rt1.density);
+                    dsg_i += 1;
+                    let mut h2 = Vec::new();
+                    let (rt2, p2, q2) = self.conv_unit_forward(
+                        state,
+                        &h1,
+                        (nb, *c_out, p1, q1),
+                        cs2,
+                        *c_out,
+                        &format!("params.{i}.conv2.w"),
+                        self.meta.use_bn.then(|| format!("{i}.bn2")),
+                        dsg_i,
+                        gamma,
+                        mode,
+                        train,
+                        scr,
+                        &mut h2,
+                    )?;
+                    densities.push(rt2.density);
+                    dsg_i += 1;
+                    let short = (*stride != 1 || c_in != c_out)
+                        .then(|| format!("params.{i}.short.w"));
+                    if let Some(sname) = &short {
+                        // plain (unmasked, no relu/BN) 1x1 projection
+                        let (ps, qs) =
+                            ops::im2col_slice_into(&h, nb, c, hh, ww, 1, *stride, 0, &mut scr.rows);
+                        debug_assert_eq!((ps, qs), (p2, q2));
+                        let wsl = self.getf(state, sname)?; // (K, c)
+                        ops::transpose_into(wsl, *c_out, c, &mut scr.wt); // (c, K)
+                        let rsz = nb * p2 * q2;
+                        let mut y = vec![0.0f32; rsz * *c_out];
+                        parallel::matmul_parallel_into(
+                            &scr.rows, rsz, c, &scr.wt, *c_out, self.threads, &mut y,
+                        );
+                        let mut sc = Vec::new();
+                        NativeModel::rows_to_nchw_into(&y, nb, *c_out, p2, q2, &mut sc);
+                        for (v, s) in h2.iter_mut().zip(&sc) {
+                            *v += *s;
+                        }
+                    } else {
+                        debug_assert_eq!(h2.len(), h.len());
+                        for (v, s) in h2.iter_mut().zip(&h) {
+                            *v += *s;
+                        }
+                    }
+                    tape.push(UnitTape::Residual {
+                        x: std::mem::replace(&mut h, h2),
+                        dims: (nb, c, hh, ww),
+                        h1,
+                        cs1,
+                        p1,
+                        q1,
+                        rt1,
+                        cs2,
+                        p2,
+                        q2,
+                        rt2,
+                        short,
+                        short_stride: *stride,
+                    });
+                    carry = Carry::Nchw(nb, *c_out, p2, q2);
+                }
+                Unit::MaxPool { size } => {
+                    let Carry::Nchw(nb, c, hh, ww) = carry else {
+                        bail!("maxpool unit {i} on non-NCHW activation")
+                    };
+                    let mut out = Vec::new();
+                    let mut idx = Vec::new();
+                    let (pn, pc, ph, pw) =
+                        maxpool_fwd(&h, (nb, c, hh, ww), *size, &mut out, &mut idx);
+                    tape.push(UnitTape::MaxPool { dims: (nb, c, hh, ww), idx });
+                    h = out;
+                    carry = Carry::Nchw(pn, pc, ph, pw);
+                }
+                Unit::GlobalAvgPool => {
+                    let Carry::Nchw(nb, c, hh, ww) = carry else {
+                        bail!("gap unit {i} on non-NCHW activation")
+                    };
+                    let mut out = vec![0.0f32; nb * c];
+                    for ni in 0..nb {
+                        for ci in 0..c {
+                            let plane = &h[(ni * c + ci) * hh * ww..(ni * c + ci + 1) * hh * ww];
+                            let acc: f64 = plane.iter().map(|&v| v as f64).sum();
+                            out[ni * c + ci] = (acc / (hh * ww) as f64) as f32;
+                        }
+                    }
+                    tape.push(UnitTape::Gap { dims: (nb, c, hh, ww) });
+                    h = out;
+                    carry = Carry::Rows(nb, c);
+                }
+                Unit::Flatten => {
+                    carry = match carry {
+                        Carry::Rows(mm, d) => Carry::Rows(mm, d),
+                        Carry::Nchw(nb, c, hh, ww) => Carry::Rows(nb, c * hh * ww),
+                    };
+                    tape.push(UnitTape::Flatten);
+                }
+            }
+        }
+        let Carry::Rows(mm, c) = carry else {
+            bail!("forward ended on an NCHW activation")
+        };
+        ensure!(
+            mm == m && c == self.meta.classes,
+            "forward produced shape [{mm}, {c}]"
+        );
+        Ok((h, densities))
+    }
+
+    /// Inference/eval forward: running-stat BN, no state mutation.
+    pub fn forward_eval(
+        &mut self,
+        state: &ModelState,
+        x: &[f32],
+        m: usize,
+        gamma: f32,
+        mode: Mode,
+    ) -> Result<Vec<f32>> {
+        let mut scr = std::mem::take(&mut self.scratch);
+        let mut tape = Vec::new();
+        let r = self.forward_pass(state, x, m, gamma, mode, false, &mut scr, &mut tape);
+        self.scratch = scr;
+        r.map(|(logits, _)| logits)
+    }
+
+    // -----------------------------------------------------------------
+    // backward
+    // -----------------------------------------------------------------
+
+    /// Backward through one masked rows layer: double mask -> BN -> relu
+    /// -> masked VMM backward (dX + dW), with the SGD updates applied
+    /// after the gradients that depend on the old values are computed.
+    /// `conv_weight`: the state weight is already (n, d)-transposed
+    /// (conv natural layout), so the grad applies without a layout flip.
+    #[allow(clippy::too_many_arguments)]
+    fn rows_layer_backward(
+        &self,
+        state: &mut ModelState,
+        x: &[f32],
+        dout: &mut [f32],
+        rt: &RowsTape,
+        lr: f32,
+        wt_scr: &mut Vec<f32>,
+        gwt_scr: &mut Vec<f32>,
+        dx: &mut [f32],
+        conv_weight: bool,
+    ) -> Result<()> {
+        let (m, d, n) = (rt.m, rt.d, rt.n);
+        debug_assert_eq!(dout.len(), m * n);
+        debug_assert_eq!(dx.len(), m * d);
+        if let Some(path) = &rt.bn_path {
+            if self.meta.double_mask {
+                // forward: out = BN(s) * mask  =>  dBN = dout * mask
+                NativeModel::apply_mask_rows(dout, n, &rt.mask);
+            }
+            let scale = self.getf(state, &format!("bn.{path}.scale"))?.to_vec();
+            let (gscale, gbias) = bn_backward(dout, &rt.s, &rt.mean, &rt.invstd, &scale, m, n);
+            relu_backward(dout, &rt.s);
+            self.sgd_update(state, &format!("bn.{path}.scale"), &gscale, lr)?;
+            self.sgd_update(state, &format!("bn.{path}.bias"), &gbias, lr)?;
+        } else {
+            relu_backward(dout, &rt.s);
+        }
+        {
+            let wsl = self.getf(state, &rt.w_name)?;
+            let wt: &[f32] = if conv_weight {
+                wsl // already (n, d)
+            } else {
+                ops::transpose_into(wsl, d, n, wt_scr);
+                wt_scr
+            };
+            parallel::dsg_vmm_rowmask_backward_parallel_into(
+                dout, m, d, wt, n, &rt.mask, self.threads, dx,
+            );
+            gwt_scr.resize(n * d, 0.0);
+            parallel::dsg_vmm_rowmask_gradw_parallel_into(
+                x, dout, m, d, n, &rt.mask, self.threads, gwt_scr,
+            );
+        }
+        if conv_weight {
+            self.sgd_update(state, &rt.w_name, gwt_scr, lr)?;
+        } else {
+            let mut gw = Vec::new();
+            ops::transpose_into(gwt_scr, n, d, &mut gw); // (d, n)
+            self.sgd_update(state, &rt.w_name, &gw, lr)?;
+        }
+        Ok(())
+    }
+
+    /// Backward through one conv unit (NCHW in/out).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_unit_backward(
+        &self,
+        state: &mut ModelState,
+        x: &[f32],
+        dims: (usize, usize, usize, usize),
+        cs: ConvShape,
+        p: usize,
+        q: usize,
+        rt: &RowsTape,
+        dout_nchw: &[f32],
+        lr: f32,
+        scr: &mut Scratch,
+        dx_nchw: &mut Vec<f32>,
+    ) -> Result<()> {
+        let (nb, c, hh, ww) = dims;
+        let kout = rt.n;
+        // recompute im2col of the unit input (cheaper than taping it —
+        // the paper's training-memory argument applied to our own tape)
+        let (p2, q2) = ops::im2col_slice_into(x, nb, c, hh, ww, cs.ksize, cs.stride, cs.pad, &mut scr.rows);
+        debug_assert_eq!((p2, q2), (p, q));
+        nchw_to_rows_into(dout_nchw, nb, kout, p, q, &mut scr.dyr);
+        let mut dx_rows = vec![0.0f32; rt.m * rt.d];
+        let Scratch { rows, dyr, wt, gwt, .. } = &mut *scr;
+        self.rows_layer_backward(state, rows, dyr, rt, lr, wt, gwt, &mut dx_rows, true)?;
+        ops::col2im_slice_into(&dx_rows, nb, c, hh, ww, cs.ksize, cs.stride, cs.pad, dx_nchw);
+        Ok(())
+    }
+
+    /// Backward through one tape unit: returns the gradient wrt the
+    /// unit's input, applying this unit's parameter updates.
+    fn unit_backward(
+        &self,
+        state: &mut ModelState,
+        ut: &UnitTape,
+        mut dout: Vec<f32>,
+        lr: f32,
+        scr: &mut Scratch,
+    ) -> Result<Vec<f32>> {
+        match ut {
+            UnitTape::Dense { x, rt } => {
+                let mut dx = vec![0.0f32; rt.m * rt.d];
+                let Scratch { wt, gwt, .. } = &mut *scr;
+                self.rows_layer_backward(state, x, &mut dout, rt, lr, wt, gwt, &mut dx, false)?;
+                Ok(dx)
+            }
+            UnitTape::Classifier { x, m, d, c, w_name, b_name } => {
+                // dX = dL @ W^T
+                let mut dx = vec![0.0f32; m * d];
+                {
+                    let wsl = self.getf(state, w_name)?; // (d, c)
+                    ops::transpose_into(wsl, *d, *c, &mut scr.wt); // (c, d)
+                    parallel::matmul_parallel_into(&dout, *m, *c, &scr.wt, *d, self.threads, &mut dx);
+                }
+                // dW^T (c, d) = dL^T @ X, then flip to (d, c)
+                let mut dlt = Vec::new();
+                ops::transpose_into(&dout, *m, *c, &mut dlt);
+                scr.gwt.resize(c * d, 0.0);
+                parallel::matmul_parallel_into(&dlt, *c, *m, x, *d, self.threads, &mut scr.gwt);
+                let mut gw = Vec::new();
+                ops::transpose_into(&scr.gwt, *c, *d, &mut gw);
+                let mut gb = vec![0.0f64; *c];
+                for row in dout.chunks_exact(*c) {
+                    for j in 0..*c {
+                        gb[j] += row[j] as f64;
+                    }
+                }
+                let gb: Vec<f32> = gb.iter().map(|&v| v as f32).collect();
+                self.sgd_update(state, w_name, &gw, lr)?;
+                self.sgd_update(state, b_name, &gb, lr)?;
+                Ok(dx)
+            }
+            UnitTape::Conv { x, dims, cs, p, q, rt } => {
+                let mut dx = Vec::new();
+                self.conv_unit_backward(state, x, *dims, *cs, *p, *q, rt, &dout, lr, scr, &mut dx)?;
+                Ok(dx)
+            }
+            UnitTape::Residual {
+                x,
+                dims,
+                h1,
+                cs1,
+                p1,
+                q1,
+                rt1,
+                cs2,
+                p2,
+                q2,
+                rt2,
+                short,
+                short_stride,
+            } => {
+                let (nb, c, hh, ww) = *dims;
+                // main path: conv2 then conv1
+                let mut d_h1 = Vec::new();
+                self.conv_unit_backward(
+                    state, h1, (nb, rt1.n, *p1, *q1), *cs2, *p2, *q2, rt2, &dout, lr, scr,
+                    &mut d_h1,
+                )?;
+                let mut dx = Vec::new();
+                self.conv_unit_backward(
+                    state, x, (nb, c, hh, ww), *cs1, *p1, *q1, rt1, &d_h1, lr, scr, &mut dx,
+                )?;
+                if let Some(sname) = short {
+                    // shortcut: plain 1x1 conv backward
+                    let kout = rt2.n;
+                    let rsz = nb * p2 * q2;
+                    nchw_to_rows_into(&dout, nb, kout, *p2, *q2, &mut scr.dyr);
+                    let mut dxs_rows = vec![0.0f32; rsz * c];
+                    {
+                        let wsl = self.getf(state, sname)?; // (K, c) natural
+                        parallel::matmul_parallel_into(
+                            &scr.dyr, rsz, kout, wsl, c, self.threads, &mut dxs_rows,
+                        );
+                    }
+                    let (ps, qs) =
+                        ops::im2col_slice_into(x, nb, c, hh, ww, 1, *short_stride, 0, &mut scr.rows);
+                    debug_assert_eq!((ps, qs), (*p2, *q2));
+                    let mut dyt = Vec::new();
+                    ops::transpose_into(&scr.dyr, rsz, kout, &mut dyt); // (K, R)
+                    scr.gwt.resize(kout * c, 0.0);
+                    parallel::matmul_parallel_into(
+                        &dyt, kout, rsz, &scr.rows, c, self.threads, &mut scr.gwt,
+                    );
+                    let mut dxs = Vec::new();
+                    ops::col2im_slice_into(&dxs_rows, nb, c, hh, ww, 1, *short_stride, 0, &mut dxs);
+                    for (v, s) in dx.iter_mut().zip(&dxs) {
+                        *v += *s;
+                    }
+                    self.sgd_update(state, sname, &scr.gwt, lr)?;
+                } else {
+                    debug_assert_eq!(dx.len(), dout.len());
+                    for (v, s) in dx.iter_mut().zip(&dout) {
+                        *v += *s;
+                    }
+                }
+                Ok(dx)
+            }
+            UnitTape::MaxPool { dims, idx } => {
+                let (nb, c, hh, ww) = *dims;
+                ensure!(idx.len() == dout.len(), "maxpool tape/grad mismatch");
+                let mut dx = vec![0.0f32; nb * c * hh * ww];
+                for (o, &src) in idx.iter().enumerate() {
+                    dx[src as usize] += dout[o];
+                }
+                Ok(dx)
+            }
+            UnitTape::Gap { dims } => {
+                let (nb, c, hh, ww) = *dims;
+                let scale = 1.0 / (hh * ww) as f32;
+                let mut dx = vec![0.0f32; nb * c * hh * ww];
+                for ni in 0..nb {
+                    for ci in 0..c {
+                        let g = dout[ni * c + ci] * scale;
+                        for t in dx[(ni * c + ci) * hh * ww..(ni * c + ci + 1) * hh * ww].iter_mut()
+                        {
+                            *t = g;
+                        }
+                    }
+                }
+                Ok(dx)
+            }
+            UnitTape::Flatten => Ok(dout), // shape-only change
+        }
+    }
+
+    /// BN running-stat update from the batch stats recorded on the tape
+    /// (python: `new = 0.9 old + 0.1 batch`, biased variance).
+    fn update_bn_state(&self, state: &mut ModelState, tape: &[UnitTape]) -> Result<()> {
+        for ut in tape {
+            for rt in rts_of(ut) {
+                let Some(path) = &rt.bn_path else { continue };
+                for (leaf, batch) in [
+                    (format!("bn_state.{path}.mean"), &rt.mean),
+                    (format!("bn_state.{path}.var"), &rt.var),
+                ] {
+                    let i = self.leaf(&leaf)?;
+                    let run = state.state[i].as_f32_mut()?;
+                    ensure!(run.len() == batch.len(), "{leaf}: stat len mismatch");
+                    for (r, &b) in run.iter_mut().zip(batch) {
+                        *r = BN_MOMENTUM * *r + (1.0 - BN_MOMENTUM) * b;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One full Algorithm-1 training step on a prepared batch: taped
+    /// forward (training BN + running-stat update), softmax
+    /// cross-entropy, masked backward, SGD + momentum updates — all in
+    /// place on `state`.
+    pub fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        x: &[f32],
+        y: &[i32],
+        gamma: f32,
+        lr: f32,
+        mode: Mode,
+    ) -> Result<TrainOut> {
+        ensure!(!y.is_empty(), "empty batch");
+        let m = y.len();
+        let c = self.meta.classes;
+        for &yi in y {
+            ensure!((0..c as i32).contains(&yi), "label {yi} out of range 0..{c}");
+        }
+        let mut scr = std::mem::take(&mut self.scratch);
+        let mut tape: Vec<UnitTape> = Vec::new();
+        let r: Result<TrainOut> = (|| {
+            let (logits, densities) =
+                self.forward_pass(state, x, m, gamma, mode, true, &mut scr, &mut tape)?;
+            self.update_bn_state(state, &tape)?;
+            let (loss, acc, dlogits) = softmax_xent(&logits, y, m, c);
+            let mut dcarry = dlogits;
+            for ut in tape.iter().rev() {
+                dcarry = self.unit_backward(state, ut, dcarry, lr, &mut scr)?;
+            }
+            Ok(TrainOut { loss, acc, densities })
+        })();
+        self.scratch = scr;
+        r
+    }
+}
+
+// ---------------------------------------------------------------------
+// layer math helpers
+// ---------------------------------------------------------------------
+
+/// Per-column mean and biased variance over (m, n) rows (f64 accum).
+fn batch_stats(s: &[f32], m: usize, n: usize, mean: &mut Vec<f32>, var: &mut Vec<f32>) {
+    let mut acc = vec![0.0f64; n];
+    for row in s.chunks_exact(n) {
+        for j in 0..n {
+            acc[j] += row[j] as f64;
+        }
+    }
+    mean.clear();
+    mean.extend(acc.iter().map(|&a| (a / m as f64) as f32));
+    acc.fill(0.0);
+    for row in s.chunks_exact(n) {
+        for j in 0..n {
+            let dv = row[j] as f64 - mean[j] as f64;
+            acc[j] += dv * dv;
+        }
+    }
+    var.clear();
+    var.extend(acc.iter().map(|&a| (a / m as f64) as f32));
+}
+
+/// y = (x - mean) * invstd * scale + bias, rows layout, in place.
+fn apply_bn(out: &mut [f32], n: usize, mean: &[f32], invstd: &[f32], scale: &[f32], bias: &[f32]) {
+    for row in out.chunks_exact_mut(n) {
+        for j in 0..n {
+            row[j] = (row[j] - mean[j]) * invstd[j] * scale[j] + bias[j];
+        }
+    }
+}
+
+/// Full training-mode BN backward, in place on `dout` (which becomes
+/// dL/ds), returning (dscale, dbias).  Mean and variance are functions
+/// of s, so the column-mean correction terms are included:
+/// ds = scale*invstd * (dout - mean_i(dout) - xhat * mean_i(dout*xhat)).
+fn bn_backward(
+    dout: &mut [f32],
+    s: &[f32],
+    mean: &[f32],
+    invstd: &[f32],
+    scale: &[f32],
+    m: usize,
+    n: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut sb = vec![0.0f64; n]; // sum dout
+    let mut sxh = vec![0.0f64; n]; // sum dout * xhat
+    for (row, srow) in dout.chunks_exact(n).zip(s.chunks_exact(n)) {
+        for j in 0..n {
+            let xh = ((srow[j] - mean[j]) * invstd[j]) as f64;
+            sb[j] += row[j] as f64;
+            sxh[j] += row[j] as f64 * xh;
+        }
+    }
+    let mf = m as f64;
+    for (row, srow) in dout.chunks_exact_mut(n).zip(s.chunks_exact(n)) {
+        for j in 0..n {
+            let xh = ((srow[j] - mean[j]) * invstd[j]) as f64;
+            let t = row[j] as f64 - sb[j] / mf - xh * (sxh[j] / mf);
+            row[j] = ((scale[j] * invstd[j]) as f64 * t) as f32;
+        }
+    }
+    (
+        sxh.iter().map(|&v| v as f32).collect(),
+        sb.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// relu': zero the gradient wherever the stored post-relu activation is
+/// zero (masked-away neurons land here too, since their y was never
+/// computed and stayed 0).
+fn relu_backward(dout: &mut [f32], s: &[f32]) {
+    for (v, &sv) in dout.iter_mut().zip(s) {
+        if sv <= 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Maxpool forward that records each output's (first) argmax flat input
+/// index for exact gradient routing.
+fn maxpool_fwd(
+    xd: &[f32],
+    dims: (usize, usize, usize, usize),
+    size: usize,
+    out: &mut Vec<f32>,
+    idx: &mut Vec<u32>,
+) -> (usize, usize, usize, usize) {
+    let (n, c, h, w) = dims;
+    assert!(xd.len() <= u32::MAX as usize, "activation too large for u32 pool indices");
+    let (ph, pw) = (h / size, w / size);
+    out.clear();
+    out.resize(n * c * ph * pw, 0.0);
+    idx.clear();
+    idx.resize(n * c * ph * pw, 0);
+    for ni in 0..n {
+        for ci in 0..c {
+            for y in 0..ph {
+                for x in 0..pw {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = 0usize;
+                    for dy in 0..size {
+                        for dx in 0..size {
+                            let off = ((ni * c + ci) * h + y * size + dy) * w + x * size + dx;
+                            let v = xd[off];
+                            if v > best {
+                                best = v;
+                                bi = off;
+                            }
+                        }
+                    }
+                    let o = ((ni * c + ci) * ph + y) * pw + x;
+                    out[o] = best;
+                    idx[o] = bi as u32;
+                }
+            }
+        }
+    }
+    (n, c, ph, pw)
+}
+
+/// NCHW -> rows (N*P*Q, K): the inverse of
+/// [`NativeModel::rows_to_nchw_into`], used to route conv gradients back
+/// into the rows layout the masked kernels operate in.
+fn nchw_to_rows_into(x: &[f32], n: usize, k: usize, p: usize, q: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), n * k * p * q);
+    out.resize(n * p * q * k, 0.0); // fully overwritten below
+    for ni in 0..n {
+        for ki in 0..k {
+            for pi in 0..p {
+                for qi in 0..q {
+                    out[((ni * p + pi) * q + qi) * k + ki] =
+                        x[((ni * k + ki) * p + pi) * q + qi];
+                }
+            }
+        }
+    }
+}
+
+/// Mean softmax cross-entropy + accuracy + dL/dlogits over (m, c) rows.
+pub(crate) fn softmax_xent(logits: &[f32], y: &[i32], m: usize, c: usize) -> (f32, f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), m * c);
+    let mut dl = vec![0.0f32; m * c];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..m {
+        let row = &logits[i * c..(i + 1) * c];
+        let yi = y[i] as usize;
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut se = 0.0f32;
+        for &v in row {
+            se += (v - mx).exp();
+        }
+        let lse = mx + se.ln();
+        loss += (lse - row[yi]) as f64;
+        if crate::serve::argmax(row) == yi {
+            correct += 1;
+        }
+        let drow = &mut dl[i * c..(i + 1) * c];
+        for (j, dv) in drow.iter_mut().enumerate() {
+            let p = (row[j] - lse).exp();
+            *dv = (p - if j == yi { 1.0 } else { 0.0 }) / m as f32;
+        }
+    }
+    ((loss / m as f64) as f32, correct as f32 / m as f32, dl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn softmax_xent_known_values() {
+        // uniform logits: loss = ln(c), grad rows sum to zero
+        let m = 3;
+        let c = 4;
+        let logits = vec![0.0f32; m * c];
+        let y = vec![0, 1, 2];
+        let (loss, _acc, dl) = softmax_xent(&logits, &y, m, c);
+        assert!((loss - (c as f32).ln()).abs() < 1e-6);
+        for i in 0..m {
+            let rs: f32 = dl[i * c..(i + 1) * c].iter().sum();
+            assert!(rs.abs() < 1e-6, "row {i} grad sum {rs}");
+            // true class entry is (1/c - 1)/m, others 1/(c*m)
+            assert!((dl[i * c + y[i] as usize] - (0.25 - 1.0) / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn batch_stats_match_definition() {
+        let s = vec![1.0f32, 10.0, 3.0, 20.0, 5.0, 30.0];
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        batch_stats(&s, 3, 2, &mut mean, &mut var);
+        assert_eq!(mean, vec![3.0, 20.0]);
+        // biased variance: mean of squared deviations
+        assert!((var[0] - 8.0 / 3.0).abs() < 1e-6);
+        assert!((var[1] - 200.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bn_backward_finite_difference() {
+        // scalar check of the full BN backward (mean/var are functions
+        // of the input) against central differences on a tiny layer
+        let (m, n) = (5usize, 3usize);
+        let mut rng = Pcg32::seeded(21);
+        let s: Vec<f32> = rng.normal_vec(m * n, 1.0).iter().map(|v| v.abs()).collect();
+        let scale: Vec<f32> = rng.normal_vec(n, 0.3).iter().map(|v| 1.0 + v).collect();
+        let bias: Vec<f32> = rng.normal_vec(n, 0.3);
+        let upstream: Vec<f32> = rng.normal_vec(m * n, 1.0);
+        // loss(s) = <upstream, BN(s)>
+        let loss = |sv: &[f32]| -> f64 {
+            let (mut mean, mut var) = (Vec::new(), Vec::new());
+            batch_stats(sv, m, n, &mut mean, &mut var);
+            let invstd: Vec<f32> = var.iter().map(|v| 1.0 / (v + BN_EPS).sqrt()).collect();
+            let mut out = sv.to_vec();
+            apply_bn(&mut out, n, &mean, &invstd, &scale, &bias);
+            out.iter().zip(&upstream).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        batch_stats(&s, m, n, &mut mean, &mut var);
+        let invstd: Vec<f32> = var.iter().map(|v| 1.0 / (v + BN_EPS).sqrt()).collect();
+        let mut ds = upstream.clone();
+        let (gscale, gbias) = bn_backward(&mut ds, &s, &mean, &invstd, &scale, m, n);
+        let h = 1e-3f32;
+        for i in [0usize, 4, 7, m * n - 1] {
+            let mut sp = s.clone();
+            sp[i] += h;
+            let mut sm = s.clone();
+            sm[i] -= h;
+            let fd = ((loss(&sp) - loss(&sm)) / (2.0 * h as f64)) as f32;
+            assert!(
+                (fd - ds[i]).abs() < 2e-2 * fd.abs().max(1.0),
+                "ds[{i}]: analytic {} vs fd {fd}",
+                ds[i]
+            );
+        }
+        // dscale / dbias against their definitions
+        for j in 0..n {
+            let want_bias: f32 = upstream.iter().skip(j).step_by(n).sum();
+            assert!((gbias[j] - want_bias).abs() < 1e-4, "gbias[{j}]");
+            let want_scale: f32 = (0..m)
+                .map(|i| upstream[i * n + j] * (s[i * n + j] - mean[j]) * invstd[j])
+                .sum();
+            assert!((gscale[j] - want_scale).abs() < 1e-3, "gscale[{j}]");
+        }
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        let x = Tensor::from_fn(&[1, 1, 4, 4], |i| i as f32);
+        let mut out = Vec::new();
+        let mut idx = Vec::new();
+        let dims = maxpool_fwd(x.data(), (1, 1, 4, 4), 2, &mut out, &mut idx);
+        assert_eq!(dims, (1, 1, 2, 2));
+        assert_eq!(out, vec![5.0, 7.0, 13.0, 15.0]);
+        assert_eq!(idx, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn nchw_rows_roundtrip() {
+        let (n, k, p, q) = (2usize, 3usize, 2usize, 4usize);
+        let x: Vec<f32> = (0..n * k * p * q).map(|i| i as f32).collect();
+        let mut rows = Vec::new();
+        nchw_to_rows_into(&x, n, k, p, q, &mut rows);
+        let mut back = Vec::new();
+        NativeModel::rows_to_nchw_into(&rows, n, k, p, q, &mut back);
+        assert_eq!(x, back);
+    }
+}

@@ -1,0 +1,406 @@
+//! Host-side model zoo: synthesize a full artifact [`Meta`] (topology,
+//! state-leaf layout, init specs, DSG projection shapes) for the paper's
+//! model variants WITHOUT python, XLA, or an artifacts directory.
+//!
+//! This is the rust mirror of `python/compile/models.py` +
+//! `aot.py::export_variant`'s meta emission: leaf names, group order
+//! (params ++ vel ++ bn ++ vbn ++ bn_state), sorted-dict-key ordering
+//! inside a unit ("b" < "w", "bias" < "scale", "mean" < "var",
+//! "conv1" < "conv2" < "short"), He/zeros/ones/ternary init recipes, and
+//! the JLL projection dimension per DSG layer are all reproduced, so
+//! [`crate::coordinator::ModelState::init`] and the native engines
+//! consume a synthesized meta exactly like a loaded one.  The only
+//! difference is `files`/`kept` being empty: there are no HLO artifacts
+//! behind it, which is the point — `dsg train --engine native` runs end
+//! to end on a box with nothing but the rust toolchain.
+
+use crate::costmodel::jll;
+use crate::runtime::{Counts, DType, DsgLayer, Init, LeafSpec, Meta, Unit};
+use anyhow::{bail, Result};
+
+/// A zoo model description (the rust twin of `models.py::Model`).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// canonical zoo name (what `base_model` records)
+    pub base_model: String,
+    /// (D,) for MLPs, (C, H, W) for conv nets
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub batch: usize,
+    pub units: Vec<Unit>,
+    /// "drs" or "dense" (oracle/random need the HLO path)
+    pub strategy: String,
+    pub eps: f64,
+    pub double_mask: bool,
+    pub use_bn: bool,
+}
+
+impl ModelSpec {
+    fn base(name: &str, input_shape: &[usize], batch: usize, units: Vec<Unit>) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            base_model: name.to_string(),
+            input_shape: input_shape.to_vec(),
+            classes: 10,
+            batch,
+            units,
+            strategy: "drs".into(),
+            eps: 0.5,
+            double_mask: true,
+            use_bn: true,
+        }
+    }
+
+    /// 784-hidden-hidden-10 MLP (FASHION-like).
+    pub fn mlp(batch: usize, hidden: usize) -> ModelSpec {
+        Self::base(
+            "mlp",
+            &[784],
+            batch,
+            vec![
+                Unit::Dense { d_in: 784, d_out: hidden },
+                Unit::Dense { d_in: hidden, d_out: hidden },
+                Unit::Classifier { d_in: hidden, d_out: 10 },
+            ],
+        )
+    }
+
+    /// An arbitrary DSG MLP from layer widths (tests / experiments):
+    /// `dims = [input, h1, h2, ...]` plus a classifier to `classes`.
+    pub fn custom_mlp(name: &str, dims: &[usize], classes: usize, batch: usize) -> ModelSpec {
+        assert!(dims.len() >= 2, "need input + at least one hidden width");
+        let mut units = Vec::new();
+        for w in dims.windows(2) {
+            units.push(Unit::Dense { d_in: w[0], d_out: w[1] });
+        }
+        units.push(Unit::Classifier { d_in: *dims.last().unwrap(), d_out: classes });
+        let mut s = Self::base(name, &dims[..1], batch, units);
+        s.classes = classes;
+        s
+    }
+
+    /// LeNet-5 (FASHION-like).
+    pub fn lenet(batch: usize) -> ModelSpec {
+        Self::base(
+            "lenet",
+            &[1, 28, 28],
+            batch,
+            vec![
+                Unit::Conv { c_in: 1, c_out: 6, ksize: 5, stride: 1, pad: 2 },
+                Unit::MaxPool { size: 2 },
+                Unit::Conv { c_in: 6, c_out: 16, ksize: 5, stride: 1, pad: 0 },
+                Unit::MaxPool { size: 2 },
+                Unit::Flatten,
+                Unit::Dense { d_in: 16 * 5 * 5, d_out: 120 },
+                Unit::Dense { d_in: 120, d_out: 84 },
+                Unit::Classifier { d_in: 84, d_out: 10 },
+            ],
+        )
+    }
+
+    /// VGG-8 at width `w` (CIFAR-like).
+    pub fn vgg8(batch: usize, w: usize, name: &str) -> ModelSpec {
+        let conv = |c_in: usize, c_out: usize| Unit::Conv { c_in, c_out, ksize: 3, stride: 1, pad: 1 };
+        Self::base(
+            name,
+            &[3, 32, 32],
+            batch,
+            vec![
+                conv(3, w),
+                conv(w, w),
+                Unit::MaxPool { size: 2 },
+                conv(w, 2 * w),
+                conv(2 * w, 2 * w),
+                Unit::MaxPool { size: 2 },
+                conv(2 * w, 4 * w),
+                conv(4 * w, 4 * w),
+                Unit::MaxPool { size: 2 },
+                Unit::Flatten,
+                Unit::Dense { d_in: 4 * w * 4 * 4, d_out: 8 * w },
+                Unit::Classifier { d_in: 8 * w, d_out: 10 },
+            ],
+        )
+    }
+
+    /// The paper's custom resnet8 variant at width `w` (CIFAR-like).
+    pub fn resnet8(batch: usize, w: usize, name: &str) -> ModelSpec {
+        Self::base(
+            name,
+            &[3, 32, 32],
+            batch,
+            vec![
+                Unit::Conv { c_in: 3, c_out: w, ksize: 3, stride: 1, pad: 1 },
+                Unit::Residual { c_in: w, c_out: w, stride: 1 },
+                Unit::Residual { c_in: w, c_out: 2 * w, stride: 2 },
+                Unit::Residual { c_in: 2 * w, c_out: 4 * w, stride: 2 },
+                Unit::GlobalAvgPool,
+                Unit::Dense { d_in: 4 * w, d_out: 64 },
+                Unit::Classifier { d_in: 64, d_out: 10 },
+            ],
+        )
+    }
+
+    /// Switch to the dense (no-masking) strategy, renamed like the
+    /// exported `<model>_dense` variants.
+    pub fn dense_variant(mut self) -> ModelSpec {
+        self.name = format!("{}_dense", self.name);
+        self.strategy = "dense".into();
+        self
+    }
+}
+
+/// Look up a zoo model by (possibly `_dense`-suffixed) variant name,
+/// mirroring the exported artifact names.
+pub fn spec_for(variant: &str) -> Result<ModelSpec> {
+    let (base, dense) = match variant.strip_suffix("_dense") {
+        Some(b) => (b, true),
+        None => (variant, false),
+    };
+    let spec = match base {
+        "mlp" => ModelSpec::mlp(64, 256),
+        "lenet" => ModelSpec::lenet(32),
+        "vgg8" => ModelSpec::vgg8(16, 32, "vgg8"),
+        "vgg8s" => ModelSpec::vgg8(16, 16, "vgg8s"),
+        "resnet8" => ModelSpec::resnet8(16, 16, "resnet8"),
+        "wrn8_2" => ModelSpec::resnet8(16, 32, "wrn8_2"),
+        other => bail!(
+            "unknown native model {other:?} (have mlp, lenet, vgg8, vgg8s, resnet8, wrn8_2, \
+             each also as <name>_dense)"
+        ),
+    };
+    Ok(if dense { spec.dense_variant() } else { spec })
+}
+
+fn leaf(name: String, shape: &[usize], init: Init) -> LeafSpec {
+    LeafSpec { name, shape: shape.to_vec(), dtype: DType::F32, init }
+}
+
+fn he(name: String, shape: &[usize]) -> LeafSpec {
+    // conv (K, C, r, s): fan_in = C*r*s; dense (d_in, d_out): fan_in = d_in
+    let fan_in = if shape.len() == 4 { shape[1] * shape[2] * shape[3] } else { shape[0] };
+    leaf(name, shape, Init::HeNormal { fan_in })
+}
+
+/// The (path, k, d_in, n_out) description of every DSG-maskable layer,
+/// in buffer order (`models.py::projection_shapes`).
+pub fn dsg_shapes(spec: &ModelSpec) -> Vec<DsgLayer> {
+    let mut out = Vec::new();
+    let mut push = |path: String, d_in: usize, n_out: usize, eps: f64| {
+        out.push(DsgLayer { path, k: jll::projection_dim(eps, n_out, d_in), d_in, n_out });
+    };
+    for (i, u) in spec.units.iter().enumerate() {
+        match u {
+            Unit::Dense { d_in, d_out } => push(format!("u{i}"), *d_in, *d_out, spec.eps),
+            Unit::Conv { c_in, c_out, ksize, .. } => {
+                push(format!("u{i}"), c_in * ksize * ksize, *c_out, spec.eps)
+            }
+            Unit::Residual { c_in, c_out, .. } => {
+                push(format!("u{i}.conv1"), c_in * 9, *c_out, spec.eps);
+                push(format!("u{i}.conv2"), c_out * 9, *c_out, spec.eps);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Synthesize the full artifact meta for a zoo spec (see module docs).
+pub fn synth_meta(spec: &ModelSpec) -> Result<Meta> {
+    if !matches!(spec.strategy.as_str(), "drs" | "dense") {
+        bail!(
+            "native meta synthesis supports strategies drs/dense, not {:?} \
+             (oracle/random need the HLO artifacts)",
+            spec.strategy
+        );
+    }
+    // --- params group (and its zero-init velocity twin) ----------------
+    let mut params: Vec<LeafSpec> = Vec::new();
+    let mut bn: Vec<LeafSpec> = Vec::new();
+    let mut bn_state: Vec<LeafSpec> = Vec::new();
+    let push_bn = |bn: &mut Vec<LeafSpec>, bn_state: &mut Vec<LeafSpec>, path: String, c: usize| {
+        // sorted dict keys: bias < scale, mean < var
+        bn.push(leaf(format!("bn.{path}.bias"), &[c], Init::Zeros));
+        bn.push(leaf(format!("bn.{path}.scale"), &[c], Init::Ones));
+        bn_state.push(leaf(format!("bn_state.{path}.mean"), &[c], Init::Zeros));
+        bn_state.push(leaf(format!("bn_state.{path}.var"), &[c], Init::Ones));
+    };
+    for (i, u) in spec.units.iter().enumerate() {
+        match u {
+            Unit::Dense { d_in, d_out } => {
+                params.push(he(format!("params.{i}.w"), &[*d_in, *d_out]));
+                push_bn(&mut bn, &mut bn_state, i.to_string(), *d_out);
+            }
+            Unit::Classifier { d_in, d_out } => {
+                // sorted dict keys: b < w
+                params.push(leaf(format!("params.{i}.b"), &[*d_out], Init::Zeros));
+                params.push(he(format!("params.{i}.w"), &[*d_in, *d_out]));
+            }
+            Unit::Conv { c_in, c_out, ksize, .. } => {
+                params.push(he(format!("params.{i}.w"), &[*c_out, *c_in, *ksize, *ksize]));
+                push_bn(&mut bn, &mut bn_state, i.to_string(), *c_out);
+            }
+            Unit::Residual { c_in, c_out, stride } => {
+                params.push(he(format!("params.{i}.conv1.w"), &[*c_out, *c_in, 3, 3]));
+                params.push(he(format!("params.{i}.conv2.w"), &[*c_out, *c_out, 3, 3]));
+                if *stride != 1 || c_in != c_out {
+                    params.push(he(format!("params.{i}.short.w"), &[*c_out, *c_in, 1, 1]));
+                }
+                push_bn(&mut bn, &mut bn_state, format!("{i}.bn1"), *c_out);
+                push_bn(&mut bn, &mut bn_state, format!("{i}.bn2"), *c_out);
+            }
+            Unit::MaxPool { .. } | Unit::GlobalAvgPool | Unit::Flatten => {}
+        }
+    }
+    let vel: Vec<LeafSpec> = params
+        .iter()
+        .map(|p| leaf(p.name.replacen("params.", "vel.", 1), &p.shape, Init::Zeros))
+        .collect();
+    let vbn: Vec<LeafSpec> = bn
+        .iter()
+        .map(|p| leaf(p.name.replacen("bn.", "vbn.", 1), &p.shape, Init::Zeros))
+        .collect();
+
+    // --- DSG side -------------------------------------------------------
+    let layers = dsg_shapes(spec);
+    let is_drs = spec.strategy == "drs";
+    let (wps, rs): (Vec<LeafSpec>, Vec<LeafSpec>) = if is_drs {
+        layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| {
+                (
+                    leaf(format!("wp.{li}"), &[l.k, l.n_out], Init::Zeros),
+                    leaf(format!("r.{li}"), &[l.k, l.d_in], Init::Ternary { s: 3 }),
+                )
+            })
+            .unzip()
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    let counts = Counts {
+        params: params.len(),
+        vel: vel.len(),
+        bn: bn.len(),
+        vbn: vbn.len(),
+        bn_state: bn_state.len(),
+        wps: wps.len(),
+        rs: rs.len(),
+        dsg: layers.len(),
+    };
+    let state: Vec<LeafSpec> = params
+        .into_iter()
+        .chain(vel)
+        .chain(bn)
+        .chain(vbn)
+        .chain(bn_state)
+        .collect();
+    let dsg_weight_indices: Vec<usize> = if is_drs {
+        layers
+            .iter()
+            .map(|l| {
+                // "u3" -> "params.3.w"; "u5.conv1" -> "params.5.conv1.w"
+                let wname = format!("params.{}.w", &l.path[1..]);
+                state
+                    .iter()
+                    .position(|s| s.name == wname)
+                    .ok_or_else(|| anyhow::anyhow!("no state leaf {wname}"))
+            })
+            .collect::<Result<_>>()?
+    } else {
+        Vec::new()
+    };
+
+    Ok(Meta {
+        name: spec.name.clone(),
+        base_model: spec.base_model.clone(),
+        batch: spec.batch,
+        input_shape: spec.input_shape.clone(),
+        classes: spec.classes,
+        strategy: spec.strategy.clone(),
+        eps: spec.eps,
+        double_mask: spec.double_mask,
+        use_bn: spec.use_bn,
+        files: Default::default(),
+        kept: Default::default(),
+        counts,
+        state,
+        wps,
+        rs,
+        dsg_weight_indices,
+        dsg_layers: if is_drs { layers } else { Vec::new() },
+        units: spec.units.clone(),
+        dir: std::path::PathBuf::from("<synthesized>"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ModelState;
+
+    #[test]
+    fn mlp_meta_matches_exported_layout() {
+        // mirrors the shape facts asserted against the real artifact meta
+        // in runtime::meta tests: 20 state leaves, 2 dsg layers, batch 64
+        let m = synth_meta(&spec_for("mlp").unwrap()).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.counts.dsg, 2);
+        assert_eq!(m.state.len(), 20);
+        assert!(m.state[0].name.starts_with("params."));
+        assert!(m.state[19].name.starts_with("bn_state."));
+        assert_eq!(m.counts.params, 4); // 2 dense w + classifier b + w
+        // classifier leaves in sorted-dict order: b before w
+        assert_eq!(m.state[2].name, "params.2.b");
+        assert_eq!(m.state[3].name, "params.2.w");
+        assert_eq!(m.dsg_weight_indices, vec![0, 1]);
+        assert_eq!(m.wps[0].shape, vec![m.dsg_layers[0].k, 256]);
+        assert_eq!(m.rs[0].shape, vec![m.dsg_layers[0].k, 784]);
+        assert!(!m.has_file("train"));
+    }
+
+    #[test]
+    fn dense_variant_has_no_projections() {
+        let m = synth_meta(&spec_for("mlp_dense").unwrap()).unwrap();
+        assert_eq!(m.strategy, "dense");
+        assert_eq!(m.counts.wps, 0);
+        assert_eq!(m.counts.rs, 0);
+        assert_eq!(m.counts.dsg, 2); // densities still reported per layer
+        assert!(m.dsg_weight_indices.is_empty());
+    }
+
+    #[test]
+    fn state_init_consumes_synth_meta() {
+        for name in ["mlp", "lenet", "resnet8"] {
+            let m = synth_meta(&spec_for(name).unwrap()).unwrap();
+            let s = ModelState::init(&m, 7);
+            assert_eq!(s.state.len(), m.state.len(), "{name}");
+            assert_eq!(s.wps.len(), m.counts.wps, "{name}");
+            assert_eq!(s.rs.len(), m.counts.rs, "{name}");
+            assert_eq!(s.dsg_weights(&m).len(), m.dsg_weight_indices.len());
+        }
+    }
+
+    #[test]
+    fn residual_shortcut_leaves_only_when_needed() {
+        let m = synth_meta(&spec_for("resnet8").unwrap()).unwrap();
+        let names: Vec<&str> = m.state.iter().map(|l| l.name.as_str()).collect();
+        // residual u1 is stride-1 same-width: no shortcut weight
+        assert!(!names.contains(&"params.1.short.w"));
+        // u2 and u3 change width/stride: shortcut present
+        assert!(names.contains(&"params.2.short.w"));
+        assert!(names.contains(&"params.3.short.w"));
+        // stem conv + 3 residuals x 2 + head dense (classifier unmasked)
+        assert_eq!(m.counts.dsg, 8);
+    }
+
+    #[test]
+    fn unknown_model_is_clean_error() {
+        assert!(spec_for("vgg99").is_err());
+        // oracle/random strategies are HLO-only
+        let mut s = spec_for("mlp").unwrap();
+        s.strategy = "oracle".into();
+        assert!(synth_meta(&s).is_err());
+    }
+}

@@ -22,7 +22,7 @@ pub mod golden;
 pub mod meta;
 
 pub use golden::Golden;
-pub use meta::{Counts, DType, Init, LeafSpec, Meta, Unit};
+pub use meta::{Counts, DType, DsgLayer, Init, LeafSpec, Meta, Unit};
 pub use pjrt::{Executable, Runtime};
 
 use anyhow::{bail, Result};
@@ -71,6 +71,14 @@ impl HostTensor {
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Mutable f32 view (the native trainer updates state in place).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),
             _ => bail!("tensor is not f32"),

@@ -96,19 +96,37 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Exact percentile (nearest-rank, ceil convention: the smallest
+    /// sample with at least `p` of the distribution at or below it).
     pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentiles from ONE sort of the latency vector — use
+    /// this for reports instead of calling [`ServeStats::percentile`]
+    /// per point (which re-sorts every time).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
         if self.latencies.is_empty() {
-            return 0.0;
+            return vec![0.0; ps.len()];
         }
         let mut xs = self.latencies.clone();
         xs.sort_by(|a, b| a.total_cmp(b));
-        let idx = ((xs.len() - 1) as f64 * p).round() as usize;
-        xs[idx]
+        ps.iter().map(|&p| xs[percentile_index(xs.len(), p)]).collect()
     }
 
     pub fn throughput(&self, wall_secs: f64) -> f64 {
         self.served as f64 / wall_secs.max(1e-12)
     }
+}
+
+/// Ceil-convention nearest-rank index into `n` ascending samples: the
+/// rank-`ceil(p*n)` sample (1-based), so p50 of two samples is the LOWER
+/// one and p95 of 100 samples is the 95th smallest — `.round()` here
+/// used to round half-up and read one rank too high at exact midpoints.
+pub(crate) fn percentile_index(n: usize, p: f64) -> usize {
+    debug_assert!(n > 0);
+    let rank = (p.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    rank.clamp(1, n) - 1
 }
 
 /// Assemble one padded batch from `reqs` (flat row-major pixels).  The
@@ -134,6 +152,11 @@ pub(crate) fn assemble_batch_into(
     xs: &mut Vec<f32>,
 ) -> anyhow::Result<usize> {
     anyhow::ensure!(!reqs.is_empty(), "cannot assemble an empty batch");
+    anyhow::ensure!(
+        reqs.len() <= batch_size,
+        "cannot assemble {} requests into a batch of {batch_size}",
+        reqs.len()
+    );
     xs.clear();
     xs.reserve(batch_size * input_elems);
     for r in reqs {
@@ -273,8 +296,43 @@ mod tests {
         assert_eq!(s.percentile(0.0), 0.001);
         assert_eq!(s.percentile(0.5), 0.003);
         assert_eq!(s.percentile(1.0), 0.100);
+        // one sort serving many points agrees with the per-point calls
+        assert_eq!(s.percentiles(&[0.0, 0.5, 1.0]), vec![0.001, 0.003, 0.100]);
         s.served = 5;
         assert!((s.throughput(1.0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_ceil_rank_midpoints() {
+        // p50 of two samples is the LOWER one (the old .round() read max)
+        let mut s = ServeStats::default();
+        s.latencies = vec![2.0, 1.0];
+        assert_eq!(s.percentile(0.5), 1.0);
+        // p95 of 100 samples = the 95th smallest (index 94)
+        assert_eq!(percentile_index(100, 0.95), 94);
+        assert_eq!(percentile_index(2, 0.5), 0);
+        assert_eq!(percentile_index(1, 0.5), 0);
+        assert_eq!(percentile_index(10, 0.0), 0);
+        assert_eq!(percentile_index(10, 1.0), 9);
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(percentile_index(10, 1.5), 9);
+        assert_eq!(percentile_index(10, -0.5), 0);
+        // empty stats stay all-zero
+        assert_eq!(ServeStats::default().percentiles(&[0.5, 0.9]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn assemble_rejects_oversized_batch() {
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request { id: i, image: vec![i as f32; 2], enqueued: Instant::now() })
+            .collect();
+        // more requests than batch slots must be a clean error, not a
+        // usize underflow (release-mode wrap => absurd reserve)
+        let err = assemble_batch(&reqs, 2, 2).unwrap_err();
+        assert!(err.to_string().contains("batch of 2"), "{err}");
+        // exactly-full and under-full still work
+        assert!(assemble_batch(&reqs, 3, 2).is_ok());
+        assert!(assemble_batch(&reqs[..1], 3, 2).is_ok());
     }
 
     #[test]

@@ -206,6 +206,121 @@ pub fn vmm_rowmask_chunk(
     }
 }
 
+/// Backward-to-input of the RowMask VMM, rows `[lo, hi)`:
+/// dx_i = sum_{j in mask.row(i)} dy[i, j] * wt[j, :] over transposed
+/// weights wt (n, d).  Only the SELECTED gradient entries are read —
+/// Algorithm 1's forced gradient sparsification falls out structurally
+/// (unselected dy values never touch the accumulators).  Zeroes the
+/// chunk first; a full mask sweeps every j in the same ascending order,
+/// so gamma = 0 is bit-identical to a dense dY * W^T.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_rowmask_backward_chunk(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    out.fill(0.0);
+    if mask.is_full() {
+        // keep-all fast path (gamma = 0 / dense mode): sweep every j in
+        // the same ascending order, no index indirection — bit-identical
+        for i in lo..hi {
+            let dyrow = &dyd[i * n..(i + 1) * n];
+            let orow = &mut out[(i - lo) * d..(i - lo + 1) * d];
+            for (j, &g) in dyrow.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                let wrow = &wd[j * d..(j + 1) * d];
+                for p in 0..d {
+                    orow[p] += g * wrow[p];
+                }
+            }
+        }
+        return;
+    }
+    for i in lo..hi {
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let orow = &mut out[(i - lo) * d..(i - lo + 1) * d];
+        for &j in mask.row(i) {
+            let j = j as usize;
+            let g = dyrow[j];
+            if g == 0.0 {
+                continue; // relu'd-away entries: same skip rule as matmul_chunk
+            }
+            let wrow = &wd[j * d..(j + 1) * d];
+            for p in 0..d {
+                orow[p] += g * wrow[p];
+            }
+        }
+    }
+}
+
+/// Backward-to-weights of the RowMask VMM for OUTPUT NEURONS `[jlo, jhi)`:
+/// dwt[j, :] = sum_i [j in mask.row(i)] dy[i, j] * x[i, :], written into
+/// the chunk slice (len (jhi-jlo)*d) of the transposed-layout gradient
+/// dwt (n, d).  The split is by output neuron, so each dwt row is
+/// accumulated by exactly one chunk in fixed ascending-i order —
+/// bit-exact for any thread budget, like the forward engines.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_rowmask_gradw_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (jhi - jlo) * d);
+    out.fill(0.0);
+    if mask.is_full() {
+        // keep-all fast path: same i-outer / ascending-j-inner order as
+        // the selected walk below, minus the index list + searches
+        for i in 0..m {
+            let xrow = &xd[i * d..(i + 1) * d];
+            let dyrow = &dyd[i * n..(i + 1) * n];
+            for j in jlo..jhi {
+                let g = dyrow[j];
+                if g == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
+                for p in 0..d {
+                    orow[p] += g * xrow[p];
+                }
+            }
+        }
+        return;
+    }
+    for i in 0..m {
+        let xrow = &xd[i * d..(i + 1) * d];
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let sel = mask.row(i);
+        // selected indices are ascending: binary-search the [jlo, jhi) span
+        let a = sel.partition_point(|&j| (j as usize) < jlo);
+        let b = sel.partition_point(|&j| (j as usize) < jhi);
+        for &j in &sel[a..b] {
+            let j = j as usize;
+            let g = dyrow[j];
+            if g == 0.0 {
+                continue;
+            }
+            let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
+            for p in 0..d {
+                orow[p] += g * xrow[p];
+            }
+        }
+    }
+}
+
 /// Ternary projection of rows `[lo, hi)` into the chunk slice.
 pub fn project_chunk(
     ridx: &crate::drs::projection::TernaryIndex,
@@ -282,6 +397,50 @@ pub fn dsg_vmm_rowmask_parallel_into(
     assert_eq!(mask.width(), n, "mask width");
     for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
         vmm_rowmask_chunk(xd, wd, d, n, mask, lo, hi, chunk)
+    });
+}
+
+/// Pool-parallel backward-to-input of the RowMask VMM into `out`
+/// (len m*d): dX = (masked dY) @ W, reading only selected gradients.
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_backward_parallel_into(
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(dyd.len(), m * n);
+    debug_assert_eq!(wd.len(), n * d);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
+        vmm_rowmask_backward_chunk(dyd, wd, d, n, mask, lo, hi, chunk)
+    });
+}
+
+/// Pool-parallel backward-to-weights of the RowMask VMM into the
+/// transposed-layout gradient `out` (len n*d), split by output neuron.
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_gradw_parallel_into(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xd.len(), m * d);
+    debug_assert_eq!(dyd.len(), m * n);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
+        vmm_rowmask_gradw_chunk(xd, dyd, m, d, n, mask, jlo, jhi, chunk)
     });
 }
 
@@ -477,6 +636,67 @@ mod tests {
             assert_eq!(vm1, dsg_vmm_parallel_with(&x, &wt, &mask, t), "vmm @ {t}");
             assert_eq!(rm1, dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t), "rowmask @ {t}");
             assert_eq!(pr1, project_rows_parallel_with(&x, &ridx, t), "proj @ {t}");
+        }
+    }
+
+    /// Reference backward-to-input: dX = (dY * dense mask) @ W.
+    fn backward_input_reference(dy: &Tensor, w: &Tensor, mask: &Tensor) -> Tensor {
+        let masked = Tensor::from_fn(dy.shape(), |i| dy.data()[i] * mask.data()[i]);
+        ops::matmul_naive(&masked, w)
+    }
+
+    /// Reference backward-to-weights: dW^T = (dY * mask)^T @ X, (n, d).
+    fn gradw_reference(x: &Tensor, dy: &Tensor, mask: &Tensor) -> Tensor {
+        let masked = Tensor::from_fn(dy.shape(), |i| dy.data()[i] * mask.data()[i]);
+        ops::matmul_naive(&ops::transpose(&masked), x)
+    }
+
+    #[test]
+    fn rowmask_backward_matches_dense_reference() {
+        let mut rng = Pcg32::seeded(71);
+        let (m, d, n) = (13, 40, 21);
+        let x = randn(&mut rng, &[m, d]);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        let dy = randn(&mut rng, &[m, n]);
+        for frac in [0usize, 3, 1] {
+            // frac 0 = empty-ish, 3 = quarter, 1 = full mask
+            let mask = Tensor::from_fn(&[m, n], |i| if frac == 0 { 0.0 } else if i % frac == 0 { 1.0 } else { 0.0 });
+            let rm = RowMask::from_dense(&mask);
+            let want_dx = backward_input_reference(&dy, &w, &mask);
+            let want_dwt = gradw_reference(&x, &dy, &mask);
+            let mut dx = vec![f32::NAN; m * d];
+            let mut dwt = vec![f32::NAN; n * d];
+            dsg_vmm_rowmask_backward_parallel_into(dy.data(), m, d, wt.data(), n, &rm, 1, &mut dx);
+            dsg_vmm_rowmask_gradw_parallel_into(x.data(), dy.data(), m, d, n, &rm, 1, &mut dwt);
+            let dx_t = Tensor::new(&[m, d], dx);
+            let dwt_t = Tensor::new(&[n, d], dwt);
+            assert!(dx_t.allclose(&want_dx, 1e-4, 1e-4), "dx frac {frac}");
+            assert!(dwt_t.allclose(&want_dwt, 1e-4, 1e-4), "dwt frac {frac}");
+        }
+    }
+
+    #[test]
+    fn backward_kernels_bit_exact_across_budgets() {
+        let mut rng = Pcg32::seeded(72);
+        let (m, d, n) = (17, 48, 33);
+        let x = randn(&mut rng, &[m, d]);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        let dy = randn(&mut rng, &[m, n]);
+        let mask = Tensor::from_fn(&[m, n], |i| if i % 3 == 0 { 1.0 } else { 0.0 });
+        let rm = RowMask::from_dense(&mask);
+        let mut dx1 = vec![0.0f32; m * d];
+        let mut dwt1 = vec![0.0f32; n * d];
+        dsg_vmm_rowmask_backward_parallel_into(dy.data(), m, d, wt.data(), n, &rm, 1, &mut dx1);
+        dsg_vmm_rowmask_gradw_parallel_into(x.data(), dy.data(), m, d, n, &rm, 1, &mut dwt1);
+        for t in [2usize, 3, 8] {
+            let mut dx = vec![0.0f32; m * d];
+            let mut dwt = vec![0.0f32; n * d];
+            dsg_vmm_rowmask_backward_parallel_into(dy.data(), m, d, wt.data(), n, &rm, t, &mut dx);
+            dsg_vmm_rowmask_gradw_parallel_into(x.data(), dy.data(), m, d, n, &rm, t, &mut dwt);
+            assert_eq!(dx1, dx, "backward @ {t}");
+            assert_eq!(dwt1, dwt, "gradw @ {t}");
         }
     }
 

@@ -100,6 +100,19 @@ pub fn matmul_blocked_into(ad: &[f32], m: usize, k: usize, bd: &[f32], n: usize,
     }
 }
 
+/// Transpose a row-major (m, n) slice into a caller-owned buffer,
+/// resized to n*m (capacity reused) — the trainer's per-step
+/// weight-layout flips.
+pub fn transpose_into(src: &[f32], m: usize, n: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(src.len(), m * n);
+    out.resize(m * n, 0.0); // fully overwritten below
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = src[i * n + j];
+        }
+    }
+}
+
 /// Transpose a 2-D tensor.
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = (a.shape()[0], a.shape()[1]);
@@ -196,6 +209,56 @@ pub fn im2col_slice_into(
     (p, q)
 }
 
+/// Adjoint of [`im2col_slice_into`]: scatter-add rows (N*P*Q, C*KH*KW)
+/// back onto the NCHW image they were gathered from — the conv backward
+/// pass's gradient-to-input step.  Positions gathered by several sliding
+/// windows accumulate every window's contribution; padded positions are
+/// dropped.  `out` is resized to n*c*h*w and zeroed first.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_slice_into(
+    rows: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f32>,
+) {
+    let p = (h + 2 * pad - ksize) / stride + 1;
+    let q = (w + 2 * pad - ksize) / stride + 1;
+    let d = c * ksize * ksize;
+    debug_assert_eq!(rows.len(), n * p * q * d);
+    out.resize(n * c * h * w, 0.0);
+    out.fill(0.0);
+    for ni in 0..n {
+        for pi in 0..p {
+            for qi in 0..q {
+                let row = ((ni * p + pi) * q + qi) * d;
+                let mut col = 0;
+                for ci in 0..c {
+                    for kh in 0..ksize {
+                        let hy = (pi * stride + kh) as isize - pad as isize;
+                        for kw in 0..ksize {
+                            let wx = (qi * stride + kw) as isize - pad as isize;
+                            if hy >= 0
+                                && (hy as usize) < h
+                                && wx >= 0
+                                && (wx as usize) < w
+                            {
+                                out[((ni * c + ci) * h + hy as usize) * w + wx as usize] +=
+                                    rows[row + col];
+                            }
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +295,9 @@ mod tests {
         let a = rand_t(&mut rng, &[5, 9]);
         let t = transpose(&transpose(&a));
         assert_eq!(a, t);
+        let mut buf = vec![f32::NAN; 1]; // wrong size: must be resized
+        transpose_into(a.data(), 5, 9, &mut buf);
+        assert_eq!(buf, transpose(&a).data());
     }
 
     #[test]
@@ -301,6 +367,40 @@ mod tests {
         let (p2, q2) = im2col_slice_into(x.data(), 2, 3, 5, 5, 3, 1, 1, &mut buf);
         assert_eq!((p, q), (p2, q2));
         assert_eq!(buf, rows.data());
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), R> == <x, col2im(R)> for random x, R — the defining
+        // property of the transpose map the conv backward relies on.
+        let mut rng = Pcg32::seeded(15);
+        for &(n, c, h, w, kk, stride, pad) in
+            &[(2usize, 3usize, 6usize, 6usize, 3usize, 1usize, 1usize), (1, 2, 5, 5, 3, 2, 0), (2, 1, 4, 4, 2, 2, 1)]
+        {
+            let x = rand_t(&mut rng, &[n, c, h, w]);
+            let (rows, p, q) = im2col(&x, kk, stride, pad);
+            let r = rand_t(&mut rng, &[n * p * q, c * kk * kk]);
+            let mut back = Vec::new();
+            col2im_slice_into(r.data(), n, c, h, w, kk, stride, pad, &mut back);
+            let lhs: f64 = rows.data().iter().zip(r.data()).map(|(&a, &b)| (a * b) as f64).sum();
+            let rhs: f64 = x.data().iter().zip(&back).map(|(&a, &b)| (a * b) as f64).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "({n},{c},{h},{w},k{kk},s{stride},p{pad}): {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn col2im_counts_overlaps() {
+        // all-ones rows: each input position receives one contribution
+        // per sliding window that covers it (3x3, stride 1, pad 1 on 3x3
+        // => corner 4, edge 6, center 9)
+        let (n, c, h, w) = (1usize, 1usize, 3usize, 3usize);
+        let rows = vec![1.0f32; 9 * 9];
+        let mut out = Vec::new();
+        col2im_slice_into(&rows, n, c, h, w, 3, 1, 1, &mut out);
+        assert_eq!(out, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
     }
 
     #[test]
