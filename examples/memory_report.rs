@@ -1,14 +1,15 @@
-//! Representational-cost report (Fig 6) with REAL compressed bytes:
-//! trains a small model, captures its actual activation sparsity from
-//! the probe artifact, runs the ZVC codec on real mask tensors, and then
-//! prints the analytic Fig 6 table for the paper's five CNNs.
+//! Representational-cost report (Fig 6) with REAL measured bytes:
+//! trains a small conv model on the NATIVE engine (no PJRT, no
+//! artifacts), with the training tape stored ZVC-compressed, and prints
+//! the per-record measured footprint next to the analytic prediction —
+//! then the analytic Fig 6 table for the paper's five CNNs.
 //!
 //!     cargo run --release --example memory_report [gamma]
 
-use dsg::coordinator::Trainer;
-use dsg::datasets;
-use dsg::runtime::{HostTensor, Meta, Runtime};
-use dsg::util::human_bytes;
+use dsg::coordinator::NativeTrainer;
+use dsg::native::train::TapeStorage;
+use dsg::native::zoo;
+use dsg::util::{human_bytes, Pcg32};
 use dsg::{costmodel, memmodel, zvc};
 
 fn main() -> anyhow::Result<()> {
@@ -16,61 +17,50 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .map(|s| s.parse())
         .transpose()?
-        .unwrap_or(0.8);
+        .unwrap_or(0.5);
 
-    let dir = dsg::artifacts_dir();
-    let rt = Runtime::cpu()?;
-    let meta = Meta::load(&dir, "lenet")?;
+    // short native training on lenet to get representative activations
+    let meta = zoo::synth_meta(&zoo::spec_for("lenet")?)?;
+    let mut rng = Pcg32::seeded(11);
+    let mut trainer = NativeTrainer::new(meta.clone(), 11)?.with_tape(TapeStorage::Zvc);
+    for _ in 0..10 {
+        let x = rng.normal_vec(meta.batch * meta.input_elems(), 1.0);
+        let y: Vec<i32> = (0..meta.batch).map(|_| rng.below(meta.classes as u32) as i32).collect();
+        trainer.step(&x, &y, gamma, 0.05)?;
+    }
 
-    // short training to get representative activations
-    let mut cfg = dsg::config::RunConfig::preset_for_model("lenet");
-    cfg.steps = 60;
-    cfg.eval_every = 0;
-    let data = datasets::fashion_like(1024, 11);
-    let (train, test) = data.split(0.25);
-    let mut trainer = Trainer::new(&rt, meta.clone(), 11)?;
-    trainer.train(&cfg, &train, &test)?;
-
-    // probe: full masks for one batch -> real measured sparsity + ZVC
-    let probe = rt.load_artifact(&meta, "probe")?;
-    let mut inputs: Vec<HostTensor> = Vec::new();
-    inputs.extend(trainer.state.params(&meta).iter().cloned());
-    inputs.extend(trainer.state.bn(&meta).iter().cloned());
-    inputs.extend(trainer.state.bn_state(&meta).iter().cloned());
-    inputs.extend(trainer.state.wps.iter().cloned());
-    inputs.extend(trainer.state.rs.iter().cloned());
-    let (xs, _) = datasets::BatchIter::new(&test, meta.batch, 1).next_batch();
-    let mut shape = vec![meta.batch];
-    shape.extend_from_slice(&meta.input_shape);
-    inputs.push(HostTensor::f32(&shape, xs));
-    inputs.push(HostTensor::scalar_f32(gamma));
-    let inputs = meta.filter_kept("probe", inputs);
-    let outs = probe.run(&inputs)?;
-
-    println!("measured on trained lenet @ gamma {gamma}:");
-    let mut total_dense = 0usize;
-    let mut total_zvc = 0usize;
-    for (i, mask) in outs[1..].iter().enumerate() {
-        let m = mask.as_f32()?;
-        // the masked activation tensor is at least as sparse as the mask
-        let sparsity = 1.0 - m.iter().sum::<f32>() as f64 / m.len() as f64;
-        let c = zvc::compress(m);
-        total_dense += c.dense_nbytes();
-        total_zvc += zvc::zvc_bytes(m.len(), sparsity);
+    let mem = trainer.tape_memory();
+    println!("measured on natively trained lenet @ gamma {gamma} (ZVC tape):");
+    println!(
+        "  {:>4} {:>5} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "unit", "part", "elems", "sparsity", "dense", "stored", "analytic"
+    );
+    for a in mem.allocs() {
+        // the cross-check the tests pin down: a compressed activation's
+        // stored bytes ARE the zvc_bytes formula at its measured nnz
+        let analytic = if a.is_act() {
+            human_bytes(zvc::zvc_bytes_nnz(a.elems, a.nnz).min(4 * a.elems) as u64)
+        } else {
+            "-".to_string()
+        };
         println!(
-            "  layer {:>2}: {:>8} elems, mask sparsity {:.2}, zvc-at-sparsity {:>9} vs dense {:>9}",
-            i,
-            m.len(),
-            sparsity,
-            human_bytes(zvc::zvc_bytes(m.len(), sparsity) as u64),
-            human_bytes(c.dense_nbytes() as u64)
+            "  {:>4} {:>5} {:>9} {:>8.2}% {:>9} {:>9} {:>10}",
+            a.unit,
+            a.part,
+            a.elems,
+            100.0 * a.sparsity(),
+            human_bytes(a.dense_bytes),
+            human_bytes(a.stored_bytes),
+            analytic
         );
     }
     println!(
-        "  total: {} -> {} ({:.2}x)\n",
-        human_bytes(total_dense as u64),
-        human_bytes(total_zvc as u64),
-        total_dense as f64 / total_zvc as f64
+        "  peak {} vs dense {} -> {:.2}x tape, {:.2}x acts-only (measured sparsity {:.2})\n",
+        human_bytes(mem.peak()),
+        human_bytes(mem.dense_peak()),
+        mem.reduction(),
+        mem.act_reduction(),
+        mem.act_sparsity()
     );
 
     // Fig 6 analytic table at the published model shapes

@@ -1,19 +1,195 @@
-//! Fig 6: representational cost (memory footprint) for training and
-//! inference across the five CNN benchmarks under ZVC at 50/80/90%
-//! activation sparsity.
+//! Fig 6: representational cost (memory footprint) under ZVC.
+//!
+//! Two sections since PR 4:
+//!
+//! 1. MEASURED — native training runs with the tape stored dense vs
+//!    ZVC-compressed ([`TapeStorage::Zvc`]), across gamma.  Peak tape
+//!    bytes come from the engine's [`dsg::metrics::MemoryMeter`], i.e.
+//!    they are what the backward pass actually held, not a model; the
+//!    two tapes are asserted bit-identical (losses match to the bit) and
+//!    the dense run's peak is asserted equal to the ZVC run's
+//!    dense-equivalent accounting.  At gamma 0.5 the measured ZVC/dense
+//!    reduction must clear 1.5x on the default topology (>1x in smoke).
+//! 2. ANALYTIC — the paper's five CNN benchmarks under `memmodel` at
+//!    50/80/90% activation sparsity (the original Fig 6 table).
+//!
+//! Writes `BENCH_memory.json` (override with `DSG_BENCH_OUT`).
+//! `DSG_FIG6_SMOKE=1` shrinks the measured topology for CI.
+//!
+//! Known accounting note the meter makes visible: a keep-all mask
+//! (gamma 0 / dense mode) is materialized by `RowMask::fill_full` as
+//! m*n u32 indices even though every engine fast-paths it via
+//! `is_full()` without reading them — it inflates the measured gamma-0
+//! baseline on BOTH sides of the ratio.  A compact "full" RowMask
+//! representation is the obvious follow-up; the gamma >= 0.5 gates
+//! below are unaffected (same mask bytes in numerator and denominator).
 
+use dsg::coordinator::NativeTrainer;
 use dsg::costmodel::shapes::fig6_nets;
 use dsg::memmodel;
+use dsg::native::train::TapeStorage;
+use dsg::native::zoo::{self, ModelSpec};
+use dsg::runtime::{Meta, Unit};
 use dsg::util::human_bytes;
+use dsg::util::json::{obj, Json};
+use dsg::util::Pcg32;
 
-fn main() {
+/// The default measured topology: vgg8s, conv-dominated like the paper's
+/// benchmarks.  Smoke mode swaps in a tiny conv net with the same
+/// structure (conv -> conv -> pool -> dense -> classifier).
+fn measured_spec(smoke: bool) -> ModelSpec {
+    if !smoke {
+        return zoo::spec_for("vgg8s").expect("vgg8s in zoo");
+    }
+    ModelSpec {
+        name: "fig6_smoke".into(),
+        base_model: "fig6_smoke".into(),
+        input_shape: vec![2, 12, 12],
+        classes: 4,
+        batch: 8,
+        units: vec![
+            Unit::Conv { c_in: 2, c_out: 12, ksize: 3, stride: 1, pad: 1 },
+            Unit::Conv { c_in: 12, c_out: 12, ksize: 3, stride: 1, pad: 1 },
+            Unit::MaxPool { size: 2 },
+            Unit::Flatten,
+            Unit::Dense { d_in: 12 * 6 * 6, d_out: 32 },
+            Unit::Classifier { d_in: 32, d_out: 4 },
+        ],
+        strategy: "drs".into(),
+        eps: 0.5,
+        double_mask: true,
+        use_bn: true,
+    }
+}
+
+fn batch_for(meta: &Meta, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let x = rng.normal_vec(meta.batch * meta.input_elems(), 1.0);
+    let y = (0..meta.batch).map(|_| rng.below(meta.classes as u32) as i32).collect();
+    (x, y)
+}
+
+/// Train `steps` steps at constant `gamma` under `tape`; returns
+/// (per-step loss bits, peak tape bytes, dense-equivalent peak,
+/// act-only reduction, measured act sparsity, per-record rows).
+fn run_measured(
+    meta: &Meta,
+    tape: TapeStorage,
+    gamma: f32,
+    steps: usize,
+) -> anyhow::Result<(Vec<u32>, u64, u64, f64, f64, Vec<Json>)> {
+    let mut t = NativeTrainer::new(meta.clone(), 7)?.with_tape(tape);
+    let mut losses = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let (x, y) = batch_for(meta, 100 + s as u64);
+        let out = t.step(&x, &y, gamma, 0.05)?;
+        losses.push(out.loss.to_bits());
+    }
+    let mem = t.tape_memory();
+    let rows = mem
+        .allocs()
+        .iter()
+        .map(|a| {
+            obj(vec![
+                ("unit", Json::Num(a.unit as f64)),
+                ("part", Json::Str(a.part.to_string())),
+                ("elems", Json::Num(a.elems as f64)),
+                ("sparsity", Json::Num(a.sparsity())),
+                ("dense_bytes", Json::Num(a.dense_bytes as f64)),
+                ("stored_bytes", Json::Num(a.stored_bytes as f64)),
+            ])
+        })
+        .collect();
+    Ok((
+        losses,
+        mem.peak(),
+        mem.dense_peak(),
+        mem.act_reduction(),
+        mem.act_sparsity(),
+        rows,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
     dsg::benchutil::header(
         "Fig 6",
-        "memory footprint, training and inference, ZVC-compressed",
+        "memory footprint: MEASURED ZVC training tape + analytic model",
         "avg 1.7x (50%), 3.2x (80%), 4.2x (90%) training; acts up to 7.1x; infer <= 1.7x",
     );
+    let smoke = std::env::var("DSG_FIG6_SMOKE").is_ok();
+    let spec = measured_spec(smoke);
+    let meta = zoo::synth_meta(&spec)?;
+    let steps = 2;
+    println!(
+        "\n=== measured: {} (batch {}, {} steps/config{}) ===",
+        meta.name,
+        meta.batch,
+        steps,
+        if smoke { ", smoke" } else { "" }
+    );
+    println!(
+        "{:>6} {:>12} {:>12} {:>8} {:>8} {:>10}",
+        "gamma", "dense-peak", "zvc-peak", "tape-x", "act-x", "act-sprs"
+    );
+    let mut gamma_objs = Vec::new();
+    let mut ratio_at = std::collections::BTreeMap::new();
+    for &gamma in &[0.0f32, 0.5, 0.8] {
+        let (dl, dense_peak, dense_dense, _, _, _) =
+            run_measured(&meta, TapeStorage::Dense, gamma, steps)?;
+        let (zl, zvc_peak, zvc_dense, act_x, act_s, rows) =
+            run_measured(&meta, TapeStorage::Zvc, gamma, steps)?;
+        // ZVC is lossless: the two tapes must train IDENTICALLY
+        assert_eq!(dl, zl, "gamma {gamma}: zvc tape diverged from dense tape");
+        // and the ZVC run's dense-equivalent accounting must equal what
+        // the dense run actually peaked at (same records, same shapes)
+        assert_eq!(
+            dense_peak, zvc_dense,
+            "gamma {gamma}: dense-equivalent accounting disagrees"
+        );
+        assert_eq!(dense_peak, dense_dense, "dense tape must store at dense cost");
+        let ratio = dense_peak as f64 / zvc_peak.max(1) as f64;
+        ratio_at.insert((gamma * 100.0) as u32, ratio);
+        println!(
+            "{:>6.2} {:>12} {:>12} {:>7.2}x {:>7.2}x {:>9.2}%",
+            gamma,
+            human_bytes(dense_peak),
+            human_bytes(zvc_peak),
+            ratio,
+            act_x,
+            100.0 * act_s
+        );
+        gamma_objs.push(obj(vec![
+            ("gamma", Json::Num(gamma as f64)),
+            ("dense_peak_bytes", Json::Num(dense_peak as f64)),
+            ("zvc_peak_bytes", Json::Num(zvc_peak as f64)),
+            ("reduction", Json::Num(ratio)),
+            ("act_reduction", Json::Num(act_x)),
+            ("act_sparsity", Json::Num(act_s)),
+            ("records", Json::Arr(rows)),
+        ]));
+    }
+    let r0 = ratio_at[&0];
+    let r50 = ratio_at[&50];
+    let r80 = ratio_at[&80];
+    println!(
+        "measured tape reduction: {r0:.2}x @ gamma 0, {r50:.2}x @ 0.5, {r80:.2}x @ 0.8"
+    );
+    // the acceptance gates: real savings at the paper's operating point,
+    // growing with gamma exactly as the analytic model predicts
+    if smoke {
+        assert!(r50 > 1.0, "smoke: ZVC must beat dense at gamma 0.5 (got {r50:.3})");
+    } else {
+        assert!(r50 >= 1.5, "ZVC/dense must clear 1.5x at gamma 0.5 (got {r50:.3})");
+    }
+    assert!(
+        r80 > r50 && r50 > r0,
+        "reduction must grow with gamma ({r0:.3} / {r50:.3} / {r80:.3})"
+    );
+
+    // ---------------- analytic section (paper shapes) ----------------
+    let mut analytic_objs = Vec::new();
     for &sp in &[0.5f64, 0.8, 0.9] {
-        println!("\n--- activation sparsity {:.0}% ---", sp * 100.0);
+        println!("\n--- analytic, activation sparsity {:.0}% ---", sp * 100.0);
         println!(
             "{:<10} {:>6} {:>11} {:>11} {:>11} {:>8} {:>7} {:>11} {:>11} {:>8}",
             "model", "batch", "tr-dense", "tr-dsg", "weights", "train-x", "act-x",
@@ -40,11 +216,16 @@ fn main() {
                 m.infer_reduction()
             );
         }
+        let avg = avg_train / nets.len() as f64;
         println!(
             "average train reduction {:.2}x, total saved {} (paper: 1.7x/2.72GB @50, 3.2x/4.51GB @80, 4.2x/5.04GB @90)",
-            avg_train / nets.len() as f64,
+            avg,
             human_bytes(saved / nets.len() as u64)
         );
+        analytic_objs.push(obj(vec![
+            ("sparsity", Json::Num(sp)),
+            ("avg_train_reduction", Json::Num(avg)),
+        ]));
     }
     // mask overhead + the ResNet152 inference caveat (§3.3)
     println!("\nmask overhead (vs dense train footprint, paper '<2%'):");
@@ -52,4 +233,24 @@ fn main() {
         let m = memmodel::memory(&net, 0.8);
         println!("  {:<10} {:.2}%", net.name, 100.0 * m.mask_frac());
     }
+
+    let report = obj(vec![
+        ("bench", Json::Str("fig6_memory".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "measured",
+            obj(vec![
+                ("model", Json::Str(meta.name.clone())),
+                ("batch", Json::Num(meta.batch as f64)),
+                ("steps", Json::Num(steps as f64)),
+                ("gammas", Json::Arr(gamma_objs)),
+            ]),
+        ),
+        ("analytic", Json::Arr(analytic_objs)),
+    ]);
+    let out_path = std::env::var("DSG_BENCH_OUT").unwrap_or_else(|_| "BENCH_memory.json".into());
+    std::fs::write(&out_path, report.to_string())?;
+    println!("\nwrote {out_path}");
+    println!("fig6_memory OK (zvc tape bit-identical, measured reduction gates passed)");
+    Ok(())
 }

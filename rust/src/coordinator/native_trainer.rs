@@ -10,8 +10,8 @@ use crate::config::RunConfig;
 use crate::coordinator::init::ModelState;
 use crate::coordinator::trainer::{run_training, StepOut, TrainBackend};
 use crate::datasets::{BatchIter, Dataset};
-use crate::metrics::History;
-use crate::native::train::TrainEngine;
+use crate::metrics::{History, MemoryMeter};
+use crate::native::train::{TapeStorage, TrainEngine};
 use crate::native::{self, Mode};
 use crate::runtime::Meta;
 use anyhow::Result;
@@ -60,6 +60,19 @@ impl NativeTrainer {
     pub fn with_threads(mut self, threads: usize) -> NativeTrainer {
         self.engine = self.engine.with_threads(threads);
         self
+    }
+
+    /// Select the training-tape storage (`--tape zvc`): ZVC-compress the
+    /// taped activations, decompressing on demand in the backward.
+    /// Training is bit-identical to the dense tape — ZVC is lossless.
+    pub fn with_tape(mut self, tape: TapeStorage) -> NativeTrainer {
+        self.engine = self.engine.with_tape(tape);
+        self
+    }
+
+    /// Measured tape memory of the most recent training step.
+    pub fn tape_memory(&self) -> &MemoryMeter {
+        self.engine.memory()
     }
 
     /// Force dense (keep-all mask) execution — the convergence baseline.

@@ -116,6 +116,14 @@ impl RowMask {
         self.idx.len()
     }
 
+    /// Heap bytes this mask holds (index list + offsets) — what the
+    /// training-tape [`crate::metrics::MemoryMeter`] charges for the
+    /// taped selection, the measured twin of the paper's "mask
+    /// overhead" term in `memmodel`.
+    pub fn nbytes(&self) -> usize {
+        4 * self.idx.len() + std::mem::size_of::<usize>() * self.offsets.len()
+    }
+
     /// Fraction of selected entries — the measured 1-gamma.
     pub fn density(&self) -> f64 {
         let total = self.rows * self.width;
@@ -444,6 +452,18 @@ mod tests {
         c.fill_full(0, 0);
         assert_eq!(c.rows(), 0);
         assert!(!c.is_full());
+    }
+
+    #[test]
+    fn rowmask_nbytes_tracks_selection() {
+        let mut rng = Pcg32::seeded(52);
+        let v = randn(&mut rng, &[4, 64]);
+        let full = select_rowmask(&v, 0.0);
+        let half = select_rowmask(&v, 0.5);
+        let word = std::mem::size_of::<usize>();
+        assert_eq!(full.nbytes(), 4 * 4 * 64 + word * 5);
+        assert_eq!(half.nbytes(), 4 * half.selected() + word * 5);
+        assert!(half.nbytes() < full.nbytes());
     }
 
     #[test]

@@ -74,11 +74,15 @@ USAGE: dsg <command> [--flags]
 COMMANDS:
   train    --model NAME [--engine artifact|native] [--gamma G] [--steps N]
            [--lr F] [--warmup N] [--refresh N] [--seed N] [--batch N]
-           [--threads N] [--config FILE] [--csv FILE] [--checkpoint FILE]
+           [--threads N] [--tape dense|zvc] [--config FILE] [--csv FILE]
+           [--checkpoint FILE]
            `--engine native` (models: mlp, lenet, vgg8, vgg8s, resnet8,
            wrn8_2, each also as NAME_dense) trains entirely on the
            host-side engine: no PJRT, no artifacts — Algorithm 1 with
            DSG masks applied to activations AND gradients.
+           `--tape zvc` stores the training tape ZVC-compressed
+           (bit-identical results, Fig 6 memory saving — measured peak
+           tape bytes are reported after the run).
   eval     --model NAME --checkpoint FILE [--gamma G]
   info     [--model NAME]         artifact inventory / variant detail
   memory   [--gamma G]            Fig 6 representational-cost report
@@ -142,7 +146,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             // these knobs only exist natively; the artifact batch shape
             // is baked into the HLO — ignoring them would silently run
             // something other than what was asked for
-            for flag in ["batch", "threads"] {
+            for flag in ["batch", "threads", "tape"] {
                 anyhow::ensure!(
                     args.get(flag).is_none(),
                     "--{flag} requires --engine native (the artifact batch/threading \
@@ -175,7 +179,34 @@ fn cmd_train(args: &Args) -> Result<()> {
         if let Some(t) = args.get_usize("threads")? {
             trainer = trainer.with_threads(t.max(1));
         }
+        if let Some(t) = args.get("tape") {
+            let tape = native::train::TapeStorage::parse(t)
+                .ok_or_else(|| anyhow::anyhow!("unknown --tape {t:?} (dense | zvc)"))?;
+            trainer = trainer.with_tape(tape);
+        }
         let acc = trainer.train(&cfg, &train, &test)?;
+        // measured training-tape footprint of the final step (Fig 6 made
+        // real: peak bytes the backward actually needed, vs dense)
+        let mem = trainer.tape_memory();
+        if mem.peak() > 0 {
+            // sparsity is only measured on the ZVC tape (the dense tape
+            // deliberately skips the counting sweep)
+            let acts = if mem.act_reduction() > 1.0 {
+                format!(
+                    " (acts {:.2}x at {:.0}% measured sparsity)",
+                    mem.act_reduction(),
+                    100.0 * mem.act_sparsity()
+                )
+            } else {
+                String::new()
+            };
+            println!(
+                "tape memory (last step): peak {} vs dense {} -> {:.2}x{acts}",
+                dsg::util::human_bytes(mem.peak()),
+                dsg::util::human_bytes(mem.dense_peak()),
+                mem.reduction()
+            );
+        }
         // per-layer density report: the paper's 1-gamma tracking
         let dens = trainer.history.mean_densities(20);
         if !dens.is_empty() {

@@ -1,0 +1,223 @@
+//! Measured training-tape memory accounting — §3.3 / Fig 6 made real.
+//!
+//! The analytic model ([`crate::memmodel::memory`]) PREDICTS the
+//! training footprint from shapes and a sparsity; this meter MEASURES
+//! it: the native training engine reports every tape record it stashes
+//! during the forward ([`MemoryMeter::alloc`]) and every record it
+//! releases as the backward walk consumes it ([`MemoryMeter::free`]),
+//! so `peak()` is the real high-water mark of tape bytes for the step
+//! and `dense_peak()` is what the same tape would have cost stored
+//! dense.  The cross-check the tests pin down: a ZVC-stored activation's
+//! `stored_bytes` equals `zvc::zvc_bytes_nnz(elems, nnz)` exactly, and
+//! the dense/ZVC ratio moves with gamma the way `memmodel` predicts.
+
+/// One taped buffer, as the engine accounted it.
+#[derive(Clone, Debug)]
+pub struct TapeAlloc {
+    /// Unit index in the forward topology.
+    pub unit: usize,
+    /// Which buffer of the unit: "x" (unit input), "s"/"s1"/"s2"
+    /// (post-relu pre-BN activations), "mask" (DRS selection), "bn"
+    /// (taped batch statistics), "idx" (maxpool argmax routes).
+    pub part: &'static str,
+    /// f32 (or u32 for "idx") element count.
+    pub elems: usize,
+    /// Non-zero elements.  == `elems` for non-activation parts AND for
+    /// unmeasured activation records: a dense-tape run deliberately
+    /// skips the counting sweep, so only ZVC-tape runs (where the count
+    /// is a byproduct of the store decision) report real sparsity.
+    pub nnz: usize,
+    /// Bytes a dense store of this buffer costs.
+    pub dense_bytes: u64,
+    /// Bytes actually held on the tape.
+    pub stored_bytes: u64,
+}
+
+impl TapeAlloc {
+    /// Is this an activation record (the ZVC-compressible kind)?
+    pub fn is_act(&self) -> bool {
+        matches!(self.part, "x" | "s" | "s1" | "s2" | "h1")
+    }
+
+    /// Measured zero fraction of the buffer.
+    pub fn sparsity(&self) -> f64 {
+        if self.elems == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz as f64 / self.elems as f64
+    }
+}
+
+/// Live/peak tape-byte tracking for one training step, with the
+/// per-record breakdown kept for reporting and cross-checks.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryMeter {
+    live: u64,
+    peak: u64,
+    allocs: Vec<TapeAlloc>,
+}
+
+impl MemoryMeter {
+    pub fn new() -> MemoryMeter {
+        MemoryMeter::default()
+    }
+
+    /// Forget the previous step (capacity reused).
+    pub fn reset(&mut self) {
+        self.live = 0;
+        self.peak = 0;
+        self.allocs.clear();
+    }
+
+    /// Record one tape record coming live during the forward.
+    pub fn alloc(&mut self, a: TapeAlloc) {
+        self.live += a.stored_bytes;
+        self.peak = self.peak.max(self.live);
+        self.allocs.push(a);
+    }
+
+    /// Record tape bytes released by the backward walk.
+    pub fn free(&mut self, stored_bytes: u64) {
+        self.live = self.live.saturating_sub(stored_bytes);
+    }
+
+    /// Release every record of `unit`, as it was recorded at alloc time
+    /// — the free side cannot drift from the alloc side because it IS
+    /// the alloc side.
+    pub fn free_unit(&mut self, unit: usize) {
+        let bytes: u64 = self
+            .allocs
+            .iter()
+            .filter(|a| a.unit == unit)
+            .map(|a| a.stored_bytes)
+            .sum();
+        self.free(bytes);
+    }
+
+    /// Tape bytes currently live.
+    pub fn live(&self) -> u64 {
+        self.live
+    }
+
+    /// High-water mark of tape bytes this step (every record is live at
+    /// the forward/backward turnover, so this is the training-memory
+    /// number Fig 6 is about).
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Every record of the step, in forward (allocation) order.
+    pub fn allocs(&self) -> &[TapeAlloc] {
+        &self.allocs
+    }
+
+    /// What the same tape would have peaked at stored dense.
+    pub fn dense_peak(&self) -> u64 {
+        self.allocs.iter().map(|a| a.dense_bytes).sum()
+    }
+
+    /// Peak bytes of the activation records only (dense, stored).
+    pub fn act_bytes(&self) -> (u64, u64) {
+        let mut dense = 0u64;
+        let mut stored = 0u64;
+        for a in self.allocs.iter().filter(|a| a.is_act()) {
+            dense += a.dense_bytes;
+            stored += a.stored_bytes;
+        }
+        (dense, stored)
+    }
+
+    /// Measured dense/stored reduction at peak (> 1 means the
+    /// compressed tape won); 1.0 for an empty meter.
+    pub fn reduction(&self) -> f64 {
+        if self.peak == 0 {
+            return 1.0;
+        }
+        self.dense_peak() as f64 / self.peak as f64
+    }
+
+    /// Activation-only reduction (the paper's "up to 7.1x" axis).
+    pub fn act_reduction(&self) -> f64 {
+        let (dense, stored) = self.act_bytes();
+        if stored == 0 {
+            return 1.0;
+        }
+        dense as f64 / stored as f64
+    }
+
+    /// Measured zero fraction over all activation records.
+    pub fn act_sparsity(&self) -> f64 {
+        let mut elems = 0usize;
+        let mut nnz = 0usize;
+        for a in self.allocs.iter().filter(|a| a.is_act()) {
+            elems += a.elems;
+            nnz += a.nnz;
+        }
+        if elems == 0 {
+            return 0.0;
+        }
+        1.0 - nnz as f64 / elems as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn act(unit: usize, elems: usize, nnz: usize, stored: u64) -> TapeAlloc {
+        TapeAlloc { unit, part: "s", elems, nnz, dense_bytes: 4 * elems as u64, stored_bytes: stored }
+    }
+
+    #[test]
+    fn live_peak_and_reduction() {
+        let mut m = MemoryMeter::new();
+        m.alloc(act(0, 100, 50, 213));
+        m.alloc(act(1, 100, 100, 400));
+        m.alloc(TapeAlloc {
+            unit: 1,
+            part: "mask",
+            elems: 100,
+            nnz: 100,
+            dense_bytes: 50,
+            stored_bytes: 50,
+        });
+        assert_eq!(m.live(), 663);
+        assert_eq!(m.peak(), 663);
+        assert_eq!(m.dense_peak(), 850);
+        m.free(400);
+        assert_eq!(m.live(), 263);
+        assert_eq!(m.peak(), 663, "peak survives frees");
+        assert!((m.reduction() - 850.0 / 663.0).abs() < 1e-12);
+        let (ad, astored) = m.act_bytes();
+        assert_eq!((ad, astored), (800, 613));
+        assert!((m.act_sparsity() - 0.25).abs() < 1e-12);
+        m.reset();
+        assert_eq!(m.peak(), 0);
+        assert_eq!(m.reduction(), 1.0);
+        assert!(m.allocs().is_empty());
+    }
+
+    #[test]
+    fn free_unit_releases_exactly_what_was_allocated() {
+        let mut m = MemoryMeter::new();
+        m.alloc(act(0, 100, 50, 213));
+        m.alloc(act(0, 64, 64, 256)); // second record of the same unit
+        m.alloc(act(1, 100, 100, 400));
+        assert_eq!(m.peak(), 869);
+        m.free_unit(1);
+        assert_eq!(m.live(), 469);
+        m.free_unit(0);
+        assert_eq!(m.live(), 0, "free side derives from the alloc records");
+        m.free_unit(7); // unknown unit: no records, no-op
+        assert_eq!(m.live(), 0);
+    }
+
+    #[test]
+    fn sparsity_per_alloc() {
+        let a = act(3, 200, 50, 0);
+        assert!((a.sparsity() - 0.75).abs() < 1e-12);
+        assert!(a.is_act());
+        let empty = act(0, 0, 0, 0);
+        assert_eq!(empty.sparsity(), 0.0);
+    }
+}

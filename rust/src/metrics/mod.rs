@@ -2,8 +2,10 @@
 //! CSV/JSONL writers.
 
 pub mod hist;
+pub mod memory;
 
 pub use hist::LatencyHistogram;
+pub use memory::{MemoryMeter, TapeAlloc};
 
 use std::io::Write;
 

@@ -29,14 +29,27 @@
 //! backward sums, bias grads) accumulate in f64.  `Mode::Dense` runs the
 //! identical kernels under a keep-all mask, which is what makes the
 //! gamma = 0 DSG step bit-identical to the dense baseline.
+//!
+//! TAPE STORAGE (§3.3, Fig 6): the paper's training-memory claim is that
+//! stashed activations dominate the footprint and that ZVC compression
+//! recovers most of it.  [`TapeStorage::Zvc`] makes that real here:
+//! every taped activation that is sparse (post-ReLU / post-double-mask)
+//! is stored as a [`crate::zvc::Compressed`] record and decompressed on
+//! demand into a scratch buffer reused across the backward walk.  ZVC is
+//! lossless, so compressed-tape training is BIT-IDENTICAL to dense-tape
+//! training (asserted in `tests/native_train.rs`), and the
+//! [`crate::metrics::MemoryMeter`] records measured live/peak tape bytes
+//! per record so the Fig 6 saving is a number we measure, not just model.
 
 use crate::coordinator::ModelState;
 use crate::drs::projection::TernaryIndex;
 use crate::drs::topk::RowMask;
+use crate::metrics::{MemoryMeter, TapeAlloc};
 use crate::native::{to_tensor, Carry, Mode, NativeModel};
 use crate::runtime::{Meta, Unit};
 use crate::sparse::parallel;
 use crate::tensor::ops;
+use crate::zvc;
 use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
 
@@ -54,6 +67,134 @@ pub struct TrainOut {
     pub acc: f32,
     /// measured mask density per DSG layer, in dsg order
     pub densities: Vec<f32>,
+}
+
+/// How the training tape stores activations (§3.3): raw f32 buffers or
+/// ZVC-compressed records with on-demand decompression in the backward
+/// pass.  ZVC is lossless, so the two are bit-identical; `Zvc` trades
+/// one compress + one decompress sweep per taped activation for the
+/// Fig 6 memory saving.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TapeStorage {
+    /// Tape raw f32 buffers (the baseline the paper compares against).
+    #[default]
+    Dense,
+    /// ZVC-compress sparse (post-ReLU / post-mask) activations.
+    Zvc,
+}
+
+impl TapeStorage {
+    pub fn parse(s: &str) -> Option<TapeStorage> {
+        match s {
+            "dense" => Some(TapeStorage::Dense),
+            "zvc" => Some(TapeStorage::Zvc),
+            _ => None,
+        }
+    }
+}
+
+/// A taped activation: raw, or ZVC-compressed when the tape runs in
+/// [`TapeStorage::Zvc`] and the encoding actually wins.  The raw
+/// variant carries the nnz count when the store path already computed
+/// it, so the meter never re-scans what was scanned once.
+pub(crate) enum TapedAct {
+    Dense(Vec<f32>, Option<usize>),
+    Zvc(zvc::Compressed),
+}
+
+impl TapedAct {
+    /// The ONE store decision, shared by [`TapedAct::store`] and
+    /// [`TapedAct::store_ref`]: in Zvc mode, compress where the encoding
+    /// wins (post-ReLU / post-mask activations) — the codec's own
+    /// bitmask + count pass doubles as the decision, so no separate nnz
+    /// pre-scan runs; a dense tensor (the input image, a GAP output)
+    /// stays raw, with the measured count kept for the meter.  In Dense
+    /// mode nothing is scanned (`Err(None)` = "unmeasured").
+    fn try_zvc(
+        xs: &[f32],
+        storage: TapeStorage,
+        threads: usize,
+    ) -> Result<zvc::Compressed, Option<usize>> {
+        if storage != TapeStorage::Zvc {
+            return Err(None);
+        }
+        let mut c = zvc::Compressed::new();
+        match zvc::compress_parallel_into_if_smaller(xs, threads, &mut c) {
+            Ok(_) => Ok(c),
+            Err(nnz) => Err(Some(nnz)),
+        }
+    }
+
+    /// Tape an owned buffer under `storage`.  Lossless either way: the
+    /// backward sees identical bits.
+    fn store(xs: Vec<f32>, storage: TapeStorage, threads: usize) -> TapedAct {
+        match Self::try_zvc(&xs, storage, threads) {
+            Ok(c) => TapedAct::Zvc(c),
+            Err(nnz) => TapedAct::Dense(xs, nnz),
+        }
+    }
+
+    /// [`TapedAct::store`] from a borrowed slice: in Zvc mode the codec
+    /// reads straight from the forward buffer (no transient dense clone
+    /// — the clone would be a real, unmetered memory peak); only a
+    /// raw-stored record copies.
+    fn store_ref(xs: &[f32], storage: TapeStorage, threads: usize) -> TapedAct {
+        match Self::try_zvc(xs, storage, threads) {
+            Ok(c) => TapedAct::Zvc(c),
+            Err(nnz) => TapedAct::Dense(xs.to_vec(), nnz),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            TapedAct::Dense(v, _) => v.len(),
+            TapedAct::Zvc(c) => c.n,
+        }
+    }
+
+    /// Non-zero count where it is already known — compressed records
+    /// and Zvc-mode raw records (cached from the store decision).
+    /// `None` for dense-tape records: measuring them would cost the
+    /// very scan the dense baseline is supposed to be free of.
+    fn nnz_hint(&self) -> Option<usize> {
+        match self {
+            TapedAct::Dense(_, cached) => *cached,
+            TapedAct::Zvc(c) => Some(c.nnz()),
+        }
+    }
+
+    fn dense_nbytes(&self) -> usize {
+        4 * self.len()
+    }
+
+    /// Bytes this record actually holds on the tape.
+    fn stored_nbytes(&self) -> usize {
+        match self {
+            TapedAct::Dense(v, _) => 4 * v.len(),
+            TapedAct::Zvc(c) => c.nbytes(),
+        }
+    }
+
+    /// View densely, decompressing into `scratch` when compressed (the
+    /// scratch is reused across units in the backward walk).
+    fn slice<'a>(&'a self, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        match self {
+            TapedAct::Dense(v, _) => v,
+            TapedAct::Zvc(c) => {
+                zvc::decompress_into(c, scratch);
+                scratch
+            }
+        }
+    }
+}
+
+/// Decompression scratch for the backward walk: one buffer for the
+/// unit-input activation, one for the post-relu tape (both can be live
+/// at once inside a layer backward).  Reused across units and steps.
+#[derive(Default)]
+struct TapeDecode {
+    x: Vec<f32>,
+    s: Vec<f32>,
 }
 
 /// Static shape of one conv application.
@@ -96,8 +237,10 @@ struct RowsTape {
     w_name: String,
     /// BN leaf path ("3" / "5.bn1"); None when the model runs without BN
     bn_path: Option<String>,
-    /// post-relu, pre-BN activations (m, n) — relu' and BN backward input
-    s: Vec<f32>,
+    /// post-relu, pre-BN activations (m, n) — relu' and BN backward
+    /// input; ZVC-compressed under [`TapeStorage::Zvc`] (it is the
+    /// sparsest tensor on the tape: mask zeros + ReLU zeros)
+    s: TapedAct,
     mask: RowMask,
     /// statistics the forward normalized with (batch stats in training)
     mean: Vec<f32>,
@@ -108,14 +251,15 @@ struct RowsTape {
 
 /// Per-unit tape record; `x` is the activation that ENTERED the unit
 /// (moved in, not copied — the forward hands each carry buffer to the
-/// tape and continues on the unit's output buffer).
+/// tape and continues on the unit's output buffer), stored per the
+/// engine's [`TapeStorage`].
 enum UnitTape {
     Dense {
-        x: Vec<f32>,
+        x: TapedAct,
         rt: RowsTape,
     },
     Classifier {
-        x: Vec<f32>,
+        x: TapedAct,
         m: usize,
         d: usize,
         c: usize,
@@ -123,7 +267,7 @@ enum UnitTape {
         b_name: String,
     },
     Conv {
-        x: Vec<f32>,
+        x: TapedAct,
         dims: (usize, usize, usize, usize),
         cs: ConvShape,
         p: usize,
@@ -131,10 +275,10 @@ enum UnitTape {
         rt: RowsTape,
     },
     Residual {
-        x: Vec<f32>,
+        x: TapedAct,
         dims: (usize, usize, usize, usize),
         /// conv1's NCHW output (conv2's input)
-        h1: Vec<f32>,
+        h1: TapedAct,
         cs1: ConvShape,
         p1: usize,
         q1: usize,
@@ -166,6 +310,80 @@ fn rts_of(ut: &UnitTape) -> Vec<&RowsTape> {
     }
 }
 
+// ---------------------------------------------------------------------
+// tape memory accounting
+// ---------------------------------------------------------------------
+
+fn meter_act(meter: &mut MemoryMeter, unit: usize, part: &'static str, a: &TapedAct) {
+    meter.alloc(TapeAlloc {
+        unit,
+        part,
+        elems: a.len(),
+        // nnz == elems means "not measured" (dense-tape runs skip the
+        // counting sweep); Zvc runs always know the exact count
+        nnz: a.nnz_hint().unwrap_or_else(|| a.len()),
+        dense_bytes: a.dense_nbytes() as u64,
+        stored_bytes: a.stored_nbytes() as u64,
+    });
+}
+
+/// Per-rows-layer tape bytes: the activation record, the taped RowMask
+/// (identical in both storage modes — selection state, the measured twin
+/// of `memmodel`'s mask term), and the taped BN batch statistics.
+fn meter_rows(meter: &mut MemoryMeter, unit: usize, part: &'static str, rt: &RowsTape) {
+    meter_act(meter, unit, part, &rt.s);
+    let mask_bytes = rt.mask.nbytes() as u64;
+    meter.alloc(TapeAlloc {
+        unit,
+        part: "mask",
+        elems: rt.m * rt.n,
+        nnz: rt.mask.selected(),
+        dense_bytes: mask_bytes,
+        stored_bytes: mask_bytes,
+    });
+    let bn_elems = rt.mean.len() + rt.var.len() + rt.invstd.len();
+    if bn_elems > 0 {
+        meter.alloc(TapeAlloc {
+            unit,
+            part: "bn",
+            elems: bn_elems,
+            nnz: bn_elems,
+            dense_bytes: 4 * bn_elems as u64,
+            stored_bytes: 4 * bn_elems as u64,
+        });
+    }
+}
+
+/// Record every tape buffer of one unit with the meter (forward side).
+fn meter_unit(meter: &mut MemoryMeter, unit: usize, ut: &UnitTape) {
+    match ut {
+        UnitTape::Dense { x, rt } => {
+            meter_act(meter, unit, "x", x);
+            meter_rows(meter, unit, "s", rt);
+        }
+        UnitTape::Classifier { x, .. } => meter_act(meter, unit, "x", x),
+        UnitTape::Conv { x, rt, .. } => {
+            meter_act(meter, unit, "x", x);
+            meter_rows(meter, unit, "s", rt);
+        }
+        UnitTape::Residual { x, h1, rt1, rt2, .. } => {
+            meter_act(meter, unit, "x", x);
+            meter_act(meter, unit, "h1", h1);
+            meter_rows(meter, unit, "s1", rt1);
+            meter_rows(meter, unit, "s2", rt2);
+        }
+        UnitTape::MaxPool { idx, .. } => meter.alloc(TapeAlloc {
+            unit,
+            part: "idx",
+            elems: idx.len(),
+            nnz: idx.len(),
+            dense_bytes: 4 * idx.len() as u64,
+            stored_bytes: 4 * idx.len() as u64,
+        }),
+        UnitTape::Gap { .. } | UnitTape::Flatten => {}
+    }
+}
+
 /// The native training engine for one model topology.  Holds only
 /// immutable per-run structure (leaf index, ternary projection index
 /// lists) plus reusable scratch; ALL mutable training state lives in the
@@ -175,7 +393,10 @@ pub struct TrainEngine {
     index: BTreeMap<String, usize>,
     ridx: Vec<TernaryIndex>,
     threads: usize,
+    tape: TapeStorage,
     scratch: Scratch,
+    dec: TapeDecode,
+    meter: MemoryMeter,
 }
 
 impl TrainEngine {
@@ -225,7 +446,10 @@ impl TrainEngine {
             index,
             ridx,
             threads: 1,
+            tape: TapeStorage::default(),
             scratch: Scratch::default(),
+            dec: TapeDecode::default(),
+            meter: MemoryMeter::new(),
         })
     }
 
@@ -234,6 +458,24 @@ impl TrainEngine {
     pub fn with_threads(mut self, threads: usize) -> TrainEngine {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Select the tape storage (see [`TapeStorage`]); training results
+    /// are bit-identical either way — ZVC is lossless.
+    pub fn with_tape(mut self, tape: TapeStorage) -> TrainEngine {
+        self.tape = tape;
+        self
+    }
+
+    /// The active tape storage.
+    pub fn tape_storage(&self) -> TapeStorage {
+        self.tape
+    }
+
+    /// Measured tape memory of the most recent [`TrainEngine::train_step`]
+    /// (live/peak bytes plus the per-record breakdown).
+    pub fn memory(&self) -> &MemoryMeter {
+        &self.meter
     }
 
     /// The execution mode this meta trains under.
@@ -310,6 +552,7 @@ impl TrainEngine {
         sample0_rows: usize,
         mode: Mode,
         train: bool,
+        storage: TapeStorage,
         drs: &mut DrsScratch,
         out: &mut Vec<f32>,
     ) -> Result<RowsTape> {
@@ -335,13 +578,19 @@ impl TrainEngine {
         out.resize(m * n, 0.0);
         parallel::dsg_vmm_rowmask_parallel_into(x, m, d, wt, n, &mask, t, out);
         ops::relu_slice(out);
-        // `out` holds s (post-relu, pre-BN) right now; only training
-        // needs it taped for the backward — eval tapes are discarded
-        let s = if train { out.clone() } else { Vec::new() };
+        // `out` holds s (post-relu, pre-BN) right now: tape it BEFORE
+        // BN mutates the buffer.  Only training needs the tape; in Zvc
+        // mode the codec reads straight from `out` — no dense clone.
+        // (`storage` arrives pre-gated by forward_pass: Dense for eval.)
+        let s = if train {
+            TapedAct::store_ref(out, storage, t)
+        } else {
+            TapedAct::Dense(Vec::new(), None)
+        };
         let (mut mean, mut var, mut invstd) = (Vec::new(), Vec::new(), Vec::new());
         if let Some(path) = &bn_path {
             if train {
-                batch_stats(&s, m, n, &mut mean, &mut var);
+                batch_stats(out, m, n, &mut mean, &mut var);
             } else {
                 mean = self.getf(state, &format!("bn_state.{path}.mean"))?.to_vec();
                 var = self.getf(state, &format!("bn_state.{path}.var"))?.to_vec();
@@ -385,6 +634,7 @@ impl TrainEngine {
         gamma: f32,
         mode: Mode,
         train: bool,
+        storage: TapeStorage,
         scr: &mut Scratch,
         out_nchw: &mut Vec<f32>,
     ) -> Result<(RowsTape, usize, usize)> {
@@ -408,6 +658,7 @@ impl TrainEngine {
             p * q,
             mode,
             train,
+            storage,
             drs,
             &mut y,
         )?;
@@ -429,6 +680,7 @@ impl TrainEngine {
         train: bool,
         scr: &mut Scratch,
         tape: &mut Vec<UnitTape>,
+        meter: &mut MemoryMeter,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         ensure!(
             x.len() == m * self.meta.input_elems(),
@@ -437,6 +689,8 @@ impl TrainEngine {
             m,
             self.meta.input_elems()
         );
+        // eval tapes are discarded unread: never pay for compression there
+        let st = if train { self.tape } else { TapeStorage::Dense };
         let is = &self.meta.input_shape;
         let mut carry = match is.len() {
             1 => Carry::Rows(m, is[0]),
@@ -461,11 +715,12 @@ impl TrainEngine {
                     ops::transpose_into(wsl, d, *d_out, wt);
                     let rt = self.rows_layer_forward(
                         state, &h, mm, d, wt, *d_out, &w_name, bn_path, dsg_i, gamma, 1, mode,
-                        train, drs, &mut out,
+                        train, st, drs, &mut out,
                     )?;
                     densities.push(rt.density);
                     dsg_i += 1;
-                    tape.push(UnitTape::Dense { x: std::mem::replace(&mut h, out), rt });
+                    let xt = TapedAct::store(std::mem::replace(&mut h, out), st, self.threads);
+                    tape.push(UnitTape::Dense { x: xt, rt });
                     carry = Carry::Rows(mm, *d_out);
                 }
                 Unit::Classifier { d_in, d_out } => {
@@ -485,7 +740,7 @@ impl TrainEngine {
                         }
                     }
                     tape.push(UnitTape::Classifier {
-                        x: std::mem::replace(&mut h, out),
+                        x: TapedAct::store(std::mem::replace(&mut h, out), st, self.threads),
                         m: mm,
                         d,
                         c: *d_out,
@@ -514,13 +769,14 @@ impl TrainEngine {
                         gamma,
                         mode,
                         train,
+                        st,
                         scr,
                         &mut out,
                     )?;
                     densities.push(rt.density);
                     dsg_i += 1;
                     tape.push(UnitTape::Conv {
-                        x: std::mem::replace(&mut h, out),
+                        x: TapedAct::store(std::mem::replace(&mut h, out), st, self.threads),
                         dims: (nb, c, hh, ww),
                         cs,
                         p,
@@ -549,6 +805,7 @@ impl TrainEngine {
                         gamma,
                         mode,
                         train,
+                        st,
                         scr,
                         &mut h1,
                     )?;
@@ -567,6 +824,7 @@ impl TrainEngine {
                         gamma,
                         mode,
                         train,
+                        st,
                         scr,
                         &mut h2,
                     )?;
@@ -598,9 +856,9 @@ impl TrainEngine {
                         }
                     }
                     tape.push(UnitTape::Residual {
-                        x: std::mem::replace(&mut h, h2),
+                        x: TapedAct::store(std::mem::replace(&mut h, h2), st, self.threads),
                         dims: (nb, c, hh, ww),
-                        h1,
+                        h1: TapedAct::store(h1, st, self.threads),
                         cs1,
                         p1,
                         q1,
@@ -658,6 +916,13 @@ impl TrainEngine {
             mm == m && c == self.meta.classes,
             "forward produced shape [{mm}, {c}]"
         );
+        if train {
+            // everything taped is live at the forward/backward turnover:
+            // this is the peak the memory claim is about
+            for (i, ut) in tape.iter().enumerate() {
+                meter_unit(meter, i, ut);
+            }
+        }
         Ok((h, densities))
     }
 
@@ -672,7 +937,8 @@ impl TrainEngine {
     ) -> Result<Vec<f32>> {
         let mut scr = std::mem::take(&mut self.scratch);
         let mut tape = Vec::new();
-        let r = self.forward_pass(state, x, m, gamma, mode, false, &mut scr, &mut tape);
+        let mut meter = MemoryMeter::new(); // untouched: eval doesn't meter
+        let r = self.forward_pass(state, x, m, gamma, mode, false, &mut scr, &mut tape, &mut meter);
         self.scratch = scr;
         r.map(|(logits, _)| logits)
     }
@@ -686,6 +952,8 @@ impl TrainEngine {
     /// after the gradients that depend on the old values are computed.
     /// `conv_weight`: the state weight is already (n, d)-transposed
     /// (conv natural layout), so the grad applies without a layout flip.
+    /// `sbuf`: decompress scratch for the post-relu tape (reused across
+    /// units; a no-op view for dense-stored records).
     #[allow(clippy::too_many_arguments)]
     fn rows_layer_backward(
         &self,
@@ -698,22 +966,24 @@ impl TrainEngine {
         gwt_scr: &mut Vec<f32>,
         dx: &mut [f32],
         conv_weight: bool,
+        sbuf: &mut Vec<f32>,
     ) -> Result<()> {
         let (m, d, n) = (rt.m, rt.d, rt.n);
         debug_assert_eq!(dout.len(), m * n);
         debug_assert_eq!(dx.len(), m * d);
+        let s = rt.s.slice(sbuf);
         if let Some(path) = &rt.bn_path {
             if self.meta.double_mask {
                 // forward: out = BN(s) * mask  =>  dBN = dout * mask
                 NativeModel::apply_mask_rows(dout, n, &rt.mask);
             }
             let scale = self.getf(state, &format!("bn.{path}.scale"))?.to_vec();
-            let (gscale, gbias) = bn_backward(dout, &rt.s, &rt.mean, &rt.invstd, &scale, m, n);
-            relu_backward(dout, &rt.s);
+            let (gscale, gbias) = bn_backward(dout, s, &rt.mean, &rt.invstd, &scale, m, n);
+            relu_backward(dout, s);
             self.sgd_update(state, &format!("bn.{path}.scale"), &gscale, lr)?;
             self.sgd_update(state, &format!("bn.{path}.bias"), &gbias, lr)?;
         } else {
-            relu_backward(dout, &rt.s);
+            relu_backward(dout, s);
         }
         {
             let wsl = self.getf(state, &rt.w_name)?;
@@ -755,6 +1025,7 @@ impl TrainEngine {
         dout_nchw: &[f32],
         lr: f32,
         scr: &mut Scratch,
+        sbuf: &mut Vec<f32>,
         dx_nchw: &mut Vec<f32>,
     ) -> Result<()> {
         let (nb, c, hh, ww) = dims;
@@ -766,13 +1037,16 @@ impl TrainEngine {
         nchw_to_rows_into(dout_nchw, nb, kout, p, q, &mut scr.dyr);
         let mut dx_rows = vec![0.0f32; rt.m * rt.d];
         let Scratch { rows, dyr, wt, gwt, .. } = &mut *scr;
-        self.rows_layer_backward(state, rows, dyr, rt, lr, wt, gwt, &mut dx_rows, true)?;
+        self.rows_layer_backward(state, rows, dyr, rt, lr, wt, gwt, &mut dx_rows, true, sbuf)?;
         ops::col2im_slice_into(&dx_rows, nb, c, hh, ww, cs.ksize, cs.stride, cs.pad, dx_nchw);
         Ok(())
     }
 
     /// Backward through one tape unit: returns the gradient wrt the
-    /// unit's input, applying this unit's parameter updates.
+    /// unit's input, applying this unit's parameter updates.  `dec` is
+    /// the shared decompress scratch: compressed tape records are
+    /// expanded into it on demand and the buffers are reused across the
+    /// whole backward walk.
     fn unit_backward(
         &self,
         state: &mut ModelState,
@@ -780,15 +1054,19 @@ impl TrainEngine {
         mut dout: Vec<f32>,
         lr: f32,
         scr: &mut Scratch,
+        dec: &mut TapeDecode,
     ) -> Result<Vec<f32>> {
+        let TapeDecode { x: xbuf, s: sbuf } = dec;
         match ut {
             UnitTape::Dense { x, rt } => {
+                let xs = x.slice(xbuf);
                 let mut dx = vec![0.0f32; rt.m * rt.d];
                 let Scratch { wt, gwt, .. } = &mut *scr;
-                self.rows_layer_backward(state, x, &mut dout, rt, lr, wt, gwt, &mut dx, false)?;
+                self.rows_layer_backward(state, xs, &mut dout, rt, lr, wt, gwt, &mut dx, false, sbuf)?;
                 Ok(dx)
             }
             UnitTape::Classifier { x, m, d, c, w_name, b_name } => {
+                let xs = x.slice(xbuf);
                 // dX = dL @ W^T
                 let mut dx = vec![0.0f32; m * d];
                 {
@@ -800,7 +1078,7 @@ impl TrainEngine {
                 let mut dlt = Vec::new();
                 ops::transpose_into(&dout, *m, *c, &mut dlt);
                 scr.gwt.resize(c * d, 0.0);
-                parallel::matmul_parallel_into(&dlt, *c, *m, x, *d, self.threads, &mut scr.gwt);
+                parallel::matmul_parallel_into(&dlt, *c, *m, xs, *d, self.threads, &mut scr.gwt);
                 let mut gw = Vec::new();
                 ops::transpose_into(&scr.gwt, *c, *d, &mut gw);
                 let mut gb = vec![0.0f64; *c];
@@ -815,8 +1093,9 @@ impl TrainEngine {
                 Ok(dx)
             }
             UnitTape::Conv { x, dims, cs, p, q, rt } => {
+                let xs = x.slice(xbuf);
                 let mut dx = Vec::new();
-                self.conv_unit_backward(state, x, *dims, *cs, *p, *q, rt, &dout, lr, scr, &mut dx)?;
+                self.conv_unit_backward(state, xs, *dims, *cs, *p, *q, rt, &dout, lr, scr, sbuf, &mut dx)?;
                 Ok(dx)
             }
             UnitTape::Residual {
@@ -835,15 +1114,20 @@ impl TrainEngine {
                 short_stride,
             } => {
                 let (nb, c, hh, ww) = *dims;
-                // main path: conv2 then conv1
+                // main path: conv2 then conv1 (the decompress scratch is
+                // reused: h1's view ends before x needs the buffer)
                 let mut d_h1 = Vec::new();
-                self.conv_unit_backward(
-                    state, h1, (nb, rt1.n, *p1, *q1), *cs2, *p2, *q2, rt2, &dout, lr, scr,
-                    &mut d_h1,
-                )?;
+                {
+                    let h1s = h1.slice(xbuf);
+                    self.conv_unit_backward(
+                        state, h1s, (nb, rt1.n, *p1, *q1), *cs2, *p2, *q2, rt2, &dout, lr, scr,
+                        sbuf, &mut d_h1,
+                    )?;
+                }
+                let xs = x.slice(xbuf);
                 let mut dx = Vec::new();
                 self.conv_unit_backward(
-                    state, x, (nb, c, hh, ww), *cs1, *p1, *q1, rt1, &d_h1, lr, scr, &mut dx,
+                    state, xs, (nb, c, hh, ww), *cs1, *p1, *q1, rt1, &d_h1, lr, scr, sbuf, &mut dx,
                 )?;
                 if let Some(sname) = short {
                     // shortcut: plain 1x1 conv backward
@@ -858,7 +1142,7 @@ impl TrainEngine {
                         );
                     }
                     let (ps, qs) =
-                        ops::im2col_slice_into(x, nb, c, hh, ww, 1, *short_stride, 0, &mut scr.rows);
+                        ops::im2col_slice_into(xs, nb, c, hh, ww, 1, *short_stride, 0, &mut scr.rows);
                     debug_assert_eq!((ps, qs), (*p2, *q2));
                     let mut dyt = Vec::new();
                     ops::transpose_into(&scr.dyr, rsz, kout, &mut dyt); // (K, R)
@@ -950,19 +1234,30 @@ impl TrainEngine {
             ensure!((0..c as i32).contains(&yi), "label {yi} out of range 0..{c}");
         }
         let mut scr = std::mem::take(&mut self.scratch);
+        let mut dec = std::mem::take(&mut self.dec);
+        let mut meter = std::mem::take(&mut self.meter);
+        meter.reset();
         let mut tape: Vec<UnitTape> = Vec::new();
         let r: Result<TrainOut> = (|| {
             let (logits, densities) =
-                self.forward_pass(state, x, m, gamma, mode, true, &mut scr, &mut tape)?;
+                self.forward_pass(state, x, m, gamma, mode, true, &mut scr, &mut tape, &mut meter)?;
             self.update_bn_state(state, &tape)?;
             let (loss, acc, dlogits) = softmax_xent(&logits, y, m, c);
             let mut dcarry = dlogits;
-            for ut in tape.iter().rev() {
-                dcarry = self.unit_backward(state, ut, dcarry, lr, &mut scr)?;
+            // pop as we go: each consumed record's tape bytes are
+            // RELEASED (dropped + metered from the meter's own alloc
+            // records — tape.len() after the pop IS the popped unit's
+            // index), so live memory decays over the backward exactly as
+            // the paper's footprint model assumes
+            while let Some(ut) = tape.pop() {
+                dcarry = self.unit_backward(state, &ut, dcarry, lr, &mut scr, &mut dec)?;
+                meter.free_unit(tape.len());
             }
             Ok(TrainOut { loss, acc, densities })
         })();
         self.scratch = scr;
+        self.dec = dec;
+        self.meter = meter;
         r
     }
 }

@@ -5,11 +5,35 @@
 //! Encoding: a 1-bit-per-element presence bitmask + the packed non-zero
 //! f32 values.  Compressed size = ceil(n/8) bytes + 4 * nnz bytes; the
 //! paper's memory figures (and our Fig 6 bench) use exactly this
-//! arithmetic, and this module is the executable proof that the encoding
-//! round-trips.
+//! arithmetic.  Since PR 4 this module is not just the codec proof — it
+//! is the storage engine behind the ZVC training tape
+//! ([`crate::native::train::TapeStorage::Zvc`]), so the hot-path entry
+//! points are allocation-conscious:
+//!
+//! * [`compress_into`] / [`decompress_into`] reuse the caller's
+//!   [`Compressed`] / `Vec<f32>` buffers (capacity survives across
+//!   layers and steps — no per-tensor allocation once warm).
+//! * [`compress_parallel_into`] chunks the input at bitmask-byte
+//!   boundaries and compresses on the
+//!   [`crate::sparse::pool::WorkerPool`], producing output BIT-IDENTICAL
+//!   to the serial path for any thread budget (same invariant as the
+//!   sparse engines).
+//! * Decompression restores the exact stored bits of every non-zero
+//!   value; zeros come back as +0.0.  The codec is value-centric: -0.0
+//!   compresses away like the zero it compares equal to (see the ±0.0
+//!   test), which is what makes compressed-tape training bit-identical
+//!   to dense-tape training — IEEE arithmetic cannot distinguish the
+//!   re-canonicalized zeros downstream.
+//!
+//! [`to_bytes`] / [`from_bytes`] serialize for checkpointing;
+//! `from_bytes` is total (never panics) and rejects non-canonical
+//! buffers — truncation, length-field corruption, and padding bits set
+//! beyond `n` all return `None`.
+
+use crate::sparse::pool::{Task, WorkerPool};
 
 /// A ZVC-compressed f32 buffer.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Compressed {
     pub n: usize,
     pub bitmask: Vec<u8>,
@@ -17,6 +41,11 @@ pub struct Compressed {
 }
 
 impl Compressed {
+    /// An empty buffer ready for [`compress_into`] reuse.
+    pub fn new() -> Compressed {
+        Compressed::default()
+    }
+
     /// Compressed size in bytes (bitmask + packed values).
     pub fn nbytes(&self) -> usize {
         self.bitmask.len() + 4 * self.values.len()
@@ -27,37 +56,196 @@ impl Compressed {
         4 * self.n
     }
 
+    /// Number of stored (non-zero) values.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
     /// Compression ratio (dense / compressed); > 1 means we won.
     pub fn ratio(&self) -> f64 {
         self.dense_nbytes() as f64 / self.nbytes() as f64
     }
 }
 
-/// Compress a dense f32 slice.
-pub fn compress(xs: &[f32]) -> Compressed {
-    let n = xs.len();
-    let mut bitmask = vec![0u8; n.div_ceil(8)];
-    let mut values = Vec::new();
+/// Compress a dense f32 slice into `out`, reusing its buffers (the
+/// allocation-free twin of [`compress`]).
+pub fn compress_into(xs: &[f32], out: &mut Compressed) {
+    out.n = xs.len();
+    out.bitmask.clear();
+    out.bitmask.resize(xs.len().div_ceil(8), 0);
+    out.values.clear();
     for (i, &x) in xs.iter().enumerate() {
         if x != 0.0 {
-            bitmask[i / 8] |= 1 << (i % 8);
-            values.push(x);
+            out.bitmask[i / 8] |= 1 << (i % 8);
+            out.values.push(x);
         }
     }
-    Compressed { n, bitmask, values }
+}
+
+/// Compress a dense f32 slice.
+pub fn compress(xs: &[f32]) -> Compressed {
+    let mut out = Compressed::new();
+    compress_into(xs, &mut out);
+    out
+}
+
+/// Elements below which the parallel path degrades to serial (dispatch
+/// overhead would dominate a single memory sweep).
+const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Chunk layout of a parallel compress: chunk length is a multiple of 8
+/// elements, so every chunk owns whole bitmask bytes and a disjoint
+/// span of the packed values.
+#[derive(Clone, Copy)]
+struct ChunkPlan {
+    chunk: usize,
+    n_chunks: usize,
+}
+
+/// `None` = run serial (small input or budget of 1).
+fn chunk_plan(n: usize, threads: usize) -> Option<ChunkPlan> {
+    let parts = threads.max(1).min(n / PAR_MIN_ELEMS);
+    if parts <= 1 {
+        return None;
+    }
+    let chunk = n.div_ceil(parts).div_ceil(8) * 8;
+    Some(ChunkPlan { chunk, n_chunks: n.div_ceil(chunk) })
+}
+
+/// Pass 1 on the pool: per-chunk bitmask fill + nnz count.  Resets and
+/// fills `out.bitmask`; returns per-chunk counts.
+fn bitmask_count_pass(xs: &[f32], plan: ChunkPlan, out: &mut Compressed) -> Vec<usize> {
+    let n = xs.len();
+    out.n = n;
+    out.bitmask.clear();
+    out.bitmask.resize(n.div_ceil(8), 0);
+    let mut nnz = vec![0usize; plan.n_chunks];
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_chunks);
+    let mut mask_rest: &mut [u8] = &mut out.bitmask;
+    let mut nnz_rest: &mut [usize] = &mut nnz;
+    for ci in 0..plan.n_chunks {
+        let lo = ci * plan.chunk;
+        let hi = (lo + plan.chunk).min(n);
+        let (mmine, mtail) = mask_rest.split_at_mut((hi - lo).div_ceil(8));
+        mask_rest = mtail;
+        let (cmine, ctail) = nnz_rest.split_at_mut(1);
+        nnz_rest = ctail;
+        let xchunk = &xs[lo..hi];
+        tasks.push(Box::new(move || {
+            let mut count = 0usize;
+            for (i, &x) in xchunk.iter().enumerate() {
+                if x != 0.0 {
+                    mmine[i / 8] |= 1 << (i % 8);
+                    count += 1;
+                }
+            }
+            cmine[0] = count;
+        }));
+    }
+    WorkerPool::global().run(tasks);
+    nnz
+}
+
+/// Pass 2 on the pool: scatter non-zero values into the disjoint spans
+/// the per-chunk counts define.
+fn values_pass(xs: &[f32], plan: ChunkPlan, nnz: &[usize], out: &mut Compressed) {
+    let n = xs.len();
+    out.values.clear();
+    out.values.resize(nnz.iter().sum(), 0.0);
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_chunks);
+    let mut val_rest: &mut [f32] = &mut out.values;
+    for ci in 0..plan.n_chunks {
+        let lo = ci * plan.chunk;
+        let hi = (lo + plan.chunk).min(n);
+        let (vmine, vtail) = val_rest.split_at_mut(nnz[ci]);
+        val_rest = vtail;
+        let xchunk = &xs[lo..hi];
+        tasks.push(Box::new(move || {
+            let mut vi = 0usize;
+            for &x in xchunk {
+                if x != 0.0 {
+                    vmine[vi] = x;
+                    vi += 1;
+                }
+            }
+            debug_assert_eq!(vi, vmine.len());
+        }));
+    }
+    WorkerPool::global().run(tasks);
+}
+
+/// Chunked parallel [`compress_into`] on the global [`WorkerPool`]:
+/// bit-identical to the serial path for ANY thread budget.  Two passes:
+/// (1) per-chunk bitmask fill + nnz count, (2) prefix-sum offsets, then
+/// per-chunk value scatter.
+pub fn compress_parallel_into(xs: &[f32], threads: usize, out: &mut Compressed) {
+    match chunk_plan(xs.len(), threads) {
+        None => compress_into(xs, out),
+        Some(plan) => {
+            let nnz = bitmask_count_pass(xs, plan, out);
+            values_pass(xs, plan, &nnz, out);
+        }
+    }
+}
+
+/// [`compress_parallel_into`] that only completes when the encoding
+/// WINS against a raw 4·n-byte dense store.  The bitmask + count pass
+/// doubles as the measurement — callers need no separate nnz pre-scan.
+/// `Ok(nnz)`: `out` holds the full encoding.  `Err(nnz)`: ZVC would not
+/// be smaller, the value-packing pass was skipped, and `out` is NOT a
+/// valid encoding (treat as dirty scratch).
+pub fn compress_parallel_into_if_smaller(
+    xs: &[f32],
+    threads: usize,
+    out: &mut Compressed,
+) -> Result<usize, usize> {
+    let n = xs.len();
+    match chunk_plan(n, threads) {
+        None => {
+            // serial: count first so a losing tensor never packs values
+            let nnz = xs.iter().filter(|&&x| x != 0.0).count();
+            if zvc_bytes_nnz(n, nnz) >= 4 * n {
+                return Err(nnz);
+            }
+            compress_into(xs, out);
+            debug_assert_eq!(out.nnz(), nnz);
+            Ok(nnz)
+        }
+        Some(plan) => {
+            let nnz = bitmask_count_pass(xs, plan, out);
+            let total: usize = nnz.iter().sum();
+            if zvc_bytes_nnz(n, total) >= 4 * n {
+                return Err(total);
+            }
+            values_pass(xs, plan, &nnz, out);
+            Ok(total)
+        }
+    }
+}
+
+/// Decompress into `out`, reusing its capacity (the allocation-free twin
+/// of [`decompress`]).  `out` is resized to `c.n`; zeros come back as
+/// +0.0, stored values keep their exact bits.
+pub fn decompress_into(c: &Compressed, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(c.n, 0.0);
+    let mut vi = 0usize;
+    for (bi, &byte) in c.bitmask.iter().enumerate() {
+        let mut b = byte;
+        while b != 0 {
+            let bit = b.trailing_zeros() as usize;
+            out[bi * 8 + bit] = c.values[vi];
+            vi += 1;
+            b &= b - 1;
+        }
+    }
+    debug_assert_eq!(vi, c.values.len());
 }
 
 /// Decompress back to a dense vector.
 pub fn decompress(c: &Compressed) -> Vec<f32> {
-    let mut out = vec![0.0f32; c.n];
-    let mut vi = 0;
-    for i in 0..c.n {
-        if c.bitmask[i / 8] & (1 << (i % 8)) != 0 {
-            out[i] = c.values[vi];
-            vi += 1;
-        }
-    }
-    debug_assert_eq!(vi, c.values.len());
+    let mut out = Vec::new();
+    decompress_into(c, &mut out);
     out
 }
 
@@ -66,6 +254,13 @@ pub fn decompress(c: &Compressed) -> Vec<f32> {
 /// `compress(..).nbytes()` exactly for that sparsity).
 pub fn zvc_bytes(n: usize, sparsity: f64) -> usize {
     let nnz = ((1.0 - sparsity) * n as f64).round() as usize;
+    zvc_bytes_nnz(n, nnz)
+}
+
+/// Exact compressed size for `n` elements with `nnz` non-zeros — what
+/// `compress` produces, without going through a float sparsity.  The
+/// tape meter cross-check is stated in this form.
+pub fn zvc_bytes_nnz(n: usize, nnz: usize) -> usize {
     n.div_ceil(8) + 4 * nnz
 }
 
@@ -80,28 +275,37 @@ pub fn to_bytes(c: &Compressed) -> Vec<u8> {
     out
 }
 
-/// Deserialize from bytes.
+/// Deserialize from bytes.  Total: any input — truncated, bit-flipped,
+/// length-corrupted — returns `None` rather than panicking, and every
+/// `Some(c)` is canonical (`to_bytes(&c)` reproduces the input), which
+/// is what makes a restored tape record safe to decompress.
 pub fn from_bytes(b: &[u8]) -> Option<Compressed> {
     if b.len() < 8 {
         return None;
     }
-    let n = u64::from_le_bytes(b[..8].try_into().ok()?) as usize;
+    let n = usize::try_from(u64::from_le_bytes(b[..8].try_into().ok()?)).ok()?;
     let mlen = n.div_ceil(8);
-    if b.len() < 8 + mlen {
+    let rest = b.len() - 8;
+    if rest < mlen {
+        return None; // truncated / length field corrupted upward
+    }
+    let bitmask = &b[8..8 + mlen];
+    if n % 8 != 0 && bitmask[mlen - 1] >> (n % 8) != 0 {
+        // padding bits beyond n set: nnz accounting would disagree with
+        // what compress() produces, so decompression could misalign
         return None;
     }
-    let bitmask = b[8..8 + mlen].to_vec();
     let nnz: usize = bitmask.iter().map(|x| x.count_ones() as usize).sum();
-    let vstart = 8 + mlen;
-    if b.len() != vstart + 4 * nnz {
+    if rest - mlen != nnz.checked_mul(4)? {
         return None;
     }
+    let vstart = 8 + mlen;
     let values = (0..nnz)
         .map(|i| {
             f32::from_le_bytes(b[vstart + 4 * i..vstart + 4 * i + 4].try_into().unwrap())
         })
         .collect();
-    Some(Compressed { n, bitmask, values })
+    Some(Compressed { n, bitmask: bitmask.to_vec(), values })
 }
 
 #[cfg(test)]
@@ -144,8 +348,9 @@ mod tests {
         let n = 10_000;
         let xs = sparse_vec(&mut rng, n, 0.8);
         let c = compress(&xs);
-        let actual_sparsity = 1.0 - c.values.len() as f64 / n as f64;
+        let actual_sparsity = 1.0 - c.nnz() as f64 / n as f64;
         assert_eq!(zvc_bytes(n, actual_sparsity), c.nbytes());
+        assert_eq!(zvc_bytes_nnz(n, c.nnz()), c.nbytes());
     }
 
     #[test]
@@ -155,6 +360,98 @@ mod tests {
         let c = compress(&[-0.0, 1.0]);
         assert_eq!(c.values, vec![1.0]);
         assert_eq!(decompress(&c), vec![0.0, 1.0]);
+        // the decompressed zero is canonical +0.0
+        assert_eq!(decompress(&c)[0].to_bits(), 0);
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers_and_match() {
+        let mut rng = Pcg32::seeded(25);
+        let mut c = Compressed::new();
+        let mut dec = Vec::new();
+        for &n in &[100usize, 7, 1000, 0, 64] {
+            let xs = sparse_vec(&mut rng, n, 0.6);
+            compress_into(&xs, &mut c);
+            assert_eq!(c, compress(&xs), "n={n}");
+            decompress_into(&c, &mut dec);
+            assert_eq!(dec, xs, "n={n}");
+        }
+    }
+
+    #[test]
+    fn parallel_compress_bit_identical_to_serial() {
+        let mut rng = Pcg32::seeded(26);
+        // sizes straddling the serial cutoff, chunk boundaries, and
+        // non-multiple-of-8 tails
+        for &n in &[0usize, 5, 4096, PAR_MIN_ELEMS, 3 * PAR_MIN_ELEMS + 13] {
+            for &s in &[0.0f32, 0.5, 1.0] {
+                let xs = sparse_vec(&mut rng, n, s);
+                let want = compress(&xs);
+                for &t in &[1usize, 2, 3, 8] {
+                    let mut got = Compressed::new();
+                    compress_parallel_into(&xs, t, &mut got);
+                    assert_eq!(got, want, "n={n} s={s} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn if_smaller_agrees_with_unconditional_compress() {
+        let mut rng = Pcg32::seeded(28);
+        for &n in &[0usize, 5, 4096, PAR_MIN_ELEMS, 2 * PAR_MIN_ELEMS + 9] {
+            for &s in &[0.0f32, 0.02, 0.5, 1.0] {
+                let xs = sparse_vec(&mut rng, n, s);
+                let want = compress(&xs);
+                let wins = want.nbytes() < 4 * n;
+                for &t in &[1usize, 2, 8] {
+                    let mut got = Compressed::new();
+                    match compress_parallel_into_if_smaller(&xs, t, &mut got) {
+                        Ok(nnz) => {
+                            assert!(wins, "n={n} s={s} t={t}: compressed a loser");
+                            assert_eq!(nnz, want.nnz());
+                            assert_eq!(got, want);
+                        }
+                        Err(nnz) => {
+                            assert!(!wins, "n={n} s={s} t={t}: refused a winner");
+                            assert_eq!(nnz, want.nnz());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bit-level roundtrip over the awkward f32 population: NaN (payload
+    /// preserved), ±0.0 (negative zero canonicalizes to +0.0 — the one
+    /// deliberate bit change), ±inf, subnormals.
+    #[test]
+    fn roundtrip_preserves_bits_of_nonzeros() {
+        let specials = [
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead), // NaN with payload
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            -f32::MIN_POSITIVE / 4.0,
+            f32::MAX,
+            1.0e-40, // subnormal literal
+            0.0,
+            -0.0,
+        ];
+        let mut rng = Pcg32::seeded(27);
+        for &n in &[1usize, 7, 8, 9, 333] {
+            let xs: Vec<f32> = (0..n)
+                .map(|_| specials[rng.below(specials.len() as u32) as usize])
+                .collect();
+            let back = decompress(&compress(&xs));
+            for (i, (&a, &b)) in xs.iter().zip(&back).enumerate() {
+                let want = if a == 0.0 { 0 } else { a.to_bits() }; // ±0 -> +0
+                assert_eq!(b.to_bits(), want, "n={n} i={i} {a} vs {b}");
+            }
+        }
+        // n = 0 degenerate
+        assert_eq!(decompress(&compress(&[])), Vec::<f32>::new());
     }
 
     #[test]
@@ -173,6 +470,66 @@ mod tests {
         let b = to_bytes(&c);
         assert!(from_bytes(&b[..b.len() - 1]).is_none());
         assert!(from_bytes(&[1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn serde_rejects_noncanonical_padding() {
+        // n = 3 uses 3 bits; setting a padding bit keeps the popcount
+        // consistent with a longer value section that isn't there OR
+        // desyncs decompression — both must be rejected
+        let c = compress(&[1.0, 0.0, 2.0]);
+        let mut b = to_bytes(&c);
+        b[8] |= 1 << 6; // padding bit inside the single mask byte
+        assert!(from_bytes(&b).is_none());
+    }
+
+    /// Fuzz-style robustness: seeded corpus of valid buffers, then every
+    /// truncation length, random bit flips, and length-field rewrites.
+    /// `from_bytes` must never panic and every `Some` must re-serialize
+    /// to exactly the bytes it was parsed from (canonical).
+    #[test]
+    fn serde_fuzz_never_panics_and_some_is_canonical() {
+        let mut rng = Pcg32::seeded(0xf022);
+        let mut corpus: Vec<Vec<u8>> = Vec::new();
+        for &n in &[0usize, 1, 7, 8, 9, 31, 256] {
+            for &s in &[0.0f32, 0.5, 1.0] {
+                let xs = sparse_vec(&mut rng, n, s);
+                corpus.push(to_bytes(&compress(&xs)));
+            }
+        }
+        let mut parsed = 0usize;
+        let mut check = |b: &[u8]| {
+            if let Some(c) = from_bytes(b) {
+                assert_eq!(to_bytes(&c), b, "non-canonical accept ({} bytes)", b.len());
+                parsed += 1;
+            }
+        };
+        for base in &corpus {
+            // every truncation point
+            for cut in 0..=base.len() {
+                check(&base[..cut]);
+            }
+            // random single-bit flips (mask, values, and length field)
+            for _ in 0..200 {
+                let mut b = base.clone();
+                if b.is_empty() {
+                    continue;
+                }
+                let bit = rng.below((b.len() * 8) as u32) as usize;
+                b[bit / 8] ^= 1 << (bit % 8);
+                check(&b);
+            }
+            // length-field corruption: small, huge, and near-overflow n
+            for n_lie in [0u64, 1, 1 << 20, u64::MAX / 2, u64::MAX] {
+                let mut b = base.clone();
+                if b.len() >= 8 {
+                    b[..8].copy_from_slice(&n_lie.to_le_bytes());
+                    check(&b);
+                }
+            }
+        }
+        // the unmutated corpus itself must parse
+        assert!(parsed >= corpus.len(), "only {parsed} parses");
     }
 
     #[test]

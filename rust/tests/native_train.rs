@@ -8,16 +8,19 @@
 //! DMS on/off parity at gamma = 0, finite-difference gradient checks
 //! through every unit kind (dense / conv / residual / maxpool / gap /
 //! classifier, with BN + double mask active), the `lr_decay_every: 0`
-//! regression, and checkpoint resume.
+//! regression, checkpoint resume, and the ZVC training tape: multi-epoch
+//! bit-parity with the dense tape, measured-vs-analytic tape memory, and
+//! compressed-tape checkpoint resume.
 
 use dsg::config::{GammaSchedule, RunConfig};
 use dsg::coordinator::{checkpoint, ModelState, NativeTrainer};
 use dsg::datasets;
-use dsg::native::train::TrainEngine;
+use dsg::native::train::{TapeStorage, TrainEngine};
 use dsg::native::zoo::{self, ModelSpec};
 use dsg::native::Mode;
 use dsg::runtime::{Meta, Unit};
 use dsg::util::Pcg32;
+use dsg::zvc;
 
 fn smoke_spec() -> ModelSpec {
     ModelSpec::custom_mlp("smoke_mlp", &[784, 32], 10, 32)
@@ -265,6 +268,189 @@ fn checkpoint_roundtrip_resumes_native_training() {
     for (s1, s2) in t.state.state.iter().zip(&t2.state.state) {
         assert_eq!(s1, s2);
     }
+}
+
+/// Bit-level equality of every state leaf (stronger than the `==` the
+/// other parity tests use: ±0.0 and NaN payloads must match too).
+fn assert_state_bits_eq(a: &ModelState, b: &ModelState, what: &str) {
+    assert_eq!(a.state.len(), b.state.len(), "{what}: leaf count");
+    for (i, (ta, tb)) in a.state.iter().zip(&b.state).enumerate() {
+        let fa = ta.as_f32().unwrap();
+        let fb = tb.as_f32().unwrap();
+        assert_eq!(fa.len(), fb.len(), "{what}: leaf {i} len");
+        for (j, (va, vb)) in fa.iter().zip(fb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{what}: leaf {i}[{j}] {va} vs {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn zvc_tape_training_is_bit_identical_multi_epoch() {
+    // ZVC is lossless, so compressed-tape training must reproduce the
+    // dense tape to the BIT — losses, weights, velocities, and BN
+    // running stats — across multiple epochs (12 steps over 2 batches =
+    // 6 epochs), at gamma 0 (keep-all) and 0.5.
+    for &gamma in &[0.0f32, 0.5] {
+        let meta = zoo::synth_meta(&smoke_spec()).unwrap();
+        let mut cfg = RunConfig::preset_for_model("mlp");
+        cfg.steps = 12;
+        cfg.eval_every = 4;
+        cfg.train_size = 64;
+        cfg.test_size = 32;
+        cfg.gamma = GammaSchedule::Constant(gamma);
+        let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+        let (train, test) = data.split(1.0 / 3.0);
+        let mut dense = NativeTrainer::new(meta.clone(), 5).unwrap();
+        let mut zvc_t = NativeTrainer::new(meta, 5).unwrap().with_tape(TapeStorage::Zvc);
+        let acc_a = dense.train(&cfg, &train, &test).unwrap();
+        let acc_b = zvc_t.train(&cfg, &train, &test).unwrap();
+        assert_eq!(acc_a.to_bits(), acc_b.to_bits(), "gamma {gamma}: eval acc");
+        assert_eq!(dense.history.steps.len(), zvc_t.history.steps.len());
+        for (a, b) in dense.history.steps.iter().zip(&zvc_t.history.steps) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "gamma {gamma} step {}: loss diverged",
+                a.step
+            );
+            assert_eq!(a.densities, b.densities, "gamma {gamma} step {}", a.step);
+        }
+        assert_state_bits_eq(&dense.state, &zvc_t.state, &format!("gamma {gamma}"));
+        // the zvc run must have actually compressed something at work
+        if gamma > 0.0 {
+            let mem = zvc_t.tape_memory();
+            assert!(
+                mem.peak() < mem.dense_peak(),
+                "gamma {gamma}: zvc tape saved nothing ({} vs {})",
+                mem.peak(),
+                mem.dense_peak()
+            );
+        }
+    }
+}
+
+#[test]
+fn zvc_tape_bit_parity_on_conv_residual_topology() {
+    // same claim through every unit kind the backward supports
+    let meta = zoo::synth_meta(&tiny_conv_spec()).unwrap();
+    let mut dense = NativeTrainer::new(meta.clone(), 9).unwrap();
+    let mut zvc_t = NativeTrainer::new(meta.clone(), 9).unwrap().with_tape(TapeStorage::Zvc);
+    for step in 0u64..4 {
+        let (x, y) = batch_for(&meta, 40 + step);
+        let a = dense.step(&x, &y, 0.5, 0.05).unwrap();
+        let b = zvc_t.step(&x, &y, 0.5, 0.05).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+    }
+    assert_state_bits_eq(&dense.state, &zvc_t.state, "tinyconv");
+}
+
+#[test]
+fn tape_meter_matches_zvc_accounting() {
+    // the measured-vs-analytic cross-check: every compressed activation
+    // record's stored bytes ARE zvc_bytes at its measured nnz, the peak
+    // is the sum of everything taped, and a dense-tape run of the same
+    // step peaks at exactly the zvc run's dense-equivalent accounting
+    let meta = zoo::synth_meta(&tiny_conv_spec()).unwrap();
+    let (x, y) = batch_for(&meta, 37);
+    let mut t = NativeTrainer::new(meta.clone(), 7).unwrap().with_tape(TapeStorage::Zvc);
+    t.step(&x, &y, 0.5, 0.05).unwrap();
+    let mem = t.tape_memory();
+    let stored_sum: u64 = mem.allocs().iter().map(|a| a.stored_bytes).sum();
+    assert_eq!(mem.peak(), stored_sum, "everything taped is live at the turnover");
+    assert_eq!(mem.live(), 0, "backward must release every record");
+    let mut compressed = 0usize;
+    for a in mem.allocs() {
+        if !a.is_act() {
+            continue;
+        }
+        assert_eq!(a.dense_bytes, 4 * a.elems as u64, "unit {} {}", a.unit, a.part);
+        let z = zvc::zvc_bytes_nnz(a.elems, a.nnz) as u64;
+        assert_eq!(
+            a.stored_bytes,
+            z.min(a.dense_bytes),
+            "unit {} {}: stored bytes off analytic",
+            a.unit,
+            a.part
+        );
+        if a.stored_bytes < a.dense_bytes {
+            compressed += 1;
+        }
+    }
+    assert!(compressed >= 4, "only {compressed} activation records compressed");
+    let mut td = NativeTrainer::new(meta, 7).unwrap();
+    td.step(&x, &y, 0.5, 0.05).unwrap();
+    assert_eq!(td.tape_memory().peak(), mem.dense_peak());
+    assert_eq!(td.tape_memory().reduction(), 1.0);
+}
+
+#[test]
+fn measured_reduction_direction_matches_memmodel() {
+    // as gamma rises the measured dense/zvc tape ratio must move the way
+    // the analytic model predicts: strictly up
+    let meta = zoo::synth_meta(&tiny_conv_spec()).unwrap();
+    let mut measured = Vec::new();
+    for &gamma in &[0.0f32, 0.5, 0.8] {
+        let mut t = NativeTrainer::new(meta.clone(), 7).unwrap().with_tape(TapeStorage::Zvc);
+        let (x, y) = batch_for(&meta, 51);
+        t.step(&x, &y, gamma, 0.05).unwrap();
+        measured.push(t.tape_memory().reduction());
+    }
+    assert!(
+        measured.windows(2).all(|w| w[1] > w[0]),
+        "measured tape reductions not increasing with gamma: {measured:?}"
+    );
+    // the analytic model over the same gammas agrees on the direction
+    let net = dsg::costmodel::shapes::vgg8(128);
+    let analytic: Vec<f64> = [0.0f64, 0.5, 0.8]
+        .iter()
+        .map(|&g| dsg::memmodel::memory(&net, dsg::memmodel::effective_sparsity(g, 0.5)).train_reduction())
+        .collect();
+    assert!(analytic.windows(2).all(|w| w[1] > w[0]), "{analytic:?}");
+}
+
+#[test]
+fn compressed_record_serde_edges() {
+    // tape-record payloads through the checkpoint codec: empty tensor
+    // and a keep-all (gamma 0) activation where every element survives
+    let c = zvc::compress(&[]);
+    assert_eq!(c.nnz(), 0);
+    assert_eq!(zvc::from_bytes(&zvc::to_bytes(&c)).unwrap(), c);
+    let xs: Vec<f32> = (1..=97).map(|i| i as f32).collect();
+    let c = zvc::compress(&xs);
+    assert_eq!(c.nnz(), 97, "keep-all: every element stored");
+    let back = zvc::from_bytes(&zvc::to_bytes(&c)).unwrap();
+    assert_eq!(zvc::decompress(&back), xs);
+}
+
+#[test]
+fn checkpoint_resume_with_zvc_tape_is_bit_exact() {
+    // a run checkpointed mid-training resumes bit-exactly under EITHER
+    // tape storage — the tape is per-step state, the checkpoint is not
+    let meta = zoo::synth_meta(&ModelSpec::custom_mlp("zvc_ckpt", &[784, 16], 10, 16)).unwrap();
+    let (x, y) = batch_for(&meta, 33);
+    let mut t = NativeTrainer::new(meta.clone(), 4).unwrap().with_tape(TapeStorage::Zvc);
+    t.step(&x, &y, 0.5, 0.05).unwrap();
+    t.step(&x, &y, 0.5, 0.05).unwrap();
+    let dir = std::env::temp_dir().join("dsg_native_train_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("zvc_tape.ckpt");
+    checkpoint::save(&p, &t.state).unwrap();
+    let mut resumed_zvc = NativeTrainer::with_state(meta.clone(), checkpoint::load(&p).unwrap())
+        .unwrap()
+        .with_tape(TapeStorage::Zvc);
+    let mut resumed_dense =
+        NativeTrainer::with_state(meta, checkpoint::load(&p).unwrap()).unwrap();
+    let a = t.step(&x, &y, 0.5, 0.05).unwrap();
+    let b = resumed_zvc.step(&x, &y, 0.5, 0.05).unwrap();
+    let c = resumed_dense.step(&x, &y, 0.5, 0.05).unwrap();
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "zvc resume diverged");
+    assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "cross-tape resume diverged");
+    assert_state_bits_eq(&t.state, &resumed_zvc.state, "zvc resume");
+    assert_state_bits_eq(&t.state, &resumed_dense.state, "cross-tape resume");
 }
 
 #[test]
