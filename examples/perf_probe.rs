@@ -28,11 +28,19 @@ fn main() {
     let k = dsg::costmodel::jll::projection_dim(0.5, n, d);
     let r = ternary_r(&mut rng, k, d, 3);
     let ridx = TernaryIndex::from_dense(&r);
-    let wp = dsg::drs::project_weights(&r, &w);
-    let mask90 = {
+    let wp = dsg::drs::project_weights_idx(&ridx, &w);
+    let (mask90, rowmask90) = {
         let out = sparse::dsg_layer(&x, &wt, &wp, &ridx, 0.9);
-        out.mask.to_dense() // the probes below time the dense-mask engines
+        (out.mask.to_dense(), out.mask)
     };
+    // a compound-kernel probe wants a realistically sparse input (mask
+    // + relu zeros, ~60% sparse); the dense probes keep the raw x
+    let xs = Tensor::new(
+        &[m, d],
+        x.data().iter().map(|&v| if v < 0.3 { 0.0 } else { v }).collect::<Vec<f32>>(),
+    );
+    let in_dens =
+        xs.data().iter().filter(|v| **v != 0.0).count() as f32 / (m * d) as f32;
 
     println!("conv2 shape ({m} x {d} x {n}), k = {k}, {} threads available", parallel::n_threads());
     let t = time5(|| {
@@ -55,6 +63,18 @@ fn main() {
         let _ = parallel::dsg_vmm_parallel(&x, &wt, &mask90);
     });
     println!("DSG vmm par @90%  {:>8.1}ms", t * 1e3);
+    let threads = parallel::n_threads();
+    let (_, realized) =
+        parallel::dsg_vmm_compound_parallel_with(&xs, &wt, &rowmask90, in_dens, threads);
+    let t = time5(|| {
+        let _ = parallel::dsg_vmm_compound_parallel_with(&xs, &wt, &rowmask90, in_dens, threads);
+    });
+    println!(
+        "DSG compound @90% {:>8.1}ms  ({} realized madds at {:.0}% input density)",
+        t * 1e3,
+        dsg::metrics::ops::human_madds(realized),
+        100.0 * in_dens
+    );
     let t = time5(|| {
         let _ = dsg::drs::project_rows(&x, &r);
     });

@@ -1,6 +1,7 @@
-//! Engine hot-path microbench: what did the pool + RowMask rebuild buy?
+//! Engine hot-path microbench: what did the pool + RowMask rebuild buy,
+//! and what does compound sparsity buy on top?
 //!
-//! Two controlled comparisons at Fig 8(a)-style layer shapes, plus a
+//! Three controlled comparisons at Fig 8(a)-style layer shapes, plus a
 //! dispatch-overhead probe:
 //!
 //! * **spawn vs pool** — the identical chunk kernel dispatched through
@@ -8,12 +9,18 @@
 //!   verbatim below) vs the persistent `sparse::pool::WorkerPool`.
 //! * **dense mask vs RowMask** — the masked VMM branch-scanning a dense
 //!   f32 mask vs jumping through the compact per-row index lists.
+//! * **output-sparse vs COMPOUND** — at the paper's gamma = 0.5
+//!   operating point with a realistically sparse input (previous-layer
+//!   mask + ReLU), the kernels that also skip the input-side zeros.
+//!   Realized multiply-adds are counted by the kernels themselves and
+//!   asserted: compound <= output-sparse, and the gamma-0.5 reduction
+//!   must clear 1.5x (the Fig 8/9 (1-gamma)^2 claim, measured).
 //!
 //! Every variant is asserted bit-identical before timing — the rebuild
 //! must change WHERE time goes, never a single output bit.
 //!
 //! Writes machine-readable `BENCH_hotpath.json` (override the path with
-//! `DSG_BENCH_OUT`) — the first entry of the perf trajectory.
+//! `DSG_BENCH_OUT`) — the perf trajectory artifact CI uploads.
 //!
 //!     cargo bench --bench engine_hotpath
 //!     DSG_HOTPATH_SMOKE=1 cargo bench --bench engine_hotpath   # CI: tiny shapes
@@ -210,7 +217,7 @@ fn main() -> anyhow::Result<()> {
         let k = dsg::costmodel::jll::projection_dim(0.5, n, d);
         let r = ternary_r(&mut rng, k, d, 3);
         let ridx = TernaryIndex::from_dense(&r);
-        let wp = dsg::drs::project_weights(&r, &w);
+        let wp = dsg::drs::project_weights_idx(&ridx, &w);
         let xp = parallel::project_rows_parallel_with(&x, &ridx, 1);
         let virt = ops::matmul_blocked(&xp, &wp);
         let thr = topk::shared_threshold(&virt, gamma);
@@ -285,6 +292,126 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // --- compound-sparsity section: the Fig 8a shapes at the paper's
+    // gamma = 0.5 with a REALISTIC input (previous layer's mask + ReLU
+    // zeros), ops-counted dense vs output-sparse vs compound ---
+    let g_both = 0.5f32;
+    println!(
+        "\ncompound sparsity @ gamma {g_both} in AND out (input = prev mask + relu):"
+    );
+    println!(
+        "{:<8} {:>11} {:>11} {:>11} {:>8} {:>8} {:>8}",
+        "layer", "gemm", "vmm-outsp", "vmm-cmpnd", "in-dens", "ops-x", "time-x"
+    );
+    let mut compound_objs: Vec<Json> = Vec::new();
+    let (mut os_ops_total, mut comp_ops_total) = (0u64, 0u64);
+    for (si, s) in shapes.iter().enumerate() {
+        let mut rng = Pcg32::seeded(600 + si as u64);
+        let (m, d, n) = (s.m, s.d, s.n);
+        // simulate the previous layer: a gamma=0.5 selection zeroes half
+        // the input coordinates, relu kills half of the survivors
+        let mut xv = rng.normal_vec(m * d, 1.0);
+        let prev_virt = Tensor::new(&[m, d], rng.normal_vec(m * d, 1.0));
+        let in_mask = topk::select_rowmask(&prev_virt, g_both).to_dense();
+        for (v, mk) in xv.iter_mut().zip(in_mask.data()) {
+            if *mk == 0.0 || *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let x = Tensor::new(&[m, d], xv);
+        let in_density =
+            x.data().iter().filter(|v| **v != 0.0).count() as f64 / (m * d) as f64;
+        let w = Tensor::new(&[d, n], rng.normal_vec(d * n, (2.0 / d as f32).sqrt()));
+        let wt = ops::transpose(&w);
+        // DRS selection at gamma = 0.5 on the sparse input
+        let k = dsg::costmodel::jll::projection_dim(0.5, n, d);
+        let r = ternary_r(&mut rng, k, d, 3);
+        let ridx = TernaryIndex::from_dense(&r);
+        let wp = dsg::drs::project_weights_idx(&ridx, &w);
+        let xp = parallel::project_rows_parallel_with(&x, &ridx, 1);
+        let virt = ops::matmul_blocked(&xp, &wp);
+        let thr = topk::shared_threshold(&virt, g_both);
+        let rowmask = RowMask::from_threshold(&virt, thr);
+
+        // --- exactness + realized-ops gates ---
+        let want = parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rowmask, threads);
+        let (got, realized) =
+            parallel::dsg_vmm_compound_parallel_with(&x, &wt, &rowmask, in_density as f32, threads);
+        assert_eq!(want, got, "{}: compound vmm != output-sparse vmm", s.name);
+        for t in [1usize, 2, 3, 8] {
+            let (bt, rt) =
+                parallel::dsg_vmm_compound_parallel_with(&x, &wt, &rowmask, in_density as f32, t);
+            assert_eq!(want, bt, "{}: compound not budget-invariant @ {t}", s.name);
+            assert_eq!(realized, rt, "{}: realized count not budget-invariant @ {t}", s.name);
+        }
+        let (serial, _) = dsg::sparse::dsg_vmm_compound(&x, &wt, &rowmask);
+        assert_eq!(want, serial, "{}: serial compound != parallel", s.name);
+        let os_ops = d as u64 * rowmask.selected() as u64;
+        let dense_ops = (m * d * n) as u64;
+        assert!(
+            realized <= os_ops,
+            "{}: compound realized {realized} > output-sparse {os_ops}",
+            s.name
+        );
+        let ops_x = os_ops as f64 / realized.max(1) as f64;
+        assert!(
+            ops_x >= 1.5,
+            "{}: realized-ops reduction {ops_x:.2}x below the 1.5x gate \
+             (in-density {in_density:.3})",
+            s.name
+        );
+        os_ops_total += os_ops;
+        comp_ops_total += realized;
+
+        // --- timings ---
+        let gemm_secs = time_median(reps, || {
+            let _ = parallel::matmul_parallel_with(&x, &w, threads);
+        });
+        let os_secs = time_median(reps, || {
+            let _ = parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rowmask, threads);
+        });
+        let comp_secs = time_median(reps, || {
+            let _ = parallel::dsg_vmm_compound_parallel_with(
+                &x, &wt, &rowmask, in_density as f32, threads,
+            );
+        });
+        println!(
+            "{:<8} {:>11} {:>11} {:>11} {:>8.3} {:>7.2}x {:>7.2}x",
+            s.name,
+            fmt_secs(gemm_secs),
+            fmt_secs(os_secs),
+            fmt_secs(comp_secs),
+            in_density,
+            ops_x,
+            os_secs / comp_secs,
+        );
+        compound_objs.push(obj(vec![
+            ("name", Json::Str(s.name.to_string())),
+            ("m", Json::Num(m as f64)),
+            ("d", Json::Num(d as f64)),
+            ("n", Json::Num(n as f64)),
+            ("gamma", Json::Num(g_both as f64)),
+            ("in_density", Json::Num(in_density)),
+            ("out_density", Json::Num(rowmask.density())),
+            ("dense_madds", Json::Num(dense_ops as f64)),
+            ("output_sparse_madds", Json::Num(os_ops as f64)),
+            ("compound_madds", Json::Num(realized as f64)),
+            ("ops_reduction_vs_output_sparse", Json::Num(ops_x)),
+            ("ops_reduction_vs_dense", Json::Num(dense_ops as f64 / realized.max(1) as f64)),
+            ("gemm_secs", Json::Num(gemm_secs)),
+            ("vmm_output_sparse_secs", Json::Num(os_secs)),
+            ("vmm_compound_secs", Json::Num(comp_secs)),
+            ("time_speedup_vs_output_sparse", Json::Num(os_secs / comp_secs)),
+            ("exact", Json::Bool(true)),
+        ]));
+    }
+    let total_ops_x = os_ops_total as f64 / comp_ops_total.max(1) as f64;
+    println!(
+        "compound realized ops: {} vs output-sparse {} -> {:.2}x @ gamma {g_both}",
+        comp_ops_total, os_ops_total, total_ops_x
+    );
+    assert!(total_ops_x >= 1.5, "total realized-ops reduction {total_ops_x:.2}x < 1.5x");
+
     // --- dispatch-overhead probe: many tiny dispatches, where the
     // per-call thread spawn dominates ---
     let (dm, dd, dn) = if smoke { (24, 64, 16) } else { (64, 128, 64) };
@@ -322,6 +449,15 @@ fn main() -> anyhow::Result<()> {
         ("threads", Json::Num(threads as f64)),
         ("reps", Json::Num(reps as f64)),
         ("layers", Json::Arr(layer_objs)),
+        ("compound_gamma05", Json::Arr(compound_objs)),
+        (
+            "compound_totals",
+            obj(vec![
+                ("output_sparse_madds", Json::Num(os_ops_total as f64)),
+                ("compound_madds", Json::Num(comp_ops_total as f64)),
+                ("ops_reduction", Json::Num(total_ops_x)),
+            ]),
+        ),
         (
             "dispatch_probe",
             obj(vec![
@@ -347,6 +483,9 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(&out_path, report.to_string())?;
     println!("\nwrote {out_path}");
     println!("{}", report.to_string());
-    println!("engine_hotpath OK (all variants bit-identical)");
+    println!(
+        "engine_hotpath OK (all variants bit-identical, compound ops reduction {:.2}x)",
+        total_ops_x
+    );
     Ok(())
 }

@@ -16,13 +16,11 @@
 //! Writes `BENCH_memory.json` (override with `DSG_BENCH_OUT`).
 //! `DSG_FIG6_SMOKE=1` shrinks the measured topology for CI.
 //!
-//! Known accounting note the meter makes visible: a keep-all mask
-//! (gamma 0 / dense mode) is materialized by `RowMask::fill_full` as
-//! m*n u32 indices even though every engine fast-paths it via
-//! `is_full()` without reading them — it inflates the measured gamma-0
-//! baseline on BOTH sides of the ratio.  A compact "full" RowMask
-//! representation is the obvious follow-up; the gamma >= 0.5 gates
-//! below are unaffected (same mask bytes in numerator and denominator).
+//! Accounting note (resolved): a keep-all mask (gamma 0 / dense mode)
+//! used to be materialized as m*n u32 indices, inflating the measured
+//! gamma-0 baseline on both sides of the ratio.  `RowMask` now stores
+//! the full selection implicitly (one shared 0..n row), so the gamma-0
+//! mask term is O(n) and the measured baseline is honest.
 
 use dsg::coordinator::NativeTrainer;
 use dsg::costmodel::shapes::fig6_nets;

@@ -70,9 +70,22 @@ impl NativeTrainer {
         self
     }
 
+    /// Select the sparse kernel family (compound vs output-sparse-only;
+    /// bit-identical — a baseline/parity knob, not a results knob).
+    pub fn with_kernels(mut self, kernels: crate::sparse::parallel::SparseKernels) -> NativeTrainer {
+        self.engine = self.engine.with_kernels(kernels);
+        self
+    }
+
     /// Measured tape memory of the most recent training step.
     pub fn tape_memory(&self) -> &MemoryMeter {
         self.engine.memory()
+    }
+
+    /// Measured realized vs dense-equivalent multiply-adds of the most
+    /// recent training step (forward + backward, per layer).
+    pub fn ops(&self) -> &crate::metrics::OpsCounter {
+        self.engine.ops()
     }
 
     /// Force dense (keep-all mask) execution — the convergence baseline.

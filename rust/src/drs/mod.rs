@@ -9,5 +9,7 @@
 pub mod projection;
 pub mod topk;
 
-pub use projection::{project_rows, project_weights, ternary_r};
+pub use projection::{
+    project_rows, project_rows_idx, project_weights, project_weights_idx, ternary_r,
+};
 pub use topk::{select_mask, select_rowmask, shared_threshold, RowMask, SelectionStrategy};

@@ -16,62 +16,139 @@ pub fn ternary_r(rng: &mut Pcg32, k: usize, d: usize, s: u32) -> Tensor {
 
 /// Index-list form of a ternary R: per projected dim, which input dims to
 /// add and which to subtract (the multiplication-free fast path).
+///
+/// Layout is a flat SIGNED CSR: one index array + one offsets array of
+/// `2k + 1` entries.  Projected dim `p` owns `idx[offsets[2p]..
+/// offsets[2p + 1]]` as its + inputs and `idx[offsets[2p + 1]..
+/// offsets[2p + 2]]` as its - inputs, both ascending.  One contiguous
+/// allocation instead of `2k` nested `Vec`s: the per-row pointer chase
+/// of the old `Vec<Vec<u32>>` disappears from `project_chunk`'s inner
+/// loop, and the ± passes fuse into one walk of a single array.
+///
+/// The accumulation order is IDENTICAL to the nested form (+ indices in
+/// ascending order, then - indices in ascending order, one add each):
+/// projections are bit-for-bit what they were, which the DRS selection —
+/// and therefore every downstream mask — depends on.  The unrolled
+/// loops below keep that sequential order; reassociating into partial
+/// sums would change selection bits and is deliberately NOT done.
 #[derive(Clone, Debug)]
 pub struct TernaryIndex {
     pub k: usize,
     pub d: usize,
     pub scale: f32, // sqrt(s) / sqrt(k)
-    pub plus: Vec<Vec<u32>>,
-    pub minus: Vec<Vec<u32>>,
+    /// Signed-CSR offsets, `2k + 1` entries.
+    offsets: Vec<usize>,
+    /// Input-dim indices: per p, + run then - run, each ascending.
+    idx: Vec<u32>,
+}
+
+/// Sequential 4-wide-unrolled `acc += x[q]` over an index run,
+/// continuing from the caller's accumulator.  Same left-to-right
+/// accumulation as a plain loop (bit-exact); the unroll only amortizes
+/// loop/bounds overhead.
+#[inline]
+fn add_indexed(mut acc: f32, x: &[f32], qs: &[u32]) -> f32 {
+    let mut t = 0;
+    while t + 4 <= qs.len() {
+        acc += x[qs[t] as usize];
+        acc += x[qs[t + 1] as usize];
+        acc += x[qs[t + 2] as usize];
+        acc += x[qs[t + 3] as usize];
+        t += 4;
+    }
+    while t < qs.len() {
+        acc += x[qs[t] as usize];
+        t += 1;
+    }
+    acc
+}
+
+/// Sequential 4-wide-unrolled `acc -= x[q]` twin of [`add_indexed`]:
+/// the - run keeps subtracting from the SAME running accumulator, the
+/// exact order the nested-Vec form used (a separate minus sum would
+/// reassociate and change selection bits).
+#[inline]
+fn sub_indexed(mut acc: f32, x: &[f32], qs: &[u32]) -> f32 {
+    let mut t = 0;
+    while t + 4 <= qs.len() {
+        acc -= x[qs[t] as usize];
+        acc -= x[qs[t + 1] as usize];
+        acc -= x[qs[t + 2] as usize];
+        acc -= x[qs[t + 3] as usize];
+        t += 4;
+    }
+    while t < qs.len() {
+        acc -= x[qs[t] as usize];
+        t += 1;
+    }
+    acc
 }
 
 impl TernaryIndex {
     pub fn from_dense(r: &Tensor) -> Self {
         let (k, d) = (r.shape()[0], r.shape()[1]);
-        let mut plus = vec![Vec::new(); k];
-        let mut minus = vec![Vec::new(); k];
+        assert!(d <= u32::MAX as usize, "projection d {d} exceeds u32");
+        let mut offsets = Vec::with_capacity(2 * k + 1);
+        offsets.push(0);
+        let mut idx = Vec::new();
         let mut mag = 0.0f32;
         for p in 0..k {
-            for q in 0..d {
-                let v = r.at2(p, q);
+            let row = &r.data()[p * d..(p + 1) * d];
+            for (q, &v) in row.iter().enumerate() {
                 if v > 0.0 {
-                    plus[p].push(q as u32);
+                    idx.push(q as u32);
                     mag = v;
-                } else if v < 0.0 {
-                    minus[p].push(q as u32);
+                }
+            }
+            offsets.push(idx.len());
+            for (q, &v) in row.iter().enumerate() {
+                if v < 0.0 {
+                    idx.push(q as u32);
                     mag = -v;
                 }
             }
+            offsets.push(idx.len());
         }
-        TernaryIndex { k, d, scale: mag / (k as f32).sqrt(), plus, minus }
+        TernaryIndex { k, d, scale: mag / (k as f32).sqrt(), offsets, idx }
+    }
+
+    /// The + input dims of projected dim `p` (ascending).
+    #[inline]
+    pub fn plus_row(&self, p: usize) -> &[u32] {
+        &self.idx[self.offsets[2 * p]..self.offsets[2 * p + 1]]
+    }
+
+    /// The - input dims of projected dim `p` (ascending).
+    #[inline]
+    pub fn minus_row(&self, p: usize) -> &[u32] {
+        &self.idx[self.offsets[2 * p + 1]..self.offsets[2 * p + 2]]
     }
 
     /// Project one row: y[p] = scale * (sum_plus x - sum_minus x).
+    /// Fused ± pass over the flat index array, 4-wide unrolled with
+    /// sequential accumulation (bit-identical to the nested-Vec form).
     pub fn project_row(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.d);
         debug_assert_eq!(out.len(), self.k);
-        for p in 0..self.k {
-            let mut acc = 0.0f32;
-            for &q in &self.plus[p] {
-                acc += x[q as usize];
-            }
-            for &q in &self.minus[p] {
-                acc -= x[q as usize];
-            }
-            out[p] = acc * self.scale;
+        for (p, o) in out.iter_mut().enumerate() {
+            let acc = sub_indexed(
+                add_indexed(0.0, x, self.plus_row(p)),
+                x,
+                self.minus_row(p),
+            );
+            *o = acc * self.scale;
         }
     }
 
     /// Adds per projected row (the DRS overhead metric: no multiplies).
     pub fn adds_per_row(&self) -> usize {
-        self.plus.iter().map(|v| v.len()).sum::<usize>()
-            + self.minus.iter().map(|v| v.len()).sum::<usize>()
+        self.idx.len()
     }
 }
 
-/// Project rows of x (m, d) -> (m, k): f(X) = X R^T / sqrt(k).
-pub fn project_rows(x: &Tensor, r: &Tensor) -> Tensor {
-    let idx = TernaryIndex::from_dense(r);
+/// Project rows of x (m, d) -> (m, k) through a prebuilt index:
+/// f(X) = X R^T / sqrt(k).
+pub fn project_rows_idx(x: &Tensor, idx: &TernaryIndex) -> Tensor {
     let m = x.shape()[0];
     let mut out = vec![0.0f32; m * idx.k];
     for i in 0..m {
@@ -81,22 +158,29 @@ pub fn project_rows(x: &Tensor, r: &Tensor) -> Tensor {
     Tensor::new(&[m, idx.k], out)
 }
 
-/// Project weights: f(W) = R W / sqrt(k).  w: (d, n) -> (k, n).
-pub fn project_weights(r: &Tensor, w: &Tensor) -> Tensor {
-    let idx = TernaryIndex::from_dense(r);
+/// Project rows of x (m, d) -> (m, k): f(X) = X R^T / sqrt(k).
+/// Compat wrapper that rebuilds the index; hot paths hold a prebuilt
+/// [`TernaryIndex`] and call [`project_rows_idx`].
+pub fn project_rows(x: &Tensor, r: &Tensor) -> Tensor {
+    project_rows_idx(x, &TernaryIndex::from_dense(r))
+}
+
+/// Project weights through a prebuilt index: f(W) = R W / sqrt(k).
+/// w: (d, n) -> (k, n).
+pub fn project_weights_idx(idx: &TernaryIndex, w: &Tensor) -> Tensor {
     let (d, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(d, idx.d, "w rows {d} != r cols {}", idx.d);
     let mut out = vec![0.0f32; idx.k * n];
     let wd = w.data();
     for p in 0..idx.k {
         let orow = &mut out[p * n..(p + 1) * n];
-        for &q in &idx.plus[p] {
+        for &q in idx.plus_row(p) {
             let wrow = &wd[q as usize * n..(q as usize + 1) * n];
             for j in 0..n {
                 orow[j] += wrow[j];
             }
         }
-        for &q in &idx.minus[p] {
+        for &q in idx.minus_row(p) {
             let wrow = &wd[q as usize * n..(q as usize + 1) * n];
             for j in 0..n {
                 orow[j] -= wrow[j];
@@ -107,6 +191,13 @@ pub fn project_weights(r: &Tensor, w: &Tensor) -> Tensor {
         }
     }
     Tensor::new(&[idx.k, n], out)
+}
+
+/// Project weights: f(W) = R W / sqrt(k).  w: (d, n) -> (k, n).
+/// Compat wrapper that rebuilds the index; hot paths hold a prebuilt
+/// [`TernaryIndex`] and call [`project_weights_idx`].
+pub fn project_weights(r: &Tensor, w: &Tensor) -> Tensor {
+    project_weights_idx(&TernaryIndex::from_dense(r), w)
 }
 
 #[cfg(test)]
@@ -195,6 +286,52 @@ mod tests {
         let adds = idx.adds_per_row();
         let frac = adds as f64 / (100.0 * 900.0);
         assert!((frac - 1.0 / 3.0).abs() < 0.03, "nonzero frac {frac}");
+    }
+
+    #[test]
+    fn flat_csr_matches_nested_reference_bitwise() {
+        // the flat signed-CSR walk must reproduce the original
+        // nested-Vec accumulation order to the BIT: + adds in ascending
+        // order, then - subtracts from the same running accumulator
+        let mut rng = Pcg32::seeded(36);
+        let (k, d) = (24, 150);
+        let r = ternary_r(&mut rng, k, d, 3);
+        let idx = TernaryIndex::from_dense(&r);
+        let x: Vec<f32> = rng.normal_vec(d, 1.0);
+        let mut got = vec![0.0f32; k];
+        idx.project_row(&x, &mut got);
+        for p in 0..k {
+            let mut acc = 0.0f32;
+            for q in 0..d {
+                if r.at2(p, q) > 0.0 {
+                    acc += x[q];
+                }
+            }
+            for q in 0..d {
+                if r.at2(p, q) < 0.0 {
+                    acc -= x[q];
+                }
+            }
+            assert_eq!(got[p].to_bits(), (acc * idx.scale).to_bits(), "dim {p}");
+            // and the runs themselves are ascending / disjoint
+            for w in idx.plus_row(p).windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for w in idx.minus_row(p).windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn prebuilt_index_wrappers_match_compat_paths() {
+        let mut rng = Pcg32::seeded(37);
+        let r = ternary_r(&mut rng, 10, 40, 3);
+        let idx = TernaryIndex::from_dense(&r);
+        let x = Tensor::new(&[6, 40], rng.normal_vec(6 * 40, 1.0));
+        let w = Tensor::new(&[40, 12], rng.normal_vec(40 * 12, 1.0));
+        assert_eq!(project_rows(&x, &r), project_rows_idx(&x, &idx));
+        assert_eq!(project_weights(&r, &w), project_weights_idx(&idx, &w));
     }
 
     #[test]

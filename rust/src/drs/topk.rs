@@ -76,13 +76,26 @@ pub fn shared_threshold_slice(
 /// and lets the VMM jump straight to the selected neurons.  Indices are
 /// ascending within a row, so engines visiting them reproduce the
 /// dense-mask scan order bit-for-bit.
+///
+/// A keep-all mask (gamma = 0 / dense mode) is IMPLICIT: it stores one
+/// shared `0..width` index row that [`RowMask::row`] serves for every
+/// row, instead of materializing `rows * width` u32 indices.  Every
+/// constructor canonicalizes to this form whenever the selection turns
+/// out to be full, so structural equality (`==`) keeps working and
+/// [`RowMask::nbytes`] — and with it the training-tape
+/// [`crate::metrics::MemoryMeter`] accounting — charges O(width), not
+/// O(rows * width), for the gamma-0 baseline.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RowMask {
     rows: usize,
     width: usize,
-    /// rows + 1 offsets into `idx`.
+    /// Canonical keep-all flag: `idx` holds ONE shared `0..width` row
+    /// and `offsets` collapses to `[0]`.
+    full: bool,
+    /// rows + 1 offsets into `idx` (just `[0]` when `full`).
     offsets: Vec<usize>,
-    /// Selected column indices, ascending within each row.
+    /// Selected column indices, ascending within each row (the shared
+    /// `0..width` row when `full`).
     idx: Vec<u32>,
 }
 
@@ -95,7 +108,7 @@ impl Default for RowMask {
 impl RowMask {
     /// An empty 0 x 0 mask (workspace placeholder; fill before use).
     pub fn new() -> RowMask {
-        RowMask { rows: 0, width: 0, offsets: vec![0], idx: Vec::new() }
+        RowMask { rows: 0, width: 0, full: false, offsets: vec![0], idx: Vec::new() }
     }
 
     pub fn rows(&self) -> usize {
@@ -106,14 +119,34 @@ impl RowMask {
         self.width
     }
 
-    /// Selected column indices of row `i` (ascending).
+    /// Selected column indices of row `i` (ascending).  A full mask
+    /// serves the one shared `0..width` row for every `i`.
     pub fn row(&self, i: usize) -> &[u32] {
+        if self.full {
+            debug_assert!(i < self.rows);
+            return &self.idx;
+        }
         &self.idx[self.offsets[i]..self.offsets[i + 1]]
     }
 
     /// Total selected entries.
     pub fn selected(&self) -> usize {
+        if self.full {
+            return self.rows * self.width;
+        }
         self.idx.len()
+    }
+
+    /// Canonicalize a fully-selected explicit mask into the implicit
+    /// keep-all form: keep the first row's `0..width` indices as the
+    /// shared row, drop the per-row storage.
+    fn canonicalize_full(&mut self) {
+        if !self.full && self.rows * self.width > 0 && self.idx.len() == self.rows * self.width {
+            self.full = true;
+            self.idx.truncate(self.width); // row 0 IS 0..width when full
+            self.offsets.clear();
+            self.offsets.push(0);
+        }
     }
 
     /// Heap bytes this mask holds (index list + offsets) — what the
@@ -130,14 +163,13 @@ impl RowMask {
         if total == 0 {
             return 0.0;
         }
-        self.idx.len() as f64 / total as f64
+        self.selected() as f64 / total as f64
     }
 
     /// True when every entry is selected (gamma = 0 keep-all): engines
     /// take a dense fast path with no index indirection.
     pub fn is_full(&self) -> bool {
-        let total = self.rows * self.width;
-        total > 0 && self.idx.len() == total
+        self.full
     }
 
     /// Rebuild in place from row-major virtual activations and a shared
@@ -145,6 +177,16 @@ impl RowMask {
     pub fn fill_from_threshold(&mut self, virt: &[f32], rows: usize, width: usize, t: f32) {
         debug_assert_eq!(virt.len(), rows * width);
         assert!(width <= u32::MAX as usize, "mask width {width} exceeds u32");
+        if t == f32::NEG_INFINITY {
+            // keep-all threshold: every finite (and NaN-free) activation
+            // passes `v >= -inf`, so skip the scan and go straight to
+            // the implicit form.  NaN virt entries would fail the
+            // comparison, but a NaN virtual activation means the run is
+            // already lost — selection shape is the least of it.
+            self.fill_full(rows, width);
+            return;
+        }
+        self.full = false;
         self.rows = rows;
         self.width = width;
         self.offsets.clear();
@@ -160,26 +202,29 @@ impl RowMask {
             }
             self.offsets.push(self.idx.len());
         }
+        self.canonicalize_full();
     }
 
     /// Rebuild in place as the keep-all mask (every column of every row
-    /// selected) — bit-identical to `fill_from_threshold` with a -inf
-    /// threshold, without needing virtual activations (the dense-mode
-    /// training path).
+    /// selected) — equal to `fill_from_threshold` with a -inf threshold,
+    /// without needing virtual activations (the dense-mode training
+    /// path).  Stores one shared `0..width` row, NOT rows * width
+    /// indices.
     pub fn fill_full(&mut self, rows: usize, width: usize) {
         assert!(width <= u32::MAX as usize, "mask width {width} exceeds u32");
         self.rows = rows;
         self.width = width;
-        self.offsets.clear();
-        self.offsets.reserve(rows + 1);
-        self.offsets.push(0);
         self.idx.clear();
-        self.idx.reserve(rows * width);
-        for _ in 0..rows {
-            for j in 0..width {
-                self.idx.push(j as u32);
-            }
-            self.offsets.push(self.idx.len());
+        self.offsets.clear();
+        if rows * width > 0 {
+            self.full = true;
+            self.idx.extend(0..width as u32);
+            self.offsets.push(0);
+        } else {
+            // degenerate shape: empty explicit mask so `row(i)` still
+            // works for width-0 rows
+            self.full = false;
+            self.offsets.resize(rows + 1, 0);
         }
     }
 
@@ -208,6 +253,7 @@ impl RowMask {
             }
             m.offsets.push(m.idx.len());
         }
+        m.canonicalize_full();
         m
     }
 
@@ -461,9 +507,30 @@ mod tests {
         let full = select_rowmask(&v, 0.0);
         let half = select_rowmask(&v, 0.5);
         let word = std::mem::size_of::<usize>();
-        assert_eq!(full.nbytes(), 4 * 4 * 64 + word * 5);
+        // keep-all is implicit: one shared 0..width row + one offset,
+        // NOT rows * width indices (the fig6 gamma-0 baseline fix)
+        assert_eq!(full.nbytes(), 4 * 64 + word);
         assert_eq!(half.nbytes(), 4 * half.selected() + word * 5);
-        assert!(half.nbytes() < full.nbytes());
+        assert!(full.nbytes() < half.nbytes());
+    }
+
+    #[test]
+    fn implicit_full_mask_serves_shared_row() {
+        let mut rng = Pcg32::seeded(53);
+        let v = randn(&mut rng, &[5, 17]);
+        let full = select_rowmask(&v, 0.0);
+        assert!(full.is_full());
+        assert_eq!(full.selected(), 5 * 17);
+        assert_eq!(full.density(), 1.0);
+        let want: Vec<u32> = (0..17).collect();
+        for i in 0..5 {
+            assert_eq!(full.row(i), &want[..], "row {i}");
+        }
+        // an explicitly-constructed full selection canonicalizes to the
+        // same implicit representation (so `==` keeps working)
+        let dense = Tensor::full(&[5, 17], 1.0);
+        assert_eq!(RowMask::from_dense(&dense), full);
+        assert_eq!(full.to_dense(), dense);
     }
 
     #[test]

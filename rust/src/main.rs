@@ -74,8 +74,8 @@ USAGE: dsg <command> [--flags]
 COMMANDS:
   train    --model NAME [--engine artifact|native] [--gamma G] [--steps N]
            [--lr F] [--warmup N] [--refresh N] [--seed N] [--batch N]
-           [--threads N] [--tape dense|zvc] [--config FILE] [--csv FILE]
-           [--checkpoint FILE]
+           [--threads N] [--tape dense|zvc] [--kernels compound|output]
+           [--config FILE] [--csv FILE] [--checkpoint FILE]
            `--engine native` (models: mlp, lenet, vgg8, vgg8s, resnet8,
            wrn8_2, each also as NAME_dense) trains entirely on the
            host-side engine: no PJRT, no artifacts — Algorithm 1 with
@@ -83,6 +83,9 @@ COMMANDS:
            `--tape zvc` stores the training tape ZVC-compressed
            (bit-identical results, Fig 6 memory saving — measured peak
            tape bytes are reported after the run).
+           `--kernels output` runs the output-sparse-only kernel
+           baseline (bit-identical to the default compound kernels;
+           for A/B perf and ops comparisons).
   eval     --model NAME --checkpoint FILE [--gamma G]
   info     [--model NAME]         artifact inventory / variant detail
   memory   [--gamma G]            Fig 6 representational-cost report
@@ -146,7 +149,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             // these knobs only exist natively; the artifact batch shape
             // is baked into the HLO — ignoring them would silently run
             // something other than what was asked for
-            for flag in ["batch", "threads", "tape"] {
+            for flag in ["batch", "threads", "tape", "kernels"] {
                 anyhow::ensure!(
                     args.get(flag).is_none(),
                     "--{flag} requires --engine native (the artifact batch/threading \
@@ -184,6 +187,11 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown --tape {t:?} (dense | zvc)"))?;
             trainer = trainer.with_tape(tape);
         }
+        if let Some(k) = args.get("kernels") {
+            let kernels = sparse::parallel::SparseKernels::parse(k)
+                .ok_or_else(|| anyhow::anyhow!("unknown --kernels {k:?} (compound | output)"))?;
+            trainer = trainer.with_kernels(kernels);
+        }
         let acc = trainer.train(&cfg, &train, &test)?;
         // measured training-tape footprint of the final step (Fig 6 made
         // real: peak bytes the backward actually needed, vs dense)
@@ -206,6 +214,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 dsg::util::human_bytes(mem.dense_peak()),
                 mem.reduction()
             );
+        }
+        // measured Fig 9: multiply-adds the compound kernels actually
+        // executed in the final step vs the dense-equivalent baseline
+        let ops = trainer.ops();
+        if ops.total_dense() > 0 {
+            println!("realized ops (last step): {}", ops.summary());
+            let per: Vec<String> = ops
+                .layers()
+                .iter()
+                .map(|l| format!("{} {:.2}x", l.name.trim_start_matches("params."), l.reduction()))
+                .collect();
+            println!("  per layer: [{}]", per.join(", "));
         }
         // per-layer density report: the paper's 1-gamma tracking
         let dens = trainer.history.mean_densities(20);
@@ -423,18 +443,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // bit-exact under any split, so predictions don't depend on this
     let intra = (cores / workers).max(1);
 
-    // Build the forward fn + deterministic request images.
-    let (forward, images, max_batch, input_elems, classes): (
+    // Build the forward fn + deterministic request images.  `ops_meter`
+    // aggregates realized vs dense-equivalent multiply-adds across every
+    // worker (the serve-side Fig 9 number).
+    let (forward, images, max_batch, input_elems, classes, ops_meter): (
         Box<dyn Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync>,
         Vec<Vec<f32>>,
         usize,
         usize,
         usize,
+        std::sync::Arc<dsg::metrics::OpsMeter>,
     ) = if model == "synthetic" {
         let data = datasets::fashion_like(requests.max(1), seed);
         let d = data.input_elems();
         let max_batch = args.get_usize("max-batch")?.unwrap_or(32);
         let m = SynthModel::new(seed, &[d, 512, 256], 10, gamma).with_intra_threads(intra);
+        let ops = m.ops_meter();
         let images: Vec<Vec<f32>> = datasets::BatchIter::eval_batches(&data, 1)
             .into_iter()
             .take(requests)
@@ -442,7 +466,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .collect();
         let classes = m.classes;
         let fwd = move |xs: &[f32]| m.forward(xs, max_batch);
-        (Box::new(fwd), images, max_batch, d, classes)
+        (Box::new(fwd), images, max_batch, d, classes, ops)
     } else {
         let dir = dsg::artifacts_dir();
         let meta = Meta::load(&dir, &model)?;
@@ -471,12 +495,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .take(requests)
             .map(|(xs, _, _)| xs)
             .collect();
+        let ops = std::sync::Arc::new(dsg::metrics::OpsMeter::new());
+        let ops_in = ops.clone();
         let fwd = move |xs: &[f32]| -> Result<Vec<f32>> {
             let xt = dsg::Tensor::new(&shape, xs.to_vec());
             let out = nm.forward_threaded(&xt, gamma, native::Mode::Dsg, intra)?;
+            for s in &out.stats {
+                ops_in.add(s.realized_madds, s.dense_madds);
+            }
             Ok(out.logits.into_data())
         };
-        (Box::new(fwd), images, max_batch, d, classes)
+        (Box::new(fwd), images, max_batch, d, classes, ops)
     };
 
     anyhow::ensure!(max_batch > 0, "--max-batch must be at least 1");
@@ -511,6 +540,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.compute.summary(),
         report.wall
     );
+    if ops_meter.dense() > 0 {
+        println!("realized ops (all batches): {}", ops_meter.summary());
+    }
     Ok(())
 }
 

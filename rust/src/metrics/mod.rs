@@ -3,9 +3,11 @@
 
 pub mod hist;
 pub mod memory;
+pub mod ops;
 
 pub use hist::LatencyHistogram;
 pub use memory::{MemoryMeter, TapeAlloc};
+pub use ops::{LayerOps, OpsCounter, OpsMeter};
 
 use std::io::Write;
 

@@ -1,0 +1,214 @@
+//! Measured operation counting — the paper's Fig 9 reduction ratios as
+//! numbers we record, not just model.
+//!
+//! The compound kernels ([`crate::sparse::parallel`]) return the
+//! multiply-adds they actually executed (the dispatch decides per layer
+//! and per row between dense sweeps and indexed accumulation, and the
+//! count follows the decision).  This module aggregates those counts
+//! against the dense-equivalent baseline `m * d * n`, per named layer,
+//! so `dsg train` / `dsg serve` summaries and the hotpath bench can
+//! report realized-ops reductions à la Fig 9.
+//!
+//! Two shapes:
+//!   * [`OpsCounter`] — per-layer named records for engines that walk a
+//!     topology (native forward / backward).
+//!   * [`OpsMeter`]   — two shared atomics for concurrent paths (serve
+//!     workers) where per-layer attribution isn't worth a lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Realized vs dense-equivalent multiply-adds of one layer.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerOps {
+    pub name: String,
+    /// Multiply-adds the kernels actually executed.
+    pub realized: u64,
+    /// What a dense GEMM of the same shape costs (m * d * n).
+    pub dense: u64,
+}
+
+impl LayerOps {
+    /// Dense / realized — the Fig 9 reduction ratio (1.0 when nothing
+    /// was realized, so empty layers don't divide by zero).
+    pub fn reduction(&self) -> f64 {
+        if self.realized == 0 {
+            return 1.0;
+        }
+        self.dense as f64 / self.realized as f64
+    }
+}
+
+/// Accumulating per-layer operation counts (forward and/or backward),
+/// merged by layer name in first-seen order.
+#[derive(Clone, Debug, Default)]
+pub struct OpsCounter {
+    layers: Vec<LayerOps>,
+}
+
+impl OpsCounter {
+    pub fn new() -> OpsCounter {
+        OpsCounter::default()
+    }
+
+    /// Forget everything (capacity kept).
+    pub fn reset(&mut self) {
+        self.layers.clear();
+    }
+
+    /// Add one layer's counts (accumulates if the name was seen before,
+    /// so forward + backward of the same layer merge into one record).
+    pub fn record(&mut self, name: &str, realized: u64, dense: u64) {
+        if let Some(l) = self.layers.iter_mut().find(|l| l.name == name) {
+            l.realized += realized;
+            l.dense += dense;
+        } else {
+            self.layers.push(LayerOps { name: name.to_string(), realized, dense });
+        }
+    }
+
+    /// Per-layer records in first-seen (topology) order.
+    pub fn layers(&self) -> &[LayerOps] {
+        &self.layers
+    }
+
+    pub fn total_realized(&self) -> u64 {
+        self.layers.iter().map(|l| l.realized).sum()
+    }
+
+    pub fn total_dense(&self) -> u64 {
+        self.layers.iter().map(|l| l.dense).sum()
+    }
+
+    /// Overall dense / realized reduction (1.0 for an empty counter).
+    pub fn reduction(&self) -> f64 {
+        let r = self.total_realized();
+        if r == 0 {
+            return 1.0;
+        }
+        self.total_dense() as f64 / r as f64
+    }
+
+    /// One-line human summary for CLI reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} realized vs {} dense-equivalent madds -> {:.2}x reduction",
+            human_madds(self.total_realized()),
+            human_madds(self.total_dense()),
+            self.reduction()
+        )
+    }
+}
+
+/// Lock-free realized/dense aggregate for concurrent paths (relaxed
+/// adds: totals are exact, interleaving order is irrelevant for sums).
+#[derive(Debug, Default)]
+pub struct OpsMeter {
+    realized: AtomicU64,
+    dense: AtomicU64,
+}
+
+impl OpsMeter {
+    pub fn new() -> OpsMeter {
+        OpsMeter::default()
+    }
+
+    pub fn add(&self, realized: u64, dense: u64) {
+        self.realized.fetch_add(realized, Ordering::Relaxed);
+        self.dense.fetch_add(dense, Ordering::Relaxed);
+    }
+
+    pub fn realized(&self) -> u64 {
+        self.realized.load(Ordering::Relaxed)
+    }
+
+    pub fn dense(&self) -> u64 {
+        self.dense.load(Ordering::Relaxed)
+    }
+
+    pub fn reduction(&self) -> f64 {
+        let r = self.realized();
+        if r == 0 {
+            return 1.0;
+        }
+        self.dense() as f64 / r as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} realized vs {} dense-equivalent madds -> {:.2}x reduction",
+            human_madds(self.realized()),
+            human_madds(self.dense()),
+            self.reduction()
+        )
+    }
+}
+
+/// Format a multiply-add count with engineering units.
+pub fn human_madds(n: u64) -> String {
+    let f = n as f64;
+    if f >= 1e9 {
+        format!("{:.2}G", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2}M", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.2}k", f / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_merges_by_name() {
+        let mut c = OpsCounter::new();
+        c.record("conv1", 100, 400);
+        c.record("conv2", 50, 100);
+        c.record("conv1", 25, 100); // backward of conv1 merges
+        assert_eq!(c.layers().len(), 2);
+        assert_eq!(c.layers()[0].realized, 125);
+        assert_eq!(c.layers()[0].dense, 500);
+        assert_eq!(c.total_realized(), 175);
+        assert_eq!(c.total_dense(), 600);
+        assert!((c.reduction() - 600.0 / 175.0).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.reduction(), 1.0);
+        assert!(c.layers().is_empty());
+    }
+
+    #[test]
+    fn layer_reduction_and_empty_cases() {
+        let l = LayerOps { name: "x".into(), realized: 250, dense: 1000 };
+        assert!((l.reduction() - 4.0).abs() < 1e-12);
+        let z = LayerOps { name: "z".into(), realized: 0, dense: 0 };
+        assert_eq!(z.reduction(), 1.0);
+    }
+
+    #[test]
+    fn meter_accumulates_concurrently() {
+        let m = std::sync::Arc::new(OpsMeter::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        m.add(3, 12);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.realized(), 1200);
+        assert_eq!(m.dense(), 4800);
+        assert!((m.reduction() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn madds_formatting() {
+        assert_eq!(human_madds(12), "12");
+        assert_eq!(human_madds(1500), "1.50k");
+        assert_eq!(human_madds(2_000_000), "2.00M");
+        assert_eq!(human_madds(3_500_000_000), "3.50G");
+    }
+}

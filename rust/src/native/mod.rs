@@ -48,6 +48,11 @@ pub struct LayerStat {
     pub secs: f64,
     pub drs_secs: f64,
     pub density: f64,
+    /// Multiply-adds the kernels actually executed (compound dispatch
+    /// counts what it ran; dense branches count the full GEMM).
+    pub realized_madds: u64,
+    /// Dense-equivalent baseline m * d * n for the same shape.
+    pub dense_madds: u64,
 }
 
 /// Output of one native forward pass.
@@ -220,7 +225,10 @@ pub fn project_host(meta: &Meta, state: &mut ModelState) -> Result<()> {
             Tensor::new(&wshape, w.as_f32()?.to_vec())
         };
         let rt = to_tensor(r)?;
-        let wp = crate::drs::project_weights(&rt, &wmat);
+        // index built once per layer refresh, shared with the projection
+        // (project_weights would rebuild it internally)
+        let ridx = TernaryIndex::from_dense(&rt);
+        let wp = crate::drs::project_weights_idx(&ridx, &wmat);
         let spec = &meta.wps[li];
         anyhow::ensure!(
             wp.shape() == &spec.shape[..],
@@ -407,7 +415,16 @@ impl NativeModel {
     }
 
     /// One DSG (or dense) "matmul layer" over rows: masked, ReLU'd,
-    /// BN'd, re-masked output rows written into `out`, stats returned.
+    /// BN'd, re-masked output rows written into `out`, stats returned
+    /// along with the estimated nonzero density of the output — the
+    /// next layer's compound-dispatch hint.
+    ///
+    /// `in_density` is THIS layer's hint: the measured mask density of
+    /// the producing layer (adjusted for ReLU/BN), 1.0 for raw inputs.
+    /// The masked VMM routes through the compound kernels, which exploit
+    /// the input-side zeros when the hint (and the per-row gathered nnz)
+    /// says they pay — every dispatch branch is bit-identical, so the
+    /// hint affects time, never bits.
     ///
     /// `threads = None` runs the single-threaded reference engines;
     /// `Some(t)` routes through the pool-backed `sparse::parallel` with
@@ -428,18 +445,20 @@ impl NativeModel {
         sample0_rows: usize,
         mode: Mode,
         threads: Option<usize>,
+        in_density: f32,
         name: &str,
         scratch: &mut LayerScratch,
         out: &mut Vec<f32>,
-    ) -> LayerStat {
+    ) -> (LayerStat, f32) {
         let t0 = std::time::Instant::now();
         let n = wt.shape()[0];
         debug_assert_eq!(x.len(), m * d);
+        let dense_madds = (m * d * n) as u64;
         // every kernel below fully writes its output range, so the
         // buffer only needs the right LENGTH — no clear(): resize
         // zero-fills just the grown tail, not the whole prefix
         out.resize(m * n, 0.0);
-        let (drs_secs, density, masked) = match (mode, dsg_idx) {
+        let (drs_secs, density, masked, realized) = match (mode, dsg_idx) {
             (Mode::Dsg, Some(di)) if !self.dsg.is_empty() && gamma > 0.0 => {
                 let side = &self.dsg[di];
                 let td = std::time::Instant::now();
@@ -464,22 +483,27 @@ impl NativeModel {
                     &scratch.virt, n, gamma, sample0_rows, &mut scratch.thr, &mut scratch.mask,
                 );
                 let drs = td.elapsed().as_secs_f64();
-                match threads {
-                    Some(t) => sparse::parallel::dsg_vmm_rowmask_parallel_into(
-                        x, m, d, wt.data(), n, &scratch.mask, t, out,
-                    ),
-                    None => sparse::parallel::vmm_rowmask_chunk(
-                        x, wt.data(), d, n, &scratch.mask, 0, m, out,
-                    ),
-                }
-                (drs, scratch.mask.density(), true)
+                let realized = sparse::parallel::dsg_vmm_compound_parallel_into(
+                    x,
+                    m,
+                    d,
+                    wt.data(),
+                    n,
+                    &scratch.mask,
+                    in_density,
+                    threads.unwrap_or(1),
+                    out,
+                );
+                (drs, scratch.mask.density(), true, realized)
             }
             _ => {
                 match threads {
                     Some(t) => sparse::parallel::matmul_parallel_into(x, m, d, w.data(), n, t, out),
                     None => ops::matmul_blocked_into(x, m, d, w.data(), n, out),
                 }
-                (0.0, 1.0, false)
+                // the dense GEMM's opportunistic zero-skip is not
+                // counted: this IS the dense baseline
+                (0.0, 1.0, false, dense_madds)
             }
         };
         ops::relu_slice(out);
@@ -487,12 +511,23 @@ impl NativeModel {
         if masked && self.double_mask {
             Self::apply_mask_rows(out, n, &scratch.mask);
         }
-        LayerStat {
+        // next layer's dispatch hint from the measured mask density
+        // (`density` is already 1.0 on the unmasked dense arm) — the
+        // rule is shared with the training and synth engines
+        let out_density = sparse::parallel::density_hint_after_layer(
+            density as f32,
+            self.use_bn,
+            self.double_mask && masked,
+        );
+        let stat = LayerStat {
             name: name.to_string(),
             secs: t0.elapsed().as_secs_f64(),
             drs_secs,
             density,
-        }
+            realized_madds: realized,
+            dense_madds,
+        };
+        (stat, out_density)
     }
 
     /// rows (N*P*Q, K) -> NCHW into a reused buffer.
@@ -521,7 +556,9 @@ impl NativeModel {
     }
 
     /// One conv unit: im2col into `rows_buf`, masked layer into `y_buf`,
-    /// NCHW result into `out`.  Returns the output dims.
+    /// NCHW result into `out`.  Returns the output dims and the next
+    /// layer's density hint (im2col and the rows->NCHW flip replicate
+    /// values, which preserves the zero fraction the hint estimates).
     #[allow(clippy::too_many_arguments)]
     fn conv_unit_ws(
         &self,
@@ -533,19 +570,20 @@ impl NativeModel {
         gamma: f32,
         mode: Mode,
         threads: Option<usize>,
+        in_density: f32,
         scratch: &mut LayerScratch,
         rows_buf: &mut Vec<f32>,
         y_buf: &mut Vec<f32>,
         out: &mut Vec<f32>,
         stats: &mut Vec<LayerStat>,
-    ) -> (usize, usize, usize, usize) {
+    ) -> ((usize, usize, usize, usize), f32) {
         let cp = &self.convs[key];
         let (n, c, h, w) = dims;
         let (p, q) =
             ops::im2col_slice_into(x, n, c, h, w, cp.ksize, cp.stride, cp.pad, rows_buf);
         let d = c * cp.ksize * cp.ksize;
         let kout = cp.wt.shape()[0];
-        let stat = self.rows_layer_ws(
+        let (stat, out_density) = self.rows_layer_ws(
             rows_buf,
             n * p * q,
             d,
@@ -557,13 +595,14 @@ impl NativeModel {
             p * q,
             mode,
             threads,
+            in_density,
             &format!("conv{key}"),
             scratch,
             y_buf,
         );
         stats.push(stat);
         Self::rows_to_nchw_into(y_buf, n, kout, p, q, out);
-        (n, kout, p, q)
+        ((n, kout, p, q), out_density)
     }
 
     /// Shortcut conv (no mask / relu / bn) into `out`.
@@ -714,6 +753,9 @@ impl NativeModel {
             4 => Carry::Nchw(n, x.shape()[1], x.shape()[2], x.shape()[3]),
             r => bail!("native forward input rank {r} unsupported"),
         };
+        // compound-dispatch hint: estimated nonzero fraction of the
+        // activation entering the next matmul layer (raw input = dense)
+        let mut hint = 1.0f32;
         for (i, u) in self.units.iter().enumerate() {
             match u {
                 Unit::Dense { .. } => {
@@ -721,7 +763,7 @@ impl NativeModel {
                         bail!("dense unit {i} on non-rows activation")
                     };
                     let dp = &self.denses[&i.to_string()];
-                    let stat = self.rows_layer_ws(
+                    let (stat, out_density) = self.rows_layer_ws(
                         &ws.h,
                         m,
                         d,
@@ -733,10 +775,12 @@ impl NativeModel {
                         1,
                         mode,
                         threads,
+                        hint,
                         &format!("dense{i}"),
                         &mut ws.scratch,
                         &mut ws.y,
                     );
+                    hint = out_density;
                     stats.push(stat);
                     std::mem::swap(&mut ws.h, &mut ws.y);
                     carry = Carry::Rows(m, dp.wt.shape()[0]);
@@ -769,7 +813,7 @@ impl NativeModel {
                     let Carry::Nchw(nn, c, hh, www) = carry else {
                         bail!("conv unit {i} on non-NCHW activation")
                     };
-                    let dims = self.conv_unit_ws(
+                    let (dims, out_density) = self.conv_unit_ws(
                         &ws.h,
                         (nn, c, hh, www),
                         &i.to_string(),
@@ -778,12 +822,14 @@ impl NativeModel {
                         gamma,
                         mode,
                         threads,
+                        hint,
                         &mut ws.scratch,
                         &mut ws.rows,
                         &mut ws.y,
                         &mut ws.t1,
                         &mut stats,
                     );
+                    hint = out_density;
                     std::mem::swap(&mut ws.h, &mut ws.t1);
                     carry = Carry::Nchw(dims.0, dims.1, dims.2, dims.3);
                 }
@@ -791,7 +837,7 @@ impl NativeModel {
                     let Carry::Nchw(nn, c, hh, www) = carry else {
                         bail!("residual unit {i} on non-NCHW activation")
                     };
-                    let d1 = self.conv_unit_ws(
+                    let (d1, h1_density) = self.conv_unit_ws(
                         &ws.h,
                         (nn, c, hh, www),
                         &format!("{i}.conv1"),
@@ -800,13 +846,14 @@ impl NativeModel {
                         gamma,
                         mode,
                         threads,
+                        hint,
                         &mut ws.scratch,
                         &mut ws.rows,
                         &mut ws.y,
                         &mut ws.t1,
                         &mut stats,
                     );
-                    let d2 = self.conv_unit_ws(
+                    let (d2, _) = self.conv_unit_ws(
                         &ws.t1,
                         d1,
                         &format!("{i}.conv2"),
@@ -815,12 +862,16 @@ impl NativeModel {
                         gamma,
                         mode,
                         threads,
+                        h1_density,
                         &mut ws.scratch,
                         &mut ws.rows,
                         &mut ws.y,
                         &mut ws.t2,
                         &mut stats,
                     );
+                    // the residual sum merges two streams (masked main
+                    // path + dense shortcut): treat the output as dense
+                    hint = 1.0;
                     if *stride != 1 || c_in != c_out {
                         self.plain_conv_ws(
                             &ws.h,
@@ -847,6 +898,9 @@ impl NativeModel {
                         bail!("maxpool unit {i} on non-NCHW activation")
                     };
                     let dims = Self::maxpool_into(&ws.h, (nn, c, hh, www), *size, &mut ws.t1);
+                    // max over a size^2 window is zero only when the
+                    // whole window is: density 1 - (1 - p)^(size^2)
+                    hint = 1.0 - (1.0 - hint).powi((*size * *size) as i32);
                     std::mem::swap(&mut ws.h, &mut ws.t1);
                     carry = Carry::Nchw(dims.0, dims.1, dims.2, dims.3);
                 }
@@ -855,6 +909,7 @@ impl NativeModel {
                         bail!("gap unit {i} on non-NCHW activation")
                     };
                     let (rn, rc) = Self::gap_into(&ws.h, (nn, c, hh, www), &mut ws.t1);
+                    hint = 1.0; // plane averages are essentially dense
                     std::mem::swap(&mut ws.h, &mut ws.t1);
                     carry = Carry::Rows(rn, rc);
                 }

@@ -44,10 +44,10 @@
 use crate::coordinator::ModelState;
 use crate::drs::projection::TernaryIndex;
 use crate::drs::topk::RowMask;
-use crate::metrics::{MemoryMeter, TapeAlloc};
+use crate::metrics::{MemoryMeter, OpsCounter, TapeAlloc};
 use crate::native::{to_tensor, Carry, Mode, NativeModel};
 use crate::runtime::{Meta, Unit};
-use crate::sparse::parallel;
+use crate::sparse::parallel::{self, NzIndex, SparseKernels};
 use crate::tensor::ops;
 use crate::zvc;
 use anyhow::{bail, ensure, Result};
@@ -218,6 +218,9 @@ struct Scratch {
     rows: Vec<f32>,
     /// rows-layout upstream gradient (conv backward)
     dyr: Vec<f32>,
+    /// nonzero-coordinate index of the current layer input (shared by
+    /// every gradW chunk — one gather pass per layer, reused storage)
+    nzx: NzIndex,
     drs: DrsScratch,
 }
 
@@ -247,6 +250,10 @@ struct RowsTape {
     var: Vec<f32>,
     invstd: Vec<f32>,
     density: f32,
+    /// estimated nonzero fraction of the layer INPUT (the forward's
+    /// compound-dispatch hint) — reused by the backward to decide
+    /// whether the gradW kernel gathers live input coordinates
+    in_density: f32,
 }
 
 /// Per-unit tape record; `x` is the activation that ENTERED the unit
@@ -394,9 +401,11 @@ pub struct TrainEngine {
     ridx: Vec<TernaryIndex>,
     threads: usize,
     tape: TapeStorage,
+    kernels: SparseKernels,
     scratch: Scratch,
     dec: TapeDecode,
     meter: MemoryMeter,
+    ops: OpsCounter,
 }
 
 impl TrainEngine {
@@ -447,9 +456,11 @@ impl TrainEngine {
             ridx,
             threads: 1,
             tape: TapeStorage::default(),
+            kernels: SparseKernels::default(),
             scratch: Scratch::default(),
             dec: TapeDecode::default(),
             meter: MemoryMeter::new(),
+            ops: OpsCounter::new(),
         })
     }
 
@@ -472,10 +483,25 @@ impl TrainEngine {
         self.tape
     }
 
+    /// Select the sparse kernel family ([`SparseKernels`]).  The
+    /// compound kernels (default) and the output-sparse-only kernels are
+    /// bit-identical — this knob exists for baselines and parity tests.
+    pub fn with_kernels(mut self, kernels: SparseKernels) -> TrainEngine {
+        self.kernels = kernels;
+        self
+    }
+
     /// Measured tape memory of the most recent [`TrainEngine::train_step`]
     /// (live/peak bytes plus the per-record breakdown).
     pub fn memory(&self) -> &MemoryMeter {
         &self.meter
+    }
+
+    /// Measured realized vs dense-equivalent multiply-adds of the most
+    /// recent [`TrainEngine::train_step`] (forward + backward, merged
+    /// per layer — the Fig 9 reduction, recorded not modeled).
+    pub fn ops(&self) -> &OpsCounter {
+        &self.ops
     }
 
     /// The execution mode this meta trains under.
@@ -536,6 +562,13 @@ impl TrainEngine {
     /// relu -> (training) BN -> double mask, recording everything the
     /// backward needs.  `wt` is (n, d) transposed weights (a conv's
     /// natural (K, C*r*s) layout IS this shape).
+    ///
+    /// `in_density` is the compound-dispatch hint (see
+    /// [`NativeModel::rows_layer_ws`]); the second return value is the
+    /// hint for the NEXT layer.  The kernel family comes from
+    /// `self.kernels` — compound by default, output-sparse for the
+    /// parity baseline; both are bit-identical, so the choice never
+    /// changes training results (asserted in `tests/native_train.rs`).
     #[allow(clippy::too_many_arguments)]
     fn rows_layer_forward(
         &self,
@@ -553,9 +586,11 @@ impl TrainEngine {
         mode: Mode,
         train: bool,
         storage: TapeStorage,
+        in_density: f32,
         drs: &mut DrsScratch,
+        ops_ctr: &mut OpsCounter,
         out: &mut Vec<f32>,
-    ) -> Result<RowsTape> {
+    ) -> Result<(RowsTape, f32)> {
         debug_assert_eq!(x.len(), m * d);
         ensure!(wt.len() == n * d, "{w_name}: weight is not ({n}, {d})");
         let t = self.threads;
@@ -576,7 +611,16 @@ impl TrainEngine {
             mask.fill_full(m, n);
         }
         out.resize(m * n, 0.0);
-        parallel::dsg_vmm_rowmask_parallel_into(x, m, d, wt, n, &mask, t, out);
+        let realized = match self.kernels {
+            SparseKernels::Compound => parallel::dsg_vmm_compound_parallel_into(
+                x, m, d, wt, n, &mask, in_density, t, out,
+            ),
+            SparseKernels::OutputSparse => {
+                parallel::dsg_vmm_rowmask_parallel_into(x, m, d, wt, n, &mask, t, out);
+                d as u64 * mask.selected() as u64
+            }
+        };
+        ops_ctr.record(w_name, realized, (m * d * n) as u64);
         ops::relu_slice(out);
         // `out` holds s (post-relu, pre-BN) right now: tape it BEFORE
         // BN mutates the buffer.  Only training needs the tape; in Zvc
@@ -604,22 +648,34 @@ impl TrainEngine {
             }
         }
         let density = mask.density() as f32;
-        Ok(RowsTape {
-            m,
-            d,
-            n,
-            w_name: w_name.to_string(),
-            bn_path,
-            s,
-            mask,
-            mean,
-            var,
-            invstd,
+        // next layer's dispatch hint — the ONE shared rule, so training
+        // and inference dispatch identically
+        let out_density = parallel::density_hint_after_layer(
             density,
-        })
+            self.meta.use_bn && bn_path.is_some(),
+            self.meta.double_mask,
+        );
+        Ok((
+            RowsTape {
+                m,
+                d,
+                n,
+                w_name: w_name.to_string(),
+                bn_path,
+                s,
+                mask,
+                mean,
+                var,
+                invstd,
+                density,
+                in_density,
+            },
+            out_density,
+        ))
     }
 
-    /// One conv unit: im2col -> masked rows layer -> NCHW.
+    /// One conv unit: im2col -> masked rows layer -> NCHW.  Returns the
+    /// tape record, the spatial dims, and the next layer's density hint.
     #[allow(clippy::too_many_arguments)]
     fn conv_unit_forward(
         &self,
@@ -635,16 +691,18 @@ impl TrainEngine {
         mode: Mode,
         train: bool,
         storage: TapeStorage,
+        in_density: f32,
         scr: &mut Scratch,
+        ops_ctr: &mut OpsCounter,
         out_nchw: &mut Vec<f32>,
-    ) -> Result<(RowsTape, usize, usize)> {
+    ) -> Result<(RowsTape, usize, usize, f32)> {
         let (nb, c, hh, ww) = dims;
         let (p, q) = ops::im2col_slice_into(x, nb, c, hh, ww, cs.ksize, cs.stride, cs.pad, &mut scr.rows);
         let d = c * cs.ksize * cs.ksize;
         let wflat = self.getf(state, w_name)?; // (K, C, r, s) flat == wt (K, CRS)
         let mut y = Vec::new();
         let Scratch { rows, drs, .. } = &mut *scr;
-        let rt = self.rows_layer_forward(
+        let (rt, out_density) = self.rows_layer_forward(
             state,
             rows,
             nb * p * q,
@@ -659,11 +717,13 @@ impl TrainEngine {
             mode,
             train,
             storage,
+            in_density,
             drs,
+            ops_ctr,
             &mut y,
         )?;
         NativeModel::rows_to_nchw_into(&y, nb, kout, p, q, out_nchw);
-        Ok((rt, p, q))
+        Ok((rt, p, q, out_density))
     }
 
     /// Full taped forward.  `train` selects batch-stat BN (vs running
@@ -681,6 +741,7 @@ impl TrainEngine {
         scr: &mut Scratch,
         tape: &mut Vec<UnitTape>,
         meter: &mut MemoryMeter,
+        ops_ctr: &mut OpsCounter,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         ensure!(
             x.len() == m * self.meta.input_elems(),
@@ -700,6 +761,8 @@ impl TrainEngine {
         let mut h: Vec<f32> = x.to_vec();
         let mut densities = Vec::new();
         let mut dsg_i = 0usize;
+        // compound-dispatch hint: raw input is dense
+        let mut hint = 1.0f32;
         for (i, u) in self.meta.units.iter().enumerate() {
             match u {
                 Unit::Dense { d_in, d_out } => {
@@ -713,10 +776,11 @@ impl TrainEngine {
                     let mut out = Vec::new();
                     let Scratch { wt, drs, .. } = &mut *scr;
                     ops::transpose_into(wsl, d, *d_out, wt);
-                    let rt = self.rows_layer_forward(
+                    let (rt, out_density) = self.rows_layer_forward(
                         state, &h, mm, d, wt, *d_out, &w_name, bn_path, dsg_i, gamma, 1, mode,
-                        train, st, drs, &mut out,
+                        train, st, hint, drs, ops_ctr, &mut out,
                     )?;
+                    hint = out_density;
                     densities.push(rt.density);
                     dsg_i += 1;
                     let xt = TapedAct::store(std::mem::replace(&mut h, out), st, self.threads);
@@ -733,6 +797,8 @@ impl TrainEngine {
                     let wsl = self.getf(state, &w_name)?; // (d, c)
                     let mut out = vec![0.0f32; mm * d_out];
                     parallel::matmul_parallel_into(&h, mm, d, wsl, *d_out, self.threads, &mut out);
+                    // unmasked dense layer: realized IS the baseline
+                    ops_ctr.record(&w_name, (mm * d * *d_out) as u64, (mm * d * *d_out) as u64);
                     let b = self.getf(state, &b_name)?;
                     for row in out.chunks_exact_mut(*d_out) {
                         for (v, bb) in row.iter_mut().zip(b) {
@@ -757,7 +823,7 @@ impl TrainEngine {
                     let cs = ConvShape { ksize: *ksize, stride: *stride, pad: *pad };
                     let bn_path = self.meta.use_bn.then(|| i.to_string());
                     let mut out = Vec::new();
-                    let (rt, p, q) = self.conv_unit_forward(
+                    let (rt, p, q, out_density) = self.conv_unit_forward(
                         state,
                         &h,
                         (nb, c, hh, ww),
@@ -770,9 +836,12 @@ impl TrainEngine {
                         mode,
                         train,
                         st,
+                        hint,
                         scr,
+                        ops_ctr,
                         &mut out,
                     )?;
+                    hint = out_density;
                     densities.push(rt.density);
                     dsg_i += 1;
                     tape.push(UnitTape::Conv {
@@ -793,7 +862,7 @@ impl TrainEngine {
                     let cs1 = ConvShape { ksize: 3, stride: *stride, pad: 1 };
                     let cs2 = ConvShape { ksize: 3, stride: 1, pad: 1 };
                     let mut h1 = Vec::new();
-                    let (rt1, p1, q1) = self.conv_unit_forward(
+                    let (rt1, p1, q1, h1_density) = self.conv_unit_forward(
                         state,
                         &h,
                         (nb, c, hh, ww),
@@ -806,13 +875,15 @@ impl TrainEngine {
                         mode,
                         train,
                         st,
+                        hint,
                         scr,
+                        ops_ctr,
                         &mut h1,
                     )?;
                     densities.push(rt1.density);
                     dsg_i += 1;
                     let mut h2 = Vec::new();
-                    let (rt2, p2, q2) = self.conv_unit_forward(
+                    let (rt2, p2, q2, _) = self.conv_unit_forward(
                         state,
                         &h1,
                         (nb, *c_out, p1, q1),
@@ -825,11 +896,16 @@ impl TrainEngine {
                         mode,
                         train,
                         st,
+                        h1_density,
                         scr,
+                        ops_ctr,
                         &mut h2,
                     )?;
                     densities.push(rt2.density);
                     dsg_i += 1;
+                    // the residual sum merges the masked main path with
+                    // the (dense) shortcut: treat the output as dense
+                    hint = 1.0;
                     let short = (*stride != 1 || c_in != c_out)
                         .then(|| format!("params.{i}.short.w"));
                     if let Some(sname) = &short {
@@ -880,6 +956,8 @@ impl TrainEngine {
                     let mut idx = Vec::new();
                     let (pn, pc, ph, pw) =
                         maxpool_fwd(&h, (nb, c, hh, ww), *size, &mut out, &mut idx);
+                    // window max is zero only when the whole window is
+                    hint = 1.0 - (1.0 - hint).powi((*size * *size) as i32);
                     tape.push(UnitTape::MaxPool { dims: (nb, c, hh, ww), idx });
                     h = out;
                     carry = Carry::Nchw(pn, pc, ph, pw);
@@ -897,6 +975,7 @@ impl TrainEngine {
                         }
                     }
                     tape.push(UnitTape::Gap { dims: (nb, c, hh, ww) });
+                    hint = 1.0; // plane averages are essentially dense
                     h = out;
                     carry = Carry::Rows(nb, c);
                 }
@@ -938,7 +1017,10 @@ impl TrainEngine {
         let mut scr = std::mem::take(&mut self.scratch);
         let mut tape = Vec::new();
         let mut meter = MemoryMeter::new(); // untouched: eval doesn't meter
-        let r = self.forward_pass(state, x, m, gamma, mode, false, &mut scr, &mut tape, &mut meter);
+        let mut ops_ctr = OpsCounter::new(); // discarded: eval isn't reported
+        let r = self.forward_pass(
+            state, x, m, gamma, mode, false, &mut scr, &mut tape, &mut meter, &mut ops_ctr,
+        );
         self.scratch = scr;
         r.map(|(logits, _)| logits)
     }
@@ -954,6 +1036,12 @@ impl TrainEngine {
     /// (conv natural layout), so the grad applies without a layout flip.
     /// `sbuf`: decompress scratch for the post-relu tape (reused across
     /// units; a no-op view for dense-stored records).
+    ///
+    /// Under [`SparseKernels::Compound`] the gradW kernel reads only the
+    /// LIVE input coordinates (gathered once into `nzx_scr` when the
+    /// taped `in_density` hint says the input is sparse), and dX reads
+    /// only the selected, nonzero gradient entries — both bit-identical
+    /// to the output-sparse kernels.
     #[allow(clippy::too_many_arguments)]
     fn rows_layer_backward(
         &self,
@@ -964,9 +1052,11 @@ impl TrainEngine {
         lr: f32,
         wt_scr: &mut Vec<f32>,
         gwt_scr: &mut Vec<f32>,
+        nzx_scr: &mut NzIndex,
         dx: &mut [f32],
         conv_weight: bool,
         sbuf: &mut Vec<f32>,
+        ops_ctr: &mut OpsCounter,
     ) -> Result<()> {
         let (m, d, n) = (rt.m, rt.d, rt.n);
         debug_assert_eq!(dout.len(), m * n);
@@ -993,13 +1083,44 @@ impl TrainEngine {
                 ops::transpose_into(wsl, d, n, wt_scr);
                 wt_scr
             };
-            parallel::dsg_vmm_rowmask_backward_parallel_into(
-                dout, m, d, wt, n, &rt.mask, self.threads, dx,
-            );
             gwt_scr.resize(n * d, 0.0);
-            parallel::dsg_vmm_rowmask_gradw_parallel_into(
-                x, dout, m, d, n, &rt.mask, self.threads, gwt_scr,
-            );
+            let dense_eq = 2 * (m * d * n) as u64; // dX + dW baselines
+            match self.kernels {
+                SparseKernels::Compound => {
+                    let r_dx = parallel::dsg_vmm_rowmask_backward_compound_parallel_into(
+                        dout, m, d, wt, n, &rt.mask, self.threads, dx,
+                    );
+                    // gather live input coordinates only when the
+                    // forward's measured hint says the gather pays
+                    let r_dw = if rt.in_density < parallel::compound_cutoff() {
+                        nzx_scr.fill_from_rows(x, m, d);
+                        parallel::dsg_vmm_rowmask_gradw_compound_parallel_into(
+                            x, dout, m, d, n, &rt.mask, nzx_scr, self.threads, gwt_scr,
+                        )
+                    } else {
+                        parallel::dsg_vmm_rowmask_gradw_parallel_into(
+                            x, dout, m, d, n, &rt.mask, self.threads, gwt_scr,
+                        );
+                        // the kernel executes d madds per live (i, j)
+                        // pair (g == 0 skipped) — the same measure the
+                        // compound dX kernel just counted
+                        r_dx
+                    };
+                    ops_ctr.record(&rt.w_name, r_dx + r_dw, dense_eq);
+                }
+                SparseKernels::OutputSparse => {
+                    parallel::dsg_vmm_rowmask_backward_parallel_into(
+                        dout, m, d, wt, n, &rt.mask, self.threads, dx,
+                    );
+                    parallel::dsg_vmm_rowmask_gradw_parallel_into(
+                        x, dout, m, d, n, &rt.mask, self.threads, gwt_scr,
+                    );
+                    // both kernels skip g == 0: count what they touched
+                    // so the baseline is measured, not nominal
+                    let live = parallel::live_grad_count(dout, n, &rt.mask);
+                    ops_ctr.record(&rt.w_name, 2 * d as u64 * live, dense_eq);
+                }
+            }
         }
         if conv_weight {
             self.sgd_update(state, &rt.w_name, gwt_scr, lr)?;
@@ -1026,6 +1147,7 @@ impl TrainEngine {
         lr: f32,
         scr: &mut Scratch,
         sbuf: &mut Vec<f32>,
+        ops_ctr: &mut OpsCounter,
         dx_nchw: &mut Vec<f32>,
     ) -> Result<()> {
         let (nb, c, hh, ww) = dims;
@@ -1036,8 +1158,10 @@ impl TrainEngine {
         debug_assert_eq!((p2, q2), (p, q));
         nchw_to_rows_into(dout_nchw, nb, kout, p, q, &mut scr.dyr);
         let mut dx_rows = vec![0.0f32; rt.m * rt.d];
-        let Scratch { rows, dyr, wt, gwt, .. } = &mut *scr;
-        self.rows_layer_backward(state, rows, dyr, rt, lr, wt, gwt, &mut dx_rows, true, sbuf)?;
+        let Scratch { rows, dyr, wt, gwt, nzx, .. } = &mut *scr;
+        self.rows_layer_backward(
+            state, rows, dyr, rt, lr, wt, gwt, nzx, &mut dx_rows, true, sbuf, ops_ctr,
+        )?;
         ops::col2im_slice_into(&dx_rows, nb, c, hh, ww, cs.ksize, cs.stride, cs.pad, dx_nchw);
         Ok(())
     }
@@ -1055,14 +1179,17 @@ impl TrainEngine {
         lr: f32,
         scr: &mut Scratch,
         dec: &mut TapeDecode,
+        ops_ctr: &mut OpsCounter,
     ) -> Result<Vec<f32>> {
         let TapeDecode { x: xbuf, s: sbuf } = dec;
         match ut {
             UnitTape::Dense { x, rt } => {
                 let xs = x.slice(xbuf);
                 let mut dx = vec![0.0f32; rt.m * rt.d];
-                let Scratch { wt, gwt, .. } = &mut *scr;
-                self.rows_layer_backward(state, xs, &mut dout, rt, lr, wt, gwt, &mut dx, false, sbuf)?;
+                let Scratch { wt, gwt, nzx, .. } = &mut *scr;
+                self.rows_layer_backward(
+                    state, xs, &mut dout, rt, lr, wt, gwt, nzx, &mut dx, false, sbuf, ops_ctr,
+                )?;
                 Ok(dx)
             }
             UnitTape::Classifier { x, m, d, c, w_name, b_name } => {
@@ -1095,7 +1222,9 @@ impl TrainEngine {
             UnitTape::Conv { x, dims, cs, p, q, rt } => {
                 let xs = x.slice(xbuf);
                 let mut dx = Vec::new();
-                self.conv_unit_backward(state, xs, *dims, *cs, *p, *q, rt, &dout, lr, scr, sbuf, &mut dx)?;
+                self.conv_unit_backward(
+                    state, xs, *dims, *cs, *p, *q, rt, &dout, lr, scr, sbuf, ops_ctr, &mut dx,
+                )?;
                 Ok(dx)
             }
             UnitTape::Residual {
@@ -1121,13 +1250,14 @@ impl TrainEngine {
                     let h1s = h1.slice(xbuf);
                     self.conv_unit_backward(
                         state, h1s, (nb, rt1.n, *p1, *q1), *cs2, *p2, *q2, rt2, &dout, lr, scr,
-                        sbuf, &mut d_h1,
+                        sbuf, ops_ctr, &mut d_h1,
                     )?;
                 }
                 let xs = x.slice(xbuf);
                 let mut dx = Vec::new();
                 self.conv_unit_backward(
-                    state, xs, (nb, c, hh, ww), *cs1, *p1, *q1, rt1, &d_h1, lr, scr, sbuf, &mut dx,
+                    state, xs, (nb, c, hh, ww), *cs1, *p1, *q1, rt1, &d_h1, lr, scr, sbuf,
+                    ops_ctr, &mut dx,
                 )?;
                 if let Some(sname) = short {
                     // shortcut: plain 1x1 conv backward
@@ -1236,11 +1366,14 @@ impl TrainEngine {
         let mut scr = std::mem::take(&mut self.scratch);
         let mut dec = std::mem::take(&mut self.dec);
         let mut meter = std::mem::take(&mut self.meter);
+        let mut ops_ctr = std::mem::take(&mut self.ops);
         meter.reset();
+        ops_ctr.reset();
         let mut tape: Vec<UnitTape> = Vec::new();
         let r: Result<TrainOut> = (|| {
-            let (logits, densities) =
-                self.forward_pass(state, x, m, gamma, mode, true, &mut scr, &mut tape, &mut meter)?;
+            let (logits, densities) = self.forward_pass(
+                state, x, m, gamma, mode, true, &mut scr, &mut tape, &mut meter, &mut ops_ctr,
+            )?;
             self.update_bn_state(state, &tape)?;
             let (loss, acc, dlogits) = softmax_xent(&logits, y, m, c);
             let mut dcarry = dlogits;
@@ -1250,7 +1383,8 @@ impl TrainEngine {
             // index), so live memory decays over the backward exactly as
             // the paper's footprint model assumes
             while let Some(ut) = tape.pop() {
-                dcarry = self.unit_backward(state, &ut, dcarry, lr, &mut scr, &mut dec)?;
+                dcarry =
+                    self.unit_backward(state, &ut, dcarry, lr, &mut scr, &mut dec, &mut ops_ctr)?;
                 meter.free_unit(tape.len());
             }
             Ok(TrainOut { loss, acc, densities })
@@ -1258,6 +1392,7 @@ impl TrainEngine {
         self.scratch = scr;
         self.dec = dec;
         self.meter = meter;
+        self.ops = ops_ctr;
         r
     }
 }

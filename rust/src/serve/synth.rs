@@ -17,11 +17,13 @@
 
 use crate::drs::projection::{ternary_r, TernaryIndex};
 use crate::drs::topk;
+use crate::metrics::OpsMeter;
 use crate::native::{ForwardWorkspace, WorkspacePool};
 use crate::sparse::parallel;
 use crate::tensor::{ops, Tensor};
 use crate::util::Pcg32;
 use anyhow::Result;
+use std::sync::Arc;
 
 struct SynthLayer {
     /// (n, d) transposed weights for the skipping VMM.
@@ -42,6 +44,9 @@ pub struct SynthModel {
     pub gamma: f32,
     intra_threads: usize,
     ws_pool: WorkspacePool,
+    /// Realized vs dense-equivalent multiply-adds across every forward
+    /// (shared with the serve report via [`SynthModel::ops_meter`]).
+    ops: Arc<OpsMeter>,
 }
 
 impl SynthModel {
@@ -77,6 +82,7 @@ impl SynthModel {
             gamma,
             intra_threads: 1,
             ws_pool: WorkspacePool::new(),
+            ops: Arc::new(OpsMeter::new()),
         }
     }
 
@@ -84,6 +90,13 @@ impl SynthModel {
     pub fn with_intra_threads(mut self, threads: usize) -> SynthModel {
         self.intra_threads = threads.max(1);
         self
+    }
+
+    /// Shared handle to the realized-ops meter (clone it out before
+    /// moving the model into a serve closure; totals accumulate across
+    /// all workers and requests).
+    pub fn ops_meter(&self) -> Arc<OpsMeter> {
+        self.ops.clone()
     }
 
     /// Deterministic request image for load generation.
@@ -119,6 +132,10 @@ impl SynthModel {
         ws.h.clear();
         ws.h.extend_from_slice(xs);
         let mut d = self.input_elems;
+        // compound-dispatch hint: request images are dense; after a
+        // masked+relu'd layer (no BN here) about half the selected
+        // neurons survive
+        let mut hint = 1.0f32;
         for layer in &self.layers {
             let k = layer.ridx.k;
             let n = layer.wt.shape()[0];
@@ -143,15 +160,23 @@ impl SynthModel {
             );
             ws.scratch.mask.fill_from_threshold(&ws.scratch.virt, batch, n, thr);
             ws.y.resize(batch * n, 0.0);
-            parallel::dsg_vmm_rowmask_parallel_into(
+            let realized = parallel::dsg_vmm_compound_parallel_into(
                 &ws.h,
                 batch,
                 d,
                 layer.wt.data(),
                 n,
                 &ws.scratch.mask,
+                hint,
                 t,
                 &mut ws.y,
+            );
+            self.ops.add(realized, (batch * d * n) as u64);
+            // shared hint rule (no BN, no double mask in the synth MLP)
+            hint = parallel::density_hint_after_layer(
+                ws.scratch.mask.density() as f32,
+                false,
+                false,
             );
             ops::relu_slice(&mut ws.y);
             std::mem::swap(&mut ws.h, &mut ws.y);
@@ -160,6 +185,8 @@ impl SynthModel {
         let c = self.classes;
         ws.y.resize(batch * c, 0.0);
         parallel::matmul_parallel_into(&ws.h, batch, d, self.classifier.data(), c, t, &mut ws.y);
+        // unmasked classifier: realized IS the dense baseline
+        self.ops.add((batch * d * c) as u64, (batch * d * c) as u64);
         Ok(ws.y[..].to_vec())
     }
 }

@@ -2,7 +2,7 @@
 //! same layer shapes and report median wall-clock + speedup ratios.
 
 use crate::drs::projection::{ternary_r, TernaryIndex};
-use crate::drs::project_weights;
+use crate::drs::project_weights_idx;
 use crate::tensor::{ops, Tensor};
 use crate::util::Pcg32;
 
@@ -83,8 +83,10 @@ pub fn bench_layer(
     let w = Tensor::new(&[d, n], rng.normal_vec(d * n, (2.0 / d as f32).sqrt()));
     let wt = ops::transpose(&w);
     let r = ternary_r(&mut rng, k, d, 3);
+    // index built ONCE, shared by the weight projection and the per-rep
+    // row projections (project_weights used to rebuild it internally)
     let ridx = TernaryIndex::from_dense(&r);
-    let wp = project_weights(&r, &w);
+    let wp = project_weights_idx(&ridx, &w);
 
     // warmup
     let _ = ops::matmul_blocked(&x, &w);

@@ -123,6 +123,23 @@ pub fn dsg_vmm_rowmask(x: &Tensor, wt: &Tensor, mask: &RowMask) -> Tensor {
     Tensor::new(&[m, n], out)
 }
 
+/// Serial COMPOUND masked VMM: input- and output-side sparsity exploited
+/// together (gather each row's nonzero coordinates once, accumulate only
+/// into the selected outputs).  Bit-exact with [`dsg_vmm_rowmask`] /
+/// [`dsg_vmm`]; returns the product and the realized multiply-add count
+/// — ops ~ nnz(in) * sel(out), the paper's (1 - gamma)^2 claim made
+/// measurable.
+pub fn dsg_vmm_compound(x: &Tensor, wt: &Tensor, mask: &RowMask) -> (Tensor, u64) {
+    let (m, d) = (x.shape()[0], x.shape()[1]);
+    let (n, d2) = (wt.shape()[0], wt.shape()[1]);
+    assert_eq!(d, d2);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    let mut out = vec![0.0f32; m * n];
+    let realized = parallel::vmm_rowmask_compound_chunk(x.data(), wt.data(), d, n, mask, 0, m, &mut out);
+    (Tensor::new(&[m, n], out), realized)
+}
+
 /// Result of one full DSG layer execution on the host engine.
 pub struct DsgLayerOut {
     pub y: Tensor,

@@ -22,6 +22,7 @@
 use super::pool::{Task, WorkerPool};
 use crate::drs::topk::RowMask;
 use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 /// Number of worker threads (`DSG_THREADS` overrides; default = cores).
@@ -321,6 +322,472 @@ pub fn vmm_rowmask_gradw_chunk(
     }
 }
 
+// ---------------------------------------------------------------------------
+// compound-sparsity kernels (input AND output side)
+// ---------------------------------------------------------------------------
+//
+// The paper's Fig 8/9 operation reduction is (1 - gamma)^2: the graph is
+// sparse on BOTH sides of a layer — inputs carry the previous layer's
+// mask + ReLU zeros, outputs are restricted to the DRS selection.  The
+// kernels above only exploit the output side (each selected neuron still
+// streams the full d-length input row), so realized work scaled as
+// (1 - gamma).  The kernels below gather the nonzero input coordinates
+// once per row and accumulate `x[q] * w[q, j]` over ascending q into
+// only the selected outputs: ops proportional to nnz(in) * sel(out).
+//
+// BIT-EXACTNESS CONTRACT: `vmm_dot` accumulates 4-aligned blocks
+// (left-associated within a block) in ascending-q order, plus a
+// sequential tail.  `vmm_dot_sparse` reproduces that exact grouping over
+// the nonzero coordinates only.  Skipping a `x[q] == 0.0` term is a
+// bit-identity because (a) its product is ±0.0 for finite weights,
+// (b) adding ±0.0 never changes a nonzero partial, and (c) no
+// accumulator that starts at +0.0 can ever become -0.0 under
+// round-to-nearest addition — the same argument `matmul_chunk` already
+// relies on for its `av == 0.0` skip.  (Weights must be finite: a
+// 0 * inf/NaN term would be skipped where the dense walk propagates
+// NaN.  The repo-wide zero-skip contract already assumes this.)
+//
+// DENSITY DISPATCH: which side pays is decided at two levels.  Per
+// LAYER, callers pass the measured density of the input activation
+// (previous layer's mask density, adjusted for ReLU/BN — see the native
+// engine); at or above [`compound_cutoff`] the entry routes to the
+// plain output-sparse kernel and never gathers.  Per ROW, the gathered
+// nnz count double-checks the hint: a dense row inside a sparse layer
+// takes the contiguous `vmm_dot` sweep, a sparse row the indexed
+// accumulate.  Every branch is bit-identical, so dispatch is purely a
+// performance decision and wrong hints cannot change results.
+
+/// Which sparse kernels a configurable engine routes through — the
+/// output-sparse-only kernels this repo shipped first, or the
+/// compound-sparsity kernels.  Bit-identical by construction; the knob
+/// exists for baselines, benches, and the parity tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SparseKernels {
+    /// Output-side skipping only (`vmm_rowmask_chunk` & friends).
+    OutputSparse,
+    /// Input- AND output-side skipping (the compound kernels).
+    #[default]
+    Compound,
+}
+
+impl SparseKernels {
+    pub fn parse(s: &str) -> Option<SparseKernels> {
+        match s {
+            "output" | "output-sparse" => Some(SparseKernels::OutputSparse),
+            "compound" => Some(SparseKernels::Compound),
+            _ => None,
+        }
+    }
+}
+
+/// Estimated nonzero density of a masked layer's OUTPUT — the next
+/// layer's compound-dispatch hint, derived from the measured mask
+/// density.  ONE shared rule for every engine (inference, training,
+/// synth serving), so their dispatch never drifts apart:
+///
+/// * with BN, the relu zeros of SELECTED neurons are shifted back to
+///   nonzero — under the double mask the remaining zeros are exactly
+///   the unselected set (density = mask density); without the double
+///   mask BN revives everything (density = 1.0);
+/// * without BN nothing revives the zeros: unselected outputs stay 0
+///   (they were never computed) and relu kills about half the
+///   survivors, double mask or not (density = 0.5 * mask density).
+///
+/// Unmasked dense layers pass `mask_density = 1.0`.  Hints only steer
+/// dispatch — every branch is bit-identical — so the estimate needs to
+/// be consistent, not perfect.
+pub fn density_hint_after_layer(mask_density: f32, use_bn: bool, double_mask: bool) -> f32 {
+    if use_bn {
+        if double_mask {
+            mask_density
+        } else {
+            1.0
+        }
+    } else {
+        0.5 * mask_density
+    }
+}
+
+/// Count of (row, selected-j) pairs with a nonzero gradient — the
+/// entries the masked backward kernels actually touch (both families
+/// skip `g == 0.0`).  Used to report MEASURED realized ops for the
+/// branches whose kernels don't count internally.
+pub fn live_grad_count(dyd: &[f32], n: usize, mask: &RowMask) -> u64 {
+    let mut live = 0u64;
+    for i in 0..mask.rows() {
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        if mask.is_full() {
+            live += dyrow.iter().filter(|g| **g != 0.0).count() as u64;
+        } else {
+            live += mask.row(i).iter().filter(|&&j| dyrow[j as usize] != 0.0).count() as u64;
+        }
+    }
+    live
+}
+
+/// Input-density cutoff for the compound dispatch (`DSG_COMPOUND_CUTOFF`
+/// overrides; default 0.5): at or above this nonzero fraction the
+/// contiguous dense sweep wins over indexed accumulation, below it the
+/// gather pays for itself.  Cached once per process like `n_threads`.
+pub fn compound_cutoff() -> f32 {
+    static C: OnceLock<f32> = OnceLock::new();
+    *C.get_or_init(|| {
+        std::env::var("DSG_COMPOUND_CUTOFF")
+            .ok()
+            .and_then(|v| v.parse::<f32>().ok())
+            .map(|v| v.clamp(0.0, 1.0))
+            .unwrap_or(0.5)
+    })
+}
+
+/// Per-thread nonzero-gather scratch.  Pool workers are persistent, so
+/// after warmup no compound dispatch allocates: each thread reuses one
+/// index buffer across rows, layers, and requests.
+fn with_nz_scratch<R>(f: impl FnOnce(&mut Vec<u32>) -> R) -> R {
+    thread_local! {
+        static NZ: std::cell::RefCell<Vec<u32>> = std::cell::RefCell::new(Vec::new());
+    }
+    NZ.with(|c| f(&mut c.borrow_mut()))
+}
+
+/// Gather the (ascending) nonzero coordinates of one input row.
+#[inline]
+fn gather_nonzero(row: &[f32], nz: &mut Vec<u32>) {
+    nz.clear();
+    for (q, &v) in row.iter().enumerate() {
+        if v != 0.0 {
+            nz.push(q as u32);
+        }
+    }
+}
+
+/// Sparse twin of [`vmm_dot`]: the same 4-aligned block grouping and
+/// ascending-q order, visiting only the gathered nonzero coordinates.
+/// Bit-identical to `vmm_dot` for finite weights (see the module-section
+/// comment for the ±0.0 argument; verified exhaustively in tests).
+#[inline]
+fn vmm_dot_sparse(nz: &[u32], row: &[f32], wrow: &[f32], d: usize) -> f32 {
+    let d4 = d & !3usize;
+    let mut acc = 0.0f32;
+    let mut i = 0usize;
+    while i < nz.len() {
+        let q0 = nz[i] as usize;
+        if q0 >= d4 {
+            break;
+        }
+        // everything in this aligned block of 4 sums left-to-right into
+        // one partial, then joins the accumulator — vmm_dot's grouping
+        let end = (q0 & !3usize) + 4;
+        let mut bsum = row[q0] * wrow[q0];
+        i += 1;
+        while i < nz.len() && (nz[i] as usize) < end {
+            let q = nz[i] as usize;
+            bsum += row[q] * wrow[q];
+            i += 1;
+        }
+        acc += bsum;
+    }
+    while i < nz.len() {
+        let q = nz[i] as usize;
+        acc += row[q] * wrow[q];
+        i += 1;
+    }
+    acc
+}
+
+/// Compound-sparsity masked VMM rows `[lo, hi)`: gather each row's
+/// nonzero input coordinates once, then compute only the selected output
+/// neurons from them — ops ~ nnz(in) * sel(out) instead of d * sel(out).
+/// Bit-identical to [`vmm_rowmask_chunk`] on every branch.  Returns the
+/// realized multiply-add count of the chunk (what the dispatch actually
+/// executed), the measured quantity behind the Fig 9 reduction ratios.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_rowmask_compound_chunk(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    let cutoff = compound_cutoff() * d as f32;
+    let full = mask.is_full();
+    if !full {
+        out.fill(0.0);
+    }
+    let mut realized = 0u64;
+    with_nz_scratch(|nz| {
+        for i in lo..hi {
+            let row = &xd[i * d..(i + 1) * d];
+            let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+            let sel_len = if full { n } else { mask.row(i).len() };
+            if sel_len == 0 {
+                continue; // already zeroed
+            }
+            gather_nonzero(row, nz);
+            // per-row dispatch: contiguous sweep for dense rows, indexed
+            // accumulate for sparse ones — same bits either way
+            let dense_row = nz.len() as f32 >= cutoff;
+            if full {
+                if dense_row {
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+                    }
+                } else {
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = vmm_dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
+                    }
+                }
+            } else if dense_row {
+                for &j in mask.row(i) {
+                    let j = j as usize;
+                    orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+                }
+            } else {
+                for &j in mask.row(i) {
+                    let j = j as usize;
+                    orow[j] = vmm_dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
+                }
+            }
+            let per = if dense_row { d } else { nz.len() };
+            realized += per as u64 * sel_len as u64;
+        }
+    });
+    realized
+}
+
+/// Reusable CSR index of the nonzero coordinates of a row-major (m, d)
+/// activation — the input-side twin of [`RowMask`].  The gradW backward
+/// splits work by OUTPUT neuron, so every chunk walks every input row:
+/// a prebuilt shared index keeps the gather at one O(m*d) pass per layer
+/// instead of one per chunk.
+#[derive(Clone, Debug, Default)]
+pub struct NzIndex {
+    rows: usize,
+    width: usize,
+    offsets: Vec<usize>,
+    idx: Vec<u32>,
+}
+
+impl NzIndex {
+    pub fn new() -> NzIndex {
+        NzIndex { rows: 0, width: 0, offsets: vec![0], idx: Vec::new() }
+    }
+
+    /// Rebuild in place from a row-major (m, d) buffer (storage reused —
+    /// allocation-free once warm, like `RowMask::fill_from_threshold`).
+    pub fn fill_from_rows(&mut self, xd: &[f32], m: usize, d: usize) {
+        debug_assert_eq!(xd.len(), m * d);
+        assert!(d <= u32::MAX as usize, "row width {d} exceeds u32");
+        self.rows = m;
+        self.width = d;
+        self.offsets.clear();
+        self.offsets.reserve(m + 1);
+        self.offsets.push(0);
+        self.idx.clear();
+        if d == 0 {
+            // zero-width rows: every row is an empty list
+            self.offsets.resize(m + 1, 0);
+            return;
+        }
+        for row in xd.chunks_exact(d) {
+            for (q, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    self.idx.push(q as u32);
+                }
+            }
+            self.offsets.push(self.idx.len());
+        }
+    }
+
+    /// Nonzero coordinates of row `i` (ascending).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.idx[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Total nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Measured nonzero fraction.
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.width;
+        if total == 0 {
+            return 0.0;
+        }
+        self.idx.len() as f64 / total as f64
+    }
+}
+
+/// 4-wide-unrolled `orow[p] += g * xrow[p]` over all of `0..d`.  Each
+/// slot is an independent accumulator, so the unroll cannot change bits.
+#[inline]
+fn axpy_dense(orow: &mut [f32], g: f32, xrow: &[f32]) {
+    let d = orow.len();
+    let mut p = 0;
+    while p + 4 <= d {
+        orow[p] += g * xrow[p];
+        orow[p + 1] += g * xrow[p + 1];
+        orow[p + 2] += g * xrow[p + 2];
+        orow[p + 3] += g * xrow[p + 3];
+        p += 4;
+    }
+    while p < d {
+        orow[p] += g * xrow[p];
+        p += 1;
+    }
+}
+
+/// Indexed `orow[q] += g * xrow[q]` over the nonzero coordinates only.
+/// Skipped coordinates would have added g * ±0.0 to a +0.0-started
+/// accumulator — a bit-identity (see the module-section comment).
+#[inline]
+fn axpy_sparse(orow: &mut [f32], g: f32, xrow: &[f32], nz: &[u32]) {
+    let mut t = 0;
+    while t + 4 <= nz.len() {
+        let (a, b, c, e) = (
+            nz[t] as usize,
+            nz[t + 1] as usize,
+            nz[t + 2] as usize,
+            nz[t + 3] as usize,
+        );
+        orow[a] += g * xrow[a];
+        orow[b] += g * xrow[b];
+        orow[c] += g * xrow[c];
+        orow[e] += g * xrow[e];
+        t += 4;
+    }
+    while t < nz.len() {
+        let q = nz[t] as usize;
+        orow[q] += g * xrow[q];
+        t += 1;
+    }
+}
+
+/// Compound backward-to-input of the RowMask VMM, rows `[lo, hi)`:
+/// identical reads to [`vmm_rowmask_backward_chunk`] — only the SELECTED
+/// and nonzero gradient entries are touched (for the backward op, dY IS
+/// the sparse input side; dX must be written densely because the
+/// upstream relu' owns the decision of which of its coordinates die).
+/// The inner accumulate is 4-wide unrolled (independent slots =>
+/// bit-identical).  Returns realized multiply-adds.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_rowmask_backward_compound_chunk(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    out.fill(0.0);
+    let mut realized = 0u64;
+    if mask.is_full() {
+        for i in lo..hi {
+            let dyrow = &dyd[i * n..(i + 1) * n];
+            let orow = &mut out[(i - lo) * d..(i - lo + 1) * d];
+            for (j, &g) in dyrow.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                axpy_dense(orow, g, &wd[j * d..(j + 1) * d]);
+                realized += d as u64;
+            }
+        }
+        return realized;
+    }
+    for i in lo..hi {
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let orow = &mut out[(i - lo) * d..(i - lo + 1) * d];
+        for &j in mask.row(i) {
+            let j = j as usize;
+            let g = dyrow[j];
+            if g == 0.0 {
+                continue;
+            }
+            axpy_dense(orow, g, &wd[j * d..(j + 1) * d]);
+            realized += d as u64;
+        }
+    }
+    realized
+}
+
+/// Compound backward-to-weights for OUTPUT NEURONS `[jlo, jhi)`: like
+/// [`vmm_rowmask_gradw_chunk`] but reading only the LIVE input
+/// coordinates of each x row through the prebuilt [`NzIndex`] — ops
+/// ~ nnz(x_i) per live (i, j) pair instead of d.  Per-row density
+/// dispatch falls back to the contiguous sweep for dense rows.
+/// Bit-identical to the output-sparse kernel on every branch; returns
+/// realized multiply-adds.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_rowmask_gradw_compound_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    nzx: &NzIndex,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(out.len(), (jhi - jlo) * d);
+    debug_assert_eq!(nzx.rows(), m, "nz index rows");
+    out.fill(0.0);
+    let cutoff = compound_cutoff() * d as f32;
+    let full = mask.is_full();
+    let mut realized = 0u64;
+    for i in 0..m {
+        let xrow = &xd[i * d..(i + 1) * d];
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let nz = nzx.row(i);
+        if nz.is_empty() {
+            continue; // all-zero input row contributes nothing
+        }
+        let dense_row = nz.len() as f32 >= cutoff;
+        let per = if dense_row { d } else { nz.len() } as u64;
+        let do_j = |j: usize, realized: &mut u64, out: &mut [f32]| {
+            let g = dyrow[j];
+            if g == 0.0 {
+                return;
+            }
+            let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
+            if dense_row {
+                axpy_dense(orow, g, xrow);
+            } else {
+                axpy_sparse(orow, g, xrow, nz);
+            }
+            *realized += per;
+        };
+        if full {
+            for j in jlo..jhi {
+                do_j(j, &mut realized, out);
+            }
+        } else {
+            let sel = mask.row(i);
+            let a = sel.partition_point(|&j| (j as usize) < jlo);
+            let b = sel.partition_point(|&j| (j as usize) < jhi);
+            for &j in &sel[a..b] {
+                do_j(j as usize, &mut realized, out);
+            }
+        }
+    }
+    realized
+}
+
 /// Ternary projection of rows `[lo, hi)` into the chunk slice.
 pub fn project_chunk(
     ridx: &crate::drs::projection::TernaryIndex,
@@ -444,6 +911,102 @@ pub fn dsg_vmm_rowmask_gradw_parallel_into(
     });
 }
 
+/// Pool-parallel COMPOUND masked VMM into `out` (len m*n): input- and
+/// output-side sparsity exploited together, bit-identical to
+/// [`dsg_vmm_rowmask_parallel_into`] for any thread budget.
+///
+/// `in_density` is the per-layer dispatch hint — the caller's measured
+/// nonzero fraction of `x` (previous layer's mask density adjusted for
+/// ReLU/BN, or 1.0 for raw/unknown inputs).  At or above
+/// [`compound_cutoff`] the layer routes to the output-sparse kernel and
+/// never gathers; below it, rows are gathered and dispatched
+/// individually.  Returns the realized multiply-add count.
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_compound_parallel_into(
+    xd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    in_density: f32,
+    threads: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(xd.len(), m * d);
+    debug_assert_eq!(wd.len(), n * d);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    if in_density >= compound_cutoff() {
+        for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
+            vmm_rowmask_chunk(xd, wd, d, n, mask, lo, hi, chunk)
+        });
+        return d as u64 * mask.selected() as u64;
+    }
+    let realized = AtomicU64::new(0);
+    for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
+        let r = vmm_rowmask_compound_chunk(xd, wd, d, n, mask, lo, hi, chunk);
+        realized.fetch_add(r, Ordering::Relaxed);
+    });
+    realized.into_inner()
+}
+
+/// Pool-parallel compound backward-to-input into `out` (len m*d):
+/// bit-identical to [`dsg_vmm_rowmask_backward_parallel_into`]; returns
+/// realized multiply-adds (only selected, nonzero gradient entries are
+/// read, so the count is the measured backward sparsity).
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_backward_compound_parallel_into(
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(dyd.len(), m * n);
+    debug_assert_eq!(wd.len(), n * d);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    let realized = AtomicU64::new(0);
+    for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
+        let r = vmm_rowmask_backward_compound_chunk(dyd, wd, d, n, mask, lo, hi, chunk);
+        realized.fetch_add(r, Ordering::Relaxed);
+    });
+    realized.into_inner()
+}
+
+/// Pool-parallel compound backward-to-weights into the transposed-layout
+/// gradient `out` (len n*d), split by output neuron, reading only live
+/// input coordinates via the caller's prebuilt [`NzIndex`].
+/// Bit-identical to [`dsg_vmm_rowmask_gradw_parallel_into`]; returns
+/// realized multiply-adds.
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_gradw_compound_parallel_into(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    nzx: &NzIndex,
+    threads: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(xd.len(), m * d);
+    debug_assert_eq!(dyd.len(), m * n);
+    assert_eq!(mask.rows(), m, "mask rows");
+    assert_eq!(mask.width(), n, "mask width");
+    let realized = AtomicU64::new(0);
+    for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
+        let r = vmm_rowmask_gradw_compound_chunk(xd, dyd, m, d, n, mask, nzx, jlo, jhi, chunk);
+        realized.fetch_add(r, Ordering::Relaxed);
+    });
+    realized.into_inner()
+}
+
 /// Pool-parallel ternary projection into `out` (len m*k).
 pub fn project_rows_parallel_into(
     xd: &[f32],
@@ -518,6 +1081,26 @@ pub fn dsg_vmm_rowmask_parallel_with(
     let mut out = vec![0.0f32; m * n];
     dsg_vmm_rowmask_parallel_into(x.data(), m, d, wt.data(), n, mask, threads, &mut out);
     Tensor::new(&[m, n], out)
+}
+
+/// Parallel COMPOUND masked VMM (Tensor wrapper): returns the product
+/// and the realized multiply-add count.  Bit-exact with the
+/// output-sparse and dense-mask engines for the same selection, for any
+/// `in_density` hint and any thread budget.
+pub fn dsg_vmm_compound_parallel_with(
+    x: &Tensor,
+    wt: &Tensor,
+    mask: &RowMask,
+    in_density: f32,
+    threads: usize,
+) -> (Tensor, u64) {
+    let (m, d) = (x.shape()[0], x.shape()[1]);
+    let (n, d2) = (wt.shape()[0], wt.shape()[1]);
+    assert_eq!(d, d2);
+    let mut out = vec![0.0f32; m * n];
+    let realized =
+        dsg_vmm_compound_parallel_into(x.data(), m, d, wt.data(), n, mask, in_density, threads, &mut out);
+    (Tensor::new(&[m, n], out), realized)
 }
 
 /// Parallel row projection through a ternary index.
@@ -698,6 +1281,212 @@ mod tests {
             assert_eq!(dx1, dx, "backward @ {t}");
             assert_eq!(dwt1, dwt, "gradw @ {t}");
         }
+    }
+
+    #[test]
+    fn sparse_dot_bit_identical_to_dense_dot() {
+        // the compound kernel's core claim, hammered across shapes and
+        // signed-zero placements: vmm_dot_sparse over the nonzero
+        // coordinates == vmm_dot over everything, to the BIT
+        let mut rng = Pcg32::seeded(81);
+        for trial in 0..200 {
+            let d = 1 + (trial % 37);
+            let mut row: Vec<f32> = rng.normal_vec(d, 1.0);
+            let mut wrow: Vec<f32> = rng.normal_vec(d, 1.0);
+            for q in 0..d {
+                match trial.wrapping_add(q) % 5 {
+                    0 => row[q] = 0.0,
+                    1 => row[q] = -0.0,
+                    2 => wrow[q] = 0.0,
+                    3 => wrow[q] = -0.0,
+                    _ => {}
+                }
+            }
+            let nz: Vec<u32> = (0..d).filter(|&q| row[q] != 0.0).map(|q| q as u32).collect();
+            let a = vmm_dot(&row, &wrow, d);
+            let b = vmm_dot_sparse(&nz, &row, &wrow, d);
+            assert_eq!(a.to_bits(), b.to_bits(), "trial {trial} d {d}: {a} vs {b}");
+        }
+    }
+
+    /// Input with mask-style + relu-style zeros (and a few signed
+    /// zeros): the shape the compound kernels are built for.
+    fn sparse_input(rng: &mut Pcg32, m: usize, d: usize) -> Tensor {
+        let mut v = rng.normal_vec(m * d, 1.0);
+        for (i, x) in v.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *x = 0.0;
+            } else if i % 7 == 0 {
+                *x = -0.0;
+            } else if *x < -0.5 {
+                *x = 0.0; // relu-ish
+            }
+        }
+        Tensor::new(&[m, d], v)
+    }
+
+    #[test]
+    fn compound_vmm_bit_identical_to_output_sparse() {
+        let mut rng = Pcg32::seeded(82);
+        let (m, d, n) = (19, 53, 27); // d not a multiple of 4: tail path
+        let x = sparse_input(&mut rng, m, d);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        for frac in [0usize, 4, 1] {
+            // 0 = empty mask, 4 = quarter, 1 = keep-all
+            let mask = Tensor::from_fn(&[m, n], |i| {
+                if frac == 0 {
+                    0.0
+                } else if i % frac == 0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+            let rm = RowMask::from_dense(&mask);
+            let want = dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, 1);
+            // every layer hint and every budget: same bits, and the
+            // realized count never exceeds the output-sparse cost
+            for hint in [0.0f32, 0.3, 0.5, 1.0] {
+                for t in [1usize, 2, 3, 8] {
+                    let (got, realized) = dsg_vmm_compound_parallel_with(&x, &wt, &rm, hint, t);
+                    assert_eq!(want, got, "frac {frac} hint {hint} threads {t}");
+                    assert!(
+                        realized <= d as u64 * rm.selected() as u64,
+                        "frac {frac} hint {hint}: realized {realized} > output-sparse"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compound_vmm_all_zero_rows_and_empty_mask_rows() {
+        let mut rng = Pcg32::seeded(83);
+        let (m, d, n) = (6, 32, 9);
+        let mut xv = rng.normal_vec(m * d, 1.0);
+        xv[2 * d..3 * d].fill(0.0); // row 2 entirely zero
+        let x = Tensor::new(&[m, d], xv);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        // rows 1 and 4 select nothing
+        let mask = Tensor::from_fn(&[m, n], |i| {
+            let r = i / n;
+            if r == 1 || r == 4 {
+                0.0
+            } else if i % 2 == 0 {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let rm = RowMask::from_dense(&mask);
+        let want = dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, 1);
+        for t in [1usize, 3] {
+            let (got, _) = dsg_vmm_compound_parallel_with(&x, &wt, &rm, 0.0, t);
+            assert_eq!(want, got, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn compound_backward_kernels_bit_identical_and_budget_invariant() {
+        let mut rng = Pcg32::seeded(84);
+        let (m, d, n) = (13, 41, 22);
+        let x = sparse_input(&mut rng, m, d);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        let mut dyv = rng.normal_vec(m * n, 1.0);
+        for (i, g) in dyv.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *g = 0.0; // relu'd-away gradients
+            }
+        }
+        let dy = Tensor::new(&[m, n], dyv);
+        let mut nzx = NzIndex::new();
+        nzx.fill_from_rows(x.data(), m, d);
+        for frac in [0usize, 3, 1] {
+            let mask = Tensor::from_fn(&[m, n], |i| {
+                if frac == 0 {
+                    0.0
+                } else if i % frac == 0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+            let rm = RowMask::from_dense(&mask);
+            let mut dx_ref = vec![0.0f32; m * d];
+            let mut dwt_ref = vec![0.0f32; n * d];
+            dsg_vmm_rowmask_backward_parallel_into(dy.data(), m, d, wt.data(), n, &rm, 1, &mut dx_ref);
+            dsg_vmm_rowmask_gradw_parallel_into(x.data(), dy.data(), m, d, n, &rm, 1, &mut dwt_ref);
+            for t in [1usize, 2, 3, 8] {
+                let mut dx = vec![f32::NAN; m * d];
+                let mut dwt = vec![f32::NAN; n * d];
+                let r1 = dsg_vmm_rowmask_backward_compound_parallel_into(
+                    dy.data(), m, d, wt.data(), n, &rm, t, &mut dx,
+                );
+                let r2 = dsg_vmm_rowmask_gradw_compound_parallel_into(
+                    x.data(), dy.data(), m, d, n, &rm, &nzx, t, &mut dwt,
+                );
+                assert_eq!(
+                    dx.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dx_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "dx frac {frac} threads {t}"
+                );
+                assert_eq!(
+                    dwt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dwt_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "dwt frac {frac} threads {t}"
+                );
+                assert!(r1 <= m as u64 * n as u64 * d as u64);
+                assert!(r2 <= d as u64 * rm.selected() as u64, "frac {frac}: gradw realized");
+            }
+        }
+    }
+
+    #[test]
+    fn nz_index_matches_scan() {
+        let mut rng = Pcg32::seeded(85);
+        let x = sparse_input(&mut rng, 7, 29);
+        let mut nzx = NzIndex::new();
+        nzx.fill_from_rows(x.data(), 7, 29);
+        assert_eq!(nzx.rows(), 7);
+        let mut total = 0usize;
+        for i in 0..7 {
+            let want: Vec<u32> = (0..29)
+                .filter(|&q| x.data()[i * 29 + q] != 0.0)
+                .map(|q| q as u32)
+                .collect();
+            assert_eq!(nzx.row(i), &want[..], "row {i}");
+            total += want.len();
+        }
+        assert_eq!(nzx.nnz(), total);
+        assert!((nzx.density() - total as f64 / (7.0 * 29.0)).abs() < 1e-12);
+        // refill with a different shape reuses storage and stays correct
+        nzx.fill_from_rows(&x.data()[..3 * 29], 3, 29);
+        assert_eq!(nzx.rows(), 3);
+    }
+
+    #[test]
+    fn compound_realized_ops_track_input_sparsity() {
+        // at ~1/3 input density and a sparse hint, the compound kernel
+        // must realize FEWER multiply-adds than the output-sparse cost
+        let mut rng = Pcg32::seeded(86);
+        let (m, d, n) = (16, 96, 48);
+        let x = sparse_input(&mut rng, m, d);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        let virt = randn(&mut rng, &[m, n]);
+        let rm = crate::drs::topk::select_rowmask(&virt, 0.5);
+        let out_sparse_ops = d as u64 * rm.selected() as u64;
+        let (_, realized) = dsg_vmm_compound_parallel_with(&x, &wt, &rm, 0.3, 1);
+        assert!(
+            realized * 2 < out_sparse_ops,
+            "realized {realized} not well under output-sparse {out_sparse_ops}"
+        );
+        // a dense hint routes to the output-sparse kernel: exact cost
+        let (_, dense_hint) = dsg_vmm_compound_parallel_with(&x, &wt, &rm, 1.0, 1);
+        assert_eq!(dense_hint, out_sparse_ops);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use dsg::native::train::{TapeStorage, TrainEngine};
 use dsg::native::zoo::{self, ModelSpec};
 use dsg::native::Mode;
 use dsg::runtime::{Meta, Unit};
+use dsg::sparse::parallel::SparseKernels;
 use dsg::util::Pcg32;
 use dsg::zvc;
 
@@ -451,6 +452,105 @@ fn checkpoint_resume_with_zvc_tape_is_bit_exact() {
     assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "cross-tape resume diverged");
     assert_state_bits_eq(&t.state, &resumed_zvc.state, "zvc resume");
     assert_state_bits_eq(&t.state, &resumed_dense.state, "cross-tape resume");
+}
+
+#[test]
+fn compound_kernels_multi_epoch_bit_parity_mlp() {
+    // the compound kernels (input AND output sparsity) must reproduce
+    // the PR 3 output-sparse-only kernels to the BIT over a real
+    // multi-epoch run — losses, weights, velocities, BN running stats —
+    // at gamma 0 (keep-all) and 0.5
+    for &gamma in &[0.0f32, 0.5] {
+        let meta = zoo::synth_meta(&smoke_spec()).unwrap();
+        let mut cfg = RunConfig::preset_for_model("mlp");
+        cfg.steps = 12;
+        cfg.eval_every = 4;
+        cfg.train_size = 64;
+        cfg.test_size = 32;
+        cfg.gamma = GammaSchedule::Constant(gamma);
+        let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+        let (train, test) = data.split(1.0 / 3.0);
+        let mut baseline = NativeTrainer::new(meta.clone(), 5)
+            .unwrap()
+            .with_kernels(SparseKernels::OutputSparse);
+        let mut compound = NativeTrainer::new(meta, 5).unwrap(); // default = Compound
+        let acc_a = baseline.train(&cfg, &train, &test).unwrap();
+        let acc_b = compound.train(&cfg, &train, &test).unwrap();
+        assert_eq!(acc_a.to_bits(), acc_b.to_bits(), "gamma {gamma}: eval acc");
+        for (a, b) in baseline.history.steps.iter().zip(&compound.history.steps) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "gamma {gamma} step {}: loss diverged",
+                a.step
+            );
+            assert_eq!(a.densities, b.densities, "gamma {gamma} step {}", a.step);
+        }
+        assert_state_bits_eq(&baseline.state, &compound.state, &format!("gamma {gamma}"));
+    }
+}
+
+#[test]
+fn compound_kernels_bit_parity_on_conv_residual_topology() {
+    // same claim through conv / residual / maxpool / gap backwards
+    let meta = zoo::synth_meta(&tiny_conv_spec()).unwrap();
+    let mut baseline = NativeTrainer::new(meta.clone(), 9)
+        .unwrap()
+        .with_kernels(SparseKernels::OutputSparse);
+    let mut compound = NativeTrainer::new(meta.clone(), 9).unwrap();
+    for step in 0u64..4 {
+        let (x, y) = batch_for(&meta, 60 + step);
+        let a = baseline.step(&x, &y, 0.5, 0.05).unwrap();
+        let b = compound.step(&x, &y, 0.5, 0.05).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+    }
+    assert_state_bits_eq(&baseline.state, &compound.state, "tinyconv compound");
+}
+
+#[test]
+fn ops_counter_records_realized_reduction() {
+    // two hidden layers so the SECOND one sees a genuinely sparse
+    // input (layer 1's mask + relu zeros): there the compound kernels
+    // must realize strictly fewer multiply-adds than the output-sparse
+    // kernels, which in turn beat the dense baseline; at gamma 0 the
+    // total sits at (or just under — relu'd-away gradients are skipped
+    // and counted as skipped) the dense baseline, never above it
+    let spec = ModelSpec::custom_mlp("ops_mlp", &[32, 200, 200], 4, 16);
+    let meta = zoo::synth_meta(&spec).unwrap();
+    let (x, y) = batch_for(&meta, 71);
+
+    let mut dense_run = NativeTrainer::new(meta.clone(), 7).unwrap();
+    dense_run.step(&x, &y, 0.0, 0.05).unwrap();
+    let ops0 = dense_run.ops();
+    assert!(ops0.total_dense() > 0);
+    assert!(ops0.total_realized() <= ops0.total_dense());
+    assert!(ops0.reduction() >= 1.0);
+
+    // gamma 0.6 puts the mask density (~0.4) under the default 0.5
+    // dispatch cutoff, so layer 2 engages the input-side gather
+    let mut compound = NativeTrainer::new(meta.clone(), 7).unwrap();
+    compound.step(&x, &y, 0.6, 0.05).unwrap();
+    let mut baseline = NativeTrainer::new(meta, 7)
+        .unwrap()
+        .with_kernels(SparseKernels::OutputSparse);
+    baseline.step(&x, &y, 0.6, 0.05).unwrap();
+    let co = compound.ops();
+    let bo = baseline.ops();
+    assert_eq!(co.total_dense(), bo.total_dense(), "same dense baseline");
+    assert!(
+        co.total_realized() < bo.total_realized(),
+        "compound realized {} not below output-sparse {}",
+        co.total_realized(),
+        bo.total_realized()
+    );
+    assert!(
+        co.reduction() > bo.reduction() && bo.reduction() > 1.0,
+        "reductions not ordered: compound {:.2}x vs output-sparse {:.2}x",
+        co.reduction(),
+        bo.reduction()
+    );
+    // per-layer records exist for both masked layers AND the classifier
+    assert!(co.layers().len() >= 3, "expected per-layer ops records");
 }
 
 #[test]

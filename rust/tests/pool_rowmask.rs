@@ -111,6 +111,40 @@ fn gamma_zero_keep_all_fast_path_is_exact() {
 }
 
 #[test]
+fn compound_engine_bit_exact_vs_references_across_budgets() {
+    // the compound (input + output sparsity) engine against BOTH
+    // references — dense-mask scan and RowMask jump — on a sparse input
+    // with signed zeros, for every budget and every layer hint
+    let mut rng = Pcg32::seeded(905);
+    let mut xv = Pcg32::seeded(906).normal_vec(33 * 96, 1.0);
+    for (i, v) in xv.iter_mut().enumerate() {
+        if i % 4 == 0 {
+            *v = 0.0;
+        } else if i % 9 == 0 {
+            *v = -0.0;
+        }
+    }
+    let x = Tensor::new(&[33, 96], xv);
+    let w = randn(&mut rng, &[96, 41]);
+    let wt = ops::transpose(&w);
+    for gamma in [0.0f32, 0.7] {
+        let virt = randn(&mut rng, &[33, 41]);
+        let rm = topk::select_rowmask(&virt, gamma);
+        let want = sparse::dsg_vmm(&x, &wt, &rm.to_dense());
+        assert_eq!(want, sparse::dsg_vmm_rowmask(&x, &wt, &rm));
+        let (serial, serial_ops) = sparse::dsg_vmm_compound(&x, &wt, &rm);
+        assert_eq!(want, serial, "serial compound, gamma {gamma}");
+        assert!(serial_ops <= 96u64 * rm.selected() as u64);
+        for t in BUDGETS {
+            for hint in [0.0f32, 0.5, 1.0] {
+                let (got, _) = parallel::dsg_vmm_compound_parallel_with(&x, &wt, &rm, hint, t);
+                assert_eq!(want, got, "gamma {gamma} hint {hint} budget {t}");
+            }
+        }
+    }
+}
+
+#[test]
 fn pool_survives_repeated_forwards_and_stays_deterministic() {
     // many forwards through the same model = many pool dispatches; the
     // persistent pool and the workspace pool must give identical bits
