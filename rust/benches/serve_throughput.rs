@@ -1,49 +1,136 @@
-//! Serving throughput: the concurrent multi-worker server vs the
-//! single-threaded baseline pump, on the synthetic DSG model (real
-//! column-skipping engines, no artifacts required).
+//! Serving throughput: baseline pump vs the single-queue concurrent
+//! server vs the sharded work-stealing engine, on the synthetic DSG
+//! model (real column-skipping engines, no artifacts required) — plus
+//! the offered-load vs latency saturation sweep behind the serving
+//! acceptance criterion.
 //!
-//! For each worker count the SAME pre-enqueued load is served and the
-//! predictions are checked bit-identical against workers=1 — the
-//! demonstration behind the serve acceptance criterion: concurrency
-//! changes throughput, never results.
+//! Three sections:
+//!
+//! 1. **Parity + scaling** — the SAME pre-enqueued load through the
+//!    baseline pump, the `ConcurrentServer` at 1/2/4 workers, and the
+//!    `ShardedServer` across shard counts; every run is asserted
+//!    bit-identical to the baseline (concurrency and sharding change
+//!    throughput, never results).
+//! 2. **Saturation sweep** — offered load from 0.25x to 4x of measured
+//!    capacity against a BOUNDED sharded server: p50/p99 queue latency
+//!    and the served/rejected split per point.  Past saturation the
+//!    curve reports explicit rejections at bounded latency instead of
+//!    an unbounded-queue latency cliff.
+//! 3. **Burst overload** — the whole load submitted at once into a
+//!    tiny queue bound: rejections are deterministic and accounted
+//!    (served + rejected == offered, nothing silently dropped).
+//!
+//! Writes machine-readable `BENCH_serve.json` (override the path with
+//! `DSG_BENCH_OUT`) — uploaded by CI as the serving perf artifact.
 //!
 //!     cargo bench --bench serve_throughput
 //!     DSG_SERVE_REQUESTS=4096 cargo bench --bench serve_throughput
+//!     DSG_SERVE_SMOKE=1 cargo bench --bench serve_throughput   # CI: small load
 
 use dsg::metrics::fmt_secs;
-use dsg::serve::{Batcher, ConcurrentServer, Queue, ServerConfig, SynthModel};
+use dsg::serve::{
+    Batcher, ConcurrentServer, Queue, ServerConfig, ShardedConfig, ShardedServer, SubmitError,
+    SynthModel,
+};
 use dsg::sparse::parallel::n_threads;
+use dsg::util::json::{obj, Json};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const DIMS: &[usize] = &[784, 512, 256];
 const CLASSES: usize = 10;
 const BATCH: usize = 32;
 const GAMMA: f32 = 0.8;
 
+fn model(intra: usize) -> Arc<SynthModel> {
+    Arc::new(SynthModel::new(42, DIMS, CLASSES, GAMMA).with_intra_threads(intra))
+}
+
+/// One paced offered-load point against a bounded sharded server.
+struct SweepPoint {
+    multiplier: f64,
+    offered_rate: f64,
+    achieved: f64,
+    served: usize,
+    rejected: usize,
+    p50: f64,
+    p99: f64,
+}
+
+fn run_offered_load(
+    images: &[Vec<f32>],
+    shards: usize,
+    workers: usize,
+    intra: usize,
+    offered_rate: f64,
+    multiplier: f64,
+    queue_cap: usize,
+) -> anyhow::Result<SweepPoint> {
+    let m = model(intra);
+    let cfg = ShardedConfig::new(shards, workers, BATCH, DIMS[0], CLASSES)
+        .with_max_wait(Duration::from_millis(2))
+        .with_queue_cap(queue_cap);
+    let srv = ShardedServer::start(cfg, move |xs: &[f32]| m.forward(xs, BATCH));
+    let interval = Duration::from_secs_f64(1.0 / offered_rate.max(1.0));
+    let start = Instant::now();
+    let mut rejected = 0usize;
+    for (i, img) in images.iter().enumerate() {
+        // open-loop arrivals: stick to the schedule even when behind
+        let target = start + interval * i as u32;
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        match srv.submit(img.clone()) {
+            Ok(_) => {}
+            Err(SubmitError::Rejected(_)) => rejected += 1,
+            Err(e) => anyhow::bail!("unexpected submit error: {e}"),
+        }
+    }
+    srv.flush();
+    let report = srv.join();
+    anyhow::ensure!(report.failed == 0, "batches failed during the sweep");
+    anyhow::ensure!(
+        report.served + rejected == images.len(),
+        "request conservation broken: {} served + {rejected} rejected != {}",
+        report.served,
+        images.len()
+    );
+    anyhow::ensure!(report.rejected as usize == rejected, "reject accounting diverged");
+    Ok(SweepPoint {
+        multiplier,
+        offered_rate,
+        achieved: report.throughput(),
+        served: report.served,
+        rejected,
+        p50: report.latency.percentile(0.50),
+        p99: report.latency.percentile(0.99),
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     dsg::benchutil::header(
         "serve",
-        "concurrent serving throughput: N workers over the shared request queue",
-        "strictly higher imgs/sec at 4 workers than 1, identical predictions",
+        "serving throughput: single queue vs sharded engine, offered-load saturation sweep",
+        "bit-identical predictions everywhere; rejections instead of an overload cliff",
     );
+    let smoke = std::env::var("DSG_SERVE_SMOKE").is_ok();
     let requests: usize = std::env::var("DSG_SERVE_REQUESTS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(1024);
+        .unwrap_or(if smoke { 192 } else { 1024 });
     let cores = n_threads();
     println!("requests {requests}, batch {BATCH}, gamma {GAMMA}, {cores} cores\n");
 
     let probe = SynthModel::new(42, DIMS, CLASSES, GAMMA);
     let images: Vec<Vec<f32>> = (0..requests).map(|i| probe.synth_image(9000 + i as u64)).collect();
 
-    // Baseline: the deterministic single-threaded pump, serial engines.
+    // ---- section 1: parity + scaling --------------------------------
     let mut queue = Queue::new();
     for img in &images {
         queue.push(img.clone());
     }
     let mut batcher = Batcher::new(BATCH, DIMS[0], CLASSES);
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let baseline = batcher.pump(&mut queue, |xs| probe.forward(xs, BATCH))?;
     let wall = t0.elapsed().as_secs_f64();
     println!(
@@ -65,15 +152,14 @@ fn main() -> anyhow::Result<()> {
     let mut tput_at = std::collections::BTreeMap::new();
     for workers in [1usize, 2, 4] {
         let intra = (cores / workers).max(1);
-        let model =
-            Arc::new(SynthModel::new(42, DIMS, CLASSES, GAMMA).with_intra_threads(intra));
+        let m = model(intra);
         let cfg = ServerConfig::new(workers, BATCH, DIMS[0], CLASSES)
             .with_max_wait(Duration::from_millis(5));
         // serve_all pre-enqueues + closes before workers spawn: batch
         // boundaries can't shift with timing, so exactness is structural
         let report = ConcurrentServer::serve_all(
             cfg,
-            move |xs: &[f32]| model.forward(xs, BATCH),
+            move |xs: &[f32]| m.forward(xs, BATCH),
             images.iter().cloned(),
         )?;
         let exact = report.predictions() == want;
@@ -90,6 +176,35 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // sharded engine across the shard axis at a fixed worker budget
+    let shard_workers = cores.clamp(1, 4);
+    let mut sharded_tput = Vec::new();
+    let mut sharded_capacity = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let intra = (cores / shard_workers).max(1);
+        let m = model(intra);
+        let cfg = ShardedConfig::new(shards, shard_workers, BATCH, DIMS[0], CLASSES)
+            .with_max_wait(Duration::from_millis(5));
+        let report = ShardedServer::serve_all(
+            cfg,
+            move |xs: &[f32]| m.forward(xs, BATCH),
+            images.iter().cloned(),
+        )?;
+        let exact = report.predictions() == want;
+        assert!(exact, "{shards}-shard predictions diverged from baseline");
+        println!(
+            "{:<22} {:>10} {:>10} {:>10} {:>12.1} {:>8}",
+            format!("{shards} shards x {shard_workers}w"),
+            fmt_secs(report.latency.percentile(0.50)),
+            fmt_secs(report.latency.percentile(0.95)),
+            fmt_secs(report.latency.percentile(0.99)),
+            report.throughput(),
+            if exact { "yes" } else { "NO" }
+        );
+        sharded_capacity = sharded_capacity.max(report.throughput());
+        sharded_tput.push((shards, report.throughput(), report.stolen));
+    }
+
     let (t1, t4) = (tput_at[&1], tput_at[&4]);
     println!(
         "\n4 workers vs 1: {:.2}x throughput ({:.1} -> {:.1} imgs/sec), predictions bit-identical",
@@ -100,6 +215,139 @@ fn main() -> anyhow::Result<()> {
     if cores > 1 && t4 <= t1 {
         println!("WARN: expected >1x scaling on {cores} cores");
     }
-    println!("serve_throughput OK");
+
+    // ---- section 2: offered-load saturation sweep -------------------
+    let multipliers: &[f64] = if smoke { &[0.5, 2.0] } else { &[0.25, 0.5, 1.0, 2.0, 4.0] };
+    let sweep_cap = 8; // blocks per shard: bounded latency past saturation
+    println!(
+        "\nsaturation sweep: capacity {:.1} imgs/sec, queue cap {sweep_cap} blocks/shard",
+        sharded_capacity
+    );
+    println!(
+        "{:<10} {:>12} {:>12} {:>8} {:>8} {:>10} {:>10}",
+        "offered", "req/s", "achieved", "served", "rejected", "p50", "p99"
+    );
+    let mut sweep = Vec::new();
+    for &mult in multipliers {
+        let offered = (sharded_capacity * mult).max(1.0);
+        let intra = (cores / shard_workers).max(1);
+        let point = run_offered_load(&images, 2, shard_workers, intra, offered, mult, sweep_cap)?;
+        println!(
+            "{:<10} {:>12.1} {:>12.1} {:>8} {:>8} {:>10} {:>10}",
+            format!("{mult}x"),
+            point.offered_rate,
+            point.achieved,
+            point.served,
+            point.rejected,
+            fmt_secs(point.p50),
+            fmt_secs(point.p99),
+        );
+        sweep.push(point);
+    }
+
+    // ---- section 3: burst overload ----------------------------------
+    // the whole load at once into a 1-block cap: rejections must be
+    // explicit and conserved, never a silent drop or unbounded queue
+    let m = model(1);
+    let burst_cfg = ShardedConfig::new(2, 1, BATCH, DIMS[0], CLASSES)
+        .with_max_wait(Duration::from_millis(1))
+        .with_queue_cap(1);
+    let srv = ShardedServer::start(burst_cfg, move |xs: &[f32]| {
+        std::thread::sleep(Duration::from_millis(2));
+        m.forward(xs, BATCH)
+    });
+    let mut burst_rejected = 0usize;
+    for img in &images {
+        match srv.submit(img.clone()) {
+            Ok(_) => {}
+            Err(SubmitError::Rejected(_)) => burst_rejected += 1,
+            Err(e) => anyhow::bail!("unexpected submit error: {e}"),
+        }
+    }
+    srv.flush();
+    let burst = srv.join();
+    assert!(burst_rejected > 0, "an instantaneous burst past a 1-block cap must reject");
+    assert_eq!(burst.served + burst_rejected, requests, "burst conservation broken");
+    println!(
+        "\nburst overload: {} offered at once -> {} served, {} rejected (explicit), p99 {}",
+        requests,
+        burst.served,
+        burst_rejected,
+        fmt_secs(burst.latency.percentile(0.99))
+    );
+
+    // ---- machine-readable artifact ----------------------------------
+    let report = obj(vec![
+        (
+            "config",
+            obj(vec![
+                ("requests", Json::Num(requests as f64)),
+                ("batch", Json::Num(BATCH as f64)),
+                ("gamma", Json::Num(GAMMA as f64)),
+                ("cores", Json::Num(cores as f64)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        (
+            "parity",
+            obj(vec![
+                ("baseline_imgs_per_sec", Json::Num(batcher.stats.throughput(wall))),
+                ("workers_1", Json::Num(tput_at[&1])),
+                ("workers_2", Json::Num(tput_at[&2])),
+                ("workers_4", Json::Num(tput_at[&4])),
+                ("scaling_4v1", Json::Num(t4 / t1)),
+                (
+                    "sharded",
+                    Json::Arr(
+                        sharded_tput
+                            .iter()
+                            .map(|(s, t, stolen)| {
+                                obj(vec![
+                                    ("shards", Json::Num(*s as f64)),
+                                    ("workers", Json::Num(shard_workers as f64)),
+                                    ("imgs_per_sec", Json::Num(*t)),
+                                    ("stolen_blocks", Json::Num(*stolen as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("bit_identical", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "saturation_sweep",
+            Json::Arr(
+                sweep
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("multiplier", Json::Num(p.multiplier)),
+                            ("offered_per_sec", Json::Num(p.offered_rate)),
+                            ("achieved_per_sec", Json::Num(p.achieved)),
+                            ("served", Json::Num(p.served as f64)),
+                            ("rejected", Json::Num(p.rejected as f64)),
+                            ("p50_secs", Json::Num(p.p50)),
+                            ("p99_secs", Json::Num(p.p99)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "burst_overload",
+            obj(vec![
+                ("offered", Json::Num(requests as f64)),
+                ("served", Json::Num(burst.served as f64)),
+                ("rejected", Json::Num(burst_rejected as f64)),
+                ("queue_cap_blocks", Json::Num(1.0)),
+                ("p99_secs", Json::Num(burst.latency.percentile(0.99))),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("DSG_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&out_path, report.to_string())?;
+    println!("\nwrote {out_path}");
+    println!("serve_throughput OK (all configs bit-identical, overload rejects explicitly)");
     Ok(())
 }

@@ -1,8 +1,8 @@
 //! Checkpointing: serialize the full model state (training state + Wp +
 //! R) to a single binary file with an integrity header.
 //!
-//! Format: magic "DSGCKPT1" | u32 n_tensors | per tensor:
-//! u32 ndim | u64 dims[ndim] | u8 dtype (0=f32,1=s32) | payload LE bytes.
+//! Format: magic `"DSGCKPT1" | u32 n_tensors` | per tensor:
+//! `u32 ndim | u64 dims[ndim] | u8 dtype (0=f32,1=s32) | payload LE bytes`.
 
 use crate::coordinator::init::ModelState;
 use crate::runtime::HostTensor;

@@ -1,6 +1,6 @@
 //! L3 coordinator: state init, the training orchestrator, checkpoints.
 //!
-//! See DESIGN.md — the coordinator owns everything dynamic: batching,
+//! See docs/ARCHITECTURE.md — the coordinator owns everything dynamic: batching,
 //! sparsity (gamma) and LR schedules, the every-50-steps projected-weight
 //! refresh (paper §3.1), evaluation, metrics, and persistence.  The HLO
 //! artifacts it drives are pure functions.

@@ -3,7 +3,7 @@
 //! Figures 6/7 and Table 1 are arithmetic over layer shapes, sparsity and
 //! ZVC overhead, so the ImageNet-scale models (AlexNet, VGG16, ResNet18,
 //! ResNet152, WRN-18-2) are reproduced here exactly even though training
-//! them is out of CPU scope (see DESIGN.md substitutions).  The CIFAR and
+//! them is out of CPU scope (see the substitutions note in docs/ARCHITECTURE.md).  The CIFAR and
 //! FASHION models match the shapes the artifacts train.
 
 /// One compute layer in VMM form.

@@ -1,4 +1,4 @@
-//! Synthetic dataset substrate (DESIGN.md substitution for FASHION /
+//! Synthetic dataset substrate (substitution for FASHION /
 //! CIFAR10 — no dataset downloads in this environment).
 //!
 //! Each class is a procedurally generated template bank; samples are a

@@ -124,7 +124,7 @@ impl TernaryIndex {
         &self.idx[self.offsets[2 * p + 1]..self.offsets[2 * p + 2]]
     }
 
-    /// Project one row: y[p] = scale * (sum_plus x - sum_minus x).
+    /// Project one row: `y[p] = scale * (sum_plus x - sum_minus x)`.
     /// Fused ± pass over the flat index array, 4-wide unrolled with
     /// sequential accumulation (bit-identical to the nested-Vec form).
     pub fn project_row(&self, x: &[f32], out: &mut [f32]) {

@@ -2,7 +2,8 @@
 //!
 //! Rust + JAX + Pallas reproduction of Liu et al., ICLR 2019.
 //!
-//! Three layers (see DESIGN.md):
+//! Three layers (see `docs/ARCHITECTURE.md` for the full module map and
+//! the cross-cutting contracts):
 //! * **L3 (this crate)** — training coordinator, data pipeline, projected-
 //!   weight refresh scheduling, metrics, sparse CPU execution engine,
 //!   ZVC codec, memory/compute cost models, CLI.

@@ -16,7 +16,8 @@ use dsg::config::{GammaSchedule, RunConfig};
 use dsg::coordinator::Trainer;
 use dsg::metrics::fmt_secs;
 use dsg::runtime::{Meta, Runtime};
-use dsg::serve::{ConcurrentServer, ServerConfig, SynthModel};
+use dsg::serve::server::{connect_retry, drive_load, Endpoint, WireServer};
+use dsg::serve::{ConcurrentServer, ServerConfig, ShardedConfig, ShardedServer, SynthModel};
 use dsg::{costmodel, datasets, memmodel, native, sparse};
 
 /// Tiny argument parser: subcommand + `--key value` flags.
@@ -100,6 +101,16 @@ COMMANDS:
            threads drain a shared request queue through the parallel
            sparse engines; reports p50/p95/p99 latency and throughput.
            `synthetic` (default) needs no artifacts.
+           [--shards N] run the sharded engine instead (per-shard block
+           queues, work stealing, density shaping; add --queue-cap N
+           for admission control, --no-shaping to disable shaping).
+           [--listen ADDR] serve the wire protocol (docs/PROTOCOL.md)
+           on a TCP `host:port` or `unix:/path` socket until a client
+           sends Shutdown.
+           [--connect ADDR] drive a listening server as a load
+           generator; --verify recomputes in-process and asserts
+           bit-identical predictions (synthetic model only);
+           --shutdown stops the server afterwards.
   help
 
 Artifacts are read from ./artifacts (override with DSG_ARTIFACTS).
@@ -509,13 +520,97 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     anyhow::ensure!(max_batch > 0, "--max-batch must be at least 1");
+    let max_wait = std::time::Duration::from_secs_f64(max_wait_ms / 1e3);
+
+    // ---- client mode: drive a listening server over the wire --------
+    if let Some(addr) = args.get("connect") {
+        let ep = Endpoint::parse(addr);
+        println!("connecting to {ep}: {} requests", images.len());
+        connect_retry(&ep, std::time::Duration::from_secs(10))?;
+        let run = drive_load(&ep, &images, args.get("shutdown").is_some())?;
+        let p = dsg::serve::ServeStats {
+            latencies: run.rtt.clone(),
+            ..Default::default()
+        };
+        let pct = p.percentiles(&[0.5, 0.99]);
+        println!(
+            "client: {} served, {} rejected, {} errors in {:.3}s ({:.1} req/s); \
+             rtt-bound p50 {} p99 {}",
+            run.served(),
+            run.rejected(),
+            run.events.len() - run.served() - run.rejected(),
+            run.wall,
+            run.events.len() as f64 / run.wall.max(1e-12),
+            fmt_secs(pct[0]),
+            fmt_secs(pct[1]),
+        );
+        if args.get("verify").is_some() {
+            anyhow::ensure!(
+                model == "synthetic",
+                "--verify needs the synthetic model (identical weights on both sides)"
+            );
+            let cfg = ShardedConfig::new(1, 1, max_batch, input_elems, classes);
+            let reference = ShardedServer::serve_all(cfg, forward, images)?;
+            anyhow::ensure!(
+                run.predictions() == reference.predictions(),
+                "socket predictions DIVERGED from in-process serving"
+            );
+            println!(
+                "verify: {} socket predictions bit-identical to in-process serving",
+                reference.served
+            );
+        }
+        return Ok(());
+    }
+
+    // ---- server mode: expose the sharded engine on a socket ---------
+    if let Some(addr) = args.get("listen") {
+        let shards = args.get_usize("shards")?.unwrap_or(workers).max(1);
+        let cfg = ShardedConfig::new(shards, workers, max_batch, input_elems, classes)
+            .with_max_wait(max_wait)
+            .with_queue_cap(args.get_usize("queue-cap")?.unwrap_or(0))
+            .with_density_shaping(args.get("no-shaping").is_none());
+        let server = WireServer::bind(&Endpoint::parse(addr), cfg, forward)?;
+        println!(
+            "listening on {} ({shards} shards x {workers} workers, batch {max_batch}, \
+             max-wait {max_wait_ms}ms, gamma {gamma}); send Shutdown to stop",
+            server.local_endpoint()
+        );
+        let report = server.run()?;
+        print_shard_report(&report, max_batch);
+        if ops_meter.dense() > 0 {
+            println!("realized ops (all batches): {}", ops_meter.summary());
+        }
+        return Ok(());
+    }
+
+    // ---- in-process sharded mode ------------------------------------
+    if let Some(shards) = args.get_usize("shards")? {
+        let shards = shards.max(1);
+        println!(
+            "serving {model} [sharded]: {} requests, {shards} shards x {workers} workers \
+             x {intra} engine threads, batch {max_batch}, gamma {gamma}",
+            images.len()
+        );
+        let cfg = ShardedConfig::new(shards, workers, max_batch, input_elems, classes)
+            .with_max_wait(max_wait)
+            .with_queue_cap(args.get_usize("queue-cap")?.unwrap_or(0))
+            .with_density_shaping(args.get("no-shaping").is_none());
+        let report = ShardedServer::serve_all(cfg, forward, images)?;
+        print_shard_report(&report, max_batch);
+        if ops_meter.dense() > 0 {
+            println!("realized ops (all batches): {}", ops_meter.summary());
+        }
+        return Ok(());
+    }
+
+    // ---- legacy single-queue mode (the baseline) --------------------
     println!(
         "serving {model}: {} requests, {workers} workers x {intra} engine threads, \
          batch {max_batch}, max-wait {max_wait_ms}ms, gamma {gamma}",
         images.len()
     );
-    let cfg = ServerConfig::new(workers, max_batch, input_elems, classes)
-        .with_max_wait(std::time::Duration::from_secs_f64(max_wait_ms / 1e3));
+    let cfg = ServerConfig::new(workers, max_batch, input_elems, classes).with_max_wait(max_wait);
     // pre-enqueued drain: batch boundaries (and so predictions) are
     // deterministic for any worker count
     let report = ConcurrentServer::serve_all(cfg, forward, images)?;
@@ -544,6 +639,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("realized ops (all batches): {}", ops_meter.summary());
     }
     Ok(())
+}
+
+/// Shared summary printer for the sharded serving paths.
+fn print_shard_report(report: &dsg::serve::ShardReport, max_batch: usize) {
+    println!(
+        "\n{:>10} {:>8} {:>8} {:>7} {:>7} {:>10} {:>10} {:>10} {:>12}",
+        "served", "rejected", "batches", "padded", "stolen", "p50", "p95", "p99", "imgs/sec"
+    );
+    println!(
+        "{:>10} {:>8} {:>8} {:>7} {:>7} {:>10} {:>10} {:>10} {:>12.1}",
+        report.served,
+        report.rejected,
+        report.batches,
+        report.padded_slots,
+        report.stolen,
+        fmt_secs(report.latency.percentile(0.50)),
+        fmt_secs(report.latency.percentile(0.95)),
+        fmt_secs(report.latency.percentile(0.99)),
+        report.throughput()
+    );
+    println!(
+        "compute/batch ({max_batch} imgs): {}  wall {:.3}s",
+        report.compute.summary(),
+        report.wall
+    );
+    for (i, s) in report.per_shard.iter().enumerate() {
+        println!(
+            "  shard {i}: {} blocks in, {} home, {} stolen, {} rejected, peak depth {}",
+            s.enqueued, s.taken_home, s.stolen, s.rejected, s.peak_depth
+        );
+    }
 }
 
 fn main() {

@@ -1,0 +1,161 @@
+//! Lock-free per-shard serving counters.
+//!
+//! Each shard of the sharded serving engine ([`crate::serve::shard`])
+//! owns one [`ShardCounters`]: the dispatcher bumps it on enqueue and
+//! rejection, workers bump it on take/steal.  Everything is a relaxed
+//! atomic — the counters are observability, never control flow, so a
+//! stale read is fine and the hot path pays one `fetch_add` per block
+//! (blocks, not requests: a block is `max_batch` requests).
+//!
+//! [`ShardSnapshot`] is the plain-data copy taken at report time, used
+//! by `dsg serve` summaries and `BENCH_serve.json`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live counters for one shard queue.  All methods are `&self` and
+/// thread-safe; ordering is relaxed throughout (pure accounting).
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    /// Blocks enqueued to this shard by the dispatcher.
+    enqueued: AtomicU64,
+    /// Blocks taken off this shard by its home worker(s).
+    taken_home: AtomicU64,
+    /// Blocks taken off this shard by a foreign worker (work stealing).
+    stolen: AtomicU64,
+    /// Requests rejected because this shard (the round-robin
+    /// destination at the time) was at capacity.
+    rejected: AtomicU64,
+    /// Currently queued blocks.
+    depth: AtomicU64,
+    /// High-water mark of `depth`.
+    peak_depth: AtomicU64,
+}
+
+impl ShardCounters {
+    pub fn new() -> ShardCounters {
+        ShardCounters::default()
+    }
+
+    /// One block queued; updates depth and its high-water mark.
+    pub fn on_enqueue(&self) {
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_depth.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// One block dequeued, by a home worker (`stolen == false`) or a
+    /// foreign one (`stolen == true`).
+    pub fn on_take(&self, stolen: bool) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+        if stolen {
+            self.stolen.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.taken_home.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One request refused admission while this shard was the
+    /// dispatcher's destination and its queue was full.
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current queued-block count (approximate under concurrency).
+    pub fn depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Plain-data copy for reports.
+    pub fn snapshot(&self) -> ShardSnapshot {
+        ShardSnapshot {
+            enqueued: self.enqueued.load(Ordering::Relaxed),
+            taken_home: self.taken_home.load(Ordering::Relaxed),
+            stolen: self.stolen.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            peak_depth: self.peak_depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one shard's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    pub enqueued: u64,
+    pub taken_home: u64,
+    pub stolen: u64,
+    pub rejected: u64,
+    pub peak_depth: u64,
+}
+
+impl ShardSnapshot {
+    /// Blocks taken off this shard by anyone.
+    pub fn taken(&self) -> u64 {
+        self.taken_home + self.stolen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enqueue_take_balance() {
+        let c = ShardCounters::new();
+        for _ in 0..5 {
+            c.on_enqueue();
+        }
+        assert_eq!(c.depth(), 5);
+        c.on_take(false);
+        c.on_take(true);
+        let s = c.snapshot();
+        assert_eq!(s.enqueued, 5);
+        assert_eq!(s.taken_home, 1);
+        assert_eq!(s.stolen, 1);
+        assert_eq!(s.taken(), 2);
+        assert_eq!(c.depth(), 3);
+        assert_eq!(s.peak_depth, 5);
+    }
+
+    #[test]
+    fn peak_depth_is_high_water() {
+        let c = ShardCounters::new();
+        c.on_enqueue();
+        c.on_take(false);
+        c.on_enqueue();
+        c.on_enqueue();
+        c.on_take(false);
+        assert_eq!(c.snapshot().peak_depth, 2);
+    }
+
+    #[test]
+    fn rejects_counted() {
+        let c = ShardCounters::new();
+        c.on_reject();
+        c.on_reject();
+        assert_eq!(c.snapshot().rejected, 2);
+        assert_eq!(c.depth(), 0);
+    }
+
+    #[test]
+    fn concurrent_updates_conserve_counts() {
+        let c = std::sync::Arc::new(ShardCounters::new());
+        let mut hs = Vec::new();
+        for t in 0..4 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    c.on_enqueue();
+                    c.on_take(t % 2 == 0);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = c.snapshot();
+        assert_eq!(s.enqueued, 400);
+        assert_eq!(s.taken(), 400);
+        assert_eq!(c.depth(), 0);
+        assert!(s.peak_depth >= 1);
+    }
+}

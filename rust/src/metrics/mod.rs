@@ -1,10 +1,13 @@
 //! Run metrics: step histories, summary statistics, latency histograms,
+//! tape-memory and realized-ops meters, per-shard serving counters,
 //! CSV/JSONL writers.
 
+pub mod counters;
 pub mod hist;
 pub mod memory;
 pub mod ops;
 
+pub use counters::{ShardCounters, ShardSnapshot};
 pub use hist::LatencyHistogram;
 pub use memory::{MemoryMeter, TapeAlloc};
 pub use ops::{LayerOps, OpsCounter, OpsMeter};

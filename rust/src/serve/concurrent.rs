@@ -24,11 +24,22 @@
 //! The forward function runs OUTSIDE the lock; per-request latency and
 //! per-batch compute go into thread-local [`LatencyHistogram`]s merged
 //! at shutdown.
+//!
+//! Failure semantics: a batch whose forward errors or PANICS fails
+//! alone — the worker contains the unwind, records one failure per
+//! affected request, and keeps draining, so a poisoned request can
+//! neither deadlock [`ConcurrentServer::serve_all`] nor silently starve
+//! later requests.  The failure surfaces as an `Err` from
+//! `shutdown`/`serve_all` after the drain completes.  With a
+//! [`ServerConfig::with_queue_cap`] bound, over-capacity submits are
+//! refused explicitly ([`ConcurrentServer::try_submit`] returns
+//! [`Rejected`]) instead of growing the queue without limit.
 
-use super::{argmax, assemble_batch_into, Request, Response};
+use super::{argmax, assemble_batch_into, RejectReason, Rejected, Request, Response};
 use crate::metrics::LatencyHistogram;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -46,6 +57,9 @@ pub struct ServerConfig {
     pub input_elems: usize,
     /// Logits per sample.
     pub classes: usize,
+    /// Bound on queued REQUESTS for [`ConcurrentServer::try_submit`];
+    /// `0` = unbounded (never rejects).
+    pub queue_cap: usize,
 }
 
 impl ServerConfig {
@@ -57,11 +71,18 @@ impl ServerConfig {
             max_wait: Duration::from_millis(5),
             input_elems,
             classes,
+            queue_cap: 0,
         }
     }
 
     pub fn with_max_wait(mut self, max_wait: Duration) -> Self {
         self.max_wait = max_wait;
+        self
+    }
+
+    /// Bound the queue at `cap` requests (`0` = unbounded).
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
         self
     }
 }
@@ -81,6 +102,8 @@ struct Shared {
 #[derive(Default, Debug, Clone)]
 pub struct WorkerStats {
     pub served: usize,
+    /// Requests whose batch failed (forward error or panic).
+    pub failed: usize,
     pub batches: usize,
     pub padded_slots: usize,
     pub latency: LatencyHistogram,
@@ -90,6 +113,7 @@ pub struct WorkerStats {
 impl WorkerStats {
     fn merge(&mut self, other: &WorkerStats) {
         self.served += other.served;
+        self.failed += other.failed;
         self.batches += other.batches;
         self.padded_slots += other.padded_slots;
         self.latency.merge(&other.latency);
@@ -103,6 +127,10 @@ pub struct ServeReport {
     /// All responses, sorted by request id (FIFO order restored).
     pub responses: Vec<Response>,
     pub served: usize,
+    /// Requests whose batch failed (only ever nonzero on the report a
+    /// failing run would have produced; `shutdown`/`serve_all` return
+    /// `Err` instead when this is nonzero).
+    pub failed: usize,
     pub batches: usize,
     pub padded_slots: usize,
     /// Queue wait + compute per request.
@@ -133,7 +161,9 @@ pub struct ConcurrentServer {
     cfg: ServerConfig,
     shared: Arc<Shared>,
     results: Arc<Mutex<Vec<Response>>>,
-    handles: Vec<std::thread::JoinHandle<Result<WorkerStats>>>,
+    /// `(request id, why)` for every request whose batch failed.
+    failures: Arc<Mutex<Vec<(u64, String)>>>,
+    handles: Vec<std::thread::JoinHandle<WorkerStats>>,
     started: Instant,
 }
 
@@ -189,35 +219,58 @@ impl ConcurrentServer {
             available: Condvar::new(),
         });
         let results = Arc::new(Mutex::new(Vec::new()));
+        let failures = Arc::new(Mutex::new(Vec::new()));
         let forward = Arc::new(forward);
         let handles = (0..cfg.workers.max(1))
             .map(|_| {
                 let shared = shared.clone();
                 let results = results.clone();
+                let failures = failures.clone();
                 let forward = forward.clone();
                 let cfg = cfg.clone();
-                std::thread::spawn(move || worker_loop(&cfg, &shared, &results, forward.as_ref()))
+                std::thread::spawn(move || {
+                    worker_loop(&cfg, &shared, &results, &failures, forward.as_ref())
+                })
             })
             .collect();
         // wall-clock starts at `now`: serve_all workers begin draining
         // the preloaded queue during spawn, and that work must count
-        ConcurrentServer { cfg, shared, results, handles, started: now }
+        ConcurrentServer { cfg, shared, results, failures, handles, started: now }
     }
 
-    /// Enqueue one request; returns its FIFO id.
+    /// Enqueue one request; returns its FIFO id.  Panics if a
+    /// [`ServerConfig::with_queue_cap`] bound rejects it — callers that
+    /// configure a cap must use [`ConcurrentServer::try_submit`] and
+    /// answer the rejection.
     pub fn submit(&self, image: Vec<f32>) -> u64 {
+        self.try_submit(image)
+            .expect("submit on a bounded queue rejected; use try_submit")
+    }
+
+    /// Enqueue one request, or refuse it explicitly when the queue is
+    /// at `queue_cap` — the caller MUST answer the [`Rejected`] (the
+    /// wire server sends a reject frame); the request is not queued and
+    /// will never produce a response.
+    pub fn try_submit(&self, image: Vec<f32>) -> std::result::Result<u64, Rejected> {
         let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(Rejected { reason: RejectReason::Closing });
+        }
+        if self.cfg.queue_cap > 0 && st.q.len() >= self.cfg.queue_cap {
+            return Err(Rejected { reason: RejectReason::Overloaded });
+        }
         let id = st.next_id;
         st.next_id += 1;
         st.q.push_back(Request { id, image, enqueued: Instant::now() });
         drop(st);
         self.shared.available.notify_one();
-        id
+        Ok(id)
     }
 
-    /// Number of responses completed so far (for progress/tests).
+    /// Number of requests that reached a terminal state (response OR
+    /// failure) — progress pollers must not stall on a failed batch.
     pub fn completed(&self) -> usize {
-        self.results.lock().unwrap().len()
+        self.results.lock().unwrap().len() + self.failures.lock().unwrap().len()
     }
 
     /// Close the queue, let the workers drain it, join them, and merge
@@ -232,26 +285,26 @@ impl ConcurrentServer {
     }
 
     /// Join the (already-closing) workers and merge their accounting.
+    /// The drain always completes first: even when batches failed, every
+    /// queued request reaches a terminal state before the error returns.
     fn join_report(self) -> Result<ServeReport> {
         self.shared.available.notify_all();
         let mut total = WorkerStats::default();
         let mut per_worker = Vec::with_capacity(self.handles.len());
-        let mut first_err = None;
         for h in self.handles {
-            match h.join() {
-                Ok(Ok(stats)) => {
-                    total.merge(&stats);
-                    per_worker.push(stats);
-                }
-                Ok(Err(e)) => first_err = first_err.or(Some(e)),
-                Err(_) => {
-                    first_err =
-                        first_err.or_else(|| Some(anyhow::anyhow!("serve worker panicked")))
-                }
+            // workers contain batch panics internally; a join error
+            // here would be a harness bug and must not wedge the drain
+            if let Ok(stats) = h.join() {
+                total.merge(&stats);
+                per_worker.push(stats);
             }
         }
-        if let Some(e) = first_err {
-            return Err(e).context("concurrent serve");
+        let failures = std::mem::take(&mut *self.failures.lock().unwrap());
+        if let Some((id, why)) = failures.first() {
+            anyhow::bail!(
+                "concurrent serve: {} request(s) failed (first: request {id}: {why})",
+                failures.len()
+            );
         }
         let wall = self.started.elapsed().as_secs_f64();
         let mut responses = Arc::try_unwrap(self.results)
@@ -261,6 +314,7 @@ impl ConcurrentServer {
         responses.sort_by_key(|r| r.id);
         Ok(ServeReport {
             served: total.served,
+            failed: total.failed,
             batches: total.batches,
             padded_slots: total.padded_slots,
             latency: total.latency,
@@ -317,8 +371,9 @@ fn worker_loop<F>(
     cfg: &ServerConfig,
     shared: &Shared,
     results: &Mutex<Vec<Response>>,
+    failures: &Mutex<Vec<(u64, String)>>,
     forward: &F,
-) -> Result<WorkerStats>
+) -> WorkerStats
 where
     F: Fn(&[f32]) -> Result<Vec<f32>>,
 {
@@ -326,30 +381,64 @@ where
     // one assembly buffer per worker, reused across every batch
     let mut xs: Vec<f32> = Vec::new();
     while let Some(reqs) = next_batch(cfg, shared) {
-        let padded = assemble_batch_into(&reqs, cfg.max_batch, cfg.input_elems, &mut xs)?;
-        stats.padded_slots += padded;
-        let t0 = Instant::now();
-        let logits = forward(&xs)?;
-        let compute = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(
-            logits.len() == cfg.max_batch * cfg.classes,
+        match run_batch(cfg, forward, &reqs, &mut xs, &mut stats) {
+            Ok((logits, compute)) => {
+                let mut batch_out = Vec::with_capacity(reqs.len());
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let row = &logits[i * cfg.classes..(i + 1) * cfg.classes];
+                    let latency = r.enqueued.elapsed().as_secs_f64();
+                    stats.served += 1;
+                    stats.latency.record(latency);
+                    batch_out.push(Response { id: r.id, pred: argmax(row), latency, compute });
+                }
+                results.lock().unwrap().extend(batch_out);
+            }
+            Err(why) => {
+                // the batch fails alone; the worker keeps draining so a
+                // poisoned request can neither hang serve_all nor stall
+                // completed() pollers
+                stats.failed += reqs.len();
+                let mut fs = failures.lock().unwrap();
+                for r in &reqs {
+                    fs.push((r.id, why.clone()));
+                }
+            }
+        }
+        stats.batches += 1;
+    }
+    stats
+}
+
+/// Assemble + forward one batch with the unwind contained.  Returns
+/// `(logits, compute seconds)` or a failure message covering the whole
+/// batch.
+fn run_batch<F>(
+    cfg: &ServerConfig,
+    forward: &F,
+    reqs: &[Request],
+    xs: &mut Vec<f32>,
+    stats: &mut WorkerStats,
+) -> std::result::Result<(Vec<f32>, f64), String>
+where
+    F: Fn(&[f32]) -> Result<Vec<f32>>,
+{
+    let padded = assemble_batch_into(reqs, cfg.max_batch, cfg.input_elems, xs)
+        .map_err(|e| format!("batch assembly failed: {e:#}"))?;
+    stats.padded_slots += padded;
+    let t0 = Instant::now();
+    let r = std::panic::catch_unwind(AssertUnwindSafe(|| forward(&xs[..])));
+    let compute = t0.elapsed().as_secs_f64();
+    stats.compute.record(compute);
+    match r {
+        Ok(Ok(logits)) if logits.len() == cfg.max_batch * cfg.classes => Ok((logits, compute)),
+        Ok(Ok(logits)) => Err(format!(
             "forward returned {} logits, expected {}",
             logits.len(),
             cfg.max_batch * cfg.classes
-        );
-        stats.compute.record(compute);
-        let mut batch_out = Vec::with_capacity(reqs.len());
-        for (i, r) in reqs.into_iter().enumerate() {
-            let row = &logits[i * cfg.classes..(i + 1) * cfg.classes];
-            let latency = r.enqueued.elapsed().as_secs_f64();
-            stats.served += 1;
-            stats.latency.record(latency);
-            batch_out.push(Response { id: r.id, pred: argmax(row), latency, compute });
-        }
-        stats.batches += 1;
-        results.lock().unwrap().extend(batch_out);
+        )),
+        Ok(Err(e)) => Err(format!("forward failed: {e:#}")),
+        Err(p) => Err(super::shard::panic_message(&p)),
     }
-    Ok(stats)
 }
 
 #[cfg(test)]
@@ -476,5 +565,86 @@ mod tests {
         srv.submit(vec![0.0; 3]); // wrong input_elems
         std::thread::sleep(Duration::from_millis(30));
         assert!(srv.shutdown().is_err());
+    }
+
+    #[test]
+    fn panicking_forward_does_not_deadlock_serve_all() {
+        // every batch panics; serve_all must return an error promptly
+        // instead of hanging on dead workers
+        let imgs: Vec<Vec<f32>> = (0..20).map(|_| vec![1.0; 4]).collect();
+        let cfg = ServerConfig::new(2, 4, 4, 5);
+        let err = ConcurrentServer::serve_all(
+            cfg,
+            |_: &[f32]| -> Result<Vec<f32>> { panic!("kaboom") },
+            imgs,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("kaboom"), "{err}");
+        assert!(err.to_string().contains("20 request(s) failed"), "{err}");
+    }
+
+    #[test]
+    fn poisoned_batch_fails_alone_later_requests_still_serve() {
+        // queue closed pre-spawn: batches are [0..4), [4..8); pixel 5.0
+        // poisons only the second batch
+        let imgs: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 4]).collect();
+        let cfg = ServerConfig::new(1, 4, 4, 8);
+        let srv = ConcurrentServer::start_with(
+            cfg,
+            |xs: &[f32]| -> Result<Vec<f32>> {
+                assert!(!xs.contains(&5.0), "poison batch");
+                fake_forward(4, 8)(xs)
+            },
+            imgs,
+            true,
+        );
+        // the worker survives the panic and finishes BOTH batches
+        let t0 = Instant::now();
+        while srv.completed() < 8 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker died instead of continuing");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let err = srv.shutdown().unwrap_err();
+        assert!(err.to_string().contains("4 request(s) failed"), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
+    }
+
+    #[test]
+    fn try_submit_rejects_over_capacity_instead_of_growing() {
+        // 3-request cap, worker blocked by a slow forward: the burst
+        // must split into admitted + explicitly rejected, nothing lost
+        let cfg = ServerConfig::new(1, 2, 4, 5)
+            .with_queue_cap(3)
+            .with_max_wait(Duration::from_millis(1));
+        let srv = ConcurrentServer::start(cfg, move |xs: &[f32]| {
+            std::thread::sleep(Duration::from_millis(25));
+            fake_forward(2, 5)(xs)
+        });
+        let mut admitted = 0usize;
+        let mut rejected = 0usize;
+        for i in 0..60usize {
+            match srv.try_submit(vec![(i % 3) as f32; 4]) {
+                Ok(_) => admitted += 1,
+                Err(r) => {
+                    assert_eq!(r.reason, RejectReason::Overloaded);
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "a 60-request burst past a 3-slot cap must reject");
+        let report = srv.shutdown().unwrap();
+        assert_eq!(report.served, admitted, "every admitted request must be served");
+        assert_eq!(report.failed, 0);
+    }
+
+    #[test]
+    fn unbounded_queue_never_rejects() {
+        let cfg = ServerConfig::new(1, 4, 4, 5).with_max_wait(Duration::from_millis(1));
+        let srv = ConcurrentServer::start(cfg, fake_forward(4, 5));
+        for i in 0..50usize {
+            srv.try_submit(vec![(i % 3) as f32; 4]).expect("cap 0 must admit everything");
+        }
+        let report = srv.shutdown().unwrap();
+        assert_eq!(report.served, 50);
     }
 }

@@ -8,7 +8,7 @@
 //! batch (padded rows are computed but their results dropped — the same
 //! strategy the eval path uses).
 //!
-//! Two execution substrates share those semantics:
+//! Three execution substrates share those semantics:
 //!
 //! * [`Batcher`] — the original single-threaded pump, retained as the
 //!   determinism baseline and for the PJRT path (the CPU client is not
@@ -22,12 +22,80 @@
 //!   engines are bit-exact under any thread budget, a pre-enqueued load
 //!   (`ConcurrentServer::serve_all`) yields predictions identical for
 //!   any worker count — by construction, not by timing.
+//! * [`shard::ShardedServer`] — the production front-end: a dispatcher
+//!   seals contiguous FIFO blocks and distributes them round-robin over
+//!   per-shard queues; workers drain their home shard and steal whole
+//!   blocks when idle.  Adds admission control (bounded queues with
+//!   explicit [`Rejected`] responses), density-aware batch shaping, and
+//!   per-shard [`crate::metrics::ShardCounters`].  Batch composition is
+//!   a pure function of arrival order, so the bit-exactness guarantee
+//!   extends to any shard count as well.
+//!
+//! The sharded engine is externally drivable: [`wire`] defines a
+//! length-prefixed binary protocol (spec: `docs/PROTOCOL.md`) and
+//! [`server`] serves it over TCP or a Unix socket.
 
 pub mod concurrent;
+pub mod server;
+pub mod shard;
 pub mod synth;
+pub mod wire;
 
 pub use concurrent::{ConcurrentServer, ServeReport, ServerConfig};
+pub use shard::{Outcome, ShardReport, ShardedConfig, ShardedServer, SubmitError, Verdict};
 pub use synth::SynthModel;
+
+/// Why a request was refused admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The destination shard queue is at `queue_cap`.
+    Overloaded,
+    /// The server has stopped admitting (shutdown in progress).
+    Closing,
+}
+
+impl RejectReason {
+    /// Stable wire encoding (see `docs/PROTOCOL.md`).
+    pub fn code(self) -> u8 {
+        match self {
+            RejectReason::Overloaded => 1,
+            RejectReason::Closing => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<RejectReason> {
+        match c {
+            1 => Some(RejectReason::Overloaded),
+            2 => Some(RejectReason::Closing),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::Overloaded => write!(f, "overloaded"),
+            RejectReason::Closing => write!(f, "closing"),
+        }
+    }
+}
+
+/// Admission-control refusal: the request never entered a batch and
+/// will never produce a response, so the caller must handle it NOW
+/// (the wire server answers with a reject frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejected {
+    pub reason: RejectReason,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request rejected: {}", self.reason)
+    }
+}
+
+impl std::error::Error for Rejected {}
 
 use crate::metrics::LatencyHistogram;
 use std::collections::VecDeque;
@@ -151,27 +219,45 @@ pub(crate) fn assemble_batch_into(
     input_elems: usize,
     xs: &mut Vec<f32>,
 ) -> anyhow::Result<usize> {
-    anyhow::ensure!(!reqs.is_empty(), "cannot assemble an empty batch");
+    assemble_padded_into(
+        reqs.iter().map(|r| (r.id, r.image.as_slice())),
+        batch_size,
+        input_elems,
+        xs,
+    )
+}
+
+/// Request-shape-agnostic batch assembler shared by every serving
+/// substrate: lays `rows` out row-major, pads the tail by repeating the
+/// FIRST row (`extend_from_within`, no extra allocation), and returns
+/// the padded-slot count.  All substrates batching through one function
+/// is what keeps their padding semantics — and hence their DSG masks —
+/// bit-identical.
+pub(crate) fn assemble_padded_into<'a>(
+    rows: impl ExactSizeIterator<Item = (u64, &'a [f32])>,
+    batch_size: usize,
+    input_elems: usize,
+    xs: &mut Vec<f32>,
+) -> anyhow::Result<usize> {
+    let n = rows.len();
+    anyhow::ensure!(n > 0, "cannot assemble an empty batch");
     anyhow::ensure!(
-        reqs.len() <= batch_size,
-        "cannot assemble {} requests into a batch of {batch_size}",
-        reqs.len()
+        n <= batch_size,
+        "cannot assemble {n} requests into a batch of {batch_size}"
     );
     xs.clear();
     xs.reserve(batch_size * input_elems);
-    for r in reqs {
+    for (id, row) in rows {
         anyhow::ensure!(
-            r.image.len() == input_elems,
-            "request {} has {} elems, expected {}",
-            r.id,
-            r.image.len(),
-            input_elems
+            row.len() == input_elems,
+            "request {id} has {} elems, expected {input_elems}",
+            row.len()
         );
-        xs.extend_from_slice(&r.image);
+        xs.extend_from_slice(row);
     }
-    let padded = batch_size - reqs.len();
+    let padded = batch_size - n;
     for _ in 0..padded {
-        xs.extend_from_slice(&reqs[0].image);
+        xs.extend_from_within(0..input_elems);
     }
     Ok(padded)
 }
@@ -344,6 +430,18 @@ mod tests {
         let taken = q.take(1);
         assert_eq!(taken[0].id, 0);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn reject_reason_codes_roundtrip() {
+        for r in [RejectReason::Overloaded, RejectReason::Closing] {
+            assert_eq!(RejectReason::from_code(r.code()), Some(r));
+        }
+        assert_eq!(RejectReason::from_code(0), None);
+        assert_eq!(RejectReason::from_code(3), None);
+        assert!(Rejected { reason: RejectReason::Overloaded }
+            .to_string()
+            .contains("overloaded"));
     }
 
     #[test]

@@ -1,0 +1,455 @@
+//! Socket front-end for the sharded serving engine: accepts
+//! [`super::wire`] frames over TCP or a Unix-domain socket, feeds them
+//! into a [`ShardedServer`], and streams responses back per connection.
+//!
+//! Topology: one acceptor loop ([`WireServer::run`]), and per
+//! connection one reader thread (this thread) plus one writer thread
+//! owning the outbound half.  The reader submits each `Request` with a
+//! reply hook that encodes the [`Outcome`] and hands it to the writer's
+//! channel — so responses stream back as their batches complete,
+//! out-of-order by design (clients correlate by request id).  Admission
+//! rejects and malformed-request errors are answered immediately from
+//! the reader.
+//!
+//! A `Shutdown` frame stops the acceptor; the server then joins every
+//! live connection, drains the engine, and returns the final
+//! [`ShardReport`] — the same report in-process serving produces, which
+//! is what lets CI assert socket/in-process bit-parity.
+
+use super::shard::{Outcome, ShardReport, ShardedConfig, ShardedServer, SubmitError, Verdict};
+use super::wire::{read_frame, write_frame, Message};
+use super::RejectReason;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Where a server listens / a client connects.  Textual form is
+/// `unix:/path/to.sock` for Unix-domain sockets, anything else is a
+/// TCP `host:port`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    Tcp(String),
+    Unix(std::path::PathBuf),
+}
+
+impl Endpoint {
+    pub fn parse(s: &str) -> Endpoint {
+        match s.strip_prefix("unix:") {
+            Some(p) => Endpoint::Unix(std::path::PathBuf::from(p)),
+            None => Endpoint::Tcp(s.to_string()),
+        }
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Tcp(a) => write!(f, "{a}"),
+            Endpoint::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, on: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(on),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(on),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        }
+    }
+}
+
+/// One accepted or dialed connection (either transport).
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> std::io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+        }
+    }
+
+    fn set_nonblocking(&self, on: bool) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(on),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(on),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// The socket-serving front-end: a bound listener plus a running
+/// [`ShardedServer`].
+pub struct WireServer {
+    engine: Arc<ShardedServer>,
+    listener: Listener,
+    local: Endpoint,
+    stop: Arc<AtomicBool>,
+}
+
+impl WireServer {
+    /// Bind `endpoint` and start the sharded engine behind it.  For TCP
+    /// port 0 the resolved port is available via
+    /// [`WireServer::local_endpoint`].  A pre-existing Unix socket path
+    /// is replaced (stale sockets from a killed server would otherwise
+    /// wedge restarts).
+    pub fn bind<F>(endpoint: &Endpoint, cfg: ShardedConfig, forward: F) -> Result<WireServer>
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        let (listener, local) = match endpoint {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))?;
+                let local = Endpoint::Tcp(l.local_addr()?.to_string());
+                (Listener::Tcp(l), local)
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix socket {}", path.display()))?;
+                (Listener::Unix(l), Endpoint::Unix(path.clone()))
+            }
+            #[cfg(not(unix))]
+            Endpoint::Unix(path) => {
+                bail!("unix sockets are not supported on this platform: {}", path.display())
+            }
+        };
+        let engine = Arc::new(ShardedServer::start(cfg, forward));
+        Ok(WireServer { engine, listener, local, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (TCP port resolved if bound to port 0).
+    pub fn local_endpoint(&self) -> &Endpoint {
+        &self.local
+    }
+
+    /// A flag that makes [`WireServer::run`] return after the current
+    /// accept-poll tick (the in-band `Shutdown` frame sets the same
+    /// flag).
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept and serve connections until a `Shutdown` frame (or the
+    /// stop handle) fires, then join the connections, drain the engine,
+    /// and return the merged report.
+    pub fn run(self) -> Result<ShardReport> {
+        self.listener.set_nonblocking(true).context("setting listener nonblocking")?;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok(conn) => {
+                    conn.set_nonblocking(false).context("setting connection blocking")?;
+                    let engine = self.engine.clone();
+                    let stop = self.stop.clone();
+                    conns.push(std::thread::spawn(move || {
+                        // a torn connection only kills this handler
+                        let _ = handle_connection(conn, &engine, &stop);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+            conns.retain(|h| !h.is_finished());
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        if let Endpoint::Unix(path) = &self.local {
+            let _ = std::fs::remove_file(path);
+        }
+        let engine = Arc::try_unwrap(self.engine)
+            .map_err(|_| anyhow::anyhow!("connection still holds the engine at shutdown"))?;
+        Ok(engine.join())
+    }
+}
+
+/// Serve one connection: read frames, submit requests, answer control
+/// messages.  Returns when the peer closes or sends `Shutdown`.
+fn handle_connection(conn: Conn, engine: &Arc<ShardedServer>, stop: &Arc<AtomicBool>) -> Result<()> {
+    let writer_conn = conn.try_clone().context("cloning connection for writer")?;
+    let (tx, rx) = channel::<Message>();
+    let writer = std::thread::spawn(move || {
+        let mut w = std::io::BufWriter::new(writer_conn);
+        // exits when every sender (reader + outstanding reply hooks)
+        // has dropped — i.e. after the last response for this
+        // connection is on the wire
+        while let Ok(msg) = rx.recv() {
+            if write_frame(&mut w, &msg).is_err() {
+                break;
+            }
+        }
+    });
+    let mut r = std::io::BufReader::new(conn);
+    let result = (|| -> Result<()> {
+        loop {
+            let Some(msg) = read_frame(&mut r)? else {
+                return Ok(()); // clean EOF
+            };
+            match msg {
+                Message::Request { id, image } => {
+                    let reply_tx = tx.clone();
+                    let reply = Box::new(move |o: Outcome| {
+                        let msg = match o.verdict {
+                            Verdict::Pred(p) => Message::Response {
+                                id: o.id,
+                                pred: p as u32,
+                                latency_us: (o.latency * 1e6) as u32,
+                            },
+                            Verdict::Failed(m) => Message::Error { id: o.id, message: m },
+                        };
+                        let _ = reply_tx.send(msg);
+                    });
+                    match engine.submit_replying(id, image, reply) {
+                        Ok(()) => {}
+                        Err(SubmitError::Rejected(rej)) => {
+                            let _ = tx.send(Message::Reject { id, reason: rej.reason });
+                        }
+                        Err(SubmitError::BadRequest(m)) => {
+                            let _ = tx.send(Message::Error { id, message: m });
+                        }
+                    }
+                }
+                Message::Ping { token } => {
+                    let _ = tx.send(Message::Pong { token });
+                }
+                Message::Flush => engine.flush(),
+                Message::Shutdown => {
+                    stop.store(true, Ordering::SeqCst);
+                    return Ok(());
+                }
+                other => bail!("client sent a server-only message: {other:?}"),
+            }
+        }
+    })();
+    drop(tx);
+    let _ = writer.join();
+    result
+}
+
+/// What the load-generating client got back for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientEvent {
+    Response { id: u64, pred: u32, latency_us: u32 },
+    Reject { id: u64, reason: RejectReason },
+    Error { id: u64, message: String },
+}
+
+impl ClientEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            ClientEvent::Response { id, .. }
+            | ClientEvent::Reject { id, .. }
+            | ClientEvent::Error { id, .. } => *id,
+        }
+    }
+}
+
+/// Result of one [`drive_load`] run.
+#[derive(Debug)]
+pub struct ClientRun {
+    /// One terminal event per request, sorted by id.
+    pub events: Vec<ClientEvent>,
+    /// Client-measured round-trip seconds, indexed like `events`.
+    pub rtt: Vec<f64>,
+    /// Wall-clock of the whole run, seconds.
+    pub wall: f64,
+}
+
+impl ClientRun {
+    /// Predictions by id order, comparable to
+    /// [`ShardReport::predictions`]: a reject or error maps to
+    /// `usize::MAX` so divergence is loud.
+    pub fn predictions(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .map(|e| match e {
+                ClientEvent::Response { pred, .. } => *pred as usize,
+                _ => usize::MAX,
+            })
+            .collect()
+    }
+
+    pub fn served(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ClientEvent::Response { .. })).count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ClientEvent::Reject { .. })).count()
+    }
+}
+
+/// Dial `endpoint`, retrying for up to `timeout` (a just-spawned server
+/// may not be listening yet).
+pub fn connect_retry(endpoint: &Endpoint, timeout: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    loop {
+        match dial(endpoint) {
+            Ok(_) => return Ok(()),
+            Err(e) if t0.elapsed() < timeout => {
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).with_context(|| format!("connecting to {endpoint}")),
+        }
+    }
+}
+
+fn dial(endpoint: &Endpoint) -> Result<Conn> {
+    match endpoint {
+        Endpoint::Tcp(addr) => Ok(Conn::Tcp(TcpStream::connect(addr)?)),
+        #[cfg(unix)]
+        Endpoint::Unix(path) => Ok(Conn::Unix(UnixStream::connect(path)?)),
+        #[cfg(not(unix))]
+        Endpoint::Unix(path) => {
+            bail!("unix sockets are not supported on this platform: {}", path.display())
+        }
+    }
+}
+
+/// Load-generating client: sends `images` as requests with ids
+/// `0..images.len()`, a `Flush` after the last one (so a trailing
+/// partial batch ships without waiting out the server's deadline),
+/// collects one terminal event per request, and optionally sends
+/// `Shutdown` before disconnecting.
+pub fn drive_load(
+    endpoint: &Endpoint,
+    images: &[Vec<f32>],
+    shutdown_after: bool,
+) -> Result<ClientRun> {
+    let t0 = Instant::now();
+    let conn = dial(endpoint)?;
+    let mut w = std::io::BufWriter::new(conn.try_clone().context("cloning client connection")?);
+    let mut r = std::io::BufReader::new(conn);
+
+    // handshake: a ping/pong proves both directions before load starts
+    write_frame(&mut w, &Message::Ping { token: 0x5D6_0001 })?;
+    match read_frame(&mut r)? {
+        Some(Message::Pong { token: 0x5D6_0001 }) => {}
+        other => bail!("handshake failed: expected pong, got {other:?}"),
+    }
+
+    let n = images.len();
+    let reader = std::thread::spawn(move || -> Result<Vec<ClientEvent>> {
+        let mut events: Vec<Option<ClientEvent>> = (0..n).map(|_| None).collect();
+        let mut got = 0usize;
+        while got < n {
+            let Some(msg) = read_frame(&mut r)? else {
+                bail!("server closed with {got} of {n} responses delivered");
+            };
+            let ev = match msg {
+                Message::Response { id, pred, latency_us } => {
+                    ClientEvent::Response { id, pred, latency_us }
+                }
+                Message::Reject { id, reason } => ClientEvent::Reject { id, reason },
+                Message::Error { id, message } => ClientEvent::Error { id, message },
+                other => bail!("unexpected server message: {other:?}"),
+            };
+            let id = ev.id() as usize;
+            anyhow::ensure!(id < n, "server answered unknown request id {id}");
+            anyhow::ensure!(events[id].is_none(), "duplicate terminal event for id {id}");
+            events[id] = Some(ev);
+            got += 1;
+        }
+        Ok(events.into_iter().map(|e| e.unwrap()).collect())
+    });
+
+    let mut send_times = Vec::with_capacity(n);
+    for (id, img) in images.iter().enumerate() {
+        send_times.push(Instant::now());
+        write_frame(&mut w, &Message::Request { id: id as u64, image: img.clone() })?;
+    }
+    write_frame(&mut w, &Message::Flush)?;
+
+    let events = reader
+        .join()
+        .map_err(|_| anyhow::anyhow!("client reader thread panicked"))??;
+    let recv_done = Instant::now();
+    // per-id RTT upper bound: send time to end-of-run (exact per-event
+    // stamps would need the reader to share the clock vector; the serve
+    // bench measures its latencies server-side, so a bound suffices
+    // here)
+    let rtt: Vec<f64> = send_times
+        .iter()
+        .map(|s| recv_done.duration_since(*s).as_secs_f64())
+        .collect();
+
+    if shutdown_after {
+        write_frame(&mut w, &Message::Shutdown)?;
+    }
+    Ok(ClientRun { events, rtt, wall: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parse_roundtrip() {
+        assert_eq!(Endpoint::parse("127.0.0.1:9000"), Endpoint::Tcp("127.0.0.1:9000".into()));
+        assert_eq!(
+            Endpoint::parse("unix:/tmp/dsg.sock"),
+            Endpoint::Unix(std::path::PathBuf::from("/tmp/dsg.sock"))
+        );
+        assert_eq!(Endpoint::parse("unix:/tmp/dsg.sock").to_string(), "unix:/tmp/dsg.sock");
+        assert_eq!(Endpoint::parse("0.0.0.0:0").to_string(), "0.0.0.0:0");
+    }
+}

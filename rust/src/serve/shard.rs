@@ -1,0 +1,1074 @@
+//! Sharded serving engine: per-worker block queues fed by a dispatcher,
+//! with work stealing, admission control, and density-aware batch
+//! shaping.
+//!
+//! This replaces the single `Mutex`+`Condvar` FIFO of
+//! [`super::concurrent::ConcurrentServer`] as the production front-end
+//! (the old server is retained as the single-queue baseline).  The
+//! design splits the two jobs the old queue conflated:
+//!
+//! * **Batch formation** happens at *dispatch* time, not in the
+//!   workers.  The submitting thread appends to one forming block;
+//!   every `max_batch` requests it seals the block and pushes it to
+//!   shard `seq % shards` round-robin.  Batch composition is therefore
+//!   a pure function of arrival order — block `k` is requests
+//!   `[k*B, (k+1)*B)` — for ANY shard count and ANY worker count.
+//!   That is the crown-jewel invariant carried over from the single
+//!   queue: predictions are bit-identical across `{shards} x {workers}`
+//!   because batches (and with them the DSG shared-threshold masks)
+//!   never change, only *where* and *when* they execute.
+//! * **Batch execution** is per-shard: worker `w`'s home shard is
+//!   `w % shards`; it drains home blocks FIFO (modulo density shaping,
+//!   below) and steals the oldest block from the deepest foreign shard
+//!   when home is empty.  Stealing moves a whole sealed block, so it
+//!   can never re-mix requests across batches.
+//!
+//! **Admission control**: with `queue_cap > 0`, a submit whose
+//! destination shard already holds `queue_cap` blocks is rejected with
+//! an explicit [`Rejected`] error (counted per shard) instead of
+//! growing the queue without bound.  Overload therefore degrades into
+//! reported rejections with bounded queue delay, not an unbounded p99
+//! cliff.
+//!
+//! **Density-aware batch shaping**: the dispatcher tags each sealed
+//! block with the kernel path its measured input density selects (the
+//! compound input-gather engages below
+//! [`crate::sparse::parallel::compound_cutoff`]); workers prefer to run
+//! consecutive blocks of the same bucket so one kernel path stays hot,
+//! with a starvation guard that falls back to strict FIFO once the
+//! oldest block has waited `4 * max_wait`.  Shaping reorders block
+//! *execution*, never block *composition* — it moves time, never bits.
+//!
+//! Failure semantics: a `forward` that panics or errors fails only the
+//! block that was in flight — the worker catches the unwind, reports a
+//! [`Verdict::Failed`] per affected request, and keeps serving.  A dead
+//! request is therefore impossible by construction: every admitted
+//! request ends as exactly one [`Outcome`]; every refused one ends as a
+//! [`Rejected`] error at the submit call.
+
+use super::{argmax, assemble_padded_into, RejectReason, Rejected};
+use crate::metrics::{LatencyHistogram, ShardCounters, ShardSnapshot};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Static parameters of the sharded server.
+#[derive(Clone, Debug)]
+pub struct ShardedConfig {
+    /// Shard queues (requests are distributed block-round-robin).
+    pub shards: usize,
+    /// Worker threads; worker `w` is homed on shard `w % shards`.
+    pub workers: usize,
+    /// Full batch size (the model's fixed batch dimension).
+    pub max_batch: usize,
+    /// Flat pixels per request.
+    pub input_elems: usize,
+    /// Logits per sample.
+    pub classes: usize,
+    /// Deadline: an idle worker seals the partial forming block once
+    /// its oldest request has waited this long (streaming path only —
+    /// [`ShardedServer::serve_all`] never deadline-flushes).
+    pub max_wait: Duration,
+    /// Per-shard bound on queued blocks; `0` = unbounded (no admission
+    /// control, nothing is ever rejected).
+    pub queue_cap: usize,
+    /// Tag blocks with their kernel-path bucket and let workers group
+    /// same-bucket blocks (execution order only; bit-neutral).
+    pub density_shaping: bool,
+}
+
+impl ShardedConfig {
+    pub fn new(
+        shards: usize,
+        workers: usize,
+        max_batch: usize,
+        input_elems: usize,
+        classes: usize,
+    ) -> ShardedConfig {
+        assert!(max_batch > 0 && input_elems > 0 && classes > 0);
+        ShardedConfig {
+            shards: shards.max(1),
+            workers: workers.max(1),
+            max_batch,
+            input_elems,
+            classes,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 0,
+            density_shaping: true,
+        }
+    }
+
+    pub fn with_max_wait(mut self, max_wait: Duration) -> ShardedConfig {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Bound each shard at `cap` queued blocks (`0` = unbounded).
+    pub fn with_queue_cap(mut self, cap: usize) -> ShardedConfig {
+        self.queue_cap = cap;
+        self
+    }
+
+    pub fn with_density_shaping(mut self, on: bool) -> ShardedConfig {
+        self.density_shaping = on;
+        self
+    }
+}
+
+/// What happened to one admitted request.
+#[derive(Debug, Clone)]
+pub enum Verdict {
+    /// Classified: the argmax of the request's logit row.
+    Pred(usize),
+    /// The batch containing this request failed (forward error or
+    /// panic); the message is shared by every request of the batch.
+    Failed(String),
+}
+
+/// Terminal record of one admitted request.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Caller-visible id (the wire request id, or the submit-order
+    /// sequence number for in-process submits).
+    pub id: u64,
+    pub verdict: Verdict,
+    /// Queue wait + compute, seconds.
+    pub latency: f64,
+    /// Forward duration of the containing batch, seconds.
+    pub compute: f64,
+}
+
+/// Per-request completion hook (wire connections pass one; in-process
+/// submits leave it `None` and collect from the final report).
+pub type ReplyFn = Box<dyn FnOnce(Outcome) + Send>;
+
+/// A malformed or refused submit.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Refused by admission control or because the server is closing.
+    Rejected(Rejected),
+    /// The request itself is invalid (wrong pixel count).
+    BadRequest(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected(r) => write!(f, "{r}"),
+            SubmitError::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+struct ShardRequest {
+    /// Caller-visible id carried into the [`Outcome`].
+    id: u64,
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: Option<ReplyFn>,
+}
+
+/// A sealed batch: `reqs.len() <= max_batch` contiguous-arrival
+/// requests plus the kernel-path bucket its input density selects.
+struct Block {
+    reqs: Vec<ShardRequest>,
+    bucket: u8,
+    /// Enqueue time of the oldest request (starvation guard).
+    oldest: Instant,
+}
+
+struct Shard {
+    q: Mutex<VecDeque<Block>>,
+    counters: ShardCounters,
+}
+
+/// Forming-block state, owned by the dispatcher lock.
+struct Dispatch {
+    forming: Vec<ShardRequest>,
+    /// Submit-order sequence (also the default request id).
+    next_seq: u64,
+    /// Sealed-block count; destination shard is `next_block % shards`.
+    next_block: u64,
+    closed: bool,
+}
+
+/// Epoch-counting wakeup: producers bump under the lock and notify;
+/// consumers snapshot the epoch BEFORE scanning the queues and only
+/// sleep if it has not moved since — no lost-wakeup window.
+struct Notify {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notify {
+    fn bump(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Sleep (bounded by `timeout`) unless the epoch moved past `seen`.
+    fn wait_if_unchanged(&self, seen: u64, timeout: Duration) {
+        let g = self.epoch.lock().unwrap();
+        if *g == seen {
+            let _ = self.cv.wait_timeout(g, timeout).unwrap();
+        }
+    }
+}
+
+/// Per-worker accounting, merged into the final report.
+#[derive(Default, Debug, Clone)]
+pub struct ShardWorkerStats {
+    pub served: usize,
+    pub failed: usize,
+    pub batches: usize,
+    pub padded_slots: usize,
+    /// Blocks this worker took from a foreign shard.
+    pub stolen: usize,
+    /// Batches that continued the previous batch's density bucket.
+    pub bucket_runs: usize,
+    pub latency: LatencyHistogram,
+    pub compute: LatencyHistogram,
+}
+
+impl ShardWorkerStats {
+    fn merge(&mut self, o: &ShardWorkerStats) {
+        self.served += o.served;
+        self.failed += o.failed;
+        self.batches += o.batches;
+        self.padded_slots += o.padded_slots;
+        self.stolen += o.stolen;
+        self.bucket_runs += o.bucket_runs;
+        self.latency.merge(&o.latency);
+        self.compute.merge(&o.compute);
+    }
+}
+
+/// Aggregated outcome of one sharded serving run.
+#[derive(Debug)]
+pub struct ShardReport {
+    /// Outcomes of every collected (reply-less) request, sorted by id.
+    pub outcomes: Vec<Outcome>,
+    pub served: usize,
+    pub failed: usize,
+    /// Requests refused admission (never entered a block).
+    pub rejected: u64,
+    pub batches: usize,
+    pub padded_slots: usize,
+    pub stolen: usize,
+    pub latency: LatencyHistogram,
+    pub compute: LatencyHistogram,
+    /// Wall-clock from server start to drain completion, seconds.
+    pub wall: f64,
+    pub per_shard: Vec<ShardSnapshot>,
+    pub per_worker: Vec<ShardWorkerStats>,
+}
+
+impl ShardReport {
+    pub fn throughput(&self) -> f64 {
+        self.served as f64 / self.wall.max(1e-12)
+    }
+
+    /// Predictions of the collected outcomes in id order (the
+    /// bit-exactness currency); a failed request maps to `usize::MAX`
+    /// so a silent substitution can never pass an equality assert.
+    pub fn predictions(&self) -> Vec<usize> {
+        self.outcomes
+            .iter()
+            .map(|o| match o.verdict {
+                Verdict::Pred(p) => p,
+                Verdict::Failed(_) => usize::MAX,
+            })
+            .collect()
+    }
+
+    /// First failure message, if any batch failed.
+    pub fn first_failure(&self) -> Option<&str> {
+        self.outcomes.iter().find_map(|o| match &o.verdict {
+            Verdict::Failed(m) => Some(m.as_str()),
+            Verdict::Pred(_) => None,
+        })
+    }
+
+    /// `Err` if any admitted request failed (rejections are NOT
+    /// failures: they were answered at submit time).
+    pub fn into_result(self) -> Result<ShardReport> {
+        if self.failed > 0 {
+            let msg = self.first_failure().unwrap_or("unknown").to_string();
+            anyhow::bail!("{} of {} requests failed: {msg}", self.failed, self.failed + self.served);
+        }
+        Ok(self)
+    }
+}
+
+struct Inner {
+    cfg: ShardedConfig,
+    shards: Vec<Shard>,
+    dispatch: Mutex<Dispatch>,
+    notify: Notify,
+    collected: Mutex<Vec<Outcome>>,
+    rejected: std::sync::atomic::AtomicU64,
+}
+
+/// The sharded multi-worker server.  [`ShardedServer::start`] spawns
+/// the workers; [`ShardedServer::submit`] /
+/// [`ShardedServer::submit_replying`] enqueue; [`ShardedServer::join`]
+/// closes, drains, and returns the merged [`ShardReport`].
+pub struct ShardedServer {
+    inner: Arc<Inner>,
+    handles: Vec<std::thread::JoinHandle<ShardWorkerStats>>,
+    started: Instant,
+}
+
+impl ShardedServer {
+    /// Spawn `cfg.workers` threads serving `forward` (flat padded batch
+    /// of `max_batch * input_elems` -> flat `max_batch * classes`
+    /// logits).  `forward` must tolerate concurrent calls.
+    pub fn start<F>(cfg: ShardedConfig, forward: F) -> ShardedServer
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        Self::start_with(cfg, forward, Vec::new(), false)
+    }
+
+    /// Serve a fully pre-enqueued load and drain it to completion.
+    ///
+    /// Every request is dispatched into its block (and the queue
+    /// closed) BEFORE the first worker spawns, so block composition is
+    /// `[0..B), [B..2B), ...` by construction — no deadline flush can
+    /// split it, for any shard or worker count.  This is the entry
+    /// point behind every bit-exactness assertion.  `queue_cap` is
+    /// ignored here (a pre-enqueued drain is not an overload).
+    pub fn serve_all<F>(
+        cfg: ShardedConfig,
+        forward: F,
+        images: impl IntoIterator<Item = Vec<f32>>,
+    ) -> Result<ShardReport>
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        let srv = Self::start_with(cfg, forward, images.into_iter().collect(), true);
+        srv.join().into_result()
+    }
+
+    fn start_with<F>(
+        cfg: ShardedConfig,
+        forward: F,
+        preload: Vec<Vec<f32>>,
+        close_after_preload: bool,
+    ) -> ShardedServer
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        let cfg = ShardedConfig { shards: cfg.shards.max(1), workers: cfg.workers.max(1), ..cfg };
+        let shards = (0..cfg.shards)
+            .map(|_| Shard { q: Mutex::new(VecDeque::new()), counters: ShardCounters::new() })
+            .collect();
+        let inner = Arc::new(Inner {
+            cfg: cfg.clone(),
+            shards,
+            dispatch: Mutex::new(Dispatch {
+                forming: Vec::new(),
+                next_seq: 0,
+                next_block: 0,
+                closed: false,
+            }),
+            notify: Notify { epoch: Mutex::new(0), cv: Condvar::new() },
+            collected: Mutex::new(Vec::new()),
+            rejected: std::sync::atomic::AtomicU64::new(0),
+        });
+        let started = Instant::now();
+        // preload (serve_all): dispatch + close BEFORE spawning, so the
+        // blocks are sealed with no worker able to deadline-flush
+        {
+            let mut dis = inner.dispatch.lock().unwrap();
+            for image in preload {
+                debug_assert_eq!(image.len(), cfg.input_elems);
+                let id = dis.next_seq;
+                dis.next_seq += 1;
+                dis.forming.push(ShardRequest { id, image, enqueued: started, reply: None });
+                if dis.forming.len() == cfg.max_batch {
+                    inner.seal_locked(&mut dis, true);
+                }
+            }
+            if close_after_preload {
+                dis.closed = true;
+                inner.seal_locked(&mut dis, true);
+            }
+        }
+        let forward = Arc::new(forward);
+        let handles = (0..cfg.workers)
+            .map(|w| {
+                let inner = inner.clone();
+                let forward = forward.clone();
+                std::thread::spawn(move || worker_loop(&inner, forward.as_ref(), w))
+            })
+            .collect();
+        ShardedServer { inner, handles, started }
+    }
+
+    /// Enqueue one in-process request (outcome collected in the final
+    /// report); returns its id (= submit order).
+    pub fn submit(&self, image: Vec<f32>) -> std::result::Result<u64, SubmitError> {
+        self.inner.admit(None, image, None)
+    }
+
+    /// Enqueue one request with an explicit id and a completion hook
+    /// (the wire path: the hook encodes and sends the response frame).
+    pub fn submit_replying(
+        &self,
+        id: u64,
+        image: Vec<f32>,
+        reply: ReplyFn,
+    ) -> std::result::Result<(), SubmitError> {
+        self.inner.admit(Some(id), image, Some(reply)).map(|_| ())
+    }
+
+    /// Seal the partial forming block now instead of waiting for
+    /// `max_wait` (the wire `Flush` message; also useful before a
+    /// latency-sensitive quiesce).
+    pub fn flush(&self) {
+        let mut dis = self.inner.dispatch.lock().unwrap();
+        self.inner.seal_locked(&mut dis, false);
+    }
+
+    /// Number of collected outcomes so far (progress/tests).
+    pub fn completed(&self) -> usize {
+        self.inner.collected.lock().unwrap().len()
+    }
+
+    /// Stop admitting, flush the forming block, and wake the workers.
+    /// Idempotent; [`ShardedServer::join`] calls it.
+    pub fn close(&self) {
+        let mut dis = self.inner.dispatch.lock().unwrap();
+        if !dis.closed {
+            dis.closed = true;
+            self.inner.seal_locked(&mut dis, false);
+        }
+        drop(dis);
+        self.inner.notify.bump();
+    }
+
+    /// Close, drain every queued block, join the workers, and merge
+    /// their accounting.  Batch failures are reported in the result
+    /// (`failed` + per-outcome verdicts), never silently dropped.
+    pub fn join(self) -> ShardReport {
+        self.close();
+        let mut total = ShardWorkerStats::default();
+        let mut per_worker = Vec::with_capacity(self.handles.len());
+        for h in self.handles {
+            // a worker thread can only die to a panic OUTSIDE the
+            // catch_unwind (a bug, not a load condition); surface it as
+            // a merged-stats no-op and let accounting show the hole
+            if let Ok(stats) = h.join() {
+                total.merge(&stats);
+                per_worker.push(stats);
+            }
+        }
+        let wall = self.started.elapsed().as_secs_f64();
+        let mut outcomes = std::mem::take(&mut *self.inner.collected.lock().unwrap());
+        outcomes.sort_by_key(|o| o.id);
+        ShardReport {
+            outcomes,
+            served: total.served,
+            failed: total.failed,
+            rejected: self.inner.rejected.load(std::sync::atomic::Ordering::Relaxed),
+            batches: total.batches,
+            padded_slots: total.padded_slots,
+            stolen: total.stolen,
+            latency: total.latency,
+            compute: total.compute,
+            wall,
+            per_shard: self.inner.shards.iter().map(|s| s.counters.snapshot()).collect(),
+            per_worker,
+        }
+    }
+
+    /// The configuration this server was started with.
+    pub fn config(&self) -> &ShardedConfig {
+        &self.inner.cfg
+    }
+}
+
+impl Inner {
+    /// Admission + dispatch: validate, apply the queue bound, append to
+    /// the forming block, seal when full.
+    fn admit(
+        &self,
+        id: Option<u64>,
+        image: Vec<f32>,
+        reply: Option<ReplyFn>,
+    ) -> std::result::Result<u64, SubmitError> {
+        if image.len() != self.cfg.input_elems {
+            return Err(SubmitError::BadRequest(format!(
+                "request has {} elems, expected {}",
+                image.len(),
+                self.cfg.input_elems
+            )));
+        }
+        let mut dis = self.dispatch.lock().unwrap();
+        if dis.closed {
+            self.rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Err(SubmitError::Rejected(Rejected { reason: RejectReason::Closing }));
+        }
+        // bound check against the forming block's destination shard
+        if self.cfg.queue_cap > 0 {
+            let dest = (dis.next_block % self.cfg.shards as u64) as usize;
+            if self.shards[dest].q.lock().unwrap().len() >= self.cfg.queue_cap {
+                self.shards[dest].counters.on_reject();
+                self.rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Err(SubmitError::Rejected(Rejected {
+                    reason: RejectReason::Overloaded,
+                }));
+            }
+        }
+        let seq = dis.next_seq;
+        dis.next_seq += 1;
+        let id = id.unwrap_or(seq);
+        dis.forming.push(ShardRequest { id, image, enqueued: Instant::now(), reply });
+        if dis.forming.len() == self.cfg.max_batch {
+            self.seal_locked(&mut dis, false);
+        }
+        Ok(id)
+    }
+
+    /// Seal the forming block (if any) onto its round-robin shard.
+    /// `quiet` skips the notify (preload path: workers not spawned yet).
+    fn seal_locked(&self, dis: &mut Dispatch, quiet: bool) {
+        if dis.forming.is_empty() {
+            return;
+        }
+        let reqs = std::mem::take(&mut dis.forming);
+        let bucket = if self.cfg.density_shaping {
+            density_bucket(&reqs)
+        } else {
+            0
+        };
+        let oldest = reqs[0].enqueued;
+        let dest = (dis.next_block % self.cfg.shards as u64) as usize;
+        dis.next_block += 1;
+        self.shards[dest].q.lock().unwrap().push_back(Block { reqs, bucket, oldest });
+        self.shards[dest].counters.on_enqueue();
+        if !quiet {
+            self.notify.bump();
+        }
+    }
+
+    /// Pop the next block for a worker homed on `home`: home shard
+    /// first (bucket-preferring), then steal the oldest block from the
+    /// deepest foreign shard.  Returns `(block, was_stolen)`.
+    fn take_block(&self, home: usize, prefer: Option<u8>) -> Option<(Block, bool)> {
+        if let Some(b) = self.pop_shard(home, prefer) {
+            return Some((b, false));
+        }
+        // steal from the deepest foreign shard (load balancing); takes
+        // the OLDEST block so stealing also bounds queue delay
+        let mut best: Option<(usize, usize)> = None;
+        for (i, s) in self.shards.iter().enumerate() {
+            if i == home {
+                continue;
+            }
+            let d = s.q.lock().unwrap().len();
+            if d > 0 && best.map_or(true, |(bd, _)| d > bd) {
+                best = Some((d, i));
+            }
+        }
+        let (_, victim) = best?;
+        let b = self.shards[victim].q.lock().unwrap().pop_front()?;
+        self.shards[victim].counters.on_take(true);
+        Some((b, true))
+    }
+
+    /// Pop from one shard: same-bucket block if shaping prefers one and
+    /// the front block is not starving, else strict FIFO.
+    fn pop_shard(&self, idx: usize, prefer: Option<u8>) -> Option<Block> {
+        let mut q = self.shards[idx].q.lock().unwrap();
+        if q.is_empty() {
+            return None;
+        }
+        let mut pick = 0usize;
+        if let Some(p) = prefer {
+            let starving = q[0].oldest.elapsed() >= self.cfg.max_wait * 4;
+            if self.cfg.density_shaping && !starving && q[0].bucket != p {
+                if let Some(pos) = q.iter().position(|b| b.bucket == p) {
+                    pick = pos;
+                }
+            }
+        }
+        let b = q.remove(pick);
+        drop(q);
+        self.shards[idx].counters.on_take(false);
+        b
+    }
+
+    fn queued_blocks(&self) -> usize {
+        self.shards.iter().map(|s| s.q.lock().unwrap().len()).sum()
+    }
+
+    /// Execute one block: assemble, forward (panic-contained), deliver
+    /// one [`Outcome`] per request.
+    fn run_block<F>(&self, block: Block, forward: &F, xs: &mut Vec<f32>, stats: &mut ShardWorkerStats)
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>>,
+    {
+        let cfg = &self.cfg;
+        let reqs = block.reqs;
+        let assembled = assemble_padded_into(
+            reqs.iter().map(|r| (r.id, r.image.as_slice())),
+            cfg.max_batch,
+            cfg.input_elems,
+            xs,
+        );
+        let (compute, failure, logits) = match assembled {
+            Ok(padded) => {
+                stats.padded_slots += padded;
+                let t0 = Instant::now();
+                let r = std::panic::catch_unwind(AssertUnwindSafe(|| forward(&xs[..])));
+                let compute = t0.elapsed().as_secs_f64();
+                match r {
+                    Ok(Ok(l)) if l.len() == cfg.max_batch * cfg.classes => (compute, None, l),
+                    Ok(Ok(l)) => (
+                        compute,
+                        Some(format!(
+                            "forward returned {} logits, expected {}",
+                            l.len(),
+                            cfg.max_batch * cfg.classes
+                        )),
+                        Vec::new(),
+                    ),
+                    Ok(Err(e)) => (compute, Some(format!("forward failed: {e:#}")), Vec::new()),
+                    Err(p) => (compute, Some(panic_message(&p)), Vec::new()),
+                }
+            }
+            Err(e) => (0.0, Some(format!("batch assembly failed: {e:#}")), Vec::new()),
+        };
+        stats.batches += 1;
+        stats.compute.record(compute);
+        let mut collected = Vec::new();
+        for (i, r) in reqs.into_iter().enumerate() {
+            let latency = r.enqueued.elapsed().as_secs_f64();
+            let verdict = match &failure {
+                None => {
+                    let row = &logits[i * cfg.classes..(i + 1) * cfg.classes];
+                    stats.served += 1;
+                    Verdict::Pred(argmax(row))
+                }
+                Some(msg) => {
+                    stats.failed += 1;
+                    Verdict::Failed(msg.clone())
+                }
+            };
+            stats.latency.record(latency);
+            let outcome = Outcome { id: r.id, verdict, latency, compute };
+            match r.reply {
+                Some(f) => f(outcome),
+                None => collected.push(outcome),
+            }
+        }
+        if !collected.is_empty() {
+            self.collected.lock().unwrap().extend(collected);
+        }
+    }
+}
+
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("forward panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("forward panicked: {s}")
+    } else {
+        "forward panicked".to_string()
+    }
+}
+
+/// Kernel-path bucket of a block: `1` when the measured input density
+/// (nnz fraction over every pixel of the block) is below the compound
+/// dispatch cutoff — the same rule the engines apply per layer — else
+/// `0` (dense path).
+fn density_bucket(reqs: &[ShardRequest]) -> u8 {
+    let mut nnz = 0usize;
+    let mut total = 0usize;
+    for r in reqs {
+        total += r.image.len();
+        nnz += r.image.iter().filter(|v| **v != 0.0).count();
+    }
+    if total == 0 {
+        return 0;
+    }
+    let density = nnz as f32 / total as f32;
+    u8::from(density < crate::sparse::parallel::compound_cutoff())
+}
+
+fn worker_loop<F>(inner: &Inner, forward: &F, wid: usize) -> ShardWorkerStats
+where
+    F: Fn(&[f32]) -> Result<Vec<f32>>,
+{
+    let cfg = &inner.cfg;
+    let home = wid % cfg.shards;
+    let mut stats = ShardWorkerStats::default();
+    let mut last_bucket: Option<u8> = None;
+    // one assembly buffer per worker, reused across every batch
+    let mut xs: Vec<f32> = Vec::new();
+    loop {
+        // snapshot BEFORE scanning: a push after this bumps the epoch
+        // and cancels the sleep below
+        let seen = inner.notify.epoch();
+        if let Some((block, stolen)) = inner.take_block(home, last_bucket) {
+            if stolen {
+                stats.stolen += 1;
+            }
+            if last_bucket == Some(block.bucket) {
+                stats.bucket_runs += 1;
+            }
+            last_bucket = Some(block.bucket);
+            inner.run_block(block, forward, &mut xs, &mut stats);
+            continue;
+        }
+        // queues empty: deadline-flush an aging partial forming block,
+        // exit when closed and drained, else sleep
+        let dis = inner.dispatch.lock().unwrap();
+        if !dis.forming.is_empty() {
+            let age = dis.forming[0].enqueued.elapsed();
+            if age >= cfg.max_wait {
+                let mut dis = dis;
+                inner.seal_locked(&mut dis, false);
+                continue;
+            }
+            let remaining = cfg.max_wait - age;
+            drop(dis);
+            inner.notify.wait_if_unchanged(seen, remaining);
+            continue;
+        }
+        if dis.closed {
+            drop(dis);
+            // closed + empty forming: blocks can no longer be created,
+            // so an empty scan here is terminal
+            if inner.queued_blocks() == 0 {
+                return stats;
+            }
+            continue;
+        }
+        drop(dis);
+        inner.notify.wait_if_unchanged(seen, cfg.max_wait.max(Duration::from_millis(1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// pred = round(first pixel), same rule as the other serve tests.
+    fn fake_forward(batch: usize, classes: usize) -> impl Fn(&[f32]) -> Result<Vec<f32>> {
+        move |xs: &[f32]| {
+            let per = xs.len() / batch;
+            let mut out = vec![0.0f32; batch * classes];
+            for i in 0..batch {
+                let c = (xs[i * per].round() as usize).min(classes - 1);
+                out[i * classes + c] = 1.0;
+            }
+            Ok(out)
+        }
+    }
+
+    fn images(n: usize, modulo: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|i| vec![(i % modulo) as f32; 4]).collect()
+    }
+
+    #[test]
+    fn serve_all_preds_match_across_shards_and_workers() {
+        let imgs = images(53, 5);
+        let base = ShardedServer::serve_all(
+            ShardedConfig::new(1, 1, 8, 4, 6),
+            fake_forward(8, 6),
+            imgs.clone(),
+        )
+        .unwrap();
+        assert_eq!(base.served, 53);
+        assert_eq!(base.batches, 7); // ceil(53/8)
+        assert_eq!(base.padded_slots, 3);
+        for (shards, workers) in [(2usize, 1usize), (2, 3), (4, 2), (3, 8)] {
+            let got = ShardedServer::serve_all(
+                ShardedConfig::new(shards, workers, 8, 4, 6),
+                fake_forward(8, 6),
+                imgs.clone(),
+            )
+            .unwrap();
+            assert_eq!(got.served, 53);
+            assert_eq!(got.batches, 7);
+            assert_eq!(
+                base.predictions(),
+                got.predictions(),
+                "{shards} shards x {workers} workers diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn outcomes_keep_fifo_ids() {
+        let report = ShardedServer::serve_all(
+            ShardedConfig::new(3, 4, 4, 4, 8),
+            fake_forward(4, 8),
+            images(97, 7),
+        )
+        .unwrap();
+        assert_eq!(report.served, 97);
+        for (i, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.id, i as u64, "id order broken at {i}");
+            assert!(matches!(o.verdict, Verdict::Pred(p) if p == i % 7));
+        }
+        // block accounting: every block fully padded
+        assert_eq!(report.served + report.padded_slots, report.batches * 4);
+        // per-shard counters: every enqueued block was taken
+        let enq: u64 = report.per_shard.iter().map(|s| s.enqueued).sum();
+        let taken: u64 = report.per_shard.iter().map(|s| s.taken()).sum();
+        assert_eq!(enq, report.batches as u64);
+        assert_eq!(taken, enq);
+    }
+
+    #[test]
+    fn fewer_workers_than_shards_forces_stealing() {
+        // 1 worker homed on shard 0 of 4: every block on shards 1-3 can
+        // only complete by stealing
+        let report = ShardedServer::serve_all(
+            ShardedConfig::new(4, 1, 4, 4, 5),
+            fake_forward(4, 5),
+            images(32, 5), // 8 blocks round-robin -> 2 per shard
+        )
+        .unwrap();
+        assert_eq!(report.served, 32);
+        assert_eq!(report.stolen, 6, "blocks on shards 1..3 must be stolen");
+        let stolen: u64 = report.per_shard.iter().map(|s| s.stolen).sum();
+        assert_eq!(stolen, 6);
+        assert_eq!(report.per_shard[0].stolen, 0);
+    }
+
+    #[test]
+    fn density_shaping_moves_time_never_bits() {
+        // mixed load: half dense images, half mostly-zero images
+        let imgs: Vec<Vec<f32>> = (0..40)
+            .map(|i| {
+                if i % 2 == 0 {
+                    vec![(i % 5) as f32 + 1.0; 8]
+                } else {
+                    let mut v = vec![0.0f32; 8];
+                    v[0] = (i % 5) as f32;
+                    v
+                }
+            })
+            .collect();
+        let on = ShardedServer::serve_all(
+            ShardedConfig::new(2, 3, 4, 8, 6).with_density_shaping(true),
+            fake_forward(4, 6),
+            imgs.clone(),
+        )
+        .unwrap();
+        let off = ShardedServer::serve_all(
+            ShardedConfig::new(2, 3, 4, 8, 6).with_density_shaping(false),
+            fake_forward(4, 6),
+            imgs,
+        )
+        .unwrap();
+        assert_eq!(on.predictions(), off.predictions());
+        assert_eq!(on.served, 40);
+        assert_eq!(on.failed, 0);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_explicitly_and_conserves_requests() {
+        // no workers draining fast enough: block the single worker with
+        // a slow forward, then burst far past capacity
+        let cfg = ShardedConfig::new(2, 1, 2, 4, 5)
+            .with_queue_cap(2)
+            .with_max_wait(Duration::from_millis(1));
+        let srv = ShardedServer::start(cfg, move |xs: &[f32]| {
+            std::thread::sleep(Duration::from_millis(20));
+            fake_forward(2, 5)(xs)
+        });
+        let mut admitted = 0usize;
+        let mut rejected = 0usize;
+        for i in 0..100usize {
+            match srv.submit(vec![(i % 5) as f32; 4]) {
+                Ok(_) => admitted += 1,
+                Err(SubmitError::Rejected(r)) => {
+                    assert_eq!(r.reason, RejectReason::Overloaded);
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(rejected > 0, "burst past a 2-block cap must reject");
+        let report = srv.join();
+        // conservation: every request is exactly one of served/rejected
+        assert_eq!(report.served, admitted);
+        assert_eq!(report.rejected as usize, rejected);
+        assert_eq!(report.failed, 0);
+        let shard_rej: u64 = report.per_shard.iter().map(|s| s.rejected).sum();
+        assert_eq!(shard_rej, rejected as u64);
+    }
+
+    #[test]
+    fn submit_after_close_is_a_closing_reject() {
+        let srv = ShardedServer::start(ShardedConfig::new(1, 1, 2, 4, 5), fake_forward(2, 5));
+        srv.close();
+        match srv.submit(vec![0.0; 4]) {
+            Err(SubmitError::Rejected(r)) => assert_eq!(r.reason, RejectReason::Closing),
+            other => panic!("expected Closing reject, got {other:?}"),
+        }
+        let report = srv.join();
+        assert_eq!(report.served, 0);
+        assert_eq!(report.rejected, 1);
+    }
+
+    #[test]
+    fn bad_request_is_refused_at_submit() {
+        let srv = ShardedServer::start(ShardedConfig::new(1, 1, 2, 4, 5), fake_forward(2, 5));
+        match srv.submit(vec![0.0; 3]) {
+            Err(SubmitError::BadRequest(m)) => assert!(m.contains("3 elems"), "{m}"),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        let report = srv.join();
+        assert_eq!(report.served, 0);
+        assert_eq!(report.rejected, 0);
+    }
+
+    #[test]
+    fn panicking_batch_reports_failed_outcomes() {
+        // poison pixel 3.0 panics its batch; everything else serves.
+        // images: 0,1,2,3(poison),4,... batch 2 -> block [2,3] fails
+        let forward = move |xs: &[f32]| -> Result<Vec<f32>> {
+            assert!(!xs.contains(&3.0), "poison batch");
+            fake_forward(2, 10)(xs)
+        };
+        let srv = ShardedServer::start_with(
+            ShardedConfig::new(2, 2, 2, 4, 10),
+            forward,
+            images(10, 10),
+            true,
+        );
+        let report = srv.join();
+        // block [2,3] contains the poison pixel 3.0 -> 2 failed
+        assert_eq!(report.failed, 2);
+        assert_eq!(report.served, 8);
+        assert_eq!(report.outcomes.len(), 10);
+        for o in &report.outcomes {
+            match (&o.verdict, o.id) {
+                (Verdict::Failed(m), 2 | 3) => assert!(m.contains("panicked"), "{m}"),
+                (Verdict::Pred(p), id) => assert_eq!(*p as u64, id % 10),
+                (v, id) => panic!("unexpected verdict {v:?} for id {id}"),
+            }
+        }
+        assert!(report.first_failure().is_some());
+    }
+
+    #[test]
+    fn forward_error_reports_failed_not_hang() {
+        let report = ShardedServer::serve_all(
+            ShardedConfig::new(1, 1, 4, 4, 5),
+            |_: &[f32]| anyhow::bail!("boom"),
+            images(4, 5),
+        );
+        let err = report.unwrap_err().to_string();
+        assert!(err.contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn streaming_flush_ships_partial_block() {
+        let cfg = ShardedConfig::new(2, 2, 8, 4, 5).with_max_wait(Duration::from_secs(60));
+        let srv = ShardedServer::start(cfg, fake_forward(8, 5));
+        for i in 0..3usize {
+            srv.submit(vec![(i % 5) as f32; 4]).unwrap();
+        }
+        // a 60s deadline would stall the partial block; flush ships it
+        srv.flush();
+        let t0 = Instant::now();
+        while srv.completed() < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "flush never shipped the block");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let report = srv.join();
+        assert_eq!(report.served, 3);
+        assert_eq!(report.batches, 1);
+        assert_eq!(report.padded_slots, 5);
+    }
+
+    #[test]
+    fn streaming_deadline_flush_fires() {
+        let cfg = ShardedConfig::new(1, 1, 64, 4, 5).with_max_wait(Duration::from_millis(15));
+        let srv = ShardedServer::start(cfg, fake_forward(64, 5));
+        srv.submit(vec![1.0; 4]).unwrap();
+        srv.submit(vec![2.0; 4]).unwrap();
+        let t0 = Instant::now();
+        while srv.completed() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "deadline flush never fired");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let report = srv.join();
+        assert_eq!(report.served, 2);
+        assert_eq!(report.predictions(), vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_server_joins_cleanly() {
+        let srv = ShardedServer::start(ShardedConfig::new(4, 4, 8, 4, 5), fake_forward(8, 5));
+        let report = srv.join();
+        assert_eq!(report.served, 0);
+        assert_eq!(report.batches, 0);
+        assert!(report.outcomes.is_empty());
+    }
+
+    #[test]
+    fn reply_hook_receives_outcomes_instead_of_collection() {
+        let srv = ShardedServer::start(
+            ShardedConfig::new(1, 1, 2, 4, 5).with_max_wait(Duration::from_millis(1)),
+            fake_forward(2, 5),
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..4u64 {
+            let tx = tx.clone();
+            srv.submit_replying(
+                100 + i,
+                vec![(i % 5) as f32; 4],
+                Box::new(move |o| {
+                    let _ = tx.send(o);
+                }),
+            )
+            .unwrap();
+        }
+        drop(tx);
+        let report = srv.join();
+        assert_eq!(report.served, 4);
+        assert!(report.outcomes.is_empty(), "replied outcomes must not be collected");
+        let mut got: Vec<Outcome> = rx.iter().collect();
+        got.sort_by_key(|o| o.id);
+        assert_eq!(got.len(), 4);
+        for (i, o) in got.iter().enumerate() {
+            assert_eq!(o.id, 100 + i as u64);
+            assert!(matches!(o.verdict, Verdict::Pred(p) if p == i % 5));
+        }
+    }
+
+    #[test]
+    fn density_bucket_splits_on_cutoff() {
+        let dense = vec![ShardRequest {
+            id: 0,
+            image: vec![1.0; 8],
+            enqueued: Instant::now(),
+            reply: None,
+        }];
+        let sparse = vec![ShardRequest {
+            id: 0,
+            image: vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0],
+            enqueued: Instant::now(),
+            reply: None,
+        }];
+        assert_eq!(super::density_bucket(&dense), 0);
+        assert_eq!(super::density_bucket(&sparse), 1);
+    }
+}

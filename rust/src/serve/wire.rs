@@ -1,0 +1,378 @@
+//! DSG serving wire protocol v1: encode/decode for the length-prefixed
+//! binary messages spoken by [`super::server`].
+//!
+//! The normative spec is `docs/PROTOCOL.md`; this module is its
+//! implementation and the golden-bytes tests at the bottom pin the two
+//! together — changing the layout without updating both fails the
+//! build.
+//!
+//! Layout summary (all integers little-endian):
+//!
+//! ```text
+//! frame   := u32 length | payload          (length = payload bytes)
+//! payload := u8 version (=1) | u8 type | body
+//! ```
+//!
+//! Message types: `Request` (1), `Response` (2), `Reject` (3),
+//! `Error` (4), `Ping` (5), `Pong` (6), `Shutdown` (7), `Flush` (8).
+//! Decoding is strict: unknown version, unknown type, a body of the
+//! wrong length, or a frame above [`MAX_FRAME`] are errors, never
+//! best-effort guesses.
+
+use super::RejectReason;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Protocol version byte; bump on ANY layout change.
+pub const VERSION: u8 = 1;
+
+/// Upper bound on one frame's payload (sanity guard against a
+/// corrupted or hostile length prefix). 64 MiB fits a ~16M-pixel
+/// request with room to spare.
+pub const MAX_FRAME: usize = 64 * 1024 * 1024;
+
+/// One protocol message, either direction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Client -> server: classify one image.
+    Request { id: u64, image: Vec<f32> },
+    /// Server -> client: the prediction for request `id`.
+    Response { id: u64, pred: u32, latency_us: u32 },
+    /// Server -> client: request `id` was refused admission.
+    Reject { id: u64, reason: RejectReason },
+    /// Server -> client: request `id` was admitted but its batch
+    /// failed (forward error or panic).
+    Error { id: u64, message: String },
+    /// Client -> server liveness/handshake probe.
+    Ping { token: u64 },
+    /// Server -> client: answer to [`Message::Ping`], same token.
+    Pong { token: u64 },
+    /// Client -> server: stop accepting connections and drain.
+    Shutdown,
+    /// Client -> server: seal the partial forming batch now instead of
+    /// waiting out the batching deadline.
+    Flush,
+}
+
+const TYPE_REQUEST: u8 = 1;
+const TYPE_RESPONSE: u8 = 2;
+const TYPE_REJECT: u8 = 3;
+const TYPE_ERROR: u8 = 4;
+const TYPE_PING: u8 = 5;
+const TYPE_PONG: u8 = 6;
+const TYPE_SHUTDOWN: u8 = 7;
+const TYPE_FLUSH: u8 = 8;
+
+impl Message {
+    /// Encode into a full frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(16);
+        payload.push(VERSION);
+        match self {
+            Message::Request { id, image } => {
+                payload.push(TYPE_REQUEST);
+                payload.extend_from_slice(&id.to_le_bytes());
+                payload.extend_from_slice(&(image.len() as u32).to_le_bytes());
+                for v in image {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Message::Response { id, pred, latency_us } => {
+                payload.push(TYPE_RESPONSE);
+                payload.extend_from_slice(&id.to_le_bytes());
+                payload.extend_from_slice(&pred.to_le_bytes());
+                payload.extend_from_slice(&latency_us.to_le_bytes());
+            }
+            Message::Reject { id, reason } => {
+                payload.push(TYPE_REJECT);
+                payload.extend_from_slice(&id.to_le_bytes());
+                payload.push(reason.code());
+            }
+            Message::Error { id, message } => {
+                payload.push(TYPE_ERROR);
+                payload.extend_from_slice(&id.to_le_bytes());
+                payload.extend_from_slice(&(message.len() as u32).to_le_bytes());
+                payload.extend_from_slice(message.as_bytes());
+            }
+            Message::Ping { token } => {
+                payload.push(TYPE_PING);
+                payload.extend_from_slice(&token.to_le_bytes());
+            }
+            Message::Pong { token } => {
+                payload.push(TYPE_PONG);
+                payload.extend_from_slice(&token.to_le_bytes());
+            }
+            Message::Shutdown => payload.push(TYPE_SHUTDOWN),
+            Message::Flush => payload.push(TYPE_FLUSH),
+        }
+        let mut frame = Vec::with_capacity(4 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame
+    }
+
+    /// Decode one payload (frame minus its length prefix).  Strict:
+    /// rejects unknown versions/types, short or oversized bodies, and
+    /// trailing bytes.
+    pub fn decode(payload: &[u8]) -> Result<Message> {
+        ensure!(payload.len() >= 2, "payload too short: {} bytes", payload.len());
+        let version = payload[0];
+        ensure!(version == VERSION, "unsupported protocol version {version} (want {VERSION})");
+        let ty = payload[1];
+        let body = &payload[2..];
+        let msg = match ty {
+            TYPE_REQUEST => {
+                ensure!(body.len() >= 12, "request body too short: {} bytes", body.len());
+                let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let n = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+                ensure!(
+                    body.len() == 12 + 4 * n,
+                    "request body is {} bytes, expected {} for {n} pixels",
+                    body.len(),
+                    12 + 4 * n
+                );
+                let image = body[12..]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Message::Request { id, image }
+            }
+            TYPE_RESPONSE => {
+                ensure!(body.len() == 16, "response body is {} bytes, expected 16", body.len());
+                Message::Response {
+                    id: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                    pred: u32::from_le_bytes(body[8..12].try_into().unwrap()),
+                    latency_us: u32::from_le_bytes(body[12..16].try_into().unwrap()),
+                }
+            }
+            TYPE_REJECT => {
+                ensure!(body.len() == 9, "reject body is {} bytes, expected 9", body.len());
+                let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let reason = RejectReason::from_code(body[8])
+                    .with_context(|| format!("unknown reject reason code {}", body[8]))?;
+                Message::Reject { id, reason }
+            }
+            TYPE_ERROR => {
+                ensure!(body.len() >= 12, "error body too short: {} bytes", body.len());
+                let id = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let n = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+                ensure!(
+                    body.len() == 12 + n,
+                    "error body is {} bytes, expected {}",
+                    body.len(),
+                    12 + n
+                );
+                let message = std::str::from_utf8(&body[12..])
+                    .context("error message is not UTF-8")?
+                    .to_string();
+                Message::Error { id, message }
+            }
+            TYPE_PING | TYPE_PONG => {
+                ensure!(body.len() == 8, "ping/pong body is {} bytes, expected 8", body.len());
+                let token = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                if ty == TYPE_PING {
+                    Message::Ping { token }
+                } else {
+                    Message::Pong { token }
+                }
+            }
+            TYPE_SHUTDOWN => {
+                ensure!(body.is_empty(), "shutdown body must be empty, got {} bytes", body.len());
+                Message::Shutdown
+            }
+            TYPE_FLUSH => {
+                ensure!(body.is_empty(), "flush body must be empty, got {} bytes", body.len());
+                Message::Flush
+            }
+            other => bail!("unknown message type {other}"),
+        };
+        Ok(msg)
+    }
+}
+
+/// Write one message as a frame and flush.
+pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<()> {
+    w.write_all(&msg.encode()).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame and decode it.  Returns `Ok(None)` on clean EOF at a
+/// frame boundary (the peer closed between messages); mid-frame EOF is
+/// an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Message>> {
+    let mut len_buf = [0u8; 4];
+    match read_exact_or_eof(r, &mut len_buf)? {
+        ReadOutcome::Eof => return Ok(None),
+        ReadOutcome::Full => {}
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    ensure!(len >= 2, "frame of {len} bytes cannot hold version + type");
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Message::decode(&payload).map(Some)
+}
+
+enum ReadOutcome {
+    Full,
+    Eof,
+}
+
+/// `read_exact` that distinguishes a clean EOF before the FIRST byte
+/// from a torn read mid-buffer.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..]).context("reading frame header")?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(ReadOutcome::Eof);
+            }
+            bail!("connection closed mid-frame ({filled} of {} header bytes)", buf.len());
+        }
+        filled += n;
+    }
+    Ok(ReadOutcome::Full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) {
+        let frame = m.encode();
+        // length prefix is consistent
+        let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 4);
+        assert_eq!(frame[4], VERSION);
+        let decoded = Message::decode(&frame[4..]).unwrap();
+        assert_eq!(decoded, m);
+        // and through the stream reader
+        let mut cur = std::io::Cursor::new(frame);
+        let got = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn all_message_types_roundtrip() {
+        roundtrip(Message::Request { id: 7, image: vec![1.0, -2.5] });
+        roundtrip(Message::Request { id: u64::MAX, image: vec![] });
+        roundtrip(Message::Response { id: 3, pred: 9, latency_us: 1_250 });
+        roundtrip(Message::Reject { id: 12, reason: RejectReason::Overloaded });
+        roundtrip(Message::Reject { id: 12, reason: RejectReason::Closing });
+        roundtrip(Message::Error { id: 4, message: "forward panicked: boom".into() });
+        roundtrip(Message::Error { id: 0, message: String::new() });
+        roundtrip(Message::Ping { token: 0xDEAD_BEEF });
+        roundtrip(Message::Pong { token: 0xDEAD_BEEF });
+        roundtrip(Message::Shutdown);
+        roundtrip(Message::Flush);
+    }
+
+    /// Golden bytes pin `docs/PROTOCOL.md` to the implementation: if
+    /// this test needs editing, the spec (and VERSION) must change too.
+    #[test]
+    fn golden_request_frame() {
+        let m = Message::Request { id: 7, image: vec![1.0, -2.5] };
+        let frame = m.encode();
+        let expect: Vec<u8> = vec![
+            0x16, 0x00, 0x00, 0x00, // length = 22
+            0x01, // version 1
+            0x01, // type Request
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id = 7
+            0x02, 0x00, 0x00, 0x00, // n = 2 pixels
+            0x00, 0x00, 0x80, 0x3F, // 1.0f32
+            0x00, 0x00, 0x20, 0xC0, // -2.5f32
+        ];
+        assert_eq!(frame, expect);
+    }
+
+    #[test]
+    fn golden_response_frame() {
+        let m = Message::Response { id: 258, pred: 3, latency_us: 1000 };
+        let expect: Vec<u8> = vec![
+            0x12, 0x00, 0x00, 0x00, // length = 18
+            0x01, 0x02, // version, type Response
+            0x02, 0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id = 258
+            0x03, 0x00, 0x00, 0x00, // pred = 3
+            0xE8, 0x03, 0x00, 0x00, // latency_us = 1000
+        ];
+        assert_eq!(m.encode(), expect);
+    }
+
+    #[test]
+    fn golden_reject_and_control_frames() {
+        let rej = Message::Reject { id: 1, reason: RejectReason::Overloaded };
+        assert_eq!(
+            rej.encode(),
+            vec![0x0B, 0, 0, 0, 0x01, 0x03, 1, 0, 0, 0, 0, 0, 0, 0, 0x01]
+        );
+        assert_eq!(Message::Shutdown.encode(), vec![0x02, 0, 0, 0, 0x01, 0x07]);
+        assert_eq!(Message::Flush.encode(), vec![0x02, 0, 0, 0, 0x01, 0x08]);
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        // too short
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[VERSION]).is_err());
+        // wrong version
+        assert!(Message::decode(&[9, TYPE_FLUSH]).is_err());
+        // unknown type
+        assert!(Message::decode(&[VERSION, 0]).is_err());
+        assert!(Message::decode(&[VERSION, 200]).is_err());
+        // truncated request body
+        assert!(Message::decode(&[VERSION, TYPE_REQUEST, 1, 2, 3]).is_err());
+        // pixel count promises more than the body holds
+        let mut p = vec![VERSION, TYPE_REQUEST];
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&5u32.to_le_bytes()); // n=5 but 0 pixel bytes
+        assert!(Message::decode(&p).is_err());
+        // trailing garbage after a fixed-size body
+        let mut resp = Message::Response { id: 0, pred: 0, latency_us: 0 }.encode();
+        resp.push(0xFF);
+        // fix up the length prefix so only decode strictness can catch it
+        let bad_payload = &resp[4..];
+        assert!(Message::decode(bad_payload).is_err());
+        // unknown reject reason
+        let mut rej = vec![VERSION, TYPE_REJECT];
+        rej.extend_from_slice(&0u64.to_le_bytes());
+        rej.push(9);
+        assert!(Message::decode(&rej).is_err());
+        // shutdown with a body
+        assert!(Message::decode(&[VERSION, TYPE_SHUTDOWN, 0]).is_err());
+        // error message must be UTF-8
+        let mut e = vec![VERSION, TYPE_ERROR];
+        e.extend_from_slice(&0u64.to_le_bytes());
+        e.extend_from_slice(&2u32.to_le_bytes());
+        e.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(Message::decode(&e).is_err());
+    }
+
+    #[test]
+    fn stream_reader_eof_semantics() {
+        // clean EOF at a boundary -> None
+        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+        // EOF mid-header -> error
+        let mut torn = std::io::Cursor::new(vec![0x02, 0x00]);
+        assert!(read_frame(&mut torn).is_err());
+        // EOF mid-payload -> error
+        let mut mid = std::io::Cursor::new(vec![0x08, 0, 0, 0, VERSION, TYPE_FLUSH]);
+        assert!(read_frame(&mut mid).is_err());
+        // hostile length prefix -> error before allocating
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        let mut h = std::io::Cursor::new(huge.to_vec());
+        assert!(read_frame(&mut h).is_err());
+        // frame too short to hold version+type -> error
+        let mut tiny = std::io::Cursor::new(vec![0x01, 0, 0, 0, VERSION]);
+        assert!(read_frame(&mut tiny).is_err());
+        // two frames back to back then EOF
+        let mut buf = Message::Ping { token: 1 }.encode();
+        buf.extend_from_slice(&Message::Flush.encode());
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), Some(Message::Ping { token: 1 }));
+        assert_eq!(read_frame(&mut cur).unwrap(), Some(Message::Flush));
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+}

@@ -30,7 +30,7 @@ pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// Cache-blocked matmul with 4x4 register blocking — the "GEMM" baseline
-/// of Fig 8(a) (stands in for MKL sgemm; see DESIGN.md substitutions).
+/// of Fig 8(a) (stands in for MKL sgemm; see the substitutions note in docs/ARCHITECTURE.md).
 ///
 /// §Perf iteration L3-1: processing 4 rows of `a` per inner sweep reuses
 /// each loaded `b` row four times, ~1.9x over the previous saxpy loop.

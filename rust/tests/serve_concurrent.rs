@@ -4,9 +4,9 @@
 //! and ANY intra-op thread budget on the same pre-enqueued load, while
 //! preserving FIFO ids and the padding semantics of the baseline pump.
 
-use dsg::serve::{Batcher, ConcurrentServer, Queue, ServeReport, ServerConfig, SynthModel};
+use dsg::serve::{Batcher, ConcurrentServer, Queue, RejectReason, ServeReport, ServerConfig, SynthModel};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const DIMS: &[usize] = &[64, 96, 80];
 const CLASSES: usize = 10;
@@ -65,6 +65,73 @@ fn concurrent_matches_baseline_pump() {
         assert_eq!(c.id, s.id);
         assert_eq!(c.pred, s.pred, "request {} diverged", c.id);
     }
+}
+
+#[test]
+fn panic_mid_batch_does_not_deadlock_serve_all() {
+    // A real model wrapped with a poison trip-wire: the batch holding
+    // request 12 panics mid-flight.  serve_all must drain everything
+    // else and return an error — not hang on a dead worker — for any
+    // worker count (the shutdown/drain race this test pins down).
+    let imgs = images(40);
+    let poison = imgs[12].clone();
+    for workers in [1usize, 4] {
+        let model =
+            Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(1));
+        let m = model.clone();
+        let p = poison.clone();
+        let cfg = ServerConfig::new(workers, BATCH, DIMS[0], CLASSES)
+            .with_max_wait(Duration::from_millis(5));
+        let t0 = Instant::now();
+        let err = ConcurrentServer::serve_all(
+            cfg,
+            move |xs: &[f32]| {
+                assert!(
+                    xs.chunks(DIMS[0]).all(|row| row != &p[..]),
+                    "poison request in batch"
+                );
+                m.forward(xs, BATCH)
+            },
+            imgs.clone(),
+        )
+        .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(30), "serve_all hung after a panic");
+        let msg = err.to_string();
+        assert!(msg.contains("failed"), "{msg}");
+        assert!(msg.contains("panicked"), "{msg}");
+    }
+}
+
+#[test]
+fn over_capacity_requests_get_explicit_rejection() {
+    // Slow forward + tiny cap: a fast burst must split into admitted
+    // (all served) and rejected (answered NOW with Overloaded) — no
+    // silent drops, no unbounded queue growth.
+    let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(1));
+    let m = model.clone();
+    let cfg = ServerConfig::new(1, BATCH, DIMS[0], CLASSES)
+        .with_queue_cap(4)
+        .with_max_wait(Duration::from_millis(1));
+    let srv = ConcurrentServer::start(cfg, move |xs: &[f32]| {
+        std::thread::sleep(Duration::from_millis(10));
+        m.forward(xs, BATCH)
+    });
+    let imgs = images(80);
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    for img in imgs {
+        match srv.try_submit(img) {
+            Ok(_) => admitted += 1,
+            Err(r) => {
+                assert_eq!(r.reason, RejectReason::Overloaded);
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "an 80-request burst past a 4-slot cap must reject");
+    let report = srv.shutdown().unwrap();
+    assert_eq!(report.served, admitted, "admitted + rejected must conserve the burst");
+    assert_eq!(report.served + rejected, 80);
 }
 
 #[test]

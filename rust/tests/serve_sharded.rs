@@ -1,0 +1,175 @@
+//! Sharded-serving integration: the production front-end over the
+//! synthetic DSG model must produce bit-identical predictions for ANY
+//! shard count and ANY worker count — and agree with both the
+//! single-queue `ConcurrentServer` and the single-threaded `Batcher`
+//! pump — because block composition is fixed by arrival order, work
+//! stealing moves whole blocks, and density shaping only reorders
+//! execution.
+
+use dsg::serve::{
+    Batcher, ConcurrentServer, Queue, RejectReason, ServerConfig, ShardedConfig, ShardedServer,
+    SubmitError, SynthModel,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIMS: &[usize] = &[64, 96, 80];
+const CLASSES: usize = 10;
+const BATCH: usize = 8;
+const GAMMA: f32 = 0.7;
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    let m = SynthModel::new(1, DIMS, CLASSES, GAMMA);
+    (0..n).map(|i| m.synth_image(500 + i as u64)).collect()
+}
+
+fn run_sharded(shards: usize, workers: usize, intra: usize, imgs: &[Vec<f32>]) -> Vec<usize> {
+    let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(intra));
+    let cfg = ShardedConfig::new(shards, workers, BATCH, DIMS[0], CLASSES)
+        .with_max_wait(Duration::from_millis(5));
+    let report =
+        ShardedServer::serve_all(cfg, move |xs: &[f32]| model.forward(xs, BATCH), imgs.to_vec())
+            .unwrap();
+    assert_eq!(report.served, imgs.len());
+    assert_eq!(report.failed, 0);
+    report.predictions()
+}
+
+/// The acceptance-criteria matrix: shard counts {1,2,4} x worker counts
+/// {1,2,8} all agree bit-for-bit with the 1x1 run.
+#[test]
+fn predictions_identical_across_shard_and_worker_counts() {
+    let imgs = images(50);
+    let base = run_sharded(1, 1, 1, &imgs);
+    for shards in [1usize, 2, 4] {
+        for workers in [1usize, 2, 8] {
+            let got = run_sharded(shards, workers, 1, &imgs);
+            assert_eq!(base, got, "{shards} shards x {workers} workers diverged from 1x1");
+        }
+    }
+    // intra-op threading composes with sharding without changing bits
+    assert_eq!(base, run_sharded(4, 2, 3, &imgs));
+}
+
+#[test]
+fn sharded_matches_concurrent_and_baseline_pump() {
+    let imgs = images(37);
+    let sharded = run_sharded(4, 3, 2, &imgs);
+
+    let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(2));
+    let m = model.clone();
+    let cfg = ServerConfig::new(4, BATCH, DIMS[0], CLASSES).with_max_wait(Duration::from_millis(5));
+    let conc = ConcurrentServer::serve_all(cfg, move |xs: &[f32]| m.forward(xs, BATCH), imgs.clone())
+        .unwrap();
+    assert_eq!(sharded, conc.predictions(), "sharded vs single-queue diverged");
+
+    let baseline_model = SynthModel::new(1, DIMS, CLASSES, GAMMA);
+    let mut q = Queue::new();
+    for img in &imgs {
+        q.push(img.clone());
+    }
+    let mut b = Batcher::new(BATCH, DIMS[0], CLASSES);
+    let baseline = b.pump(&mut q, |xs| baseline_model.forward(xs, BATCH)).unwrap();
+    let baseline_preds: Vec<usize> = baseline.iter().map(|r| r.pred).collect();
+    assert_eq!(sharded, baseline_preds, "sharded vs single-threaded pump diverged");
+}
+
+#[test]
+fn density_shaping_is_bit_neutral_on_real_loads() {
+    let imgs = images(43);
+    let on = {
+        let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(1));
+        let cfg = ShardedConfig::new(2, 4, BATCH, DIMS[0], CLASSES).with_density_shaping(true);
+        ShardedServer::serve_all(cfg, move |xs: &[f32]| model.forward(xs, BATCH), imgs.clone())
+            .unwrap()
+    };
+    let off = {
+        let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(1));
+        let cfg = ShardedConfig::new(2, 4, BATCH, DIMS[0], CLASSES).with_density_shaping(false);
+        ShardedServer::serve_all(cfg, move |xs: &[f32]| model.forward(xs, BATCH), imgs.clone())
+            .unwrap()
+    };
+    assert_eq!(on.predictions(), off.predictions(), "shaping moved bits, not just time");
+    assert_eq!(on.batches, off.batches);
+    assert_eq!(on.padded_slots, off.padded_slots);
+}
+
+#[test]
+fn work_stealing_covers_workerless_shards() {
+    // 4 shards, 1 worker: blocks land round-robin on all shards but
+    // only shard 0 has a home worker — the rest MUST be stolen, and the
+    // answers must still be the 1x1 answers.
+    let imgs = images(64); // 8 blocks -> 2 per shard
+    let base = run_sharded(1, 1, 1, &imgs);
+    let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(1));
+    let cfg = ShardedConfig::new(4, 1, BATCH, DIMS[0], CLASSES);
+    let report =
+        ShardedServer::serve_all(cfg, move |xs: &[f32]| model.forward(xs, BATCH), imgs.clone())
+            .unwrap();
+    assert_eq!(report.predictions(), base);
+    assert_eq!(report.stolen, 6, "the 6 blocks on shards 1..3 must be stolen");
+    let per_shard_stolen: u64 = report.per_shard.iter().map(|s| s.stolen).sum();
+    assert_eq!(per_shard_stolen, 6);
+    assert_eq!(report.per_shard[0].stolen, 0, "home-shard blocks must not count as stolen");
+}
+
+#[test]
+fn overload_burst_rejects_explicitly_and_conserves() {
+    let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(1));
+    let m = model.clone();
+    let cfg = ShardedConfig::new(2, 1, BATCH, DIMS[0], CLASSES)
+        .with_queue_cap(1)
+        .with_max_wait(Duration::from_millis(1));
+    let srv = ShardedServer::start(cfg, move |xs: &[f32]| {
+        std::thread::sleep(Duration::from_millis(10));
+        m.forward(xs, BATCH)
+    });
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    for img in images(120) {
+        match srv.submit(img) {
+            Ok(_) => admitted += 1,
+            Err(SubmitError::Rejected(r)) => {
+                assert_eq!(r.reason, RejectReason::Overloaded);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "a 120-request burst past a 1-block cap must reject");
+    let report = srv.join();
+    assert_eq!(report.served, admitted);
+    assert_eq!(report.rejected as usize, rejected);
+    assert_eq!(report.served + report.rejected as usize, 120);
+    assert_eq!(report.failed, 0);
+}
+
+#[test]
+fn sharded_panic_survival_fails_one_block_only() {
+    // Poison the batch holding request 12 (block [8..16)); every other
+    // block must serve, the failed block must report per-request
+    // failures, and join must not hang — across shard/worker combos.
+    let imgs = images(40);
+    let poison = imgs[12].clone();
+    for (shards, workers) in [(1usize, 1usize), (2, 4)] {
+        let model = Arc::new(SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(1));
+        let m = model.clone();
+        let p = poison.clone();
+        let cfg = ShardedConfig::new(shards, workers, BATCH, DIMS[0], CLASSES);
+        let err = ShardedServer::serve_all(
+            cfg,
+            move |xs: &[f32]| {
+                assert!(
+                    xs.chunks(DIMS[0]).all(|row| row != &p[..]),
+                    "poison request in batch"
+                );
+                m.forward(xs, BATCH)
+            },
+            imgs.clone(),
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("8 of 40"), "{msg}");
+        assert!(msg.contains("panicked"), "{msg}");
+    }
+}
