@@ -76,6 +76,43 @@ impl ModelState {
             + self.wps.iter().map(|t| t.len()).sum::<usize>()
             + self.rs.iter().map(|t| t.len()).sum::<usize>()
     }
+
+    /// FNV-1a digest over every leaf's shape and exact bit pattern, in
+    /// state/wps/rs order.  Two states digest equal iff they are
+    /// bit-identical — what the crash-recovery CI smoke compares
+    /// between an interrupted+resumed run and an uninterrupted one.
+    pub fn digest(&self) -> u64 {
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+            h
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for section in [&self.state, &self.wps, &self.rs] {
+            h = eat(h, &(section.len() as u64).to_le_bytes());
+            for t in section.iter() {
+                h = eat(h, &(t.shape().len() as u64).to_le_bytes());
+                for &d in t.shape() {
+                    h = eat(h, &(d as u64).to_le_bytes());
+                }
+                match t {
+                    HostTensor::F32 { data, .. } => {
+                        for v in data {
+                            h = eat(h, &v.to_bits().to_le_bytes());
+                        }
+                    }
+                    HostTensor::S32 { data, .. } => {
+                        for v in data {
+                            h = eat(h, &v.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]

@@ -11,6 +11,7 @@ pub mod native_trainer;
 pub mod sweep;
 pub mod trainer;
 
+pub use checkpoint::CheckpointDir;
 pub use init::ModelState;
 pub use native_trainer::NativeTrainer;
-pub use trainer::{run_training, StepOut, TrainBackend, Trainer};
+pub use trainer::{run_training, run_training_opts, StepOut, TrainBackend, TrainOptions, Trainer};

@@ -8,12 +8,13 @@
 
 use crate::config::RunConfig;
 use crate::coordinator::init::ModelState;
-use crate::coordinator::trainer::{run_training, StepOut, TrainBackend};
+use crate::coordinator::trainer::{run_training, run_training_opts, StepOut, TrainBackend, TrainOptions};
 use crate::datasets::{BatchIter, Dataset};
 use crate::metrics::{History, MemoryMeter};
 use crate::native::train::{TapeStorage, TrainEngine};
 use crate::native::{self, Mode};
 use crate::runtime::Meta;
+use crate::sparse::parallel::SparseKernels;
 use anyhow::Result;
 
 /// The coordinator for one natively-trained model variant.
@@ -22,6 +23,11 @@ pub struct NativeTrainer {
     pub state: ModelState,
     engine: TrainEngine,
     mode: Mode,
+    // engine settings recorded so `restore` can rebuild the engine
+    // configured exactly as the builders left it
+    threads: usize,
+    tape: TapeStorage,
+    kernels: SparseKernels,
     pub steps_done: usize,
     pub history: History,
 }
@@ -43,14 +49,17 @@ impl NativeTrainer {
     /// every `refresh_every` steps, not every step), so re-projecting
     /// here would silently diverge a resumed run from the original.
     pub fn with_state(meta: Meta, state: ModelState) -> Result<NativeTrainer> {
-        let engine = TrainEngine::new(&meta, &state)?
-            .with_threads(crate::sparse::parallel::n_threads());
+        let threads = crate::sparse::parallel::n_threads();
+        let engine = TrainEngine::new(&meta, &state)?.with_threads(threads);
         let mode = engine.default_mode();
         Ok(NativeTrainer {
             meta,
             state,
             engine,
             mode,
+            threads,
+            tape: TapeStorage::default(),
+            kernels: SparseKernels::default(),
             steps_done: 0,
             history: History::default(),
         })
@@ -58,6 +67,7 @@ impl NativeTrainer {
 
     /// Cap the engines' intra-op thread budget (bit-exact either way).
     pub fn with_threads(mut self, threads: usize) -> NativeTrainer {
+        self.threads = threads;
         self.engine = self.engine.with_threads(threads);
         self
     }
@@ -66,13 +76,15 @@ impl NativeTrainer {
     /// taped activations, decompressing on demand in the backward.
     /// Training is bit-identical to the dense tape — ZVC is lossless.
     pub fn with_tape(mut self, tape: TapeStorage) -> NativeTrainer {
+        self.tape = tape;
         self.engine = self.engine.with_tape(tape);
         self
     }
 
     /// Select the sparse kernel family (compound vs output-sparse-only;
     /// bit-identical — a baseline/parity knob, not a results knob).
-    pub fn with_kernels(mut self, kernels: crate::sparse::parallel::SparseKernels) -> NativeTrainer {
+    pub fn with_kernels(mut self, kernels: SparseKernels) -> NativeTrainer {
+        self.kernels = kernels;
         self.engine = self.engine.with_kernels(kernels);
         self
     }
@@ -135,6 +147,18 @@ impl NativeTrainer {
     pub fn train(&mut self, cfg: &RunConfig, train: &Dataset, test: &Dataset) -> Result<f32> {
         run_training(self, cfg, train, test)
     }
+
+    /// [`Self::train`] with a checkpoint/resume policy (see
+    /// [`super::trainer::run_training_opts`]).
+    pub fn train_opts(
+        &mut self,
+        cfg: &RunConfig,
+        train: &Dataset,
+        test: &Dataset,
+        opts: &TrainOptions,
+    ) -> Result<f32> {
+        run_training_opts(self, cfg, train, test, opts)
+    }
 }
 
 impl TrainBackend for NativeTrainer {
@@ -160,5 +184,25 @@ impl TrainBackend for NativeTrainer {
 
     fn history_mut(&mut self) -> &mut History {
         &mut self.history
+    }
+
+    fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    fn restore(&mut self, state: ModelState, steps_done: usize) -> Result<()> {
+        // rebuild the engine against the restored state with the
+        // recorded settings; the restored Wp/R are trusted as-is
+        self.engine = TrainEngine::new(&self.meta, &state)?
+            .with_threads(self.threads)
+            .with_tape(self.tape)
+            .with_kernels(self.kernels);
+        self.state = state;
+        self.steps_done = steps_done;
+        Ok(())
     }
 }

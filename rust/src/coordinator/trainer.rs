@@ -11,12 +11,15 @@
 //! serving (`dsg serve`) does not come through here.
 
 use crate::config::RunConfig;
+use crate::coordinator::checkpoint::CheckpointDir;
 use crate::coordinator::init::ModelState;
 use crate::datasets::{BatchIter, Dataset};
 use crate::metrics::{History, StepRecord};
 use crate::runtime::{Executable, HostTensor, Meta, Runtime};
 use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
 use std::rc::Rc;
+use std::time::Duration;
 
 /// One step's scalar results.
 #[derive(Clone, Debug)]
@@ -39,6 +42,94 @@ pub trait TrainBackend {
     fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut>;
     fn evaluate(&mut self, data: &Dataset, gamma: f32) -> Result<f32>;
     fn history_mut(&mut self) -> &mut History;
+    /// The full model state (for checkpointing).
+    fn state(&self) -> &ModelState;
+    /// Steps completed so far.
+    fn steps_done(&self) -> usize;
+    /// Adopt a checkpointed state as if `steps_done` steps had run.
+    /// The restored Wp is trusted as-is (amortized training state);
+    /// re-projecting here would diverge a resumed run.
+    fn restore(&mut self, state: ModelState, steps_done: usize) -> Result<()>;
+}
+
+/// Checkpointing/resume policy for [`run_training_opts`].
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Where periodic checkpoints go (`None` = no checkpointing).
+    pub ckpt_dir: Option<CheckpointDir>,
+    /// Save every N steps (0 = only the final checkpoint).
+    pub ckpt_every: usize,
+    /// Resume from `ckpt_dir`'s newest valid checkpoint if one exists.
+    pub resume: bool,
+    /// Failed saves are retried this many times with doubling backoff
+    /// before the error aborts the run.
+    pub save_retries: usize,
+    /// Initial retry backoff (doubles per retry).
+    pub retry_backoff: Duration,
+}
+
+impl Default for TrainOptions {
+    fn default() -> TrainOptions {
+        TrainOptions {
+            ckpt_dir: None,
+            ckpt_every: 0,
+            resume: false,
+            save_retries: 2,
+            retry_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+impl TrainOptions {
+    /// Checkpoint to `dir` every `every` steps with default retry
+    /// policy (2 retries, 50 ms initial backoff).
+    pub fn checkpointed(dir: CheckpointDir, every: usize) -> TrainOptions {
+        TrainOptions { ckpt_dir: Some(dir), ckpt_every: every, ..TrainOptions::default() }
+    }
+
+    pub fn with_resume(mut self, resume: bool) -> TrainOptions {
+        self.resume = resume;
+        self
+    }
+
+    pub fn with_save_retries(mut self, retries: usize) -> TrainOptions {
+        self.save_retries = retries;
+        self
+    }
+}
+
+/// [`CheckpointDir::save_step`] with bounded retry-with-backoff:
+/// transient I/O errors (a flaky disk, an injected `ckpt.*` fault) are
+/// absorbed up to `retries` times; exhaustion returns the error — the
+/// run dies and recovery is resume-from-last-checkpoint.
+fn save_with_retry(
+    dir: &CheckpointDir,
+    ms: &ModelState,
+    step: u64,
+    retries: usize,
+    backoff: Duration,
+) -> Result<PathBuf> {
+    let mut delay = backoff;
+    let mut attempt = 0usize;
+    loop {
+        match dir.save_step(ms, step) {
+            Ok(p) => return Ok(p),
+            Err(e) if attempt < retries => {
+                attempt += 1;
+                crate::metrics::recovery().on_ckpt_retry();
+                crate::warn!(
+                    "checkpoint save at step {step} failed (attempt {attempt}/{retries}): {e:#}; retrying in {delay:?}"
+                );
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("checkpoint save at step {step} failed after {retries} retries")
+                })
+            }
+        }
+    }
 }
 
 /// The full training loop per `cfg`, shared by every backend: schedules
@@ -52,11 +143,51 @@ pub fn run_training(
     train: &Dataset,
     test: &Dataset,
 ) -> Result<f32> {
+    run_training_opts(backend, cfg, train, test, &TrainOptions::default())
+}
+
+/// [`run_training`] with a checkpoint/resume policy.  Determinism
+/// contract: a run resumed from a step-`k` checkpoint replays the
+/// batch stream and LR schedule up to `k` (both are pure functions of
+/// `cfg` and the step index), then continues with the restored state —
+/// so its final weights/BN stats are bit-identical to an uninterrupted
+/// run.  Asserted for every injectable fault site in
+/// `tests/native_train.rs::kill_at_every_fault_site_resume_parity`.
+pub fn run_training_opts(
+    backend: &mut impl TrainBackend,
+    cfg: &RunConfig,
+    train: &Dataset,
+    test: &Dataset,
+    opts: &TrainOptions,
+) -> Result<f32> {
     cfg.validate()?;
+    let mut start = 0usize;
+    if opts.resume {
+        if let Some(dir) = &opts.ckpt_dir {
+            if let Some((ms, steps, path)) = dir.latest_valid()? {
+                let steps = steps as usize;
+                if steps > cfg.steps {
+                    bail!("checkpoint {path:?} is at step {steps}, past cfg.steps {}", cfg.steps);
+                }
+                backend.restore(ms, steps)?;
+                start = steps;
+                crate::metrics::recovery().on_ckpt_resume();
+                crate::info!("resumed {} from {path:?} at step {steps}", backend.name());
+            }
+        }
+    }
     let batch = backend.batch_size();
     let mut iter = BatchIter::new(train, batch, cfg.seed ^ 0x5eed);
     let mut lr = cfg.lr;
-    for step in 0..cfg.steps {
+    // deterministic fast-forward: consume the batches and LR decays the
+    // completed steps already used (the checkpoint holds their result)
+    for step in 0..start {
+        if cfg.lr_decay_every > 0 && step > 0 && step % cfg.lr_decay_every == 0 {
+            lr *= cfg.lr_decay;
+        }
+        iter.next_batch();
+    }
+    for step in start..cfg.steps {
         if step > 0 && step % cfg.refresh_every == 0 {
             backend.refresh_projection()?;
         }
@@ -77,6 +208,20 @@ pub fn run_training(
         });
         if !out.loss.is_finite() {
             bail!("loss diverged (NaN/inf) at step {step}");
+        }
+        if let Some(dir) = &opts.ckpt_dir {
+            let due = (opts.ckpt_every > 0 && (step + 1) % opts.ckpt_every == 0)
+                || step + 1 == cfg.steps;
+            if due {
+                debug_assert_eq!(backend.steps_done(), step + 1);
+                save_with_retry(
+                    dir,
+                    backend.state(),
+                    (step + 1) as u64,
+                    opts.save_retries,
+                    opts.retry_backoff,
+                )?;
+            }
         }
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
             let acc = backend.evaluate(test, cfg.gamma.target())?;
@@ -234,6 +379,17 @@ impl Trainer {
     pub fn train(&mut self, cfg: &RunConfig, train: &Dataset, test: &Dataset) -> Result<f32> {
         run_training(self, cfg, train, test)
     }
+
+    /// [`Self::train`] with a checkpoint/resume policy.
+    pub fn train_opts(
+        &mut self,
+        cfg: &RunConfig,
+        train: &Dataset,
+        test: &Dataset,
+        opts: &TrainOptions,
+    ) -> Result<f32> {
+        run_training_opts(self, cfg, train, test, opts)
+    }
 }
 
 impl TrainBackend for Trainer {
@@ -259,6 +415,20 @@ impl TrainBackend for Trainer {
 
     fn history_mut(&mut self) -> &mut History {
         &mut self.history
+    }
+
+    fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    fn restore(&mut self, state: ModelState, steps_done: usize) -> Result<()> {
+        self.state = state;
+        self.steps_done = steps_done;
+        Ok(())
     }
 }
 

@@ -16,8 +16,9 @@ use dsg::config::{GammaSchedule, RunConfig};
 use dsg::coordinator::Trainer;
 use dsg::metrics::fmt_secs;
 use dsg::runtime::{Meta, Runtime};
-use dsg::serve::server::{connect_retry, drive_load, Endpoint, WireServer};
-use dsg::serve::{ConcurrentServer, ServerConfig, ShardedConfig, ShardedServer, SynthModel};
+use dsg::coordinator::{CheckpointDir, TrainOptions};
+use dsg::serve::server::{connect_retry, drive_load_with, ClientOptions, Endpoint, WireServer};
+use dsg::serve::{ConcurrentServer, ServerConfig, ServerTuning, ShardedConfig, ShardedServer, SynthModel};
 use dsg::{costmodel, datasets, memmodel, native, sparse};
 
 /// Tiny argument parser: subcommand + `--key value` flags.
@@ -77,6 +78,8 @@ COMMANDS:
            [--lr F] [--warmup N] [--refresh N] [--seed N] [--batch N]
            [--threads N] [--tape dense|zvc] [--kernels compound|output]
            [--config FILE] [--csv FILE] [--checkpoint FILE]
+           [--ckpt-dir DIR] [--ckpt-every N] [--keep K] [--resume auto]
+           [--ckpt-retries N]
            `--engine native` (models: mlp, lenet, vgg8, vgg8s, resnet8,
            wrn8_2, each also as NAME_dense) trains entirely on the
            host-side engine: no PJRT, no artifacts — Algorithm 1 with
@@ -87,6 +90,13 @@ COMMANDS:
            `--kernels output` runs the output-sparse-only kernel
            baseline (bit-identical to the default compound kernels;
            for A/B perf and ops comparisons).
+           `--ckpt-dir DIR` writes crash-safe checkpoints (atomic
+           tmp+fsync+rename, per-section CRC32) every --ckpt-every
+           steps (default 50), keeping the last --keep (default 3, or
+           DSG_CKPT_KEEP).  `--resume auto` restarts from the newest
+           VALID checkpoint and replays deterministically: the resumed
+           run's final weights are bit-identical to an uninterrupted
+           one.  --ckpt-retries bounds save retry-with-backoff.
   eval     --model NAME --checkpoint FILE [--gamma G]
   info     [--model NAME]         artifact inventory / variant detail
   memory   [--gamma G]            Fig 6 representational-cost report
@@ -106,11 +116,13 @@ COMMANDS:
            for admission control, --no-shaping to disable shaping).
            [--listen ADDR] serve the wire protocol (docs/PROTOCOL.md)
            on a TCP `host:port` or `unix:/path` socket until a client
-           sends Shutdown.
+           sends Shutdown; --idle-ms / --write-queue override the
+           connection deadlines (DSG_CONN_IDLE_MS, DSG_WRITE_QUEUE).
            [--connect ADDR] drive a listening server as a load
            generator; --verify recomputes in-process and asserts
            bit-identical predictions (synthetic model only);
-           --shutdown stops the server afterwards.
+           --retries N re-sends Overloaded rejects with jittered
+           backoff; --shutdown stops the server afterwards.
   help
 
 Artifacts are read from ./artifacts (override with DSG_ARTIFACTS).
@@ -144,6 +156,34 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.seed = v as u64;
     }
     cfg.validate()?;
+
+    // crash-safe checkpointing policy (atomic CRC'd files + optional
+    // auto-resume); all knobs hang off --ckpt-dir
+    let opts = match args.get("ckpt-dir") {
+        Some(dir) => {
+            let every = args.get_usize("ckpt-every")?.unwrap_or(50);
+            let mut cd = CheckpointDir::new(std::path::Path::new(dir))?;
+            if let Some(k) = args.get_usize("keep")? {
+                cd = cd.with_keep(k);
+            }
+            let mut o = TrainOptions::checkpointed(cd, every);
+            match args.get("resume") {
+                None => {}
+                Some("auto") | Some("true") => o = o.with_resume(true),
+                Some(other) => bail!("unknown --resume {other:?} (auto)"),
+            }
+            if let Some(r) = args.get_usize("ckpt-retries")? {
+                o = o.with_save_retries(r);
+            }
+            o
+        }
+        None => {
+            for flag in ["ckpt-every", "keep", "resume", "ckpt-retries"] {
+                anyhow::ensure!(args.get(flag).is_none(), "--{flag} requires --ckpt-dir");
+            }
+            TrainOptions::default()
+        }
+    };
 
     let engine = args.get("engine").unwrap_or("artifact");
     let meta = match engine {
@@ -203,7 +243,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown --kernels {k:?} (compound | output)"))?;
             trainer = trainer.with_kernels(kernels);
         }
-        let acc = trainer.train(&cfg, &train, &test)?;
+        let acc = trainer.train_opts(&cfg, &train, &test, &opts)?;
         // measured training-tape footprint of the final step (Fig 6 made
         // real: peak bytes the backward actually needed, vs dense)
         let mem = trainer.tape_memory();
@@ -252,7 +292,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         let rt = Runtime::cpu()?;
         let mut trainer = Trainer::new(&rt, meta, cfg.seed)?;
-        let acc = trainer.train(&cfg, &train, &test)?;
+        let acc = trainer.train_opts(&cfg, &train, &test, &opts)?;
         (acc, trainer.history, trainer.state)
     };
     println!(
@@ -261,6 +301,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         history.last_loss().unwrap_or(f32::NAN),
         history.total_secs()
     );
+    // stable FNV digest of every weight bit: lets CI (and humans)
+    // assert crash-resumed runs end bit-identical to clean ones
+    println!("state digest: {:016x}", state.digest());
+    let rec = dsg::metrics::recovery().snapshot();
+    if rec.any() {
+        println!("recovery: {}", rec.summary());
+    }
     if let Some(csv) = args.get("csv") {
         history.write_csv(std::path::Path::new(csv))?;
         println!("wrote history to {csv}");
@@ -527,23 +574,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let ep = Endpoint::parse(addr);
         println!("connecting to {ep}: {} requests", images.len());
         connect_retry(&ep, std::time::Duration::from_secs(10))?;
-        let run = drive_load(&ep, &images, args.get("shutdown").is_some())?;
+        let copts = ClientOptions {
+            shutdown_after: args.get("shutdown").is_some(),
+            retries: args.get_usize("retries")?.unwrap_or(0),
+            seed,
+            ..Default::default()
+        };
+        let run = drive_load_with(&ep, &images, &copts)?;
         let p = dsg::serve::ServeStats {
             latencies: run.rtt.clone(),
             ..Default::default()
         };
         let pct = p.percentiles(&[0.5, 0.99]);
         println!(
-            "client: {} served, {} rejected, {} errors in {:.3}s ({:.1} req/s); \
-             rtt-bound p50 {} p99 {}",
+            "client: {} served, {} rejected, {} errors, {} retried in {:.3}s \
+             ({:.1} req/s); rtt-bound p50 {} p99 {}",
             run.served(),
             run.rejected(),
             run.events.len() - run.served() - run.rejected(),
+            run.retries,
             run.wall,
             run.events.len() as f64 / run.wall.max(1e-12),
             fmt_secs(pct[0]),
             fmt_secs(pct[1]),
         );
+        let rec = dsg::metrics::recovery().snapshot();
+        if rec.any() {
+            println!("recovery: {}", rec.summary());
+        }
         if args.get("verify").is_some() {
             anyhow::ensure!(
                 model == "synthetic",
@@ -570,7 +628,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_max_wait(max_wait)
             .with_queue_cap(args.get_usize("queue-cap")?.unwrap_or(0))
             .with_density_shaping(args.get("no-shaping").is_none());
-        let server = WireServer::bind(&Endpoint::parse(addr), cfg, forward)?;
+        let mut tuning = ServerTuning::default();
+        if let Some(ms) = args.get_usize("idle-ms")? {
+            tuning.idle_timeout = std::time::Duration::from_millis(ms as u64);
+        }
+        if let Some(q) = args.get_usize("write-queue")? {
+            tuning.write_queue = q.max(1);
+        }
+        let server = WireServer::bind_tuned(&Endpoint::parse(addr), cfg, tuning, forward)?;
         println!(
             "listening on {} ({shards} shards x {workers} workers, batch {max_batch}, \
              max-wait {max_wait_ms}ms, gamma {gamma}); send Shutdown to stop",
@@ -580,6 +645,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print_shard_report(&report, max_batch);
         if ops_meter.dense() > 0 {
             println!("realized ops (all batches): {}", ops_meter.summary());
+        }
+        let rec = dsg::metrics::recovery().snapshot();
+        if rec.any() {
+            println!("recovery: {}", rec.summary());
         }
         return Ok(());
     }
@@ -600,6 +669,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print_shard_report(&report, max_batch);
         if ops_meter.dense() > 0 {
             println!("realized ops (all batches): {}", ops_meter.summary());
+        }
+        let rec = dsg::metrics::recovery().snapshot();
+        if rec.any() {
+            println!("recovery: {}", rec.summary());
         }
         return Ok(());
     }
@@ -664,6 +737,9 @@ fn print_shard_report(report: &dsg::serve::ShardReport, max_batch: usize) {
         report.compute.summary(),
         report.wall
     );
+    if report.retries > 0 {
+        println!("  batch retries: {} (transient forward faults absorbed)", report.retries);
+    }
     for (i, s) in report.per_shard.iter().enumerate() {
         println!(
             "  shard {i}: {} blocks in, {} home, {} stolen, {} rejected, peak depth {}",

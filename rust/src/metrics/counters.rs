@@ -77,6 +77,207 @@ impl ShardCounters {
     }
 }
 
+/// Process-wide recovery/fault accounting: everything the crash-safety
+/// machinery does that an operator would want to see — injected faults,
+/// checkpoint saves/retries/skips/resumes, serving retries, backoffs,
+/// and disconnect reasons.  One global instance ([`recovery`]) so the
+/// fault plane ([`crate::util::faults`]) and the recovery paths it
+/// exercises can bump counters from any thread without plumbing.
+///
+/// Like [`ShardCounters`]: relaxed atomics, observability only, never
+/// control flow.  Tests that assert on these counters must read a
+/// snapshot before and after and compare deltas — the counters are
+/// process-global and other tests may run concurrently.
+#[derive(Debug, Default)]
+pub struct RecoveryCounters {
+    faults_injected: AtomicU64,
+    ckpt_saves: AtomicU64,
+    ckpt_retries: AtomicU64,
+    ckpt_skipped: AtomicU64,
+    ckpt_resumes: AtomicU64,
+    batch_retries: AtomicU64,
+    client_retries: AtomicU64,
+    accept_backoffs: AtomicU64,
+    conns_opened: AtomicU64,
+    disconnects_idle: AtomicU64,
+    disconnects_slow: AtomicU64,
+    disconnects_error: AtomicU64,
+    drains: AtomicU64,
+}
+
+impl RecoveryCounters {
+    pub const fn new() -> RecoveryCounters {
+        RecoveryCounters {
+            faults_injected: AtomicU64::new(0),
+            ckpt_saves: AtomicU64::new(0),
+            ckpt_retries: AtomicU64::new(0),
+            ckpt_skipped: AtomicU64::new(0),
+            ckpt_resumes: AtomicU64::new(0),
+            batch_retries: AtomicU64::new(0),
+            client_retries: AtomicU64::new(0),
+            accept_backoffs: AtomicU64::new(0),
+            conns_opened: AtomicU64::new(0),
+            disconnects_idle: AtomicU64::new(0),
+            disconnects_slow: AtomicU64::new(0),
+            disconnects_error: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+        }
+    }
+
+    /// A fault-plane site check matched its schedule and injected.
+    pub fn on_fault_injected(&self) {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One checkpoint durably on disk (post-rename).
+    pub fn on_ckpt_save(&self) {
+        self.ckpt_saves.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One failed checkpoint-save attempt that will be retried.
+    pub fn on_ckpt_retry(&self) {
+        self.ckpt_retries.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One torn/corrupt checkpoint file skipped by `load_latest_valid`.
+    pub fn on_ckpt_skipped(&self) {
+        self.ckpt_skipped.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One training run resumed from an on-disk checkpoint.
+    pub fn on_ckpt_resume(&self) {
+        self.ckpt_resumes.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One serving batch forward re-attempted after a failure.
+    pub fn on_batch_retry(&self) {
+        self.batch_retries.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One client request re-sent after `Reject(overloaded)`.
+    pub fn on_client_retry(&self) {
+        self.client_retries.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One accept-loop error absorbed with backoff (listener lived).
+    pub fn on_accept_backoff(&self) {
+        self.accept_backoffs.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One wire connection accepted.
+    pub fn on_conn_opened(&self) {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One connection dropped for idling past the read deadline.
+    pub fn on_disconnect_idle(&self) {
+        self.disconnects_idle.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One connection dropped because its write queue overflowed.
+    pub fn on_disconnect_slow(&self) {
+        self.disconnects_slow.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One connection dropped on a read/decode error.
+    pub fn on_disconnect_error(&self) {
+        self.disconnects_error.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One graceful server drain completed.
+    pub fn on_drain(&self) {
+        self.drains.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Plain-data copy for reports and test deltas.
+    pub fn snapshot(&self) -> RecoverySnapshot {
+        RecoverySnapshot {
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            ckpt_saves: self.ckpt_saves.load(Ordering::Relaxed),
+            ckpt_retries: self.ckpt_retries.load(Ordering::Relaxed),
+            ckpt_skipped: self.ckpt_skipped.load(Ordering::Relaxed),
+            ckpt_resumes: self.ckpt_resumes.load(Ordering::Relaxed),
+            batch_retries: self.batch_retries.load(Ordering::Relaxed),
+            client_retries: self.client_retries.load(Ordering::Relaxed),
+            accept_backoffs: self.accept_backoffs.load(Ordering::Relaxed),
+            conns_opened: self.conns_opened.load(Ordering::Relaxed),
+            disconnects_idle: self.disconnects_idle.load(Ordering::Relaxed),
+            disconnects_slow: self.disconnects_slow.load(Ordering::Relaxed),
+            disconnects_error: self.disconnects_error.load(Ordering::Relaxed),
+            drains: self.drains.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The process-wide [`RecoveryCounters`] instance.
+pub fn recovery() -> &'static RecoveryCounters {
+    static RECOVERY: RecoveryCounters = RecoveryCounters::new();
+    &RECOVERY
+}
+
+/// Point-in-time copy of the recovery counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoverySnapshot {
+    pub faults_injected: u64,
+    pub ckpt_saves: u64,
+    pub ckpt_retries: u64,
+    pub ckpt_skipped: u64,
+    pub ckpt_resumes: u64,
+    pub batch_retries: u64,
+    pub client_retries: u64,
+    pub accept_backoffs: u64,
+    pub conns_opened: u64,
+    pub disconnects_idle: u64,
+    pub disconnects_slow: u64,
+    pub disconnects_error: u64,
+    pub drains: u64,
+}
+
+impl RecoverySnapshot {
+    /// Field-wise `self - earlier`, saturating: the delta attributable
+    /// to work done between the two snapshots.
+    pub fn since(&self, earlier: &RecoverySnapshot) -> RecoverySnapshot {
+        RecoverySnapshot {
+            faults_injected: self.faults_injected.saturating_sub(earlier.faults_injected),
+            ckpt_saves: self.ckpt_saves.saturating_sub(earlier.ckpt_saves),
+            ckpt_retries: self.ckpt_retries.saturating_sub(earlier.ckpt_retries),
+            ckpt_skipped: self.ckpt_skipped.saturating_sub(earlier.ckpt_skipped),
+            ckpt_resumes: self.ckpt_resumes.saturating_sub(earlier.ckpt_resumes),
+            batch_retries: self.batch_retries.saturating_sub(earlier.batch_retries),
+            client_retries: self.client_retries.saturating_sub(earlier.client_retries),
+            accept_backoffs: self.accept_backoffs.saturating_sub(earlier.accept_backoffs),
+            conns_opened: self.conns_opened.saturating_sub(earlier.conns_opened),
+            disconnects_idle: self.disconnects_idle.saturating_sub(earlier.disconnects_idle),
+            disconnects_slow: self.disconnects_slow.saturating_sub(earlier.disconnects_slow),
+            disconnects_error: self.disconnects_error.saturating_sub(earlier.disconnects_error),
+            drains: self.drains.saturating_sub(earlier.drains),
+        }
+    }
+
+    /// True if any counter is nonzero (gates report printing: quiet
+    /// runs stay quiet).
+    pub fn any(&self) -> bool {
+        *self != RecoverySnapshot::default()
+    }
+
+    /// One-line human summary of the nonzero fields.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (name, v) in [
+            ("faults_injected", self.faults_injected),
+            ("ckpt_saves", self.ckpt_saves),
+            ("ckpt_retries", self.ckpt_retries),
+            ("ckpt_skipped", self.ckpt_skipped),
+            ("ckpt_resumes", self.ckpt_resumes),
+            ("batch_retries", self.batch_retries),
+            ("client_retries", self.client_retries),
+            ("accept_backoffs", self.accept_backoffs),
+            ("conns_opened", self.conns_opened),
+            ("disconnects_idle", self.disconnects_idle),
+            ("disconnects_slow", self.disconnects_slow),
+            ("disconnects_error", self.disconnects_error),
+            ("drains", self.drains),
+        ] {
+            if v > 0 {
+                parts.push(format!("{name}={v}"));
+            }
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
 /// Point-in-time copy of one shard's counters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardSnapshot {
@@ -125,6 +326,32 @@ mod tests {
         c.on_enqueue();
         c.on_take(false);
         assert_eq!(c.snapshot().peak_depth, 2);
+    }
+
+    #[test]
+    fn recovery_snapshot_delta_and_summary() {
+        let c = RecoveryCounters::new();
+        let before = c.snapshot();
+        assert!(!before.any());
+        assert_eq!(before.summary(), "none");
+        c.on_fault_injected();
+        c.on_ckpt_save();
+        c.on_ckpt_save();
+        c.on_disconnect_slow();
+        let d = c.snapshot().since(&before);
+        assert!(d.any());
+        assert_eq!(d.faults_injected, 1);
+        assert_eq!(d.ckpt_saves, 2);
+        assert_eq!(d.disconnects_slow, 1);
+        assert_eq!(d.summary(), "faults_injected=1 ckpt_saves=2 disconnects_slow=1");
+    }
+
+    #[test]
+    fn global_recovery_is_shared() {
+        let before = recovery().snapshot();
+        recovery().on_drain();
+        let d = recovery().snapshot().since(&before);
+        assert!(d.drains >= 1);
     }
 
     #[test]

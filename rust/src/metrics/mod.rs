@@ -7,7 +7,7 @@ pub mod hist;
 pub mod memory;
 pub mod ops;
 
-pub use counters::{ShardCounters, ShardSnapshot};
+pub use counters::{recovery, RecoveryCounters, RecoverySnapshot, ShardCounters, ShardSnapshot};
 pub use hist::LatencyHistogram;
 pub use memory::{MemoryMeter, TapeAlloc};
 pub use ops::{LayerOps, OpsCounter, OpsMeter};

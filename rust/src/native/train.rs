@@ -49,8 +49,9 @@ use crate::native::{to_tensor, Carry, Mode, NativeModel};
 use crate::runtime::{Meta, Unit};
 use crate::sparse::parallel::{self, NzIndex, SparseKernels};
 use crate::tensor::ops;
+use crate::util::faults;
 use crate::zvc;
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 
 /// SGD momentum (mirrors `train.py::MOMENTUM`).
@@ -1383,6 +1384,17 @@ impl TrainEngine {
             // index), so live memory decays over the backward exactly as
             // the paper's footprint model assumes
             while let Some(ut) = tape.pop() {
+                // fault site: a transient failure reading the compressed
+                // tape back.  The step has already mutated `state` in
+                // place (BN running stats, per-unit SGD), so there is no
+                // in-place retry — the error kills the run and recovery
+                // is resume-from-last-checkpoint, which replays this
+                // step deterministically (bit-identical; asserted in
+                // tests/native_train.rs).
+                if self.tape == TapeStorage::Zvc {
+                    faults::check_io("tape.decompress")
+                        .context("decompressing taped activations")?;
+                }
                 dcarry =
                     self.unit_backward(state, &ut, dcarry, lr, &mut scr, &mut dec, &mut ops_ctr)?;
                 meter.free_unit(tape.len());

@@ -42,6 +42,7 @@ pub mod synth;
 pub mod wire;
 
 pub use concurrent::{ConcurrentServer, ServeReport, ServerConfig};
+pub use server::{ClientOptions, ClientRun, Endpoint, ServerTuning, WireServer};
 pub use shard::{Outcome, ShardReport, ShardedConfig, ShardedServer, SubmitError, Verdict};
 pub use synth::SynthModel;
 

@@ -11,6 +11,25 @@
 //! rejects and malformed-request errors are answered immediately from
 //! the reader.
 //!
+//! Degradation under faults ([`ServerTuning`], counted by
+//! [`crate::metrics::RecoveryCounters`]):
+//!
+//! * transient `accept` errors (fd exhaustion, EINTR, injected faults)
+//!   back the acceptor off with a doubling sleep — the listener never
+//!   dies; only the stop flag ends the loop;
+//! * each connection has a read/idle deadline — a peer that goes
+//!   silent is disconnected, not leaked;
+//! * the per-connection write queue is BOUNDED — a slow client that
+//!   stops reading fills its own queue, gets a best-effort `Error`
+//!   frame, and is disconnected; workers never block on it;
+//! * a `Shutdown` frame is acked (`ShutdownAck`), then the server
+//!   drains gracefully: stop accepting, wake every blocked reader,
+//!   flush in-flight replies, join the engine.
+//!
+//! Every degradation moves time and availability, never bits: a served
+//! prediction is always the batch-deterministic one, asserted in
+//! `tests/serve_faults.rs`.
+//!
 //! A `Shutdown` frame stops the acceptor; the server then joins every
 //! live connection, drains the engine, and returns the final
 //! [`ShardReport`] — the same report in-process serving produces, which
@@ -19,14 +38,16 @@
 use super::shard::{Outcome, ShardReport, ShardedConfig, ShardedServer, SubmitError, Verdict};
 use super::wire::{read_frame, write_frame, Message};
 use super::RejectReason;
-use anyhow::{bail, Context, Result};
+use crate::util::faults;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Where a server listens / a client connects.  Textual form is
@@ -52,6 +73,44 @@ impl std::fmt::Display for Endpoint {
         match self {
             Endpoint::Tcp(a) => write!(f, "{a}"),
             Endpoint::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// Connection/acceptor resilience knobs (defaults read the `DSG_*` env
+/// once at construction; see the README env table).
+#[derive(Debug, Clone)]
+pub struct ServerTuning {
+    /// Read/idle deadline per connection (`DSG_CONN_IDLE_MS`, default
+    /// 30 s): a peer sending nothing for this long is disconnected.
+    pub idle_timeout: Duration,
+    /// Socket write deadline (`DSG_CONN_WRITE_MS`, default 10 s): a
+    /// single frame write blocked this long fails the writer.
+    pub write_timeout: Duration,
+    /// Bound on queued outbound frames per connection
+    /// (`DSG_WRITE_QUEUE`, default 1024); overflow = slow client =>
+    /// disconnect.
+    pub write_queue: usize,
+    /// Cap for the acceptor's doubling error backoff.
+    pub accept_backoff_max: Duration,
+}
+
+fn env_ms(key: &str, default_ms: u64) -> Duration {
+    let ms = std::env::var(key).ok().and_then(|s| s.parse::<u64>().ok()).unwrap_or(default_ms);
+    Duration::from_millis(ms)
+}
+
+impl Default for ServerTuning {
+    fn default() -> ServerTuning {
+        ServerTuning {
+            idle_timeout: env_ms("DSG_CONN_IDLE_MS", 30_000),
+            write_timeout: env_ms("DSG_CONN_WRITE_MS", 10_000),
+            write_queue: std::env::var("DSG_WRITE_QUEUE")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(1024)
+                .max(1),
+            accept_backoff_max: Duration::from_millis(500),
         }
     }
 }
@@ -103,6 +162,30 @@ impl Conn {
             Conn::Unix(s) => s.set_nonblocking(on),
         }
     }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_write_timeout(t),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_write_timeout(t),
+        }
+    }
+
+    fn shutdown(&self, how: std::net::Shutdown) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.shutdown(how),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.shutdown(how),
+        }
+    }
 }
 
 impl Read for Conn {
@@ -140,6 +223,7 @@ pub struct WireServer {
     listener: Listener,
     local: Endpoint,
     stop: Arc<AtomicBool>,
+    tuning: ServerTuning,
 }
 
 impl WireServer {
@@ -149,6 +233,19 @@ impl WireServer {
     /// is replaced (stale sockets from a killed server would otherwise
     /// wedge restarts).
     pub fn bind<F>(endpoint: &Endpoint, cfg: ShardedConfig, forward: F) -> Result<WireServer>
+    where
+        F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        Self::bind_tuned(endpoint, cfg, ServerTuning::default(), forward)
+    }
+
+    /// [`WireServer::bind`] with explicit [`ServerTuning`].
+    pub fn bind_tuned<F>(
+        endpoint: &Endpoint,
+        cfg: ShardedConfig,
+        tuning: ServerTuning,
+        forward: F,
+    ) -> Result<WireServer>
     where
         F: Fn(&[f32]) -> Result<Vec<f32>> + Send + Sync + 'static,
     {
@@ -171,7 +268,13 @@ impl WireServer {
             }
         };
         let engine = Arc::new(ShardedServer::start(cfg, forward));
-        Ok(WireServer { engine, listener, local, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(WireServer {
+            engine,
+            listener,
+            local,
+            stop: Arc::new(AtomicBool::new(false)),
+            tuning,
+        })
     }
 
     /// The bound address (TCP port resolved if bound to port 0).
@@ -187,32 +290,72 @@ impl WireServer {
     }
 
     /// Accept and serve connections until a `Shutdown` frame (or the
-    /// stop handle) fires, then join the connections, drain the engine,
-    /// and return the merged report.
+    /// stop handle) fires, then drain gracefully: stop accepting, wake
+    /// every blocked reader (read-side shutdown), flush in-flight
+    /// replies, join the engine, and return the merged report.
+    ///
+    /// The accept loop never dies to an accept error: transient
+    /// failures (EMFILE fd exhaustion, EINTR, injected `accept`
+    /// faults) are absorbed with a doubling backoff, counted in
+    /// [`crate::metrics::RecoveryCounters`].
     pub fn run(self) -> Result<ShardReport> {
         self.listener.set_nonblocking(true).context("setting listener nonblocking")?;
+        let registry: Arc<Mutex<HashMap<u64, Conn>>> = Arc::new(Mutex::new(HashMap::new()));
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut next_id = 0u64;
+        let base_backoff = Duration::from_millis(10);
+        let mut backoff = base_backoff;
         while !self.stop.load(Ordering::SeqCst) {
-            match self.listener.accept() {
+            let injected = faults::check("accept").is_some();
+            let accepted = if injected {
+                Err(faults::injected_error("accept"))
+            } else {
+                self.listener.accept()
+            };
+            match accepted {
                 Ok(conn) => {
+                    backoff = base_backoff;
                     conn.set_nonblocking(false).context("setting connection blocking")?;
+                    crate::metrics::recovery().on_conn_opened();
+                    let id = next_id;
+                    next_id += 1;
+                    if let Ok(clone) = conn.try_clone() {
+                        registry.lock().unwrap().insert(id, clone);
+                    }
                     let engine = self.engine.clone();
                     let stop = self.stop.clone();
+                    let tuning = self.tuning.clone();
+                    let reg = registry.clone();
                     conns.push(std::thread::spawn(move || {
                         // a torn connection only kills this handler
-                        let _ = handle_connection(conn, &engine, &stop);
+                        let _ = handle_connection(conn, &engine, &stop, &tuning);
+                        reg.lock().unwrap().remove(&id);
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(2));
                 }
-                Err(e) => return Err(e).context("accepting connection"),
+                Err(e) => {
+                    // transient (EMFILE, EINTR, injected): back off and
+                    // keep listening — only the stop flag ends the loop
+                    crate::metrics::recovery().on_accept_backoff();
+                    crate::warn!("accept error (backing off {backoff:?}): {e}");
+                    std::thread::sleep(backoff);
+                    backoff = backoff.saturating_mul(2).min(self.tuning.accept_backoff_max);
+                }
             }
             conns.retain(|h| !h.is_finished());
+        }
+        // graceful drain: wake every reader blocked in read() so
+        // handlers exit promptly; their writers then flush whatever
+        // replies are still in flight before the join below
+        for (_, c) in registry.lock().unwrap().iter() {
+            let _ = c.shutdown(std::net::Shutdown::Read);
         }
         for h in conns {
             let _ = h.join();
         }
+        crate::metrics::recovery().on_drain();
         if let Endpoint::Unix(path) = &self.local {
             let _ = std::fs::remove_file(path);
         }
@@ -222,31 +365,111 @@ impl WireServer {
     }
 }
 
+/// `true` when the error chain bottoms out in a read/write deadline
+/// expiry (EAGAIN surfaces as `WouldBlock` on unix, `TimedOut`
+/// elsewhere).
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>()
+            .map(|io| {
+                matches!(
+                    io.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                )
+            })
+            .unwrap_or(false)
+    })
+}
+
+/// Enqueue an outbound frame on the connection's BOUNDED write queue.
+/// A full queue marks the connection slow (the reader disconnects it)
+/// instead of blocking the caller — reply hooks run on engine workers,
+/// and a slow client must never stall a worker.
+fn queue_send(tx: &SyncSender<Message>, slow: &AtomicBool, msg: Message) {
+    match tx.try_send(msg) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => slow.store(true, Ordering::SeqCst),
+        Err(TrySendError::Disconnected(_)) => {}
+    }
+}
+
 /// Serve one connection: read frames, submit requests, answer control
-/// messages.  Returns when the peer closes or sends `Shutdown`.
-fn handle_connection(conn: Conn, engine: &Arc<ShardedServer>, stop: &Arc<AtomicBool>) -> Result<()> {
+/// messages.  Returns when the peer closes, sends `Shutdown`, idles
+/// past the read deadline, or overflows its write queue.
+fn handle_connection(
+    conn: Conn,
+    engine: &Arc<ShardedServer>,
+    stop: &Arc<AtomicBool>,
+    tuning: &ServerTuning,
+) -> Result<()> {
+    conn.set_read_timeout(Some(tuning.idle_timeout)).context("setting read deadline")?;
     let writer_conn = conn.try_clone().context("cloning connection for writer")?;
-    let (tx, rx) = channel::<Message>();
+    writer_conn
+        .set_write_timeout(Some(tuning.write_timeout))
+        .context("setting write deadline")?;
+    let (tx, rx) = sync_channel::<Message>(tuning.write_queue);
+    let slow = Arc::new(AtomicBool::new(false));
+    let slow_w = slow.clone();
     let writer = std::thread::spawn(move || {
         let mut w = std::io::BufWriter::new(writer_conn);
         // exits when every sender (reader + outstanding reply hooks)
         // has dropped — i.e. after the last response for this
         // connection is on the wire
         while let Ok(msg) = rx.recv() {
+            if faults::check("wire.write").is_some() {
+                break;
+            }
             if write_frame(&mut w, &msg).is_err() {
                 break;
             }
+        }
+        if slow_w.load(Ordering::SeqCst) {
+            // best-effort parting diagnosis for the slow client
+            let _ = write_frame(
+                &mut w,
+                &Message::Error {
+                    id: u64::MAX,
+                    message: "write queue overflowed (slow client); disconnecting".into(),
+                },
+            );
         }
     });
     let mut r = std::io::BufReader::new(conn);
     let result = (|| -> Result<()> {
         loop {
-            let Some(msg) = read_frame(&mut r)? else {
+            if slow.load(Ordering::SeqCst) {
+                crate::metrics::recovery().on_disconnect_slow();
+                bail!("write queue overflowed (slow client); disconnecting");
+            }
+            if faults::check("wire.read").is_some() {
+                crate::metrics::recovery().on_disconnect_error();
+                return Err(faults::injected_error("wire.read")).context("reading frame");
+            }
+            let frame = match read_frame(&mut r) {
+                Ok(f) => f,
+                Err(e) if is_timeout(&e) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return Ok(()); // server draining; treat as closed
+                    }
+                    if slow.load(Ordering::SeqCst) {
+                        crate::metrics::recovery().on_disconnect_slow();
+                        bail!("write queue overflowed (slow client); disconnecting");
+                    }
+                    crate::metrics::recovery().on_disconnect_idle();
+                    bail!("idle past the read deadline; disconnecting");
+                }
+                Err(e) => {
+                    crate::metrics::recovery().on_disconnect_error();
+                    return Err(e);
+                }
+            };
+            let Some(msg) = frame else {
                 return Ok(()); // clean EOF
             };
             match msg {
                 Message::Request { id, image } => {
                     let reply_tx = tx.clone();
+                    let reply_slow = slow.clone();
                     let reply = Box::new(move |o: Outcome| {
                         let msg = match o.verdict {
                             Verdict::Pred(p) => Message::Response {
@@ -256,27 +479,34 @@ fn handle_connection(conn: Conn, engine: &Arc<ShardedServer>, stop: &Arc<AtomicB
                             },
                             Verdict::Failed(m) => Message::Error { id: o.id, message: m },
                         };
-                        let _ = reply_tx.send(msg);
+                        queue_send(&reply_tx, &reply_slow, msg);
                     });
                     match engine.submit_replying(id, image, reply) {
                         Ok(()) => {}
                         Err(SubmitError::Rejected(rej)) => {
-                            let _ = tx.send(Message::Reject { id, reason: rej.reason });
+                            queue_send(&tx, &slow, Message::Reject { id, reason: rej.reason });
                         }
                         Err(SubmitError::BadRequest(m)) => {
-                            let _ = tx.send(Message::Error { id, message: m });
+                            queue_send(&tx, &slow, Message::Error { id, message: m });
                         }
                     }
                 }
                 Message::Ping { token } => {
-                    let _ = tx.send(Message::Pong { token });
+                    queue_send(&tx, &slow, Message::Pong { token });
                 }
                 Message::Flush => engine.flush(),
                 Message::Shutdown => {
+                    // seal the forming batch so in-flight work drains,
+                    // ack the shutdown, and stop the acceptor
+                    engine.flush();
+                    queue_send(&tx, &slow, Message::ShutdownAck);
                     stop.store(true, Ordering::SeqCst);
                     return Ok(());
                 }
-                other => bail!("client sent a server-only message: {other:?}"),
+                other => {
+                    crate::metrics::recovery().on_disconnect_error();
+                    bail!("client sent a server-only message: {other:?}");
+                }
             }
         }
     })();
@@ -308,10 +538,13 @@ impl ClientEvent {
 pub struct ClientRun {
     /// One terminal event per request, sorted by id.
     pub events: Vec<ClientEvent>,
-    /// Client-measured round-trip seconds, indexed like `events`.
+    /// Client-measured round-trip seconds, indexed like `events`
+    /// (measured from the FIRST send of each request).
     pub rtt: Vec<f64>,
     /// Wall-clock of the whole run, seconds.
     pub wall: f64,
+    /// Requests re-sent after an `Overloaded` reject.
+    pub retries: usize,
 }
 
 impl ClientRun {
@@ -365,6 +598,32 @@ fn dial(endpoint: &Endpoint) -> Result<Conn> {
     }
 }
 
+/// Client-side behavior knobs for [`drive_load_with`].
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    /// Send `Shutdown` (and wait for the `ShutdownAck`) at the end.
+    pub shutdown_after: bool,
+    /// Re-send rounds for requests rejected `Overloaded` (0 = report
+    /// the reject as terminal, the pre-retry behavior).
+    pub retries: usize,
+    /// Base backoff between retry rounds; doubles per round, plus a
+    /// seeded jitter so synchronized clients spread out.
+    pub backoff: Duration,
+    /// Jitter seed (client identity).
+    pub seed: u64,
+}
+
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions {
+            shutdown_after: false,
+            retries: 0,
+            backoff: Duration::from_millis(20),
+            seed: 1,
+        }
+    }
+}
+
 /// Load-generating client: sends `images` as requests with ids
 /// `0..images.len()`, a `Flush` after the last one (so a trailing
 /// partial batch ships without waiting out the server's deadline),
@@ -374,6 +633,22 @@ pub fn drive_load(
     endpoint: &Endpoint,
     images: &[Vec<f32>],
     shutdown_after: bool,
+) -> Result<ClientRun> {
+    drive_load_with(endpoint, images, &ClientOptions { shutdown_after, ..Default::default() })
+}
+
+/// [`drive_load`] with retry: requests rejected `Overloaded` are
+/// re-sent in rounds with doubling, jittered backoff — the client-side
+/// half of graceful degradation (the server sheds load with explicit
+/// rejects; a patient client turns them into throughput).  Re-sent
+/// requests produce the same prediction a first-try admission would
+/// have: batch composition changes, bits of each served answer do not
+/// depend on which round admitted them... they depend only on the
+/// batch, and every batch is computed by the same deterministic engine.
+pub fn drive_load_with(
+    endpoint: &Endpoint,
+    images: &[Vec<f32>],
+    opts: &ClientOptions,
 ) -> Result<ClientRun> {
     let t0 = Instant::now();
     let conn = dial(endpoint)?;
@@ -388,54 +663,109 @@ pub fn drive_load(
     }
 
     let n = images.len();
-    let reader = std::thread::spawn(move || -> Result<Vec<ClientEvent>> {
-        let mut events: Vec<Option<ClientEvent>> = (0..n).map(|_| None).collect();
-        let mut got = 0usize;
-        while got < n {
-            let Some(msg) = read_frame(&mut r)? else {
-                bail!("server closed with {got} of {n} responses delivered");
-            };
-            let ev = match msg {
-                Message::Response { id, pred, latency_us } => {
-                    ClientEvent::Response { id, pred, latency_us }
-                }
-                Message::Reject { id, reason } => ClientEvent::Reject { id, reason },
-                Message::Error { id, message } => ClientEvent::Error { id, message },
-                other => bail!("unexpected server message: {other:?}"),
-            };
-            let id = ev.id() as usize;
-            anyhow::ensure!(id < n, "server answered unknown request id {id}");
-            anyhow::ensure!(events[id].is_none(), "duplicate terminal event for id {id}");
-            events[id] = Some(ev);
-            got += 1;
+    let mut final_events: Vec<Option<ClientEvent>> = (0..n).map(|_| None).collect();
+    let mut send_times: Vec<Option<Instant>> = vec![None; n];
+    let mut pending: Vec<u64> = (0..n as u64).collect();
+    let mut retries_done = 0usize;
+    let mut rng = crate::util::Pcg32::seeded(opts.seed ^ 0xC11E);
+    let mut round = 0usize;
+    while !pending.is_empty() {
+        let expect: std::collections::HashSet<u64> = pending.iter().copied().collect();
+        let k = pending.len();
+        // the reader collects this round's k terminal events, then
+        // hands the stream back for the next round
+        let reader = std::thread::spawn(
+            move || -> (Result<Vec<ClientEvent>>, std::io::BufReader<Conn>) {
+                let mut events: Vec<ClientEvent> = Vec::with_capacity(k);
+                let mut seen = std::collections::HashSet::new();
+                let res = (|| -> Result<()> {
+                    while events.len() < k {
+                        let Some(msg) = read_frame(&mut r)? else {
+                            bail!(
+                                "server closed with {} of {k} responses delivered",
+                                events.len()
+                            );
+                        };
+                        let ev = match msg {
+                            Message::Response { id, pred, latency_us } => {
+                                ClientEvent::Response { id, pred, latency_us }
+                            }
+                            Message::Reject { id, reason } => ClientEvent::Reject { id, reason },
+                            Message::Error { id, message } => ClientEvent::Error { id, message },
+                            other => bail!("unexpected server message: {other:?}"),
+                        };
+                        ensure!(
+                            expect.contains(&ev.id()),
+                            "server answered unexpected request id {}",
+                            ev.id()
+                        );
+                        ensure!(seen.insert(ev.id()), "duplicate terminal event for id {}", ev.id());
+                        events.push(ev);
+                    }
+                    Ok(())
+                })();
+                (res.map(|()| events), r)
+            },
+        );
+        for &id in &pending {
+            let slot = &mut send_times[id as usize];
+            if slot.is_none() {
+                *slot = Some(Instant::now());
+            }
+            write_frame(&mut w, &Message::Request { id, image: images[id as usize].clone() })?;
         }
-        Ok(events.into_iter().map(|e| e.unwrap()).collect())
-    });
-
-    let mut send_times = Vec::with_capacity(n);
-    for (id, img) in images.iter().enumerate() {
-        send_times.push(Instant::now());
-        write_frame(&mut w, &Message::Request { id: id as u64, image: img.clone() })?;
+        write_frame(&mut w, &Message::Flush)?;
+        let (res, r_back) =
+            reader.join().map_err(|_| anyhow::anyhow!("client reader thread panicked"))?;
+        r = r_back;
+        let mut next: Vec<u64> = Vec::new();
+        for ev in res? {
+            match &ev {
+                ClientEvent::Reject { reason: RejectReason::Overloaded, .. }
+                    if round < opts.retries =>
+                {
+                    next.push(ev.id());
+                }
+                _ => final_events[ev.id() as usize] = Some(ev),
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        retries_done += next.len();
+        for _ in 0..next.len() {
+            crate::metrics::recovery().on_client_retry();
+        }
+        // doubling backoff with seeded jitter in [0, backoff/2]
+        let exp = opts.backoff.saturating_mul(1 << round.min(16) as u32);
+        let jitter_us = (rng.next_u32() as u64) % (exp.as_micros().max(2) as u64 / 2);
+        std::thread::sleep(exp + Duration::from_micros(jitter_us));
+        pending = next;
+        round += 1;
     }
-    write_frame(&mut w, &Message::Flush)?;
-
-    let events = reader
-        .join()
-        .map_err(|_| anyhow::anyhow!("client reader thread panicked"))??;
     let recv_done = Instant::now();
-    // per-id RTT upper bound: send time to end-of-run (exact per-event
-    // stamps would need the reader to share the clock vector; the serve
-    // bench measures its latencies server-side, so a bound suffices
-    // here)
+    let events: Vec<ClientEvent> = final_events.into_iter().map(|e| e.unwrap()).collect();
+    // per-id RTT upper bound: first-send time to end-of-run (exact
+    // per-event stamps would need the reader to share the clock vector;
+    // the serve bench measures its latencies server-side, so a bound
+    // suffices here)
     let rtt: Vec<f64> = send_times
         .iter()
-        .map(|s| recv_done.duration_since(*s).as_secs_f64())
+        .map(|s| recv_done.duration_since(s.unwrap()).as_secs_f64())
         .collect();
 
-    if shutdown_after {
+    if opts.shutdown_after {
         write_frame(&mut w, &Message::Shutdown)?;
+        // wait for the ack — tolerant: an old server (or one whose
+        // drain closed the socket first) just EOFs/errors
+        loop {
+            match read_frame(&mut r) {
+                Ok(Some(Message::ShutdownAck)) | Ok(None) | Err(_) => break,
+                Ok(Some(_)) => continue, // stale frame; keep waiting
+            }
+        }
     }
-    Ok(ClientRun { events, rtt, wall: t0.elapsed().as_secs_f64() })
+    Ok(ClientRun { events, rtt, wall: t0.elapsed().as_secs_f64(), retries: retries_done })
 }
 
 #[cfg(test)]
@@ -451,5 +781,29 @@ mod tests {
         );
         assert_eq!(Endpoint::parse("unix:/tmp/dsg.sock").to_string(), "unix:/tmp/dsg.sock");
         assert_eq!(Endpoint::parse("0.0.0.0:0").to_string(), "0.0.0.0:0");
+    }
+
+    #[test]
+    fn tuning_defaults_are_sane() {
+        let t = ServerTuning::default();
+        assert!(t.idle_timeout >= Duration::from_millis(1));
+        assert!(t.write_timeout >= Duration::from_millis(1));
+        assert!(t.write_queue >= 1);
+        assert!(t.accept_backoff_max >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn timeout_detection_sees_through_context() {
+        let e = anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::WouldBlock,
+            "resource temporarily unavailable",
+        ))
+        .context("reading frame header")
+        .context("outer");
+        assert!(is_timeout(&e));
+        let e2 = anyhow::anyhow!("plain");
+        assert!(!is_timeout(&e2));
+        let e3 = anyhow::Error::from(std::io::Error::other("boom")).context("reading");
+        assert!(!is_timeout(&e3));
     }
 }

@@ -48,6 +48,7 @@
 
 use super::{argmax, assemble_padded_into, RejectReason, Rejected};
 use crate::metrics::{LatencyHistogram, ShardCounters, ShardSnapshot};
+use crate::util::faults;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
@@ -77,6 +78,12 @@ pub struct ShardedConfig {
     /// Tag blocks with their kernel-path bucket and let workers group
     /// same-bucket blocks (execution order only; bit-neutral).
     pub density_shaping: bool,
+    /// Re-attempts of a failed batch forward before the failure is
+    /// delivered to its requests.  The forward is a pure function of
+    /// the assembled batch, so a retry is bit-identical when it
+    /// succeeds — retries absorb transient faults, they never move
+    /// bits.
+    pub batch_retries: usize,
 }
 
 impl ShardedConfig {
@@ -97,6 +104,7 @@ impl ShardedConfig {
             max_wait: Duration::from_millis(5),
             queue_cap: 0,
             density_shaping: true,
+            batch_retries: 1,
         }
     }
 
@@ -113,6 +121,13 @@ impl ShardedConfig {
 
     pub fn with_density_shaping(mut self, on: bool) -> ShardedConfig {
         self.density_shaping = on;
+        self
+    }
+
+    /// Re-attempt a failed batch forward this many times (0 = fail
+    /// fast).
+    pub fn with_batch_retries(mut self, retries: usize) -> ShardedConfig {
+        self.batch_retries = retries;
         self
     }
 }
@@ -234,6 +249,9 @@ pub struct ShardWorkerStats {
     pub stolen: usize,
     /// Batches that continued the previous batch's density bucket.
     pub bucket_runs: usize,
+    /// Failed forward attempts that were re-run (transient faults
+    /// absorbed without a client-visible failure).
+    pub retries: usize,
     pub latency: LatencyHistogram,
     pub compute: LatencyHistogram,
 }
@@ -246,6 +264,7 @@ impl ShardWorkerStats {
         self.padded_slots += o.padded_slots;
         self.stolen += o.stolen;
         self.bucket_runs += o.bucket_runs;
+        self.retries += o.retries;
         self.latency.merge(&o.latency);
         self.compute.merge(&o.compute);
     }
@@ -263,6 +282,8 @@ pub struct ShardReport {
     pub batches: usize,
     pub padded_slots: usize,
     pub stolen: usize,
+    /// Batch-forward re-attempts across all workers.
+    pub retries: usize,
     pub latency: LatencyHistogram,
     pub compute: LatencyHistogram,
     /// Wall-clock from server start to drain completion, seconds.
@@ -483,6 +504,7 @@ impl ShardedServer {
             batches: total.batches,
             padded_slots: total.padded_slots,
             stolen: total.stolen,
+            retries: total.retries,
             latency: total.latency,
             compute: total.compute,
             wall,
@@ -630,22 +652,36 @@ impl Inner {
             Ok(padded) => {
                 stats.padded_slots += padded;
                 let t0 = Instant::now();
-                let r = std::panic::catch_unwind(AssertUnwindSafe(|| forward(&xs[..])));
-                let compute = t0.elapsed().as_secs_f64();
-                match r {
-                    Ok(Ok(l)) if l.len() == cfg.max_batch * cfg.classes => (compute, None, l),
-                    Ok(Ok(l)) => (
-                        compute,
-                        Some(format!(
+                // the forward is a pure function of the (already
+                // assembled, untouched) batch, so a failed attempt —
+                // transient I/O, an injected fault, even a panic — can
+                // be re-run bit-identically.  Assembly happens once.
+                let mut attempt = 0usize;
+                let (failure, logits) = loop {
+                    let r = if faults::check("serve.worker_batch").is_some() {
+                        Ok(Err(anyhow::Error::from(faults::injected_error("serve.worker_batch"))))
+                    } else {
+                        std::panic::catch_unwind(AssertUnwindSafe(|| forward(&xs[..])))
+                    };
+                    let failure = match r {
+                        Ok(Ok(l)) if l.len() == cfg.max_batch * cfg.classes => break (None, l),
+                        Ok(Ok(l)) => format!(
                             "forward returned {} logits, expected {}",
                             l.len(),
                             cfg.max_batch * cfg.classes
-                        )),
-                        Vec::new(),
-                    ),
-                    Ok(Err(e)) => (compute, Some(format!("forward failed: {e:#}")), Vec::new()),
-                    Err(p) => (compute, Some(panic_message(&p)), Vec::new()),
-                }
+                        ),
+                        Ok(Err(e)) => format!("forward failed: {e:#}"),
+                        Err(p) => panic_message(&p),
+                    };
+                    if attempt < cfg.batch_retries {
+                        attempt += 1;
+                        stats.retries += 1;
+                        crate::metrics::recovery().on_batch_retry();
+                        continue;
+                    }
+                    break (Some(failure), Vec::new());
+                };
+                (t0.elapsed().as_secs_f64(), failure, logits)
             }
             Err(e) => (0.0, Some(format!("batch assembly failed: {e:#}")), Vec::new()),
         };

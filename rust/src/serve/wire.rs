@@ -14,10 +14,12 @@
 //! ```
 //!
 //! Message types: `Request` (1), `Response` (2), `Reject` (3),
-//! `Error` (4), `Ping` (5), `Pong` (6), `Shutdown` (7), `Flush` (8).
-//! Decoding is strict: unknown version, unknown type, a body of the
-//! wrong length, or a frame above [`MAX_FRAME`] are errors, never
-//! best-effort guesses.
+//! `Error` (4), `Ping` (5), `Pong` (6), `Shutdown` (7), `Flush` (8),
+//! `ShutdownAck` (9, added in v1.1 — servers ack a `Shutdown` once the
+//! drain completes, so clients can distinguish a graceful drain from a
+//! dropped connection).  Decoding is strict: unknown version, unknown
+//! type, a body of the wrong length, or a frame above [`MAX_FRAME`] are
+//! errors, never best-effort guesses.
 
 use super::RejectReason;
 use anyhow::{bail, ensure, Context, Result};
@@ -52,6 +54,11 @@ pub enum Message {
     /// Client -> server: seal the partial forming batch now instead of
     /// waiting out the batching deadline.
     Flush,
+    /// Server -> client: the [`Message::Shutdown`] was honored — the
+    /// server has sealed the forming batch and begun its graceful
+    /// drain (in-flight replies still stream before the socket
+    /// closes).
+    ShutdownAck,
 }
 
 const TYPE_REQUEST: u8 = 1;
@@ -62,6 +69,7 @@ const TYPE_PING: u8 = 5;
 const TYPE_PONG: u8 = 6;
 const TYPE_SHUTDOWN: u8 = 7;
 const TYPE_FLUSH: u8 = 8;
+const TYPE_SHUTDOWN_ACK: u8 = 9;
 
 impl Message {
     /// Encode into a full frame (length prefix included).
@@ -104,6 +112,7 @@ impl Message {
             }
             Message::Shutdown => payload.push(TYPE_SHUTDOWN),
             Message::Flush => payload.push(TYPE_FLUSH),
+            Message::ShutdownAck => payload.push(TYPE_SHUTDOWN_ACK),
         }
         let mut frame = Vec::with_capacity(4 + payload.len());
         frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -183,6 +192,14 @@ impl Message {
             TYPE_FLUSH => {
                 ensure!(body.is_empty(), "flush body must be empty, got {} bytes", body.len());
                 Message::Flush
+            }
+            TYPE_SHUTDOWN_ACK => {
+                ensure!(
+                    body.is_empty(),
+                    "shutdown-ack body must be empty, got {} bytes",
+                    body.len()
+                );
+                Message::ShutdownAck
             }
             other => bail!("unknown message type {other}"),
         };
@@ -267,6 +284,7 @@ mod tests {
         roundtrip(Message::Pong { token: 0xDEAD_BEEF });
         roundtrip(Message::Shutdown);
         roundtrip(Message::Flush);
+        roundtrip(Message::ShutdownAck);
     }
 
     /// Golden bytes pin `docs/PROTOCOL.md` to the implementation: if
@@ -309,6 +327,7 @@ mod tests {
         );
         assert_eq!(Message::Shutdown.encode(), vec![0x02, 0, 0, 0, 0x01, 0x07]);
         assert_eq!(Message::Flush.encode(), vec![0x02, 0, 0, 0, 0x01, 0x08]);
+        assert_eq!(Message::ShutdownAck.encode(), vec![0x02, 0, 0, 0, 0x01, 0x09]);
     }
 
     #[test]
@@ -341,6 +360,7 @@ mod tests {
         assert!(Message::decode(&rej).is_err());
         // shutdown with a body
         assert!(Message::decode(&[VERSION, TYPE_SHUTDOWN, 0]).is_err());
+        assert!(Message::decode(&[VERSION, TYPE_SHUTDOWN_ACK, 0]).is_err());
         // error message must be UTF-8
         let mut e = vec![VERSION, TYPE_ERROR];
         e.extend_from_slice(&0u64.to_le_bytes());

@@ -1,0 +1,340 @@
+//! Deterministic fault injection: named sites, a reproducible schedule,
+//! and zero work when disarmed.
+//!
+//! The recovery machinery (atomic checkpoints, retry-with-backoff,
+//! accept-loop backoff, slow-client disconnects) is only trustworthy if
+//! its failure paths actually run.  This module lets a test — or an
+//! operator via the `DSG_FAULTS` env var — fail the Nth occurrence of a
+//! named operation, exactly and reproducibly:
+//!
+//! ```text
+//! DSG_FAULTS="ckpt.write:io@3,wire.read:io@2,ckpt.fsync:io@1+"
+//!            site ───┘     │   │└ 1-based hit index; trailing `+`
+//!            kind ─────────┘   │  means "that hit and every later one"
+//!            (io | torn)       └ comma-separated entries
+//! ```
+//!
+//! Sites wired in this crate: `ckpt.write`, `ckpt.fsync`, `ckpt.rename`
+//! (checkpoint save path), `tape.decompress` (ZVC backward walk),
+//! `serve.worker_batch` (sharded batch execution), `wire.read`,
+//! `wire.write` (per-connection socket I/O), `accept` (listener loop).
+//!
+//! Kinds: `io` makes the operation return an injected
+//! [`std::io::Error`]; `torn` additionally asks write-shaped sites to
+//! persist a PREFIX of the buffer before failing (simulating a
+//! kill -9 mid-write).  Sites that cannot tear treat `torn` as `io`.
+//!
+//! The normative contract (see `docs/ARCHITECTURE.md`, "Failure model &
+//! recovery"): **faults move time and availability, never bits.**  An
+//! injected fault may kill a run, drop a connection, or force a retry —
+//! but any run that completes, and any resumed run, must produce
+//! bit-identical results to an unfaulted one.
+//!
+//! Scoping: the env schedule (and [`install`]) arms a process-global
+//! plan — hit counters are shared by every thread, which is what lets a
+//! schedule reach serving workers.  [`with_plan`] arms a thread-local
+//! plan instead (checked first), so training-path tests can inject
+//! faults without leaking into concurrently running tests.  When
+//! nothing is armed, a site check is one `Once` + one relaxed atomic
+//! load — effectively free.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Once, RwLock};
+
+/// What an armed site does to the operation that hit it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The operation returns an injected I/O error; nothing happened.
+    Io,
+    /// Write-shaped sites persist a prefix of the buffer, THEN error
+    /// (a crash mid-write).  Elsewhere identical to [`FaultKind::Io`].
+    Torn,
+}
+
+/// One schedule entry: fail `site`'s `at`-th hit (1-based); with
+/// `persistent`, every hit from `at` onward.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub site: String,
+    pub kind: FaultKind,
+    pub at: u64,
+    pub persistent: bool,
+}
+
+/// A parsed, not-yet-armed schedule.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the `DSG_FAULTS` grammar: comma-separated
+    /// `site:kind@N` / `site:kind@N+` entries (see module docs).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut specs = Vec::new();
+        for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (site, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("fault entry {entry:?}: expected site:kind@N"))?;
+            let (kind, at) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry {entry:?}: expected site:kind@N"))?;
+            let kind = match kind {
+                "io" => FaultKind::Io,
+                "torn" => FaultKind::Torn,
+                other => return Err(format!("fault entry {entry:?}: unknown kind {other:?}")),
+            };
+            let (at, persistent) = match at.strip_suffix('+') {
+                Some(n) => (n, true),
+                None => (at, false),
+            };
+            let at: u64 = at
+                .parse()
+                .map_err(|_| format!("fault entry {entry:?}: bad hit index {at:?}"))?;
+            if at == 0 {
+                return Err(format!("fault entry {entry:?}: hit indices are 1-based"));
+            }
+            if site.is_empty() {
+                return Err(format!("fault entry {entry:?}: empty site"));
+            }
+            specs.push(FaultSpec { site: site.to_string(), kind, at, persistent });
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    /// Single-entry convenience for tests.
+    pub fn one(site: &str, kind: FaultKind, at: u64, persistent: bool) -> FaultPlan {
+        FaultPlan {
+            specs: vec![FaultSpec { site: site.to_string(), kind, at, persistent }],
+        }
+    }
+}
+
+/// An armed plan: per-site hit counters + the specs watching each site.
+struct ActivePlan {
+    sites: HashMap<String, SiteState>,
+}
+
+struct SiteState {
+    hits: AtomicU64,
+    specs: Vec<(FaultKind, u64, bool)>,
+}
+
+impl ActivePlan {
+    fn new(plan: &FaultPlan) -> ActivePlan {
+        let mut sites: HashMap<String, SiteState> = HashMap::new();
+        for s in &plan.specs {
+            sites
+                .entry(s.site.clone())
+                .or_insert_with(|| SiteState { hits: AtomicU64::new(0), specs: Vec::new() })
+                .specs
+                .push((s.kind, s.at, s.persistent));
+        }
+        ActivePlan { sites }
+    }
+
+    /// Count one hit on `site`; return the injected kind if a spec
+    /// matches this hit index.  Sites with no spec are not counted.
+    fn hit(&self, site: &str) -> Option<FaultKind> {
+        let st = self.sites.get(site)?;
+        let n = st.hits.fetch_add(1, Ordering::Relaxed) + 1;
+        st.specs
+            .iter()
+            .find(|(_, at, persistent)| n == *at || (*persistent && n >= *at))
+            .map(|(kind, _, _)| *kind)
+    }
+}
+
+static GLOBAL_ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+static GLOBAL_PLAN: RwLock<Option<Arc<ActivePlan>>> = RwLock::new(None);
+static ENV_PLAN: RwLock<Option<Arc<ActivePlan>>> = RwLock::new(None);
+static TEST_MUTEX: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    static LOCAL_PLAN: std::cell::RefCell<Option<Arc<ActivePlan>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn ensure_env_init() {
+    ENV_INIT.call_once(|| {
+        let Ok(s) = std::env::var("DSG_FAULTS") else { return };
+        if s.trim().is_empty() {
+            return;
+        }
+        match FaultPlan::parse(&s) {
+            Ok(plan) => {
+                let active = Arc::new(ActivePlan::new(&plan));
+                *ENV_PLAN.write().unwrap() = Some(active.clone());
+                *GLOBAL_PLAN.write().unwrap() = Some(active);
+                GLOBAL_ARMED.store(true, Ordering::Release);
+                crate::warn!("DSG_FAULTS armed: {s}");
+            }
+            Err(e) => crate::warn!("ignoring unparseable DSG_FAULTS: {e}"),
+        }
+    });
+}
+
+/// Arm `plan` process-globally (replacing any env-derived plan until
+/// [`clear`]), with fresh hit counters.  Reaches every thread,
+/// including serving workers.  Tests using this must serialize on
+/// [`test_guard`] — the plan is process-wide.
+pub fn install(plan: &FaultPlan) {
+    ensure_env_init();
+    *GLOBAL_PLAN.write().unwrap() = Some(Arc::new(ActivePlan::new(plan)));
+    GLOBAL_ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm an [`install`]ed plan, restoring the `DSG_FAULTS` env plan
+/// (with its hit counters intact) if one exists.
+pub fn clear() {
+    ensure_env_init();
+    let env = ENV_PLAN.read().unwrap().clone();
+    let armed = env.is_some();
+    *GLOBAL_PLAN.write().unwrap() = env;
+    GLOBAL_ARMED.store(armed, Ordering::Release);
+}
+
+/// Serializes tests that [`install`] a global plan.
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    // a previous test may have panicked while holding the guard; the
+    // shared state is reset by the next install/clear, so the poison
+    // carries no information
+    TEST_MUTEX.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Run `f` with `plan` armed for THIS thread only (checked before the
+/// global plan; counters are fresh).  The plan is disarmed when `f`
+/// returns or unwinds.
+pub fn with_plan<T>(plan: &FaultPlan, f: impl FnOnce() -> T) -> T {
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            LOCAL_PLAN.with(|l| *l.borrow_mut() = None);
+        }
+    }
+    LOCAL_PLAN.with(|l| *l.borrow_mut() = Some(Arc::new(ActivePlan::new(plan))));
+    let _reset = Reset;
+    f()
+}
+
+/// Count one hit on `site` against the armed plan (thread-local first,
+/// then global) and return the fault to inject, if any.  `None` means
+/// proceed normally — and costs ~nothing when no plan is armed.
+pub fn check(site: &str) -> Option<FaultKind> {
+    let local = LOCAL_PLAN.with(|l| l.borrow().clone());
+    if let Some(plan) = local {
+        let hit = plan.hit(site);
+        if hit.is_some() {
+            crate::metrics::recovery().on_fault_injected();
+        }
+        return hit;
+    }
+    ensure_env_init();
+    if !GLOBAL_ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    let plan = GLOBAL_PLAN.read().unwrap().clone()?;
+    let hit = plan.hit(site);
+    if hit.is_some() {
+        crate::metrics::recovery().on_fault_injected();
+    }
+    hit
+}
+
+/// The injected error for `site` (both kinds map to an I/O error here;
+/// sites that can tear call [`check`] directly to get the kind).
+pub fn injected_error(site: &str) -> std::io::Error {
+    std::io::Error::other(format!("injected fault at {site}"))
+}
+
+/// [`check`] shaped for `?`: `Err` with an injected I/O error when the
+/// schedule says this hit fails.
+pub fn check_io(site: &str) -> std::io::Result<()> {
+    match check(site) {
+        Some(_) => Err(injected_error(site)),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar() {
+        let p = FaultPlan::parse("ckpt.write:io@3, wire.read:torn@2+ ,accept:io@1").unwrap();
+        assert_eq!(p.specs.len(), 3);
+        assert_eq!(
+            p.specs[0],
+            FaultSpec { site: "ckpt.write".into(), kind: FaultKind::Io, at: 3, persistent: false }
+        );
+        assert_eq!(
+            p.specs[1],
+            FaultSpec { site: "wire.read".into(), kind: FaultKind::Torn, at: 2, persistent: true }
+        );
+        assert!(FaultPlan::parse("").unwrap().specs.is_empty());
+        assert!(FaultPlan::parse("bad").is_err());
+        assert!(FaultPlan::parse("site:zap@1").is_err());
+        assert!(FaultPlan::parse("site:io@0").is_err());
+        assert!(FaultPlan::parse("site:io@x").is_err());
+        assert!(FaultPlan::parse(":io@1").is_err());
+    }
+
+    #[test]
+    fn exact_hit_fires_once() {
+        let plan = FaultPlan::one("t.exact", FaultKind::Io, 3, false);
+        with_plan(&plan, || {
+            assert_eq!(check("t.exact"), None);
+            assert_eq!(check("t.exact"), None);
+            assert_eq!(check("t.exact"), Some(FaultKind::Io));
+            assert_eq!(check("t.exact"), None);
+            // other sites are never affected
+            assert_eq!(check("t.other"), None);
+        });
+        // disarmed outside the scope
+        assert_eq!(check("t.exact"), None);
+    }
+
+    #[test]
+    fn persistent_hit_fires_from_n_onward() {
+        let plan = FaultPlan::one("t.persist", FaultKind::Torn, 2, true);
+        with_plan(&plan, || {
+            assert_eq!(check("t.persist"), None);
+            assert_eq!(check("t.persist"), Some(FaultKind::Torn));
+            assert_eq!(check("t.persist"), Some(FaultKind::Torn));
+        });
+    }
+
+    #[test]
+    fn check_io_maps_to_error() {
+        let plan = FaultPlan::one("t.io", FaultKind::Io, 1, false);
+        with_plan(&plan, || {
+            let e = check_io("t.io").unwrap_err();
+            assert!(e.to_string().contains("t.io"), "{e}");
+            assert!(check_io("t.io").is_ok());
+        });
+    }
+
+    #[test]
+    fn thread_local_plan_does_not_leak_to_other_threads() {
+        let plan = FaultPlan::one("t.tl", FaultKind::Io, 1, true);
+        with_plan(&plan, || {
+            assert_eq!(check("t.tl"), Some(FaultKind::Io));
+            let h = std::thread::spawn(|| check("t.tl"));
+            assert_eq!(h.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    fn install_reaches_other_threads_and_clear_disarms() {
+        let _g = test_guard();
+        install(&FaultPlan::one("t.global", FaultKind::Io, 1, true));
+        let h = std::thread::spawn(|| check("t.global"));
+        assert_eq!(h.join().unwrap(), Some(FaultKind::Io));
+        clear();
+        let h = std::thread::spawn(|| check("t.global"));
+        assert_eq!(h.join().unwrap(), None);
+    }
+}

@@ -1,6 +1,7 @@
 //! Infrastructure substrates built in-repo (the offline environment has
 //! no serde/clap/rand/criterion): JSON, PRNG, logging, timing.
 
+pub mod faults;
 pub mod json;
 pub mod log;
 pub mod rng;

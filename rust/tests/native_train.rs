@@ -13,8 +13,9 @@
 //! compressed-tape checkpoint resume.
 
 use dsg::config::{GammaSchedule, RunConfig};
-use dsg::coordinator::{checkpoint, ModelState, NativeTrainer};
+use dsg::coordinator::{checkpoint, CheckpointDir, ModelState, NativeTrainer, TrainOptions};
 use dsg::datasets;
+use dsg::util::faults::{self, FaultKind, FaultPlan};
 use dsg::native::train::{TapeStorage, TrainEngine};
 use dsg::native::zoo::{self, ModelSpec};
 use dsg::native::Mode;
@@ -551,6 +552,145 @@ fn ops_counter_records_realized_reduction() {
     );
     // per-layer records exist for both masked layers AND the classifier
     assert!(co.layers().len() >= 3, "expected per-layer ops records");
+}
+
+// ------------------------------------------------- crash-safe training
+
+/// Fresh empty temp dir for a crash-recovery scenario.
+fn crash_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dsg_crash_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn crash_cfg() -> RunConfig {
+    let mut cfg = RunConfig::preset_for_model("mlp");
+    cfg.steps = 8;
+    cfg.eval_every = 0;
+    cfg.train_size = 64;
+    cfg.test_size = 32;
+    cfg.gamma = GammaSchedule::Constant(0.5);
+    cfg
+}
+
+fn crash_trainer() -> NativeTrainer {
+    let spec = ModelSpec::custom_mlp("crash_mlp", &[784, 16], 10, 16);
+    let meta = zoo::synth_meta(&spec).unwrap();
+    NativeTrainer::new(meta, 4).unwrap().with_tape(TapeStorage::Zvc)
+}
+
+/// The headline invariant of the recovery plane: kill a training run at
+/// EVERY injectable fault site on its path, resume with `--resume
+/// auto` semantics, and the final weights are bit-identical to an
+/// uninterrupted run — faults move time, never bits.
+#[test]
+fn kill_at_every_fault_site_resume_parity() {
+    let cfg = crash_cfg();
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(1.0 / 3.0);
+
+    // baseline: uninterrupted, no checkpointing machinery at all
+    let mut base = crash_trainer();
+    base.train(&cfg, &train, &test).unwrap();
+
+    // (site, kind, first failing hit): write faults die at the first
+    // save; the tape fault dies mid-backward AFTER a checkpoint exists
+    let scenarios: &[(&str, FaultKind, u64)] = &[
+        ("ckpt.write", FaultKind::Io, 1),
+        ("ckpt.write", FaultKind::Torn, 2),
+        ("ckpt.fsync", FaultKind::Io, 1),
+        ("ckpt.rename", FaultKind::Io, 1),
+        ("tape.decompress", FaultKind::Io, 7),
+    ];
+    for &(site, kind, at) in scenarios {
+        let what = format!("{site}:{kind:?}@{at}+");
+        let dir = crash_dir(&format!("{}_{at}", site.replace('.', "_")));
+        let ckpt = CheckpointDir::new(&dir).unwrap().with_keep(2);
+
+        // the victim run: no save retries, so the first injected fault
+        // on the save path is fatal (simulating a crash at that point)
+        let opts = TrainOptions::checkpointed(ckpt.clone(), 2).with_save_retries(0);
+        let plan = FaultPlan::one(site, kind, at, true);
+        let mut victim = crash_trainer();
+        let r = faults::with_plan(&plan, || victim.train_opts(&cfg, &train, &test, &opts));
+        assert!(r.is_err(), "{what}: injected fault did not kill the run");
+
+        // recovery: a fresh process-equivalent trainer, faults gone,
+        // resuming from whatever valid checkpoint survived (possibly
+        // none — dying at the first save means training from scratch)
+        let mut resumed = crash_trainer();
+        let opts = TrainOptions::checkpointed(ckpt, 2).with_resume(true);
+        resumed.train_opts(&cfg, &train, &test, &opts).unwrap();
+        assert_state_bits_eq(&base.state, &resumed.state, &what);
+        assert_eq!(base.state.digest(), resumed.state.digest(), "{what}: digest");
+    }
+}
+
+/// Resume without any faults: a run stopped cleanly at step 4 and
+/// resumed to 8 matches a straight-through 8-step run bit for bit
+/// (the batch iterator and schedules fast-forward deterministically).
+#[test]
+fn clean_mid_run_resume_is_bit_exact() {
+    let cfg = crash_cfg();
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(1.0 / 3.0);
+
+    let dir_a = crash_dir("clean_straight");
+    let mut a = crash_trainer();
+    let opts_a = TrainOptions::checkpointed(CheckpointDir::new(&dir_a).unwrap(), 3);
+    a.train_opts(&cfg, &train, &test, &opts_a).unwrap();
+
+    let dir_b = crash_dir("clean_resumed");
+    let mut half = cfg.clone();
+    half.steps = 4;
+    let mut b1 = crash_trainer();
+    let opts_b = TrainOptions::checkpointed(CheckpointDir::new(&dir_b).unwrap(), 3);
+    b1.train_opts(&half, &train, &test, &opts_b).unwrap();
+    // the digest is sensitive: half-trained and fully-trained differ
+    assert_ne!(b1.state.digest(), a.state.digest());
+
+    let mut b2 = crash_trainer();
+    let opts_b = opts_b.with_resume(true);
+    b2.train_opts(&cfg, &train, &test, &opts_b).unwrap();
+    assert_state_bits_eq(&a.state, &b2.state, "clean resume");
+    assert_eq!(a.state.digest(), b2.state.digest());
+    // history covers only the replayed tail, not the first 4 steps
+    assert_eq!(b2.history.steps.len(), 4);
+}
+
+/// `latest_valid` recovery order: a newer-but-corrupt checkpoint (torn
+/// tail, flipped byte, or stray tmp) is skipped in favor of the newest
+/// one that passes its CRCs.
+#[test]
+fn load_latest_valid_skips_torn_and_corrupt() {
+    let dir = crash_dir("latest_valid");
+    let ckpt = CheckpointDir::new(&dir).unwrap().with_keep(10);
+    let mut t = crash_trainer();
+    let meta = t.meta.clone();
+    let (x, y) = batch_for(&meta, 81);
+    t.step(&x, &y, 0.5, 0.05).unwrap();
+    let good = t.state.clone();
+    ckpt.save_step(&good, 2).unwrap();
+
+    // a newer torn checkpoint (truncated mid-file), a newer garbage
+    // one, and a stray tmp from an interrupted save
+    let valid = std::fs::read(dir.join("step-0000000002.ckpt")).unwrap();
+    std::fs::write(dir.join("step-0000000004.ckpt"), &valid[..valid.len() / 2]).unwrap();
+    let mut flipped = valid.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    std::fs::write(dir.join("step-0000000006.ckpt"), &flipped).unwrap();
+    std::fs::write(dir.join(".step-0000000008.ckpt.tmp"), &valid[..8]).unwrap();
+
+    let (ms, steps, path) = CheckpointDir::new(&dir)
+        .unwrap()
+        .latest_valid()
+        .unwrap()
+        .expect("the valid checkpoint must be found");
+    assert_eq!(steps, 2);
+    assert!(path.ends_with("step-0000000002.ckpt"), "{path:?}");
+    assert_state_bits_eq(&good, &ms, "latest_valid");
 }
 
 #[test]

@@ -1,0 +1,249 @@
+//! Fault-hardened serving integration: injected faults at every serving
+//! site must degrade gracefully — a retried batch, a dropped
+//! connection, a backed-off accept loop — and NEVER change served bits
+//! or take the server down.  Companion to `serve_wire.rs` (the no-fault
+//! transparency suite).
+//!
+//! Every test that arms a process-global fault plan serializes on
+//! `faults::test_guard()` and reads counters as deltas, so the suite is
+//! order-independent.
+
+use dsg::metrics::recovery;
+use dsg::serve::server::{
+    drive_load, drive_load_with, ClientOptions, Endpoint, ServerTuning, WireServer,
+};
+use dsg::serve::wire::{read_frame, write_frame, Message};
+use dsg::serve::{ShardedConfig, ShardedServer, SynthModel};
+use dsg::util::faults::{self, FaultKind, FaultPlan};
+use std::time::{Duration, Instant};
+
+const DIMS: &[usize] = &[64, 96, 80];
+const CLASSES: usize = 10;
+const BATCH: usize = 8;
+const GAMMA: f32 = 0.7;
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    let m = SynthModel::new(1, DIMS, CLASSES, GAMMA);
+    (0..n).map(|i| m.synth_image(500 + i as u64)).collect()
+}
+
+fn wire_cfg(shards: usize, workers: usize) -> ShardedConfig {
+    ShardedConfig::new(shards, workers, BATCH, DIMS[0], CLASSES)
+        .with_max_wait(Duration::from_secs(60))
+}
+
+fn model_forward(intra: usize) -> impl Fn(&[f32]) -> anyhow::Result<Vec<f32>> + Send + Sync {
+    let model = SynthModel::new(1, DIMS, CLASSES, GAMMA).with_intra_threads(intra);
+    move |xs: &[f32]| model.forward(xs, BATCH)
+}
+
+#[test]
+fn accept_fault_backs_off_and_still_serves() {
+    let _g = faults::test_guard();
+    let before = recovery().snapshot();
+    // the first accept poll fails (as EMFILE/EINTR would); the listener
+    // must absorb it and serve the whole load afterwards
+    faults::install(&FaultPlan::one("accept", FaultKind::Io, 1, false));
+    let server =
+        WireServer::bind(&Endpoint::parse("127.0.0.1:0"), wire_cfg(2, 2), model_forward(1))
+            .unwrap();
+    let addr = server.local_endpoint().clone();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    let imgs = images(16);
+    let run = drive_load(&addr, &imgs, true).unwrap();
+    let report = handle.join().unwrap();
+    faults::clear();
+    assert_eq!(run.served(), 16, "an accept fault must not lose requests");
+    assert_eq!(report.served, 16);
+    let d = recovery().snapshot().since(&before);
+    assert!(d.accept_backoffs >= 1, "backoff not counted: {d:?}");
+    assert!(d.faults_injected >= 1);
+}
+
+#[test]
+fn worker_batch_fault_is_retried_bit_exact() {
+    // ground truth FIRST, before any plan is armed
+    let imgs = images(16);
+    let baseline = {
+        let _g = faults::test_guard();
+        ShardedServer::serve_all(wire_cfg(1, 1), model_forward(1), imgs.clone()).unwrap()
+    };
+
+    let _g = faults::test_guard();
+    let before = recovery().snapshot();
+    // exactly one batch execution fails; batch_retries (default 1)
+    // must re-run the SAME assembled batch — so every prediction is
+    // still the deterministic one
+    faults::install(&FaultPlan::one("serve.worker_batch", FaultKind::Io, 1, false));
+    let server =
+        WireServer::bind(&Endpoint::parse("127.0.0.1:0"), wire_cfg(1, 1), model_forward(1))
+            .unwrap();
+    let addr = server.local_endpoint().clone();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    let run = drive_load(&addr, &imgs, true).unwrap();
+    let report = handle.join().unwrap();
+    faults::clear();
+
+    assert_eq!(run.served(), 16);
+    assert_eq!(
+        run.predictions(),
+        baseline.predictions(),
+        "a retried batch changed served bits"
+    );
+    assert_eq!(report.failed, 0, "the retry must absorb the fault");
+    assert!(report.retries >= 1, "retry not accounted");
+    let d = recovery().snapshot().since(&before);
+    assert!(d.batch_retries >= 1, "{d:?}");
+}
+
+#[test]
+fn wire_read_fault_kills_connection_not_server() {
+    let _g = faults::test_guard();
+    let before = recovery().snapshot();
+    faults::install(&FaultPlan::one("wire.read", FaultKind::Io, 1, false));
+    let server =
+        WireServer::bind(&Endpoint::parse("127.0.0.1:0"), wire_cfg(1, 1), model_forward(1))
+            .unwrap();
+    let addr = server.local_endpoint().clone();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    // connection 1 hits the injected read fault: the server must drop
+    // it (the client sees a failed handshake), not die
+    let err = drive_load(&addr, &images(4), false);
+    assert!(err.is_err(), "connection with injected read fault must fail");
+
+    // connection 2 serves normally on the same server
+    let run = drive_load(&addr, &images(10), true).unwrap();
+    let report = handle.join().unwrap();
+    faults::clear();
+    assert_eq!(run.served(), 10);
+    assert_eq!(report.served, 10);
+    let d = recovery().snapshot().since(&before);
+    assert!(d.disconnects_error >= 1, "{d:?}");
+    assert_eq!(d.conns_opened, 2); // the faulted conn + the serving one
+}
+
+#[test]
+fn slow_client_write_queue_overflow_disconnects() {
+    let _g = faults::test_guard();
+    let before = recovery().snapshot();
+    // break the writer (persistent wire.write fault) so the bounded
+    // queue can't drain, and read NOTHING from the client side: reply
+    // hooks must hit the Full queue, flag the connection slow, and the
+    // reader must disconnect it — without ever blocking a worker
+    faults::install(&FaultPlan::one("wire.write", FaultKind::Io, 1, true));
+    let tuning = ServerTuning {
+        idle_timeout: Duration::from_millis(200),
+        write_timeout: Duration::from_secs(5),
+        write_queue: 4,
+        accept_backoff_max: Duration::from_millis(100),
+    };
+    let server = WireServer::bind_tuned(
+        &Endpoint::parse("127.0.0.1:0"),
+        wire_cfg(1, 1),
+        tuning,
+        model_forward(1),
+    )
+    .unwrap();
+    let addr = server.local_endpoint().clone();
+    let Endpoint::Tcp(tcp_addr) = addr.clone() else { panic!("expected tcp") };
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let imgs = images(30);
+    let mut w = std::net::TcpStream::connect(&tcp_addr).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        write_frame(&mut w, &Message::Request { id: i as u64, image: img.clone() }).unwrap();
+    }
+    write_frame(&mut w, &Message::Flush).unwrap();
+    // never read; wait for the server to give up on us
+    let t0 = Instant::now();
+    loop {
+        let d = recovery().snapshot().since(&before);
+        if d.disconnects_slow >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "slow client never disconnected: {d:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(w);
+
+    // the server survived the slow client: disarm the write fault and
+    // serve a fresh connection end to end
+    faults::clear();
+    let run = drive_load(&addr, &images(8), true).unwrap();
+    let _report = handle.join().unwrap();
+    assert_eq!(run.served(), 8);
+}
+
+#[test]
+fn shutdown_is_acked_after_in_flight_replies_are_honored() {
+    let _g = faults::test_guard();
+    let before = recovery().snapshot();
+    let server =
+        WireServer::bind(&Endpoint::parse("127.0.0.1:0"), wire_cfg(2, 2), model_forward(1))
+            .unwrap();
+    let Endpoint::Tcp(tcp_addr) = server.local_endpoint().clone() else { panic!("expected tcp") };
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    // one connection: requests, Flush, Shutdown back to back — the
+    // graceful drain must still deliver EVERY response plus the ack
+    let imgs = images(10);
+    let s = std::net::TcpStream::connect(&tcp_addr).unwrap();
+    let mut w = s.try_clone().unwrap();
+    let mut r = std::io::BufReader::new(s);
+    for (i, img) in imgs.iter().enumerate() {
+        write_frame(&mut w, &Message::Request { id: i as u64, image: img.clone() }).unwrap();
+    }
+    write_frame(&mut w, &Message::Flush).unwrap();
+    write_frame(&mut w, &Message::Shutdown).unwrap();
+
+    let mut responses = 0usize;
+    let mut acked = false;
+    while responses < imgs.len() || !acked {
+        match read_frame(&mut r).unwrap() {
+            Some(Message::Response { .. }) => responses += 1,
+            Some(Message::ShutdownAck) => acked = true,
+            Some(other) => panic!("unexpected frame during drain: {other:?}"),
+            None => panic!("socket closed with {responses} responses, ack {acked}"),
+        }
+    }
+    let report = handle.join().unwrap();
+    assert_eq!(report.served, 10);
+    assert_eq!(report.failed, 0);
+    let d = recovery().snapshot().since(&before);
+    assert!(d.drains >= 1, "{d:?}");
+}
+
+#[test]
+fn client_retries_turn_overload_rejects_into_throughput() {
+    let _g = faults::test_guard();
+    let before = recovery().snapshot();
+    // tiny queue + slow forward: the burst overloads admission, and a
+    // retrying client must eventually get EVERYTHING served
+    let cfg = ShardedConfig::new(1, 1, BATCH, DIMS[0], CLASSES)
+        .with_queue_cap(1)
+        .with_max_wait(Duration::from_millis(1));
+    let model = SynthModel::new(1, DIMS, CLASSES, GAMMA);
+    let server = WireServer::bind(&Endpoint::parse("127.0.0.1:0"), cfg, move |xs: &[f32]| {
+        std::thread::sleep(Duration::from_millis(5));
+        model.forward(xs, BATCH)
+    })
+    .unwrap();
+    let addr = server.local_endpoint().clone();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    let imgs = images(120);
+    let opts = ClientOptions { shutdown_after: true, retries: 10, ..Default::default() };
+    let run = drive_load_with(&addr, &imgs, &opts).unwrap();
+    let report = handle.join().unwrap();
+
+    assert!(run.retries > 0, "a 120-burst past a 1-block cap must retry");
+    assert_eq!(run.served(), 120, "retries must converge to full service");
+    assert_eq!(run.rejected(), 0, "no terminal rejects after retry rounds");
+    assert!(report.rejected > 0, "the server did shed load along the way");
+    assert_eq!(report.served, 120);
+    let d = recovery().snapshot().since(&before);
+    assert!(d.client_retries >= run.retries as u64, "{d:?}");
+}
