@@ -1,0 +1,280 @@
+//! Structured (constant fan-in) vs unstructured DRS selection — the
+//! Lasby-style extension of Fig 5: does a per-row top-k mask in the
+//! packed `FixedK` layout match the paper's shared-threshold selection
+//! at matched gamma, and what do the packed-gather kernels buy over the
+//! CSR kernels on the SAME selection?
+//!
+//! Two sections:
+//!
+//! 1. ACCURACY — native training of the same MLP at the same gamma
+//!    under `--selection unstructured | structured | structured:blocked`
+//!    (identical init, identical batches; only the mask-selection rule
+//!    differs).  Final eval accuracy and late-training loss go into the
+//!    JSON.
+//! 2. KERNELS — one structured selection expressed packed (`FixedK`)
+//!    and as explicit CSR ([`RowMask::to_csr`]), timed through the
+//!    forward / backward-dX / gradW parallel engines.  Outputs are
+//!    asserted bit-identical first (layout moves loads, never bits), so
+//!    the timing delta is pure layout.
+//!
+//! Writes `BENCH_structured.json` (override with `DSG_BENCH_OUT`).
+//! `DSG_STRUCTURED_SMOKE=1` shrinks both sections for CI.
+
+use dsg::config::{GammaSchedule, RunConfig};
+use dsg::coordinator::NativeTrainer;
+use dsg::datasets;
+use dsg::drs::{topk, SelectionMode};
+use dsg::native::zoo::{self, ModelSpec};
+use dsg::sparse::parallel;
+use dsg::tensor::{ops, Tensor};
+use dsg::util::json::{obj, Json};
+use dsg::util::Pcg32;
+use std::time::Instant;
+
+fn randn(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, rng.normal_vec(n, 1.0))
+}
+
+fn accuracy_spec(smoke: bool) -> ModelSpec {
+    if smoke {
+        ModelSpec::custom_mlp("structured_smoke", &[64, 48], 6, 16)
+    } else {
+        ModelSpec::custom_mlp("structured_mlp", &[256, 200, 200], 10, 64)
+    }
+}
+
+/// Train the spec'd MLP under one selection mode; returns (eval acc,
+/// mean loss over the last 5 steps).
+fn train_mode(spec: &ModelSpec, sel: SelectionMode, gamma: f32, steps: usize) -> anyhow::Result<(f32, f32)> {
+    let meta = zoo::synth_meta(spec)?;
+    let mut cfg = RunConfig::preset_for_model("mlp");
+    cfg.model = meta.name.clone();
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.train_size = (meta.batch * steps).min(2048);
+    cfg.test_size = 256.min(cfg.train_size / 2).max(32);
+    cfg.gamma = GammaSchedule::Constant(gamma);
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let split = cfg.test_size as f64 / (cfg.train_size + cfg.test_size) as f64;
+    let (train, test) = data.split(split);
+    let mut t = NativeTrainer::new(meta, cfg.seed)?.with_selection(sel);
+    let acc = t.train(&cfg, &train, &test)?;
+    let tail = t.history.steps.len().saturating_sub(5);
+    let late = &t.history.steps[tail..];
+    let loss = late.iter().map(|s| s.loss).sum::<f32>() / late.len().max(1) as f32;
+    Ok((acc, loss))
+}
+
+/// Median wall time of `f` over `reps` runs (first run discarded as
+/// warmup when reps allows).
+fn time_median(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    dsg::benchutil::header(
+        "Structured DRS",
+        "constant fan-in selection vs the paper's shared threshold, packed-gather vs CSR kernels",
+        "Lasby et al.: constant fan-in matches unstructured accuracy; regularity pays in kernels",
+    );
+    let smoke = std::env::var("DSG_STRUCTURED_SMOKE").is_ok();
+    let gamma = 0.5f32;
+    let steps = if smoke { 12 } else { 150 };
+
+    // ---------------- accuracy at matched gamma ----------------
+    let spec = accuracy_spec(smoke);
+    println!(
+        "\n=== accuracy: {} at gamma {gamma}, {steps} steps/mode{} ===",
+        spec.name,
+        if smoke { " (smoke)" } else { "" }
+    );
+    let modes = [
+        SelectionMode::Unstructured,
+        SelectionMode::Structured { blocked: false },
+        SelectionMode::Structured { blocked: true },
+    ];
+    let mut mode_objs = Vec::new();
+    let mut accs = Vec::new();
+    println!("{:>20} {:>8} {:>12}", "selection", "acc", "late-loss");
+    for sel in modes {
+        let (acc, loss) = train_mode(&spec, sel, gamma, steps)?;
+        assert!(loss.is_finite(), "{}: loss diverged", sel.label());
+        println!("{:>20} {:>8.3} {:>12.4}", sel.label(), acc, loss);
+        accs.push(acc);
+        mode_objs.push(obj(vec![
+            ("selection", Json::Str(sel.label().to_string())),
+            ("acc", Json::Num(acc as f64)),
+            ("late_loss", Json::Num(loss as f64)),
+        ]));
+    }
+    if !smoke {
+        let chance = 1.0 / 10.0f32;
+        for (sel, &acc) in modes.iter().zip(&accs) {
+            assert!(
+                acc > chance + 0.1,
+                "{}: accuracy {acc:.3} barely above chance",
+                sel.label()
+            );
+        }
+        // the Lasby claim at this scale: structured tracks unstructured
+        assert!(
+            (accs[1] - accs[0]).abs() < 0.15,
+            "structured acc {:.3} far from unstructured {:.3}",
+            accs[1],
+            accs[0]
+        );
+    }
+
+    // ---------------- kernel time: packed vs CSR ----------------
+    let (m, d, n) = if smoke { (32, 96, 64) } else { (256, 512, 384) };
+    let kgamma = 0.75f32;
+    let reps = if smoke { 5 } else { 41 };
+    let threads = parallel::n_threads();
+    let mut rng = Pcg32::seeded(77);
+    let mut xv = rng.normal_vec(m * d, 1.0);
+    for (i, v) in xv.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *v = 0.0; // relu-style input zeros for the compound path
+        }
+    }
+    let x = Tensor::new(&[m, d], xv);
+    let w = randn(&mut rng, &[d, n]);
+    let wt = ops::transpose(&w);
+    let dy = randn(&mut rng, &[m, n]);
+    let virt = randn(&mut rng, &[m, n]);
+    let packed = topk::select_structured(&virt, kgamma, false);
+    let k = packed.fixed_k().expect("structured selection is packed");
+    let csr = packed.to_csr();
+    // parity first: the timing below compares layouts of the SAME math
+    let want = parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &csr, threads);
+    assert_eq!(want, parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &packed, threads));
+    let mut dx_csr = vec![0.0f32; m * d];
+    let mut dx_packed = vec![0.0f32; m * d];
+    parallel::dsg_vmm_rowmask_backward_parallel_into(
+        dy.data(), m, d, wt.data(), n, &csr, threads, &mut dx_csr,
+    );
+    parallel::dsg_vmm_rowmask_backward_parallel_into(
+        dy.data(), m, d, wt.data(), n, &packed, threads, &mut dx_packed,
+    );
+    assert_eq!(dx_csr, dx_packed, "backward parity");
+    let mut gw_csr = vec![0.0f32; n * d];
+    let mut gw_packed = vec![0.0f32; n * d];
+    parallel::dsg_vmm_rowmask_gradw_parallel_into(
+        x.data(), dy.data(), m, d, n, &csr, threads, &mut gw_csr,
+    );
+    parallel::dsg_vmm_rowmask_gradw_parallel_into(
+        x.data(), dy.data(), m, d, n, &packed, threads, &mut gw_packed,
+    );
+    assert_eq!(gw_csr, gw_packed, "gradW parity");
+
+    println!(
+        "\n=== kernels: ({m} x {d}) @ ({d} x {n}), gamma {kgamma} -> k = {k}, {threads} threads, {reps} reps ==="
+    );
+    println!("{:>12} {:>12} {:>12} {:>8}", "kernel", "csr", "packed", "ratio");
+    let mut kernel_objs = Vec::new();
+    let mut fwd_ratio = 0.0f64;
+    for (name, csr_s, packed_s) in [
+        (
+            "forward",
+            time_median(reps, || {
+                parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &csr, threads);
+            }),
+            time_median(reps, || {
+                parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &packed, threads);
+            }),
+        ),
+        (
+            "backward_dx",
+            time_median(reps, || {
+                parallel::dsg_vmm_rowmask_backward_parallel_into(
+                    dy.data(), m, d, wt.data(), n, &csr, threads, &mut dx_csr,
+                );
+            }),
+            time_median(reps, || {
+                parallel::dsg_vmm_rowmask_backward_parallel_into(
+                    dy.data(), m, d, wt.data(), n, &packed, threads, &mut dx_packed,
+                );
+            }),
+        ),
+        (
+            "gradw",
+            time_median(reps, || {
+                parallel::dsg_vmm_rowmask_gradw_parallel_into(
+                    x.data(), dy.data(), m, d, n, &csr, threads, &mut gw_csr,
+                );
+            }),
+            time_median(reps, || {
+                parallel::dsg_vmm_rowmask_gradw_parallel_into(
+                    x.data(), dy.data(), m, d, n, &packed, threads, &mut gw_packed,
+                );
+            }),
+        ),
+    ] {
+        let ratio = csr_s / packed_s.max(1e-12);
+        if name == "forward" {
+            fwd_ratio = ratio;
+        }
+        println!(
+            "{:>12} {:>10.1}us {:>10.1}us {:>7.2}x",
+            name,
+            csr_s * 1e6,
+            packed_s * 1e6,
+            ratio
+        );
+        kernel_objs.push(obj(vec![
+            ("kernel", Json::Str(name.to_string())),
+            ("csr_secs", Json::Num(csr_s)),
+            ("packed_secs", Json::Num(packed_s)),
+            ("ratio", Json::Num(ratio)),
+        ]));
+    }
+    println!(
+        "mask bytes: packed {} vs csr {} (same selection)",
+        packed.nbytes(),
+        csr.nbytes()
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("fig_structured".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "accuracy",
+            obj(vec![
+                ("model", Json::Str(spec.name.clone())),
+                ("gamma", Json::Num(gamma as f64)),
+                ("steps", Json::Num(steps as f64)),
+                ("modes", Json::Arr(mode_objs)),
+            ]),
+        ),
+        (
+            "kernels",
+            obj(vec![
+                ("m", Json::Num(m as f64)),
+                ("d", Json::Num(d as f64)),
+                ("n", Json::Num(n as f64)),
+                ("gamma", Json::Num(kgamma as f64)),
+                ("k", Json::Num(k as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("reps", Json::Num(reps as f64)),
+                ("packed_mask_bytes", Json::Num(packed.nbytes() as f64)),
+                ("csr_mask_bytes", Json::Num(csr.nbytes() as f64)),
+                ("forward_csr_over_packed", Json::Num(fwd_ratio)),
+                ("rows", Json::Arr(kernel_objs)),
+            ]),
+        ),
+    ]);
+    let out_path =
+        std::env::var("DSG_BENCH_OUT").unwrap_or_else(|_| "BENCH_structured.json".into());
+    std::fs::write(&out_path, report.to_string())?;
+    println!("\nwrote {out_path}");
+    println!("fig_structured OK (packed/CSR bit parity held; accuracy + timing reported)");
+    Ok(())
+}

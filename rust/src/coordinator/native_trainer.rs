@@ -11,6 +11,7 @@ use crate::coordinator::init::ModelState;
 use crate::coordinator::trainer::{run_training, run_training_opts, StepOut, TrainBackend, TrainOptions};
 use crate::datasets::{BatchIter, Dataset};
 use crate::metrics::{History, MemoryMeter};
+use crate::drs::SelectionMode;
 use crate::native::train::{TapeStorage, TrainEngine};
 use crate::native::{self, Mode};
 use crate::runtime::Meta;
@@ -28,6 +29,7 @@ pub struct NativeTrainer {
     threads: usize,
     tape: TapeStorage,
     kernels: SparseKernels,
+    selection: SelectionMode,
     pub steps_done: usize,
     pub history: History,
 }
@@ -60,6 +62,7 @@ impl NativeTrainer {
             threads,
             tape: TapeStorage::default(),
             kernels: SparseKernels::default(),
+            selection: SelectionMode::default(),
             steps_done: 0,
             history: History::default(),
         })
@@ -86,6 +89,15 @@ impl NativeTrainer {
     pub fn with_kernels(mut self, kernels: SparseKernels) -> NativeTrainer {
         self.kernels = kernels;
         self.engine = self.engine.with_kernels(kernels);
+        self
+    }
+
+    /// Select the DRS mask-selection mode (`--selection`): unstructured
+    /// shared-threshold CSR masks (default) vs structured constant
+    /// fan-in in the packed `FixedK` layout.
+    pub fn with_selection(mut self, selection: SelectionMode) -> NativeTrainer {
+        self.selection = selection;
+        self.engine = self.engine.with_selection(selection);
         self
     }
 
@@ -200,7 +212,8 @@ impl TrainBackend for NativeTrainer {
         self.engine = TrainEngine::new(&self.meta, &state)?
             .with_threads(self.threads)
             .with_tape(self.tape)
-            .with_kernels(self.kernels);
+            .with_kernels(self.kernels)
+            .with_selection(self.selection);
         self.state = state;
         self.steps_done = steps_done;
         Ok(())

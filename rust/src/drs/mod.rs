@@ -12,4 +12,7 @@ pub mod topk;
 pub use projection::{
     project_rows, project_rows_idx, project_weights, project_weights_idx, ternary_r,
 };
-pub use topk::{select_mask, select_rowmask, shared_threshold, RowMask, SelectionStrategy};
+pub use topk::{
+    pool_threshold, select_mask, select_rowmask, select_structured, shared_threshold,
+    structured_k, RowMask, SelectionMode, SelectionStrategy,
+};

@@ -1,8 +1,100 @@
 //! Top-k selection with inter-sample threshold sharing (Appendix B,
-//! Fig 9) and the three selection strategies of Fig 5(c).
+//! Fig 9), the three selection strategies of Fig 5(c), and the
+//! structured (constant fan-in) selection mode: exact per-row top-k
+//! with a fixed k per row, packed into the [`RowMask`] `FixedK` layout
+//! that the packed-gather kernels in `sparse::parallel` exploit.
+//!
+//! DETERMINISTIC TIE-BREAKING: structured selection ranks entries by
+//! `(value descending, index ascending)` — a strict total order, so the
+//! selected top-k SET is unique even when scores tie.  Equal scores
+//! resolve to the LOWEST indices, independent of partitioning internals,
+//! thread budget, or repetition.  That is what makes structured masks
+//! reproducible across runs (tested in
+//! `structured_tie_break_is_ascending_index` below and in
+//! `tests/pool_rowmask.rs`).
 
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
+
+/// How the DRS turns virtual activations into a selection mask.
+///
+/// * `Unstructured` — the paper's scheme: one shared threshold from
+///   sample 0, every entry `>= t` kept, variable row lengths (CSR).
+/// * `Structured` — constant fan-in (Lasby et al.): exact per-row top-k
+///   at the k matching the unstructured keep rate, every row exactly k
+///   wide, packed `FixedK` layout.  `blocked` rounds k up to the 4-lane
+///   accumulation block so packed rows align with `vmm_dot`'s grouping.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SelectionMode {
+    #[default]
+    Unstructured,
+    Structured {
+        blocked: bool,
+    },
+}
+
+impl SelectionMode {
+    /// Parse the `--selection` CLI forms:
+    /// `unstructured | structured | structured:blocked`.
+    pub fn parse(s: &str) -> Option<SelectionMode> {
+        match s {
+            "unstructured" => Some(SelectionMode::Unstructured),
+            "structured" => Some(SelectionMode::Structured { blocked: false }),
+            "structured:blocked" => Some(SelectionMode::Structured { blocked: true }),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SelectionMode::Unstructured => "unstructured",
+            SelectionMode::Structured { blocked: false } => "structured",
+            SelectionMode::Structured { blocked: true } => "structured:blocked",
+        }
+    }
+}
+
+/// The percentile core every threshold variant delegates to: the
+/// ascending-order element at `floor(gamma * len)` of `pool`, selected
+/// in O(n) via `select_nth_unstable` into a caller-owned scratch.
+/// Returns -inf (keep-all) for an empty pool or a drop count of 0, and
+/// clamps the drop index to `len - 1` so gamma close to 1 still keeps
+/// at least one entry.
+pub fn pool_threshold(pool: &[f32], gamma: f32, scratch: &mut Vec<f32>) -> f32 {
+    assert!((0.0..1.0).contains(&gamma), "gamma out of range: {gamma}");
+    if pool.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let drop = ((gamma * pool.len() as f32).floor() as usize).min(pool.len() - 1);
+    if drop == 0 {
+        return f32::NEG_INFINITY;
+    }
+    scratch.clear();
+    scratch.extend_from_slice(pool);
+    let (_, nth, _) = scratch.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
+    *nth
+}
+
+/// Constant fan-in for a structured selection at sparsity `gamma`:
+/// `width - drop` with the SAME drop rule as the unstructured threshold
+/// (`floor(gamma * width)` clamped to `width - 1`), so both modes target
+/// the same keep rate at matched gamma.  `blocked` rounds k UP to the
+/// next multiple of 4 — the `vmm_dot` accumulation block — capped at
+/// `width`.  Always >= 1 for a nonzero width; gamma = 0 gives
+/// `k == width` (keep-all).
+pub fn structured_k(width: usize, gamma: f32, blocked: bool) -> usize {
+    assert!((0.0..1.0).contains(&gamma), "gamma out of range: {gamma}");
+    if width == 0 {
+        return 0;
+    }
+    let drop = ((gamma * width as f32).floor() as usize).min(width - 1);
+    let k = width - drop;
+    if blocked {
+        ((k + 3) & !3usize).min(width)
+    } else {
+        k
+    }
+}
 
 /// Graph-selection strategy (Fig 5c).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,27 +137,16 @@ pub fn shared_threshold_scratch(virt: &Tensor, gamma: f32, scratch: &mut Vec<f32
 /// Slice form of [`shared_threshold_scratch`]: `virt` is row-major
 /// (batch, width) and only row 0 is consulted.  A zero-width layer has
 /// nothing to rank, so the threshold degrades to keep-all (-inf) instead
-/// of underflowing `width - 1`.
+/// of underflowing `width - 1`.  Thin wrapper over [`pool_threshold`]
+/// with row 0 as the pool (the conv path passes a larger pool — all of
+/// sample 0's spatial positions — through `pool_threshold` directly).
 pub fn shared_threshold_slice(
     virt: &[f32],
     width: usize,
     gamma: f32,
     scratch: &mut Vec<f32>,
 ) -> f32 {
-    assert!((0.0..1.0).contains(&gamma), "gamma out of range: {gamma}");
-    if width == 0 {
-        return f32::NEG_INFINITY;
-    }
-    let drop = ((gamma * width as f32).floor() as usize).min(width - 1);
-    if drop == 0 {
-        return f32::NEG_INFINITY;
-    }
-    scratch.clear();
-    scratch.extend_from_slice(&virt[..width]);
-    // select_nth_unstable gives the ascending-order element at `drop` in
-    // O(n) — cheaper than the full sort the HLO path uses.
-    let (_, nth, _) = scratch.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
-    *nth
+    pool_threshold(&virt[..width], gamma, scratch)
 }
 
 /// Compact selection mask: per-row selected-index lists in CSR form.
@@ -85,6 +166,24 @@ pub fn shared_threshold_slice(
 /// [`RowMask::nbytes`] — and with it the training-tape
 /// [`crate::metrics::MemoryMeter`] accounting — charges O(width), not
 /// O(rows * width), for the gamma-0 baseline.
+///
+/// LAYOUTS.  The mask is layout-aware:
+///
+/// * CSR (default): `offsets` holds rows + 1 cursor positions into
+///   `idx`, rows have variable lengths — what unstructured threshold
+///   selection produces.
+/// * `FixedK` ([`RowMask::fill_topk`]): every row holds EXACTLY
+///   `k` indices, `idx` is one contiguous rows x k matrix, `offsets` is
+///   empty — row i lives at `idx[i*k .. (i+1)*k]` with no offsets load
+///   (O(1) row addressing), and [`RowMask::nbytes`] charges exactly
+///   `4 * rows * k` (no offsets term).  The packed-gather kernels in
+///   `sparse::parallel` key off [`RowMask::packed`] to run fixed trip
+///   counts with no per-row length branches.
+///
+/// Consumers that only read `row(i)` / `selected()` / `is_full()` are
+/// layout-agnostic: a `FixedK` mask serves the same ascending per-row
+/// index slices through the same API, so the CSR kernels remain valid
+/// (and bit-identical) baselines on a packed selection.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RowMask {
     rows: usize,
@@ -92,7 +191,11 @@ pub struct RowMask {
     /// Canonical keep-all flag: `idx` holds ONE shared `0..width` row
     /// and `offsets` collapses to `[0]`.
     full: bool,
-    /// rows + 1 offsets into `idx` (just `[0]` when `full`).
+    /// Packed constant fan-in layout: every row has exactly k entries at
+    /// `idx[i*k..(i+1)*k]`, `offsets` is empty.  `None` = CSR or full.
+    fixed_k: Option<usize>,
+    /// rows + 1 offsets into `idx` (just `[0]` when `full`, empty when
+    /// `fixed_k` is set).
     offsets: Vec<usize>,
     /// Selected column indices, ascending within each row (the shared
     /// `0..width` row when `full`).
@@ -108,7 +211,14 @@ impl Default for RowMask {
 impl RowMask {
     /// An empty 0 x 0 mask (workspace placeholder; fill before use).
     pub fn new() -> RowMask {
-        RowMask { rows: 0, width: 0, full: false, offsets: vec![0], idx: Vec::new() }
+        RowMask {
+            rows: 0,
+            width: 0,
+            full: false,
+            fixed_k: None,
+            offsets: vec![0],
+            idx: Vec::new(),
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -120,13 +230,29 @@ impl RowMask {
     }
 
     /// Selected column indices of row `i` (ascending).  A full mask
-    /// serves the one shared `0..width` row for every `i`.
+    /// serves the one shared `0..width` row for every `i`; a `FixedK`
+    /// mask addresses its packed matrix directly (no offsets load).
     pub fn row(&self, i: usize) -> &[u32] {
         if self.full {
             debug_assert!(i < self.rows);
             return &self.idx;
         }
+        if let Some(k) = self.fixed_k {
+            return &self.idx[i * k..(i + 1) * k];
+        }
         &self.idx[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Constant fan-in of a `FixedK` mask (`None` for CSR / keep-all).
+    pub fn fixed_k(&self) -> Option<usize> {
+        self.fixed_k
+    }
+
+    /// Packed view of a `FixedK` mask: `(idx, k)` with row i at
+    /// `idx[i*k..(i+1)*k]` — what the packed-gather kernels consume.
+    /// `None` for CSR and canonical keep-all masks.
+    pub fn packed(&self) -> Option<(&[u32], usize)> {
+        self.fixed_k.map(|k| (&self.idx[..], k))
     }
 
     /// Total selected entries.
@@ -141,6 +267,7 @@ impl RowMask {
     /// keep-all form: keep the first row's `0..width` indices as the
     /// shared row, drop the per-row storage.
     fn canonicalize_full(&mut self) {
+        debug_assert!(self.fixed_k.is_none(), "canonicalize_full on a packed mask");
         if !self.full && self.rows * self.width > 0 && self.idx.len() == self.rows * self.width {
             self.full = true;
             self.idx.truncate(self.width); // row 0 IS 0..width when full
@@ -152,7 +279,9 @@ impl RowMask {
     /// Heap bytes this mask holds (index list + offsets) — what the
     /// training-tape [`crate::metrics::MemoryMeter`] charges for the
     /// taped selection, the measured twin of the paper's "mask
-    /// overhead" term in `memmodel`.
+    /// overhead" term in `memmodel`.  A `FixedK` mask has no offsets
+    /// array, so it is charged at its packed size: exactly
+    /// `4 * rows * k` bytes.
     pub fn nbytes(&self) -> usize {
         4 * self.idx.len() + std::mem::size_of::<usize>() * self.offsets.len()
     }
@@ -187,6 +316,7 @@ impl RowMask {
             return;
         }
         self.full = false;
+        self.fixed_k = None;
         self.rows = rows;
         self.width = width;
         self.offsets.clear();
@@ -214,6 +344,7 @@ impl RowMask {
         assert!(width <= u32::MAX as usize, "mask width {width} exceeds u32");
         self.rows = rows;
         self.width = width;
+        self.fixed_k = None;
         self.idx.clear();
         self.offsets.clear();
         if rows * width > 0 {
@@ -226,6 +357,78 @@ impl RowMask {
             self.full = false;
             self.offsets.resize(rows + 1, 0);
         }
+    }
+
+    /// Rebuild in place as a STRUCTURED (constant fan-in) selection:
+    /// exact per-row top-k over row-major virtual activations, packed
+    /// into the `FixedK` layout.  Ranking is by `(value descending,
+    /// index ascending)` — a strict total order, so equal scores resolve
+    /// deterministically to the LOWEST indices (reproducible across
+    /// runs and thread budgets); the stored row is then sorted to the
+    /// ascending-index order every kernel's accumulation contract
+    /// requires.  `k == width` canonicalizes to the implicit keep-all
+    /// form, making gamma = 0 structured selection bit-equal to the
+    /// unstructured keep-all path.  `scratch` is a caller-owned
+    /// (value, index) ranking buffer, reused across rows and layers.
+    pub fn fill_topk(
+        &mut self,
+        virt: &[f32],
+        rows: usize,
+        width: usize,
+        k: usize,
+        scratch: &mut Vec<(f32, u32)>,
+    ) {
+        debug_assert_eq!(virt.len(), rows * width);
+        assert!(width <= u32::MAX as usize, "mask width {width} exceeds u32");
+        assert!(k <= width, "fan-in {k} exceeds width {width}");
+        if k == width {
+            // keep-all: identical canonical form (and bits) to the
+            // unstructured -inf-threshold path
+            self.fill_full(rows, width);
+            return;
+        }
+        self.full = false;
+        self.fixed_k = Some(k);
+        self.rows = rows;
+        self.width = width;
+        self.offsets.clear();
+        self.idx.clear();
+        self.idx.reserve(rows * k);
+        if k == 0 {
+            return; // every row is an empty slice of the packed matrix
+        }
+        for vrow in virt.chunks_exact(width) {
+            scratch.clear();
+            scratch.extend(vrow.iter().enumerate().map(|(j, &v)| (v, j as u32)));
+            // the top-k SET under this total order is unique, so the
+            // unstable partition cannot leak nondeterminism
+            scratch.select_nth_unstable_by(k - 1, |a, b| {
+                b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1))
+            });
+            let row_start = self.idx.len();
+            self.idx.extend(scratch[..k].iter().map(|&(_, j)| j));
+            self.idx[row_start..].sort_unstable();
+        }
+    }
+
+    /// Re-express this selection in explicit CSR form (same rows, same
+    /// ascending indices, offsets materialized).  Used by parity tests
+    /// and benches to run the CSR kernels against a packed selection;
+    /// a fully-selected input canonicalizes to keep-all as usual.
+    pub fn to_csr(&self) -> RowMask {
+        let mut m = RowMask::new();
+        m.rows = self.rows;
+        m.width = self.width;
+        m.offsets.clear();
+        m.offsets.reserve(self.rows + 1);
+        m.offsets.push(0);
+        m.idx.reserve(self.selected());
+        for i in 0..self.rows {
+            m.idx.extend_from_slice(self.row(i));
+            m.offsets.push(m.idx.len());
+        }
+        m.canonicalize_full();
+        m
     }
 
     /// Build from a (rows, width) virtual-activation tensor + threshold.
@@ -274,6 +477,22 @@ impl RowMask {
 pub fn select_rowmask(virt: &Tensor, gamma: f32) -> RowMask {
     let t = shared_threshold(virt, gamma);
     RowMask::from_threshold(virt, t)
+}
+
+/// STRUCTURED DRS selection as a packed [`RowMask`]: exact per-row
+/// top-[`structured_k`] at matched gamma (constant fan-in), `FixedK`
+/// layout.  `blocked` rounds k up to the 4-lane accumulation block.
+pub fn select_structured(virt: &Tensor, gamma: f32, blocked: bool) -> RowMask {
+    let (rows, width) = (virt.shape()[0], virt.shape()[1]);
+    let mut m = RowMask::new();
+    m.fill_topk(
+        virt.data(),
+        rows,
+        width,
+        structured_k(width, gamma, blocked),
+        &mut Vec::new(),
+    );
+    m
 }
 
 /// Binary selection mask for a (batch, width) virtual-activation matrix.
@@ -531,6 +750,156 @@ mod tests {
         let dense = Tensor::full(&[5, 17], 1.0);
         assert_eq!(RowMask::from_dense(&dense), full);
         assert_eq!(full.to_dense(), dense);
+    }
+
+    #[test]
+    fn selection_mode_parse_and_label() {
+        assert_eq!(SelectionMode::parse("unstructured"), Some(SelectionMode::Unstructured));
+        assert_eq!(
+            SelectionMode::parse("structured"),
+            Some(SelectionMode::Structured { blocked: false })
+        );
+        assert_eq!(
+            SelectionMode::parse("structured:blocked"),
+            Some(SelectionMode::Structured { blocked: true })
+        );
+        assert_eq!(SelectionMode::parse("csr"), None);
+        assert_eq!(SelectionMode::default(), SelectionMode::Unstructured);
+        for s in ["unstructured", "structured", "structured:blocked"] {
+            assert_eq!(SelectionMode::parse(s).unwrap().label(), s);
+        }
+    }
+
+    #[test]
+    fn pool_threshold_consolidates_all_wrappers() {
+        // satellite: one percentile core — the tensor, scratch, and
+        // slice wrappers must all agree with a direct pool call
+        let mut rng = Pcg32::seeded(58);
+        let v = randn(&mut rng, &[3, 200]);
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        for &g in &[0.0f32, 0.4, 0.85] {
+            let want = pool_threshold(&v.data()[..200], g, &mut s1);
+            assert_eq!(want, shared_threshold(&v, g), "gamma {g}");
+            assert_eq!(want, shared_threshold_scratch(&v, g, &mut s2), "gamma {g}");
+            assert_eq!(want, shared_threshold_slice(v.data(), 200, g, &mut s2), "gamma {g}");
+        }
+        assert_eq!(pool_threshold(&[], 0.5, &mut s1), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn structured_k_tracks_unstructured_keep_rate() {
+        for width in [1usize, 3, 7, 64, 257] {
+            for &g in &[0.0f32, 0.3, 0.5, 0.9, 0.99] {
+                let drop = ((g * width as f32).floor() as usize).min(width - 1);
+                let k = structured_k(width, g, false);
+                assert_eq!(k, width - drop, "width {width} gamma {g}");
+                assert!(k >= 1);
+                let kb = structured_k(width, g, true);
+                assert!(kb >= k && kb <= width);
+                assert!(kb % 4 == 0 || kb == width, "blocked k {kb} width {width}");
+            }
+        }
+        assert_eq!(structured_k(0, 0.5, false), 0);
+        assert_eq!(structured_k(64, 0.0, true), 64); // keep-all stays exact
+    }
+
+    #[test]
+    fn structured_selection_is_exact_per_row_topk() {
+        let mut rng = Pcg32::seeded(59);
+        let v = randn(&mut rng, &[9, 57]);
+        let gamma = 0.7;
+        let rm = select_structured(&v, gamma, false);
+        let k = structured_k(57, gamma, false);
+        assert_eq!(rm.fixed_k(), Some(k));
+        for i in 0..9 {
+            let sel = rm.row(i);
+            assert_eq!(sel.len(), k, "row {i}");
+            for w in sel.windows(2) {
+                assert!(w[0] < w[1], "row {i} not ascending");
+            }
+            // every selected value >= every unselected value
+            let vrow = &v.data()[i * 57..(i + 1) * 57];
+            let min_sel = sel.iter().map(|&j| vrow[j as usize]).fold(f32::INFINITY, f32::min);
+            for j in 0..57u32 {
+                if !sel.contains(&j) {
+                    assert!(vrow[j as usize] <= min_sel, "row {i} col {j}");
+                }
+            }
+        }
+        assert_eq!(rm.selected(), 9 * k);
+        assert_eq!((rm.density() * 57.0).round() as usize, k);
+    }
+
+    #[test]
+    fn structured_tie_break_is_ascending_index() {
+        // four-way tie at the cut: the LOWEST indices must win, and
+        // repeated selection must be identical (reproducibility)
+        let v = Tensor::new(&[2, 6], vec![
+            1.0, 5.0, 1.0, 1.0, 1.0, 0.0, // row 0: tie among cols 0,2,3,4
+            2.0, 2.0, 2.0, 2.0, 2.0, 2.0, // row 1: everything ties
+        ]);
+        let mut rm = RowMask::new();
+        let mut scratch = Vec::new();
+        rm.fill_topk(v.data(), 2, 6, 3, &mut scratch);
+        assert_eq!(rm.row(0), &[0, 1, 2]);
+        assert_eq!(rm.row(1), &[0, 1, 2]);
+        let again = {
+            let mut m = RowMask::new();
+            m.fill_topk(v.data(), 2, 6, 3, &mut scratch);
+            m
+        };
+        assert_eq!(rm, again);
+    }
+
+    #[test]
+    fn structured_k_width_canonicalizes_to_keep_all() {
+        let mut rng = Pcg32::seeded(60);
+        let v = randn(&mut rng, &[5, 24]);
+        let rm = select_structured(&v, 0.0, false);
+        assert!(rm.is_full());
+        assert_eq!(rm.fixed_k(), None);
+        assert!(rm.packed().is_none());
+        // bit-equal (structurally equal) to the unstructured keep-all
+        assert_eq!(rm, select_rowmask(&v, 0.0));
+    }
+
+    #[test]
+    fn fixedk_nbytes_is_packed_size() {
+        let mut rng = Pcg32::seeded(61);
+        let v = randn(&mut rng, &[8, 40]);
+        let rm = select_structured(&v, 0.6, false);
+        let k = rm.fixed_k().unwrap();
+        // packed accounting: rows * k indices, NO offsets array
+        assert_eq!(rm.nbytes(), 4 * 8 * k);
+        let csr = rm.to_csr();
+        assert_eq!(csr.fixed_k(), None);
+        assert_eq!(csr.selected(), rm.selected());
+        for i in 0..8 {
+            assert_eq!(csr.row(i), rm.row(i), "row {i}");
+        }
+        assert_eq!(csr.to_dense(), rm.to_dense());
+        assert!(csr.nbytes() > rm.nbytes(), "CSR must pay for offsets");
+        // k = 0 rows: legal, empty rows, zero index bytes
+        let mut z = RowMask::new();
+        z.fill_topk(v.data(), 8, 40, 0, &mut Vec::new());
+        assert_eq!(z.fixed_k(), Some(0));
+        assert_eq!(z.selected(), 0);
+        assert_eq!(z.nbytes(), 0);
+        assert!(z.row(3).is_empty());
+    }
+
+    #[test]
+    fn blocked_structured_selection_aligns_rows() {
+        let mut rng = Pcg32::seeded(62);
+        let v = randn(&mut rng, &[6, 50]);
+        let rm = select_structured(&v, 0.7, true);
+        let k = rm.fixed_k().unwrap();
+        assert_eq!(k % 4, 0);
+        assert!(k >= structured_k(50, 0.7, false));
+        for i in 0..6 {
+            assert_eq!(rm.row(i).len(), k);
+        }
     }
 
     #[test]

@@ -77,6 +77,7 @@ COMMANDS:
   train    --model NAME [--engine artifact|native] [--gamma G] [--steps N]
            [--lr F] [--warmup N] [--refresh N] [--seed N] [--batch N]
            [--threads N] [--tape dense|zvc] [--kernels compound|output]
+           [--selection unstructured|structured[:blocked]]
            [--config FILE] [--csv FILE] [--checkpoint FILE]
            [--ckpt-dir DIR] [--ckpt-every N] [--keep K] [--resume auto]
            [--ckpt-retries N]
@@ -90,6 +91,10 @@ COMMANDS:
            `--kernels output` runs the output-sparse-only kernel
            baseline (bit-identical to the default compound kernels;
            for A/B perf and ops comparisons).
+           `--selection structured` selects a constant fan-in top-k
+           per row (packed FixedK masks + packed-gather kernels)
+           instead of the paper's shared-threshold CSR masks;
+           `structured:blocked` rounds k up to the 4-lane block.
            `--ckpt-dir DIR` writes crash-safe checkpoints (atomic
            tmp+fsync+rename, per-section CRC32) every --ckpt-every
            steps (default 50), keeping the last --keep (default 3, or
@@ -106,6 +111,7 @@ COMMANDS:
            [--csv FILE] [--json FILE]   grid of training runs
   serve    [--model synthetic|NAME] [--requests N] [--workers N]
            [--max-batch N] [--max-wait-ms F] [--gamma G] [--seed N]
+           [--selection unstructured|structured[:blocked]]
            [--checkpoint FILE]
            concurrent serving load test on the native engine: N worker
            threads drain a shared request queue through the parallel
@@ -200,7 +206,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             // these knobs only exist natively; the artifact batch shape
             // is baked into the HLO — ignoring them would silently run
             // something other than what was asked for
-            for flag in ["batch", "threads", "tape", "kernels"] {
+            for flag in ["batch", "threads", "tape", "kernels", "selection"] {
                 anyhow::ensure!(
                     args.get(flag).is_none(),
                     "--{flag} requires --engine native (the artifact batch/threading \
@@ -242,6 +248,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             let kernels = sparse::parallel::SparseKernels::parse(k)
                 .ok_or_else(|| anyhow::anyhow!("unknown --kernels {k:?} (compound | output)"))?;
             trainer = trainer.with_kernels(kernels);
+        }
+        if let Some(s) = args.get("selection") {
+            let sel = dsg::drs::SelectionMode::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown --selection {s:?} (unstructured | structured[:blocked])")
+            })?;
+            trainer = trainer.with_selection(sel);
         }
         let acc = trainer.train_opts(&cfg, &train, &test, &opts)?;
         // measured training-tape footprint of the final step (Fig 6 made
@@ -497,6 +509,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let max_wait_ms = args.get_f32("max-wait-ms")?.unwrap_or(5.0).max(0.0) as f64;
     let seed = args.get_usize("seed")?.unwrap_or(7) as u64;
+    let selection = match args.get("selection") {
+        Some(s) => dsg::drs::SelectionMode::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --selection {s:?} (unstructured | structured[:blocked])")
+        })?,
+        None => dsg::drs::SelectionMode::default(),
+    };
     // split the core budget across workers; the parallel engines are
     // bit-exact under any split, so predictions don't depend on this
     let intra = (cores / workers).max(1);
@@ -515,7 +533,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let data = datasets::fashion_like(requests.max(1), seed);
         let d = data.input_elems();
         let max_batch = args.get_usize("max-batch")?.unwrap_or(32);
-        let m = SynthModel::new(seed, &[d, 512, 256], 10, gamma).with_intra_threads(intra);
+        let m = SynthModel::new(seed, &[d, 512, 256], 10, gamma)
+            .with_intra_threads(intra)
+            .with_selection(selection);
         let ops = m.ops_meter();
         let images: Vec<Vec<f32>> = datasets::BatchIter::eval_batches(&data, 1)
             .into_iter()
@@ -537,7 +557,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         };
         native::project_host(&meta, &mut state)?;
-        let nm = native::NativeModel::new(&meta, &state)?;
+        let nm = native::NativeModel::new(&meta, &state)?.with_selection(selection);
         let cfg = RunConfig::preset_for_model(&model);
         let data = if cfg.dataset == "fashion" {
             datasets::fashion_like(requests.max(1), seed)

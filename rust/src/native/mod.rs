@@ -22,7 +22,7 @@ pub mod zoo;
 
 use crate::coordinator::ModelState;
 use crate::drs::projection::TernaryIndex;
-use crate::drs::topk::RowMask;
+use crate::drs::topk::{pool_threshold, structured_k, RowMask, SelectionMode};
 use crate::runtime::{HostTensor, Meta, Unit};
 use crate::sparse;
 use crate::tensor::{ops, Tensor};
@@ -119,6 +119,8 @@ pub(crate) struct LayerScratch {
     pub(crate) virt: Vec<f32>,
     /// Threshold-selection candidate pool.
     pub(crate) thr: Vec<f32>,
+    /// Per-row (score, index) pairs for structured top-k selection.
+    pub(crate) pairs: Vec<(f32, u32)>,
     /// Compact selection mask.
     pub(crate) mask: RowMask,
 }
@@ -193,6 +195,7 @@ pub struct NativeModel {
     dsg: Vec<DsgSide>,
     double_mask: bool,
     use_bn: bool,
+    selection: SelectionMode,
     ws_pool: WorkspacePool,
 }
 
@@ -272,6 +275,7 @@ impl NativeModel {
             dsg: Vec::new(),
             double_mask: meta.double_mask,
             use_bn: meta.use_bn,
+            selection: SelectionMode::default(),
             ws_pool: WorkspacePool::new(),
         };
 
@@ -344,6 +348,12 @@ impl NativeModel {
         Ok(m)
     }
 
+    /// Selection-mode override (builder style; default unstructured).
+    pub fn with_selection(mut self, selection: SelectionMode) -> NativeModel {
+        self.selection = selection;
+        self
+    }
+
     /// BN in eval mode over rows layout (rows, channels), prefolded
     /// affine applied in place.
     fn bn_rows(&self, rows: &mut [f32], n: usize, key: &str) {
@@ -372,25 +382,40 @@ impl NativeModel {
         thr_scratch: &mut Vec<f32>,
         mask: &mut RowMask,
     ) {
-        // a zero-element candidate pool (empty batch or zero-width layer)
-        // has nothing to rank: degrade to keep-all instead of
-        // underflowing `size - 1`
+        // pool_threshold degrades a zero-element candidate pool (empty
+        // batch or zero-width layer) to keep-all
         let size = sample0_rows * width;
-        let drop = if size == 0 {
-            0
-        } else {
-            ((gamma * size as f32).floor() as usize).min(size - 1)
-        };
-        let t = if drop == 0 {
-            f32::NEG_INFINITY
-        } else {
-            thr_scratch.clear();
-            thr_scratch.extend_from_slice(&virt[..size]);
-            let (_, nth, _) = thr_scratch.select_nth_unstable_by(drop, |a, b| a.total_cmp(b));
-            *nth
-        };
+        let t = pool_threshold(&virt[..size], gamma, thr_scratch);
         let rows = if width == 0 { 0 } else { virt.len() / width };
         mask.fill_from_threshold(virt, rows, width, t);
+    }
+
+    /// Selection-mode dispatch: unstructured shared-threshold CSR mask
+    /// vs structured per-row top-k in the packed `FixedK` layout.  The
+    /// structured arm ranks every row independently (no sample-0 pool),
+    /// with `k` derived from gamma so both modes keep the same fraction
+    /// at matched gamma.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn mask_select(
+        selection: SelectionMode,
+        virt: &[f32],
+        width: usize,
+        gamma: f32,
+        sample0_rows: usize,
+        thr_scratch: &mut Vec<f32>,
+        pairs_scratch: &mut Vec<(f32, u32)>,
+        mask: &mut RowMask,
+    ) {
+        match selection {
+            SelectionMode::Unstructured => {
+                Self::mask_for(virt, width, gamma, sample0_rows, thr_scratch, mask);
+            }
+            SelectionMode::Structured { blocked } => {
+                let rows = if width == 0 { 0 } else { virt.len() / width };
+                let k = structured_k(width, gamma, blocked);
+                mask.fill_topk(virt, rows, width, k, pairs_scratch);
+            }
+        }
     }
 
     /// Zero the non-selected entries of rows-layout `y` (the double-mask
@@ -479,8 +504,15 @@ impl NativeModel {
                         &scratch.xp, m, k, side.wp.data(), n, &mut scratch.virt,
                     ),
                 }
-                Self::mask_for(
-                    &scratch.virt, n, gamma, sample0_rows, &mut scratch.thr, &mut scratch.mask,
+                Self::mask_select(
+                    self.selection,
+                    &scratch.virt,
+                    n,
+                    gamma,
+                    sample0_rows,
+                    &mut scratch.thr,
+                    &mut scratch.pairs,
+                    &mut scratch.mask,
                 );
                 let drs = td.elapsed().as_secs_f64();
                 let realized = sparse::parallel::dsg_vmm_compound_parallel_into(
@@ -1023,6 +1055,46 @@ mod tests {
         NativeModel::mask_for(&virt, 2, 0.8, 0, &mut scratch, &mut m);
         assert!(m.is_full());
         assert_eq!(m.selected(), 4);
+    }
+
+    #[test]
+    fn mask_select_dispatches_by_mode() {
+        let mut rng = crate::util::Pcg32::seeded(4);
+        let virt = Tensor::new(&[6, 40], rng.normal_vec(240, 1.0));
+        let mut thr = Vec::new();
+        let mut pairs = Vec::new();
+        let mut m = RowMask::new();
+        // unstructured arm == mask_for, bit for bit
+        NativeModel::mask_select(
+            SelectionMode::Unstructured, virt.data(), 40, 0.7, 2, &mut thr, &mut pairs, &mut m,
+        );
+        let mut want = RowMask::new();
+        NativeModel::mask_for(virt.data(), 40, 0.7, 2, &mut thr, &mut want);
+        assert_eq!(m, want);
+        // structured arm: packed constant fan-in, same keep rate rule
+        NativeModel::mask_select(
+            SelectionMode::Structured { blocked: false },
+            virt.data(), 40, 0.7, 2, &mut thr, &mut pairs, &mut m,
+        );
+        let k = structured_k(40, 0.7, false);
+        assert_eq!(m.fixed_k(), Some(k));
+        for i in 0..6 {
+            assert_eq!(m.row(i).len(), k);
+        }
+        // blocked arm: k rounded up to the 4-lane contract
+        NativeModel::mask_select(
+            SelectionMode::Structured { blocked: true },
+            virt.data(), 40, 0.7, 2, &mut thr, &mut pairs, &mut m,
+        );
+        assert_eq!(m.fixed_k(), Some(structured_k(40, 0.7, true)));
+        assert_eq!(m.fixed_k().unwrap() % 4, 0);
+        // gamma 0 in structured mode keeps all — same as unstructured
+        NativeModel::mask_select(
+            SelectionMode::Structured { blocked: false },
+            virt.data(), 40, 0.0, 2, &mut thr, &mut pairs, &mut m,
+        );
+        assert!(m.is_full());
+        assert_eq!(m.selected(), 240);
     }
 
     #[test]

@@ -43,7 +43,7 @@
 
 use crate::coordinator::ModelState;
 use crate::drs::projection::TernaryIndex;
-use crate::drs::topk::RowMask;
+use crate::drs::topk::{RowMask, SelectionMode};
 use crate::metrics::{MemoryMeter, OpsCounter, TapeAlloc};
 use crate::native::{to_tensor, Carry, Mode, NativeModel};
 use crate::runtime::{Meta, Unit};
@@ -231,6 +231,8 @@ struct DrsScratch {
     xp: Vec<f32>,
     virt: Vec<f32>,
     thr: Vec<f32>,
+    /// (score, index) pairs for structured per-row top-k selection
+    pairs: Vec<(f32, u32)>,
 }
 
 /// Per-matmul-layer tape record (rows layout).
@@ -403,6 +405,7 @@ pub struct TrainEngine {
     threads: usize,
     tape: TapeStorage,
     kernels: SparseKernels,
+    selection: SelectionMode,
     scratch: Scratch,
     dec: TapeDecode,
     meter: MemoryMeter,
@@ -458,6 +461,7 @@ impl TrainEngine {
             threads: 1,
             tape: TapeStorage::default(),
             kernels: SparseKernels::default(),
+            selection: SelectionMode::default(),
             scratch: Scratch::default(),
             dec: TapeDecode::default(),
             meter: MemoryMeter::new(),
@@ -490,6 +494,21 @@ impl TrainEngine {
     pub fn with_kernels(mut self, kernels: SparseKernels) -> TrainEngine {
         self.kernels = kernels;
         self
+    }
+
+    /// Select the DRS mask-selection mode ([`SelectionMode`]):
+    /// unstructured shared-threshold CSR masks (default, the paper's
+    /// DRS) vs structured per-row constant fan-in in the packed `FixedK`
+    /// layout.  Each mode is bit-exact across thread budgets; the two
+    /// modes select different graphs, so losses differ between them.
+    pub fn with_selection(mut self, selection: SelectionMode) -> TrainEngine {
+        self.selection = selection;
+        self
+    }
+
+    /// The active selection mode.
+    pub fn selection_mode(&self) -> SelectionMode {
+        self.selection
     }
 
     /// Measured tape memory of the most recent [`TrainEngine::train_step`]
@@ -605,7 +624,16 @@ impl TrainEngine {
             parallel::project_rows_parallel_into(x, m, ridx, t, &mut drs.xp);
             drs.virt.resize(m * n, 0.0);
             parallel::matmul_parallel_into(&drs.xp, m, k, wp, n, t, &mut drs.virt);
-            NativeModel::mask_for(&drs.virt, n, gamma, sample0_rows, &mut drs.thr, &mut mask);
+            NativeModel::mask_select(
+                self.selection,
+                &drs.virt,
+                n,
+                gamma,
+                sample0_rows,
+                &mut drs.thr,
+                &mut drs.pairs,
+                &mut mask,
+            );
         } else {
             // dense baseline / gamma = 0: keep-all mask, SAME kernels —
             // this is what makes dense vs gamma-0 bit-identical

@@ -43,6 +43,7 @@ pub struct SynthModel {
     pub classes: usize,
     pub gamma: f32,
     intra_threads: usize,
+    selection: topk::SelectionMode,
     ws_pool: WorkspacePool,
     /// Realized vs dense-equivalent multiply-adds across every forward
     /// (shared with the serve report via [`SynthModel::ops_meter`]).
@@ -81,6 +82,7 @@ impl SynthModel {
             classes,
             gamma,
             intra_threads: 1,
+            selection: topk::SelectionMode::default(),
             ws_pool: WorkspacePool::new(),
             ops: Arc::new(OpsMeter::new()),
         }
@@ -89,6 +91,14 @@ impl SynthModel {
     /// Set the intra-op thread budget (predictions are invariant to it).
     pub fn with_intra_threads(mut self, threads: usize) -> SynthModel {
         self.intra_threads = threads.max(1);
+        self
+    }
+
+    /// Selection mode: unstructured shared-threshold CSR masks (default)
+    /// vs structured per-row top-k in the packed `FixedK` layout, which
+    /// routes the masked VMM through the packed-gather kernels.
+    pub fn with_selection(mut self, selection: topk::SelectionMode) -> SynthModel {
+        self.selection = selection;
         self
     }
 
@@ -152,13 +162,23 @@ impl SynthModel {
                 t,
                 &mut ws.scratch.virt,
             );
-            let thr = topk::shared_threshold_slice(
-                &ws.scratch.virt,
-                n,
-                self.gamma,
-                &mut ws.scratch.thr,
-            );
-            ws.scratch.mask.fill_from_threshold(&ws.scratch.virt, batch, n, thr);
+            match self.selection {
+                topk::SelectionMode::Unstructured => {
+                    let thr = topk::shared_threshold_slice(
+                        &ws.scratch.virt,
+                        n,
+                        self.gamma,
+                        &mut ws.scratch.thr,
+                    );
+                    ws.scratch.mask.fill_from_threshold(&ws.scratch.virt, batch, n, thr);
+                }
+                topk::SelectionMode::Structured { blocked } => {
+                    let k = topk::structured_k(n, self.gamma, blocked);
+                    ws.scratch
+                        .mask
+                        .fill_topk(&ws.scratch.virt, batch, n, k, &mut ws.scratch.pairs);
+                }
+            }
             ws.y.resize(batch * n, 0.0);
             let realized = parallel::dsg_vmm_compound_parallel_into(
                 &ws.h,
@@ -224,6 +244,36 @@ mod tests {
         let got = m.forward(&xs, 2).unwrap();
         assert_eq!(got.len(), 12);
         assert!(got.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn structured_selection_thread_invariant_and_dense_at_gamma_zero() {
+        use crate::drs::topk::SelectionMode;
+        let xs: Vec<f32> = Pcg32::seeded(21).normal_vec(6 * 64, 1.0);
+        let mk = |sel: SelectionMode, t: usize| {
+            SynthModel::new(17, &[64, 96, 80], 10, 0.7)
+                .with_selection(sel)
+                .with_intra_threads(t)
+        };
+        for blocked in [false, true] {
+            let sel = SelectionMode::Structured { blocked };
+            let base = mk(sel, 1).forward(&xs, 6).unwrap();
+            assert!(base.iter().all(|v| v.is_finite()));
+            for t in [2usize, 3, 8] {
+                assert_eq!(base, mk(sel, t).forward(&xs, 6).unwrap(), "blocked {blocked} threads {t}");
+            }
+        }
+        // gamma 0 keeps everything in both modes: same bits
+        let xs0: Vec<f32> = Pcg32::seeded(22).normal_vec(2 * 32, 1.0);
+        let a = SynthModel::new(5, &[32, 48], 6, 0.0).forward(&xs0, 2).unwrap();
+        let b = SynthModel::new(5, &[32, 48], 6, 0.0)
+            .with_selection(SelectionMode::Structured { blocked: false })
+            .forward(&xs0, 2)
+            .unwrap();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

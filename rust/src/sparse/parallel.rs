@@ -323,6 +323,121 @@ pub fn vmm_rowmask_gradw_chunk(
 }
 
 // ---------------------------------------------------------------------------
+// packed-gather kernels (FixedK structured masks)
+// ---------------------------------------------------------------------------
+//
+// A structured (constant fan-in) RowMask stores one contiguous rows x k
+// index matrix (`RowMask::packed`): no offsets array, no per-row length.
+// These variants exploit that regularity — the selection loop has a
+// FIXED trip count k, row i's indices are addressed directly at
+// idx[i*k..(i+1)*k] (one multiply instead of two offset loads), and the
+// gradW span search binary-searches a k-length row.  Each packed kernel
+// is bit-identical to its CSR twin on the same selection: it visits the
+// same ascending indices with the same vmm_dot / vmm_dot_sparse
+// accumulation grouping.  Layout moves loads and branches, never bits.
+// The parallel entry points dispatch on `RowMask::packed()`, so every
+// consumer gets the packed path for free when the selection is
+// structured.
+
+/// Packed-gather forward for a FixedK mask, rows `[lo, hi)`: the twin of
+/// [`vmm_rowmask_chunk`] with a fixed k-trip selection loop over the
+/// contiguous index matrix.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_fixedk_chunk(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    out.fill(0.0);
+    for i in lo..hi {
+        let row = &xd[i * d..(i + 1) * d];
+        let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+        for &j in &idx[i * k..(i + 1) * k] {
+            let j = j as usize;
+            orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+        }
+    }
+}
+
+/// Packed-gather backward-to-input for a FixedK mask, rows `[lo, hi)`:
+/// the twin of [`vmm_rowmask_backward_chunk`]'s selected walk.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_fixedk_backward_chunk(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    out.fill(0.0);
+    for i in lo..hi {
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let orow = &mut out[(i - lo) * d..(i - lo + 1) * d];
+        for &j in &idx[i * k..(i + 1) * k] {
+            let j = j as usize;
+            let g = dyrow[j];
+            if g == 0.0 {
+                continue; // same skip rule as the CSR twin
+            }
+            let wrow = &wd[j * d..(j + 1) * d];
+            for p in 0..d {
+                orow[p] += g * wrow[p];
+            }
+        }
+    }
+}
+
+/// Packed-gather backward-to-weights for a FixedK mask, OUTPUT NEURONS
+/// `[jlo, jhi)`: the twin of [`vmm_rowmask_gradw_chunk`]'s selected
+/// walk — the span search runs over each row's fixed-k index slice.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_fixedk_gradw_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (jhi - jlo) * d);
+    out.fill(0.0);
+    for i in 0..m {
+        let xrow = &xd[i * d..(i + 1) * d];
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let sel = &idx[i * k..(i + 1) * k];
+        let a = sel.partition_point(|&j| (j as usize) < jlo);
+        let b = sel.partition_point(|&j| (j as usize) < jhi);
+        for &j in &sel[a..b] {
+            let j = j as usize;
+            let g = dyrow[j];
+            if g == 0.0 {
+                continue;
+            }
+            let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
+            for p in 0..d {
+                orow[p] += g * xrow[p];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // compound-sparsity kernels (input AND output side)
 // ---------------------------------------------------------------------------
 //
@@ -788,6 +903,142 @@ pub fn vmm_rowmask_gradw_compound_chunk(
     realized
 }
 
+/// Compound packed-gather forward for a FixedK mask, rows `[lo, hi)`:
+/// the twin of [`vmm_rowmask_compound_chunk`]'s selected walk with a
+/// fixed k-trip selection loop.  Same per-row density dispatch, same
+/// bits on every branch; returns realized multiply-adds.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_fixedk_compound_chunk(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    out.fill(0.0);
+    if k == 0 {
+        return 0; // nothing selected anywhere — chunk stays zero
+    }
+    let cutoff = compound_cutoff() * d as f32;
+    let mut realized = 0u64;
+    with_nz_scratch(|nz| {
+        for i in lo..hi {
+            let row = &xd[i * d..(i + 1) * d];
+            let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+            gather_nonzero(row, nz);
+            let dense_row = nz.len() as f32 >= cutoff;
+            let sel = &idx[i * k..(i + 1) * k];
+            if dense_row {
+                for &j in sel {
+                    let j = j as usize;
+                    orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+                }
+            } else {
+                for &j in sel {
+                    let j = j as usize;
+                    orow[j] = vmm_dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
+                }
+            }
+            let per = if dense_row { d } else { nz.len() };
+            realized += per as u64 * k as u64;
+        }
+    });
+    realized
+}
+
+/// Compound packed-gather backward-to-input for a FixedK mask, rows
+/// `[lo, hi)`: the twin of [`vmm_rowmask_backward_compound_chunk`]'s
+/// selected walk.  Returns realized multiply-adds.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_fixedk_backward_compound_chunk(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    out.fill(0.0);
+    let mut realized = 0u64;
+    for i in lo..hi {
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let orow = &mut out[(i - lo) * d..(i - lo + 1) * d];
+        for &j in &idx[i * k..(i + 1) * k] {
+            let j = j as usize;
+            let g = dyrow[j];
+            if g == 0.0 {
+                continue;
+            }
+            axpy_dense(orow, g, &wd[j * d..(j + 1) * d]);
+            realized += d as u64;
+        }
+    }
+    realized
+}
+
+/// Compound packed-gather backward-to-weights for a FixedK mask, OUTPUT
+/// NEURONS `[jlo, jhi)`: the twin of
+/// [`vmm_rowmask_gradw_compound_chunk`]'s selected walk, reading live
+/// input coordinates through the shared [`NzIndex`].  Returns realized
+/// multiply-adds.
+#[allow(clippy::too_many_arguments)]
+pub fn vmm_fixedk_gradw_compound_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    nzx: &NzIndex,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(out.len(), (jhi - jlo) * d);
+    debug_assert_eq!(nzx.rows(), m, "nz index rows");
+    out.fill(0.0);
+    let cutoff = compound_cutoff() * d as f32;
+    let mut realized = 0u64;
+    for i in 0..m {
+        let xrow = &xd[i * d..(i + 1) * d];
+        let dyrow = &dyd[i * n..(i + 1) * n];
+        let nz = nzx.row(i);
+        if nz.is_empty() {
+            continue;
+        }
+        let dense_row = nz.len() as f32 >= cutoff;
+        let per = if dense_row { d } else { nz.len() } as u64;
+        let sel = &idx[i * k..(i + 1) * k];
+        let a = sel.partition_point(|&j| (j as usize) < jlo);
+        let b = sel.partition_point(|&j| (j as usize) < jhi);
+        for &j in &sel[a..b] {
+            let j = j as usize;
+            let g = dyrow[j];
+            if g == 0.0 {
+                continue;
+            }
+            let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
+            if dense_row {
+                axpy_dense(orow, g, xrow);
+            } else {
+                axpy_sparse(orow, g, xrow, nz);
+            }
+            realized += per;
+        }
+    }
+    realized
+}
+
 /// Ternary projection of rows `[lo, hi)` into the chunk slice.
 pub fn project_chunk(
     ridx: &crate::drs::projection::TernaryIndex,
@@ -862,6 +1113,15 @@ pub fn dsg_vmm_rowmask_parallel_into(
     debug_assert_eq!(wd.len(), n * d);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
+    // layout dispatch: a FixedK mask takes the packed-gather kernel
+    // (fixed trip counts, no offsets loads) — bit-identical to the CSR
+    // walk on the same selection
+    if let Some((idx, k)) = mask.packed() {
+        for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
+            vmm_fixedk_chunk(xd, wd, d, n, idx, k, lo, hi, chunk)
+        });
+        return;
+    }
     for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
         vmm_rowmask_chunk(xd, wd, d, n, mask, lo, hi, chunk)
     });
@@ -884,6 +1144,12 @@ pub fn dsg_vmm_rowmask_backward_parallel_into(
     debug_assert_eq!(wd.len(), n * d);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
+    if let Some((idx, k)) = mask.packed() {
+        for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
+            vmm_fixedk_backward_chunk(dyd, wd, d, n, idx, k, lo, hi, chunk)
+        });
+        return;
+    }
     for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
         vmm_rowmask_backward_chunk(dyd, wd, d, n, mask, lo, hi, chunk)
     });
@@ -906,6 +1172,12 @@ pub fn dsg_vmm_rowmask_gradw_parallel_into(
     debug_assert_eq!(dyd.len(), m * n);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
+    if let Some((idx, k)) = mask.packed() {
+        for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
+            vmm_fixedk_gradw_chunk(xd, dyd, m, d, n, idx, k, jlo, jhi, chunk)
+        });
+        return;
+    }
     for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
         vmm_rowmask_gradw_chunk(xd, dyd, m, d, n, mask, jlo, jhi, chunk)
     });
@@ -938,12 +1210,18 @@ pub fn dsg_vmm_compound_parallel_into(
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     if in_density >= compound_cutoff() {
-        for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
-            vmm_rowmask_chunk(xd, wd, d, n, mask, lo, hi, chunk)
-        });
+        // dense-enough input: output-sparse only, packed when FixedK
+        dsg_vmm_rowmask_parallel_into(xd, m, d, wd, n, mask, threads, out);
         return d as u64 * mask.selected() as u64;
     }
     let realized = AtomicU64::new(0);
+    if let Some((idx, k)) = mask.packed() {
+        for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
+            let r = vmm_fixedk_compound_chunk(xd, wd, d, n, idx, k, lo, hi, chunk);
+            realized.fetch_add(r, Ordering::Relaxed);
+        });
+        return realized.into_inner();
+    }
     for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
         let r = vmm_rowmask_compound_chunk(xd, wd, d, n, mask, lo, hi, chunk);
         realized.fetch_add(r, Ordering::Relaxed);
@@ -971,6 +1249,13 @@ pub fn dsg_vmm_rowmask_backward_compound_parallel_into(
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     let realized = AtomicU64::new(0);
+    if let Some((idx, k)) = mask.packed() {
+        for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
+            let r = vmm_fixedk_backward_compound_chunk(dyd, wd, d, n, idx, k, lo, hi, chunk);
+            realized.fetch_add(r, Ordering::Relaxed);
+        });
+        return realized.into_inner();
+    }
     for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
         let r = vmm_rowmask_backward_compound_chunk(dyd, wd, d, n, mask, lo, hi, chunk);
         realized.fetch_add(r, Ordering::Relaxed);
@@ -1000,6 +1285,13 @@ pub fn dsg_vmm_rowmask_gradw_compound_parallel_into(
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     let realized = AtomicU64::new(0);
+    if let Some((idx, k)) = mask.packed() {
+        for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
+            let r = vmm_fixedk_gradw_compound_chunk(xd, dyd, m, d, n, idx, k, nzx, jlo, jhi, chunk);
+            realized.fetch_add(r, Ordering::Relaxed);
+        });
+        return realized.into_inner();
+    }
     for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
         let r = vmm_rowmask_gradw_compound_chunk(xd, dyd, m, d, n, mask, nzx, jlo, jhi, chunk);
         realized.fetch_add(r, Ordering::Relaxed);
@@ -1487,6 +1779,146 @@ mod tests {
         // a dense hint routes to the output-sparse kernel: exact cost
         let (_, dense_hint) = dsg_vmm_compound_parallel_with(&x, &wt, &rm, 1.0, 1);
         assert_eq!(dense_hint, out_sparse_ops);
+    }
+
+    #[test]
+    fn packed_gather_kernels_bit_identical_to_csr_twins() {
+        // the SAME structured selection, expressed packed (FixedK) and
+        // as explicit CSR: every kernel family — forward, backward-dX,
+        // gradW, and their compound twins — must agree bit-for-bit at
+        // every thread budget, and the compound realized counts must
+        // match (layout moves loads, never bits or accounting)
+        let mut rng = Pcg32::seeded(87);
+        let (m, d, n) = (17, 45, 23); // d, n not multiples of 4: tail paths
+        let x = sparse_input(&mut rng, m, d);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        let mut dyv = rng.normal_vec(m * n, 1.0);
+        for (i, g) in dyv.iter_mut().enumerate() {
+            if i % 4 == 0 {
+                *g = 0.0;
+            }
+        }
+        let dy = Tensor::new(&[m, n], dyv);
+        let mut nzx = NzIndex::new();
+        nzx.fill_from_rows(x.data(), m, d);
+        let virt = randn(&mut rng, &[m, n]);
+        for blocked in [false, true] {
+            let packed = crate::drs::topk::select_structured(&virt, 0.6, blocked);
+            assert!(packed.fixed_k().is_some(), "blocked {blocked}");
+            let csr = packed.to_csr();
+            assert_eq!(packed.selected(), csr.selected());
+            let y_ref = dsg_vmm_rowmask_parallel_with(&x, &wt, &csr, 1);
+            let mut dx_ref = vec![0.0f32; m * d];
+            let mut dwt_ref = vec![0.0f32; n * d];
+            dsg_vmm_rowmask_backward_parallel_into(
+                dy.data(), m, d, wt.data(), n, &csr, 1, &mut dx_ref,
+            );
+            dsg_vmm_rowmask_gradw_parallel_into(
+                x.data(), dy.data(), m, d, n, &csr, 1, &mut dwt_ref,
+            );
+            for t in [1usize, 2, 3, 8] {
+                assert_eq!(
+                    y_ref,
+                    dsg_vmm_rowmask_parallel_with(&x, &wt, &packed, t),
+                    "forward blocked {blocked} threads {t}"
+                );
+                let mut dx = vec![f32::NAN; m * d];
+                let mut dwt = vec![f32::NAN; n * d];
+                dsg_vmm_rowmask_backward_parallel_into(
+                    dy.data(), m, d, wt.data(), n, &packed, t, &mut dx,
+                );
+                dsg_vmm_rowmask_gradw_parallel_into(
+                    x.data(), dy.data(), m, d, n, &packed, t, &mut dwt,
+                );
+                assert_eq!(
+                    dx.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dx_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "dx blocked {blocked} threads {t}"
+                );
+                assert_eq!(
+                    dwt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dwt_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "dwt blocked {blocked} threads {t}"
+                );
+                for hint in [0.0f32, 0.3, 1.0] {
+                    let (yc, rc) = dsg_vmm_compound_parallel_with(&x, &wt, &csr, hint, t);
+                    let (yp, rp) = dsg_vmm_compound_parallel_with(&x, &wt, &packed, hint, t);
+                    assert_eq!(y_ref, yc, "compound csr hint {hint} threads {t}");
+                    assert_eq!(y_ref, yp, "compound packed hint {hint} threads {t}");
+                    assert_eq!(rc, rp, "realized hint {hint} threads {t}");
+                }
+                let mut dxc = vec![f32::NAN; m * d];
+                let r1c = dsg_vmm_rowmask_backward_compound_parallel_into(
+                    dy.data(), m, d, wt.data(), n, &csr, t, &mut dxc,
+                );
+                let mut dxp = vec![f32::NAN; m * d];
+                let r1p = dsg_vmm_rowmask_backward_compound_parallel_into(
+                    dy.data(), m, d, wt.data(), n, &packed, t, &mut dxp,
+                );
+                assert_eq!(r1c, r1p, "compound dx realized, threads {t}");
+                assert_eq!(
+                    dxp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dx_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "compound dx blocked {blocked} threads {t}"
+                );
+                assert_eq!(
+                    dxc.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dx_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                );
+                let mut dwc = vec![f32::NAN; n * d];
+                let r2c = dsg_vmm_rowmask_gradw_compound_parallel_into(
+                    x.data(), dy.data(), m, d, n, &csr, &nzx, t, &mut dwc,
+                );
+                let mut dwp = vec![f32::NAN; n * d];
+                let r2p = dsg_vmm_rowmask_gradw_compound_parallel_into(
+                    x.data(), dy.data(), m, d, n, &packed, &nzx, t, &mut dwp,
+                );
+                assert_eq!(r2c, r2p, "compound dwt realized, threads {t}");
+                assert_eq!(
+                    dwp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dwt_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "compound dwt blocked {blocked} threads {t}"
+                );
+                assert_eq!(
+                    dwc.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    dwt_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_kernels_handle_k_zero() {
+        // a FixedK mask with k = 0 (every row empty) must produce all
+        // zeros through every packed entry, at any budget
+        let mut rng = Pcg32::seeded(88);
+        let (m, d, n) = (5, 24, 7);
+        let x = sparse_input(&mut rng, m, d);
+        let w = randn(&mut rng, &[d, n]);
+        let wt = ops::transpose(&w);
+        let dy = randn(&mut rng, &[m, n]);
+        let mut rm = RowMask::new();
+        rm.fill_topk(&vec![0.0f32; m * n], m, n, 0, &mut Vec::new());
+        assert_eq!(rm.fixed_k(), Some(0));
+        let mut nzx = NzIndex::new();
+        nzx.fill_from_rows(x.data(), m, d);
+        for t in [1usize, 3] {
+            let y = dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t);
+            assert!(y.data().iter().all(|&v| v == 0.0), "forward threads {t}");
+            let (yc, r) = dsg_vmm_compound_parallel_with(&x, &wt, &rm, 0.0, t);
+            assert_eq!(y, yc);
+            assert_eq!(r, 0);
+            let mut dx = vec![f32::NAN; m * d];
+            dsg_vmm_rowmask_backward_parallel_into(dy.data(), m, d, wt.data(), n, &rm, t, &mut dx);
+            assert!(dx.iter().all(|&v| v == 0.0), "dx threads {t}");
+            let mut dwt = vec![f32::NAN; n * d];
+            let r2 = dsg_vmm_rowmask_gradw_compound_parallel_into(
+                x.data(), dy.data(), m, d, n, &rm, &nzx, t, &mut dwt,
+            );
+            assert!(dwt.iter().all(|&v| v == 0.0), "dwt threads {t}");
+            assert_eq!(r2, 0);
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use dsg::config::{GammaSchedule, RunConfig};
 use dsg::coordinator::{checkpoint, CheckpointDir, ModelState, NativeTrainer, TrainOptions};
+use dsg::drs::SelectionMode;
 use dsg::datasets;
 use dsg::util::faults::{self, FaultKind, FaultPlan};
 use dsg::native::train::{TapeStorage, TrainEngine};
@@ -387,6 +388,91 @@ fn tape_meter_matches_zvc_accounting() {
     td.step(&x, &y, 0.5, 0.05).unwrap();
     assert_eq!(td.tape_memory().peak(), mem.dense_peak());
     assert_eq!(td.tape_memory().reduction(), 1.0);
+}
+
+#[test]
+fn structured_training_bit_identical_across_threads() {
+    // the structured (constant fan-in) mode carries the same crown
+    // jewel as unstructured: any intra-op budget, same bits — through
+    // every unit kind, forward AND backward, tape replay included
+    for blocked in [false, true] {
+        let sel = SelectionMode::Structured { blocked };
+        let meta = zoo::synth_meta(&tiny_conv_spec()).unwrap();
+        let mut base = NativeTrainer::new(meta.clone(), 9)
+            .unwrap()
+            .with_threads(1)
+            .with_selection(sel);
+        let mut losses = Vec::new();
+        for step in 0u64..3 {
+            let (x, y) = batch_for(&meta, 60 + step);
+            losses.push(base.step(&x, &y, 0.5, 0.05).unwrap().loss.to_bits());
+        }
+        for t in [2usize, 3, 8] {
+            let mut tr = NativeTrainer::new(meta.clone(), 9)
+                .unwrap()
+                .with_threads(t)
+                .with_selection(sel);
+            for (step, &want) in losses.iter().enumerate() {
+                let (x, y) = batch_for(&meta, 60 + step as u64);
+                let got = tr.step(&x, &y, 0.5, 0.05).unwrap().loss.to_bits();
+                assert_eq!(got, want, "blocked {blocked} threads {t} step {step}");
+            }
+            assert_state_bits_eq(&base.state, &tr.state, "structured threads");
+        }
+    }
+}
+
+#[test]
+fn structured_masks_metered_at_packed_size() {
+    // the fig6 meter cross-check for FixedK: a packed mask is charged
+    // EXACTLY 4 bytes per stored index (rows*k u32s, no offsets array),
+    // while a non-full CSR mask always carries the offsets term on top
+    let meta = zoo::synth_meta(&tiny_conv_spec()).unwrap();
+    let (x, y) = batch_for(&meta, 37);
+    let mut st = NativeTrainer::new(meta.clone(), 7)
+        .unwrap()
+        .with_selection(SelectionMode::Structured { blocked: false });
+    st.step(&x, &y, 0.5, 0.05).unwrap();
+    let mut masks = 0usize;
+    for a in st.tape_memory().allocs().iter().filter(|a| a.part == "mask") {
+        masks += 1;
+        assert_eq!(
+            a.stored_bytes,
+            4 * a.nnz as u64,
+            "unit {}: FixedK mask not metered at packed size",
+            a.unit
+        );
+    }
+    assert!(masks >= 4, "only {masks} mask records on the tape");
+    let mut un = NativeTrainer::new(meta, 7).unwrap();
+    un.step(&x, &y, 0.5, 0.05).unwrap();
+    for a in un.tape_memory().allocs().iter().filter(|a| a.part == "mask") {
+        if a.nnz < a.elems {
+            // non-full CSR: 4*nnz indices PLUS the offsets array
+            assert!(
+                a.stored_bytes > 4 * a.nnz as u64,
+                "unit {}: CSR mask missing its offsets accounting",
+                a.unit
+            );
+        }
+    }
+}
+
+#[test]
+fn tiny_gamma_structured_equals_unstructured_bitwise() {
+    // drop = floor(gamma*pool) = 0 on every layer: both modes
+    // canonicalize to the implicit keep-all mask, so the two selection
+    // modes must agree bit for bit — the k = width contract end-to-end
+    let meta = zoo::synth_meta(&smoke_spec()).unwrap();
+    let (x, y) = batch_for(&meta, 23);
+    let mut un = NativeTrainer::new(meta.clone(), 5).unwrap();
+    let mut st = NativeTrainer::new(meta, 5)
+        .unwrap()
+        .with_selection(SelectionMode::Structured { blocked: true });
+    let a = un.step(&x, &y, 0.004, 0.05).unwrap();
+    let b = st.step(&x, &y, 0.004, 0.05).unwrap();
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    assert_state_bits_eq(&un.state, &st.state, "tiny-gamma modes");
 }
 
 #[test]

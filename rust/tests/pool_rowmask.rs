@@ -145,6 +145,105 @@ fn compound_engine_bit_exact_vs_references_across_budgets() {
 }
 
 #[test]
+fn structured_masks_bit_exact_across_budgets_and_vs_csr() {
+    // the structured (FixedK) twin of the budget-invariance claims: the
+    // same selection expressed packed and as CSR must agree with the
+    // dense-mask reference and with itself at every budget, for the
+    // plain and the blocked fan-in, through forward AND compound
+    let mut rng = Pcg32::seeded(910);
+    let mut xv = rng.normal_vec(33 * 96, 1.0);
+    for (i, v) in xv.iter_mut().enumerate() {
+        if i % 4 == 0 {
+            *v = 0.0;
+        } else if i % 9 == 0 {
+            *v = -0.0;
+        }
+    }
+    let x = Tensor::new(&[33, 96], xv);
+    let w = randn(&mut rng, &[96, 41]);
+    let wt = ops::transpose(&w);
+    let virt = randn(&mut rng, &[33, 41]);
+    for blocked in [false, true] {
+        let rm = topk::select_structured(&virt, 0.7, blocked);
+        let k = rm.fixed_k().expect("structured selection must be packed");
+        assert_eq!(k, topk::structured_k(41, 0.7, blocked));
+        if blocked {
+            assert_eq!(k % 4, 0, "blocked k not 4-aligned");
+        }
+        for i in 0..33 {
+            assert_eq!(rm.row(i).len(), k, "row {i} fan-in");
+            assert!(rm.row(i).windows(2).all(|p| p[0] < p[1]), "row {i} not ascending");
+        }
+        let csr = rm.to_csr();
+        assert!(csr.fixed_k().is_none());
+        let want = sparse::dsg_vmm(&x, &wt, &rm.to_dense());
+        assert_eq!(want, sparse::dsg_vmm_rowmask(&x, &wt, &rm), "serial CSR kernel on packed");
+        for t in BUDGETS {
+            assert_eq!(
+                want,
+                parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &rm, t),
+                "packed blocked {blocked} @ {t}"
+            );
+            assert_eq!(
+                want,
+                parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &csr, t),
+                "csr blocked {blocked} @ {t}"
+            );
+            for hint in [0.0f32, 0.5, 1.0] {
+                let (got, _) = parallel::dsg_vmm_compound_parallel_with(&x, &wt, &rm, hint, t);
+                assert_eq!(want, got, "compound blocked {blocked} hint {hint} @ {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn structured_k_equals_width_is_keep_all_and_k_zero_is_empty() {
+    let mut rng = Pcg32::seeded(911);
+    let x = randn(&mut rng, &[9, 40]);
+    let w = randn(&mut rng, &[40, 24]);
+    let wt = ops::transpose(&w);
+    let virt = randn(&mut rng, &[9, 24]);
+    // gamma 0 => k = width: canonicalizes to the SAME implicit keep-all
+    // mask as the unstructured path, so dense / keep-all / structured
+    // all agree to the bit
+    let st = topk::select_structured(&virt, 0.0, false);
+    assert!(st.is_full());
+    assert_eq!(st, topk::select_rowmask(&virt, 0.0));
+    let want = sparse::vmm(&x, &wt);
+    for t in BUDGETS {
+        assert_eq!(want, parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &st, t), "@ {t}");
+    }
+    // k = 0: every row empty, every output row zero, zero realized ops
+    let mut empty = RowMask::new();
+    empty.fill_topk(virt.data(), 9, 24, 0, &mut Vec::new());
+    assert_eq!(empty.fixed_k(), Some(0));
+    assert_eq!(empty.nbytes(), 0);
+    for t in BUDGETS {
+        let y = parallel::dsg_vmm_rowmask_parallel_with(&x, &wt, &empty, t);
+        assert!(y.data().iter().all(|&v| v == 0.0), "@ {t}");
+        let (yc, realized) = parallel::dsg_vmm_compound_parallel_with(&x, &wt, &empty, 0.3, t);
+        assert_eq!(y, yc);
+        assert_eq!(realized, 0);
+    }
+}
+
+#[test]
+fn packed_nbytes_is_rows_times_k() {
+    let mut rng = Pcg32::seeded(912);
+    let virt = randn(&mut rng, &[12, 50]);
+    let rm = topk::select_structured(&virt, 0.6, false);
+    let k = rm.fixed_k().unwrap();
+    assert_eq!(rm.nbytes(), 4 * 12 * k, "FixedK charges indices only");
+    let csr = rm.to_csr();
+    assert!(
+        csr.nbytes() > rm.nbytes(),
+        "CSR of the same selection must carry the offsets array on top"
+    );
+    assert_eq!(csr.selected(), rm.selected());
+}
+
+#[test]
 fn pool_survives_repeated_forwards_and_stays_deterministic() {
     // many forwards through the same model = many pool dispatches; the
     // persistent pool and the workspace pool must give identical bits
