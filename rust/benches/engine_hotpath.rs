@@ -15,9 +15,16 @@
 //!   Realized multiply-adds are counted by the kernels themselves and
 //!   asserted: compound <= output-sparse, and the gamma-0.5 reduction
 //!   must clear 1.5x (the Fig 8/9 (1-gamma)^2 claim, measured).
+//! * **scalar vs SIMD** — the scalar kernel table vs the
+//!   runtime-detected one (`--kernels simd`) on the masked forward at
+//!   threads = 1: GFLOP/s-per-core both ways plus the speedup, ULP-gated
+//!   against the scalar contract before timing.  On AVX2 hardware in
+//!   full (non-smoke) mode the total speedup must clear 1x.
 //!
 //! Every variant is asserted bit-identical before timing — the rebuild
-//! must change WHERE time goes, never a single output bit.
+//! must change WHERE time goes, never a single output bit.  (The SIMD
+//! section is the one deliberate exception: its forward dots are gated
+//! by the documented ULP bound instead.)
 //!
 //! Writes machine-readable `BENCH_hotpath.json` (override the path with
 //! `DSG_BENCH_OUT`) — the perf trajectory artifact CI uploads.
@@ -412,6 +419,148 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(total_ops_x >= 1.5, "total realized-ops reduction {total_ops_x:.2}x < 1.5x");
 
+    // --- SIMD section: the scalar table vs the runtime-detected table
+    // (`--kernels simd`) on the vmm_dot-dominated masked forward, at
+    // threads = 1 so GFLOP/s is per-core by construction.  Outputs are
+    // ULP-gated against the scalar contract (sampled rows, exact bound)
+    // before anything is timed. ---
+    let simd_isa = parallel::active_kernels().isa;
+    println!("\nsimd kernels (detected: {}) @ threads 1, gamma {g_both}:", simd_isa.label());
+    println!(
+        "{:<8} {:>11} {:>11} {:>9} {:>9} {:>8}",
+        "layer", "vmm-scalar", "vmm-simd", "sc-GF/s", "simd-GF/s", "speedup"
+    );
+    let mut simd_objs: Vec<Json> = Vec::new();
+    let (mut simd_scalar_total, mut simd_simd_total) = (0.0f64, 0.0f64);
+    for (si, s) in shapes.iter().enumerate() {
+        let mut rng = Pcg32::seeded(900 + si as u64);
+        let (m, d, n) = (s.m, s.d, s.n);
+        let x = Tensor::new(&[m, d], rng.normal_vec(m * d, 1.0));
+        let w = Tensor::new(&[d, n], rng.normal_vec(d * n, (2.0 / d as f32).sqrt()));
+        let wt = ops::transpose(&w);
+        let virt = Tensor::new(&[m, n], rng.normal_vec(m * n, 1.0));
+        let rowmask = topk::select_rowmask(&virt, g_both);
+        let madds = d as u64 * rowmask.selected() as u64;
+
+        // --- ULP gate: per-element divergence within the documented
+        // bound on a row sample (the full sweep is O(m*n*d) — one extra
+        // unmeasured forward per sampled row) ---
+        let mut scalar_out = vec![0.0f32; m * n];
+        let mut simd_out = vec![0.0f32; m * n];
+        parallel::dsg_vmm_rowmask_parallel_into_kt(
+            parallel::scalar_kernels(),
+            x.data(),
+            m,
+            d,
+            wt.data(),
+            n,
+            &rowmask,
+            1,
+            &mut scalar_out,
+        );
+        parallel::dsg_vmm_rowmask_parallel_into_kt(
+            parallel::active_kernels(),
+            x.data(),
+            m,
+            d,
+            wt.data(),
+            n,
+            &rowmask,
+            1,
+            &mut simd_out,
+        );
+        for i in 0..m.min(16) {
+            for &j in rowmask.row(i) {
+                let (a, b) = (scalar_out[i * n + j as usize], simd_out[i * n + j as usize]);
+                let mag: f64 = (0..d)
+                    .map(|q| {
+                        (x.data()[i * d + q] as f64 * wt.data()[j as usize * d + q] as f64).abs()
+                    })
+                    .sum();
+                let bound = 4.0 * d as f64 * f32::EPSILON as f64 * mag + f32::MIN_POSITIVE as f64;
+                let err = (a as f64 - b as f64).abs();
+                assert!(
+                    err <= bound,
+                    "{}: simd dot ({i},{j}) err {err} > ULP bound {bound}",
+                    s.name
+                );
+            }
+        }
+
+        // --- timings (threads = 1: per-core numbers) ---
+        let scalar_secs = time_median(reps, || {
+            parallel::dsg_vmm_rowmask_parallel_into_kt(
+                parallel::scalar_kernels(),
+                x.data(),
+                m,
+                d,
+                wt.data(),
+                n,
+                &rowmask,
+                1,
+                &mut scalar_out,
+            );
+        });
+        let simd_secs = time_median(reps, || {
+            parallel::dsg_vmm_rowmask_parallel_into_kt(
+                parallel::active_kernels(),
+                x.data(),
+                m,
+                d,
+                wt.data(),
+                n,
+                &rowmask,
+                1,
+                &mut simd_out,
+            );
+        });
+        simd_scalar_total += scalar_secs;
+        simd_simd_total += simd_secs;
+        // 2 flops per multiply-add, one core: GFLOP/s-per-core
+        let scalar_gflops = 2.0 * madds as f64 / scalar_secs / 1e9;
+        let simd_gflops = 2.0 * madds as f64 / simd_secs / 1e9;
+        println!(
+            "{:<8} {:>11} {:>11} {:>9.2} {:>9.2} {:>7.2}x",
+            s.name,
+            fmt_secs(scalar_secs),
+            fmt_secs(simd_secs),
+            scalar_gflops,
+            simd_gflops,
+            scalar_secs / simd_secs,
+        );
+        simd_objs.push(obj(vec![
+            ("name", Json::Str(s.name.to_string())),
+            ("m", Json::Num(m as f64)),
+            ("d", Json::Num(d as f64)),
+            ("n", Json::Num(n as f64)),
+            ("gamma", Json::Num(g_both as f64)),
+            ("density", Json::Num(rowmask.density())),
+            ("madds", Json::Num(madds as f64)),
+            ("vmm_scalar_secs", Json::Num(scalar_secs)),
+            ("vmm_simd_secs", Json::Num(simd_secs)),
+            ("scalar_gflops_per_core", Json::Num(scalar_gflops)),
+            ("simd_gflops_per_core", Json::Num(simd_gflops)),
+            ("simd_speedup", Json::Num(scalar_secs / simd_secs)),
+            ("ulp_checked", Json::Bool(true)),
+        ]));
+    }
+    let simd_total_speedup = simd_scalar_total / simd_simd_total.max(1e-12);
+    println!(
+        "simd vmm_dot totals ({}): scalar {} vs simd {} -> {:.2}x",
+        simd_isa.label(),
+        fmt_secs(simd_scalar_total),
+        fmt_secs(simd_simd_total),
+        simd_total_speedup
+    );
+    // the acceptance gate: a real vector unit must beat scalar on the
+    // Fig 8a shapes (smoke shapes are too tiny to amortize and exempt)
+    if simd_isa == dsg::sparse::simd::Isa::Avx2Fma && !smoke {
+        assert!(
+            simd_total_speedup > 1.0,
+            "simd kernels slower than scalar ({simd_total_speedup:.2}x) on AVX2 hardware"
+        );
+    }
+
     // --- dispatch-overhead probe: many tiny dispatches, where the
     // per-call thread spawn dominates ---
     let (dm, dd, dn) = if smoke { (24, 64, 16) } else { (64, 128, 64) };
@@ -450,6 +599,16 @@ fn main() -> anyhow::Result<()> {
         ("reps", Json::Num(reps as f64)),
         ("layers", Json::Arr(layer_objs)),
         ("compound_gamma05", Json::Arr(compound_objs)),
+        ("simd_isa", Json::Str(simd_isa.label().to_string())),
+        ("simd", Json::Arr(simd_objs)),
+        (
+            "simd_totals",
+            obj(vec![
+                ("vmm_scalar_secs", Json::Num(simd_scalar_total)),
+                ("vmm_simd_secs", Json::Num(simd_simd_total)),
+                ("simd_speedup", Json::Num(simd_total_speedup)),
+            ]),
+        ),
         (
             "compound_totals",
             obj(vec![

@@ -84,8 +84,11 @@ impl NativeTrainer {
         self
     }
 
-    /// Select the sparse kernel family (compound vs output-sparse-only;
-    /// bit-identical — a baseline/parity knob, not a results knob).
+    /// Select the sparse kernel family.  Compound (default) and
+    /// output-sparse-only are bit-identical — baseline/parity knobs.
+    /// `simd` is the ONE relaxed mode: forward dot products carry a
+    /// bounded-ULP reassociation tolerance (backward and the tape stay
+    /// bit-exact); see `docs/ARCHITECTURE.md`.
     pub fn with_kernels(mut self, kernels: SparseKernels) -> NativeTrainer {
         self.kernels = kernels;
         self.engine = self.engine.with_kernels(kernels);

@@ -76,7 +76,7 @@ USAGE: dsg <command> [--flags]
 COMMANDS:
   train    --model NAME [--engine artifact|native] [--gamma G] [--steps N]
            [--lr F] [--warmup N] [--refresh N] [--seed N] [--batch N]
-           [--threads N] [--tape dense|zvc] [--kernels compound|output]
+           [--threads N] [--tape dense|zvc] [--kernels compound|output|simd]
            [--selection unstructured|structured[:blocked]]
            [--config FILE] [--csv FILE] [--checkpoint FILE]
            [--ckpt-dir DIR] [--ckpt-every N] [--keep K] [--resume auto]
@@ -90,7 +90,11 @@ COMMANDS:
            tape bytes are reported after the run).
            `--kernels output` runs the output-sparse-only kernel
            baseline (bit-identical to the default compound kernels;
-           for A/B perf and ops comparisons).
+           for A/B perf and ops comparisons).  `--kernels simd` runs
+           the runtime-detected SIMD kernels (AVX2+FMA when the CPU
+           has them, scalar otherwise) — the one mode whose forward
+           dots are ULP-relaxed rather than bit-exact; DSG_SIMD=off
+           forces the scalar table.
            `--selection structured` selects a constant fan-in top-k
            per row (packed FixedK masks + packed-gather kernels)
            instead of the paper's shared-threshold CSR masks;
@@ -112,7 +116,7 @@ COMMANDS:
   serve    [--model synthetic|NAME] [--requests N] [--workers N]
            [--max-batch N] [--max-wait-ms F] [--gamma G] [--seed N]
            [--selection unstructured|structured[:blocked]]
-           [--checkpoint FILE]
+           [--kernels compound|simd] [--checkpoint FILE]
            concurrent serving load test on the native engine: N worker
            threads drain a shared request queue through the parallel
            sparse engines; reports p50/p95/p99 latency and throughput.
@@ -246,7 +250,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         if let Some(k) = args.get("kernels") {
             let kernels = sparse::parallel::SparseKernels::parse(k)
-                .ok_or_else(|| anyhow::anyhow!("unknown --kernels {k:?} (compound | output)"))?;
+                .ok_or_else(|| anyhow::anyhow!("unknown --kernels {k:?} (compound | output | simd)"))?;
             trainer = trainer.with_kernels(kernels);
         }
         if let Some(s) = args.get("selection") {
@@ -515,6 +519,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })?,
         None => dsg::drs::SelectionMode::default(),
     };
+    // serving dispatches on the kernel TABLE behind the mode, so only
+    // the table-distinct modes are meaningful flags here
+    let kernels = match args.get("kernels") {
+        Some(k) => match sparse::parallel::SparseKernels::parse(k) {
+            Some(kk @ sparse::parallel::SparseKernels::Compound)
+            | Some(kk @ sparse::parallel::SparseKernels::Simd) => kk,
+            _ => anyhow::bail!("unknown --kernels {k:?} (compound | simd)"),
+        },
+        None => sparse::parallel::SparseKernels::default(),
+    };
     // split the core budget across workers; the parallel engines are
     // bit-exact under any split, so predictions don't depend on this
     let intra = (cores / workers).max(1);
@@ -535,7 +549,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let max_batch = args.get_usize("max-batch")?.unwrap_or(32);
         let m = SynthModel::new(seed, &[d, 512, 256], 10, gamma)
             .with_intra_threads(intra)
-            .with_selection(selection);
+            .with_selection(selection)
+            .with_kernels(kernels);
         let ops = m.ops_meter();
         let images: Vec<Vec<f32>> = datasets::BatchIter::eval_batches(&data, 1)
             .into_iter()
@@ -557,7 +572,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         };
         native::project_host(&meta, &mut state)?;
-        let nm = native::NativeModel::new(&meta, &state)?.with_selection(selection);
+        let nm = native::NativeModel::new(&meta, &state)?
+            .with_selection(selection)
+            .with_kernels(kernels);
         let cfg = RunConfig::preset_for_model(&model);
         let data = if cfg.dataset == "fashion" {
             datasets::fashion_like(requests.max(1), seed)

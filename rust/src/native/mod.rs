@@ -196,6 +196,7 @@ pub struct NativeModel {
     double_mask: bool,
     use_bn: bool,
     selection: SelectionMode,
+    kernels: sparse::parallel::SparseKernels,
     ws_pool: WorkspacePool,
 }
 
@@ -276,6 +277,7 @@ impl NativeModel {
             double_mask: meta.double_mask,
             use_bn: meta.use_bn,
             selection: SelectionMode::default(),
+            kernels: sparse::parallel::SparseKernels::default(),
             ws_pool: WorkspacePool::new(),
         };
 
@@ -351,6 +353,16 @@ impl NativeModel {
     /// Selection-mode override (builder style; default unstructured).
     pub fn with_selection(mut self, selection: SelectionMode) -> NativeModel {
         self.selection = selection;
+        self
+    }
+
+    /// Kernel-mode override (builder style; default scalar compound).
+    /// Inference only consults the kernel TABLE behind the mode —
+    /// [`sparse::parallel::SparseKernels::Simd`] swaps in the
+    /// runtime-detected SIMD primitives (ULP-relaxed forward dots);
+    /// every other mode serves on the bit-exact scalar table.
+    pub fn with_kernels(mut self, kernels: sparse::parallel::SparseKernels) -> NativeModel {
+        self.kernels = kernels;
         self
     }
 
@@ -515,7 +527,8 @@ impl NativeModel {
                     &mut scratch.mask,
                 );
                 let drs = td.elapsed().as_secs_f64();
-                let realized = sparse::parallel::dsg_vmm_compound_parallel_into(
+                let realized = sparse::parallel::dsg_vmm_compound_parallel_into_kt(
+                    self.kernels.table(),
                     x,
                     m,
                     d,

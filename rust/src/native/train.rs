@@ -48,6 +48,7 @@ use crate::metrics::{MemoryMeter, OpsCounter, TapeAlloc};
 use crate::native::{to_tensor, Carry, Mode, NativeModel};
 use crate::runtime::{Meta, Unit};
 use crate::sparse::parallel::{self, NzIndex, SparseKernels};
+use crate::sparse::simd;
 use crate::tensor::ops;
 use crate::util::faults;
 use crate::zvc;
@@ -111,16 +112,20 @@ impl TapedAct {
     /// pre-scan runs; a dense tensor (the input image, a GAP output)
     /// stays raw, with the measured count kept for the meter.  In Dense
     /// mode nothing is scanned (`Err(None)` = "unmeasured").
+    /// `bm` is the active kernel table's bitmask primitive — every table
+    /// entry produces byte-identical masks/counts, so the tape encoding
+    /// never depends on the kernel mode.
     fn try_zvc(
         xs: &[f32],
         storage: TapeStorage,
         threads: usize,
+        bm: simd::BitmaskCountFn,
     ) -> Result<zvc::Compressed, Option<usize>> {
         if storage != TapeStorage::Zvc {
             return Err(None);
         }
         let mut c = zvc::Compressed::new();
-        match zvc::compress_parallel_into_if_smaller(xs, threads, &mut c) {
+        match zvc::compress_parallel_into_if_smaller_bm(xs, threads, bm, &mut c) {
             Ok(_) => Ok(c),
             Err(nnz) => Err(Some(nnz)),
         }
@@ -128,8 +133,13 @@ impl TapedAct {
 
     /// Tape an owned buffer under `storage`.  Lossless either way: the
     /// backward sees identical bits.
-    fn store(xs: Vec<f32>, storage: TapeStorage, threads: usize) -> TapedAct {
-        match Self::try_zvc(&xs, storage, threads) {
+    fn store(
+        xs: Vec<f32>,
+        storage: TapeStorage,
+        threads: usize,
+        bm: simd::BitmaskCountFn,
+    ) -> TapedAct {
+        match Self::try_zvc(&xs, storage, threads, bm) {
             Ok(c) => TapedAct::Zvc(c),
             Err(nnz) => TapedAct::Dense(xs, nnz),
         }
@@ -139,8 +149,13 @@ impl TapedAct {
     /// reads straight from the forward buffer (no transient dense clone
     /// — the clone would be a real, unmetered memory peak); only a
     /// raw-stored record copies.
-    fn store_ref(xs: &[f32], storage: TapeStorage, threads: usize) -> TapedAct {
-        match Self::try_zvc(xs, storage, threads) {
+    fn store_ref(
+        xs: &[f32],
+        storage: TapeStorage,
+        threads: usize,
+        bm: simd::BitmaskCountFn,
+    ) -> TapedAct {
+        match Self::try_zvc(xs, storage, threads, bm) {
             Ok(c) => TapedAct::Zvc(c),
             Err(nnz) => TapedAct::Dense(xs.to_vec(), nnz),
         }
@@ -490,7 +505,10 @@ impl TrainEngine {
 
     /// Select the sparse kernel family ([`SparseKernels`]).  The
     /// compound kernels (default) and the output-sparse-only kernels are
-    /// bit-identical — this knob exists for baselines and parity tests.
+    /// bit-identical — those two are baseline/parity knobs.
+    /// [`SparseKernels::Simd`] is the ONE relaxed mode: forward dot
+    /// products may differ from scalar by a bounded ULP count (see
+    /// `docs/ARCHITECTURE.md`); backward and the tape stay bit-exact.
     pub fn with_kernels(mut self, kernels: SparseKernels) -> TrainEngine {
         self.kernels = kernels;
         self
@@ -641,9 +659,20 @@ impl TrainEngine {
         }
         out.resize(m * n, 0.0);
         let realized = match self.kernels {
-            SparseKernels::Compound => parallel::dsg_vmm_compound_parallel_into(
-                x, m, d, wt, n, &mask, in_density, t, out,
-            ),
+            SparseKernels::Compound | SparseKernels::Simd => {
+                parallel::dsg_vmm_compound_parallel_into_kt(
+                    self.kernels.table(),
+                    x,
+                    m,
+                    d,
+                    wt,
+                    n,
+                    &mask,
+                    in_density,
+                    t,
+                    out,
+                )
+            }
             SparseKernels::OutputSparse => {
                 parallel::dsg_vmm_rowmask_parallel_into(x, m, d, wt, n, &mask, t, out);
                 d as u64 * mask.selected() as u64
@@ -656,7 +685,7 @@ impl TrainEngine {
         // mode the codec reads straight from `out` — no dense clone.
         // (`storage` arrives pre-gated by forward_pass: Dense for eval.)
         let s = if train {
-            TapedAct::store_ref(out, storage, t)
+            TapedAct::store_ref(out, storage, t, self.kernels.table().zvc_bitmask)
         } else {
             TapedAct::Dense(Vec::new(), None)
         };
@@ -812,7 +841,8 @@ impl TrainEngine {
                     hint = out_density;
                     densities.push(rt.density);
                     dsg_i += 1;
-                    let xt = TapedAct::store(std::mem::replace(&mut h, out), st, self.threads);
+                    let bm = self.kernels.table().zvc_bitmask;
+                    let xt = TapedAct::store(std::mem::replace(&mut h, out), st, self.threads, bm);
                     tape.push(UnitTape::Dense { x: xt, rt });
                     carry = Carry::Rows(mm, *d_out);
                 }
@@ -834,8 +864,9 @@ impl TrainEngine {
                             *v += *bb;
                         }
                     }
+                    let bm = self.kernels.table().zvc_bitmask;
                     tape.push(UnitTape::Classifier {
-                        x: TapedAct::store(std::mem::replace(&mut h, out), st, self.threads),
+                        x: TapedAct::store(std::mem::replace(&mut h, out), st, self.threads, bm),
                         m: mm,
                         d,
                         c: *d_out,
@@ -873,8 +904,9 @@ impl TrainEngine {
                     hint = out_density;
                     densities.push(rt.density);
                     dsg_i += 1;
+                    let bm = self.kernels.table().zvc_bitmask;
                     tape.push(UnitTape::Conv {
-                        x: TapedAct::store(std::mem::replace(&mut h, out), st, self.threads),
+                        x: TapedAct::store(std::mem::replace(&mut h, out), st, self.threads, bm),
                         dims: (nb, c, hh, ww),
                         cs,
                         p,
@@ -960,10 +992,11 @@ impl TrainEngine {
                             *v += *s;
                         }
                     }
+                    let bm = self.kernels.table().zvc_bitmask;
                     tape.push(UnitTape::Residual {
-                        x: TapedAct::store(std::mem::replace(&mut h, h2), st, self.threads),
+                        x: TapedAct::store(std::mem::replace(&mut h, h2), st, self.threads, bm),
                         dims: (nb, c, hh, ww),
-                        h1: TapedAct::store(h1, st, self.threads),
+                        h1: TapedAct::store(h1, st, self.threads, bm),
                         cs1,
                         p1,
                         q1,
@@ -1115,20 +1148,21 @@ impl TrainEngine {
             gwt_scr.resize(n * d, 0.0);
             let dense_eq = 2 * (m * d * n) as u64; // dX + dW baselines
             match self.kernels {
-                SparseKernels::Compound => {
-                    let r_dx = parallel::dsg_vmm_rowmask_backward_compound_parallel_into(
-                        dout, m, d, wt, n, &rt.mask, self.threads, dx,
+                SparseKernels::Compound | SparseKernels::Simd => {
+                    let kt = self.kernels.table();
+                    let r_dx = parallel::dsg_vmm_rowmask_backward_compound_parallel_into_kt(
+                        kt, dout, m, d, wt, n, &rt.mask, self.threads, dx,
                     );
                     // gather live input coordinates only when the
                     // forward's measured hint says the gather pays
                     let r_dw = if rt.in_density < parallel::compound_cutoff() {
                         nzx_scr.fill_from_rows(x, m, d);
-                        parallel::dsg_vmm_rowmask_gradw_compound_parallel_into(
-                            x, dout, m, d, n, &rt.mask, nzx_scr, self.threads, gwt_scr,
+                        parallel::dsg_vmm_rowmask_gradw_compound_parallel_into_kt(
+                            kt, x, dout, m, d, n, &rt.mask, nzx_scr, self.threads, gwt_scr,
                         )
                     } else {
-                        parallel::dsg_vmm_rowmask_gradw_parallel_into(
-                            x, dout, m, d, n, &rt.mask, self.threads, gwt_scr,
+                        parallel::dsg_vmm_rowmask_gradw_parallel_into_kt(
+                            kt, x, dout, m, d, n, &rt.mask, self.threads, gwt_scr,
                         );
                         // the kernel executes d madds per live (i, j)
                         // pair (g == 0 skipped) — the same measure the

@@ -44,6 +44,7 @@ pub struct SynthModel {
     pub gamma: f32,
     intra_threads: usize,
     selection: topk::SelectionMode,
+    kernels: parallel::SparseKernels,
     ws_pool: WorkspacePool,
     /// Realized vs dense-equivalent multiply-adds across every forward
     /// (shared with the serve report via [`SynthModel::ops_meter`]).
@@ -83,6 +84,7 @@ impl SynthModel {
             gamma,
             intra_threads: 1,
             selection: topk::SelectionMode::default(),
+            kernels: parallel::SparseKernels::default(),
             ws_pool: WorkspacePool::new(),
             ops: Arc::new(OpsMeter::new()),
         }
@@ -99,6 +101,15 @@ impl SynthModel {
     /// routes the masked VMM through the packed-gather kernels.
     pub fn with_selection(mut self, selection: topk::SelectionMode) -> SynthModel {
         self.selection = selection;
+        self
+    }
+
+    /// Kernel mode: the masked VMM runs on the mode's kernel table —
+    /// [`parallel::SparseKernels::Simd`] swaps in the runtime-detected
+    /// SIMD primitives (forward dots ULP-relaxed vs scalar); any other
+    /// mode serves on the bit-exact scalar table.
+    pub fn with_kernels(mut self, kernels: parallel::SparseKernels) -> SynthModel {
+        self.kernels = kernels;
         self
     }
 
@@ -180,7 +191,8 @@ impl SynthModel {
                 }
             }
             ws.y.resize(batch * n, 0.0);
-            let realized = parallel::dsg_vmm_compound_parallel_into(
+            let realized = parallel::dsg_vmm_compound_parallel_into_kt(
+                self.kernels.table(),
                 &ws.h,
                 batch,
                 d,

@@ -25,6 +25,7 @@
 pub mod engine;
 pub mod parallel;
 pub mod pool;
+pub mod simd;
 
 use crate::drs::{projection::TernaryIndex, topk};
 use crate::tensor::{ops, Tensor};

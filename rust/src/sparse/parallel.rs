@@ -20,23 +20,44 @@
 //! * `*_parallel[_with]` — Tensor-returning wrappers (compat + tests).
 
 use super::pool::{Task, WorkerPool};
+use super::simd::{self, Isa, Prims};
 use crate::drs::topk::RowMask;
 use crate::tensor::Tensor;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
+/// Parse a raw `DSG_THREADS` value against the machine's core count.
+/// Pure so the rejection rules are unit-testable without touching
+/// process env: returns the budget plus an optional diagnostic naming
+/// the variable and the fallback actually used.
+fn threads_from_env(raw: Option<&str>, cores: usize) -> (usize, Option<String>) {
+    let Some(raw) = raw else { return (cores, None) };
+    match raw.parse::<usize>() {
+        Ok(0) => (1, Some("DSG_THREADS=0 is not a valid budget; using 1 thread".to_string())),
+        Ok(n) => (n, None),
+        Err(_) => (
+            cores,
+            Some(format!(
+                "DSG_THREADS={raw:?} is not a thread count; using {cores} (available cores)"
+            )),
+        ),
+    }
+}
+
 /// Number of worker threads (`DSG_THREADS` overrides; default = cores).
 /// Cached in a `OnceLock`: the env lookup happens once per process, and
-/// the global pool is sized from the first answer.
+/// the global pool is sized from the first answer.  An invalid override
+/// is rejected with a one-time stderr warning (it used to be silently
+/// ignored, leaving misconfigured deployments undiagnosable).
 pub fn n_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        if let Ok(v) = std::env::var("DSG_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let (n, warning) = threads_from_env(std::env::var("DSG_THREADS").ok().as_deref(), cores);
+        if let Some(w) = warning {
+            crate::warn!("{w}");
         }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        n
     })
 }
 
@@ -184,6 +205,22 @@ pub fn vmm_rowmask_chunk(
     hi: usize,
     out: &mut [f32],
 ) {
+    vmm_rowmask_chunk_p::<ScalarPrims>(xd, wd, d, n, mask, lo, hi, out)
+}
+
+/// [`vmm_rowmask_chunk`] generic over the primitive set — the
+/// monomorphized variants the [`KernelTable`] dispatch points at.
+#[allow(clippy::too_many_arguments)]
+fn vmm_rowmask_chunk_p<P: Prims>(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), (hi - lo) * n);
     if mask.is_full() {
         // keep-all fast path (gamma = 0): every j in 0..n, same order
@@ -191,7 +228,7 @@ pub fn vmm_rowmask_chunk(
             let row = &xd[i * d..(i + 1) * d];
             let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
             for j in 0..n {
-                orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+                orow[j] = P::dot(row, &wd[j * d..(j + 1) * d], d);
             }
         }
         return;
@@ -202,7 +239,7 @@ pub fn vmm_rowmask_chunk(
         let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
         for &j in mask.row(i) {
             let j = j as usize;
-            orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+            orow[j] = P::dot(row, &wd[j * d..(j + 1) * d], d);
         }
     }
 }
@@ -225,6 +262,23 @@ pub fn vmm_rowmask_backward_chunk(
     hi: usize,
     out: &mut [f32],
 ) {
+    vmm_rowmask_backward_chunk_p::<ScalarPrims>(dyd, wd, d, n, mask, lo, hi, out)
+}
+
+/// [`vmm_rowmask_backward_chunk`] generic over the primitive set.  The
+/// inner accumulate goes through `P::axpy` — independent slots, so the
+/// unroll/vector width cannot change bits.
+#[allow(clippy::too_many_arguments)]
+fn vmm_rowmask_backward_chunk_p<P: Prims>(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), (hi - lo) * d);
     out.fill(0.0);
     if mask.is_full() {
@@ -237,10 +291,7 @@ pub fn vmm_rowmask_backward_chunk(
                 if g == 0.0 {
                     continue;
                 }
-                let wrow = &wd[j * d..(j + 1) * d];
-                for p in 0..d {
-                    orow[p] += g * wrow[p];
-                }
+                P::axpy(orow, g, &wd[j * d..(j + 1) * d]);
             }
         }
         return;
@@ -254,10 +305,7 @@ pub fn vmm_rowmask_backward_chunk(
             if g == 0.0 {
                 continue; // relu'd-away entries: same skip rule as matmul_chunk
             }
-            let wrow = &wd[j * d..(j + 1) * d];
-            for p in 0..d {
-                orow[p] += g * wrow[p];
-            }
+            P::axpy(orow, g, &wd[j * d..(j + 1) * d]);
         }
     }
 }
@@ -270,6 +318,23 @@ pub fn vmm_rowmask_backward_chunk(
 /// bit-exact for any thread budget, like the forward engines.
 #[allow(clippy::too_many_arguments)]
 pub fn vmm_rowmask_gradw_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) {
+    vmm_rowmask_gradw_chunk_p::<ScalarPrims>(xd, dyd, m, d, n, mask, jlo, jhi, out)
+}
+
+/// [`vmm_rowmask_gradw_chunk`] generic over the primitive set (the axpy
+/// accumulate has independent slots — same bits at any vector width).
+#[allow(clippy::too_many_arguments)]
+fn vmm_rowmask_gradw_chunk_p<P: Prims>(
     xd: &[f32],
     dyd: &[f32],
     m: usize,
@@ -294,9 +359,7 @@ pub fn vmm_rowmask_gradw_chunk(
                     continue;
                 }
                 let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
-                for p in 0..d {
-                    orow[p] += g * xrow[p];
-                }
+                P::axpy(orow, g, xrow);
             }
         }
         return;
@@ -315,9 +378,7 @@ pub fn vmm_rowmask_gradw_chunk(
                 continue;
             }
             let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
-            for p in 0..d {
-                orow[p] += g * xrow[p];
-            }
+            P::axpy(orow, g, xrow);
         }
     }
 }
@@ -354,6 +415,24 @@ pub fn vmm_fixedk_chunk(
     hi: usize,
     out: &mut [f32],
 ) {
+    vmm_fixedk_chunk_p::<ScalarPrims>(xd, wd, d, n, idx, k, lo, hi, out)
+}
+
+/// [`vmm_fixedk_chunk`] generic over the primitive set — the fixed
+/// k-trip count is exactly what lets the SIMD dot run back-to-back with
+/// no per-row branching.
+#[allow(clippy::too_many_arguments)]
+fn vmm_fixedk_chunk_p<P: Prims>(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), (hi - lo) * n);
     out.fill(0.0);
     for i in lo..hi {
@@ -361,7 +440,7 @@ pub fn vmm_fixedk_chunk(
         let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
         for &j in &idx[i * k..(i + 1) * k] {
             let j = j as usize;
-            orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+            orow[j] = P::dot(row, &wd[j * d..(j + 1) * d], d);
         }
     }
 }
@@ -370,6 +449,22 @@ pub fn vmm_fixedk_chunk(
 /// the twin of [`vmm_rowmask_backward_chunk`]'s selected walk.
 #[allow(clippy::too_many_arguments)]
 pub fn vmm_fixedk_backward_chunk(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) {
+    vmm_fixedk_backward_chunk_p::<ScalarPrims>(dyd, wd, d, n, idx, k, lo, hi, out)
+}
+
+/// [`vmm_fixedk_backward_chunk`] generic over the primitive set.
+#[allow(clippy::too_many_arguments)]
+fn vmm_fixedk_backward_chunk_p<P: Prims>(
     dyd: &[f32],
     wd: &[f32],
     d: usize,
@@ -391,10 +486,7 @@ pub fn vmm_fixedk_backward_chunk(
             if g == 0.0 {
                 continue; // same skip rule as the CSR twin
             }
-            let wrow = &wd[j * d..(j + 1) * d];
-            for p in 0..d {
-                orow[p] += g * wrow[p];
-            }
+            P::axpy(orow, g, &wd[j * d..(j + 1) * d]);
         }
     }
 }
@@ -404,6 +496,23 @@ pub fn vmm_fixedk_backward_chunk(
 /// walk — the span search runs over each row's fixed-k index slice.
 #[allow(clippy::too_many_arguments)]
 pub fn vmm_fixedk_gradw_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) {
+    vmm_fixedk_gradw_chunk_p::<ScalarPrims>(xd, dyd, m, d, n, idx, k, jlo, jhi, out)
+}
+
+/// [`vmm_fixedk_gradw_chunk`] generic over the primitive set.
+#[allow(clippy::too_many_arguments)]
+fn vmm_fixedk_gradw_chunk_p<P: Prims>(
     xd: &[f32],
     dyd: &[f32],
     m: usize,
@@ -430,9 +539,7 @@ pub fn vmm_fixedk_gradw_chunk(
                 continue;
             }
             let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
-            for p in 0..d {
-                orow[p] += g * xrow[p];
-            }
+            P::axpy(orow, g, xrow);
         }
     }
 }
@@ -473,9 +580,14 @@ pub fn vmm_fixedk_gradw_chunk(
 // performance decision and wrong hints cannot change results.
 
 /// Which sparse kernels a configurable engine routes through — the
-/// output-sparse-only kernels this repo shipped first, or the
-/// compound-sparsity kernels.  Bit-identical by construction; the knob
-/// exists for baselines, benches, and the parity tests.
+/// output-sparse-only kernels this repo shipped first, the
+/// compound-sparsity kernels, or the compound kernels over
+/// runtime-detected SIMD primitives.  `OutputSparse` and `Compound` are
+/// bit-identical by construction (baseline/bench/parity knobs); `Simd`
+/// is the ONE relaxed mode — its forward dot products may differ from
+/// the scalar contract by a bounded ULP count (see
+/// `docs/ARCHITECTURE.md`), which is why it must be explicitly opted
+/// into and is never the default.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SparseKernels {
     /// Output-side skipping only (`vmm_rowmask_chunk` & friends).
@@ -483,6 +595,10 @@ pub enum SparseKernels {
     /// Input- AND output-side skipping (the compound kernels).
     #[default]
     Compound,
+    /// The compound kernels over the [`active_kernels`] dispatch table:
+    /// AVX2/FMA where the runtime probe passes, bit-exact scalar
+    /// fallback everywhere else (including under `DSG_SIMD=off`).
+    Simd,
 }
 
 impl SparseKernels {
@@ -490,7 +606,18 @@ impl SparseKernels {
         match s {
             "output" | "output-sparse" => Some(SparseKernels::OutputSparse),
             "compound" => Some(SparseKernels::Compound),
+            "simd" => Some(SparseKernels::Simd),
             _ => None,
+        }
+    }
+
+    /// The dispatch table this kernel family runs on: the ISA-selected
+    /// table for `Simd`, the scalar table (today's exact code) for
+    /// everything else.
+    pub fn table(self) -> &'static KernelTable {
+        match self {
+            SparseKernels::Simd => active_kernels(),
+            _ => scalar_kernels(),
         }
     }
 }
@@ -540,18 +667,47 @@ pub fn live_grad_count(dyd: &[f32], n: usize, mask: &RowMask) -> u64 {
     live
 }
 
+/// Parse a raw `DSG_COMPOUND_CUTOFF` value.  Non-finite parses are
+/// REJECTED, not clamped: `f32::clamp` passes NaN through, and a NaN
+/// cutoff makes every `density >= cutoff` comparison false — silently
+/// forcing the gather path everywhere (the bug this helper fixes).
+/// Pure so the rejection rules are unit-testable; returns the cutoff
+/// plus an optional diagnostic naming the variable and the fallback.
+fn cutoff_from_env(raw: Option<&str>) -> (f32, Option<String>) {
+    const DEFAULT: f32 = 0.5;
+    let Some(raw) = raw else { return (DEFAULT, None) };
+    match raw.parse::<f32>() {
+        Ok(v) if v.is_finite() => (v.clamp(0.0, 1.0), None),
+        Ok(_) => (
+            DEFAULT,
+            Some(format!(
+                "DSG_COMPOUND_CUTOFF={raw:?} is not finite; using {DEFAULT}"
+            )),
+        ),
+        Err(_) => (
+            DEFAULT,
+            Some(format!(
+                "DSG_COMPOUND_CUTOFF={raw:?} is not a density; using {DEFAULT}"
+            )),
+        ),
+    }
+}
+
 /// Input-density cutoff for the compound dispatch (`DSG_COMPOUND_CUTOFF`
 /// overrides; default 0.5): at or above this nonzero fraction the
 /// contiguous dense sweep wins over indexed accumulation, below it the
-/// gather pays for itself.  Cached once per process like `n_threads`.
+/// gather pays for itself.  Cached once per process like `n_threads`;
+/// invalid or non-finite overrides fall back to 0.5 with a one-time
+/// stderr warning.
 pub fn compound_cutoff() -> f32 {
     static C: OnceLock<f32> = OnceLock::new();
     *C.get_or_init(|| {
-        std::env::var("DSG_COMPOUND_CUTOFF")
-            .ok()
-            .and_then(|v| v.parse::<f32>().ok())
-            .map(|v| v.clamp(0.0, 1.0))
-            .unwrap_or(0.5)
+        let (c, warning) =
+            cutoff_from_env(std::env::var("DSG_COMPOUND_CUTOFF").ok().as_deref());
+        if let Some(w) = warning {
+            crate::warn!("{w}");
+        }
+        c
     })
 }
 
@@ -610,6 +766,32 @@ fn vmm_dot_sparse(nz: &[u32], row: &[f32], wrow: &[f32], d: usize) -> f32 {
     acc
 }
 
+/// The portable scalar primitive set: `#[inline(always)]` delegation to
+/// the bit-exact helpers above, so chunk kernels monomorphized over it
+/// compile to exactly the code the scalar entry points have always run.
+/// This is both the non-x86 implementation and the forced fallback the
+/// `--kernels simd` mode routes to when the AVX2 probe fails.
+pub struct ScalarPrims;
+
+impl Prims for ScalarPrims {
+    const ISA: Isa = Isa::Scalar;
+
+    #[inline(always)]
+    fn dot(row: &[f32], wrow: &[f32], d: usize) -> f32 {
+        vmm_dot(row, wrow, d)
+    }
+
+    #[inline(always)]
+    fn dot_sparse(nz: &[u32], row: &[f32], wrow: &[f32], d: usize) -> f32 {
+        vmm_dot_sparse(nz, row, wrow, d)
+    }
+
+    #[inline(always)]
+    fn axpy(orow: &mut [f32], g: f32, xrow: &[f32]) {
+        axpy_dense(orow, g, xrow)
+    }
+}
+
 /// Compound-sparsity masked VMM rows `[lo, hi)`: gather each row's
 /// nonzero input coordinates once, then compute only the selected output
 /// neurons from them — ops ~ nnz(in) * sel(out) instead of d * sel(out).
@@ -618,6 +800,22 @@ fn vmm_dot_sparse(nz: &[u32], row: &[f32], wrow: &[f32], d: usize) -> f32 {
 /// executed), the measured quantity behind the Fig 9 reduction ratios.
 #[allow(clippy::too_many_arguments)]
 pub fn vmm_rowmask_compound_chunk(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    vmm_rowmask_compound_chunk_p::<ScalarPrims>(xd, wd, d, n, mask, lo, hi, out)
+}
+
+/// [`vmm_rowmask_compound_chunk`] generic over the primitive set (the
+/// per-row density dispatch picks `P::dot` vs `P::dot_sparse`).
+#[allow(clippy::too_many_arguments)]
+fn vmm_rowmask_compound_chunk_p<P: Prims>(
     xd: &[f32],
     wd: &[f32],
     d: usize,
@@ -649,22 +847,22 @@ pub fn vmm_rowmask_compound_chunk(
             if full {
                 if dense_row {
                     for (j, o) in orow.iter_mut().enumerate() {
-                        *o = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+                        *o = P::dot(row, &wd[j * d..(j + 1) * d], d);
                     }
                 } else {
                     for (j, o) in orow.iter_mut().enumerate() {
-                        *o = vmm_dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
+                        *o = P::dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
                     }
                 }
             } else if dense_row {
                 for &j in mask.row(i) {
                     let j = j as usize;
-                    orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+                    orow[j] = P::dot(row, &wd[j * d..(j + 1) * d], d);
                 }
             } else {
                 for &j in mask.row(i) {
                     let j = j as usize;
-                    orow[j] = vmm_dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
+                    orow[j] = P::dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
                 }
             }
             let per = if dense_row { d } else { nz.len() };
@@ -806,6 +1004,22 @@ pub fn vmm_rowmask_backward_compound_chunk(
     hi: usize,
     out: &mut [f32],
 ) -> u64 {
+    vmm_rowmask_backward_compound_chunk_p::<ScalarPrims>(dyd, wd, d, n, mask, lo, hi, out)
+}
+
+/// [`vmm_rowmask_backward_compound_chunk`] generic over the primitive
+/// set.
+#[allow(clippy::too_many_arguments)]
+fn vmm_rowmask_backward_compound_chunk_p<P: Prims>(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
     debug_assert_eq!(out.len(), (hi - lo) * d);
     out.fill(0.0);
     let mut realized = 0u64;
@@ -817,7 +1031,7 @@ pub fn vmm_rowmask_backward_compound_chunk(
                 if g == 0.0 {
                     continue;
                 }
-                axpy_dense(orow, g, &wd[j * d..(j + 1) * d]);
+                P::axpy(orow, g, &wd[j * d..(j + 1) * d]);
                 realized += d as u64;
             }
         }
@@ -832,7 +1046,7 @@ pub fn vmm_rowmask_backward_compound_chunk(
             if g == 0.0 {
                 continue;
             }
-            axpy_dense(orow, g, &wd[j * d..(j + 1) * d]);
+            P::axpy(orow, g, &wd[j * d..(j + 1) * d]);
             realized += d as u64;
         }
     }
@@ -848,6 +1062,26 @@ pub fn vmm_rowmask_backward_compound_chunk(
 /// realized multiply-adds.
 #[allow(clippy::too_many_arguments)]
 pub fn vmm_rowmask_gradw_compound_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    nzx: &NzIndex,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) -> u64 {
+    vmm_rowmask_gradw_compound_chunk_p::<ScalarPrims>(xd, dyd, m, d, n, mask, nzx, jlo, jhi, out)
+}
+
+/// [`vmm_rowmask_gradw_compound_chunk`] generic over the primitive set.
+/// Only the dense-row axpy goes through `P`: the indexed `axpy_sparse`
+/// scatter stays scalar on every ISA (AVX2 has no scatter, and an
+/// emulated one loses to the scalar walk) — it is bit-exact regardless.
+#[allow(clippy::too_many_arguments)]
+fn vmm_rowmask_gradw_compound_chunk_p<P: Prims>(
     xd: &[f32],
     dyd: &[f32],
     m: usize,
@@ -881,7 +1115,7 @@ pub fn vmm_rowmask_gradw_compound_chunk(
             }
             let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
             if dense_row {
-                axpy_dense(orow, g, xrow);
+                P::axpy(orow, g, xrow);
             } else {
                 axpy_sparse(orow, g, xrow, nz);
             }
@@ -919,6 +1153,22 @@ pub fn vmm_fixedk_compound_chunk(
     hi: usize,
     out: &mut [f32],
 ) -> u64 {
+    vmm_fixedk_compound_chunk_p::<ScalarPrims>(xd, wd, d, n, idx, k, lo, hi, out)
+}
+
+/// [`vmm_fixedk_compound_chunk`] generic over the primitive set.
+#[allow(clippy::too_many_arguments)]
+fn vmm_fixedk_compound_chunk_p<P: Prims>(
+    xd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
     debug_assert_eq!(out.len(), (hi - lo) * n);
     out.fill(0.0);
     if k == 0 {
@@ -936,12 +1186,12 @@ pub fn vmm_fixedk_compound_chunk(
             if dense_row {
                 for &j in sel {
                     let j = j as usize;
-                    orow[j] = vmm_dot(row, &wd[j * d..(j + 1) * d], d);
+                    orow[j] = P::dot(row, &wd[j * d..(j + 1) * d], d);
                 }
             } else {
                 for &j in sel {
                     let j = j as usize;
-                    orow[j] = vmm_dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
+                    orow[j] = P::dot_sparse(nz, row, &wd[j * d..(j + 1) * d], d);
                 }
             }
             let per = if dense_row { d } else { nz.len() };
@@ -966,6 +1216,23 @@ pub fn vmm_fixedk_backward_compound_chunk(
     hi: usize,
     out: &mut [f32],
 ) -> u64 {
+    vmm_fixedk_backward_compound_chunk_p::<ScalarPrims>(dyd, wd, d, n, idx, k, lo, hi, out)
+}
+
+/// [`vmm_fixedk_backward_compound_chunk`] generic over the primitive
+/// set.
+#[allow(clippy::too_many_arguments)]
+fn vmm_fixedk_backward_compound_chunk_p<P: Prims>(
+    dyd: &[f32],
+    wd: &[f32],
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> u64 {
     debug_assert_eq!(out.len(), (hi - lo) * d);
     out.fill(0.0);
     let mut realized = 0u64;
@@ -978,7 +1245,7 @@ pub fn vmm_fixedk_backward_compound_chunk(
             if g == 0.0 {
                 continue;
             }
-            axpy_dense(orow, g, &wd[j * d..(j + 1) * d]);
+            P::axpy(orow, g, &wd[j * d..(j + 1) * d]);
             realized += d as u64;
         }
     }
@@ -992,6 +1259,25 @@ pub fn vmm_fixedk_backward_compound_chunk(
 /// multiply-adds.
 #[allow(clippy::too_many_arguments)]
 pub fn vmm_fixedk_gradw_compound_chunk(
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    idx: &[u32],
+    k: usize,
+    nzx: &NzIndex,
+    jlo: usize,
+    jhi: usize,
+    out: &mut [f32],
+) -> u64 {
+    vmm_fixedk_gradw_compound_chunk_p::<ScalarPrims>(xd, dyd, m, d, n, idx, k, nzx, jlo, jhi, out)
+}
+
+/// [`vmm_fixedk_gradw_compound_chunk`] generic over the primitive set
+/// (sparse-row scatter stays scalar, like the CSR twin).
+#[allow(clippy::too_many_arguments)]
+fn vmm_fixedk_gradw_compound_chunk_p<P: Prims>(
     xd: &[f32],
     dyd: &[f32],
     m: usize,
@@ -1029,7 +1315,7 @@ pub fn vmm_fixedk_gradw_compound_chunk(
             }
             let orow = &mut out[(j - jlo) * d..(j - jlo + 1) * d];
             if dense_row {
-                axpy_dense(orow, g, xrow);
+                P::axpy(orow, g, xrow);
             } else {
                 axpy_sparse(orow, g, xrow, nz);
             }
@@ -1054,6 +1340,110 @@ pub fn project_chunk(
             &mut out[(i - lo) * ridx.k..(i - lo + 1) * ridx.k],
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// kernel dispatch table (ISA x mask layout x density band)
+// ---------------------------------------------------------------------------
+
+/// A full set of pre-instantiated monomorphized chunk kernels for one
+/// ISA.  The table is the Dynasparse-style dispatch point: it is
+/// resolved ONCE per process ([`active_kernels`]) from the runtime ISA
+/// probe, and the `_kt` entry points then pick a row by (mask layout:
+/// CSR vs packed FixedK) x (density band: plain vs compound) — so the
+/// hot loops themselves contain no ISA branching at all.
+///
+/// The scalar table ([`scalar_kernels`]) points at the
+/// [`ScalarPrims`] instantiations — literally the code the plain entry
+/// points run — which is what makes the forced fallback
+/// (`DSG_SIMD=off`, or a non-AVX2 host) bit-exact by construction.
+pub struct KernelTable {
+    /// Which primitive set this table runs on.
+    pub isa: Isa,
+    /// The ISA-matched ZVC bitmask/count pass (bit-identical across
+    /// ISAs; the comparison is exact either way).
+    pub zvc_bitmask: simd::BitmaskCountFn,
+    fwd_csr: fn(&[f32], &[f32], usize, usize, &RowMask, usize, usize, &mut [f32]),
+    fwd_packed: fn(&[f32], &[f32], usize, usize, &[u32], usize, usize, usize, &mut [f32]),
+    bwd_csr: fn(&[f32], &[f32], usize, usize, &RowMask, usize, usize, &mut [f32]),
+    bwd_packed: fn(&[f32], &[f32], usize, usize, &[u32], usize, usize, usize, &mut [f32]),
+    gradw_csr: fn(&[f32], &[f32], usize, usize, usize, &RowMask, usize, usize, &mut [f32]),
+    gradw_packed: fn(&[f32], &[f32], usize, usize, usize, &[u32], usize, usize, usize, &mut [f32]),
+    fwd_csr_compound: fn(&[f32], &[f32], usize, usize, &RowMask, usize, usize, &mut [f32]) -> u64,
+    fwd_packed_compound:
+        fn(&[f32], &[f32], usize, usize, &[u32], usize, usize, usize, &mut [f32]) -> u64,
+    bwd_csr_compound: fn(&[f32], &[f32], usize, usize, &RowMask, usize, usize, &mut [f32]) -> u64,
+    bwd_packed_compound:
+        fn(&[f32], &[f32], usize, usize, &[u32], usize, usize, usize, &mut [f32]) -> u64,
+    gradw_csr_compound:
+        fn(&[f32], &[f32], usize, usize, usize, &RowMask, &NzIndex, usize, usize, &mut [f32]) -> u64,
+    gradw_packed_compound: fn(
+        &[f32],
+        &[f32],
+        usize,
+        usize,
+        usize,
+        &[u32],
+        usize,
+        &NzIndex,
+        usize,
+        usize,
+        &mut [f32],
+    ) -> u64,
+}
+
+static SCALAR_TABLE: KernelTable = KernelTable {
+    isa: Isa::Scalar,
+    zvc_bitmask: simd::bitmask_count_scalar,
+    fwd_csr: vmm_rowmask_chunk_p::<ScalarPrims>,
+    fwd_packed: vmm_fixedk_chunk_p::<ScalarPrims>,
+    bwd_csr: vmm_rowmask_backward_chunk_p::<ScalarPrims>,
+    bwd_packed: vmm_fixedk_backward_chunk_p::<ScalarPrims>,
+    gradw_csr: vmm_rowmask_gradw_chunk_p::<ScalarPrims>,
+    gradw_packed: vmm_fixedk_gradw_chunk_p::<ScalarPrims>,
+    fwd_csr_compound: vmm_rowmask_compound_chunk_p::<ScalarPrims>,
+    fwd_packed_compound: vmm_fixedk_compound_chunk_p::<ScalarPrims>,
+    bwd_csr_compound: vmm_rowmask_backward_compound_chunk_p::<ScalarPrims>,
+    bwd_packed_compound: vmm_fixedk_backward_compound_chunk_p::<ScalarPrims>,
+    gradw_csr_compound: vmm_rowmask_gradw_compound_chunk_p::<ScalarPrims>,
+    gradw_packed_compound: vmm_fixedk_gradw_compound_chunk_p::<ScalarPrims>,
+};
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+static AVX2_TABLE: KernelTable = KernelTable {
+    isa: Isa::Avx2Fma,
+    zvc_bitmask: simd::bitmask_count_avx2,
+    fwd_csr: vmm_rowmask_chunk_p::<simd::Avx2Prims>,
+    fwd_packed: vmm_fixedk_chunk_p::<simd::Avx2Prims>,
+    bwd_csr: vmm_rowmask_backward_chunk_p::<simd::Avx2Prims>,
+    bwd_packed: vmm_fixedk_backward_chunk_p::<simd::Avx2Prims>,
+    gradw_csr: vmm_rowmask_gradw_chunk_p::<simd::Avx2Prims>,
+    gradw_packed: vmm_fixedk_gradw_chunk_p::<simd::Avx2Prims>,
+    fwd_csr_compound: vmm_rowmask_compound_chunk_p::<simd::Avx2Prims>,
+    fwd_packed_compound: vmm_fixedk_compound_chunk_p::<simd::Avx2Prims>,
+    bwd_csr_compound: vmm_rowmask_backward_compound_chunk_p::<simd::Avx2Prims>,
+    bwd_packed_compound: vmm_fixedk_backward_compound_chunk_p::<simd::Avx2Prims>,
+    gradw_csr_compound: vmm_rowmask_gradw_compound_chunk_p::<simd::Avx2Prims>,
+    gradw_packed_compound: vmm_fixedk_gradw_compound_chunk_p::<simd::Avx2Prims>,
+};
+
+/// The scalar (bit-exact contract) kernel table — what every non-`Simd`
+/// kernel family runs on, and the `Simd` fallback when detection fails.
+pub fn scalar_kernels() -> &'static KernelTable {
+    &SCALAR_TABLE
+}
+
+/// The table the `--kernels simd` mode dispatches through: AVX2/FMA
+/// when [`simd::active_isa`] probed positive (x86 only), otherwise the
+/// scalar table.  Resolved once per process.
+pub fn active_kernels() -> &'static KernelTable {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if simd::active_isa() == Isa::Avx2Fma {
+            return &AVX2_TABLE;
+        }
+    }
+    &SCALAR_TABLE
 }
 
 // ---------------------------------------------------------------------------
@@ -1109,6 +1499,25 @@ pub fn dsg_vmm_rowmask_parallel_into(
     threads: usize,
     out: &mut [f32],
 ) {
+    dsg_vmm_rowmask_parallel_into_kt(&SCALAR_TABLE, xd, m, d, wd, n, mask, threads, out)
+}
+
+/// [`dsg_vmm_rowmask_parallel_into`] through an explicit
+/// [`KernelTable`] — the `--kernels simd` route (callers pass
+/// [`active_kernels`]).  With the scalar table this IS the plain entry
+/// point: same chunk functions, same bits.
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_parallel_into_kt(
+    kt: &'static KernelTable,
+    xd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(xd.len(), m * d);
     debug_assert_eq!(wd.len(), n * d);
     assert_eq!(mask.rows(), m, "mask rows");
@@ -1117,13 +1526,15 @@ pub fn dsg_vmm_rowmask_parallel_into(
     // (fixed trip counts, no offsets loads) — bit-identical to the CSR
     // walk on the same selection
     if let Some((idx, k)) = mask.packed() {
+        let f = kt.fwd_packed;
         for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
-            vmm_fixedk_chunk(xd, wd, d, n, idx, k, lo, hi, chunk)
+            f(xd, wd, d, n, idx, k, lo, hi, chunk)
         });
         return;
     }
+    let f = kt.fwd_csr;
     for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
-        vmm_rowmask_chunk(xd, wd, d, n, mask, lo, hi, chunk)
+        f(xd, wd, d, n, mask, lo, hi, chunk)
     });
 }
 
@@ -1140,18 +1551,38 @@ pub fn dsg_vmm_rowmask_backward_parallel_into(
     threads: usize,
     out: &mut [f32],
 ) {
+    dsg_vmm_rowmask_backward_parallel_into_kt(&SCALAR_TABLE, dyd, m, d, wd, n, mask, threads, out)
+}
+
+/// [`dsg_vmm_rowmask_backward_parallel_into`] through an explicit
+/// [`KernelTable`] (bit-exact on every table — the axpy accumulate has
+/// independent slots).
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_backward_parallel_into_kt(
+    kt: &'static KernelTable,
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(dyd.len(), m * n);
     debug_assert_eq!(wd.len(), n * d);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     if let Some((idx, k)) = mask.packed() {
+        let f = kt.bwd_packed;
         for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
-            vmm_fixedk_backward_chunk(dyd, wd, d, n, idx, k, lo, hi, chunk)
+            f(dyd, wd, d, n, idx, k, lo, hi, chunk)
         });
         return;
     }
+    let f = kt.bwd_csr;
     for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
-        vmm_rowmask_backward_chunk(dyd, wd, d, n, mask, lo, hi, chunk)
+        f(dyd, wd, d, n, mask, lo, hi, chunk)
     });
 }
 
@@ -1168,18 +1599,37 @@ pub fn dsg_vmm_rowmask_gradw_parallel_into(
     threads: usize,
     out: &mut [f32],
 ) {
+    dsg_vmm_rowmask_gradw_parallel_into_kt(&SCALAR_TABLE, xd, dyd, m, d, n, mask, threads, out)
+}
+
+/// [`dsg_vmm_rowmask_gradw_parallel_into`] through an explicit
+/// [`KernelTable`] (bit-exact on every table).
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_gradw_parallel_into_kt(
+    kt: &'static KernelTable,
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(xd.len(), m * d);
     debug_assert_eq!(dyd.len(), m * n);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     if let Some((idx, k)) = mask.packed() {
+        let f = kt.gradw_packed;
         for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
-            vmm_fixedk_gradw_chunk(xd, dyd, m, d, n, idx, k, jlo, jhi, chunk)
+            f(xd, dyd, m, d, n, idx, k, jlo, jhi, chunk)
         });
         return;
     }
+    let f = kt.gradw_csr;
     for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
-        vmm_rowmask_gradw_chunk(xd, dyd, m, d, n, mask, jlo, jhi, chunk)
+        f(xd, dyd, m, d, n, mask, jlo, jhi, chunk)
     });
 }
 
@@ -1205,25 +1655,47 @@ pub fn dsg_vmm_compound_parallel_into(
     threads: usize,
     out: &mut [f32],
 ) -> u64 {
+    dsg_vmm_compound_parallel_into_kt(&SCALAR_TABLE, xd, m, d, wd, n, mask, in_density, threads, out)
+}
+
+/// [`dsg_vmm_compound_parallel_into`] through an explicit
+/// [`KernelTable`] — the per-layer density band (plain vs compound) and
+/// the mask layout (CSR vs packed) pick the table row; the table itself
+/// was picked once per process from the ISA probe.
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_compound_parallel_into_kt(
+    kt: &'static KernelTable,
+    xd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    in_density: f32,
+    threads: usize,
+    out: &mut [f32],
+) -> u64 {
     debug_assert_eq!(xd.len(), m * d);
     debug_assert_eq!(wd.len(), n * d);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     if in_density >= compound_cutoff() {
         // dense-enough input: output-sparse only, packed when FixedK
-        dsg_vmm_rowmask_parallel_into(xd, m, d, wd, n, mask, threads, out);
+        dsg_vmm_rowmask_parallel_into_kt(kt, xd, m, d, wd, n, mask, threads, out);
         return d as u64 * mask.selected() as u64;
     }
     let realized = AtomicU64::new(0);
     if let Some((idx, k)) = mask.packed() {
+        let f = kt.fwd_packed_compound;
         for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
-            let r = vmm_fixedk_compound_chunk(xd, wd, d, n, idx, k, lo, hi, chunk);
+            let r = f(xd, wd, d, n, idx, k, lo, hi, chunk);
             realized.fetch_add(r, Ordering::Relaxed);
         });
         return realized.into_inner();
     }
+    let f = kt.fwd_csr_compound;
     for_row_chunks(threads, m, n, out, |lo, hi, chunk| {
-        let r = vmm_rowmask_compound_chunk(xd, wd, d, n, mask, lo, hi, chunk);
+        let r = f(xd, wd, d, n, mask, lo, hi, chunk);
         realized.fetch_add(r, Ordering::Relaxed);
     });
     realized.into_inner()
@@ -1244,20 +1716,49 @@ pub fn dsg_vmm_rowmask_backward_compound_parallel_into(
     threads: usize,
     out: &mut [f32],
 ) -> u64 {
+    dsg_vmm_rowmask_backward_compound_parallel_into_kt(
+        &SCALAR_TABLE,
+        dyd,
+        m,
+        d,
+        wd,
+        n,
+        mask,
+        threads,
+        out,
+    )
+}
+
+/// [`dsg_vmm_rowmask_backward_compound_parallel_into`] through an
+/// explicit [`KernelTable`] (bit-exact on every table).
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_backward_compound_parallel_into_kt(
+    kt: &'static KernelTable,
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    wd: &[f32],
+    n: usize,
+    mask: &RowMask,
+    threads: usize,
+    out: &mut [f32],
+) -> u64 {
     debug_assert_eq!(dyd.len(), m * n);
     debug_assert_eq!(wd.len(), n * d);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     let realized = AtomicU64::new(0);
     if let Some((idx, k)) = mask.packed() {
+        let f = kt.bwd_packed_compound;
         for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
-            let r = vmm_fixedk_backward_compound_chunk(dyd, wd, d, n, idx, k, lo, hi, chunk);
+            let r = f(dyd, wd, d, n, idx, k, lo, hi, chunk);
             realized.fetch_add(r, Ordering::Relaxed);
         });
         return realized.into_inner();
     }
+    let f = kt.bwd_csr_compound;
     for_row_chunks(threads, m, d, out, |lo, hi, chunk| {
-        let r = vmm_rowmask_backward_compound_chunk(dyd, wd, d, n, mask, lo, hi, chunk);
+        let r = f(dyd, wd, d, n, mask, lo, hi, chunk);
         realized.fetch_add(r, Ordering::Relaxed);
     });
     realized.into_inner()
@@ -1280,20 +1781,51 @@ pub fn dsg_vmm_rowmask_gradw_compound_parallel_into(
     threads: usize,
     out: &mut [f32],
 ) -> u64 {
+    dsg_vmm_rowmask_gradw_compound_parallel_into_kt(
+        &SCALAR_TABLE,
+        xd,
+        dyd,
+        m,
+        d,
+        n,
+        mask,
+        nzx,
+        threads,
+        out,
+    )
+}
+
+/// [`dsg_vmm_rowmask_gradw_compound_parallel_into`] through an explicit
+/// [`KernelTable`] (bit-exact on every table).
+#[allow(clippy::too_many_arguments)]
+pub fn dsg_vmm_rowmask_gradw_compound_parallel_into_kt(
+    kt: &'static KernelTable,
+    xd: &[f32],
+    dyd: &[f32],
+    m: usize,
+    d: usize,
+    n: usize,
+    mask: &RowMask,
+    nzx: &NzIndex,
+    threads: usize,
+    out: &mut [f32],
+) -> u64 {
     debug_assert_eq!(xd.len(), m * d);
     debug_assert_eq!(dyd.len(), m * n);
     assert_eq!(mask.rows(), m, "mask rows");
     assert_eq!(mask.width(), n, "mask width");
     let realized = AtomicU64::new(0);
     if let Some((idx, k)) = mask.packed() {
+        let f = kt.gradw_packed_compound;
         for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
-            let r = vmm_fixedk_gradw_compound_chunk(xd, dyd, m, d, n, idx, k, nzx, jlo, jhi, chunk);
+            let r = f(xd, dyd, m, d, n, idx, k, nzx, jlo, jhi, chunk);
             realized.fetch_add(r, Ordering::Relaxed);
         });
         return realized.into_inner();
     }
+    let f = kt.gradw_csr_compound;
     for_row_chunks(threads, n, d, out, |jlo, jhi, chunk| {
-        let r = vmm_rowmask_gradw_compound_chunk(xd, dyd, m, d, n, mask, nzx, jlo, jhi, chunk);
+        let r = f(xd, dyd, m, d, n, mask, nzx, jlo, jhi, chunk);
         realized.fetch_add(r, Ordering::Relaxed);
     });
     realized.into_inner()
@@ -1942,6 +2474,82 @@ mod tests {
         for _ in 0..3 {
             matmul_parallel_into(x.data(), 9, 32, w.data(), 11, 2, &mut out);
             assert_eq!(out, want.data());
+        }
+    }
+
+    #[test]
+    fn cutoff_env_rejects_non_finite() {
+        // regression: DSG_COMPOUND_CUTOFF=NaN used to survive f32::clamp
+        // (clamp passes NaN through), making every `density >= cutoff`
+        // comparison false and silently forcing the gather path everywhere
+        assert_eq!(cutoff_from_env(None), (0.5, None));
+        assert_eq!(cutoff_from_env(Some("0.3")), (0.3, None));
+        // finite out-of-range values still clamp silently
+        assert_eq!(cutoff_from_env(Some("1.5")).0, 1.0);
+        assert_eq!(cutoff_from_env(Some("-2")).0, 0.0);
+        for bad in ["NaN", "nan", "-NaN", "inf", "-inf", "infinity"] {
+            let (c, warning) = cutoff_from_env(Some(bad));
+            assert_eq!(c, 0.5, "{bad} must fall back to the default");
+            let w = warning.expect("non-finite cutoff must warn");
+            assert!(w.contains("DSG_COMPOUND_CUTOFF"), "warning names the variable: {w}");
+            assert!(w.contains("0.5"), "warning names the fallback: {w}");
+        }
+        let (c, warning) = cutoff_from_env(Some("dense"));
+        assert_eq!(c, 0.5);
+        assert!(warning.unwrap().contains("DSG_COMPOUND_CUTOFF"));
+    }
+
+    #[test]
+    fn threads_env_warns_on_invalid() {
+        assert_eq!(threads_from_env(None, 8), (8, None));
+        assert_eq!(threads_from_env(Some("4"), 8), (4, None));
+        let (n, warning) = threads_from_env(Some("0"), 8);
+        assert_eq!(n, 1);
+        assert!(warning.unwrap().contains("DSG_THREADS"));
+        for bad in ["abc", "-1", "1.5", ""] {
+            let (n, warning) = threads_from_env(Some(bad), 8);
+            assert_eq!(n, 8, "{bad:?} must fall back to the core count");
+            let w = warning.expect("invalid DSG_THREADS must warn");
+            assert!(w.contains("DSG_THREADS"), "warning names the variable: {w}");
+            assert!(w.contains('8'), "warning names the fallback: {w}");
+        }
+    }
+
+    #[test]
+    fn scalar_table_is_the_plain_entry_point() {
+        // the forced-fallback guarantee: routing through the scalar
+        // KernelTable is bit-identical to the plain entry points (same
+        // chunk functions, reached through fn pointers)
+        let mut rng = Pcg32::seeded(91);
+        let (m, d, n) = (13, 37, 21);
+        let x = sparse_input(&mut rng, m, d);
+        let w = randn(&mut rng, &[n, d]);
+        let virt = randn(&mut rng, &[m, n]);
+        let mask = crate::drs::topk::select_rowmask(&virt, 0.5);
+        let kt = scalar_kernels();
+        assert_eq!(kt.isa, Isa::Scalar);
+        for hint in [0.1f32, 0.9] {
+            let mut a = vec![0.0f32; m * n];
+            let mut b = vec![0.0f32; m * n];
+            let ra = dsg_vmm_compound_parallel_into(x.data(), m, d, w.data(), n, &mask, hint, 3, &mut a);
+            let rb = dsg_vmm_compound_parallel_into_kt(
+                kt,
+                x.data(),
+                m,
+                d,
+                w.data(),
+                n,
+                &mask,
+                hint,
+                3,
+                &mut b,
+            );
+            assert_eq!(ra, rb, "realized ops at hint {hint}");
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "forward bits at hint {hint}"
+            );
         }
     }
 }

@@ -1,0 +1,420 @@
+//! Runtime-detected SIMD primitives for the hot sparse kernels, and the
+//! ISA-selection machinery behind [`crate::sparse::parallel::KernelTable`].
+//!
+//! The crown-jewel invariant of this repo is that the DEFAULT kernels are
+//! bit-exact for any thread budget and any dispatch branch.  SIMD cannot
+//! join that contract for the dot-product family — an 8-lane vertical
+//! accumulation plus one horizontal fold reassociates the sum — so it is
+//! packaged as an explicitly opted-in relaxed mode (`--kernels simd`),
+//! never a silent upgrade.  The divergence surface is deliberately tiny:
+//!
+//! * [`Prims::dot`] / [`Prims::dot_sparse`] (the forward masked-VMM
+//!   family): 8-lane FMA vertical accumulators, one horizontal fold,
+//!   then the scalar 4-aligned-block tail from the 8-aligned boundary.
+//!   This is the ONLY place SIMD may differ from the scalar contract,
+//!   and the difference is bounded (see `docs/ARCHITECTURE.md`): for a
+//!   row of width d the observed |scalar - simd| is within
+//!   `4 * d * f32::EPSILON * sum(|x_q * w_q|)`.  When `d < 8` the vector
+//!   loop never runs and the result is bit-identical to the scalar
+//!   kernel.
+//! * [`Prims::axpy`] (the backward dX / gradW accumulate): vectorized
+//!   with separate multiply + add (NOT fused), so every output slot sees
+//!   exactly the scalar `orow[p] += g * xrow[p]` rounding sequence —
+//!   bit-identical, lanes are independent accumulators.
+//! * [`bitmask_count_avx2`] (the ZVC bitmask/count pass): `x != 0.0`
+//!   evaluated as `_CMP_NEQ_UQ` (unordered-or-not-equal), which matches
+//!   the scalar comparison exactly — NaN is nonzero, ±0.0 is zero — so
+//!   ZVC compression stays bit-lossless under SIMD.
+//!
+//! The indexed scatter in `axpy_sparse` stays scalar everywhere: AVX2
+//! has gathers but no scatter, and emulating one costs more than the
+//! scalar walk.
+//!
+//! Detection happens once per process ([`active_isa`]): `DSG_SIMD=off`
+//! (or `scalar`) forces the portable fallback, anything else defers to
+//! `is_x86_feature_detected!("avx2")` + `("fma")`.  Non-x86 builds
+//! compile none of the intrinsics and always report [`Isa::Scalar`].
+
+use std::sync::OnceLock;
+
+/// Instruction sets the kernel layer can dispatch to.  `Avx2Fma` is only
+/// ever reported on x86/x86_64 after a positive runtime probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernels — the bit-exact contract, every target.
+    Scalar,
+    /// AVX2 + FMA (256-bit, 8 f32 lanes), runtime-detected.
+    Avx2Fma,
+}
+
+impl Isa {
+    /// Stable label for logs / bench JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+/// One-chunk ZVC bitmask+count kernel: set bit `i % 8` of `mask[i / 8]`
+/// for every nonzero `xs[i]` (mask pre-zeroed by the caller) and return
+/// the nonzero count.  [`crate::sparse::parallel::KernelTable`] carries
+/// the ISA-selected variant.
+pub type BitmaskCountFn = fn(&[f32], &mut [u8]) -> usize;
+
+/// What the hardware supports, ignoring any env override.
+pub fn detected_isa() -> Isa {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Isa::Avx2Fma;
+        }
+    }
+    Isa::Scalar
+}
+
+/// Resolve the `DSG_SIMD` override against the detected ISA — pure, so
+/// the forced-fallback rules are unit-testable without touching process
+/// env.  `off`/`scalar`/`0` force [`Isa::Scalar`]; `auto`/`on`/`1` (and
+/// unset) defer to detection; anything else warns and defers.
+pub fn isa_from_env(raw: Option<&str>, detected: Isa) -> (Isa, Option<String>) {
+    match raw {
+        None => (detected, None),
+        Some("off") | Some("scalar") | Some("0") => (Isa::Scalar, None),
+        Some("auto") | Some("on") | Some("1") => (detected, None),
+        Some(other) => (
+            detected,
+            Some(format!(
+                "DSG_SIMD={other:?} is not a SIMD mode (off | scalar | auto); using runtime detection ({})",
+                detected.label()
+            )),
+        ),
+    }
+}
+
+/// The ISA the `--kernels simd` mode actually runs on, resolved once per
+/// process (like `n_threads`): runtime detection, overridable with
+/// `DSG_SIMD=off` for forced-fallback testing and triage.
+pub fn active_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        let raw = std::env::var("DSG_SIMD").ok();
+        let (isa, warning) = isa_from_env(raw.as_deref(), detected_isa());
+        if let Some(w) = warning {
+            crate::warn!("{w}");
+        }
+        isa
+    })
+}
+
+/// Primitive ops the generic chunk kernels in
+/// [`crate::sparse::parallel`] are written against.  `ScalarPrims`
+/// (defined next to the scalar helpers it delegates to) reproduces
+/// today's bit-exact contract; [`Avx2Prims`] is the relaxed AVX2/FMA
+/// set.  Monomorphizing the chunk kernels over this trait is what the
+/// per-process dispatch table selects between — no per-call branching
+/// inside the kernels.
+pub trait Prims {
+    const ISA: Isa;
+
+    /// Dense dot product `row . wrow` over `0..d`.
+    fn dot(row: &[f32], wrow: &[f32], d: usize) -> f32;
+
+    /// Sparse dot product over the gathered ascending nonzero
+    /// coordinates `nz` of `row`.
+    fn dot_sparse(nz: &[u32], row: &[f32], wrow: &[f32], d: usize) -> f32;
+
+    /// `orow[p] += g * xrow[p]` for all `p` — independent slots, must be
+    /// bit-identical to the scalar loop in every implementation.
+    fn axpy(orow: &mut [f32], g: f32, xrow: &[f32]);
+}
+
+/// Portable scalar ZVC bitmask/count pass — the reference the SIMD
+/// variant is ULP-free-identical to (the comparison is exact either
+/// way).  Also the serial path used below the parallel threshold.
+pub fn bitmask_count_scalar(xs: &[f32], mask: &mut [u8]) -> usize {
+    let mut count = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x != 0.0 {
+            mask[i / 8] |= 1 << (i % 8);
+            count += 1;
+        }
+    }
+    count
+}
+
+// ---------------------------------------------------------------------------
+// AVX2/FMA implementations (x86 / x86_64 only)
+// ---------------------------------------------------------------------------
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// Deterministic pairwise fold of the 8 vertical accumulator lanes.
+    /// The order is fixed (lane L pairs with lane L+4, then a balanced
+    /// tree), so a given input always folds to the same bits.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(acc: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+    }
+
+    /// 8-lane FMA dot product + horizontal fold + the scalar
+    /// 4-aligned-block tail from the 8-aligned boundary.  For `d < 8`
+    /// the vector loop never runs and this is bit-identical to the
+    /// scalar `vmm_dot` (the fold of an all-zero accumulator is +0.0,
+    /// the same starting value).
+    ///
+    /// # Safety
+    /// Caller must have verified avx2+fma support at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(row: &[f32], wrow: &[f32], d: usize) -> f32 {
+        debug_assert!(row.len() >= d && wrow.len() >= d);
+        let mut acc = _mm256_setzero_ps();
+        let mut p = 0usize;
+        while p + 8 <= d {
+            let a = _mm256_loadu_ps(row.as_ptr().add(p));
+            let b = _mm256_loadu_ps(wrow.as_ptr().add(p));
+            acc = _mm256_fmadd_ps(a, b, acc);
+            p += 8;
+        }
+        let mut sum = hsum(acc);
+        // the 8-aligned boundary is 4-aligned, so the tail follows the
+        // scalar contract's block pattern exactly
+        while p + 4 <= d {
+            sum += row[p] * wrow[p]
+                + row[p + 1] * wrow[p + 1]
+                + row[p + 2] * wrow[p + 2]
+                + row[p + 3] * wrow[p + 3];
+            p += 4;
+        }
+        while p < d {
+            sum += row[p] * wrow[p];
+            p += 1;
+        }
+        sum
+    }
+
+    /// Gathered 8-lane FMA dot over the nonzero coordinates: loads 8
+    /// indices at a time and `vgatherdps`-fetches both operands.
+    /// Indices must fit in i32 (the kernel layer asserts `d <= u32::MAX`
+    /// and real layer widths are far below 2^31).
+    ///
+    /// # Safety
+    /// Caller must have verified avx2+fma support at runtime; every
+    /// `nz[i]` must be a valid index into both `row` and `wrow`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_sparse(nz: &[u32], row: &[f32], wrow: &[f32]) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= nz.len() {
+            let idx = _mm256_loadu_si256(nz.as_ptr().add(i) as *const __m256i);
+            let a = _mm256_i32gather_ps::<4>(row.as_ptr(), idx);
+            let b = _mm256_i32gather_ps::<4>(wrow.as_ptr(), idx);
+            acc = _mm256_fmadd_ps(a, b, acc);
+            i += 8;
+        }
+        let mut sum = hsum(acc);
+        while i < nz.len() {
+            let q = nz[i] as usize;
+            sum += row[q] * wrow[q];
+            i += 1;
+        }
+        sum
+    }
+
+    /// Vectorized `orow[p] += g * xrow[p]` with SEPARATE multiply and
+    /// add (no FMA): each slot sees exactly the scalar rounding
+    /// sequence, so this is bit-identical to the scalar axpy.
+    ///
+    /// # Safety
+    /// Caller must have verified avx2+fma support at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(orow: &mut [f32], g: f32, xrow: &[f32]) {
+        let d = orow.len();
+        debug_assert!(xrow.len() >= d);
+        let gv = _mm256_set1_ps(g);
+        let mut p = 0usize;
+        while p + 8 <= d {
+            let x = _mm256_loadu_ps(xrow.as_ptr().add(p));
+            let o = _mm256_loadu_ps(orow.as_ptr().add(p));
+            let r = _mm256_add_ps(o, _mm256_mul_ps(gv, x));
+            _mm256_storeu_ps(orow.as_mut_ptr().add(p), r);
+            p += 8;
+        }
+        while p < d {
+            orow[p] += g * xrow[p];
+            p += 1;
+        }
+    }
+
+    /// Vectorized ZVC bitmask/count: `_CMP_NEQ_UQ` against +0.0 turns 8
+    /// lanes into a movemask byte whose bit L is exactly the scalar
+    /// `xs[i0 + L] != 0.0` (NaN compares nonzero, ±0.0 compares zero),
+    /// so the produced bitmask and count are bit-identical to
+    /// [`super::bitmask_count_scalar`].
+    ///
+    /// # Safety
+    /// Caller must have verified avx2+fma support at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn bitmask_count(xs: &[f32], mask: &mut [u8]) -> usize {
+        let n = xs.len();
+        debug_assert!(mask.len() >= n.div_ceil(8));
+        let zero = _mm256_setzero_ps();
+        let mut count = 0usize;
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let neq = _mm256_cmp_ps::<_CMP_NEQ_UQ>(v, zero);
+            let bits = _mm256_movemask_ps(neq) as u8;
+            mask[i / 8] = bits;
+            count += bits.count_ones() as usize;
+            i += 8;
+        }
+        while i < n {
+            if xs[i] != 0.0 {
+                mask[i / 8] |= 1 << (i % 8);
+                count += 1;
+            }
+            i += 1;
+        }
+        count
+    }
+}
+
+/// The AVX2/FMA primitive set.  Instantiations of the generic chunk
+/// kernels over this type are only ever reachable through a
+/// [`crate::sparse::parallel::KernelTable`] handed out after a positive
+/// runtime probe, which is what makes the `unsafe` target-feature calls
+/// sound.
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub struct Avx2Prims;
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+impl Prims for Avx2Prims {
+    const ISA: Isa = Isa::Avx2Fma;
+
+    #[inline]
+    fn dot(row: &[f32], wrow: &[f32], d: usize) -> f32 {
+        // SAFETY: reachable only via tables gated on runtime detection
+        unsafe { avx2::dot(row, wrow, d) }
+    }
+
+    #[inline]
+    fn dot_sparse(nz: &[u32], row: &[f32], wrow: &[f32], _d: usize) -> f32 {
+        // SAFETY: reachable only via tables gated on runtime detection
+        unsafe { avx2::dot_sparse(nz, row, wrow) }
+    }
+
+    #[inline]
+    fn axpy(orow: &mut [f32], g: f32, xrow: &[f32]) {
+        // SAFETY: reachable only via tables gated on runtime detection
+        unsafe { avx2::axpy(orow, g, xrow) }
+    }
+}
+
+/// Safe entry for the AVX2 ZVC pass (the [`BitmaskCountFn`] slot of the
+/// AVX2 kernel table).
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub fn bitmask_count_avx2(xs: &[f32], mask: &mut [u8]) -> usize {
+    // SAFETY: reachable only via tables gated on runtime detection
+    unsafe { avx2::bitmask_count(xs, mask) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_env_override_rules() {
+        // forced fallback: the three accepted spellings all force Scalar
+        for raw in ["off", "scalar", "0"] {
+            let (isa, warn) = isa_from_env(Some(raw), Isa::Avx2Fma);
+            assert_eq!(isa, Isa::Scalar);
+            assert!(warn.is_none());
+        }
+        // explicit + implicit auto defer to detection
+        for raw in [Some("auto"), Some("on"), Some("1"), None] {
+            assert_eq!(isa_from_env(raw, Isa::Avx2Fma), (Isa::Avx2Fma, None));
+            assert_eq!(isa_from_env(raw, Isa::Scalar), (Isa::Scalar, None));
+        }
+        // junk values warn (naming the variable) and defer to detection
+        let (isa, warn) = isa_from_env(Some("fast"), Isa::Scalar);
+        assert_eq!(isa, Isa::Scalar);
+        let w = warn.expect("junk DSG_SIMD must warn");
+        assert!(w.contains("DSG_SIMD"), "warning must name the variable: {w}");
+    }
+
+    #[test]
+    fn scalar_bitmask_counts_nan_and_skips_signed_zero() {
+        let xs = [0.0f32, -0.0, f32::NAN, 1.0, f32::MIN_POSITIVE / 2.0, 0.0, -2.0, 0.0, 5.0];
+        let mut mask = vec![0u8; 2];
+        let nnz = bitmask_count_scalar(&xs, &mut mask);
+        assert_eq!(nnz, 5); // NaN + 1.0 + subnormal + -2.0 + 5.0
+        assert_eq!(mask[0], 0b0101_1100);
+        assert_eq!(mask[1], 0b0000_0001);
+    }
+
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_bitmask_bit_identical_to_scalar() {
+        if detected_isa() != Isa::Avx2Fma {
+            return; // nothing to compare against on this host
+        }
+        let mut xs = Vec::new();
+        for i in 0..259 {
+            xs.push(match i % 7 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::NAN,
+                3 => f32::MIN_POSITIVE / 4.0,
+                _ => (i as f32) - 100.0,
+            });
+        }
+        for n in [0usize, 1, 7, 8, 9, 64, 255, 259] {
+            let mut a = vec![0u8; n.div_ceil(8)];
+            let mut b = vec![0u8; n.div_ceil(8)];
+            let ca = bitmask_count_scalar(&xs[..n], &mut a);
+            let cb = bitmask_count_avx2(&xs[..n], &mut b);
+            assert_eq!(ca, cb, "count at n={n}");
+            assert_eq!(a, b, "mask bytes at n={n}");
+        }
+    }
+
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_axpy_bit_identical_to_scalar() {
+        if detected_isa() != Isa::Avx2Fma {
+            return;
+        }
+        let mut rng = 0x1234_5678_u64;
+        let mut next = move || {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((rng >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for d in [0usize, 1, 3, 7, 8, 9, 15, 16, 33, 100] {
+            let x: Vec<f32> = (0..d).map(|_| next()).collect();
+            let base: Vec<f32> = (0..d).map(|_| next()).collect();
+            let g = next() * 3.0;
+            let mut a = base.clone();
+            let mut b = base.clone();
+            for p in 0..d {
+                a[p] += g * x[p];
+            }
+            Avx2Prims::axpy(&mut b, g, &x);
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "axpy bits at d={d}"
+            );
+        }
+    }
+}

@@ -31,6 +31,7 @@
 //! beyond `n` all return `None`.
 
 use crate::sparse::pool::{Task, WorkerPool};
+use crate::sparse::simd;
 
 /// A ZVC-compressed f32 buffer.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -113,8 +114,16 @@ fn chunk_plan(n: usize, threads: usize) -> Option<ChunkPlan> {
 }
 
 /// Pass 1 on the pool: per-chunk bitmask fill + nnz count.  Resets and
-/// fills `out.bitmask`; returns per-chunk counts.
-fn bitmask_count_pass(xs: &[f32], plan: ChunkPlan, out: &mut Compressed) -> Vec<usize> {
+/// fills `out.bitmask`; returns per-chunk counts.  `bm` is the bitmask
+/// primitive each chunk runs — every entry in a kernel table produces
+/// byte-identical masks and counts, so swapping it never changes the
+/// encoding, only the sweep speed.
+fn bitmask_count_pass(
+    xs: &[f32],
+    plan: ChunkPlan,
+    bm: simd::BitmaskCountFn,
+    out: &mut Compressed,
+) -> Vec<usize> {
     let n = xs.len();
     out.n = n;
     out.bitmask.clear();
@@ -132,14 +141,7 @@ fn bitmask_count_pass(xs: &[f32], plan: ChunkPlan, out: &mut Compressed) -> Vec<
         nnz_rest = ctail;
         let xchunk = &xs[lo..hi];
         tasks.push(Box::new(move || {
-            let mut count = 0usize;
-            for (i, &x) in xchunk.iter().enumerate() {
-                if x != 0.0 {
-                    mmine[i / 8] |= 1 << (i % 8);
-                    count += 1;
-                }
-            }
-            cmine[0] = count;
+            cmine[0] = bm(xchunk, mmine);
         }));
     }
     WorkerPool::global().run(tasks);
@@ -179,10 +181,22 @@ fn values_pass(xs: &[f32], plan: ChunkPlan, nnz: &[usize], out: &mut Compressed)
 /// (1) per-chunk bitmask fill + nnz count, (2) prefix-sum offsets, then
 /// per-chunk value scatter.
 pub fn compress_parallel_into(xs: &[f32], threads: usize, out: &mut Compressed) {
+    compress_parallel_into_bm(xs, threads, simd::bitmask_count_scalar, out)
+}
+
+/// [`compress_parallel_into`] with an explicit bitmask primitive (from a
+/// kernel table).  The serial small-input branch always runs the scalar
+/// sweep — dispatch overhead is the enemy there, not ALU width.
+pub fn compress_parallel_into_bm(
+    xs: &[f32],
+    threads: usize,
+    bm: simd::BitmaskCountFn,
+    out: &mut Compressed,
+) {
     match chunk_plan(xs.len(), threads) {
         None => compress_into(xs, out),
         Some(plan) => {
-            let nnz = bitmask_count_pass(xs, plan, out);
+            let nnz = bitmask_count_pass(xs, plan, bm, out);
             values_pass(xs, plan, &nnz, out);
         }
     }
@@ -199,6 +213,17 @@ pub fn compress_parallel_into_if_smaller(
     threads: usize,
     out: &mut Compressed,
 ) -> Result<usize, usize> {
+    compress_parallel_into_if_smaller_bm(xs, threads, simd::bitmask_count_scalar, out)
+}
+
+/// [`compress_parallel_into_if_smaller`] with an explicit bitmask
+/// primitive (from a kernel table).
+pub fn compress_parallel_into_if_smaller_bm(
+    xs: &[f32],
+    threads: usize,
+    bm: simd::BitmaskCountFn,
+    out: &mut Compressed,
+) -> Result<usize, usize> {
     let n = xs.len();
     match chunk_plan(n, threads) {
         None => {
@@ -212,7 +237,7 @@ pub fn compress_parallel_into_if_smaller(
             Ok(nnz)
         }
         Some(plan) => {
-            let nnz = bitmask_count_pass(xs, plan, out);
+            let nnz = bitmask_count_pass(xs, plan, bm, out);
             let total: usize = nnz.iter().sum();
             if zvc_bytes_nnz(n, total) >= 4 * n {
                 return Err(total);

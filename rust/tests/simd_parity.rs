@@ -1,0 +1,511 @@
+//! SIMD/scalar parity for the `--kernels simd` mode.
+//!
+//! The default kernels are bit-exact; `SparseKernels::Simd` is the one
+//! explicitly relaxed mode.  These tests pin the relaxation to exactly
+//! the documented surface (docs/ARCHITECTURE.md, "Kernel dispatch & ISA
+//! detection"):
+//!
+//! * forward dot products (dense and gathered) may diverge from the
+//!   scalar contract, bounded by `4 * d * EPS * sum(|x_q * w_q|)` per
+//!   output element, and are bit-exact for `d < 8` on the dense dot;
+//! * the backward (dX, gradW) and the ZVC bitmask/count pass are
+//!   bit-identical on every kernel table;
+//! * a host without AVX2+FMA (or `DSG_SIMD=off`) routes `--kernels simd`
+//!   to the scalar table itself — forced fallback is bit-exact by
+//!   construction, which the pointer-identity test proves.
+//!
+//! On a non-AVX2 host the ULP tests still run: both tables are the
+//! scalar table and the bound holds trivially at zero divergence.
+
+use dsg::drs::topk::{self, RowMask};
+use dsg::serve::SynthModel;
+use dsg::sparse::parallel::{self, active_kernels, scalar_kernels, NzIndex, SparseKernels};
+use dsg::sparse::simd::{self, Isa};
+use dsg::tensor::Tensor;
+use dsg::util::Pcg32;
+use dsg::zvc;
+
+/// Adversarial value stream: exact zeros, negative zero, subnormals,
+/// large/small magnitudes and sign flips (catastrophic-cancellation
+/// bait), from a deterministic generator.
+fn adversarial_vec(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| match i % 11 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE / 8.0,
+            3 => -f32::MIN_POSITIVE / 2.0,
+            4 => 1e6 * rng.uniform_in(-1.0, 1.0),
+            5 => 1e-6 * rng.uniform_in(-1.0, 1.0),
+            _ => rng.uniform_in(-2.0, 2.0),
+        })
+        .collect()
+}
+
+/// The documented per-element divergence bound for a width-`d` dot.
+fn ulp_bound(x: &[f32], w: &[f32], d: usize) -> f64 {
+    let mag: f64 = (0..d).map(|q| (x[q] as f64 * w[q] as f64).abs()).sum();
+    4.0 * d as f64 * f32::EPSILON as f64 * mag + f32::MIN_POSITIVE as f64
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn forced_fallback_is_the_scalar_table() {
+    // every non-Simd mode dispatches on the scalar table, always
+    assert!(std::ptr::eq(SparseKernels::Compound.table(), scalar_kernels()));
+    assert!(std::ptr::eq(SparseKernels::OutputSparse.table(), scalar_kernels()));
+    assert_eq!(scalar_kernels().isa, Isa::Scalar);
+    // when the probe (or DSG_SIMD=off) says scalar, Simd mode IS the
+    // scalar table — same static, so bit-exactness needs no further proof
+    if simd::active_isa() == Isa::Scalar {
+        assert!(std::ptr::eq(SparseKernels::Simd.table(), scalar_kernels()));
+    } else {
+        assert_eq!(SparseKernels::Simd.table().isa, Isa::Avx2Fma);
+    }
+    // the pure override rules behind DSG_SIMD, independent of process env
+    for raw in ["off", "scalar", "0"] {
+        assert_eq!(
+            simd::isa_from_env(Some(raw), Isa::Avx2Fma),
+            (Isa::Scalar, None),
+            "DSG_SIMD={raw} must force scalar"
+        );
+    }
+    let (isa, warn) = simd::isa_from_env(Some("bogus"), Isa::Avx2Fma);
+    assert_eq!(isa, Isa::Avx2Fma);
+    assert!(warn.expect("junk value must warn").contains("DSG_SIMD"));
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[test]
+fn avx2_dot_within_ulp_bound_and_exact_below_lane_width() {
+    use dsg::sparse::parallel::ScalarPrims;
+    use dsg::sparse::simd::{Avx2Prims, Prims};
+    if simd::detected_isa() != Isa::Avx2Fma {
+        return; // no vector unit to compare against
+    }
+    let mut rng = Pcg32::seeded(41);
+    for d in [0usize, 1, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 31, 32, 33, 100, 257] {
+        let x = adversarial_vec(&mut rng, d);
+        let w = adversarial_vec(&mut rng, d);
+        let s = ScalarPrims::dot(&x, &w, d);
+        let v = Avx2Prims::dot(&x, &w, d);
+        if d < 8 {
+            // vector loop never runs: the tail IS the scalar contract
+            assert_eq!(s.to_bits(), v.to_bits(), "dot must be bit-exact at d={d}");
+        } else {
+            let err = (s as f64 - v as f64).abs();
+            let bound = ulp_bound(&x, &w, d);
+            assert!(err <= bound, "dot d={d}: |{s} - {v}| = {err} > bound {bound}");
+        }
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[test]
+fn avx2_dot_sparse_skips_masked_lanes_and_stays_bounded() {
+    use dsg::sparse::parallel::ScalarPrims;
+    use dsg::sparse::simd::{Avx2Prims, Prims};
+    if simd::detected_isa() != Isa::Avx2Fma {
+        return;
+    }
+    let mut rng = Pcg32::seeded(43);
+    for d in [16usize, 33, 100, 257] {
+        let mut x = adversarial_vec(&mut rng, d);
+        let mut w = adversarial_vec(&mut rng, d);
+        // gathered coordinates: every third lane, plus a ragged tail so
+        // nz.len() is not a multiple of 8
+        let nz: Vec<u32> = (0..d as u32).filter(|q| q % 3 != 1).collect();
+        // poison every coordinate OUTSIDE the gather list: the kernels
+        // must never read them (NaN would otherwise reach the result)
+        for q in 0..d as u32 {
+            if !nz.contains(&q) {
+                x[q as usize] = f32::NAN;
+                w[q as usize] = f32::NAN;
+            }
+        }
+        let clean =
+            |q: u32| -> (f32, f32) { (x[q as usize], w[q as usize]) };
+        let mag: f64 = nz
+            .iter()
+            .map(|&q| {
+                let (a, b) = clean(q);
+                (a as f64 * b as f64).abs()
+            })
+            .sum();
+        let s = ScalarPrims::dot_sparse(&nz, &x, &w, d);
+        let v = Avx2Prims::dot_sparse(&nz, &x, &w, d);
+        assert!(s.is_finite(), "scalar read a poisoned lane at d={d}");
+        assert!(v.is_finite(), "simd read a poisoned lane at d={d}");
+        let bound = 4.0 * d as f64 * f32::EPSILON as f64 * mag + f32::MIN_POSITIVE as f64;
+        let err = (s as f64 - v as f64).abs();
+        assert!(err <= bound, "dot_sparse d={d}: err {err} > bound {bound}");
+        // empty gather list: nothing to reassociate
+        assert_eq!(
+            ScalarPrims::dot_sparse(&[], &x, &w, d).to_bits(),
+            Avx2Prims::dot_sparse(&[], &x, &w, d).to_bits()
+        );
+    }
+}
+
+/// Forward entry points, active table vs scalar table, both mask
+/// layouts, both density bands: every selected output within the ULP
+/// bound, every unselected output bit-identical between tables (the
+/// kernels zero them the same way), NaN in never-selected weight columns
+/// never contaminating a result.
+#[test]
+fn forward_entries_active_vs_scalar_within_ulp() {
+    let (m, d, n) = (13, 37, 24);
+    let mut rng = Pcg32::seeded(47);
+    let x = adversarial_vec(&mut rng, m * d);
+    let mut w = adversarial_vec(&mut rng, n * d); // (n, d) transposed layout
+    let virt = Tensor::new(&[m, n], rng.normal_vec(m * n, 1.0));
+
+    let mut masks: Vec<RowMask> = Vec::new();
+    masks.push(topk::select_rowmask(&virt, 0.6)); // unstructured CSR
+    let mut fixed = RowMask::new();
+    fixed.fill_topk(virt.data(), m, n, 7, &mut Vec::new()); // packed FixedK
+    masks.push(fixed);
+
+    // poison a weight column no mask selects; selection is per-mask, so
+    // find a column unselected in BOTH (fall back to none if all used)
+    'poison: for j in 0..n {
+        for mask in &masks {
+            for i in 0..m {
+                if mask.row(i).contains(&(j as u32)) {
+                    continue 'poison;
+                }
+            }
+        }
+        for q in 0..d {
+            w[j * d + q] = f32::NAN;
+        }
+        break;
+    }
+
+    for mask in &masks {
+        for in_density in [1.0f32, 0.05] {
+            let mut scalar_out = vec![0.0f32; m * n];
+            let mut simd_out = vec![0.0f32; m * n];
+            let r_s = parallel::dsg_vmm_compound_parallel_into_kt(
+                scalar_kernels(),
+                &x,
+                m,
+                d,
+                &w,
+                n,
+                mask,
+                in_density,
+                3,
+                &mut scalar_out,
+            );
+            let r_v = parallel::dsg_vmm_compound_parallel_into_kt(
+                active_kernels(),
+                &x,
+                m,
+                d,
+                &w,
+                n,
+                mask,
+                in_density,
+                3,
+                &mut simd_out,
+            );
+            assert_eq!(r_s, r_v, "realized-op counts are mode-independent");
+            for i in 0..m {
+                let sel = mask.row(i);
+                for j in 0..n {
+                    let (a, b) = (scalar_out[i * n + j], simd_out[i * n + j]);
+                    if sel.contains(&(j as u32)) {
+                        assert!(a.is_finite() && b.is_finite(), "NaN leak at ({i},{j})");
+                        let bound = ulp_bound(&x[i * d..(i + 1) * d], &w[j * d..(j + 1) * d], d);
+                        let err = (a as f64 - b as f64).abs();
+                        assert!(
+                            err <= bound,
+                            "({i},{j}) density {in_density}: err {err} > bound {bound}"
+                        );
+                    } else {
+                        assert_eq!(a.to_bits(), b.to_bits(), "unselected ({i},{j}) must match");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The backward family is bit-exact on EVERY table (axpy has independent
+/// slots and uses separate mul+add in SIMD): dX and gradW from the
+/// active table must equal the scalar table to the bit, both layouts,
+/// plain and compound entries.
+#[test]
+fn backward_and_gradw_bit_exact_on_active_table() {
+    let (m, d, n) = (11, 41, 18);
+    let mut rng = Pcg32::seeded(53);
+    let x = adversarial_vec(&mut rng, m * d);
+    let w = adversarial_vec(&mut rng, n * d);
+    let mut dy = adversarial_vec(&mut rng, m * n);
+    // exact-zero gradients exercise the g == 0 skip branches
+    for i in (0..dy.len()).step_by(5) {
+        dy[i] = 0.0;
+    }
+    let virt = Tensor::new(&[m, n], rng.normal_vec(m * n, 1.0));
+    let mut masks: Vec<RowMask> = vec![topk::select_rowmask(&virt, 0.5)];
+    let mut fixed = RowMask::new();
+    fixed.fill_topk(virt.data(), m, n, 5, &mut Vec::new());
+    masks.push(fixed);
+    let mut nzx = NzIndex::new();
+    nzx.fill_from_rows(&x, m, d);
+
+    for mask in &masks {
+        let (mut dx_s, mut dx_v) = (vec![0.0f32; m * d], vec![0.0f32; m * d]);
+        parallel::dsg_vmm_rowmask_backward_parallel_into_kt(
+            scalar_kernels(),
+            &dy,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut dx_s,
+        );
+        parallel::dsg_vmm_rowmask_backward_parallel_into_kt(
+            active_kernels(),
+            &dy,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut dx_v,
+        );
+        assert_eq!(bits(&dx_s), bits(&dx_v), "plain dX must be bit-exact");
+
+        dx_s.iter_mut().for_each(|v| *v = 0.0);
+        dx_v.iter_mut().for_each(|v| *v = 0.0);
+        let c_s = parallel::dsg_vmm_rowmask_backward_compound_parallel_into_kt(
+            scalar_kernels(),
+            &dy,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut dx_s,
+        );
+        let c_v = parallel::dsg_vmm_rowmask_backward_compound_parallel_into_kt(
+            active_kernels(),
+            &dy,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut dx_v,
+        );
+        assert_eq!(c_s, c_v);
+        assert_eq!(bits(&dx_s), bits(&dx_v), "compound dX must be bit-exact");
+
+        let (mut gw_s, mut gw_v) = (vec![0.0f32; n * d], vec![0.0f32; n * d]);
+        parallel::dsg_vmm_rowmask_gradw_parallel_into_kt(
+            scalar_kernels(),
+            &x,
+            &dy,
+            m,
+            d,
+            n,
+            mask,
+            2,
+            &mut gw_s,
+        );
+        parallel::dsg_vmm_rowmask_gradw_parallel_into_kt(
+            active_kernels(),
+            &x,
+            &dy,
+            m,
+            d,
+            n,
+            mask,
+            2,
+            &mut gw_v,
+        );
+        assert_eq!(bits(&gw_s), bits(&gw_v), "plain gradW must be bit-exact");
+
+        gw_s.iter_mut().for_each(|v| *v = 0.0);
+        gw_v.iter_mut().for_each(|v| *v = 0.0);
+        let g_s = parallel::dsg_vmm_rowmask_gradw_compound_parallel_into_kt(
+            scalar_kernels(),
+            &x,
+            &dy,
+            m,
+            d,
+            n,
+            mask,
+            &nzx,
+            2,
+            &mut gw_s,
+        );
+        let g_v = parallel::dsg_vmm_rowmask_gradw_compound_parallel_into_kt(
+            active_kernels(),
+            &x,
+            &dy,
+            m,
+            d,
+            n,
+            mask,
+            &nzx,
+            2,
+            &mut gw_v,
+        );
+        assert_eq!(g_s, g_v);
+        assert_eq!(bits(&gw_s), bits(&gw_v), "compound gradW must be bit-exact");
+    }
+}
+
+/// `d < 8` means the AVX2 dot's vector loop never runs: the whole
+/// forward is bit-exact even in Simd mode.
+#[test]
+fn forward_below_lane_width_bit_exact() {
+    let (m, d, n) = (9, 7, 12);
+    let mut rng = Pcg32::seeded(59);
+    let x = adversarial_vec(&mut rng, m * d);
+    let w = adversarial_vec(&mut rng, n * d);
+    let virt = Tensor::new(&[m, n], rng.normal_vec(m * n, 1.0));
+    let mask = topk::select_rowmask(&virt, 0.4);
+    let (mut a, mut b) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+    parallel::dsg_vmm_rowmask_parallel_into_kt(scalar_kernels(), &x, m, d, &w, n, &mask, 2, &mut a);
+    parallel::dsg_vmm_rowmask_parallel_into_kt(active_kernels(), &x, m, d, &w, n, &mask, 2, &mut b);
+    assert_eq!(bits(&a), bits(&b), "d < 8 forward must be bit-exact");
+}
+
+/// Degenerate selections: k = 0 FixedK masks and fully-empty CSR rows
+/// produce identical (all-zero / untouched) outputs on every table.
+#[test]
+fn degenerate_masks_identical_across_tables() {
+    let (m, d, n) = (6, 19, 10);
+    let mut rng = Pcg32::seeded(61);
+    let x = adversarial_vec(&mut rng, m * d);
+    let w = adversarial_vec(&mut rng, n * d);
+    let virt: Vec<f32> = rng.normal_vec(m * n, 1.0);
+
+    let mut k0 = RowMask::new();
+    k0.fill_topk(&virt, m, n, 0, &mut Vec::new());
+    let mut empty = RowMask::new();
+    empty.fill_from_threshold(&virt, m, n, f32::INFINITY);
+
+    for mask in [&k0, &empty] {
+        assert_eq!(mask.selected(), 0);
+        let (mut a, mut b) = (vec![9.0f32; m * n], vec![9.0f32; m * n]);
+        parallel::dsg_vmm_rowmask_parallel_into_kt(
+            scalar_kernels(),
+            &x,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut a,
+        );
+        parallel::dsg_vmm_rowmask_parallel_into_kt(
+            active_kernels(),
+            &x,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut b,
+        );
+        assert_eq!(bits(&a), bits(&b), "degenerate forward must match");
+        let (mut dxa, mut dxb) = (vec![0.0f32; m * d], vec![0.0f32; m * d]);
+        let dy = vec![1.0f32; m * n];
+        parallel::dsg_vmm_rowmask_backward_parallel_into_kt(
+            scalar_kernels(),
+            &dy,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut dxa,
+        );
+        parallel::dsg_vmm_rowmask_backward_parallel_into_kt(
+            active_kernels(),
+            &dy,
+            m,
+            d,
+            &w,
+            n,
+            mask,
+            2,
+            &mut dxb,
+        );
+        assert_eq!(bits(&dxa), bits(&dxb), "degenerate backward must match");
+        assert!(dxa.iter().all(|v| *v == 0.0), "no selection => zero dX");
+    }
+}
+
+/// The ZVC bitmask/count pass is bit-identical on every table: same
+/// bytes, same counts, same packed values — NaN counts as nonzero, ±0.0
+/// as zero — on both sides of the serial/parallel threshold.
+#[test]
+fn zvc_bitmask_parity_across_tables() {
+    let mut rng = Pcg32::seeded(67);
+    // > 2 * PAR_MIN_ELEMS (16 * 1024): threads=4 takes the chunked path;
+    // the +5 tail exercises the ragged final mask byte
+    for len in [96usize, 40 * 1024 + 5] {
+        let mut xs = adversarial_vec(&mut rng, len);
+        xs[len / 2] = f32::NAN; // NaN is nonzero to the codec
+        let mut serial = zvc::Compressed::new();
+        zvc::compress_into(&xs, &mut serial);
+        for table in [scalar_kernels(), active_kernels()] {
+            let mut c = zvc::Compressed::new();
+            zvc::compress_parallel_into_bm(&xs, 4, table.zvc_bitmask, &mut c);
+            assert_eq!(c.n, serial.n);
+            assert_eq!(c.bitmask, serial.bitmask, "mask bytes ({})", table.isa.label());
+            assert_eq!(bits(&c.values), bits(&serial.values), "{}", table.isa.label());
+        }
+        // the win-gated twin agrees on the nnz measurement
+        let mut c = zvc::Compressed::new();
+        let r_s =
+            zvc::compress_parallel_into_if_smaller_bm(&xs, 4, scalar_kernels().zvc_bitmask, &mut c);
+        let mut c2 = zvc::Compressed::new();
+        let r_v =
+            zvc::compress_parallel_into_if_smaller_bm(&xs, 4, active_kernels().zvc_bitmask, &mut c2);
+        assert_eq!(r_s, r_v);
+    }
+}
+
+/// Engine-level smoke: a SynthModel in Simd mode serves finite logits
+/// close to the scalar model's (bitwise-equal when the active ISA is
+/// scalar — the forced-fallback path).
+#[test]
+fn synth_model_simd_mode_smoke() {
+    let base = SynthModel::new(3, &[64, 96, 80], 10, 0.7);
+    let xs = base.synth_image(11).repeat(4);
+    let a = base.forward(&xs, 4).unwrap();
+    let b = SynthModel::new(3, &[64, 96, 80], 10, 0.7)
+        .with_kernels(SparseKernels::Simd)
+        .forward(&xs, 4)
+        .unwrap();
+    assert_eq!(a.len(), b.len());
+    if simd::active_isa() == Isa::Scalar {
+        assert_eq!(bits(&a), bits(&b), "forced fallback must serve identical bits");
+    } else {
+        for (i, (s, v)) in a.iter().zip(&b).enumerate() {
+            assert!(v.is_finite(), "logit {i} not finite under simd");
+            assert!(
+                (s - v).abs() <= 1e-3 * (1.0 + s.abs()),
+                "logit {i}: scalar {s} vs simd {v}"
+            );
+        }
+    }
+}
