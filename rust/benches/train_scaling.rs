@@ -1,0 +1,151 @@
+//! Data-parallel training scaling: the SAME run at `--shards` 1/2/4/8,
+//! asserted bit-identical (losses, digest), with epoch wall-clock per
+//! shard count and the ZVC gradient-exchange wire accounting.
+//!
+//! The batch is 8 rows = 8 one-row micro-leaves, so every leaf's
+//! gradient carries that single row's DSG mask zeros — the regime the
+//! paper's gradient-exchange compression claim is about.  The bench
+//! FAILS if the dense/wire ratio drops under 1.5x at gamma 0.5, or if
+//! any shard count moves a bit.
+//!
+//! Writes machine-readable `BENCH_train.json` (override the path with
+//! `DSG_BENCH_OUT`) — uploaded by CI as the training perf artifact.
+//!
+//!     cargo bench --bench train_scaling
+//!     DSG_TRAIN_SMOKE=1 cargo bench --bench train_scaling   # CI: tiny
+//!     DSG_TRAIN_STEPS=200 cargo bench --bench train_scaling
+
+use dsg::config::{GammaSchedule, RunConfig};
+use dsg::native::train::TapeStorage;
+use dsg::native::zoo::{self, ModelSpec};
+use dsg::train::ParallelTrainer;
+use dsg::util::json::{obj, Json};
+use std::time::Instant;
+
+struct Point {
+    shards: usize,
+    wall_secs: f64,
+    epoch_secs: f64,
+    digest: u64,
+    final_loss: f32,
+    retries: u64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("DSG_TRAIN_SMOKE").is_ok();
+    let steps = std::env::var("DSG_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(if smoke { 10 } else { 60 });
+    let width = if smoke { 32 } else { 128 };
+    let batch = 8; // = LEAVES one-row micro-leaves
+    let spec = ModelSpec::custom_mlp("scale_mlp", &[784, width], 10, batch);
+
+    let mut cfg = RunConfig::preset_for_model("mlp");
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.train_size = if smoke { 64 } else { 512 };
+    cfg.test_size = 32;
+    cfg.gamma = GammaSchedule::Constant(0.5);
+    let (train, test) = dsg::benchutil::data_for(&cfg);
+    let batches_per_epoch = (cfg.train_size + batch - 1) / batch;
+
+    println!("train_scaling: {steps} steps, batch {batch}, hidden {width}, gamma 0.5");
+    println!(
+        "{:>7} {:>10} {:>12} {:>12} {:>18}",
+        "shards", "wall (s)", "epoch (s)", "final loss", "digest"
+    );
+    let mut points: Vec<Point> = Vec::new();
+    let mut wire = None;
+    for shards in [1usize, 2, 4, 8] {
+        let meta = zoo::synth_meta(&spec)?;
+        let mut t = ParallelTrainer::new(meta, 7, shards)?.with_tape(TapeStorage::Zvc);
+        let t0 = Instant::now();
+        t.train(&cfg, &train, &test)?;
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let epoch_secs = wall_secs / steps as f64 * batches_per_epoch as f64;
+        let digest = t.state.digest();
+        let final_loss = t.history.steps.last().map(|s| s.loss).unwrap_or(f32::NAN);
+        let retries: u64 = t.shard_stats().iter().map(|s| s.retries).sum();
+        println!(
+            "{:>7} {:>10.3} {:>12.3} {:>12.4} {:>18}",
+            shards,
+            wall_secs,
+            epoch_secs,
+            final_loss,
+            format!("{digest:016x}")
+        );
+        wire = Some(t.wire_stats());
+        points.push(Point { shards, wall_secs, epoch_secs, digest, final_loss, retries });
+    }
+
+    // the crown-jewel assertion: the shard count never moves a bit
+    let d0 = points[0].digest;
+    for p in &points {
+        anyhow::ensure!(
+            p.digest == d0,
+            "digest diverged at {} shards: {:016x} vs {:016x}",
+            p.shards,
+            p.digest,
+            d0
+        );
+        anyhow::ensure!(
+            p.final_loss.to_bits() == points[0].final_loss.to_bits(),
+            "final loss diverged at {} shards",
+            p.shards
+        );
+    }
+
+    // gradient-exchange accounting from the last (8-shard) run
+    let w = wire.expect("at least one run");
+    let ratio = w.ratio();
+    println!(
+        "gradient exchange: {} wire vs {} dense -> {ratio:.2}x (frames {} bytes)",
+        w.grad_wire_bytes, w.grad_dense_bytes, w.frame_bytes
+    );
+    anyhow::ensure!(
+        ratio >= 1.5,
+        "ZVC gradient exchange only {ratio:.2}x at gamma 0.5 (want >= 1.5x)"
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("train_scaling".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("steps", Json::Num(steps as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("gamma", Json::Num(0.5)),
+        ("bit_identical", Json::Bool(true)),
+        (
+            "scaling",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("shards", Json::Num(p.shards as f64)),
+                            ("wall_secs", Json::Num(p.wall_secs)),
+                            ("epoch_secs", Json::Num(p.epoch_secs)),
+                            ("final_loss", Json::Num(p.final_loss as f64)),
+                            ("retries", Json::Num(p.retries as f64)),
+                            ("digest", Json::Str(format!("{:016x}", p.digest))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gradient_exchange",
+            obj(vec![
+                ("frame_bytes", Json::Num(w.frame_bytes as f64)),
+                ("grad_wire_bytes", Json::Num(w.grad_wire_bytes as f64)),
+                ("grad_dense_bytes", Json::Num(w.grad_dense_bytes as f64)),
+                ("ratio", Json::Num(ratio)),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("DSG_BENCH_OUT").unwrap_or_else(|_| "BENCH_train.json".into());
+    std::fs::write(&out_path, report.to_string())?;
+    println!("\nwrote {out_path}");
+    println!("train_scaling OK (all shard counts bit-identical, exchange >= 1.5x)");
+    Ok(())
+}

@@ -9,12 +9,24 @@
 //! under some CRC or validated structurally, so a torn or bit-flipped
 //! file NEVER loads — it is skipped (see [`CheckpointDir::latest_valid`]).
 //!
-//! Write path: encode in memory → write to a sibling `.tmp` → fsync →
-//! atomic rename → fsync the parent directory.  A crash at any point
-//! leaves either the old file intact or a `.tmp` that loaders ignore;
-//! it can never tear the file a resume would read.  Fault-injection
-//! sites (`ckpt.write`, `ckpt.fsync`, `ckpt.rename` — see
-//! [`crate::util::faults`]) let tests kill the save at every stage.
+//! Write path: encode in memory → write to a sibling `.tmp` (name made
+//! unique per process + save, so two writers can never interleave into
+//! one staging file) → fsync → atomic rename → fsync the parent
+//! directory.  A crash at any point leaves either the old file intact
+//! or a `.tmp` that loaders ignore; it can never tear the file a resume
+//! would read.  Fault-injection sites (`ckpt.write`, `ckpt.fsync`,
+//! `ckpt.rename` — see [`crate::util::faults`]) let tests kill the save
+//! at every stage.
+//!
+//! Retention (keep-last-K) and the stray-`.tmp` sweep are serialized
+//! across processes sharing a `--ckpt-dir` by an exclusive
+//! `.retention.lock` file (`O_EXCL` create, deleted on drop, stale
+//! locks from crashed holders broken by age).  Without it two
+//! concurrent savers could list the directory at different moments and
+//! each prune the other's newest file; with it the sweep always sees a
+//! settled listing.  The tmp sweep additionally only removes `.tmp`
+//! files old enough that they cannot be another process's in-flight
+//! save.
 //!
 //! v1 files (`DSGCKPT1`, no steps / no CRC) still load, with
 //! `steps_done = 0`; the parse is hardened the same way.
@@ -25,6 +37,7 @@ use crate::util::faults;
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 const MAGIC_V1: &[u8; 8] = b"DSGCKPT1";
 const MAGIC_V2: &[u8; 8] = b"DSGCKPT2";
@@ -274,10 +287,17 @@ fn write_chunked(f: &mut std::fs::File, bytes: &[u8]) -> std::io::Result<()> {
     Ok(())
 }
 
-/// The sibling temp path a save stages into (`.{name}.tmp`).
+/// Monotonic per-process staging counter: with the pid it makes every
+/// save's tmp name unique, so concurrent savers (threads OR processes
+/// sharing a dir) never interleave writes into one staging file.
+static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// A fresh sibling temp path for one save (`.{name}.{pid}.{seq}.tmp`).
 fn tmp_path(path: &Path) -> PathBuf {
     let name = path.file_name().map(|n| n.to_string_lossy()).unwrap_or_default();
-    path.with_file_name(format!(".{name}.tmp"))
+    let pid = std::process::id();
+    let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    path.with_file_name(format!(".{name}.{pid}.{seq}.tmp"))
 }
 
 /// Atomically save `(ms, steps)` to `path`: stage into a sibling
@@ -325,6 +345,61 @@ pub fn load(path: &Path) -> Result<ModelState> {
 }
 
 // -------------------------------------------------------- CheckpointDir
+
+/// A lock held longer than this is assumed to belong to a crashed
+/// process and is broken.  Live holders only keep it for one directory
+/// sweep — microseconds, not seconds.
+const STALE_LOCK: Duration = Duration::from_secs(10);
+
+/// A `.tmp` younger than this may be another process's in-flight save;
+/// the sweep only removes older ones (crash leftovers).
+const TMP_SWEEP_AGE: Duration = Duration::from_secs(60);
+
+/// Exclusive cross-process lock on a checkpoint directory, held while
+/// pruning.  Backed by `O_EXCL` creation of `.retention.lock` (works on
+/// every platform without flock); deleted on drop.  Two processes
+/// sharing a `--ckpt-dir` must not sweep concurrently: each would list
+/// the directory at a different moment and could prune the file the
+/// other just renamed into place.
+struct DirLock {
+    path: PathBuf,
+}
+
+impl DirLock {
+    /// Try to take `dir/.retention.lock`.  Bounded retries with a short
+    /// sleep; a lock older than [`STALE_LOCK`] (crashed holder) is
+    /// broken and retried.  `None` means give up — callers skip the
+    /// sweep rather than fail the save (the next saver prunes).
+    fn acquire(dir: &Path) -> Option<DirLock> {
+        let path = dir.join(".retention.lock");
+        for _ in 0..50 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(_) => return Some(DirLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|md| md.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .map(|age| age >= STALE_LOCK)
+                        .unwrap_or(false);
+                    if stale {
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
 
 /// A directory of `step-NNNNNNNNNN.ckpt` files with keep-last-K
 /// retention and torn-file-tolerant recovery.
@@ -380,18 +455,35 @@ impl CheckpointDir {
     }
 
     /// Atomically save a checkpoint at `step`, then prune: keep the
-    /// newest `keep` checkpoints, drop older ones and stray `.tmp`
-    /// files from interrupted saves.
+    /// newest `keep` checkpoints, drop older ones and stale `.tmp`
+    /// files from interrupted saves.  Pruning is serialized across
+    /// savers sharing the directory by [`DirLock`]; if the lock can't
+    /// be taken the sweep is skipped — retention is advisory and never
+    /// worth failing a successful save over.
     pub fn save_step(&self, ms: &ModelState, step: u64) -> Result<PathBuf> {
         let path = self.path_for(step);
         save_with_steps(&path, ms, step)?;
-        for (_, old) in self.entries_desc().into_iter().skip(self.keep) {
-            let _ = std::fs::remove_file(old);
-        }
-        if let Ok(rd) = std::fs::read_dir(&self.dir) {
-            for e in rd.flatten() {
-                if e.file_name().to_string_lossy().ends_with(".tmp") {
-                    let _ = std::fs::remove_file(e.path());
+        if let Some(_lock) = DirLock::acquire(&self.dir) {
+            for (_, old) in self.entries_desc().into_iter().skip(self.keep) {
+                let _ = std::fs::remove_file(old);
+            }
+            if let Ok(rd) = std::fs::read_dir(&self.dir) {
+                for e in rd.flatten() {
+                    if !e.file_name().to_string_lossy().ends_with(".tmp") {
+                        continue;
+                    }
+                    // age gate: a fresh tmp may be another process's
+                    // in-flight staging file
+                    let old_enough = e
+                        .metadata()
+                        .and_then(|md| md.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .map(|age| age >= TMP_SWEEP_AGE)
+                        .unwrap_or(false);
+                    if old_enough {
+                        let _ = std::fs::remove_file(e.path());
+                    }
                 }
             }
         }
@@ -448,6 +540,20 @@ mod tests {
         dir
     }
 
+    /// All `.tmp` staging files in a directory (names are per-save
+    /// unique now, so tests scan instead of predicting the path).
+    fn tmp_files(dir: &Path) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                if e.file_name().to_string_lossy().ends_with(".tmp") {
+                    out.push(e.path());
+                }
+            }
+        }
+        out
+    }
+
     /// The old (pre-CRC) v1 encoding, for compat testing.
     fn encode_v1(ms: &ModelState) -> Vec<u8> {
         let mut out = Vec::new();
@@ -479,7 +585,7 @@ mod tests {
         assert_eq!(steps, 42);
         assert!(states_eq(&ms, &ms2));
         // no stray tmp after a clean save
-        assert!(!tmp_path(&p).exists());
+        assert!(tmp_files(&dir).is_empty());
     }
 
     #[test]
@@ -580,10 +686,9 @@ mod tests {
             let (_, steps) = load_with_steps(&p).unwrap();
             assert_eq!(steps, 1);
         }
-        // torn tmp from the failed saves never loads
-        let tmp = tmp_path(&p);
-        if tmp.exists() {
-            assert!(load_with_steps(&tmp).is_err());
+        // torn tmps from the failed saves never load
+        for tmp in tmp_files(&dir) {
+            assert!(load_with_steps(&tmp).is_err(), "{tmp:?} loaded");
         }
     }
 
@@ -622,5 +727,47 @@ mod tests {
         let dir = tdir("dsg_ckpt_empty");
         let cd = CheckpointDir::new(&dir).unwrap();
         assert!(cd.latest_valid().unwrap().is_none());
+    }
+
+    /// Two savers hammering one directory (the shared `--ckpt-dir`
+    /// scenario): every save must succeed, retention must never drop
+    /// the newest checkpoint, and no staging file may leak.  Before the
+    /// retention lock + unique tmp names this raced: both sweeps could
+    /// list the directory at different moments and prune the file the
+    /// other had just renamed into place, and both staged into the same
+    /// `.tmp` path.
+    #[test]
+    fn concurrent_savers_never_drop_the_latest() {
+        let dir = tdir("dsg_ckpt_concurrent");
+        let ms = tiny_state();
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                let cd = CheckpointDir::new(&dir).unwrap().with_keep(2);
+                let ms = &ms;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    // interleaved step numbers: t=0 saves odd, t=1 even
+                    for i in 0..20u64 {
+                        let step = 1 + t + 2 * i;
+                        cd.save_step(ms, step).unwrap();
+                    }
+                });
+            }
+        });
+        // the single highest step written (40) must have survived every
+        // concurrent sweep and still load bit-exactly
+        let cd = CheckpointDir::new(&dir).unwrap().with_keep(2);
+        let (ms2, steps, _) = cd.latest_valid().unwrap().expect("newest checkpoint survived");
+        assert_eq!(steps, 40);
+        assert!(states_eq(&ms, &ms2));
+        // retention still pruned under contention (a skipped sweep or
+        // two can leave a couple extra, never unbounded growth)
+        assert!(cd.entries_desc().len() <= 4, "retention did not prune: {:?}", cd.entries_desc());
+        // clean saves leave no staging files behind
+        assert!(tmp_files(&dir).is_empty());
+        // and the lock itself was released
+        assert!(!dir.join(".retention.lock").exists());
     }
 }

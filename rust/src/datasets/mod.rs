@@ -87,6 +87,28 @@ impl<'a> BatchIter<'a> {
         (xs, ys)
     }
 
+    /// Advance the iterator past `n` full batches WITHOUT materializing
+    /// them — the O(steps) resume fast-forward.  Bit-identical to
+    /// calling [`BatchIter::next_batch`] `n` times and discarding the
+    /// results: the epoch-boundary reshuffle is replayed at exactly the
+    /// per-draw positions `next_batch` would hit (the reshuffle happens
+    /// lazily BEFORE a draw, never after the last draw of an epoch), so
+    /// the RNG stream and cursor land in the identical state.  The only
+    /// work is the inherent per-epoch reshuffles; no image bytes are
+    /// copied.
+    pub fn skip_batches(&mut self, n: usize) {
+        let mut remaining = n.saturating_mul(self.batch);
+        while remaining > 0 {
+            if self.pos == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.pos = 0;
+            }
+            let take = remaining.min(self.order.len() - self.pos);
+            self.pos += take;
+            remaining -= take;
+        }
+    }
+
     /// Sequential (unshuffled) batches covering the set once; the last
     /// partial batch is padded by wrapping to the front.
     pub fn eval_batches(data: &'a Dataset, batch: usize) -> Vec<(Vec<f32>, Vec<i32>, usize)> {
@@ -321,6 +343,28 @@ mod tests {
             labels_seen.extend(ys);
         }
         assert_eq!(labels_seen.len(), 20); // wrapped past 10 twice
+    }
+
+    #[test]
+    fn skip_batches_matches_drawn_stream() {
+        // the fast-forward must be bit-identical to drawing and
+        // discarding, including across epoch-boundary reshuffles (10
+        // examples, batch 4: boundaries land mid-batch)
+        let d = fashion_like(10, 5);
+        for skip in [0usize, 1, 2, 3, 5, 7, 12] {
+            let mut drawn = BatchIter::new(&d, 4, 99);
+            for _ in 0..skip {
+                drawn.next_batch();
+            }
+            let mut skipped = BatchIter::new(&d, 4, 99);
+            skipped.skip_batches(skip);
+            for k in 0..4 {
+                let (xa, ya) = drawn.next_batch();
+                let (xb, yb) = skipped.next_batch();
+                assert_eq!(ya, yb, "skip {skip}: labels diverge at batch {k}");
+                assert_eq!(xa, xb, "skip {skip}: images diverge at batch {k}");
+            }
+        }
     }
 
     #[test]

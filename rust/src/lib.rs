@@ -30,6 +30,7 @@ pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod testing;
+pub mod train;
 pub mod util;
 pub mod zvc;
 

@@ -77,7 +77,7 @@ COMMANDS:
   train    --model NAME [--engine artifact|native] [--gamma G] [--steps N]
            [--lr F] [--warmup N] [--refresh N] [--seed N] [--batch N]
            [--threads N] [--tape dense|zvc] [--kernels compound|output|simd]
-           [--selection unstructured|structured[:blocked]]
+           [--selection unstructured|structured[:blocked]] [--shards N]
            [--config FILE] [--csv FILE] [--checkpoint FILE]
            [--ckpt-dir DIR] [--ckpt-every N] [--keep K] [--resume auto]
            [--ckpt-retries N]
@@ -106,6 +106,16 @@ COMMANDS:
            VALID checkpoint and replays deterministically: the resumed
            run's final weights are bit-identical to an uninterrupted
            one.  --ckpt-retries bounds save retry-with-backoff.
+           `--shards N` trains data-parallel (native engine only):
+           each batch splits into 8 pinned micro-leaves fanned over N
+           sharded workers and reduced through a fixed-association
+           tree, so the digest is bit-identical for ANY N (1..8) and
+           through straggler retries, lost-shard re-sharding, and
+           crash resume.  ZVC-compressed gradient frames; per-shard
+           step/retry counts reported.  DSG_SHARD_STEP_MS bounds a
+           stalled shard's round (default 30000), DSG_SHARD_RETRIES
+           its blamed rounds per step before it is declared lost
+           (default 2), DSG_FAULT_STALL_MS the injected stall length.
   eval     --model NAME --checkpoint FILE [--gamma G]
   info     [--model NAME]         artifact inventory / variant detail
   memory   [--gamma G]            Fig 6 representational-cost report
@@ -210,7 +220,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             // these knobs only exist natively; the artifact batch shape
             // is baked into the HLO — ignoring them would silently run
             // something other than what was asked for
-            for flag in ["batch", "threads", "tape", "kernels", "selection"] {
+            for flag in ["batch", "threads", "tape", "kernels", "selection", "shards"] {
                 anyhow::ensure!(
                     args.get(flag).is_none(),
                     "--{flag} requires --engine native (the artifact batch/threading \
@@ -238,7 +248,64 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let (train, test) = full.split(cfg.test_size as f64 / (cfg.train_size + cfg.test_size) as f64);
 
-    let (acc, history, state) = if engine == "native" {
+    let (acc, history, state) = if engine == "native" && args.get("shards").is_some() {
+        // data-parallel path: pinned micro-leaf split + fixed-tree
+        // all-reduce; bit-identical digest for any shard count
+        let shards = args.get_usize("shards")?.unwrap_or(1).max(1);
+        let mut trainer = dsg::train::ParallelTrainer::new(meta, cfg.seed, shards)?;
+        if let Some(t) = args.get_usize("threads")? {
+            trainer = trainer.with_threads(t.max(1))?;
+        }
+        if let Some(t) = args.get("tape") {
+            let tape = native::train::TapeStorage::parse(t)
+                .ok_or_else(|| anyhow::anyhow!("unknown --tape {t:?} (dense | zvc)"))?;
+            trainer = trainer.with_tape(tape);
+        }
+        if let Some(k) = args.get("kernels") {
+            let kernels = sparse::parallel::SparseKernels::parse(k)
+                .ok_or_else(|| anyhow::anyhow!("unknown --kernels {k:?} (compound | output | simd)"))?;
+            trainer = trainer.with_kernels(kernels);
+        }
+        if let Some(s) = args.get("selection") {
+            let sel = dsg::drs::SelectionMode::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown --selection {s:?} (unstructured | structured[:blocked])")
+            })?;
+            trainer = trainer.with_selection(sel);
+        }
+        let acc = trainer.train_opts(&cfg, &train, &test, &opts)?;
+        println!("shards ({shards}):");
+        for (s, st) in trainer.shard_stats().iter().enumerate() {
+            println!(
+                "  shard {s}: {} leaf steps, {} retries{}",
+                st.leaves_done,
+                st.retries,
+                if st.alive { "" } else { " (LOST)" }
+            );
+        }
+        if trainer.reshards() > 0 {
+            println!("  reshard events: {}", trainer.reshards());
+        }
+        let w = trainer.wire_stats();
+        if w.grad_dense_bytes > 0 {
+            println!(
+                "gradient exchange: {} on wire vs {} dense -> {:.2}x (frames {})",
+                dsg::util::human_bytes(w.grad_wire_bytes as usize),
+                dsg::util::human_bytes(w.grad_dense_bytes as usize),
+                w.ratio(),
+                dsg::util::human_bytes(w.frame_bytes as usize)
+            );
+        }
+        let dens = trainer.history.mean_densities(20);
+        if !dens.is_empty() {
+            let joined: Vec<String> = dens.iter().map(|d| format!("{d:.3}")).collect();
+            println!(
+                "mean mask density over last 20 steps: [{}] (target {:.3})",
+                joined.join(", "),
+                1.0 - cfg.gamma.target()
+            );
+        }
+        (acc, trainer.history, trainer.state)
+    } else if engine == "native" {
         let mut trainer = dsg::coordinator::NativeTrainer::new(meta, cfg.seed)?;
         if let Some(t) = args.get_usize("threads")? {
             trainer = trainer.with_threads(t.max(1));

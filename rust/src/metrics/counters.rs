@@ -103,6 +103,11 @@ pub struct RecoveryCounters {
     disconnects_slow: AtomicU64,
     disconnects_error: AtomicU64,
     drains: AtomicU64,
+    shard_retries: AtomicU64,
+    shards_lost: AtomicU64,
+    reshards: AtomicU64,
+    frames_rejected: AtomicU64,
+    stalls_absorbed: AtomicU64,
 }
 
 impl RecoveryCounters {
@@ -121,6 +126,11 @@ impl RecoveryCounters {
             disconnects_slow: AtomicU64::new(0),
             disconnects_error: AtomicU64::new(0),
             drains: AtomicU64::new(0),
+            shard_retries: AtomicU64::new(0),
+            shards_lost: AtomicU64::new(0),
+            reshards: AtomicU64::new(0),
+            frames_rejected: AtomicU64::new(0),
+            stalls_absorbed: AtomicU64::new(0),
         }
     }
 
@@ -176,6 +186,28 @@ impl RecoveryCounters {
     pub fn on_drain(&self) {
         self.drains.fetch_add(1, Ordering::Relaxed);
     }
+    /// One data-parallel leaf task re-attempted (error, rejected frame,
+    /// or deadline trip).
+    pub fn on_shard_retry(&self) {
+        self.shard_retries.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One shard declared lost for the rest of the run.
+    pub fn on_shard_lost(&self) {
+        self.shards_lost.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One deterministic re-shard of outstanding work onto survivors.
+    pub fn on_reshard(&self) {
+        self.reshards.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One gradient frame rejected by the canonical-form check (torn or
+    /// corrupt) — never summed, always recomputed.
+    pub fn on_frame_rejected(&self) {
+        self.frames_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+    /// One injected stall absorbed as pure delay.
+    pub fn on_stall_absorbed(&self) {
+        self.stalls_absorbed.fetch_add(1, Ordering::Relaxed);
+    }
 
     /// Plain-data copy for reports and test deltas.
     pub fn snapshot(&self) -> RecoverySnapshot {
@@ -193,6 +225,11 @@ impl RecoveryCounters {
             disconnects_slow: self.disconnects_slow.load(Ordering::Relaxed),
             disconnects_error: self.disconnects_error.load(Ordering::Relaxed),
             drains: self.drains.load(Ordering::Relaxed),
+            shard_retries: self.shard_retries.load(Ordering::Relaxed),
+            shards_lost: self.shards_lost.load(Ordering::Relaxed),
+            reshards: self.reshards.load(Ordering::Relaxed),
+            frames_rejected: self.frames_rejected.load(Ordering::Relaxed),
+            stalls_absorbed: self.stalls_absorbed.load(Ordering::Relaxed),
         }
     }
 }
@@ -219,6 +256,11 @@ pub struct RecoverySnapshot {
     pub disconnects_slow: u64,
     pub disconnects_error: u64,
     pub drains: u64,
+    pub shard_retries: u64,
+    pub shards_lost: u64,
+    pub reshards: u64,
+    pub frames_rejected: u64,
+    pub stalls_absorbed: u64,
 }
 
 impl RecoverySnapshot {
@@ -239,6 +281,11 @@ impl RecoverySnapshot {
             disconnects_slow: self.disconnects_slow.saturating_sub(earlier.disconnects_slow),
             disconnects_error: self.disconnects_error.saturating_sub(earlier.disconnects_error),
             drains: self.drains.saturating_sub(earlier.drains),
+            shard_retries: self.shard_retries.saturating_sub(earlier.shard_retries),
+            shards_lost: self.shards_lost.saturating_sub(earlier.shards_lost),
+            reshards: self.reshards.saturating_sub(earlier.reshards),
+            frames_rejected: self.frames_rejected.saturating_sub(earlier.frames_rejected),
+            stalls_absorbed: self.stalls_absorbed.saturating_sub(earlier.stalls_absorbed),
         }
     }
 
@@ -265,6 +312,11 @@ impl RecoverySnapshot {
             ("disconnects_slow", self.disconnects_slow),
             ("disconnects_error", self.disconnects_error),
             ("drains", self.drains),
+            ("shard_retries", self.shard_retries),
+            ("shards_lost", self.shards_lost),
+            ("reshards", self.reshards),
+            ("frames_rejected", self.frames_rejected),
+            ("stalls_absorbed", self.stalls_absorbed),
         ] {
             if v > 0 {
                 parts.push(format!("{name}={v}"));

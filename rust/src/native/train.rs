@@ -71,6 +71,57 @@ pub struct TrainOut {
     pub densities: Vec<f32>,
 }
 
+/// Named gradients collected during a backward walk, in encounter order
+/// (reverse unit order; within a rows layer: bn.scale, bn.bias, weight).
+/// The backward COLLECTS instead of applying so the same walk serves
+/// both the sequential step (apply after the walk — bit-identical to
+/// the old inline applies, since every unit's backward reads only its
+/// own pre-update leaves) and the data-parallel leaf step (pure
+/// gradients, no `&mut ModelState` anywhere near worker threads).
+#[derive(Default)]
+pub(crate) struct GradStore {
+    grads: Vec<(String, Vec<f32>)>,
+}
+
+impl GradStore {
+    fn push(&mut self, name: String, g: Vec<f32>) {
+        self.grads.push((name, g));
+    }
+
+    /// The collected (name, gradient) list, in apply order.
+    pub(crate) fn take(self) -> Vec<(String, Vec<f32>)> {
+        self.grads
+    }
+}
+
+/// One BN layer's leaf-local batch statistics, weighted by the row
+/// count they were computed over (`rows` = the layer's m: examples for
+/// dense layers, examples x spatial positions for convs).
+#[derive(Clone, Debug)]
+pub(crate) struct BnStat {
+    pub path: String,
+    pub rows: u64,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+/// Everything one data-parallel leaf contributes to the global step:
+/// pure sums/gradients only — the caller owns all state mutation.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct LeafOut {
+    /// examples in this leaf
+    pub rows: u32,
+    /// summed (NOT averaged) cross-entropy over the leaf's examples
+    pub loss_sum: f64,
+    pub correct: u32,
+    /// per DSG layer, in dsg order: (selected, total) mask entries
+    pub densities: Vec<(u64, u64)>,
+    /// leaf-local BN batch stats per BN layer, in unit order
+    pub bn: Vec<BnStat>,
+    /// named gradients in apply order, scaled by the GLOBAL batch size
+    pub grads: Vec<(String, Vec<f32>)>,
+}
+
 /// How the training tape stores activations (§3.3): raw f32 buffers or
 /// ZVC-compressed records with on-demand decompression in the backward
 /// pass.  ZVC is lossless, so the two are bit-identical; `Zvc` trades
@@ -551,7 +602,7 @@ impl TrainEngine {
         }
     }
 
-    fn leaf(&self, name: &str) -> Result<usize> {
+    pub(crate) fn leaf(&self, name: &str) -> Result<usize> {
         self.index
             .get(name)
             .copied()
@@ -565,7 +616,13 @@ impl TrainEngine {
     /// One SGD + momentum update: `v <- mu v - lr g; w <- w + v`, with
     /// the velocity twin resolved by name (params.X <-> vel.X,
     /// bn.X <-> vbn.X).
-    fn sgd_update(&self, state: &mut ModelState, w_name: &str, g: &[f32], lr: f32) -> Result<()> {
+    pub(crate) fn sgd_update(
+        &self,
+        state: &mut ModelState,
+        w_name: &str,
+        g: &[f32],
+        lr: f32,
+    ) -> Result<()> {
         let v_name = if let Some(rest) = w_name.strip_prefix("params.") {
             format!("vel.{rest}")
         } else if let Some(rest) = w_name.strip_prefix("bn.") {
@@ -1092,12 +1149,12 @@ impl TrainEngine {
     // -----------------------------------------------------------------
 
     /// Backward through one masked rows layer: double mask -> BN -> relu
-    /// -> masked VMM backward (dX + dW), with the SGD updates applied
-    /// after the gradients that depend on the old values are computed.
+    /// -> masked VMM backward (dX + dW), with the gradients COLLECTED
+    /// into `gs` (never applied here — the walk is read-only on state).
     /// `conv_weight`: the state weight is already (n, d)-transposed
-    /// (conv natural layout), so the grad applies without a layout flip.
-    /// `sbuf`: decompress scratch for the post-relu tape (reused across
-    /// units; a no-op view for dense-stored records).
+    /// (conv natural layout), so the grad is pushed without a layout
+    /// flip.  `sbuf`: decompress scratch for the post-relu tape (reused
+    /// across units; a no-op view for dense-stored records).
     ///
     /// Under [`SparseKernels::Compound`] the gradW kernel reads only the
     /// LIVE input coordinates (gathered once into `nzx_scr` when the
@@ -1107,11 +1164,10 @@ impl TrainEngine {
     #[allow(clippy::too_many_arguments)]
     fn rows_layer_backward(
         &self,
-        state: &mut ModelState,
+        state: &ModelState,
         x: &[f32],
         dout: &mut [f32],
         rt: &RowsTape,
-        lr: f32,
         wt_scr: &mut Vec<f32>,
         gwt_scr: &mut Vec<f32>,
         nzx_scr: &mut NzIndex,
@@ -1119,6 +1175,7 @@ impl TrainEngine {
         conv_weight: bool,
         sbuf: &mut Vec<f32>,
         ops_ctr: &mut OpsCounter,
+        gs: &mut GradStore,
     ) -> Result<()> {
         let (m, d, n) = (rt.m, rt.d, rt.n);
         debug_assert_eq!(dout.len(), m * n);
@@ -1129,11 +1186,11 @@ impl TrainEngine {
                 // forward: out = BN(s) * mask  =>  dBN = dout * mask
                 NativeModel::apply_mask_rows(dout, n, &rt.mask);
             }
-            let scale = self.getf(state, &format!("bn.{path}.scale"))?.to_vec();
-            let (gscale, gbias) = bn_backward(dout, s, &rt.mean, &rt.invstd, &scale, m, n);
+            let scale = self.getf(state, &format!("bn.{path}.scale"))?;
+            let (gscale, gbias) = bn_backward(dout, s, &rt.mean, &rt.invstd, scale, m, n);
             relu_backward(dout, s);
-            self.sgd_update(state, &format!("bn.{path}.scale"), &gscale, lr)?;
-            self.sgd_update(state, &format!("bn.{path}.bias"), &gbias, lr)?;
+            gs.push(format!("bn.{path}.scale"), gscale);
+            gs.push(format!("bn.{path}.bias"), gbias);
         } else {
             relu_backward(dout, s);
         }
@@ -1186,11 +1243,11 @@ impl TrainEngine {
             }
         }
         if conv_weight {
-            self.sgd_update(state, &rt.w_name, gwt_scr, lr)?;
+            gs.push(rt.w_name.clone(), gwt_scr.clone());
         } else {
             let mut gw = Vec::new();
             ops::transpose_into(gwt_scr, n, d, &mut gw); // (d, n)
-            self.sgd_update(state, &rt.w_name, &gw, lr)?;
+            gs.push(rt.w_name.clone(), gw);
         }
         Ok(())
     }
@@ -1199,7 +1256,7 @@ impl TrainEngine {
     #[allow(clippy::too_many_arguments)]
     fn conv_unit_backward(
         &self,
-        state: &mut ModelState,
+        state: &ModelState,
         x: &[f32],
         dims: (usize, usize, usize, usize),
         cs: ConvShape,
@@ -1207,11 +1264,11 @@ impl TrainEngine {
         q: usize,
         rt: &RowsTape,
         dout_nchw: &[f32],
-        lr: f32,
         scr: &mut Scratch,
         sbuf: &mut Vec<f32>,
         ops_ctr: &mut OpsCounter,
         dx_nchw: &mut Vec<f32>,
+        gs: &mut GradStore,
     ) -> Result<()> {
         let (nb, c, hh, ww) = dims;
         let kout = rt.n;
@@ -1223,26 +1280,27 @@ impl TrainEngine {
         let mut dx_rows = vec![0.0f32; rt.m * rt.d];
         let Scratch { rows, dyr, wt, gwt, nzx, .. } = &mut *scr;
         self.rows_layer_backward(
-            state, rows, dyr, rt, lr, wt, gwt, nzx, &mut dx_rows, true, sbuf, ops_ctr,
+            state, rows, dyr, rt, wt, gwt, nzx, &mut dx_rows, true, sbuf, ops_ctr, gs,
         )?;
         ops::col2im_slice_into(&dx_rows, nb, c, hh, ww, cs.ksize, cs.stride, cs.pad, dx_nchw);
         Ok(())
     }
 
     /// Backward through one tape unit: returns the gradient wrt the
-    /// unit's input, applying this unit's parameter updates.  `dec` is
-    /// the shared decompress scratch: compressed tape records are
-    /// expanded into it on demand and the buffers are reused across the
-    /// whole backward walk.
+    /// unit's input, collecting this unit's parameter gradients into
+    /// `gs` (state is never mutated — pure).  `dec` is the shared
+    /// decompress scratch: compressed tape records are expanded into it
+    /// on demand and the buffers are reused across the whole backward
+    /// walk.
     fn unit_backward(
         &self,
-        state: &mut ModelState,
+        state: &ModelState,
         ut: &UnitTape,
         mut dout: Vec<f32>,
-        lr: f32,
         scr: &mut Scratch,
         dec: &mut TapeDecode,
         ops_ctr: &mut OpsCounter,
+        gs: &mut GradStore,
     ) -> Result<Vec<f32>> {
         let TapeDecode { x: xbuf, s: sbuf } = dec;
         match ut {
@@ -1251,7 +1309,7 @@ impl TrainEngine {
                 let mut dx = vec![0.0f32; rt.m * rt.d];
                 let Scratch { wt, gwt, nzx, .. } = &mut *scr;
                 self.rows_layer_backward(
-                    state, xs, &mut dout, rt, lr, wt, gwt, nzx, &mut dx, false, sbuf, ops_ctr,
+                    state, xs, &mut dout, rt, wt, gwt, nzx, &mut dx, false, sbuf, ops_ctr, gs,
                 )?;
                 Ok(dx)
             }
@@ -1278,15 +1336,15 @@ impl TrainEngine {
                     }
                 }
                 let gb: Vec<f32> = gb.iter().map(|&v| v as f32).collect();
-                self.sgd_update(state, w_name, &gw, lr)?;
-                self.sgd_update(state, b_name, &gb, lr)?;
+                gs.push(w_name.clone(), gw);
+                gs.push(b_name.clone(), gb);
                 Ok(dx)
             }
             UnitTape::Conv { x, dims, cs, p, q, rt } => {
                 let xs = x.slice(xbuf);
                 let mut dx = Vec::new();
                 self.conv_unit_backward(
-                    state, xs, *dims, *cs, *p, *q, rt, &dout, lr, scr, sbuf, ops_ctr, &mut dx,
+                    state, xs, *dims, *cs, *p, *q, rt, &dout, scr, sbuf, ops_ctr, &mut dx, gs,
                 )?;
                 Ok(dx)
             }
@@ -1312,15 +1370,15 @@ impl TrainEngine {
                 {
                     let h1s = h1.slice(xbuf);
                     self.conv_unit_backward(
-                        state, h1s, (nb, rt1.n, *p1, *q1), *cs2, *p2, *q2, rt2, &dout, lr, scr,
-                        sbuf, ops_ctr, &mut d_h1,
+                        state, h1s, (nb, rt1.n, *p1, *q1), *cs2, *p2, *q2, rt2, &dout, scr,
+                        sbuf, ops_ctr, &mut d_h1, gs,
                     )?;
                 }
                 let xs = x.slice(xbuf);
                 let mut dx = Vec::new();
                 self.conv_unit_backward(
-                    state, xs, (nb, c, hh, ww), *cs1, *p1, *q1, rt1, &d_h1, lr, scr, sbuf,
-                    ops_ctr, &mut dx,
+                    state, xs, (nb, c, hh, ww), *cs1, *p1, *q1, rt1, &d_h1, scr, sbuf,
+                    ops_ctr, &mut dx, gs,
                 )?;
                 if let Some(sname) = short {
                     // shortcut: plain 1x1 conv backward
@@ -1348,7 +1406,7 @@ impl TrainEngine {
                     for (v, s) in dx.iter_mut().zip(&dxs) {
                         *v += *s;
                     }
-                    self.sgd_update(state, sname, &scr.gwt, lr)?;
+                    gs.push(sname.clone(), scr.gwt.clone());
                 } else {
                     debug_assert_eq!(dx.len(), dout.len());
                     for (v, s) in dx.iter_mut().zip(&dout) {
@@ -1445,23 +1503,116 @@ impl TrainEngine {
             // records — tape.len() after the pop IS the popped unit's
             // index), so live memory decays over the backward exactly as
             // the paper's footprint model assumes
+            let mut gs = GradStore::default();
             while let Some(ut) = tape.pop() {
                 // fault site: a transient failure reading the compressed
                 // tape back.  The step has already mutated `state` in
-                // place (BN running stats, per-unit SGD), so there is no
-                // in-place retry — the error kills the run and recovery
-                // is resume-from-last-checkpoint, which replays this
-                // step deterministically (bit-identical; asserted in
+                // place (BN running stats), so there is no in-place
+                // retry — the error kills the run and recovery is
+                // resume-from-last-checkpoint, which replays this step
+                // deterministically (bit-identical; asserted in
                 // tests/native_train.rs).
                 if self.tape == TapeStorage::Zvc {
                     faults::check_io("tape.decompress")
                         .context("decompressing taped activations")?;
                 }
                 dcarry =
-                    self.unit_backward(state, &ut, dcarry, lr, &mut scr, &mut dec, &mut ops_ctr)?;
+                    self.unit_backward(state, &ut, dcarry, &mut scr, &mut dec, &mut ops_ctr, &mut gs)?;
                 meter.free_unit(tape.len());
             }
+            // apply phase: the backward above read only pre-update
+            // weights (each unit's backward touches its own leaves
+            // once), so collect-then-apply produces the exact bits the
+            // old inline-apply walk did — and gives `leaf_step` a pure
+            // gradient path for the data-parallel trainer.
+            for (name, g) in gs.take() {
+                self.sgd_update(state, &name, &g, lr)?;
+            }
             Ok(TrainOut { loss, acc, densities })
+        })();
+        self.scratch = scr;
+        self.dec = dec;
+        self.meter = meter;
+        self.ops = ops_ctr;
+        r
+    }
+
+    /// One PURE leaf step for the data-parallel trainer: taped forward +
+    /// masked backward over a leaf's rows, returning raw sums (loss,
+    /// correct, densities, leaf-local BN batch stats) and the collected
+    /// parameter gradients — `state` is never mutated.  `denom` is the
+    /// GLOBAL batch size: dlogits carry `1/denom`, so summing leaf
+    /// gradients through the pinned reduction tree yields the global
+    /// mean-loss gradient.  Purity is what makes a retried leaf
+    /// bit-exact and a kill at any fault site recoverable: nothing
+    /// commits until the coordinator has every leaf.
+    pub(crate) fn leaf_step(
+        &mut self,
+        state: &ModelState,
+        x: &[f32],
+        y: &[i32],
+        gamma: f32,
+        denom: usize,
+        mode: Mode,
+    ) -> Result<LeafOut> {
+        ensure!(!y.is_empty(), "empty leaf");
+        let m = y.len();
+        let c = self.meta.classes;
+        for &yi in y {
+            ensure!((0..c as i32).contains(&yi), "label {yi} out of range 0..{c}");
+        }
+        let mut scr = std::mem::take(&mut self.scratch);
+        let mut dec = std::mem::take(&mut self.dec);
+        let mut meter = std::mem::take(&mut self.meter);
+        let mut ops_ctr = std::mem::take(&mut self.ops);
+        meter.reset();
+        ops_ctr.reset();
+        let mut tape: Vec<UnitTape> = Vec::new();
+        let r: Result<LeafOut> = (|| {
+            let (logits, _densities) = self.forward_pass(
+                state, x, m, gamma, mode, true, &mut scr, &mut tape, &mut meter, &mut ops_ctr,
+            )?;
+            // exact per-leaf counts (selected, total) and BN batch stats
+            // off the tape, in forward order — integers and f64/f32 sums
+            // the coordinator combines through the pinned tree
+            let mut densities: Vec<(u64, u64)> = Vec::new();
+            let mut bn: Vec<BnStat> = Vec::new();
+            for ut in &tape {
+                for rt in rts_of(ut) {
+                    densities.push((
+                        rt.mask.selected() as u64,
+                        (rt.mask.rows() * rt.mask.width()) as u64,
+                    ));
+                    if let Some(path) = &rt.bn_path {
+                        bn.push(BnStat {
+                            path: path.clone(),
+                            rows: rt.m as u64,
+                            mean: rt.mean.clone(),
+                            var: rt.var.clone(),
+                        });
+                    }
+                }
+            }
+            let (loss_sum, correct, dlogits) = softmax_xent_sums(&logits, y, m, c, denom);
+            let mut dcarry = dlogits;
+            let mut gs = GradStore::default();
+            while let Some(ut) = tape.pop() {
+                if self.tape == TapeStorage::Zvc {
+                    faults::check_io("tape.decompress")
+                        .context("decompressing taped activations")?;
+                }
+                dcarry =
+                    self.unit_backward(state, &ut, dcarry, &mut scr, &mut dec, &mut ops_ctr, &mut gs)?;
+                meter.free_unit(tape.len());
+            }
+            Ok(LeafOut {
+                rows: m as u32,
+                loss_sum,
+                correct: correct as u32,
+                densities,
+                bn,
+                grads: gs.take(),
+            })
         })();
         self.scratch = scr;
         self.dec = dec;
@@ -1612,8 +1763,19 @@ fn nchw_to_rows_into(x: &[f32], n: usize, k: usize, p: usize, q: usize, out: &mu
     }
 }
 
-/// Mean softmax cross-entropy + accuracy + dL/dlogits over (m, c) rows.
-pub(crate) fn softmax_xent(logits: &[f32], y: &[i32], m: usize, c: usize) -> (f32, f32, Vec<f32>) {
+/// Softmax cross-entropy over (m, c) rows returning RAW sums — loss as
+/// an f64 sum over rows, correct as a count — plus dL/dlogits scaled by
+/// `1/denom`.  A single-process step passes `denom = m` (mean loss); a
+/// data-parallel leaf passes the GLOBAL batch size so leaf gradients sum
+/// to the global mean-loss gradient without any post-hoc rescale (which
+/// would not be bit-identical to the single-shard division).
+pub(crate) fn softmax_xent_sums(
+    logits: &[f32],
+    y: &[i32],
+    m: usize,
+    c: usize,
+    denom: usize,
+) -> (f64, usize, Vec<f32>) {
     debug_assert_eq!(logits.len(), m * c);
     let mut dl = vec![0.0f32; m * c];
     let mut loss = 0.0f64;
@@ -1634,9 +1796,15 @@ pub(crate) fn softmax_xent(logits: &[f32], y: &[i32], m: usize, c: usize) -> (f3
         let drow = &mut dl[i * c..(i + 1) * c];
         for (j, dv) in drow.iter_mut().enumerate() {
             let p = (row[j] - lse).exp();
-            *dv = (p - if j == yi { 1.0 } else { 0.0 }) / m as f32;
+            *dv = (p - if j == yi { 1.0 } else { 0.0 }) / denom as f32;
         }
     }
+    (loss, correct, dl)
+}
+
+/// Mean softmax cross-entropy + accuracy + dL/dlogits over (m, c) rows.
+pub(crate) fn softmax_xent(logits: &[f32], y: &[i32], m: usize, c: usize) -> (f32, f32, Vec<f32>) {
+    let (loss, correct, dl) = softmax_xent_sums(logits, y, m, c, m);
     ((loss / m as f64) as f32, correct as f32 / m as f32, dl)
 }
 

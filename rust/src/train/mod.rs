@@ -1,0 +1,12 @@
+//! Data-parallel training (paper Algorithm 1 across sharded workers).
+//!
+//! The single-process engine lives in [`crate::native::train`]; this
+//! module scales it past one worker while keeping the repo's core
+//! contract: the result is BIT-IDENTICAL for any shard count and
+//! through any crash.  See `docs/ARCHITECTURE.md` § "Data-parallel
+//! training" for the shard split rule, the pinned reduction tree, and
+//! the re-sharding determinism argument.
+
+pub mod parallel;
+
+pub use parallel::{ParallelTrainer, ShardStats, WireStats, LEAVES};

@@ -1,0 +1,1091 @@
+//! Fault-tolerant deterministic data-parallel training.
+//!
+//! # Determinism model
+//!
+//! The unit of parallel work is NOT the shard — it is a **micro-leaf**.
+//! Every global batch of `m` examples is split into [`LEAVES`] = 8
+//! pinned contiguous leaves (leaf `l` = rows `l*m/8 .. (l+1)*m/8`,
+//! empty leaves skipped), and the per-leaf results are combined through
+//! a **fixed-association binary reduction tree**: adjacent pairs in
+//! ascending leaf order, odd element carried up unchanged.  Both the
+//! leaf boundaries and the tree shape are functions of `m` alone, so
+//! the summed gradient — and every weight, BN stat, and
+//! [`ModelState::digest`] downstream of it — is bit-identical for any
+//! shard count S and any thread budget.  Shards only decide WHO
+//! computes a leaf: shard `i` of `S` alive shards owns the contiguous
+//! leaf run `i*n/S .. (i+1)*n/S`.  Losing a shard re-splits the SAME
+//! leaf list over the survivors, so re-sharding moves time and
+//! availability, never bits.
+//!
+//! Each leaf step is **pure**: [`TrainEngine::leaf_step`] reads a
+//! shared `&ModelState` and returns gradients + leaf-local BN batch
+//! stats without mutating anything.  All mutation (SGD apply in
+//! backward-walk order, BN running-stat update from the tree-pooled
+//! batch stats) happens in a single commit phase after EVERY leaf has
+//! been collected.  Purity is what makes a retried leaf bit-exact and a
+//! kill at any fault site recoverable by checkpoint resume.
+//!
+//! Note the `--shards` path is NOT bit-identical to the plain
+//! single-process [`crate::coordinator::NativeTrainer`]: BN batch stats
+//! are leaf-local (8 small batches pooled in f64, vs one global batch)
+//! and the loss/gradient sums associate per-leaf.  The contract is
+//! cross-S identity — `--shards 1` IS the reference for every other S.
+//!
+//! # Failure model
+//!
+//! Three injectable sites ride the `DSG_FAULTS` grammar
+//! ([`crate::util::faults`]):
+//!
+//! * `shard.step` — a worker dies (`io`/`torn`) or stalls (`stall`)
+//!   before computing a leaf.
+//! * `allreduce.send` — the encoded gradient frame leaving the worker:
+//!   `torn` truncates the frame mid-write and sends it anyway, `io`
+//!   drops it, `stall` delays it.
+//! * `allreduce.recv` — the coordinator ingesting a frame: `torn`
+//!   truncates the received bytes (the decode then fails the
+//!   canonical-form check and the frame is counted rejected, never
+//!   summed), `io` fails the receive, `stall` sleeps then accepts.
+//!
+//! A round that leaves a leaf missing blames the owning shard; a blamed
+//! shard is retried on the same leaves (`DSG_SHARD_RETRIES`, default 2)
+//! and then declared lost.  A stalled shard trips the per-step deadline
+//! `DSG_SHARD_STEP_MS` (default 30000) the same way; a late result is
+//! discarded and the recomputed leaf is bit-identical by purity.  Every
+//! action lands in [`crate::metrics::RecoveryCounters`].
+
+use crate::config::RunConfig;
+use crate::coordinator::init::ModelState;
+use crate::coordinator::trainer::{
+    run_training, run_training_opts, StepOut, TrainBackend, TrainOptions,
+};
+use crate::datasets::{BatchIter, Dataset};
+use crate::drs::SelectionMode;
+use crate::metrics::{History, MemoryMeter, OpsCounter};
+use crate::native::train::{BnStat, LeafOut, TapeStorage, TrainEngine, BN_MOMENTUM};
+use crate::native::{self, Mode};
+use crate::runtime::Meta;
+use crate::sparse::parallel::SparseKernels;
+use crate::util::faults::{self, FaultKind};
+use crate::zvc;
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Pinned micro-leaf count.  Fixing the leaf granularity (instead of
+/// splitting by shard count) is what makes the reduction bit-identical
+/// across S — see the module docs.
+pub const LEAVES: usize = 8;
+
+/// The pinned leaf boundaries of a global batch of `m` rows: leaf `l`
+/// covers `l*m/L .. (l+1)*m/L` and empty leaves are skipped (a batch of
+/// 4 yields 4 one-row leaves).  A pure function of `m`.
+pub fn leaf_ranges(m: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for l in 0..LEAVES {
+        let lo = l * m / LEAVES;
+        let hi = (l + 1) * m / LEAVES;
+        if hi > lo {
+            out.push((lo, hi));
+        }
+    }
+    out
+}
+
+/// Contiguous split of `n` items over `s` workers — the SAME floor rule
+/// as [`leaf_ranges`], reused for the shard->leaf assignment so a
+/// re-shard onto survivors is just this function at a smaller `s`.
+fn split_range(n: usize, s: usize, i: usize) -> (usize, usize) {
+    (i * n / s, (i + 1) * n / s)
+}
+
+/// Fixed-association pairwise reduction: adjacent pairs in ascending
+/// index order, odd element carried up unchanged.  The association
+/// order depends only on `xs.len()`, never on who produced the items —
+/// the heart of the cross-S bit-identity argument.
+fn reduce_tree<T>(mut xs: Vec<T>, mut combine: impl FnMut(T, T) -> T) -> Option<T> {
+    if xs.is_empty() {
+        return None;
+    }
+    while xs.len() > 1 {
+        let mut next = Vec::with_capacity(xs.len().div_ceil(2));
+        let mut it = xs.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a),
+            }
+        }
+        xs = next;
+    }
+    xs.pop()
+}
+
+// ---------------------------------------------------------------------
+// gradient frame codec
+// ---------------------------------------------------------------------
+
+/// Magic prefix of a gradient exchange frame.
+const FRAME_MAGIC: &[u8; 8] = b"DSGGRAD1";
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Wire accounting of one encoded frame's gradient payloads.
+#[derive(Clone, Copy, Debug, Default)]
+struct FrameMeter {
+    /// gradient payload bytes actually on the wire (ZVC or raw)
+    grad_wire: u64,
+    /// what the same tensors would cost sent dense
+    grad_dense: u64,
+}
+
+/// Encode one leaf's results as a `DSGGRAD1` frame.  Every gradient
+/// tensor is ZVC-compressed ([`zvc::compress_into`]) and sent compressed
+/// only when that wins (tag 1) — the masked backward makes dX/gradW
+/// sparse, so it usually does.  All integers little-endian.
+fn encode_frame(leaf: u32, lo: &LeafOut, comp: &mut zvc::Compressed) -> (Vec<u8>, FrameMeter) {
+    let mut b = Vec::new();
+    b.extend_from_slice(FRAME_MAGIC);
+    put_u32(&mut b, leaf);
+    put_u32(&mut b, lo.rows);
+    b.extend_from_slice(&lo.loss_sum.to_le_bytes());
+    put_u32(&mut b, lo.correct);
+    put_u32(&mut b, lo.densities.len() as u32);
+    for &(sel, tot) in &lo.densities {
+        put_u64(&mut b, sel);
+        put_u64(&mut b, tot);
+    }
+    put_u32(&mut b, lo.bn.len() as u32);
+    for st in &lo.bn {
+        put_u32(&mut b, st.path.len() as u32);
+        b.extend_from_slice(st.path.as_bytes());
+        put_u64(&mut b, st.rows);
+        put_u32(&mut b, st.mean.len() as u32);
+        for &v in &st.mean {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &st.var {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    put_u32(&mut b, lo.grads.len() as u32);
+    let mut meter = FrameMeter::default();
+    for (name, g) in &lo.grads {
+        put_u32(&mut b, name.len() as u32);
+        b.extend_from_slice(name.as_bytes());
+        zvc::compress_into(g, comp);
+        let dense = 4 * g.len();
+        if comp.nbytes() + 8 < dense {
+            let payload = zvc::to_bytes(comp);
+            b.push(1u8);
+            put_u32(&mut b, payload.len() as u32);
+            meter.grad_wire += payload.len() as u64;
+            b.extend_from_slice(&payload);
+        } else {
+            b.push(0u8);
+            put_u32(&mut b, dense as u32);
+            meter.grad_wire += dense as u64;
+            for &v in g {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        meter.grad_dense += dense as u64;
+    }
+    (b, meter)
+}
+
+/// Bounds-checked little-endian cursor for [`decode_frame`].
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.i.checked_add(n)?;
+        if end > self.b.len() {
+            return None;
+        }
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn f32s(&mut self, n: usize) -> Option<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn string(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+}
+
+/// Total decoder for a `DSGGRAD1` frame: never panics, and rejects any
+/// non-canonical buffer — truncation anywhere (including inside a ZVC
+/// payload, whose own [`zvc::from_bytes`] is canonical-rejecting) and
+/// trailing garbage both return `None`.  A torn frame therefore NEVER
+/// decodes into a partial gradient that could be silently summed.
+fn decode_frame(b: &[u8]) -> Option<(u32, LeafOut)> {
+    let mut r = Rd { b, i: 0 };
+    if r.take(8)? != FRAME_MAGIC {
+        return None;
+    }
+    let leaf = r.u32()?;
+    let rows = r.u32()?;
+    let loss_sum = r.f64()?;
+    let correct = r.u32()?;
+    let nd = r.u32()? as usize;
+    let mut densities = Vec::with_capacity(nd.min(1024));
+    for _ in 0..nd {
+        densities.push((r.u64()?, r.u64()?));
+    }
+    let nb = r.u32()? as usize;
+    let mut bn = Vec::with_capacity(nb.min(1024));
+    for _ in 0..nb {
+        let path = r.string()?;
+        let brows = r.u64()?;
+        let n = r.u32()? as usize;
+        let mean = r.f32s(n)?;
+        let var = r.f32s(n)?;
+        bn.push(BnStat { path, rows: brows, mean, var });
+    }
+    let ng = r.u32()? as usize;
+    let mut grads = Vec::with_capacity(ng.min(4096));
+    for _ in 0..ng {
+        let name = r.string()?;
+        let tag = r.u8()?;
+        let plen = r.u32()? as usize;
+        let payload = r.take(plen)?;
+        let g = match tag {
+            0 => {
+                if plen % 4 != 0 {
+                    return None;
+                }
+                payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+            1 => {
+                let c = zvc::from_bytes(payload)?;
+                let mut out = Vec::new();
+                zvc::decompress_into(&c, &mut out);
+                out
+            }
+            _ => return None,
+        };
+        grads.push((name, g));
+    }
+    if r.i != b.len() {
+        return None; // trailing bytes: not a canonical frame
+    }
+    Some((leaf, LeafOut { rows, loss_sum, correct, densities, bn, grads }))
+}
+
+// ---------------------------------------------------------------------
+// the trainer
+// ---------------------------------------------------------------------
+
+/// Per-shard lifetime statistics (`dsg train --shards` prints these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// leaves this shard computed and the coordinator accepted
+    pub leaves_done: u64,
+    /// rounds this shard was blamed for (failed / torn / timed out)
+    pub retries: u64,
+    /// still participating?
+    pub alive: bool,
+}
+
+/// Gradient-exchange wire accounting (feeds `BENCH_train.json`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    /// total encoded frame bytes received by the coordinator
+    pub frame_bytes: u64,
+    /// gradient payload bytes on the wire (ZVC where it wins)
+    pub grad_wire_bytes: u64,
+    /// dense-equivalent bytes of the same gradient tensors
+    pub grad_dense_bytes: u64,
+}
+
+impl WireStats {
+    /// Dense / wire compression ratio of the gradient exchange.
+    pub fn ratio(&self) -> f64 {
+        if self.grad_wire_bytes == 0 {
+            return 1.0;
+        }
+        self.grad_dense_bytes as f64 / self.grad_wire_bytes as f64
+    }
+}
+
+/// What one worker sends back per leaf: the encoded frame plus its wire
+/// accounting, or the failure text.
+type LeafMsg = (usize, usize, std::result::Result<(Vec<u8>, FrameMeter), String>);
+
+/// The data-parallel training coordinator: S sharded workers over the
+/// pinned micro-leaf split, fixed-tree all-reduce, straggler recovery.
+/// Implements [`TrainBackend`], so the whole outer loop (batching,
+/// schedules, checkpoints, `--resume auto`) is shared with the
+/// single-process trainers.
+pub struct ParallelTrainer {
+    pub meta: Meta,
+    pub state: ModelState,
+    /// one engine per shard (index = shard id; dead shards keep theirs)
+    engines: Vec<TrainEngine>,
+    mode: Mode,
+    shards: usize,
+    // engine settings recorded so `restore` can rebuild
+    threads: usize,
+    tape: TapeStorage,
+    kernels: SparseKernels,
+    selection: SelectionMode,
+    /// shard participation: a lost shard stays false until `restore`
+    alive: Vec<bool>,
+    stats: Vec<ShardStats>,
+    reshard_events: u64,
+    wire: WireStats,
+    /// per-step deadline before missing leaves blame their shard
+    deadline: Duration,
+    /// per-step blamed rounds a shard survives before it is lost
+    max_retries: u64,
+    pub steps_done: usize,
+    pub history: History,
+}
+
+impl ParallelTrainer {
+    /// Initialize from a meta: weights from `ModelState::init`, initial
+    /// Wp from the host projection, `shards` workers.
+    pub fn new(meta: Meta, seed: u64, shards: usize) -> Result<ParallelTrainer> {
+        let mut state = ModelState::init(&meta, seed);
+        native::project_host(&meta, &mut state)?;
+        Self::with_state(meta, state, shards)
+    }
+
+    /// Resume from an existing state (checkpoint load); the restored Wp
+    /// is trusted as-is, exactly like [`crate::coordinator::NativeTrainer`].
+    pub fn with_state(meta: Meta, state: ModelState, shards: usize) -> Result<ParallelTrainer> {
+        ensure!(shards >= 1, "--shards must be >= 1");
+        ensure!(shards <= LEAVES, "--shards {shards} exceeds the {LEAVES} micro-leaves");
+        let threads = crate::sparse::parallel::n_threads();
+        let deadline = Duration::from_millis(env_u64("DSG_SHARD_STEP_MS", 30_000));
+        let max_retries = env_u64("DSG_SHARD_RETRIES", 2);
+        let tape = TapeStorage::default();
+        let kernels = SparseKernels::default();
+        let selection = SelectionMode::default();
+        let engines = build_engines(&meta, &state, shards, threads, tape, kernels, selection)?;
+        let mode = engines[0].default_mode();
+        Ok(ParallelTrainer {
+            meta,
+            state,
+            engines,
+            mode,
+            shards,
+            threads,
+            tape,
+            kernels,
+            selection,
+            alive: vec![true; shards],
+            stats: vec![ShardStats { alive: true, ..ShardStats::default() }; shards],
+            reshard_events: 0,
+            wire: WireStats::default(),
+            deadline,
+            max_retries,
+            steps_done: 0,
+            history: History::default(),
+        })
+    }
+
+    /// Cap the TOTAL intra-op thread budget; each shard's engine gets an
+    /// equal slice (bit-exact at any budget — the kernels are).
+    pub fn with_threads(mut self, threads: usize) -> Result<ParallelTrainer> {
+        self.threads = threads.max(1);
+        self.engines = build_engines(
+            &self.meta, &self.state, self.shards, self.threads, self.tape, self.kernels,
+            self.selection,
+        )?;
+        Ok(self)
+    }
+
+    /// Select the training-tape storage (`--tape zvc`), per shard.
+    pub fn with_tape(mut self, tape: TapeStorage) -> ParallelTrainer {
+        self.tape = tape;
+        self.engines = self.engines.into_iter().map(|e| e.with_tape(tape)).collect();
+        self
+    }
+
+    /// Select the sparse kernel family (see [`crate::coordinator::NativeTrainer`]).
+    pub fn with_kernels(mut self, kernels: SparseKernels) -> ParallelTrainer {
+        self.kernels = kernels;
+        self.engines = self.engines.into_iter().map(|e| e.with_kernels(kernels)).collect();
+        self
+    }
+
+    /// Select the DRS mask-selection mode (`--selection`).
+    pub fn with_selection(mut self, selection: SelectionMode) -> ParallelTrainer {
+        self.selection = selection;
+        self.engines = self.engines.into_iter().map(|e| e.with_selection(selection)).collect();
+        self
+    }
+
+    /// Force dense (keep-all mask) execution — the convergence baseline.
+    pub fn with_mode(mut self, mode: Mode) -> ParallelTrainer {
+        self.mode = mode;
+        self
+    }
+
+    /// Override the per-step straggler deadline (tests; the CLI reads
+    /// `DSG_SHARD_STEP_MS` at construction).
+    pub fn with_deadline(mut self, deadline: Duration) -> ParallelTrainer {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Override the blamed-rounds-per-step budget before a shard is
+    /// declared lost (tests; the CLI reads `DSG_SHARD_RETRIES`).
+    pub fn with_max_retries(mut self, retries: u64) -> ParallelTrainer {
+        self.max_retries = retries;
+        self
+    }
+
+    /// Per-shard lifetime statistics.
+    pub fn shard_stats(&self) -> &[ShardStats] {
+        &self.stats
+    }
+
+    /// Re-sharding events (a shard death that re-split the leaf list).
+    pub fn reshards(&self) -> u64 {
+        self.reshard_events
+    }
+
+    /// Gradient-exchange wire accounting since construction.
+    pub fn wire_stats(&self) -> WireStats {
+        self.wire
+    }
+
+    /// Shard count this trainer was built with.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Measured tape memory of shard 0's most recent leaf step.
+    pub fn tape_memory(&self) -> &MemoryMeter {
+        self.engines[0].memory()
+    }
+
+    /// Measured realized vs dense multiply-adds of shard 0's most
+    /// recent leaf step.
+    pub fn ops(&self) -> &OpsCounter {
+        self.engines[0].ops()
+    }
+
+    /// Host-side Wp refresh (the paper's amortized projection).
+    pub fn refresh_projection(&mut self) -> Result<()> {
+        native::project_host(&self.meta, &mut self.state)
+    }
+
+    /// One data-parallel training step: fan the pinned leaves out over
+    /// the alive shards, collect every leaf (retrying / re-sharding on
+    /// failure), reduce through the fixed tree, then commit — SGD in
+    /// backward-walk order, BN running stats from the f64-pooled batch
+    /// stats.  Nothing mutates until all leaves are in.
+    pub fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut> {
+        let m = y.len();
+        ensure!(m > 0, "empty batch");
+        let d = self.meta.input_elems();
+        ensure!(x.len() == m * d, "x has {} elems, expected {}", x.len(), m * d);
+        let leaves = leaf_ranges(m);
+        let n = leaves.len();
+        let mut slots: Vec<Option<LeafOut>> = (0..n).map(|_| None).collect();
+        // effective fault plan captured once so scope-spawned workers
+        // share the plan AND its hit counters
+        let fh = faults::capture();
+        // blamed rounds per shard, this step only
+        let mut step_retries = vec![0u64; self.shards];
+        loop {
+            let missing = slots.iter().filter(|s| s.is_none()).count();
+            if missing == 0 {
+                break;
+            }
+            let alive: Vec<usize> = (0..self.shards).filter(|&s| self.alive[s]).collect();
+            if alive.is_empty() {
+                bail!(
+                    "all {} shards lost at step {} — resume from the last checkpoint",
+                    self.shards,
+                    self.steps_done
+                );
+            }
+            let sa = alive.len();
+            // static contiguous assignment of the FULL leaf list over
+            // the alive shards (ownership is deterministic — timeouts
+            // know whom to blame); each worker computes assigned-and-
+            // still-missing leaves only
+            let mut owner = vec![usize::MAX; n];
+            let mut work: Vec<(usize, Vec<usize>)> = Vec::new();
+            let mut expected = 0usize;
+            for (wi, &s) in alive.iter().enumerate() {
+                let (lo, hi) = split_range(n, sa, wi);
+                for li in lo..hi {
+                    owner[li] = s;
+                }
+                let mine: Vec<usize> = (lo..hi).filter(|li| slots[*li].is_none()).collect();
+                if !mine.is_empty() {
+                    expected += mine.len();
+                    work.push((s, mine));
+                }
+            }
+            let mut failed = vec![false; self.shards];
+            let mut timed_out = false;
+            let mut leaves_done = vec![0u64; self.shards];
+            let mut wire = WireStats::default();
+            {
+                let mut engs: Vec<Option<&mut TrainEngine>> =
+                    self.engines.iter_mut().map(Some).collect();
+                let state = &self.state;
+                let mode = self.mode;
+                let deadline = self.deadline;
+                let leaves = &leaves;
+                let slots = &mut slots;
+                let (tx, rx) = mpsc::channel::<LeafMsg>();
+                std::thread::scope(|sc| {
+                    for (s, mine) in work {
+                        let eng = engs[s].take().expect("one worker per shard");
+                        let tx = tx.clone();
+                        let fh = fh.clone();
+                        sc.spawn(move || {
+                            // re-arm the captured fault plan in this
+                            // worker thread (shared hit counters)
+                            faults::scoped(&fh, || {
+                                let mut comp = zvc::Compressed::new();
+                                for li in mine {
+                                    let (lo, hi) = leaves[li];
+                                    let res = worker_leaf(
+                                        eng, state, x, y, d, lo, hi, li, gamma, m, mode, &mut comp,
+                                    );
+                                    // the receiver may have moved on
+                                    // (deadline): a failed send is fine,
+                                    // the leaf will be recomputed
+                                    let _ = tx.send((li, s, res));
+                                }
+                            });
+                        });
+                    }
+                    drop(tx);
+                    let mut got = 0usize;
+                    while got < expected {
+                        let (li, s, res) = match rx.recv_timeout(deadline) {
+                            Ok(msg) => msg,
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                timed_out = true;
+                                break;
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        };
+                        got += 1;
+                        let mut bytes = match res {
+                            Ok((bytes, fm)) => {
+                                wire.grad_wire_bytes += fm.grad_wire;
+                                wire.grad_dense_bytes += fm.grad_dense;
+                                bytes
+                            }
+                            Err(e) => {
+                                crate::warn!("shard {s} leaf {li} failed: {e}");
+                                failed[s] = true;
+                                continue;
+                            }
+                        };
+                        wire.frame_bytes += bytes.len() as u64;
+                        // fault site: the coordinator ingesting a frame
+                        match faults::check("allreduce.recv") {
+                            Some(FaultKind::Stall) => faults::absorb_stall(),
+                            Some(FaultKind::Torn) => {
+                                let half = bytes.len() / 2;
+                                bytes.truncate(half);
+                            }
+                            Some(_) => {
+                                crate::warn!("shard {s} leaf {li}: injected recv failure");
+                                failed[s] = true;
+                                continue;
+                            }
+                            None => {}
+                        }
+                        match decode_frame(&bytes) {
+                            Some((fl, out)) if fl as usize == li => {
+                                // idempotent slot: first valid frame
+                                // wins, duplicates are discarded
+                                if slots[li].is_none() {
+                                    slots[li] = Some(out);
+                                    leaves_done[s] += 1;
+                                }
+                            }
+                            _ => {
+                                // torn / corrupt frame: rejected by the
+                                // canonical-form check, NEVER summed
+                                crate::metrics::recovery().on_frame_rejected();
+                                crate::warn!("shard {s} leaf {li}: rejected non-canonical frame");
+                                failed[s] = true;
+                            }
+                        }
+                    }
+                    // a timed-out round stops listening; stalled workers
+                    // finish their bounded sleep and their late sends go
+                    // nowhere — the leaves are recomputed, bit-exact
+                });
+            }
+            self.wire.frame_bytes += wire.frame_bytes;
+            self.wire.grad_wire_bytes += wire.grad_wire_bytes;
+            self.wire.grad_dense_bytes += wire.grad_dense_bytes;
+            let mut any_lost = false;
+            for s in 0..self.shards {
+                self.stats[s].leaves_done += leaves_done[s];
+                let owns_missing = (0..n).any(|li| slots[li].is_none() && owner[li] == s);
+                if !(failed[s] || (timed_out && owns_missing)) {
+                    continue;
+                }
+                step_retries[s] += 1;
+                self.stats[s].retries += 1;
+                crate::metrics::recovery().on_shard_retry();
+                if step_retries[s] > self.max_retries {
+                    self.alive[s] = false;
+                    self.stats[s].alive = false;
+                    any_lost = true;
+                    crate::metrics::recovery().on_shard_lost();
+                    crate::warn!(
+                        "shard {s} lost at step {} after {} blamed rounds",
+                        self.steps_done,
+                        step_retries[s]
+                    );
+                }
+            }
+            if any_lost {
+                // the SAME leaf list re-splits over the survivors next
+                // round — ownership moves, bits don't
+                self.reshard_events += 1;
+                crate::metrics::recovery().on_reshard();
+            }
+        }
+        let outs: Vec<LeafOut> = slots.into_iter().map(|s| s.expect("all leaves collected")).collect();
+        let out = self.commit(outs, m, lr)?;
+        self.steps_done += 1;
+        Ok(out)
+    }
+
+    /// The commit phase: reduce every collected leaf through the pinned
+    /// tree and apply ALL state mutation.  Runs only when every leaf is
+    /// in — a crash before this point loses no state, a crash after it
+    /// is covered by the checkpoint of the completed step.
+    fn commit(&mut self, outs: Vec<LeafOut>, m: usize, lr: f32) -> Result<StepOut> {
+        let rows: u64 = outs.iter().map(|o| o.rows as u64).sum();
+        ensure!(rows == m as u64, "leaves cover {rows} rows, batch has {m}");
+        // scalar sums: loss in f64 through the tree, correct is integer
+        // (associative anyway, reduced the same way for uniformity)
+        let loss_sum =
+            reduce_tree(outs.iter().map(|o| o.loss_sum).collect(), |a, b| a + b).unwrap_or(0.0);
+        let correct =
+            reduce_tree(outs.iter().map(|o| o.correct as u64).collect(), |a, b| a + b)
+                .unwrap_or(0);
+        // per-layer (selected, total) counts — integers, exactly the
+        // global mask census regardless of leaf boundaries
+        let nd = outs[0].densities.len();
+        ensure!(
+            outs.iter().all(|o| o.densities.len() == nd),
+            "leaves disagree on layer count"
+        );
+        let mut densities = Vec::with_capacity(nd);
+        for k in 0..nd {
+            let sel = reduce_tree(outs.iter().map(|o| o.densities[k].0).collect(), |a, b| a + b)
+                .unwrap_or(0);
+            let tot = reduce_tree(outs.iter().map(|o| o.densities[k].1).collect(), |a, b| a + b)
+                .unwrap_or(0);
+            densities.push(sel as f32 / tot.max(1) as f32);
+        }
+        // BN: pool the leaf-local batch stats through the tree in f64
+        // (leaf contributes weight w = rows, w*mean, w*(var + mean^2)),
+        // then one running update — the shard-count-invariant twin of
+        // the single-process per-batch update
+        let nb = outs[0].bn.len();
+        ensure!(outs.iter().all(|o| o.bn.len() == nb), "leaves disagree on BN entry count");
+        for k in 0..nb {
+            let path = outs[0].bn[k].path.clone();
+            let len = outs[0].bn[k].mean.len();
+            for o in &outs {
+                ensure!(
+                    o.bn[k].path == path && o.bn[k].mean.len() == len && o.bn[k].var.len() == len,
+                    "leaves disagree on BN entry {k}"
+                );
+            }
+            let pooled = reduce_tree(
+                outs.iter()
+                    .map(|o| {
+                        let st = &o.bn[k];
+                        let w = st.rows as f64;
+                        let s1: Vec<f64> = st.mean.iter().map(|&mu| w * mu as f64).collect();
+                        let s2: Vec<f64> = st
+                            .mean
+                            .iter()
+                            .zip(&st.var)
+                            .map(|(&mu, &va)| w * (va as f64 + (mu as f64) * (mu as f64)))
+                            .collect();
+                        (w, s1, s2)
+                    })
+                    .collect(),
+                |(wa, s1a, s2a), (wb, s1b, s2b)| {
+                    (
+                        wa + wb,
+                        s1a.iter().zip(&s1b).map(|(a, b)| a + b).collect(),
+                        s2a.iter().zip(&s2b).map(|(a, b)| a + b).collect(),
+                    )
+                },
+            )
+            .expect("at least one leaf");
+            let (w, s1, s2) = pooled;
+            let mean: Vec<f32> = s1.iter().map(|&v| (v / w) as f32).collect();
+            let var: Vec<f32> = s1
+                .iter()
+                .zip(&s2)
+                .map(|(&a, &b)| {
+                    let mu = a / w;
+                    (b / w - mu * mu) as f32
+                })
+                .collect();
+            for (leaf_name, batch) in [
+                (format!("bn_state.{path}.mean"), &mean),
+                (format!("bn_state.{path}.var"), &var),
+            ] {
+                let i = self.engines[0].leaf(&leaf_name)?;
+                let run = self.state.state[i].as_f32_mut()?;
+                ensure!(run.len() == batch.len(), "{leaf_name}: stat len mismatch");
+                for (r, &b) in run.iter_mut().zip(batch) {
+                    *r = BN_MOMENTUM * *r + (1.0 - BN_MOMENTUM) * b;
+                }
+            }
+        }
+        // gradients: pinned tree per tensor (leaf dlogits already carry
+        // 1/m_global, so the tree sum IS the global mean-loss gradient),
+        // then SGD in the backward-walk order every leaf shares
+        let names: Vec<&str> = outs[0].grads.iter().map(|(nm, _)| nm.as_str()).collect();
+        for o in &outs {
+            ensure!(
+                o.grads.len() == names.len()
+                    && o.grads.iter().zip(&names).all(|((nm, _), want)| nm == want),
+                "leaves disagree on gradient tensor order"
+            );
+        }
+        for gi in 0..names.len() {
+            let glen = outs[0].grads[gi].1.len();
+            ensure!(
+                outs.iter().all(|o| o.grads[gi].1.len() == glen),
+                "{}: leaves disagree on gradient length",
+                names[gi]
+            );
+            let g = reduce_tree(
+                outs.iter().map(|o| o.grads[gi].1.clone()).collect(),
+                |mut a: Vec<f32>, b: Vec<f32>| {
+                    for (av, bv) in a.iter_mut().zip(&b) {
+                        *av += bv;
+                    }
+                    a
+                },
+            )
+            .expect("at least one leaf");
+            self.engines[0].sgd_update(&mut self.state, names[gi], &g, lr)?;
+        }
+        Ok(StepOut {
+            loss: (loss_sum / m as f64) as f32,
+            acc: correct as f32 / m as f32,
+            densities,
+        })
+    }
+
+    /// Forward one batch in eval mode (running-stat BN); returns logits.
+    pub fn forward(&mut self, x: &[f32], m: usize, gamma: f32) -> Result<Vec<f32>> {
+        self.engines[0].forward_eval(&self.state, x, m, gamma, self.mode)
+    }
+
+    /// Evaluate accuracy over a dataset (padded final batch handled).
+    pub fn evaluate(&mut self, data: &Dataset, gamma: f32) -> Result<f32> {
+        let batch = self.meta.batch;
+        let c = self.meta.classes;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (xs, ys, valid) in BatchIter::eval_batches(data, batch) {
+            let logits = self.forward(&xs, batch, gamma)?;
+            for (i, &yv) in ys.iter().enumerate().take(valid) {
+                if crate::serve::argmax(&logits[i * c..(i + 1) * c]) == yv as usize {
+                    correct += 1;
+                }
+            }
+            total += valid;
+        }
+        Ok(correct as f32 / total.max(1) as f32)
+    }
+
+    /// The full training loop per `cfg` (see
+    /// [`crate::coordinator::trainer::run_training`]).
+    pub fn train(&mut self, cfg: &RunConfig, train: &Dataset, test: &Dataset) -> Result<f32> {
+        run_training(self, cfg, train, test)
+    }
+
+    /// [`Self::train`] with a checkpoint/resume policy.
+    pub fn train_opts(
+        &mut self,
+        cfg: &RunConfig,
+        train: &Dataset,
+        test: &Dataset,
+        opts: &TrainOptions,
+    ) -> Result<f32> {
+        run_training_opts(self, cfg, train, test, opts)
+    }
+}
+
+/// One worker's unit of work: fault gate, pure leaf step, frame encode,
+/// send-side fault gate.  Returns the wire-ready frame (possibly torn —
+/// the coordinator's canonical-form check owns rejecting it).
+#[allow(clippy::too_many_arguments)]
+fn worker_leaf(
+    eng: &mut TrainEngine,
+    state: &ModelState,
+    x: &[f32],
+    y: &[i32],
+    d: usize,
+    lo: usize,
+    hi: usize,
+    li: usize,
+    gamma: f32,
+    denom: usize,
+    mode: Mode,
+    comp: &mut zvc::Compressed,
+) -> std::result::Result<(Vec<u8>, FrameMeter), String> {
+    // fault site: the shard dying (io/torn) or stalling before its work
+    match faults::check("shard.step") {
+        Some(FaultKind::Stall) => faults::absorb_stall(),
+        Some(_) => return Err(format!("injected fault at shard.step (leaf {li})")),
+        None => {}
+    }
+    let out = eng
+        .leaf_step(state, &x[lo * d..hi * d], &y[lo..hi], gamma, denom, mode)
+        .map_err(|e| format!("{e:#}"))?;
+    let (mut frame, meter) = encode_frame(li as u32, &out, comp);
+    // fault site: the gradient frame leaving the shard — `torn` sends a
+    // truncated frame (receiver must reject it), `io` loses it
+    match faults::check("allreduce.send") {
+        Some(FaultKind::Stall) => faults::absorb_stall(),
+        Some(FaultKind::Torn) => {
+            let half = frame.len() / 2;
+            frame.truncate(half);
+        }
+        Some(_) => return Err(format!("injected fault at allreduce.send (leaf {li})")),
+        None => {}
+    }
+    Ok((frame, meter))
+}
+
+fn build_engines(
+    meta: &Meta,
+    state: &ModelState,
+    shards: usize,
+    threads: usize,
+    tape: TapeStorage,
+    kernels: SparseKernels,
+    selection: SelectionMode,
+) -> Result<Vec<TrainEngine>> {
+    let per = (threads / shards).max(1);
+    (0..shards)
+        .map(|_| {
+            Ok(TrainEngine::new(meta, state)?
+                .with_threads(per)
+                .with_tape(tape)
+                .with_kernels(kernels)
+                .with_selection(selection))
+        })
+        .collect()
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+impl TrainBackend for ParallelTrainer {
+    fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn batch_size(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn refresh_projection(&mut self) -> Result<()> {
+        ParallelTrainer::refresh_projection(self)
+    }
+
+    fn step(&mut self, x: &[f32], y: &[i32], gamma: f32, lr: f32) -> Result<StepOut> {
+        ParallelTrainer::step(self, x, y, gamma, lr)
+            .with_context(|| format!("data-parallel step at {} shards", self.shards))
+    }
+
+    fn evaluate(&mut self, data: &Dataset, gamma: f32) -> Result<f32> {
+        ParallelTrainer::evaluate(self, data, gamma)
+    }
+
+    fn history_mut(&mut self) -> &mut History {
+        &mut self.history
+    }
+
+    fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    fn restore(&mut self, state: ModelState, steps_done: usize) -> Result<()> {
+        // rebuild every shard engine against the restored state; a
+        // fresh process has no memory of lost shards, so all revive —
+        // determinism is unaffected (shards move time, not bits)
+        self.engines = build_engines(
+            &self.meta, &state, self.shards, self.threads, self.tape, self.kernels,
+            self.selection,
+        )?;
+        self.state = state;
+        self.steps_done = steps_done;
+        self.alive = vec![true; self.shards];
+        for st in &mut self.stats {
+            st.alive = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_ranges_cover_and_pin() {
+        for m in [1usize, 3, 4, 7, 8, 9, 32, 33, 100] {
+            let lr = leaf_ranges(m);
+            assert!(!lr.is_empty());
+            assert!(lr.len() <= LEAVES);
+            assert_eq!(lr[0].0, 0);
+            assert_eq!(lr.last().unwrap().1, m);
+            for w in lr.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+                assert!(w[0].1 > w[0].0, "nonempty");
+            }
+        }
+        // batch 4: four one-row leaves
+        assert_eq!(leaf_ranges(4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn reduce_tree_association_is_pinned() {
+        // the association order is a pure function of the item count
+        let items: Vec<String> = ["a", "b", "c", "d", "e"].iter().map(|s| s.to_string()).collect();
+        let out = reduce_tree(items, |a, b| format!("({a}+{b})")).unwrap();
+        assert_eq!(out, "(((a+b)+(c+d))+e)");
+        assert_eq!(reduce_tree(Vec::<i32>::new(), |a, b| a + b), None);
+        assert_eq!(reduce_tree(vec![7], |a, b| a + b), Some(7));
+    }
+
+    fn sample_leaf_out() -> LeafOut {
+        LeafOut {
+            rows: 3,
+            loss_sum: 1.25,
+            correct: 2,
+            densities: vec![(5, 10), (0, 4)],
+            bn: vec![BnStat {
+                path: "0".into(),
+                rows: 3,
+                mean: vec![0.5, -1.0],
+                var: vec![0.25, 2.0],
+            }],
+            grads: vec![
+                ("params.0.w".into(), vec![0.0, 1.5, 0.0, 0.0, -2.0, 0.0, 0.0, 0.0]),
+                ("params.1.b".into(), vec![1.0, 2.0]),
+            ],
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_is_exact() {
+        let lo = sample_leaf_out();
+        let mut comp = zvc::Compressed::new();
+        let (bytes, meter) = encode_frame(6, &lo, &mut comp);
+        assert!(meter.grad_dense >= meter.grad_wire, "compress-if-smaller never grows");
+        let (leaf, back) = decode_frame(&bytes).expect("roundtrip");
+        assert_eq!(leaf, 6);
+        assert_eq!(back.rows, lo.rows);
+        assert_eq!(back.loss_sum.to_bits(), lo.loss_sum.to_bits());
+        assert_eq!(back.correct, lo.correct);
+        assert_eq!(back.densities, lo.densities);
+        assert_eq!(back.bn.len(), 1);
+        assert_eq!(back.bn[0].path, "0");
+        assert_eq!(back.bn[0].rows, 3);
+        assert_eq!(back.bn[0].mean, lo.bn[0].mean);
+        assert_eq!(back.bn[0].var, lo.bn[0].var);
+        assert_eq!(back.grads, lo.grads);
+    }
+
+    #[test]
+    fn every_torn_prefix_is_rejected() {
+        // the decoder is total AND canonical: no strict prefix of a
+        // valid frame decodes — a torn frame can never be summed
+        let lo = sample_leaf_out();
+        let mut comp = zvc::Compressed::new();
+        let (bytes, _) = encode_frame(2, &lo, &mut comp);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_frame(&bytes[..cut]).is_none(),
+                "torn frame of {cut}/{} bytes decoded",
+                bytes.len()
+            );
+        }
+        // trailing garbage is equally non-canonical
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_frame(&long).is_none());
+        // and a wrong magic dies immediately
+        let mut wrong = bytes;
+        wrong[0] ^= 0xff;
+        assert!(decode_frame(&wrong).is_none());
+    }
+
+    #[test]
+    fn shard_assignment_re_splits_deterministically() {
+        // losing a shard re-splits the SAME leaf list: the union of the
+        // survivor ranges is always exactly 0..n, in order
+        for n in 1..=LEAVES {
+            for s in 1..=n {
+                let mut covered = Vec::new();
+                for i in 0..s {
+                    let (lo, hi) = split_range(n, s, i);
+                    covered.extend(lo..hi);
+                }
+                assert_eq!(covered, (0..n).collect::<Vec<_>>(), "n={n} s={s}");
+            }
+        }
+    }
+}

@@ -11,18 +11,27 @@
 //! DSG_FAULTS="ckpt.write:io@3,wire.read:io@2,ckpt.fsync:io@1+"
 //!            site ───┘     │   │└ 1-based hit index; trailing `+`
 //!            kind ─────────┘   │  means "that hit and every later one"
-//!            (io | torn)       └ comma-separated entries
+//!            (io | torn        └ comma-separated entries
+//!             | stall)
 //! ```
 //!
 //! Sites wired in this crate: `ckpt.write`, `ckpt.fsync`, `ckpt.rename`
 //! (checkpoint save path), `tape.decompress` (ZVC backward walk),
 //! `serve.worker_batch` (sharded batch execution), `wire.read`,
-//! `wire.write` (per-connection socket I/O), `accept` (listener loop).
+//! `wire.write` (per-connection socket I/O), `accept` (listener loop),
+//! `shard.step` (data-parallel leaf step, worker side), `allreduce.send`
+//! (gradient-frame encode/send, worker side), `allreduce.recv`
+//! (gradient-frame receive/decode, coordinator side).
 //!
 //! Kinds: `io` makes the operation return an injected
 //! [`std::io::Error`]; `torn` additionally asks write-shaped sites to
 //! persist a PREFIX of the buffer before failing (simulating a
-//! kill -9 mid-write).  Sites that cannot tear treat `torn` as `io`.
+//! kill -9 mid-write) — gradient-frame sites truncate the frame instead,
+//! so the receiver sees a non-canonical buffer; `stall` makes the
+//! operation sleep `DSG_FAULT_STALL_MS` (default 50) before proceeding
+//! — a straggler, not a failure.  Sites that cannot tear treat `torn`
+//! as `io`; sites routed through [`check_io`] absorb a `stall` as pure
+//! delay (counted in the recovery summary).
 //!
 //! The normative contract (see `docs/ARCHITECTURE.md`, "Failure model &
 //! recovery"): **faults move time and availability, never bits.**  An
@@ -50,6 +59,10 @@ pub enum FaultKind {
     /// Write-shaped sites persist a prefix of the buffer, THEN error
     /// (a crash mid-write).  Elsewhere identical to [`FaultKind::Io`].
     Torn,
+    /// The operation sleeps `DSG_FAULT_STALL_MS` and then proceeds
+    /// normally — a straggler.  The op itself succeeds; whether the
+    /// delay is absorbed or trips a deadline is the caller's policy.
+    Stall,
 }
 
 /// One schedule entry: fail `site`'s `at`-th hit (1-based); with
@@ -83,6 +96,7 @@ impl FaultPlan {
             let kind = match kind {
                 "io" => FaultKind::Io,
                 "torn" => FaultKind::Torn,
+                "stall" => FaultKind::Stall,
                 other => return Err(format!("fault entry {entry:?}: unknown kind {other:?}")),
             };
             let (at, persistent) = match at.strip_suffix('+') {
@@ -219,6 +233,45 @@ pub fn with_plan<T>(plan: &FaultPlan, f: impl FnOnce() -> T) -> T {
     f()
 }
 
+/// An opaque handle to the plan a thread currently sees (thread-local
+/// first, then global), captured so worker threads spawned INSIDE a
+/// [`with_plan`] scope can share it — and, critically, share its hit
+/// counters — via [`scoped`].  Cheap to clone; an empty handle is a
+/// no-op.
+#[derive(Clone, Default)]
+pub struct PlanHandle(Option<Arc<ActivePlan>>);
+
+/// Capture the currently effective plan (with live counters) for
+/// re-arming on another thread via [`scoped`].
+pub fn capture() -> PlanHandle {
+    let local = LOCAL_PLAN.with(|l| l.borrow().clone());
+    if local.is_some() {
+        return PlanHandle(local);
+    }
+    ensure_env_init();
+    if !GLOBAL_ARMED.load(Ordering::Acquire) {
+        return PlanHandle(None);
+    }
+    PlanHandle(GLOBAL_PLAN.read().unwrap().clone())
+}
+
+/// Run `f` with a [`capture`]d plan armed thread-locally (counters are
+/// SHARED with the capturing thread, not fresh — hits on any thread
+/// advance the same schedule).  Disarmed when `f` returns or unwinds;
+/// an empty handle just runs `f`.
+pub fn scoped<T>(handle: &PlanHandle, f: impl FnOnce() -> T) -> T {
+    let Some(plan) = &handle.0 else { return f() };
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            LOCAL_PLAN.with(|l| *l.borrow_mut() = None);
+        }
+    }
+    LOCAL_PLAN.with(|l| *l.borrow_mut() = Some(plan.clone()));
+    let _reset = Reset;
+    f()
+}
+
 /// Count one hit on `site` against the armed plan (thread-local first,
 /// then global) and return the fault to inject, if any.  `None` means
 /// proceed normally — and costs ~nothing when no plan is armed.
@@ -249,10 +302,31 @@ pub fn injected_error(site: &str) -> std::io::Error {
     std::io::Error::other(format!("injected fault at {site}"))
 }
 
+/// Injected stall duration: `DSG_FAULT_STALL_MS`, default 50ms.
+pub fn stall_ms() -> u64 {
+    std::env::var("DSG_FAULT_STALL_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50)
+}
+
+/// Absorb an injected [`FaultKind::Stall`]: sleep the configured
+/// duration, count it in the recovery summary, and proceed.
+pub fn absorb_stall() {
+    crate::metrics::recovery().on_stall_absorbed();
+    std::thread::sleep(std::time::Duration::from_millis(stall_ms()));
+}
+
 /// [`check`] shaped for `?`: `Err` with an injected I/O error when the
-/// schedule says this hit fails.
+/// schedule says this hit fails.  A `stall` is absorbed in place (sleep,
+/// then `Ok`) — sites with their own deadline policy call [`check`]
+/// directly instead.
 pub fn check_io(site: &str) -> std::io::Result<()> {
     match check(site) {
+        Some(FaultKind::Stall) => {
+            absorb_stall();
+            Ok(())
+        }
         Some(_) => Err(injected_error(site)),
         None => Ok(()),
     }
@@ -315,6 +389,49 @@ mod tests {
             assert!(e.to_string().contains("t.io"), "{e}");
             assert!(check_io("t.io").is_ok());
         });
+    }
+
+    #[test]
+    fn parse_stall_kind() {
+        let p = FaultPlan::parse("shard.step:stall@2+").unwrap();
+        assert_eq!(
+            p.specs[0],
+            FaultSpec { site: "shard.step".into(), kind: FaultKind::Stall, at: 2, persistent: true }
+        );
+    }
+
+    #[test]
+    fn check_io_absorbs_stall() {
+        let plan = FaultPlan::one("t.stall", FaultKind::Stall, 1, false);
+        with_plan(&plan, || {
+            let before = std::time::Instant::now();
+            assert!(check_io("t.stall").is_ok());
+            assert!(before.elapsed().as_millis() >= 10, "stall did not sleep");
+            assert!(check_io("t.stall").is_ok());
+        });
+    }
+
+    #[test]
+    fn captured_plan_shares_counters_across_threads() {
+        // a worker armed via capture()/scoped() must see the SAME
+        // schedule (shared hit counters), unlike a bare spawn
+        let plan = FaultPlan::one("t.cap", FaultKind::Io, 2, false);
+        with_plan(&plan, || {
+            let h = capture();
+            assert_eq!(check("t.cap"), None); // hit 1 on this thread
+            let got = std::thread::scope(|s| {
+                s.spawn(|| scoped(&h, || check("t.cap"))).join().unwrap()
+            });
+            assert_eq!(got, Some(FaultKind::Io)); // hit 2 on the worker
+            assert_eq!(check("t.cap"), None); // hit 3: schedule exhausted
+        });
+    }
+
+    #[test]
+    fn empty_capture_is_a_noop() {
+        let h = capture();
+        let got = scoped(&h, || check("t.none"));
+        assert_eq!(got, None);
     }
 
     #[test]

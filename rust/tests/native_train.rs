@@ -11,6 +11,11 @@
 //! regression, checkpoint resume, and the ZVC training tape: multi-epoch
 //! bit-parity with the dense tape, measured-vs-analytic tape memory, and
 //! compressed-tape checkpoint resume.
+//!
+//! The data-parallel section at the bottom covers the sharded trainer:
+//! bit-identical digests at any shard count, kill-and-resume parity at
+//! every all-reduce fault site, torn-frame rejection, straggler
+//! deadlines, and lost-shard re-sharding.
 
 use dsg::config::{GammaSchedule, RunConfig};
 use dsg::coordinator::{checkpoint, CheckpointDir, ModelState, NativeTrainer, TrainOptions};
@@ -22,8 +27,10 @@ use dsg::native::zoo::{self, ModelSpec};
 use dsg::native::Mode;
 use dsg::runtime::{Meta, Unit};
 use dsg::sparse::parallel::SparseKernels;
+use dsg::train::ParallelTrainer;
 use dsg::util::Pcg32;
 use dsg::zvc;
+use std::time::Duration;
 
 fn smoke_spec() -> ModelSpec {
     ModelSpec::custom_mlp("smoke_mlp", &[784, 32], 10, 32)
@@ -777,6 +784,204 @@ fn load_latest_valid_skips_torn_and_corrupt() {
     assert_eq!(steps, 2);
     assert!(path.ends_with("step-0000000002.ckpt"), "{path:?}");
     assert_state_bits_eq(&good, &ms, "latest_valid");
+}
+
+// ------------------------------------ data-parallel (sharded) training
+
+/// Same model/seed/tape as [`crash_trainer`], but sharded.
+fn par_trainer(shards: usize) -> ParallelTrainer {
+    let spec = ModelSpec::custom_mlp("crash_mlp", &[784, 16], 10, 16);
+    let meta = zoo::synth_meta(&spec).unwrap();
+    ParallelTrainer::new(meta, 4, shards)
+        .unwrap()
+        .with_tape(TapeStorage::Zvc)
+}
+
+/// The fig10-style convergence claim: the SAME run at `--shards`
+/// 1/2/4/8 produces bit-identical losses, densities, eval accuracy,
+/// weights, BN stats, and digest — the shard count moves work, never
+/// bits.  A different total thread budget must not move them either.
+#[test]
+fn shard_count_parity_is_bit_identical() {
+    let cfg = crash_cfg();
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(1.0 / 3.0);
+
+    let mut one = par_trainer(1);
+    let acc1 = one.train(&cfg, &train, &test).unwrap();
+    for shards in [2usize, 4, 8] {
+        let mut t = par_trainer(shards);
+        let acc = t.train(&cfg, &train, &test).unwrap();
+        assert_eq!(acc.to_bits(), acc1.to_bits(), "{shards} shards: eval acc");
+        assert_eq!(one.history.steps.len(), t.history.steps.len());
+        for (a, b) in one.history.steps.iter().zip(&t.history.steps) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{shards} shards step {}: loss diverged",
+                a.step
+            );
+            assert_eq!(a.densities, b.densities, "{shards} shards step {}", a.step);
+        }
+        assert_state_bits_eq(&one.state, &t.state, &format!("{shards} shards"));
+        assert_eq!(one.state.digest(), t.state.digest(), "{shards} shards: digest");
+        // the exchange actually went over the (in-process) wire, and the
+        // sparse gradients compressed
+        let w = t.wire_stats();
+        assert!(w.grad_dense_bytes > 0 && w.frame_bytes > 0, "{shards} shards: no wire traffic");
+        assert!(w.ratio() >= 1.0, "{shards} shards: ZVC expanded the gradients");
+    }
+    // uneven thread budget over 2 shards: same bits
+    let mut odd = par_trainer(2).with_threads(5).unwrap();
+    odd.train(&cfg, &train, &test).unwrap();
+    assert_eq!(one.state.digest(), odd.state.digest(), "thread budget moved bits");
+}
+
+/// [`kill_at_every_fault_site_resume_parity`] extended to the
+/// data-parallel sites: a persistent fault at `shard.step` or either
+/// side of the all-reduce (including torn ZVC gradient frames) kills
+/// the run once every shard exhausts its retries, and `--resume auto`
+/// finishes to a digest bit-identical to an uninterrupted sharded run.
+/// The torn cases double as the never-silently-summed check: a
+/// truncated frame that slipped past the canonical-form decoder would
+/// corrupt the weights and fail the digest assertion.
+#[test]
+fn kill_at_every_shard_fault_site_resume_parity() {
+    let cfg = crash_cfg();
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(1.0 / 3.0);
+
+    for shards in [2usize, 4] {
+        let mut base = par_trainer(shards);
+        base.train(&cfg, &train, &test).unwrap();
+
+        // hit 17: the batch is 16 rows = 8 leaves, so each site fires 8
+        // times per step — two full steps (and the step-2 checkpoint)
+        // complete before the fault lands mid-step-3 and stays on
+        let scenarios: &[(&str, FaultKind)] = &[
+            ("shard.step", FaultKind::Io),
+            ("allreduce.send", FaultKind::Io),
+            ("allreduce.send", FaultKind::Torn),
+            ("allreduce.recv", FaultKind::Io),
+            ("allreduce.recv", FaultKind::Torn),
+        ];
+        for &(site, kind) in scenarios {
+            let what = format!("{shards} shards {site}:{kind:?}@17+");
+            let dir = crash_dir(&format!("{}_{kind:?}_s{shards}", site.replace('.', "_")));
+            let ckpt = CheckpointDir::new(&dir).unwrap().with_keep(2);
+
+            let opts = TrainOptions::checkpointed(ckpt.clone(), 2).with_save_retries(0);
+            let plan = FaultPlan::one(site, kind, 17, true);
+            let mut victim = par_trainer(shards);
+            let r = faults::with_plan(&plan, || victim.train_opts(&cfg, &train, &test, &opts));
+            assert!(r.is_err(), "{what}: persistent fault did not kill the run");
+
+            let mut resumed = par_trainer(shards);
+            let opts = TrainOptions::checkpointed(ckpt, 2).with_resume(true);
+            resumed.train_opts(&cfg, &train, &test, &opts).unwrap();
+            assert_state_bits_eq(&base.state, &resumed.state, &what);
+            assert_eq!(base.state.digest(), resumed.state.digest(), "{what}: digest");
+        }
+    }
+}
+
+/// One-shot faults are absorbed in-run: the blamed shard recomputes the
+/// same leaves on the same data, so the result is bit-identical to an
+/// undisturbed run — including a torn gradient frame (rejected by the
+/// canonical-form check, recomputed, never summed) and stalls (absorbed
+/// in place, no retry).
+#[test]
+fn transient_shard_faults_are_absorbed_bit_exactly() {
+    let cfg = crash_cfg();
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(1.0 / 3.0);
+
+    let mut base = par_trainer(2);
+    base.train(&cfg, &train, &test).unwrap();
+    for (site, kind) in [
+        ("shard.step", FaultKind::Io),
+        ("shard.step", FaultKind::Stall),
+        ("allreduce.send", FaultKind::Io),
+        ("allreduce.send", FaultKind::Torn),
+        ("allreduce.send", FaultKind::Stall),
+        ("allreduce.recv", FaultKind::Io),
+        ("allreduce.recv", FaultKind::Torn),
+        ("allreduce.recv", FaultKind::Stall),
+    ] {
+        let what = format!("{site}:{kind:?}@3");
+        let plan = FaultPlan::one(site, kind, 3, false);
+        let mut t = par_trainer(2).with_max_retries(10);
+        faults::with_plan(&plan, || t.train(&cfg, &train, &test)).unwrap();
+        assert_state_bits_eq(&base.state, &t.state, &what);
+        assert_eq!(base.state.digest(), t.state.digest(), "{what}: digest");
+        assert!(t.shard_stats().iter().all(|s| s.alive), "{what}: a shard died");
+        if kind != FaultKind::Stall {
+            assert!(
+                t.shard_stats().iter().any(|s| s.retries > 0),
+                "{what}: fault absorbed without any blamed round"
+            );
+        }
+    }
+}
+
+/// A shard stalled past the per-step deadline is treated as a
+/// straggler: the coordinator times the round out, blames the owner,
+/// and the retry recomputes the same leaves on the same data — time
+/// moves, bits don't.
+#[test]
+fn straggler_past_deadline_is_retried_bit_exactly() {
+    let cfg = crash_cfg();
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(1.0 / 3.0);
+
+    let mut base = par_trainer(2);
+    base.train(&cfg, &train, &test).unwrap();
+
+    // stall (default 50 ms, see DSG_FAULT_STALL_MS) >> 10 ms deadline;
+    // generous retry budget so a slow CI machine timing out a clean
+    // round costs a recompute, never the run
+    let plan = FaultPlan::one("shard.step", FaultKind::Stall, 3, false);
+    let mut t = par_trainer(2)
+        .with_deadline(Duration::from_millis(10))
+        .with_max_retries(50);
+    faults::with_plan(&plan, || t.train(&cfg, &train, &test)).unwrap();
+    assert_state_bits_eq(&base.state, &t.state, "straggler retry");
+    assert_eq!(base.state.digest(), t.state.digest());
+    assert!(
+        t.shard_stats().iter().any(|s| s.retries > 0),
+        "the stalled shard was never blamed"
+    );
+    assert!(t.shard_stats().iter().all(|s| s.alive));
+}
+
+/// A shard that keeps dying is declared lost and its leaves re-shard
+/// onto the survivors — deterministically: the leaf split and the
+/// reduction tree never moved, so the digest matches an undisturbed
+/// run bit for bit.
+#[test]
+fn lost_shard_reshards_deterministically() {
+    let cfg = crash_cfg();
+    let data = datasets::fashion_like(cfg.train_size + cfg.test_size, cfg.seed);
+    let (train, test) = data.split(1.0 / 3.0);
+
+    let mut base = par_trainer(2);
+    base.train(&cfg, &train, &test).unwrap();
+
+    // zero retry budget: the first blamed round kills the shard
+    let plan = FaultPlan::one("shard.step", FaultKind::Io, 3, false);
+    let mut t = par_trainer(2).with_max_retries(0);
+    faults::with_plan(&plan, || t.train(&cfg, &train, &test)).unwrap();
+    assert_state_bits_eq(&base.state, &t.state, "lost shard");
+    assert_eq!(base.state.digest(), t.state.digest(), "re-shard moved bits");
+    assert_eq!(
+        t.shard_stats().iter().filter(|s| !s.alive).count(),
+        1,
+        "exactly one shard should be lost: {:?}",
+        t.shard_stats()
+    );
+    assert!(t.reshards() >= 1, "no re-shard event recorded");
+    // the survivor carried the whole rest of the run
+    assert!(t.shard_stats().iter().any(|s| s.alive && s.leaves_done > 0));
 }
 
 #[test]
